@@ -1,0 +1,100 @@
+//! Fig. 7 reproduction: loss-curve parity between full TED and the
+//! DeepSpeed-MoE-style baseline.
+//!
+//! The paper validates correctness by training the same MoE (1.3B base +
+//! 4 experts) under DeepSpeed-TED (tp=2, ep=4) and DeepSpeed-MoE and
+//! showing identical validation-loss curves. We do the same at executable
+//! scale on the embedded text corpus (standing in for BookCorpus):
+//!
+//!   * TED:      G=4, tensor=2, expert=2, dp_nonexp=2 (DTD + CAC on)
+//!   * baseline: G=2, tensor=1, expert=2, dp_nonexp=2 (= DeepSpeed-MoE)
+//!
+//! Identical model (layout-independent init), identical global batch,
+//! identical data -> the curves must coincide up to fp accumulation-order
+//! noise. Loss curves land in `results/convergence_parity.csv`.
+//!
+//!     make artifacts && cargo run --release --example convergence_parity -- --steps 60
+
+use ted::config::{EngineOptions, ParallelConfig, TrainingConfig};
+use ted::data::TextCorpus;
+use ted::metrics::CsvWriter;
+use ted::runtime::Manifest;
+use ted::sim::{train, RunConfig, TrainLog};
+use ted::topology::Topology;
+use ted::util::cli::Args;
+
+fn run(
+    root: &std::path::Path,
+    config: &str,
+    world: usize,
+    tp: usize,
+    ep: usize,
+    steps: usize,
+) -> anyhow::Result<TrainLog> {
+    let manifest = Manifest::load(&Manifest::variant_dir(root, config, tp, 2))?;
+    let topo = Topology::new(ParallelConfig::derive(world, tp, ep)?)?;
+    let data = TextCorpus::new(77);
+    let tcfg = TrainingConfig { lr: 1e-3, warmup_steps: 10, seed: 99, ..Default::default() };
+    let runc = RunConfig {
+        steps,
+        micro_per_step: 2,
+        eval_every: (steps / 6).max(1),
+        eval_micro: 4,
+        verbose: false,
+    };
+    Ok(train(&topo, &manifest, EngineOptions::default(), tcfg, runc, &data)?)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[])?;
+    args.reject_unknown(&["steps", "config"])?;
+    let steps = args.get_usize("steps", 60)?;
+    let config = args.get_or("config", "tiny").to_string();
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+
+    println!("=== Fig. 7 analog: {config} model, {steps} steps, byte-level corpus ===");
+    println!("[1/2] DeepSpeed-MoE baseline: G=2, tensor=1, expert=2 ...");
+    let base = run(&root, &config, 2, 1, 2, steps)?;
+    println!("      done in {:.1}s", base.wall_s);
+    println!("[2/2] DeepSpeed-TED:          G=4, tensor=2, expert=2 ...");
+    let ted = run(&root, &config, 4, 2, 2, steps)?;
+    println!("      done in {:.1}s", ted.wall_s);
+
+    let mut csv = CsvWriter::create(
+        "results/convergence_parity.csv",
+        &["step", "loss_dsmoe", "loss_ted", "val_dsmoe", "val_ted"],
+    )?;
+    let vals = |log: &TrainLog, s: usize| {
+        log.evals
+            .iter()
+            .find(|(es, _)| *es == s + 1)
+            .map(|(_, v)| format!("{v:.6}"))
+            .unwrap_or_default()
+    };
+    let mut max_rel = 0.0f32;
+    println!("\n step   DS-MoE     TED       |diff|");
+    for i in 0..steps {
+        let (a, b) = (base.steps[i].loss, ted.steps[i].loss);
+        let rel = (a - b).abs() / (1.0 + b.abs());
+        max_rel = max_rel.max(rel);
+        if i % (steps / 10).max(1) == 0 || i == steps - 1 {
+            println!(" {i:>4}  {a:8.4}  {b:8.4}  {:9.2e}", (a - b).abs());
+        }
+        csv.row(&[
+            i.to_string(),
+            format!("{a:.6}"),
+            format!("{b:.6}"),
+            vals(&base, i),
+            vals(&ted, i),
+        ])?;
+    }
+    println!("\nmax relative divergence: {max_rel:.3e}");
+    println!("validation losses:");
+    for ((s, a), (_, b)) in base.evals.iter().zip(&ted.evals) {
+        println!("  step {s:>4}: DS-MoE {a:.4}  TED {b:.4}");
+    }
+    anyhow::ensure!(max_rel < 5e-3, "curves diverged: {max_rel}");
+    println!("\ncurves coincide -> TED's 3-D hybrid parallelization is loss-exact (paper Fig. 7). OK");
+    println!("wrote results/convergence_parity.csv");
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! Regenerate every table and figure of the paper's evaluation as text
+//! tables (DESIGN.md section 5 maps each id to its model).
+//!
+//!     cargo run --release --example paper_figures            # everything
+//!     cargo run --release --example paper_figures -- --only fig5
+//!
+//! Fig. 7 (loss parity) is a *measured* experiment — run
+//! `cargo run --release --example convergence_parity` for it.
+
+use ted::config::ClusterConfig;
+use ted::memory::PHASES;
+use ted::perfmodel::figures as F;
+use ted::util::cli::Args;
+
+fn want(only: &Option<String>, id: &str) -> bool {
+    only.as_deref().map(|o| o == id).unwrap_or(true)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[])?;
+    args.reject_unknown(&["only", "cluster"])?;
+    let only = args.get("only").map(|s| s.to_string());
+    let cluster = ClusterConfig::by_name(args.get_or("cluster", "summit"))
+        .ok_or_else(|| anyhow::anyhow!("unknown cluster (summit|thetagpu|perlmutter)"))?;
+
+    if want(&only, "table1") {
+        println!("== Table 1: base-model architectures ==");
+        println!("{:<8} {:>7} {:>8} {:>7} {:>7} {:>14}", "model", "layers", "hidden", "heads", "batch", "exact params");
+        for (name, l, h, heads, batch, p) in F::table1_rows() {
+            println!("{name:<8} {l:>7} {h:>8} {heads:>7} {batch:>7} {p:>14}");
+        }
+        println!();
+    }
+
+    if want(&only, "fig4") {
+        println!("== Fig. 4: per-GPU memory by phase — 2.7B base, 32 experts, 32 GPUs (tp=1, ep=32) ==");
+        println!("{:<12} {:>14} {:>14}", "phase", "untiled (GiB)", "tiled (GiB)");
+        let rows = F::fig4("2.7B", 32, 32);
+        for r in &rows {
+            println!("{:<12} {:>14.2} {:>14.2}", r.phase.name(), r.untiled_gib, r.tiled_gib);
+        }
+        let spike = rows.iter().zip(PHASES).find(|(_, p)| p.name() == "optimizer").map(|(r, _)| r).unwrap();
+        println!(
+            "optimizer spike removed by tiling: {:.2} GiB -> {:.3} GiB (paper: ~4.5 GB -> ~1 GB cap)\n",
+            spike.untiled_gib - rows[0].untiled_gib,
+            spike.tiled_gib - rows[0].tiled_gib
+        );
+    }
+
+    if want(&only, "fig5") {
+        println!("== Fig. 5: batch-time breakdown — 6.7B base, 16 experts, 128 GPUs Summit, batch 1024 ==");
+        println!("{:<10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}", "config", "compute", "a2a", "allred", "allgth", "total", "vs base");
+        let rows = F::fig5(&cluster, 128, 1024);
+        let base = rows[0].t.total();
+        for r in &rows {
+            println!(
+                "{:<10} {:>8.2}s {:>8.2}s {:>8.2}s {:>8.2}s {:>8.2}s {:>+8.1}%",
+                r.label, r.t.compute_s, r.t.alltoall_s, r.t.allreduce_s, r.t.allgather_s,
+                r.t.total(), 100.0 * (r.t.total() / base - 1.0)
+            );
+        }
+        let a2a_cut = 100.0 * (1.0 - rows[2].t.alltoall_s / rows[0].t.alltoall_s);
+        let ar_cut = 100.0 * (1.0 - rows[2].t.allreduce_s / rows[0].t.allreduce_s);
+        println!("reductions vs baseline: a2a {a2a_cut:.1}% (paper 64.12%), all-reduce {ar_cut:.1}% (paper 33%)\n");
+    }
+
+    if want(&only, "fig8") {
+        println!("== Fig. 8: strong scaling, experts proportional to GPUs (Summit) ==");
+        for (name, batch) in [("1.3B", 512), ("2.7B", 512), ("6.7B", 1024)] {
+            println!("-- base {name}, batch {batch} --");
+            println!("{:>6} {:>8} {:>4} {:>12} {:>12} {:>9}", "gpus", "experts", "tp", "baseline(s)", "DTD+CAC(s)", "speedup");
+            for p in F::fig8(name, &cluster, &[32, 64, 128, 256], batch) {
+                println!(
+                    "{:>6} {:>8} {:>4} {:>12.2} {:>12.2} {:>8.1}%",
+                    p.gpus, p.experts, p.tp, p.baseline_s, p.optimized_s, p.speedup_pct()
+                );
+            }
+        }
+        println!();
+    }
+
+    if want(&only, "fig9") {
+        println!("== Fig. 9: largest supported MoE, TED vs DeepSpeed-MoE (Summit, tp<=6) ==");
+        println!("{:>6} {:>12} {:<18} {:>12} {:<18} {:>6}", "gpus", "TED (B)", "config", "DS-MoE (B)", "config", "ratio");
+        for r in F::fig9(&cluster, &[32, 64, 128, 256, 512]) {
+            println!(
+                "{:>6} {:>12.1} {:<18} {:>12.1} {:<18} {:>5.2}x",
+                r.gpus,
+                r.ted_params as f64 / 1e9,
+                r.ted_desc,
+                r.dsmoe_params as f64 / 1e9,
+                r.dsmoe_desc,
+                r.ratio()
+            );
+        }
+        println!("(paper band: 1.09-4.8x, growing with GPU count)\n");
+    }
+
+    if want(&only, "fig10") {
+        println!("== Fig. 10: strong scaling, 6.7B base, experts fixed at 4 (Summit, batch 1024) ==");
+        println!("{:>6} {:>4} {:>12} {:>12} {:>9}", "gpus", "tp", "baseline(s)", "DTD+CAC(s)", "speedup");
+        for p in F::fig10("6.7B", &cluster, &[32, 64, 128, 256], 4, 1024) {
+            println!(
+                "{:>6} {:>4} {:>12.2} {:>12.2} {:>8.1}%",
+                p.gpus, p.tp, p.baseline_s, p.optimized_s, p.speedup_pct()
+            );
+        }
+        println!();
+    }
+
+    if want(&only, "fig11") || want(&only, "table2") {
+        println!("== Fig. 11 + Table 2: weak scaling, 16 experts, Summit ==");
+        println!(
+            "{:>6} {:<8} {:>4} {:>12} {:>12} {:>9} {:>10}",
+            "gpus", "base", "tp", "baseline(s)", "DTD+CAC(s)", "speedup", "% of peak"
+        );
+        for r in F::fig11_table2(&cluster) {
+            println!(
+                "{:>6} {:<8} {:>4} {:>12.2} {:>12.2} {:>8.1}% {:>9.1}%",
+                r.gpus,
+                r.model_name,
+                r.tp,
+                r.baseline_s,
+                r.optimized_s,
+                100.0 * (1.0 - r.optimized_s / r.baseline_s),
+                r.pct_peak
+            );
+        }
+        println!("(paper Table 2: 36.7 / 30.0 / 26.2 / 11.7 % of peak)\n");
+    }
+
+    if want(&only, "fig7") {
+        println!("== Fig. 7: measured experiment — run:");
+        println!("   cargo run --release --example convergence_parity\n");
+    }
+
+    Ok(())
+}

@@ -1,0 +1,194 @@
+"""AOT compile driver: lower every L2 block program to HLO text + manifest.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from ``python/``):
+    python -m compile.aot --config tiny --tp 2 --batch 2 --out-dir ../artifacts
+    python -m compile.aot --default-set --out-dir ../artifacts
+
+Each variant lands in ``<out-dir>/<config>_tp<T>_b<B>/`` containing one
+``<entry>.hlo.txt`` per block plus ``manifest.json`` describing shapes,
+dtypes and model dimensions. The rust runtime (rust/src/runtime/manifest.rs)
+consumes the manifest; it is the single source of truth for L3<->L2 shapes.
+
+Python runs ONLY here, at build time; the rust binary is self-contained once
+artifacts exist.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ModelDims, entry_specs
+
+# ---------------------------------------------------------------------------
+# named model configurations
+#
+# tiny/mini: rust unit+integration tests (fast to execute on CPU PJRT)
+# e2e-*:     the end-to-end training examples (EXPERIMENTS.md)
+#
+# Paper Table-1 configs (1.3B..13B) are *analytic only* — they live in
+# rust/src/config/model.rs for the memory and performance models and are
+# never lowered (executing them on CPU would be pointless).
+# ---------------------------------------------------------------------------
+
+CONFIGS = {
+    #        d_model heads  d_ff vocab  seq layers experts
+    "tiny": dict(d_model=64, n_heads=4, d_ff=128, vocab=256, seq=16, n_layers=2, n_experts=2),
+    "mini": dict(d_model=128, n_heads=8, d_ff=256, vocab=512, seq=32, n_layers=4, n_experts=4),
+    # ~28M params: the "train a few hundred steps" e2e driver
+    "e2e-28m": dict(d_model=512, n_heads=8, d_ff=2048, vocab=8192, seq=128, n_layers=8, n_experts=4),
+    # ~113M params: the headline-scale e2e run (fewer steps)
+    "e2e-100m": dict(d_model=768, n_heads=12, d_ff=3072, vocab=16384, seq=256, n_layers=12, n_experts=8),
+}
+
+# (config, tp, batch, ep) variants built by --default-set; tests and the
+# quickstart/parity examples rely on exactly these.
+DEFAULT_SET = [
+    ("tiny", 1, 2, 2),
+    ("tiny", 2, 2, 2),
+    ("mini", 1, 2, 4),
+    ("mini", 2, 2, 4),
+]
+
+TILE_SIZE = 65536  # optimizer tile (elements) baked into the adamw entry
+CAPACITY_FACTOR = 1.25
+
+
+def capacity_rows(tokens_per_rank: int, ep: int, n_experts: int, cf: float = CAPACITY_FACTOR) -> int:
+    """Expert capacity buffer rows: cf * (group tokens) / E, padded to 8.
+
+    ``tokens_per_rank * ep`` tokens are routed inside one EP group; each of
+    the E experts gets a cf-padded equal share. The buffer shape is static
+    (TPU requirement, and what GShard/DeepSpeed-MoE do on GPU as well);
+    overflow tokens are dropped by the rust router, underflow rows are
+    zero-padded and masked out at combine.
+    """
+    share = (tokens_per_rank * ep + n_experts - 1) // n_experts
+    cap = int(share * cf + 0.999999)
+    return ((cap + 7) // 8) * 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(config: str, tp: int, batch: int, ep: int, out_dir: str, seq: int | None = None) -> str:
+    cfg = CONFIGS[config]
+    seq = seq or cfg["seq"]
+    cap = capacity_rows(batch * seq, ep, cfg["n_experts"])
+    dims = ModelDims(
+        d_model=cfg["d_model"],
+        n_heads=cfg["n_heads"],
+        d_ff=cfg["d_ff"],
+        vocab=cfg["vocab"],
+        seq=seq,
+        n_layers=cfg["n_layers"],
+        n_experts=cfg["n_experts"],
+        tp=tp,
+        batch=batch,
+        capacity=cap,
+    )
+
+    vdir = os.path.join(out_dir, f"{config}_tp{tp}_b{batch}")
+    os.makedirs(vdir, exist_ok=True)
+
+    entries = {}
+    for name, (fn, in_specs) in entry_specs(dims, TILE_SIZE).items():
+        # keep_unused: some backward blocks never read a parameter's value
+        # (e.g. an additive LayerNorm bias) — the manifest contract requires
+        # every input to stay in the executable signature regardless.
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(vdir, fname), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *in_specs)
+        if not isinstance(out_shapes, (tuple, list)):
+            out_shapes = (out_shapes,)
+        entries[name] = {
+            "file": fname,
+            "inputs": [_spec_json(s) for s in in_specs],
+            "outputs": [_spec_json(s) for s in out_shapes],
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"  {config}_tp{tp}_b{batch}/{name}: {len(text)} chars")
+
+    manifest = {
+        "format_version": 1,
+        "config_name": config,
+        "dims": {
+            "d_model": dims.d_model,
+            "n_heads": dims.n_heads,
+            "d_ff": dims.d_ff,
+            "vocab": dims.vocab,
+            "seq": dims.seq,
+            "n_layers": dims.n_layers,
+            "n_experts": dims.n_experts,
+            "tp": dims.tp,
+            "batch": dims.batch,
+            "capacity": dims.capacity,
+            "export_ep": ep,
+        },
+        "tile_size": TILE_SIZE,
+        "capacity_factor": CAPACITY_FACTOR,
+        "entries": entries,
+    }
+    mpath = os.path.join(vdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return vdir
+
+
+def _spec_json(s):
+    dt = str(s.dtype)
+    dt = {"float32": "f32", "int32": "i32"}.get(dt, dt)
+    return {"shape": list(s.shape), "dtype": dt}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", choices=sorted(CONFIGS), help="model config name")
+    ap.add_argument("--tp", type=int, default=1, help="tensor parallel degree")
+    ap.add_argument("--batch", type=int, default=2, help="per-rank microbatch")
+    ap.add_argument("--seq", type=int, default=None, help="override sequence length")
+    ap.add_argument("--ep", type=int, default=None, help="expert parallel degree (capacity sizing)")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--default-set", action="store_true", help="build the test/example variant set")
+    ap.add_argument("--out", default=None, help="(compat) also write a sentinel model.hlo.txt path")
+    args = ap.parse_args(argv)
+
+    built = []
+    if args.default_set or not args.config:
+        for config, tp, batch, ep in DEFAULT_SET:
+            built.append(lower_variant(config, tp, batch, ep, args.out_dir))
+    if args.config:
+        ep = args.ep or CONFIGS[args.config]["n_experts"]
+        built.append(lower_variant(args.config, args.tp, args.batch, ep, args.out_dir, seq=args.seq))
+
+    # Sentinel for the Makefile dependency (and a smoke artifact): the tiny
+    # tp1 forward attention block doubles as "model.hlo.txt".
+    if args.out:
+        src = os.path.join(built[0], "attn_fwd.hlo.txt")
+        with open(src) as f, open(args.out, "w") as g:
+            g.write(f.read())
+    print(f"built {len(built)} variant(s) under {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

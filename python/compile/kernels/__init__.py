@@ -1,0 +1,25 @@
+"""L1 Pallas kernels for DeepSpeed-TED (build-time only; see DESIGN.md).
+
+Exports:
+    matmul        -- differentiable tiled Pallas matmul (MXU 128x128 tiles)
+    matmul_nd     -- same, over the last two dims
+    expert_ffn    -- fused expert FFN shard (the paper's compute hot-spot)
+    router_probs  -- fused gate matmul + softmax
+    adamw_tile_pallas -- tiled AdamW update (section-4 optimizer as a kernel)
+"""
+
+from .matmul import matmul, matmul_nd, matmul_pallas_raw
+from .expert_ffn import expert_ffn, expert_ffn_pallas_raw
+from .router import router_probs, router_probs_pallas_raw
+from .adamw import adamw_tile_pallas
+
+__all__ = [
+    "matmul",
+    "matmul_nd",
+    "matmul_pallas_raw",
+    "expert_ffn",
+    "expert_ffn_pallas_raw",
+    "router_probs",
+    "router_probs_pallas_raw",
+    "adamw_tile_pallas",
+]

@@ -1,0 +1,102 @@
+"""L1: tiled AdamW update kernel — the paper's section-4 optimizer, as Pallas.
+
+The paper's tiled optimizer exists to kill the fp32 gradient up-cast spike:
+instead of materializing a 4-byte copy of the *whole* expert gradient shard
+(which ZeRO-1 shards over only ``G_dp^exp = G_dp^nonexp / E`` ranks, so it
+grows with E and the base size), the optimizer walks fixed-size tiles and
+re-uses one tile-sized buffer.
+
+On TPU this *is* the natural kernel shape: a tile is a VMEM-resident block.
+The kernel streams (param, m, v, grad16) tiles HBM->VMEM, up-casts the
+low-precision gradient **in VMEM** (the fp32 gradient never exists in HBM at
+all — strictly better than the paper's host-side tiling), applies the
+decoupled-weight-decay Adam update, and streams (param', m', v') back.
+
+Hyper-parameters arrive as a length-8 fp32 vector so one compiled executable
+serves every step:
+    [lr, beta1, beta2, eps, weight_decay, bias_corr1, bias_corr2, loss_scale]
+bias_corr{1,2} = 1 - beta^t are precomputed by the rust optimizer (t is a
+host-side integer; folding it in keeps the kernel shape static).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128  # tile rows are processed as [rows, LANE] 2-D blocks (VPU lanes)
+
+
+def _adamw_kernel(h_ref, p_ref, m_ref, v_ref, g_ref, po_ref, mo_ref, vo_ref):
+    h = h_ref[...]
+    lr, b1, b2, eps = h[0, 0], h[0, 1], h[0, 2], h[0, 3]
+    wd, bc1, bc2, inv_scale = h[0, 4], h[0, 5], h[0, 6], h[0, 7]
+
+    # The up-cast happens here, on the VMEM-resident tile.
+    g = g_ref[...].astype(jnp.float32) * inv_scale
+    p = p_ref[...]
+    m = b1 * m_ref[...] + (1.0 - b1) * g
+    v = b2 * v_ref[...] + (1.0 - b2) * g * g
+    mhat = m / bc1
+    vhat = v / bc2
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    po_ref[...] = p
+    mo_ref[...] = m
+    vo_ref[...] = v
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_block",))
+def adamw_tile_pallas(
+    p: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    g: jax.Array,
+    hyper: jax.Array,
+    rows_per_block: int = int(os.environ.get("TED_ADAMW_ROWS", "8")),
+):
+    """One AdamW step over a flat tile. All arrays [ts] fp32 (g may be bf16).
+
+    Returns (p', m', v'). ``ts`` must be a multiple of LANE (the rust
+    optimizer pads its final tile; padded lanes carry zero grads so their
+    update is pure weight decay on zero-initialized padding = zero).
+    """
+    (ts,) = p.shape
+    assert ts % LANE == 0, ts
+    rows = ts // LANE
+    rb = min(rows_per_block, rows)
+    # pad rows to a multiple of rb
+    pr = (-rows) % rb
+    if pr:
+        pad = pr * LANE
+        p = jnp.pad(p, ((0, pad),))
+        m = jnp.pad(m, ((0, pad),))
+        v = jnp.pad(v, ((0, pad),))
+        g = jnp.pad(g, ((0, pad),))
+        rows += pr
+
+    shp = (rows, LANE)
+    p2, m2, v2, g2 = (a.reshape(shp) for a in (p, m, v, g))
+    hyper2 = hyper.reshape(1, 8).astype(jnp.float32)
+
+    grid = (rows // rb,)
+    block = pl.BlockSpec((rb, LANE), lambda i: (i, 0))
+    po, mo, vo = pl.pallas_call(
+        _adamw_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),  # hyper vector, resident
+            block,
+            block,
+            block,
+            block,
+        ],
+        out_specs=[block, block, block],
+        out_shape=[jax.ShapeDtypeStruct(shp, jnp.float32)] * 3,
+        interpret=True,
+    )(hyper2, p2, m2, v2, g2)
+    out = (po.reshape(-1)[:ts], mo.reshape(-1)[:ts], vo.reshape(-1)[:ts])
+    return out

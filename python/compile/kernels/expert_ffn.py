@@ -1,0 +1,168 @@
+"""L1: fused expert feed-forward Pallas kernel (the paper's compute hot-spot).
+
+One expert's FFN shard under Megatron tensor parallelism is
+
+    y_partial = gelu(x @ W1_shard + b1_shard) @ W2_shard + b2 / T
+
+with ``W1_shard: [D, F/T]`` (column split) and ``W2_shard: [F/T, D]``
+(row split); the TP all-reduce that materializes the full ``y`` lives in the
+rust coordinator, never inside the kernel.
+
+Fusion strategy (the TPU re-think of Megatron's two cuBLAS calls + bias/gelu
+epilogue kernels): the grid walks capacity-row tiles; for each row tile the
+whole ``F/T`` extent is processed in VMEM-resident chunks so the gelu
+intermediate ``h`` never round-trips to HBM. This is exactly the shared-mem
+blocking the CUDA kernel does, expressed with BlockSpec over (rows, ff-chunk)
+and an fp32 VMEM accumulator for the second matmul.
+
+The backward pass is assembled from the tiled Pallas matmul (see
+``matmul.py``); a ``jax.custom_vjp`` stitches the two together so the whole
+expert FFN differentiates without ever leaving Pallas.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .matmul import matmul as _pl_matmul
+
+# Row tile: capacity buffers are padded to a multiple of this by the rust
+# dispatcher (manifest carries the padded capacity). 128 = MXU-native.
+ROW_BLOCK = int(os.environ.get("TED_PALLAS_BLOCK", "128"))
+# ff-dimension chunk staged through VMEM per grid step.
+FF_BLOCK = int(os.environ.get("TED_PALLAS_BLOCK", "128"))
+
+
+def _gelu(x):
+    # tanh approximation, matches jax.nn.gelu(approximate=True)
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, acc_ref, *, n_ff: int, inv_tp: float):
+    """Grid step (row-tile i, ff-chunk j): acc += gelu(x@W1_j + b1_j) @ W2_j."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # First GEMM: [bm, D] x [D, bf] on the MXU, fp32 accumulate.
+    h = jnp.dot(x_ref[...], w1_ref[...], preferred_element_type=jnp.float32)
+    h = _gelu(h + b1_ref[...].astype(jnp.float32))
+    # Second GEMM folds the ff-chunk straight back into the row-tile
+    # accumulator: the gelu intermediate lives and dies in VMEM.
+    acc_ref[...] += jnp.dot(
+        h.astype(x_ref.dtype), w2_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(j == n_ff - 1)
+    def _flush():
+        # b2 is scaled by 1/T so the rust-side TP all-reduce sums shards to
+        # exactly one full bias contribution.
+        out = acc_ref[...] + inv_tp * b2_ref[...].astype(jnp.float32)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tp_degree", "bm", "bf"))
+def expert_ffn_pallas_raw(
+    x: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+    tp_degree: int = 1,
+    bm: int = ROW_BLOCK,
+    bf: int = FF_BLOCK,
+) -> jax.Array:
+    """Forward expert FFN shard, fused, no autodiff.
+
+    x: [C, D] capacity buffer; w1: [D, Fs]; b1: [Fs]; w2: [Fs, D]; b2: [D].
+    Returns the *partial* output [C, D] (TP all-reduce pending in rust).
+    """
+    c, d = x.shape
+    fs = w1.shape[1]
+    assert w1.shape == (d, fs) and w2.shape == (fs, d), (w1.shape, w2.shape)
+    assert b1.shape == (fs,) and b2.shape == (d,), (b1.shape, b2.shape)
+
+    bm_ = min(bm, _ceil_mult(c, 8))
+    bf_ = min(bf, _ceil_mult(fs, 8))
+
+    pc = (-c) % bm_
+    pf = (-fs) % bf_
+    xp = jnp.pad(x, ((0, pc), (0, 0))) if pc else x
+    w1p = jnp.pad(w1, ((0, 0), (0, pf))) if pf else w1
+    b1p = jnp.pad(b1, ((0, pf),)) if pf else b1
+    w2p = jnp.pad(w2, ((0, pf), (0, 0))) if pf else w2
+    cp = c + pc
+    fsp = fs + pf
+    n_ff = fsp // bf_
+
+    # b1 chunk / b2 row as 2-D blocks (TPU wants >=2D refs).
+    b1_2d = b1p.reshape(1, fsp)
+    b2_2d = b2.reshape(1, d)
+
+    out = pl.pallas_call(
+        functools.partial(_ffn_kernel, n_ff=n_ff, inv_tp=1.0 / float(tp_degree)),
+        grid=(cp // bm_, n_ff),
+        in_specs=[
+            pl.BlockSpec((bm_, d), lambda i, j: (i, 0)),       # x row tile
+            pl.BlockSpec((d, bf_), lambda i, j: (0, j)),       # W1 chunk
+            pl.BlockSpec((1, bf_), lambda i, j: (0, j)),       # b1 chunk
+            pl.BlockSpec((bf_, d), lambda i, j: (j, 0)),       # W2 chunk
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),         # b2
+        ],
+        out_specs=pl.BlockSpec((bm_, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cp, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, d), jnp.float32)],
+        interpret=True,
+    )(xp, w1p, b1_2d, w2p, b2_2d)
+    return out[:c]
+
+
+def _ceil_mult(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def expert_ffn(x, w1, b1, w2, b2, tp_degree: int = 1):
+    """Differentiable fused expert FFN shard (forward fused, backward tiled)."""
+    return expert_ffn_pallas_raw(x, w1, b1, w2, b2, tp_degree=tp_degree)
+
+
+def _ffn_fwd(x, w1, b1, w2, b2, tp_degree):
+    out = expert_ffn_pallas_raw(x, w1, b1, w2, b2, tp_degree=tp_degree)
+    return out, (x, w1, b1, w2, b2)
+
+
+def _ffn_bwd(tp_degree, res, g):
+    x, w1, b1, w2, b2 = res
+    g = g.astype(x.dtype)
+    # Recompute the gelu intermediate with the tiled Pallas matmul; this is
+    # checkpointing *inside* the block, matching the paper's always-on
+    # activation checkpointing.
+    pre = _pl_matmul(x, w1) + b1[None, :]
+    h = _gelu(pre)
+    # grads through second GEMM
+    dh = _pl_matmul(g, w2.T)
+    dw2 = _pl_matmul(h.T, g)
+    db2 = (1.0 / float(tp_degree)) * jnp.sum(g, axis=0)
+    # grad through gelu (tanh approx)
+    t = jnp.tanh(0.7978845608028654 * (pre + 0.044715 * pre**3))
+    dgelu = 0.5 * (1.0 + t) + 0.5 * pre * (1.0 - t * t) * 0.7978845608028654 * (
+        1.0 + 3.0 * 0.044715 * pre * pre
+    )
+    dpre = dh * dgelu
+    # grads through first GEMM
+    dx = _pl_matmul(dpre, w1.T)
+    dw1 = _pl_matmul(x.T, dpre)
+    db1 = jnp.sum(dpre, axis=0)
+    return dx, dw1, db1, dw2, db2
+
+
+expert_ffn.defvjp(_ffn_fwd, _ffn_bwd)

@@ -1,0 +1,151 @@
+"""L1: tiled Pallas matmul with a custom VJP whose backward also runs in Pallas.
+
+This is the building block for every dense contraction in the TED model
+shards (QKV/output projections, dense FFN, expert FFN). The tiling mirrors
+what Megatron-LM does with threadblocks on GPU, re-thought for TPU:
+
+* the grid iterates over (M-tile, N-tile, K-tile); BlockSpec stages one
+  ``(bm, bk)`` LHS tile and one ``(bk, bn)`` RHS tile through VMEM per step,
+  the role shared memory plays in the CUDA kernel;
+* tiles default to 128x128, the MXU systolic-array native shape, so a real
+  TPU lowering feeds the MXU full bf16 128x128x128 passes;
+* the fp32 accumulator lives in a VMEM scratch block and is only written
+  back to HBM on the last K step (double-buffering of the HBM->VMEM streams
+  is Mosaic's job; the index_map expresses the schedule).
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode (which lowers to plain HLO)
+is the correctness + AOT path; TPU perf is estimated analytically (see
+DESIGN.md section "Hardware-Adaptation").
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# MXU-native tile. Shapes that do not divide evenly are padded by the
+# wrapper below; the kernel itself only ever sees full tiles.
+# MXU-native tile for TPU. On the CPU-interpret AOT path each grid step
+# becomes an HLO loop iteration with dynamic-slice overhead, so the block
+# size is a pure scheduling knob there: exporting with TED_PALLAS_BLOCK=4096
+# collapses the grids to O(1) steps (see EXPERIMENTS.md section Perf).
+DEFAULT_BLOCK = int(os.environ.get("TED_PALLAS_BLOCK", "128"))
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    """One (m, n, k) grid step: acc += x_tile @ y_tile; flush on last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # fp32 accumulation regardless of input dtype: this is what the MXU
+    # does natively for bf16 inputs (bf16 x bf16 -> f32 accumulate).
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
+    m, n = x.shape
+    pm = (-m) % mult0
+    pn = (-n) % mult1
+    if pm == 0 and pn == 0:
+        return x
+    return jnp.pad(x, ((0, pm), (0, pn)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_pallas_raw(
+    x: jax.Array,
+    y: jax.Array,
+    bm: int = DEFAULT_BLOCK,
+    bn: int = DEFAULT_BLOCK,
+    bk: int = DEFAULT_BLOCK,
+) -> jax.Array:
+    """``x @ y`` via the Pallas kernel (no autodiff). 2-D operands only."""
+    assert x.ndim == 2 and y.ndim == 2, (x.shape, y.shape)
+    assert x.shape[1] == y.shape[0], (x.shape, y.shape)
+    m, k = x.shape
+    _, n = y.shape
+
+    # Degenerate / tiny shapes: tiles would be all padding; XLA's own dot is
+    # the right lowering there.
+    if m == 0 or n == 0 or k == 0:
+        return jnp.zeros((m, n), dtype=x.dtype)
+
+    bm_ = min(bm, _ceil_mult(m, 8))
+    bn_ = min(bn, _ceil_mult(n, 8))
+    bk_ = min(bk, _ceil_mult(k, 8))
+
+    xp = _pad_to(x, bm_, bk_)
+    yp = _pad_to(y, bk_, bn_)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    n_k = kp // bk_
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(mp // bm_, np_ // bn_, n_k),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k_: (i, k_)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, k_: (k_, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k_: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        # fp32 accumulator parked in VMEM for the whole K loop -- written
+        # back to the HBM-resident output block only on the final K step.
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def _ceil_mult(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Differentiable tiled matmul; forward and backward both hit Pallas."""
+    return matmul_pallas_raw(x, y)
+
+
+def _matmul_fwd(x, y):
+    return matmul_pallas_raw(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    g = g.astype(x.dtype)
+    # dX = dY @ W^T, dW = X^T @ dY -- the same kernel, transposed operands.
+    dx = matmul_pallas_raw(g, y.T)
+    dy = matmul_pallas_raw(x.T, g)
+    return dx, dy
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul_nd(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Differentiable matmul over the last two dims; leading dims collapsed.
+
+    ``x``: [..., M, K], ``y``: [K, N] -> [..., M, N].
+    """
+    if x.ndim == 2:
+        return matmul(x, y)
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    out = matmul(x2, y)
+    return out.reshape(lead + (y.shape[-1],))

@@ -1,0 +1,90 @@
+"""L1: fused MoE router kernel — gate matmul + softmax in one VMEM pass.
+
+DeepSpeed-MoE's router on GPU is a pipeline of small kernels (gate GEMM,
+softmax, argmax, capacity mask) each bouncing through HBM. On TPU we fuse the
+gate projection and the numerically-stable softmax into a single Pallas pass:
+a row tile of tokens is staged into VMEM once, the [D, E] gate matrix (tiny —
+E <= 128) stays VMEM-resident across the whole grid, and the probabilities
+are produced in the same pass.
+
+Top-1 selection + capacity assignment are *integer control flow* and belong
+to the rust coordinator (`rust/src/moe/router.rs`): the selection must be
+replicated bit-identically across the TP group, and rust owns the dispatch
+tables anyway. The kernel hands rust the probabilities; rust hands the
+gradient d(probs) back to `router_bwd` (see model.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import matmul as _pl_matmul
+
+ROW_BLOCK = int(os.environ.get("TED_PALLAS_BLOCK", "128"))
+
+
+def _router_kernel(x_ref, wg_ref, p_ref):
+    """probs tile = softmax(x_tile @ Wg) with max-subtraction, all in VMEM."""
+    logits = jnp.dot(x_ref[...], wg_ref[...], preferred_element_type=jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    p_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(p_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def router_probs_pallas_raw(x: jax.Array, wg: jax.Array, bm: int = ROW_BLOCK) -> jax.Array:
+    """Forward gate probabilities, fused, no autodiff. x: [N, D], wg: [D, E]."""
+    n, d = x.shape
+    e = wg.shape[1]
+    assert wg.shape == (d, e)
+
+    bm_ = min(bm, _ceil_mult(n, 8))
+    pn = (-n) % bm_
+    xp = jnp.pad(x, ((0, pn), (0, 0))) if pn else x
+    npad = n + pn
+
+    probs = pl.pallas_call(
+        _router_kernel,
+        grid=(npad // bm_,),
+        in_specs=[
+            pl.BlockSpec((bm_, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, e), lambda i: (0, 0)),  # gate resident in VMEM
+        ],
+        out_specs=pl.BlockSpec((bm_, e), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((npad, e), x.dtype),
+        interpret=True,
+    )(xp, wg)
+    return probs[:n]
+
+
+def _ceil_mult(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+@jax.custom_vjp
+def router_probs(x, wg):
+    """Differentiable fused router probabilities."""
+    return router_probs_pallas_raw(x, wg)
+
+
+def _router_fwd(x, wg):
+    p = router_probs_pallas_raw(x, wg)
+    return p, (x, wg, p)
+
+
+def _router_bwd(res, dp):
+    x, wg, p = res
+    # softmax VJP: dlogits = p * (dp - sum(dp * p, axis=-1, keepdims))
+    dp = dp.astype(p.dtype)
+    dlogits = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dx = _pl_matmul(dlogits, wg.T)
+    dwg = _pl_matmul(x.T, dlogits)
+    return dx, dwg
+
+
+router_probs.defvjp(_router_fwd, _router_bwd)

@@ -1,0 +1,329 @@
+"""L2: per-rank block programs for the TED-parallel MoE transformer.
+
+The rust coordinator (L3) owns *all* collectives and all control flow; what
+gets AOT-lowered here are the pure per-rank tensor programs between
+collectives, exactly the block decomposition of DESIGN.md section 3:
+
+    embed_fwd / embed_bwd           (replicated)
+    attn_fwd / attn_bwd             (Megatron TP shard; all-reduce in rust)
+    ffn_fwd / ffn_bwd               (dense FFN TP shard, non-expert layers)
+    moe_ln_router_fwd / _bwd        (replicated LN + fused Pallas router)
+    expert_ffn_fwd / expert_ffn_bwd (expert FFN TP shard; A2A/DTD in rust)
+    head_loss_fwd / head_loss_bwd   (replicated final LN + LM head + xent)
+    adamw_tile                      (ZeRO-1 tiled optimizer step, Pallas)
+
+Backward blocks take (params, saved_inputs, upstream cotangent) and
+*recompute the forward inside the block* via ``jax.vjp`` — this bakes the
+paper's always-on activation checkpointing into the interchange format: the
+engine stashes only block inputs, never intermediates. The CAC optimization
+(section 5.2) then applies at the collective boundaries, which are rust's.
+
+TP semantics (Megatron f/g conjugate pairs), so rust knows what to do at
+each boundary:
+    * ``attn_fwd`` / ``ffn_fwd`` / ``expert_ffn_fwd`` return PARTIAL outputs
+      -> rust all-reduces them over the TP group (operator g).
+    * their ``*_bwd`` return PARTIAL input grads -> rust all-reduces those
+      over the TP group (operator f's backward).
+    * replicated-parameter grads (LN, gate, embeddings, head) come out
+      identical on every TP rank; rust uses them locally, no comm.
+
+Everything is fp32 on the CPU-PJRT correctness path; the memory/perf models
+account mixed precision analytically (see rust/src/memory, rust/src/perfmodel).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import expert_ffn as _k_expert_ffn
+from .kernels import matmul_nd as _k_matmul_nd
+from .kernels import router_probs as _k_router_probs
+from .kernels import adamw_tile_pallas as _k_adamw
+
+LN_EPS = 1e-5
+
+
+@dataclass(frozen=True)
+class ModelDims:
+    """Static dimensions of one exported block set (one manifest)."""
+
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    seq: int
+    n_layers: int
+    n_experts: int
+    tp: int  # tensor parallel degree these shards were cut for
+    batch: int  # per-rank microbatch
+    capacity: int  # expert capacity buffer rows (padded)
+
+    @property
+    def d_tp(self) -> int:
+        assert self.d_model % self.tp == 0
+        return self.d_model // self.tp
+
+    @property
+    def ff_tp(self) -> int:
+        assert self.d_ff % self.tp == 0
+        return self.d_ff // self.tp
+
+    @property
+    def tokens(self) -> int:
+        return self.batch * self.seq
+
+
+# --------------------------------------------------------------------------
+# shared pieces
+# --------------------------------------------------------------------------
+
+
+def _layernorm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + LN_EPS) * g + b
+
+
+# --------------------------------------------------------------------------
+# embedding
+# --------------------------------------------------------------------------
+
+
+def embed_fwd(dims: ModelDims, emb, pos, ids):
+    """Token + positional embedding. Replicated on every rank.
+
+    emb: [V, D]; pos: [S, D]; ids: [B, S] int32 -> x: [B, S, D].
+    """
+    x = emb[ids] + pos[None, :, :]
+    return (x,)
+
+
+def embed_bwd(dims: ModelDims, emb, pos, ids, dx):
+    """Grad of embed w.r.t. (emb, pos). gather's VJP is scatter-add."""
+
+    def f(emb_, pos_):
+        return emb_[ids] + pos_[None, :, :]
+
+    _, vjp = jax.vjp(f, emb, pos)
+    demb, dpos = vjp(dx)
+    return demb, dpos
+
+
+# --------------------------------------------------------------------------
+# self-attention TP shard (non-expert block)
+# --------------------------------------------------------------------------
+
+
+def _attn_body(dims: ModelDims, ln_g, ln_b, wqkv, bqkv, wo, bo, x):
+    """Pre-LN attention shard over n_heads/tp local heads; PARTIAL output."""
+    b, s, d = x.shape
+    tp = dims.tp
+    dt = dims.d_tp
+    hl = dims.n_heads // tp
+    hd = dt // hl
+
+    xn = _layernorm(x, ln_g, ln_b)
+    qkv = _k_matmul_nd(xn, wqkv) + bqkv[None, None, :]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(b, s, hl, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask[None, None], scores, jnp.float32(-1e9))
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, dt)
+    # bias scaled 1/tp: the rust TP all-reduce sums shards into one full bias
+    return _k_matmul_nd(ctx, wo) + bo[None, None, :] / float(tp)
+
+
+def attn_fwd(dims: ModelDims, ln_g, ln_b, wqkv, bqkv, wo, bo, x):
+    return (_attn_body(dims, ln_g, ln_b, wqkv, bqkv, wo, bo, x),)
+
+
+def attn_bwd(dims: ModelDims, ln_g, ln_b, wqkv, bqkv, wo, bo, x, dy):
+    """Recompute-fwd + VJP. Returns (dln_g, dln_b, dwqkv, dbqkv, dwo, dbo, dx_partial)."""
+    _, vjp = jax.vjp(
+        lambda *p: _attn_body(dims, *p), ln_g, ln_b, wqkv, bqkv, wo, bo, x
+    )
+    return vjp(dy)
+
+
+# --------------------------------------------------------------------------
+# dense FFN TP shard (non-expert feed-forward layers)
+# --------------------------------------------------------------------------
+
+
+def _ffn_body(dims: ModelDims, ln_g, ln_b, w1, b1, w2, b2, x):
+    b, s, d = x.shape
+    xn = _layernorm(x, ln_g, ln_b).reshape(b * s, d)
+    y = _k_expert_ffn(xn, w1, b1, w2, b2, dims.tp)
+    return y.reshape(b, s, d)
+
+
+def ffn_fwd(dims: ModelDims, ln_g, ln_b, w1, b1, w2, b2, x):
+    return (_ffn_body(dims, ln_g, ln_b, w1, b1, w2, b2, x),)
+
+
+def ffn_bwd(dims: ModelDims, ln_g, ln_b, w1, b1, w2, b2, x, dy):
+    """Returns (dln_g, dln_b, dw1, db1, dw2, db2, dx_partial)."""
+    _, vjp = jax.vjp(lambda *p: _ffn_body(dims, *p), ln_g, ln_b, w1, b1, w2, b2, x)
+    return vjp(dy)
+
+
+# --------------------------------------------------------------------------
+# MoE layer-norm + router (replicated within TP group)
+# --------------------------------------------------------------------------
+
+
+def moe_ln_router_fwd(dims: ModelDims, ln_g, ln_b, wg, x):
+    """LN then fused Pallas gate. Returns (xn [N,D], probs [N,E]); N = B*S.
+
+    Top-1 selection, capacity assignment, the aux-loss coefficient and the
+    dispatch tables are integer control flow and live in rust
+    (rust/src/moe/router.rs) — they must be bit-identical across the TP
+    group, and rust owns the A2A anyway.
+    """
+    b, s, d = x.shape
+    xn = _layernorm(x, ln_g, ln_b).reshape(b * s, d)
+    probs = _k_router_probs(xn, wg)
+    return xn, probs
+
+
+def moe_ln_router_bwd(dims: ModelDims, ln_g, ln_b, wg, x, dxn, dprobs):
+    """Returns (dln_g, dln_b, dwg, dx). dx is full (replicated path, no comm).
+
+    ``dprobs`` carries both the combine-scale gradient and the aux-loss
+    gradient, assembled by rust.
+    """
+
+    def f(ln_g_, ln_b_, wg_, x_):
+        return moe_ln_router_fwd(dims, ln_g_, ln_b_, wg_, x_)
+
+    _, vjp = jax.vjp(f, ln_g, ln_b, wg, x)
+    return vjp((dxn, dprobs))
+
+
+# --------------------------------------------------------------------------
+# expert FFN TP shard (the hot spot — fused Pallas kernel)
+# --------------------------------------------------------------------------
+
+
+def expert_ffn_fwd(dims: ModelDims, w1, b1, w2, b2, xe):
+    """One local expert's capacity buffer. xe: [C, D] -> PARTIAL [C, D]."""
+    return (_k_expert_ffn(xe, w1, b1, w2, b2, dims.tp),)
+
+
+def expert_ffn_bwd(dims: ModelDims, w1, b1, w2, b2, xe, dye):
+    """Returns (dw1, db1, dw2, db2, dxe_partial)."""
+    _, vjp = jax.vjp(lambda *p: _k_expert_ffn(*p, dims.tp), xe, w1, b1, w2, b2)
+    dxe, dw1, db1, dw2, db2 = vjp(dye)
+    return dw1, db1, dw2, db2, dxe
+
+
+# --------------------------------------------------------------------------
+# final layer-norm + LM head + softmax cross-entropy (replicated)
+# --------------------------------------------------------------------------
+
+
+def _head_loss_body(dims: ModelDims, lnf_g, lnf_b, wh, x, targets):
+    b, s, d = x.shape
+    xn = _layernorm(x, lnf_g, lnf_b).reshape(b * s, d)
+    logits = _k_matmul_nd(xn, wh)  # [N, V]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[:, 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    tgt = targets.reshape(b * s)
+    picked = jnp.take_along_axis(logits, tgt[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - picked)
+
+
+def head_loss_fwd(dims: ModelDims, lnf_g, lnf_b, wh, x, targets):
+    """Returns (loss,) — scalar mean token cross-entropy over the local batch."""
+    return (_head_loss_body(dims, lnf_g, lnf_b, wh, x, targets),)
+
+
+def head_loss_bwd(dims: ModelDims, lnf_g, lnf_b, wh, x, targets):
+    """Returns (loss, dlnf_g, dlnf_b, dwh, dx): value + grads at cotangent 1.
+
+    rust scales by 1/n_microbatches and averages across DP afterwards.
+    """
+    loss, vjp = jax.vjp(
+        lambda *p: _head_loss_body(dims, *p, targets), lnf_g, lnf_b, wh, x
+    )
+    dlnf_g, dlnf_b, dwh, dx = vjp(jnp.float32(1.0))
+    return loss, dlnf_g, dlnf_b, dwh, dx
+
+
+# --------------------------------------------------------------------------
+# optimizer tile (ZeRO-1 shard walker)
+# --------------------------------------------------------------------------
+
+
+def adamw_tile(dims: ModelDims, p, m, v, g, hyper):
+    """One fused AdamW step on a flat tile; see kernels/adamw.py."""
+    return _k_adamw(p, m, v, g, hyper)
+
+
+# --------------------------------------------------------------------------
+# entry-point registry used by aot.py
+# --------------------------------------------------------------------------
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def entry_specs(dims: ModelDims, tile_size: int):
+    """(name -> (fn, [input ShapeDtypeStruct])) for every exported block."""
+    d, s, b, v = dims.d_model, dims.seq, dims.batch, dims.vocab
+    dt, ft, e, c = dims.d_tp, dims.ff_tp, dims.n_experts, dims.capacity
+    n = b * s
+
+    attn_params = [f32(d), f32(d), f32(d, 3 * dt), f32(3 * dt), f32(dt, d), f32(d)]
+    ffn_params = [f32(d), f32(d), f32(d, ft), f32(ft), f32(ft, d), f32(d)]
+    x3 = f32(b, s, d)
+
+    specs = {
+        "embed_fwd": (embed_fwd, [f32(v, d), f32(s, d), i32(b, s)]),
+        "embed_bwd": (embed_bwd, [f32(v, d), f32(s, d), i32(b, s), x3]),
+        "attn_fwd": (attn_fwd, attn_params + [x3]),
+        "attn_bwd": (attn_bwd, attn_params + [x3, x3]),
+        "ffn_fwd": (ffn_fwd, ffn_params + [x3]),
+        "ffn_bwd": (ffn_bwd, ffn_params + [x3, x3]),
+        "moe_ln_router_fwd": (
+            moe_ln_router_fwd,
+            [f32(d), f32(d), f32(d, e), x3],
+        ),
+        "moe_ln_router_bwd": (
+            moe_ln_router_bwd,
+            [f32(d), f32(d), f32(d, e), x3, f32(n, d), f32(n, e)],
+        ),
+        "expert_ffn_fwd": (
+            expert_ffn_fwd,
+            [f32(d, ft), f32(ft), f32(ft, d), f32(d), f32(c, d)],
+        ),
+        "expert_ffn_bwd": (
+            expert_ffn_bwd,
+            [f32(d, ft), f32(ft), f32(ft, d), f32(d), f32(c, d), f32(c, d)],
+        ),
+        "head_loss_fwd": (head_loss_fwd, [f32(d), f32(d), f32(d, v), x3, i32(b, s)]),
+        "head_loss_bwd": (head_loss_bwd, [f32(d), f32(d), f32(d, v), x3, i32(b, s)]),
+        "adamw_tile": (
+            adamw_tile,
+            [f32(tile_size), f32(tile_size), f32(tile_size), f32(tile_size), f32(8)],
+        ),
+    }
+    return {name: (functools.partial(fn, dims), ins) for name, (fn, ins) in specs.items()}

@@ -1,0 +1,63 @@
+"""AOT driver: manifest well-formedness and HLO text sanity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def tiny_variant(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    vdir = aot.lower_variant("tiny", 2, 2, 2, out)
+    return vdir
+
+
+def test_manifest_entries_complete(tiny_variant):
+    with open(os.path.join(tiny_variant, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["format_version"] == 1
+    expected = {
+        "embed_fwd", "embed_bwd", "attn_fwd", "attn_bwd", "ffn_fwd", "ffn_bwd",
+        "moe_ln_router_fwd", "moe_ln_router_bwd", "expert_ffn_fwd",
+        "expert_ffn_bwd", "head_loss_fwd", "head_loss_bwd", "adamw_tile",
+    }
+    assert set(man["entries"]) == expected
+    for name, ent in man["entries"].items():
+        path = os.path.join(tiny_variant, ent["file"])
+        assert os.path.exists(path), name
+        assert ent["inputs"] and ent["outputs"], name
+        for spec in ent["inputs"] + ent["outputs"]:
+            assert spec["dtype"] in ("f32", "i32")
+            assert all(isinstance(d, int) and d > 0 for d in spec["shape"])
+
+
+def test_hlo_text_is_hlo(tiny_variant):
+    with open(os.path.join(tiny_variant, "attn_fwd.hlo.txt")) as f:
+        text = f.read()
+    assert text.startswith("HloModule"), text[:40]
+    assert "ENTRY" in text
+
+
+def test_manifest_dims_consistent(tiny_variant):
+    with open(os.path.join(tiny_variant, "manifest.json")) as f:
+        man = json.load(f)
+    dims = man["dims"]
+    assert dims["tp"] == 2 and dims["batch"] == 2
+    # attn qkv shard: [D, 3*D/tp]
+    qkv = man["entries"]["attn_fwd"]["inputs"][2]["shape"]
+    assert qkv == [dims["d_model"], 3 * dims["d_model"] // dims["tp"]]
+    # expert capacity buffer rows match dims
+    xe = man["entries"]["expert_ffn_fwd"]["inputs"][4]["shape"]
+    assert xe == [dims["capacity"], dims["d_model"]]
+
+
+def test_capacity_rows_monotone_and_padded():
+    base = aot.capacity_rows(64, 2, 4)
+    assert base % 8 == 0
+    assert aot.capacity_rows(128, 2, 4) >= base
+    assert aot.capacity_rows(64, 4, 4) >= base
+    # more experts -> smaller per-expert share
+    assert aot.capacity_rows(64, 2, 8) <= base

@@ -1,0 +1,292 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (`assert_allclose`).
+
+Hypothesis sweeps shapes/dtypes; explicit cases cover the MXU-tile
+boundaries (multiples of / off-by-one around 128) and the degenerate shapes
+the rust dispatcher can produce (empty capacity buffers, single tokens).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    adamw_tile_pallas,
+    expert_ffn,
+    expert_ffn_pallas_raw,
+    matmul,
+    matmul_pallas_raw,
+    router_probs,
+    router_probs_pallas_raw,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, *shape, scale=1.0, dtype=np.float32):
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_forward_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, k)
+    y = _rand(rng, k, n)
+    got = np.asarray(matmul_pallas_raw(x, y))
+    want = np.asarray(ref.matmul_ref(x, y))
+    np.testing.assert_allclose(got, want, atol=5e-4, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(2, 96),
+    k=st.integers(2, 96),
+    n=st.integers(2, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_grads_match_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, k, scale=0.3)
+    y = _rand(rng, k, n, scale=0.3)
+
+    def loss_pl(a, b):
+        return jnp.sum(matmul(a, b) ** 2)
+
+    def loss_ref(a, b):
+        return jnp.sum(ref.matmul_ref(a, b) ** 2)
+
+    g = jax.grad(loss_pl, argnums=(0, 1))(x, y)
+    gr = jax.grad(loss_ref, argnums=(0, 1))(x, y)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(a, b, atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 128, 384), (127, 129, 1), (1, 1, 1), (129, 255, 257)])
+def test_matmul_tile_boundaries(m, k, n):
+    rng = np.random.default_rng(0)
+    x = _rand(rng, m, k)
+    y = _rand(rng, k, n)
+    np.testing.assert_allclose(
+        np.asarray(matmul_pallas_raw(x, y)),
+        np.asarray(ref.matmul_ref(x, y)),
+        atol=5e-4,
+        rtol=1e-4,
+    )
+
+
+def test_matmul_bf16_forward():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(_rand(rng, 64, 64), dtype=jnp.bfloat16)
+    y = jnp.asarray(_rand(rng, 64, 64), dtype=jnp.bfloat16)
+    got = np.asarray(matmul_pallas_raw(x, y), dtype=np.float32)
+    want = np.asarray(
+        jnp.matmul(x, y, preferred_element_type=jnp.float32).astype(jnp.bfloat16),
+        dtype=np.float32,
+    )
+    np.testing.assert_allclose(got, want, atol=0.15, rtol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# expert FFN (fused)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    c=st.integers(1, 160),
+    d=st.sampled_from([16, 48, 64, 128]),
+    fs=st.sampled_from([16, 40, 128, 130]),
+    tp=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_expert_ffn_forward_matches_ref(c, d, fs, tp, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, c, d, scale=0.5)
+    w1 = _rand(rng, d, fs, scale=0.2)
+    b1 = _rand(rng, fs, scale=0.1)
+    w2 = _rand(rng, fs, d, scale=0.2)
+    b2 = _rand(rng, d, scale=0.1)
+    got = np.asarray(expert_ffn_pallas_raw(x, w1, b1, w2, b2, tp_degree=tp))
+    want = np.asarray(ref.expert_ffn_ref(x, w1, b1, w2, b2, tp))
+    np.testing.assert_allclose(got, want, atol=2e-3, rtol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    c=st.integers(2, 64),
+    d=st.sampled_from([16, 32]),
+    fs=st.sampled_from([24, 48]),
+    tp=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_expert_ffn_grads_match_ref(c, d, fs, tp, seed):
+    rng = np.random.default_rng(seed)
+    args = (
+        _rand(rng, c, d, scale=0.5),
+        _rand(rng, d, fs, scale=0.2),
+        _rand(rng, fs, scale=0.1),
+        _rand(rng, fs, d, scale=0.2),
+        _rand(rng, d, scale=0.1),
+    )
+    g = jax.grad(lambda *a: jnp.sum(expert_ffn(*a, tp) ** 2), argnums=tuple(range(5)))(*args)
+    gr = jax.grad(lambda *a: jnp.sum(ref.expert_ffn_ref(*a, tp) ** 2), argnums=tuple(range(5)))(*args)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(a, b, atol=5e-3, rtol=5e-3)
+
+
+def test_expert_ffn_tp_shards_sum_to_full():
+    """Megatron invariant: sum over TP shards of partial outputs == tp=1 output."""
+    rng = np.random.default_rng(7)
+    c, d, f, tp = 48, 32, 64, 4
+    x = _rand(rng, c, d, scale=0.5)
+    w1 = _rand(rng, d, f, scale=0.2)
+    b1 = _rand(rng, f, scale=0.1)
+    w2 = _rand(rng, f, d, scale=0.2)
+    b2 = _rand(rng, d, scale=0.1)
+    full = np.asarray(ref.expert_ffn_ref(x, w1, b1, w2, b2, 1))
+    fs = f // tp
+    acc = np.zeros_like(full)
+    for r in range(tp):
+        sl = slice(r * fs, (r + 1) * fs)
+        acc += np.asarray(
+            expert_ffn_pallas_raw(x, w1[:, sl], b1[sl], w2[sl, :], b2, tp_degree=tp)
+        )
+    np.testing.assert_allclose(acc, full, atol=2e-3, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# router
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 300),
+    d=st.sampled_from([16, 64, 96]),
+    e=st.sampled_from([2, 4, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_router_probs_matches_ref(n, d, e, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, n, d, scale=0.5)
+    wg = _rand(rng, d, e, scale=0.2)
+    got = np.asarray(router_probs_pallas_raw(x, wg))
+    want = np.asarray(ref.router_probs_ref(x, wg))
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-4)
+    # rows sum to 1
+    np.testing.assert_allclose(got.sum(-1), np.ones(n), atol=1e-5)
+
+
+def test_router_grads_match_ref():
+    rng = np.random.default_rng(3)
+    x = _rand(rng, 40, 32, scale=0.5)
+    wg = _rand(rng, 32, 8, scale=0.2)
+    dp = _rand(rng, 40, 8, scale=1.0)
+
+    def proj(fn):
+        def f(a, b):
+            return jnp.sum(fn(a, b) * dp)
+
+        return f
+
+    g = jax.grad(proj(router_probs), argnums=(0, 1))(x, wg)
+    gr = jax.grad(proj(ref.router_probs_ref), argnums=(0, 1))(x, wg)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# adamw tile
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    ts=st.sampled_from([128, 256, 1024, 1280]),
+    step=st.integers(1, 1000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adamw_tile_matches_ref(ts, step, seed):
+    rng = np.random.default_rng(seed)
+    p = _rand(rng, ts)
+    m = _rand(rng, ts, scale=0.01)
+    v = np.abs(_rand(rng, ts, scale=0.001))
+    g = _rand(rng, ts)
+    b1, b2 = 0.9, 0.999
+    hyper = np.array(
+        [1e-3, b1, b2, 1e-8, 0.01, 1 - b1**step, 1 - b2**step, 1.0], np.float32
+    )
+    got = adamw_tile_pallas(p, m, v, g, hyper)
+    want = ref.adamw_tile_ref(p, m, v, g, hyper)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6, rtol=1e-5)
+
+
+def test_adamw_zero_grad_is_pure_decay():
+    ts = 256
+    p = np.ones(ts, np.float32)
+    z = np.zeros(ts, np.float32)
+    hyper = np.array([0.1, 0.9, 0.999, 1e-8, 0.5, 0.1, 0.001, 1.0], np.float32)
+    p2, m2, v2 = adamw_tile_pallas(p, z, z, z, hyper)
+    np.testing.assert_allclose(np.asarray(p2), p * (1 - 0.1 * 0.5), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m2), z, atol=0)
+    np.testing.assert_allclose(np.asarray(v2), z, atol=0)
+
+
+def test_adamw_loss_scale_unscales_grads():
+    ts = 128
+    rng = np.random.default_rng(0)
+    p = _rand(rng, ts)
+    m = _rand(rng, ts, scale=0.01)
+    v = np.abs(_rand(rng, ts, scale=0.001))
+    g = _rand(rng, ts)
+    base = np.array([1e-3, 0.9, 0.999, 1e-8, 0.0, 0.1, 0.001, 1.0], np.float32)
+    scaled = base.copy()
+    scaled[7] = 0.25  # inv_scale: grads arrive multiplied by 4
+    a = adamw_tile_pallas(p, m, v, g, base)
+    b = adamw_tile_pallas(p, m, v, 4.0 * g, scaled)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# export block-size sweep (the TED_PALLAS_BLOCK perf knob)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("block", [32, 256, 4096])
+def test_matmul_block_size_invariant(block):
+    """Results must be block-size independent: the CPU export uses 4096."""
+    rng = np.random.default_rng(11)
+    x = _rand(rng, 130, 70)
+    y = _rand(rng, 70, 90)
+    got = np.asarray(matmul_pallas_raw(x, y, bm=block, bn=block, bk=block))
+    want = np.asarray(ref.matmul_ref(x, y))
+    np.testing.assert_allclose(got, want, atol=5e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bf", [(32, 32), (4096, 4096)])
+def test_expert_ffn_block_size_invariant(bm, bf):
+    rng = np.random.default_rng(12)
+    c, d, fs = 100, 48, 72
+    x = _rand(rng, c, d, scale=0.5)
+    w1 = _rand(rng, d, fs, scale=0.2)
+    b1 = _rand(rng, fs, scale=0.1)
+    w2 = _rand(rng, fs, d, scale=0.2)
+    b2 = _rand(rng, d, scale=0.1)
+    got = np.asarray(expert_ffn_pallas_raw(x, w1, b1, w2, b2, tp_degree=2, bm=bm, bf=bf))
+    want = np.asarray(ref.expert_ffn_ref(x, w1, b1, w2, b2, 2))
+    np.testing.assert_allclose(got, want, atol=2e-3, rtol=2e-3)

@@ -1,0 +1,256 @@
+"""L2 block-program correctness.
+
+Two classes of invariants:
+
+1. **TP-sharding consistency** — the exact contract the rust coordinator
+   relies on: summing the PARTIAL outputs of the per-rank shards over a TP
+   group reproduces the tp=1 (full) block bit-for-bit up to fp tolerance.
+   The slicing used here (QKV per-section column split, FFN col/row split)
+   is mirrored one-to-one by rust/src/engine/params.rs.
+
+2. **Backward correctness** — every `*_bwd` block equals jax.grad of the
+   composed forward.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+D, H, F, V, S, E = 32, 4, 64, 64, 8, 2
+B = 2
+CAP = 24
+
+
+def dims_for(tp: int) -> M.ModelDims:
+    return M.ModelDims(
+        d_model=D, n_heads=H, d_ff=F, vocab=V, seq=S,
+        n_layers=2, n_experts=E, tp=tp, batch=B, capacity=CAP,
+    )
+
+
+def rand(rng, *shape, scale=0.2):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+def full_attn_params(rng):
+    return dict(
+        ln_g=1.0 + rand(rng, D, scale=0.05),
+        ln_b=rand(rng, D, scale=0.05),
+        wqkv=rand(rng, D, 3 * D),
+        bqkv=rand(rng, 3 * D, scale=0.05),
+        wo=rand(rng, D, D),
+        bo=rand(rng, D, scale=0.05),
+    )
+
+
+def shard_attn(p, tp, r):
+    """Megatron QKV slicing: within each of Q|K|V take the rank's column band.
+
+    rust/src/engine/params.rs::shard_attn must match this exactly.
+    """
+    dt = D // tp
+    q, k, v = np.split(p["wqkv"], 3, axis=1)
+    bq, bk, bv = np.split(p["bqkv"], 3)
+    sl = slice(r * dt, (r + 1) * dt)
+    return dict(
+        ln_g=p["ln_g"],
+        ln_b=p["ln_b"],
+        wqkv=np.concatenate([q[:, sl], k[:, sl], v[:, sl]], axis=1),
+        bqkv=np.concatenate([bq[sl], bk[sl], bv[sl]]),
+        wo=p["wo"][sl, :],
+        bo=p["bo"],
+    )
+
+
+def full_ffn_params(rng):
+    return dict(
+        ln_g=1.0 + rand(rng, D, scale=0.05),
+        ln_b=rand(rng, D, scale=0.05),
+        w1=rand(rng, D, F),
+        b1=rand(rng, F, scale=0.05),
+        w2=rand(rng, F, D),
+        b2=rand(rng, D, scale=0.05),
+    )
+
+
+def shard_ffn(p, tp, r):
+    ft = F // tp
+    sl = slice(r * ft, (r + 1) * ft)
+    return dict(
+        ln_g=p["ln_g"], ln_b=p["ln_b"],
+        w1=p["w1"][:, sl], b1=p["b1"][sl], w2=p["w2"][sl, :], b2=p["b2"],
+    )
+
+
+# ---------------------------------------------------------------------------
+# TP consistency
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+def test_attn_tp_shards_sum_to_full(tp):
+    rng = np.random.default_rng(0)
+    p = full_attn_params(rng)
+    x = rand(rng, B, S, D, scale=0.5)
+    (full,) = M.attn_fwd(dims_for(1), p["ln_g"], p["ln_b"], p["wqkv"], p["bqkv"], p["wo"], p["bo"], x)
+    acc = np.zeros_like(np.asarray(full))
+    for r in range(tp):
+        sp = shard_attn(p, tp, r)
+        (part,) = M.attn_fwd(dims_for(tp), sp["ln_g"], sp["ln_b"], sp["wqkv"], sp["bqkv"], sp["wo"], sp["bo"], x)
+        acc += np.asarray(part)
+    np.testing.assert_allclose(acc, np.asarray(full), atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+def test_ffn_tp_shards_sum_to_full(tp):
+    rng = np.random.default_rng(1)
+    p = full_ffn_params(rng)
+    x = rand(rng, B, S, D, scale=0.5)
+    (full,) = M.ffn_fwd(dims_for(1), p["ln_g"], p["ln_b"], p["w1"], p["b1"], p["w2"], p["b2"], x)
+    acc = np.zeros_like(np.asarray(full))
+    for r in range(tp):
+        sp = shard_ffn(p, tp, r)
+        (part,) = M.ffn_fwd(dims_for(tp), sp["ln_g"], sp["ln_b"], sp["w1"], sp["b1"], sp["w2"], sp["b2"], x)
+        acc += np.asarray(part)
+    np.testing.assert_allclose(acc, np.asarray(full), atol=1e-3, rtol=1e-3)
+
+
+def test_attn_bwd_dx_tp_shards_sum_to_full():
+    """Partial input grads over TP shards sum to the tp=1 input grad."""
+    tp = 2
+    rng = np.random.default_rng(2)
+    p = full_attn_params(rng)
+    x = rand(rng, B, S, D, scale=0.5)
+    dy = rand(rng, B, S, D, scale=1.0)
+    g_full = M.attn_bwd(dims_for(1), p["ln_g"], p["ln_b"], p["wqkv"], p["bqkv"], p["wo"], p["bo"], x, dy)
+    dx_full = np.asarray(g_full[-1])
+    acc = np.zeros_like(dx_full)
+    for r in range(tp):
+        sp = shard_attn(p, tp, r)
+        g = M.attn_bwd(dims_for(tp), sp["ln_g"], sp["ln_b"], sp["wqkv"], sp["bqkv"], sp["wo"], sp["bo"], x, dy)
+        acc += np.asarray(g[-1])
+    np.testing.assert_allclose(acc, dx_full, atol=5e-4, rtol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# backward == jax.grad of forward
+# ---------------------------------------------------------------------------
+
+
+def test_attn_bwd_matches_jax_grad():
+    rng = np.random.default_rng(3)
+    p = full_attn_params(rng)
+    x = rand(rng, B, S, D, scale=0.5)
+    dy = rand(rng, B, S, D)
+    dims = dims_for(1)
+
+    def loss(ln_g, ln_b, wqkv, bqkv, wo, bo, x_):
+        (y,) = M.attn_fwd(dims, ln_g, ln_b, wqkv, bqkv, wo, bo, x_)
+        return jnp.sum(y * dy)
+
+    want = jax.grad(loss, argnums=tuple(range(7)))(
+        p["ln_g"], p["ln_b"], p["wqkv"], p["bqkv"], p["wo"], p["bo"], x
+    )
+    got = M.attn_bwd(dims, p["ln_g"], p["ln_b"], p["wqkv"], p["bqkv"], p["wo"], p["bo"], x, dy)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4, rtol=5e-4)
+
+
+def test_router_bwd_matches_jax_grad():
+    rng = np.random.default_rng(4)
+    dims = dims_for(1)
+    ln_g = 1.0 + rand(rng, D, scale=0.05)
+    ln_b = rand(rng, D, scale=0.05)
+    wg = rand(rng, D, E)
+    x = rand(rng, B, S, D, scale=0.5)
+    dxn = rand(rng, B * S, D)
+    dprobs = rand(rng, B * S, E)
+
+    def loss(ln_g_, ln_b_, wg_, x_):
+        xn, probs = M.moe_ln_router_fwd(dims, ln_g_, ln_b_, wg_, x_)
+        return jnp.sum(xn * dxn) + jnp.sum(probs * dprobs)
+
+    want = jax.grad(loss, argnums=(0, 1, 2, 3))(ln_g, ln_b, wg, x)
+    got = M.moe_ln_router_bwd(dims, ln_g, ln_b, wg, x, dxn, dprobs)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4, rtol=5e-4)
+
+
+def test_expert_ffn_bwd_matches_jax_grad():
+    rng = np.random.default_rng(5)
+    dims = dims_for(2)
+    ft = F // 2
+    w1 = rand(rng, D, ft)
+    b1 = rand(rng, ft, scale=0.05)
+    w2 = rand(rng, ft, D)
+    b2 = rand(rng, D, scale=0.05)
+    xe = rand(rng, CAP, D, scale=0.5)
+    dye = rand(rng, CAP, D)
+
+    def loss(w1_, b1_, w2_, b2_, xe_):
+        (y,) = M.expert_ffn_fwd(dims, w1_, b1_, w2_, b2_, xe_)
+        return jnp.sum(y * dye)
+
+    want = jax.grad(loss, argnums=tuple(range(5)))(w1, b1, w2, b2, xe)
+    got = M.expert_ffn_bwd(dims, w1, b1, w2, b2, xe, dye)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3, rtol=2e-3)
+
+
+def test_head_loss_bwd_matches_jax_grad():
+    rng = np.random.default_rng(6)
+    dims = dims_for(1)
+    lnf_g = 1.0 + rand(rng, D, scale=0.05)
+    lnf_b = rand(rng, D, scale=0.05)
+    wh = rand(rng, D, V)
+    x = rand(rng, B, S, D, scale=0.5)
+    tgt = rng.integers(0, V, size=(B, S)).astype(np.int32)
+
+    def loss(a, b, c, d):
+        (l,) = M.head_loss_fwd(dims, a, b, c, d, tgt)
+        return l
+
+    want_loss = loss(lnf_g, lnf_b, wh, x)
+    want = jax.grad(loss, argnums=(0, 1, 2, 3))(lnf_g, lnf_b, wh, x)
+    got = M.head_loss_bwd(dims, lnf_g, lnf_b, wh, x, tgt)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want_loss), atol=1e-5)
+    for a, b in zip(got[1:], want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4, rtol=5e-4)
+
+
+def test_embed_bwd_is_scatter_add():
+    rng = np.random.default_rng(7)
+    dims = dims_for(1)
+    emb = rand(rng, V, D)
+    pos = rand(rng, S, D)
+    # duplicate ids on purpose: scatter-add must accumulate
+    ids = np.zeros((B, S), np.int32)
+    ids[:, :4] = 3
+    dx = rand(rng, B, S, D)
+    demb, dpos = M.embed_bwd(dims, emb, pos, ids, dx)
+    demb = np.asarray(demb)
+    # token 3 receives the sum over all positions where it appears
+    np.testing.assert_allclose(demb[3], dx[:, :4].sum((0, 1)), atol=1e-5)
+    np.testing.assert_allclose(demb[0], dx[:, 4:].sum((0, 1)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dpos), dx.sum(0), atol=1e-5)
+
+
+def test_head_loss_value_matches_manual_xent():
+    rng = np.random.default_rng(8)
+    dims = dims_for(1)
+    lnf_g = np.ones(D, np.float32)
+    lnf_b = np.zeros(D, np.float32)
+    wh = rand(rng, D, V)
+    x = rand(rng, B, S, D, scale=0.5)
+    tgt = rng.integers(0, V, size=(B, S)).astype(np.int32)
+    (got,) = M.head_loss_fwd(dims, lnf_g, lnf_b, wh, x, tgt)
+    xn = np.asarray(ref.layernorm_ref(x, lnf_g, lnf_b)).reshape(-1, D)
+    logits = xn @ wh
+    logits -= logits.max(-1, keepdims=True)
+    logp = logits - np.log(np.exp(logits).sum(-1, keepdims=True))
+    want = -logp[np.arange(B * S), tgt.reshape(-1)].mean()
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-4, rtol=1e-4)

@@ -1,0 +1,76 @@
+//! Collective micro-benchmarks: rendezvous overhead and throughput across
+//! group sizes and payloads — the L3 substrate the engine's step time
+//! stands on (perf-pass target: sub-µs matching overhead for small groups).
+
+use std::sync::Arc;
+
+use ted::collectives::{Communicator, Rendezvous};
+use ted::metrics::bench;
+use ted::topology::{GroupId, GroupKind};
+use ted::util::tensor::Tensor;
+
+fn gid(i: usize) -> GroupId {
+    GroupId { kind: GroupKind::World, index: i }
+}
+
+fn bench_allreduce(world: usize, len: usize, iters: u32) {
+    let name = format!("all_reduce/world{world}/{len}f32");
+    let rez = Rendezvous::new(world);
+    // worker threads loop forever on all_reduce; rank 0 is timed
+    std::thread::scope(|s| {
+        for rank in 1..world {
+            let rez = Arc::clone(&rez);
+            s.spawn(move || {
+                let members: Vec<usize> = (0..world).collect();
+                let mut comm = Communicator::new(rez, rank);
+                let mut t = Tensor::from_vec(&[len], vec![rank as f32; len]);
+                for _ in 0..(iters + 3) {
+                    comm.all_reduce(gid(0), &members, &mut t);
+                }
+            });
+        }
+        let members: Vec<usize> = (0..world).collect();
+        let mut comm = Communicator::new(Arc::clone(&rez), 0);
+        let mut t = Tensor::from_vec(&[len], vec![0.5; len]);
+        bench::run(&name, 3, iters, || {
+            comm.all_reduce(gid(0), &members, &mut t);
+        });
+    });
+}
+
+fn bench_alltoall(world: usize, rows: usize, d: usize, iters: u32) {
+    let name = format!("all_to_all/world{world}/{rows}x{d}");
+    let rez = Rendezvous::new(world);
+    std::thread::scope(|s| {
+        for rank in 1..world {
+            let rez = Arc::clone(&rez);
+            s.spawn(move || {
+                let members: Vec<usize> = (0..world).collect();
+                let mut comm = Communicator::new(rez, rank);
+                for _ in 0..(iters + 3) {
+                    let send: Vec<Vec<f32>> = (0..world).map(|_| vec![1.0; rows * d]).collect();
+                    let _ = comm.all_to_all(gid(1), &members, send);
+                }
+            });
+        }
+        let members: Vec<usize> = (0..world).collect();
+        let mut comm = Communicator::new(Arc::clone(&rez), 0);
+        bench::run(&name, 3, iters, || {
+            let send: Vec<Vec<f32>> = (0..world).map(|_| vec![1.0; rows * d]).collect();
+            let _ = comm.all_to_all(gid(1), &members, send);
+        });
+    });
+}
+
+fn main() {
+    println!("# bench_collectives — functional rendezvous collectives");
+    for world in [2, 4, 8] {
+        bench_allreduce(world, 1, 200);
+        bench_allreduce(world, 65_536, 50);
+        bench_allreduce(world, 1_048_576, 15);
+    }
+    for world in [2, 4, 8] {
+        bench_alltoall(world, 64, 64, 100);
+        bench_alltoall(world, 512, 512, 15);
+    }
+}

@@ -1,0 +1,62 @@
+//! End-to-end engine benchmark: full TED train_step wall time across
+//! topologies and optimization settings on the simulated cluster — the
+//! measured companion to Fig. 5 / Fig. 8 (requires `make artifacts`).
+
+use ted::collectives::CommKind;
+use ted::config::{EngineOptions, ParallelConfig, TrainingConfig};
+use ted::data::SyntheticLM;
+use ted::metrics::bench;
+use ted::runtime::Manifest;
+use ted::sim::{train, RunConfig};
+use ted::topology::Topology;
+
+fn run_case(config: &str, world: usize, tp: usize, ep: usize, opts: EngineOptions, label: &str) {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let dir = Manifest::variant_dir(&root, config, tp, 2);
+    let Ok(manifest) = Manifest::load(&dir) else {
+        println!("SKIP {label}: artifacts missing ({})", dir.display());
+        return;
+    };
+    let topo = Topology::new(ParallelConfig::derive(world, tp, ep).unwrap()).unwrap();
+    let tcfg = TrainingConfig { lr: 1e-3, seed: 5, ..Default::default() };
+    let data = SyntheticLM::new(manifest.dims.vocab, 5);
+
+    // one warm run builds PJRT clients; then time steady-state steps
+    let steps = 3usize;
+    let r = bench::run(&format!("train_step/{label}"), 0, 2, || {
+        let run = RunConfig { steps, micro_per_step: 1, ..Default::default() };
+        let log = train(&topo, &manifest, opts, tcfg.clone(), run, &data).unwrap();
+        std::hint::black_box(&log);
+    });
+    // note: each iteration includes Trainer construction (HLO compilation);
+    // subtract via the comm-only run below when reading absolute numbers.
+    let _ = r;
+
+    // report per-kind volume for the Fig. 5 functional analog
+    let run = RunConfig { steps: 1, micro_per_step: 1, ..Default::default() };
+    let log = train(&topo, &manifest, opts, tcfg, run, &data).unwrap();
+    let by = |k: CommKind| log.comm_bytes.iter().find(|(kk, _)| *kk == k).unwrap().1;
+    println!(
+        "    volumes: a2a={} ar={} ag={} bytes/step; stash={}B",
+        by(CommKind::AllToAll),
+        by(CommKind::AllReduce),
+        by(CommKind::AllGather),
+        log.peak_stash_bytes
+    );
+}
+
+fn main() {
+    println!("# bench_engine — full train_step on the simulated cluster");
+    let base = EngineOptions { dtd: false, cac: false, ..Default::default() };
+    let dtd = EngineOptions { dtd: true, cac: false, ..Default::default() };
+    let both = EngineOptions::default();
+
+    run_case("tiny", 2, 1, 2, base, "tiny/dsmoe_tp1ep2");
+    run_case("tiny", 4, 2, 2, base, "tiny/ted_baseline_tp2ep2");
+    run_case("tiny", 4, 2, 2, dtd, "tiny/ted+dtd");
+    run_case("tiny", 4, 2, 2, both, "tiny/ted+dtd+cac");
+    // mini exports assume ep=4 capacity sizing; a tp=2 grid would need
+    // world=8 (heavy on one core), so bench the ep-only decomposition
+    run_case("mini", 4, 1, 4, base, "mini/ep4_baseline");
+    run_case("mini", 4, 1, 4, both, "mini/ep4+dtd+cac");
+}

@@ -1,0 +1,72 @@
+//! Analytic-model benchmarks + regeneration timing: every paper figure's
+//! generator, timed (they run inside sweeps in paper_figures), plus PJRT
+//! per-block execution timings on the tiny artifacts (L2 profile data for
+//! the perf pass).
+
+use ted::config::ClusterConfig;
+use ted::engine::{init_params, blocks};
+use ted::metrics::bench;
+use ted::perfmodel::figures as F;
+use ted::runtime::{Manifest, Runtime};
+use ted::util::rng::Rng;
+use ted::util::tensor::Tensor;
+
+fn bench_figures() {
+    let c = ClusterConfig::summit();
+    bench::run("figures/fig4", 1, 20, || {
+        std::hint::black_box(F::fig4("2.7B", 32, 32));
+    });
+    bench::run("figures/fig5", 1, 20, || {
+        std::hint::black_box(F::fig5(&c, 128, 1024));
+    });
+    bench::run("figures/fig8_6.7B", 1, 5, || {
+        std::hint::black_box(F::fig8("6.7B", &c, &[32, 64, 128, 256], 1024));
+    });
+    bench::run("figures/fig9", 1, 5, || {
+        std::hint::black_box(F::fig9(&c, &[32, 64, 128, 256, 512]));
+    });
+    bench::run("figures/fig11_table2", 1, 5, || {
+        std::hint::black_box(F::fig11_table2(&c));
+    });
+}
+
+fn bench_blocks() {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let dir = Manifest::variant_dir(&root, "mini", 2, 2);
+    let Ok(m) = Manifest::load(&dir) else {
+        println!("SKIP block benches: artifacts missing");
+        return;
+    };
+    let d = m.dims;
+    let store = init_params(&d, 0, &[0, 1], 1);
+    let mut rt = Runtime::new().unwrap();
+    rt.load_all(&m, "").unwrap();
+
+    let mut x = Tensor::zeros(&[d.batch, d.seq, d.d_model]);
+    Rng::new(2).fill_normal(x.data_mut(), 0.5);
+    let dy = x.clone();
+    let mut xe = Tensor::zeros(&[d.capacity, d.d_model]);
+    Rng::new(3).fill_normal(xe.data_mut(), 0.5);
+
+    bench::run("pjrt/attn_fwd(mini)", 3, 30, || {
+        std::hint::black_box(blocks::attn_fwd(&mut rt, &store, 0, &x).unwrap());
+    });
+    bench::run("pjrt/attn_bwd(mini)", 3, 30, || {
+        std::hint::black_box(blocks::attn_bwd(&mut rt, &store, 0, &x, &dy).unwrap());
+    });
+    bench::run("pjrt/expert_ffn_fwd(mini)", 3, 30, || {
+        std::hint::black_box(blocks::expert_fwd(&mut rt, &store, 1, 0, &xe).unwrap());
+    });
+    bench::run("pjrt/expert_ffn_bwd(mini)", 3, 30, || {
+        std::hint::black_box(blocks::expert_bwd(&mut rt, &store, 1, 0, &xe, &xe).unwrap());
+    });
+    bench::run("pjrt/router_fwd(mini)", 3, 30, || {
+        std::hint::black_box(blocks::router_fwd(&mut rt, &store, 1, &x).unwrap());
+    });
+}
+
+fn main() {
+    println!("# bench_models — analytic figure generators + PJRT block timings");
+    bench_figures();
+    bench_blocks();
+}

@@ -1,0 +1,66 @@
+//! Optimizer benchmarks — the paper's section-4 claims, measured:
+//! tiled vs untiled AdamW step time (the paper picked 1.8M tiles as "large
+//! enough to not cause performance degradation"; this bench verifies that
+//! statement on our hot path) and the up-cast spike in bytes.
+
+use ted::metrics::bench;
+use ted::optimizer::{AdamwStep, FlatGroup, TilingOpts, Zero1Optimizer};
+use ted::util::rng::Rng;
+
+fn h() -> AdamwStep {
+    AdamwStep {
+        lr: 1e-3,
+        beta1: 0.9,
+        beta2: 0.95,
+        eps: 1e-8,
+        weight_decay: 0.01,
+        bias_corr1: 0.1,
+        bias_corr2: 0.05,
+        inv_loss_scale: 1.0,
+    }
+}
+
+fn bench_step(total: usize, tiled: bool, tile: usize, iters: u32) -> usize {
+    let group = FlatGroup::new(&[("w".into(), vec![total])]);
+    let mut init = vec![0.0f32; total];
+    Rng::new(1).fill_normal(&mut init, 0.02);
+    let mut grads = vec![0.0f32; total];
+    Rng::new(2).fill_normal(&mut grads, 0.5);
+    let mut opt = Zero1Optimizer::new(
+        group,
+        &init,
+        0,
+        1,
+        TilingOpts { tiled, tile_size: tile },
+    );
+    let label = if tiled {
+        format!("adamw_step/{}M/tiled_{}k", total / 1_000_000, tile / 1000)
+    } else {
+        format!("adamw_step/{}M/untiled", total / 1_000_000)
+    };
+    bench::run(&label, 2, iters, || {
+        let _ = opt.step_native(&grads, h());
+    });
+    opt.peak_temp_bytes
+}
+
+fn main() {
+    println!("# bench_optimizer — tiled vs untiled ZeRO-1 AdamW (paper section 4)");
+    for total in [2_000_000usize, 10_000_000, 40_000_000] {
+        let spike_untiled = bench_step(total, false, 0, 8);
+        // the paper's tile (1.8M) plus a sweep around it
+        let mut spikes = vec![(0usize, spike_untiled)];
+        for tile in [65_536usize, 450_000, 1_800_000, 7_200_000] {
+            let s = bench_step(total, true, tile, 8);
+            spikes.push((tile, s));
+        }
+        println!("  up-cast spike bytes @ {}M params:", total / 1_000_000);
+        for (tile, s) in spikes {
+            if tile == 0 {
+                println!("    untiled      : {s:>12} bytes");
+            } else {
+                println!("    tile {tile:>8}: {s:>12} bytes");
+            }
+        }
+    }
+}

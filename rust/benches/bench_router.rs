@@ -1,0 +1,131 @@
+//! Router + dispatch micro-benchmarks: routing decision construction and
+//! the dispatch/return round trip with and without DTD — the integer
+//! control flow on the MoE hot path (paper section 5.1 machinery).
+
+use std::sync::Arc;
+
+use ted::collectives::{Communicator, Rendezvous};
+use ted::config::ParallelConfig;
+use ted::metrics::bench;
+use ted::moe::{dispatch, return_to_origin, route_top1, MoeComm};
+use ted::topology::Topology;
+use ted::util::rng::Rng;
+use ted::util::tensor::Tensor;
+
+fn probs_for(n: usize, e: usize, seed: u64) -> Tensor {
+    let mut t = Tensor::zeros(&[n, e]);
+    let mut rng = Rng::new(seed);
+    for i in 0..n {
+        let row = t.row_mut(i);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = rng.uniform() as f32 + 0.01;
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    t
+}
+
+fn bench_route(n: usize, e: usize, iters: u32) {
+    let rez = Rendezvous::new(1);
+    let mut comm = Communicator::new(Arc::clone(&rez), 0);
+    let topo = Topology::new(ParallelConfig::derive(1, 1, 1).unwrap()).unwrap();
+    let g = topo.groups(0);
+    let probs = probs_for(n, e, 3);
+    let cap = (n * 2 / e).max(8);
+    bench::run(&format!("route_top1/{n}tok/{e}exp"), 3, iters, || {
+        let _ = route_top1(&mut comm, g.ep_group_id, &g.ep_group, 0, &probs, e, cap);
+    });
+}
+
+fn bench_dispatch_roundtrip(tp: usize, ep: usize, n: usize, d: usize, dtd: bool, iters: u32) {
+    let world = tp * ep;
+    let label = format!(
+        "dispatch_return/tp{tp}ep{ep}/{n}x{d}/{}",
+        if dtd { "dtd" } else { "nodtd" }
+    );
+    let topo = Topology::new(ParallelConfig::derive(world, tp, ep).unwrap()).unwrap();
+    let rez = Rendezvous::new(world);
+    let e = ep; // one expert per EP rank
+    let cap = (n * ep * 2 / e).max(16);
+
+    std::thread::scope(|s| {
+        for rank in 1..world {
+            let rez = Arc::clone(&rez);
+            let topo = topo.clone();
+            s.spawn(move || {
+                run_rank(rez, &topo, rank, n, d, e, cap, dtd, iters + 3);
+            });
+        }
+        let topo2 = topo.clone();
+        let g = topo2.groups(0);
+        let mut comm = Communicator::new(Arc::clone(&rez), 0);
+        let probs = probs_for(n, e, 17);
+        let rows = Tensor::from_vec(&[n, d], vec![0.5; n * d]);
+        bench::run(&label, 3, iters, || {
+            one_pass(&mut comm, &g, &probs, &rows, e, cap, dtd);
+        });
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_rank(
+    rez: Arc<Rendezvous>,
+    topo: &Topology,
+    rank: usize,
+    n: usize,
+    d: usize,
+    e: usize,
+    cap: usize,
+    dtd: bool,
+    iters: u32,
+) {
+    let g = topo.groups(rank);
+    let mut comm = Communicator::new(rez, rank);
+    let probs = probs_for(n, e, 17);
+    let rows = Tensor::from_vec(&[n, d], vec![0.5; n * d]);
+    for _ in 0..iters {
+        one_pass(&mut comm, &g, &probs, &rows, e, cap, dtd);
+    }
+}
+
+fn one_pass(
+    comm: &mut Communicator,
+    g: &ted::topology::RankGroups,
+    probs: &Tensor,
+    rows: &Tensor,
+    e: usize,
+    cap: usize,
+    dtd: bool,
+) {
+    let ep_pos = g.ep_group.iter().position(|&m| m == comm.rank()).unwrap();
+    let tp_pos = g.tp_group.iter().position(|&m| m == comm.rank()).unwrap();
+    let dec = route_top1(comm, g.ep_group_id, &g.ep_group, ep_pos, probs, e, cap);
+    let local_experts = e / g.ep_group.len();
+    let mut ctx = MoeComm {
+        comm,
+        ep_gid: g.ep_group_id,
+        ep_members: &g.ep_group,
+        ep_pos,
+        tp_gid: g.tp_group_id,
+        tp_members: &g.tp_group,
+        tp_pos,
+        dtd,
+    };
+    let disp = dispatch(&mut ctx, rows, &dec, local_experts, cap);
+    let _ = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, local_experts, cap);
+}
+
+fn main() {
+    println!("# bench_router — routing + dispatch hot path");
+    for (n, e) in [(256, 4), (2048, 16), (8192, 64)] {
+        bench_route(n, e, 50);
+    }
+    for dtd in [false, true] {
+        bench_dispatch_roundtrip(2, 2, 512, 64, dtd, 30);
+        bench_dispatch_roundtrip(2, 2, 2048, 256, dtd, 10);
+    }
+}

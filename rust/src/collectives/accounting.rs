@@ -1,0 +1,132 @@
+//! Per-rank, per-kind communication volume accounting.
+//!
+//! Counts *logical payload bytes leaving each rank* (self-destined traffic
+//! excluded), which is the quantity DTD shrinks and the quantity the paper's
+//! Figure 5 decomposes. Algorithmic inflation (ring all-reduce moving
+//! 2(n-1)/n of the buffer, etc.) is applied by the perf model, not here.
+
+use std::sync::Mutex;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CommKind {
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    AllToAll,
+    Broadcast,
+    Barrier,
+}
+
+pub const ALL_KINDS: [CommKind; 6] = [
+    CommKind::AllReduce,
+    CommKind::AllGather,
+    CommKind::ReduceScatter,
+    CommKind::AllToAll,
+    CommKind::Broadcast,
+    CommKind::Barrier,
+];
+
+impl CommKind {
+    pub fn index(self) -> usize {
+        match self {
+            CommKind::AllReduce => 0,
+            CommKind::AllGather => 1,
+            CommKind::ReduceScatter => 2,
+            CommKind::AllToAll => 3,
+            CommKind::Broadcast => 4,
+            CommKind::Barrier => 5,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CommKind::AllReduce => "all_reduce",
+            CommKind::AllGather => "all_gather",
+            CommKind::ReduceScatter => "reduce_scatter",
+            CommKind::AllToAll => "all_to_all",
+            CommKind::Broadcast => "broadcast",
+            CommKind::Barrier => "barrier",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CommStats {
+    pub calls: u64,
+    pub bytes: u64,
+}
+
+/// One row per rank, one column per kind.
+#[derive(Debug)]
+pub struct StatsBoard {
+    inner: Mutex<Vec<[CommStats; 6]>>,
+}
+
+impl StatsBoard {
+    pub fn new(world: usize) -> Self {
+        StatsBoard { inner: Mutex::new(vec![[CommStats::default(); 6]; world]) }
+    }
+
+    pub fn record(&self, rank: usize, kind: CommKind, bytes: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let cell = &mut g[rank][kind.index()];
+        cell.calls += 1;
+        cell.bytes += bytes;
+    }
+
+    pub fn rank_stats(&self, rank: usize) -> [CommStats; 6] {
+        self.inner.lock().unwrap()[rank]
+    }
+
+    pub fn get(&self, rank: usize, kind: CommKind) -> CommStats {
+        self.inner.lock().unwrap()[rank][kind.index()]
+    }
+
+    /// Sum over all ranks for one kind.
+    pub fn total(&self, kind: CommKind) -> CommStats {
+        let g = self.inner.lock().unwrap();
+        let mut acc = CommStats::default();
+        for row in g.iter() {
+            acc.calls += row[kind.index()].calls;
+            acc.bytes += row[kind.index()].bytes;
+        }
+        acc
+    }
+
+    pub fn reset(&self) {
+        let mut g = self.inner.lock().unwrap();
+        for row in g.iter_mut() {
+            *row = [CommStats::default(); 6];
+        }
+    }
+
+    /// Pretty table for logs/benches.
+    pub fn render(&self) -> String {
+        let mut out = String::from("kind            calls        bytes\n");
+        for kind in ALL_KINDS {
+            let t = self.total(kind);
+            if t.calls > 0 {
+                out.push_str(&format!("{:<14} {:>7} {:>12}\n", kind.name(), t.calls, t.bytes));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_totals() {
+        let b = StatsBoard::new(2);
+        b.record(0, CommKind::AllToAll, 100);
+        b.record(1, CommKind::AllToAll, 50);
+        b.record(0, CommKind::AllReduce, 10);
+        assert_eq!(b.get(0, CommKind::AllToAll), CommStats { calls: 1, bytes: 100 });
+        assert_eq!(b.total(CommKind::AllToAll), CommStats { calls: 2, bytes: 150 });
+        assert_eq!(b.total(CommKind::Barrier), CommStats::default());
+        b.reset();
+        assert_eq!(b.total(CommKind::AllToAll), CommStats::default());
+    }
+}

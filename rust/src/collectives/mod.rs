@@ -1,0 +1,22 @@
+//! Functional in-process collectives.
+//!
+//! The simulated cluster runs every rank as a thread; collectives are real
+//! data movement through a shared [`Rendezvous`] keyed by (group id, op
+//! sequence number). Semantics mirror NCCL/MPI:
+//!
+//! * deterministic reductions (accumulation in member order, so a run is
+//!   bit-reproducible regardless of thread scheduling),
+//! * per-rank, per-kind **byte accounting** — the functional analog of the
+//!   paper's Figure 5 communication breakdown (DTD must show up here as an
+//!   exact `G_tensor x` reduction in all-to-all payload),
+//! * deadlock detection via timeout (a mismatched op sequence in the engine
+//!   is a bug; we panic with the op descriptor instead of hanging).
+//!
+//! The α-β *cost* model for paper-scale figures lives in `perfmodel`, not
+//! here; this module is about correctness and measured volume.
+
+pub mod accounting;
+pub mod rendezvous;
+
+pub use accounting::{CommKind, CommStats, StatsBoard};
+pub use rendezvous::{Communicator, Rendezvous};

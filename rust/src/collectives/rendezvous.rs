@@ -1,0 +1,464 @@
+//! The rendezvous: a shared meeting point implementing the collectives.
+//!
+//! Every collective call on a group allocates a slot keyed by
+//! (group id, per-group sequence number). Ranks deposit their contribution,
+//! the last arrival performs any reduction, and every member picks up its
+//! result; the last pickup frees the slot. Sequence numbers are tracked
+//! per (rank, group) inside each [`Communicator`], so program order per
+//! group defines matching — exactly MPI communicator semantics.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::collectives::accounting::{CommKind, StatsBoard};
+use crate::topology::GroupId;
+use crate::util::tensor::Tensor;
+
+/// How long a rank waits on peers before declaring the program deadlocked.
+const DEADLOCK_TIMEOUT: Duration = Duration::from_secs(120);
+
+type SlotKey = (GroupId, u64);
+
+/// Per-op state. `contributions[i]` is member i's deposit: a vector of
+/// payloads (one per destination for all-to-all; a single payload for the
+/// other ops). `reduced` caches the all-reduce result.
+struct Slot {
+    contributions: Vec<Option<Vec<Vec<f32>>>>,
+    kind: CommKind,
+    arrived: usize,
+    taken: usize,
+    reduced: Option<Arc<Vec<f32>>>,
+}
+
+#[derive(Default)]
+struct State {
+    slots: HashMap<SlotKey, Slot>,
+}
+
+/// Shared rendezvous for one simulated job.
+pub struct Rendezvous {
+    state: Mutex<State>,
+    cv: Condvar,
+    pub stats: StatsBoard,
+    world: usize,
+}
+
+impl Rendezvous {
+    pub fn new(world: usize) -> Arc<Self> {
+        Arc::new(Rendezvous {
+            state: Mutex::new(State::default()),
+            cv: Condvar::new(),
+            stats: StatsBoard::new(world),
+            world,
+        })
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// Deposit a contribution and wait until all `n` members have arrived.
+    /// Returns nothing; pickup happens in `take`.
+    fn deposit(
+        &self,
+        key: SlotKey,
+        kind: CommKind,
+        my_pos: usize,
+        n: usize,
+        payloads: Vec<Vec<f32>>,
+        desc: &str,
+    ) {
+        let mut st = self.state.lock().unwrap();
+        let slot = st.slots.entry(key).or_insert_with(|| Slot {
+            contributions: vec![None; n],
+            kind,
+            arrived: 0,
+            taken: 0,
+            reduced: None,
+        });
+        assert_eq!(slot.kind, kind, "collective kind mismatch at {desc} (got {kind:?}, slot {:?})", slot.kind);
+        assert_eq!(slot.contributions.len(), n, "group size mismatch at {desc}");
+        assert!(slot.contributions[my_pos].is_none(), "double deposit at {desc}");
+        slot.contributions[my_pos] = Some(payloads);
+        slot.arrived += 1;
+        self.cv.notify_all();
+
+        // wait for everyone
+        let deadline = std::time::Instant::now() + DEADLOCK_TIMEOUT;
+        while st.slots.get(&key).map(|s| s.arrived).unwrap_or(n) < n {
+            let remaining = deadline
+                .checked_duration_since(std::time::Instant::now())
+                .unwrap_or_else(|| {
+                    panic!("collective deadlock: {desc} (only {} of {} ranks arrived)",
+                        st.slots.get(&key).map(|s| s.arrived).unwrap_or(0), n)
+                });
+            let (g, timeout) = self.cv.wait_timeout(st, remaining).unwrap();
+            st = g;
+            if timeout.timed_out() {
+                let got = st.slots.get(&key).map(|s| s.arrived).unwrap_or(0);
+                panic!("collective deadlock: {desc} (only {got} of {n} ranks arrived)");
+            }
+        }
+    }
+
+    /// Read out this rank's result; the closure maps the complete slot to
+    /// the local result. The last reader frees the slot.
+    fn take<R>(
+        &self,
+        key: SlotKey,
+        n: usize,
+        f: impl FnOnce(&mut Slot) -> R,
+    ) -> R {
+        let mut st = self.state.lock().unwrap();
+        let slot = st.slots.get_mut(&key).expect("slot vanished before pickup");
+        let out = f(slot);
+        slot.taken += 1;
+        if slot.taken == n {
+            st.slots.remove(&key);
+        }
+        out
+    }
+}
+
+/// One rank's handle: owns the per-group sequence counters.
+pub struct Communicator {
+    rez: Arc<Rendezvous>,
+    rank: usize,
+    seqs: HashMap<GroupId, u64>,
+}
+
+impl Communicator {
+    pub fn new(rez: Arc<Rendezvous>, rank: usize) -> Self {
+        Communicator { rez, rank, seqs: HashMap::new() }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn stats(&self) -> &StatsBoard {
+        &self.rez.stats
+    }
+
+    fn next_seq(&mut self, gid: GroupId) -> u64 {
+        let c = self.seqs.entry(gid).or_insert(0);
+        let s = *c;
+        *c += 1;
+        s
+    }
+
+    fn my_pos(&self, members: &[usize]) -> usize {
+        members
+            .iter()
+            .position(|&m| m == self.rank)
+            .unwrap_or_else(|| panic!("rank {} not in group {members:?}", self.rank))
+    }
+
+    /// In-place sum all-reduce over the group (deterministic member order).
+    pub fn all_reduce(&mut self, gid: GroupId, members: &[usize], t: &mut Tensor) {
+        let n = members.len();
+        if n == 1 {
+            return; // singleton group: no comm, no accounting
+        }
+        let pos = self.my_pos(members);
+        let seq = self.next_seq(gid);
+        let key = (gid, seq);
+        let bytes = (t.numel() * 4) as u64;
+        self.rez.stats.record(self.rank, CommKind::AllReduce, bytes);
+        self.rez.deposit(key, CommKind::AllReduce, pos, n, vec![t.data().to_vec()],
+            &format!("all_reduce g={gid:?} seq={seq}"));
+        let result = self.rez.take(key, n, |slot| {
+            if slot.reduced.is_none() {
+                // reduce in member order for determinism
+                let len = slot.contributions[0].as_ref().unwrap()[0].len();
+                let mut acc = vec![0.0f32; len];
+                for c in slot.contributions.iter() {
+                    let v = &c.as_ref().expect("missing contribution")[0];
+                    assert_eq!(v.len(), len, "all_reduce length mismatch");
+                    for (a, b) in acc.iter_mut().zip(v) {
+                        *a += *b;
+                    }
+                }
+                slot.reduced = Some(Arc::new(acc));
+            }
+            Arc::clone(slot.reduced.as_ref().unwrap())
+        });
+        t.data_mut().copy_from_slice(&result);
+    }
+
+    /// All-gather: returns each member's tensor in member order.
+    pub fn all_gather(&mut self, gid: GroupId, members: &[usize], t: &Tensor) -> Vec<Vec<f32>> {
+        let n = members.len();
+        if n == 1 {
+            return vec![t.data().to_vec()];
+        }
+        let pos = self.my_pos(members);
+        let seq = self.next_seq(gid);
+        let key = (gid, seq);
+        self.rez.stats.record(self.rank, CommKind::AllGather, (t.numel() * 4) as u64);
+        self.rez.deposit(key, CommKind::AllGather, pos, n, vec![t.data().to_vec()],
+            &format!("all_gather g={gid:?} seq={seq}"));
+        self.rez.take(key, n, |slot| {
+            slot.contributions
+                .iter()
+                .map(|c| c.as_ref().expect("missing contribution")[0].clone())
+                .collect()
+        })
+    }
+
+    /// All-to-all(v): `send[i]` goes to `members[i]`; returns what each
+    /// member sent to us, in member order. Variable lengths allowed.
+    pub fn all_to_all(
+        &mut self,
+        gid: GroupId,
+        members: &[usize],
+        send: Vec<Vec<f32>>,
+    ) -> Vec<Vec<f32>> {
+        let n = members.len();
+        assert_eq!(send.len(), n, "all_to_all needs one payload per member");
+        let pos = self.my_pos(members);
+        if n == 1 {
+            return send;
+        }
+        // bytes leaving this rank = everything not destined to self
+        let bytes: u64 = send
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != pos)
+            .map(|(_, v)| (v.len() * 4) as u64)
+            .sum();
+        let seq = self.next_seq(gid);
+        let key = (gid, seq);
+        self.rez.stats.record(self.rank, CommKind::AllToAll, bytes);
+        self.rez.deposit(key, CommKind::AllToAll, pos, n, send,
+            &format!("all_to_all g={gid:?} seq={seq}"));
+        self.rez.take(key, n, |slot| {
+            slot.contributions
+                .iter()
+                .map(|c| c.as_ref().expect("missing contribution")[pos].clone())
+                .collect()
+        })
+    }
+
+    /// Broadcast from `root` (a member index into `members`, not a rank id).
+    pub fn broadcast(&mut self, gid: GroupId, members: &[usize], root_pos: usize, t: &mut Tensor) {
+        let n = members.len();
+        if n == 1 {
+            return;
+        }
+        let pos = self.my_pos(members);
+        let seq = self.next_seq(gid);
+        let key = (gid, seq);
+        if pos == root_pos {
+            self.rez.stats.record(self.rank, CommKind::Broadcast, (t.numel() * 4) as u64);
+            self.rez.deposit(key, CommKind::Broadcast, pos, n, vec![t.data().to_vec()],
+                &format!("broadcast g={gid:?} seq={seq}"));
+        } else {
+            self.rez.deposit(key, CommKind::Broadcast, pos, n, vec![],
+                &format!("broadcast g={gid:?} seq={seq}"));
+        }
+        let result = self.rez.take(key, n, |slot| {
+            slot.contributions[root_pos].as_ref().expect("root missing")[0].clone()
+        });
+        t.data_mut().copy_from_slice(&result);
+    }
+
+    /// Reduce-scatter (sum): input length must divide evenly by group size;
+    /// returns this rank's shard.
+    pub fn reduce_scatter(&mut self, gid: GroupId, members: &[usize], t: &Tensor) -> Vec<f32> {
+        let n = members.len();
+        if n == 1 {
+            return t.data().to_vec();
+        }
+        let pos = self.my_pos(members);
+        assert_eq!(t.numel() % n, 0, "reduce_scatter length not divisible by group");
+        let seq = self.next_seq(gid);
+        let key = (gid, seq);
+        self.rez.stats.record(self.rank, CommKind::ReduceScatter, (t.numel() * 4) as u64);
+        self.rez.deposit(key, CommKind::ReduceScatter, pos, n, vec![t.data().to_vec()],
+            &format!("reduce_scatter g={gid:?} seq={seq}"));
+        self.rez.take(key, n, |slot| {
+            let len = t.numel();
+            let shard = len / n;
+            let lo = pos * shard;
+            let mut acc = vec![0.0f32; shard];
+            for c in slot.contributions.iter() {
+                let v = &c.as_ref().expect("missing contribution")[0];
+                assert_eq!(v.len(), len);
+                for (a, b) in acc.iter_mut().zip(&v[lo..lo + shard]) {
+                    *a += *b;
+                }
+            }
+            acc
+        })
+    }
+
+    /// Barrier over the group.
+    pub fn barrier(&mut self, gid: GroupId, members: &[usize]) {
+        let n = members.len();
+        if n == 1 {
+            return;
+        }
+        let pos = self.my_pos(members);
+        let seq = self.next_seq(gid);
+        let key = (gid, seq);
+        self.rez.stats.record(self.rank, CommKind::Barrier, 0);
+        self.rez.deposit(key, CommKind::Barrier, pos, n, vec![],
+            &format!("barrier g={gid:?} seq={seq}"));
+        self.rez.take(key, n, |_| ());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{GroupId, GroupKind};
+
+    fn gid(i: usize) -> GroupId {
+        GroupId { kind: GroupKind::World, index: i }
+    }
+
+    fn run_ranks<F, R>(n: usize, f: F) -> Vec<R>
+    where
+        F: Fn(usize, Communicator) -> R + Sync,
+        R: Send,
+    {
+        let rez = Rendezvous::new(n);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|r| {
+                    let comm = Communicator::new(Arc::clone(&rez), r);
+                    let f = &f;
+                    s.spawn(move || f(r, comm))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn all_reduce_sums() {
+        let members: Vec<usize> = (0..4).collect();
+        let outs = run_ranks(4, |r, mut c| {
+            let mut t = Tensor::from_vec(&[3], vec![r as f32, 1.0, 10.0]);
+            c.all_reduce(gid(0), &members, &mut t);
+            t.into_vec()
+        });
+        for o in outs {
+            assert_eq!(o, vec![0.0 + 1.0 + 2.0 + 3.0, 4.0, 40.0]);
+        }
+    }
+
+    #[test]
+    fn all_gather_orders_by_member() {
+        let members: Vec<usize> = (0..3).collect();
+        let outs = run_ranks(3, |r, mut c| {
+            let t = Tensor::from_vec(&[1], vec![(r * 100) as f32]);
+            c.all_gather(gid(1), &members, &t)
+        });
+        for o in outs {
+            assert_eq!(o, vec![vec![0.0], vec![100.0], vec![200.0]]);
+        }
+    }
+
+    #[test]
+    fn all_to_all_transposes() {
+        let members: Vec<usize> = (0..3).collect();
+        let outs = run_ranks(3, |r, mut c| {
+            // rank r sends value 10*r + j to member j
+            let send: Vec<Vec<f32>> = (0..3).map(|j| vec![(10 * r + j) as f32]).collect();
+            c.all_to_all(gid(2), &members, send)
+        });
+        for (r, o) in outs.into_iter().enumerate() {
+            let want: Vec<Vec<f32>> = (0..3).map(|s| vec![(10 * s + r) as f32]).collect();
+            assert_eq!(o, want);
+        }
+    }
+
+    #[test]
+    fn all_to_all_variable_lengths() {
+        let members: Vec<usize> = (0..2).collect();
+        let outs = run_ranks(2, |r, mut c| {
+            let send = if r == 0 {
+                vec![vec![], vec![1.0, 2.0, 3.0]]
+            } else {
+                vec![vec![9.0], vec![]]
+            };
+            c.all_to_all(gid(3), &members, send)
+        });
+        assert_eq!(outs[0], vec![vec![], vec![9.0]]);
+        assert_eq!(outs[1], vec![vec![1.0, 2.0, 3.0], vec![]]);
+    }
+
+    #[test]
+    fn broadcast_from_root() {
+        let members: Vec<usize> = (0..4).collect();
+        let outs = run_ranks(4, |r, mut c| {
+            let mut t = Tensor::from_vec(&[2], vec![r as f32, r as f32]);
+            c.broadcast(gid(4), &members, 2, &mut t);
+            t.into_vec()
+        });
+        for o in outs {
+            assert_eq!(o, vec![2.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_shards() {
+        let members: Vec<usize> = (0..2).collect();
+        let outs = run_ranks(2, |r, mut c| {
+            let t = Tensor::from_vec(&[4], vec![r as f32; 4]);
+            c.reduce_scatter(gid(5), &members, &t)
+        });
+        // sum over ranks = [1,1,1,1]; rank 0 gets first half, rank 1 second
+        assert_eq!(outs[0], vec![1.0, 1.0]);
+        assert_eq!(outs[1], vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn accounting_counts_payloads() {
+        let members: Vec<usize> = (0..2).collect();
+        let rez = Rendezvous::new(2);
+        std::thread::scope(|s| {
+            for r in 0..2 {
+                let mut c = Communicator::new(Arc::clone(&rez), r);
+                let members = members.clone();
+                s.spawn(move || {
+                    let mut t = Tensor::from_vec(&[8], vec![1.0; 8]);
+                    c.all_reduce(gid(6), &members, &mut t);
+                    let send = vec![vec![0.0; 4], vec![0.0; 4]];
+                    c.all_to_all(gid(6), &members, send);
+                });
+            }
+        });
+        // all_reduce: 8 f32 = 32 bytes per rank
+        assert_eq!(rez.stats.get(0, CommKind::AllReduce).bytes, 32);
+        // a2a: only the non-self payload counts: 4 f32 = 16 bytes
+        assert_eq!(rez.stats.get(0, CommKind::AllToAll).bytes, 16);
+        assert_eq!(rez.stats.total(CommKind::AllToAll).calls, 2);
+    }
+
+    #[test]
+    fn singleton_groups_are_free() {
+        let rez = Rendezvous::new(1);
+        let mut c = Communicator::new(Arc::clone(&rez), 0);
+        let mut t = Tensor::from_vec(&[2], vec![5.0, 6.0]);
+        c.all_reduce(gid(7), &[0], &mut t);
+        assert_eq!(t.data(), &[5.0, 6.0]);
+        assert_eq!(rez.stats.get(0, CommKind::AllReduce).calls, 0);
+    }
+
+    #[test]
+    fn independent_groups_do_not_interfere() {
+        // two disjoint pairs all-reducing concurrently with different group ids
+        let outs = run_ranks(4, |r, mut c| {
+            let members = if r < 2 { vec![0, 1] } else { vec![2, 3] };
+            let g = if r < 2 { gid(10) } else { gid(11) };
+            let mut t = Tensor::from_vec(&[1], vec![r as f32]);
+            c.all_reduce(g, &members, &mut t);
+            t.into_vec()[0]
+        });
+        assert_eq!(outs, vec![1.0, 1.0, 5.0, 5.0]);
+    }
+}

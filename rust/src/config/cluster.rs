@@ -1,0 +1,143 @@
+//! Cluster descriptions for the analytic performance model: the paper's two
+//! testbeds (Summit, ThetaGPU) plus a generic single-node box.
+//!
+//! Bandwidths are the paper's quoted *bidirectional* peaks; the alpha-beta
+//! collective model (perfmodel/collective_cost.rs) converts to effective
+//! per-direction link bandwidth and applies an achievable-fraction factor.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub name: String,
+    pub gpus_per_node: usize,
+    /// GPU memory capacity in GiB.
+    pub mem_per_gpu_gib: f64,
+    /// Peak half-precision throughput per GPU, in Tflop/s.
+    pub peak_half_tflops: f64,
+    /// Peak intra-node bidirectional bandwidth (GB/s) — NVLink.
+    pub intra_bw_gbs: f64,
+    /// Peak inter-node bidirectional bandwidth (GB/s) — InfiniBand.
+    pub inter_bw_gbs: f64,
+    /// Per-message latency (seconds) intra / inter node (alpha terms).
+    pub intra_latency_s: f64,
+    pub inter_latency_s: f64,
+    /// Fraction of peak bandwidth collectives actually achieve (NCCL-style
+    /// efficiency; calibrated so Fig. 5's baseline comm share ~50% holds).
+    pub bw_efficiency: f64,
+    /// Fraction of peak flops dense GEMMs achieve on this GPU.
+    pub flops_efficiency: f64,
+}
+
+impl ClusterConfig {
+    /// Summit: 6x V100-16GB per node, NVLink 50 GB/s, IB 25 GB/s (section 6).
+    pub fn summit() -> Self {
+        ClusterConfig {
+            name: "summit".into(),
+            gpus_per_node: 6,
+            mem_per_gpu_gib: 16.0,
+            peak_half_tflops: 125.0,
+            intra_bw_gbs: 50.0,
+            inter_bw_gbs: 25.0,
+            intra_latency_s: 5e-6,
+            inter_latency_s: 10e-6,
+            bw_efficiency: 0.7,
+            flops_efficiency: 0.45,
+        }
+    }
+
+    /// ThetaGPU: 8x A100-40GB per node, NVLink 600 GB/s, IB 200 GB/s.
+    pub fn thetagpu() -> Self {
+        ClusterConfig {
+            name: "thetagpu".into(),
+            gpus_per_node: 8,
+            mem_per_gpu_gib: 40.0,
+            peak_half_tflops: 312.0,
+            intra_bw_gbs: 600.0,
+            inter_bw_gbs: 200.0,
+            intra_latency_s: 5e-6,
+            inter_latency_s: 10e-6,
+            bw_efficiency: 0.7,
+            flops_efficiency: 0.5,
+        }
+    }
+
+    /// Perlmutter (used by the paper's section-3 "4x larger" headline):
+    /// 4x A100-40GB per node.
+    pub fn perlmutter() -> Self {
+        ClusterConfig {
+            name: "perlmutter".into(),
+            gpus_per_node: 4,
+            mem_per_gpu_gib: 40.0,
+            peak_half_tflops: 312.0,
+            intra_bw_gbs: 600.0,
+            inter_bw_gbs: 200.0,
+            intra_latency_s: 5e-6,
+            inter_latency_s: 10e-6,
+            bw_efficiency: 0.7,
+            flops_efficiency: 0.5,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "summit" => Some(Self::summit()),
+            "thetagpu" => Some(Self::thetagpu()),
+            "perlmutter" => Some(Self::perlmutter()),
+            _ => None,
+        }
+    }
+
+    pub fn mem_per_gpu_bytes(&self) -> u64 {
+        (self.mem_per_gpu_gib * (1u64 << 30) as f64) as u64
+    }
+
+    /// Effective per-direction bandwidth in bytes/s for a group of ranks:
+    /// if the group fits within a node use NVLink, else the IB bottleneck.
+    pub fn effective_bw_bytes(&self, group_size: usize, all_intra: bool) -> f64 {
+        let bidi = if all_intra && group_size <= self.gpus_per_node {
+            self.intra_bw_gbs
+        } else {
+            self.inter_bw_gbs
+        };
+        // half of bidirectional, in bytes/s, derated by efficiency
+        bidi / 2.0 * 1e9 * self.bw_efficiency
+    }
+
+    pub fn latency_s(&self, group_size: usize, all_intra: bool) -> f64 {
+        if all_intra && group_size <= self.gpus_per_node {
+            self.intra_latency_s
+        } else {
+            self.inter_latency_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbeds_match_section6() {
+        let s = ClusterConfig::summit();
+        assert_eq!(s.gpus_per_node, 6);
+        assert_eq!(s.peak_half_tflops, 125.0);
+        assert_eq!(s.intra_bw_gbs, 50.0);
+        assert_eq!(s.inter_bw_gbs, 25.0);
+        let t = ClusterConfig::thetagpu();
+        assert_eq!(t.gpus_per_node, 8);
+        assert_eq!(t.mem_per_gpu_gib, 40.0);
+    }
+
+    #[test]
+    fn bw_falls_back_to_ib_across_nodes() {
+        let s = ClusterConfig::summit();
+        let intra = s.effective_bw_bytes(6, true);
+        let inter = s.effective_bw_bytes(12, false);
+        assert!(intra > inter);
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(ClusterConfig::by_name("summit").is_some());
+        assert!(ClusterConfig::by_name("frontier").is_none());
+    }
+}

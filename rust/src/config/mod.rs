@@ -1,0 +1,13 @@
+//! Configuration: model architectures (paper Table 1 + executable configs),
+//! the TED 3-D parallel decomposition (Eq. 1), cluster descriptions for the
+//! analytic models, and training hyper-parameters.
+
+pub mod cluster;
+pub mod model;
+pub mod parallel;
+pub mod training;
+
+pub use cluster::ClusterConfig;
+pub use model::ModelConfig;
+pub use parallel::{EngineOptions, ParallelConfig};
+pub use training::TrainingConfig;

@@ -1,0 +1,185 @@
+//! Model architecture configs: the paper's Table-1 base models (analytic
+//! targets for the memory/perf models) plus the small executable configs
+//! exported by `python/compile/aot.py`.
+
+/// Transformer base-model architecture (the "base model" in MoE parlance).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    /// Global batch size (sequences) used by the paper for this model.
+    pub batch_size: usize,
+}
+
+impl ModelConfig {
+    pub fn new(
+        name: &str,
+        n_layers: usize,
+        d_model: usize,
+        n_heads: usize,
+        seq: usize,
+        batch_size: usize,
+    ) -> Self {
+        ModelConfig {
+            name: name.to_string(),
+            n_layers,
+            d_model,
+            n_heads,
+            d_ff: 4 * d_model,
+            vocab: 51200, // GPT-2 BPE vocab padded, as in Megatron-LM
+            seq,
+            batch_size,
+        }
+    }
+
+    /// Exact parameter count of the dense base model.
+    ///
+    /// Per layer: attention (QKV [D,3D]+[3D], proj [D,D]+[D]) + FFN
+    /// ([D,F]+[F], [F,D]+[D]) + 2 LayerNorms (2*[D] each); plus token +
+    /// positional embeddings, final LN, and an untied LM head.
+    pub fn n_params_base(&self) -> u64 {
+        let d = self.d_model as u64;
+        let f = self.d_ff as u64;
+        let v = self.vocab as u64;
+        let s = self.seq as u64;
+        let per_layer = (d * 3 * d + 3 * d) + (d * d + d) + (d * f + f) + (f * d + d) + 4 * d;
+        let emb = v * d + s * d;
+        let head = d * v + 2 * d;
+        self.n_layers as u64 * per_layer + emb + head
+    }
+
+    /// Paper-style split (section 3.1): two-thirds of base parameters in
+    /// feed-forward blocks, one-third in attention. With d_ff = 4*d_model
+    /// this is exact for the block parameters (8 d^2 vs 4 d^2 per layer).
+    pub fn n_params_ffn_blocks(&self) -> u64 {
+        let d = self.d_model as u64;
+        let f = self.d_ff as u64;
+        self.n_layers as u64 * (d * f + f + f * d + d)
+    }
+
+    pub fn n_params_attn_blocks(&self) -> u64 {
+        let d = self.d_model as u64;
+        self.n_layers as u64 * (d * 3 * d + 3 * d + d * d + d + 4 * d)
+    }
+
+    /// MoE parameter counts per the paper's Eq. 2/3: experts on every
+    /// *alternate* layer, so half of the FFN blocks are replicated E times.
+    ///
+    /// NP_exp = E * (1/2) * NP_ffn;  NP_nonexp = NP_base - (1/2) * NP_ffn.
+    pub fn n_params_expert(&self, n_experts: usize) -> u64 {
+        n_experts as u64 * self.n_params_ffn_blocks() / 2
+    }
+
+    pub fn n_params_nonexpert(&self) -> u64 {
+        self.n_params_base() - self.n_params_ffn_blocks() / 2
+    }
+
+    /// Total MoE model size with `n_experts` experts on alternate layers.
+    pub fn n_params_moe(&self, n_experts: usize) -> u64 {
+        self.n_params_expert(n_experts) + self.n_params_nonexpert()
+    }
+
+    /// Number of MoE layers (alternate layers carry experts; layer 1, 3, ...).
+    pub fn n_moe_layers(&self) -> usize {
+        self.n_layers / 2
+    }
+}
+
+/// The paper's Table 1 (hyperparameters from Brown et al. / GPT-3 family).
+pub fn table1() -> Vec<ModelConfig> {
+    vec![
+        ModelConfig::new("1.3B", 24, 2048, 16, 2048, 512),
+        ModelConfig::new("2.7B", 32, 2560, 32, 2048, 512),
+        ModelConfig::new("6.7B", 32, 4096, 32, 2048, 1024),
+        ModelConfig::new("13.0B", 40, 5140, 40, 2048, 2048),
+    ]
+}
+
+pub fn table1_by_name(name: &str) -> Option<ModelConfig> {
+    table1().into_iter().find(|m| m.name == name)
+}
+
+/// The executable configs exported by aot.py (must stay in sync with
+/// `python/compile/aot.py::CONFIGS`).
+pub fn executable(name: &str) -> Option<ModelConfig> {
+    let mut m = match name {
+        "tiny" => ModelConfig { d_ff: 128, vocab: 256, ..ModelConfig::new("tiny", 2, 64, 4, 16, 8) },
+        "mini" => ModelConfig { d_ff: 256, vocab: 512, ..ModelConfig::new("mini", 4, 128, 8, 32, 8) },
+        "e2e-28m" => ModelConfig { d_ff: 2048, vocab: 8192, ..ModelConfig::new("e2e-28m", 8, 512, 8, 128, 8) },
+        "e2e-100m" => ModelConfig { d_ff: 3072, vocab: 16384, ..ModelConfig::new("e2e-100m", 12, 768, 12, 256, 8) },
+        _ => return None,
+    };
+    m.name = name.to_string();
+    Some(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_param_counts_near_nominal() {
+        // Exact counts should land within ~15% of the paper's nominal sizes
+        // (the nominal names fold in embeddings differently).
+        let nominal = [("1.3B", 1.3e9), ("2.7B", 2.7e9), ("6.7B", 6.7e9), ("13.0B", 13.0e9)];
+        for (name, want) in nominal {
+            let m = table1_by_name(name).unwrap();
+            let got = m.n_params_base() as f64;
+            let ratio = got / want;
+            assert!((0.85..1.25).contains(&ratio), "{name}: {got:.3e} vs {want:.3e}");
+        }
+    }
+
+    #[test]
+    fn ffn_share_is_about_two_thirds() {
+        // Paper section 3.1: "two-thirds of the parameters in the base model
+        // reside in feed-forward blocks" (block params only, no embeddings).
+        let m = table1_by_name("6.7B").unwrap();
+        let blocks = (m.n_params_ffn_blocks() + m.n_params_attn_blocks()) as f64;
+        let share = m.n_params_ffn_blocks() as f64 / blocks;
+        assert!((share - 2.0 / 3.0).abs() < 0.02, "share {share}");
+    }
+
+    #[test]
+    fn moe_follows_eq2_eq3() {
+        // Eq 2: NP_exp = (E/3) * NP_base ; Eq 3: NP_nonexp = (2/3) * NP_base
+        // (to the approximation that embeddings are excluded, so compare on
+        // block parameters only).
+        let m = table1_by_name("2.7B").unwrap();
+        let blocks = m.n_params_ffn_blocks() + m.n_params_attn_blocks();
+        let e = 16;
+        let np_exp = m.n_params_expert(e) as f64;
+        assert!((np_exp / (e as f64 / 3.0 * blocks as f64) - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn moe_grows_linearly_in_experts() {
+        let m = table1_by_name("1.3B").unwrap();
+        let a = m.n_params_moe(4);
+        let b = m.n_params_moe(8);
+        let c = m.n_params_moe(16);
+        assert_eq!(b - a, m.n_params_ffn_blocks() / 2 * 4);
+        assert_eq!(c - b, m.n_params_ffn_blocks() / 2 * 8);
+    }
+
+    #[test]
+    fn executable_configs_exist() {
+        for name in ["tiny", "mini", "e2e-28m", "e2e-100m"] {
+            let m = executable(name).unwrap();
+            assert!(m.d_model % m.n_heads == 0, "{name}");
+        }
+        assert!(executable("nope").is_none());
+    }
+
+    #[test]
+    fn e2e_100m_is_about_100m() {
+        let m = executable("e2e-100m").unwrap();
+        let p = m.n_params_base() as f64;
+        assert!((0.8e8..1.6e8).contains(&p), "{p:.3e}");
+    }
+}

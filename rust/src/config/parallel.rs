@@ -1,0 +1,184 @@
+//! Parallelism configuration: the TED 3-D decomposition (Eq. 1).
+//!
+//!   G_tensor * G_expert * G_dp_exp  =  G_tensor * G_dp_nonexp  =  G
+//!
+//! Non-expert blocks see a 2-D (tensor x data) grid; expert blocks see a
+//! 3-D (tensor x expert x data) grid that re-uses the same tensor groups
+//! and decomposes each non-expert data group into (expert x expert-data).
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Total ranks ("GPUs") in the job.
+    pub world: usize,
+    /// Tensor parallel degree (G_tensor).
+    pub tp: usize,
+    /// Expert parallel degree (G_expert). The paper always sets this to the
+    /// number of experts; we allow E to be a multiple of it (multiple local
+    /// experts per rank), which DeepSpeed-MoE supports too.
+    pub ep: usize,
+    /// Data parallel degree for expert parameters (G_dp^exp).
+    pub dp_exp: usize,
+    /// Data parallel degree for non-expert parameters (G_dp^nonexp).
+    pub dp_nonexp: usize,
+}
+
+impl ParallelConfig {
+    /// Derive the data-parallel degrees from (world, tp, ep), validating
+    /// Eq. 1. `ep` must divide `world / tp`.
+    pub fn derive(world: usize, tp: usize, ep: usize) -> Result<Self> {
+        if world == 0 || tp == 0 || ep == 0 {
+            bail!("world/tp/ep must be positive (got {world}/{tp}/{ep})");
+        }
+        if world % tp != 0 {
+            bail!("tp={tp} does not divide world={world}");
+        }
+        let dp_nonexp = world / tp;
+        if dp_nonexp % ep != 0 {
+            bail!("ep={ep} does not divide dp_nonexp={dp_nonexp} (world={world}, tp={tp})");
+        }
+        let dp_exp = dp_nonexp / ep;
+        Ok(ParallelConfig { world, tp, ep, dp_exp, dp_nonexp })
+    }
+
+    /// Eq. 1 holds by construction; re-check for configs built by hand.
+    pub fn validate(&self) -> Result<()> {
+        if self.tp * self.ep * self.dp_exp != self.world {
+            bail!(
+                "Eq.1 violated: tp*ep*dp_exp = {}*{}*{} != world {}",
+                self.tp, self.ep, self.dp_exp, self.world
+            );
+        }
+        if self.tp * self.dp_nonexp != self.world {
+            bail!(
+                "Eq.1 violated: tp*dp_nonexp = {}*{} != world {}",
+                self.tp, self.dp_nonexp, self.world
+            );
+        }
+        // Eq. 7: dp_exp = dp_nonexp / ep
+        if self.ep * self.dp_exp != self.dp_nonexp {
+            bail!("Eq.7 violated: ep*dp_exp != dp_nonexp");
+        }
+        Ok(())
+    }
+
+    /// Number of experts hosted per EP rank for a model with `n_experts`.
+    pub fn local_experts(&self, n_experts: usize) -> Result<usize> {
+        if n_experts % self.ep != 0 {
+            bail!("n_experts={} not divisible by ep={}", n_experts, self.ep);
+        }
+        Ok(n_experts / self.ep)
+    }
+
+    /// The DeepSpeed-MoE baseline topology: no tensor parallelism.
+    pub fn deepspeed_moe(world: usize, ep: usize) -> Result<Self> {
+        Self::derive(world, 1, ep)
+    }
+}
+
+/// Engine feature switches (the paper's section-4/5 optimizations).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EngineOptions {
+    /// Duplicate Token Dropping (section 5.1).
+    pub dtd: bool,
+    /// Communication-aware Activation Checkpointing (section 5.2).
+    pub cac: bool,
+    /// Activation checkpointing at all (paper: always on for large models).
+    pub activation_checkpointing: bool,
+    /// Tiled optimizer (section 4); tile size in parameters.
+    pub optimizer_tiling: bool,
+    pub tile_size: usize,
+    /// MoE router capacity factor.
+    pub capacity_factor: f32,
+    /// Aux (load-balancing) loss coefficient.
+    pub aux_loss_coef: f32,
+    /// Run the optimizer tile update through the AOT Pallas executable
+    /// instead of the native rust path (identical math; see optimizer/).
+    pub optimizer_use_pjrt: bool,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            dtd: true,
+            cac: true,
+            activation_checkpointing: true,
+            optimizer_tiling: true,
+            tile_size: 1_800_000, // paper: 1.8M parameters
+            capacity_factor: 1.25,
+            aux_loss_coef: 0.01,
+            optimizer_use_pjrt: false,
+        }
+    }
+}
+
+impl EngineOptions {
+    /// The paper's "DeepSpeed-TED (baseline)": hybrid parallelism without
+    /// the communication optimizations.
+    pub fn baseline() -> Self {
+        EngineOptions { dtd: false, cac: false, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::props;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn paper_fig3_topology() {
+        // Fig. 3: 4 GPUs, tp=2, ep=2 -> dp_nonexp=2, dp_exp=1
+        let p = ParallelConfig::derive(4, 2, 2).unwrap();
+        assert_eq!(p.dp_nonexp, 2);
+        assert_eq!(p.dp_exp, 1);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn paper_fig4_topology() {
+        // Section 4: 32 GPUs, tp=1, ep=32 -> dp_nonexp=32, dp_exp=1
+        let p = ParallelConfig::derive(32, 1, 32).unwrap();
+        assert_eq!(p.dp_nonexp, 32);
+        assert_eq!(p.dp_exp, 1);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(ParallelConfig::derive(4, 3, 1).is_err()); // tp !| world
+        assert!(ParallelConfig::derive(4, 2, 4).is_err()); // ep !| dp
+        assert!(ParallelConfig::derive(0, 1, 1).is_err());
+    }
+
+    #[test]
+    fn local_experts() {
+        let p = ParallelConfig::derive(4, 1, 2).unwrap();
+        assert_eq!(p.local_experts(8).unwrap(), 4);
+        assert!(p.local_experts(3).is_err());
+    }
+
+    #[test]
+    fn eq1_property_over_random_grids() {
+        props::check(
+            11,
+            200,
+            |rng: &mut Rng| {
+                let tp = 1 << rng.below(4);
+                let ep = 1 << rng.below(4);
+                let dp_exp = 1 << rng.below(4);
+                (tp, ep, dp_exp)
+            },
+            |&(tp, ep, dp_exp)| {
+                let world = tp * ep * dp_exp;
+                let p = ParallelConfig::derive(world, tp, ep)
+                    .map_err(|e| format!("derive failed: {e}"))?;
+                p.validate().map_err(|e| format!("{e}"))?;
+                if p.dp_exp != dp_exp {
+                    return Err(format!("dp_exp {} != {}", p.dp_exp, dp_exp));
+                }
+                Ok(())
+            },
+        );
+    }
+}

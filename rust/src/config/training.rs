@@ -1,0 +1,81 @@
+//! Training hyper-parameters (AdamW, schedule, batching, seeds).
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainingConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    /// Static loss scale applied to the backward pass (mixed-precision
+    /// discipline; the optimizer divides it back out — see adamw hyper[7]).
+    pub loss_scale: f32,
+    /// Linear warmup steps, then constant lr (enough for the e2e runs).
+    pub warmup_steps: usize,
+    pub steps: usize,
+    /// Global batch in sequences; the engine splits it over dp_nonexp ranks
+    /// and microbatches of the artifact's per-rank batch.
+    pub global_batch: usize,
+    pub seed: u64,
+    /// Gradient clipping by global L2 norm (0 = off).
+    pub grad_clip: f32,
+}
+
+impl Default for TrainingConfig {
+    fn default() -> Self {
+        TrainingConfig {
+            lr: 3e-4,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.01,
+            loss_scale: 1.0,
+            warmup_steps: 20,
+            steps: 100,
+            global_batch: 4,
+            seed: 1234,
+            grad_clip: 1.0,
+        }
+    }
+}
+
+impl TrainingConfig {
+    /// lr at `step` (0-based): linear warmup then constant.
+    pub fn lr_at(&self, step: usize) -> f32 {
+        if self.warmup_steps == 0 || step >= self.warmup_steps {
+            self.lr
+        } else {
+            self.lr * (step + 1) as f32 / self.warmup_steps as f32
+        }
+    }
+
+    /// Bias-correction terms (1 - beta^t) for Adam at 1-based step t.
+    pub fn bias_corrections(&self, t: usize) -> (f32, f32) {
+        let t = t as i32;
+        (1.0 - self.beta1.powi(t), 1.0 - self.beta2.powi(t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let c = TrainingConfig { lr: 1.0, warmup_steps: 4, ..Default::default() };
+        assert!((c.lr_at(0) - 0.25).abs() < 1e-6);
+        assert!((c.lr_at(1) - 0.5).abs() < 1e-6);
+        assert!((c.lr_at(3) - 1.0).abs() < 1e-6);
+        assert!((c.lr_at(100) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bias_corrections_approach_one() {
+        let c = TrainingConfig::default();
+        let (b1, b2) = c.bias_corrections(1);
+        assert!((b1 - (1.0 - 0.9)).abs() < 1e-6);
+        assert!((b2 - (1.0 - 0.95)).abs() < 1e-6);
+        let (b1, _) = c.bias_corrections(1000);
+        assert!((b1 - 1.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,84 @@
+//! Embedded tiny text corpus for the byte-level convergence runs
+//! (stands in for BookCorpus in the paper's Fig.-7 experiment; any coherent
+//! English text with natural statistics serves the purpose — what matters
+//! is that two runs of the *same* system configuration see the same bytes).
+//!
+//! Original prose written for this repository; public domain.
+
+pub const TEXT: &str = r#"
+The river keeper woke before the light and walked the length of the weir,
+counting the boards the winter had loosened. Every spring it was the same
+arithmetic: so many boards, so many nails, so many days before the water
+rose. He wrote the numbers in a notebook whose covers had swollen with
+years of damp, and the notebook remembered what the town forgot, that the
+river was older than the mill and would outlast the mill, and that water
+keeps its own accounts.
+
+His daughter brought bread at noon and read the numbers over his shoulder.
+She had a quicker head for sums than he did and she liked to prove it,
+adding the columns aloud before he had finished writing them. Forty boards,
+she said. You counted forty yesterday and forty the day before. The river
+does not change its mind. He smiled at that and said nothing, because he
+had seen the river change its mind in a single night, had seen it take the
+bridge at Harlow and set it down two fields away, neat as a kept promise.
+
+In the evenings the keeper walked home along the towpath and named the
+birds to himself, heron, kingfisher, the small brown ones he called
+reed-birds because no one had ever told him better. The naming was a kind
+of maintenance too. A thing named is a thing watched, and a thing watched
+is half kept already. So he named the boards of the weir, the stones of
+the sill, the seven sounds the water made, and the town slept behind him
+in the confidence of work it did not know was being done.
+
+The miller's ledger told a different story in the same numbers. Grain in,
+flour out, the wheel turning its steady fraction of the river into bread
+and rent. The miller trusted the ledger the way the keeper trusted the
+notebook, which is to say entirely and with private reservations. Both men
+had learned that the columns balance only if you choose carefully what to
+leave out, and both had learned to leave out the same things: the cold,
+the hour before dawn, the ache in the wrists that was also a kind of
+record, kept in a script no one else could read.
+
+When the flood came it came politely, a guest arriving early, water at the
+door by morning and in the parlor by noon. The keeper's forty boards held
+for a day and a night, which was all they were ever asked to do. The town
+moved its flour and its ledgers uphill, and the river walked through the
+streets reading everything, and when it left it took only what had not
+been fastened down, which the keeper said afterward was the river's way of
+telling you what you had not finished naming.
+
+They rebuilt the weir in the summer, the daughter keeping the new notebook
+now, her figures smaller and straighter than her father's. Fifty boards
+this time, she wrote, and beside the number, in the margin where he had
+always kept his doubts, she wrote: count them again tomorrow. The river
+does not change its mind, but it keeps its own accounts, and the work of a
+keeper is to keep a parallel book, patient, daily, and never quite caught
+up.
+
+The schoolmaster asked her once what she learned at the weir that she
+could not learn from his arithmetic. She thought about it the way she
+thought about a column of sums, from the bottom up, and said: that the
+answer is allowed to be wet. He laughed and did not understand, and she
+did not explain, because some ledgers close themselves to those who have
+not stood on the boards at dawn and felt the whole patient weight of the
+water asking, board by board, whether anyone was paying attention.
+
+Years later, when the mill was a ruin the town showed to visitors and the
+weir was concrete poured by men from the city, the notebooks surfaced in
+an attic sale, water-stained, smelling of iron. The buyer, a collector of
+hands, not words, liked the two scripts facing each other across the
+seasons, the father's slow and rounded, the daughter's quick and upright,
+and between them, in the margins, the river's own entries: a blot, a
+warp, a page returned to pulp. Every account is settled somewhere, said
+the auctioneer, and sold the river's book for less than bread.
+"#;
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn corpus_is_reasonably_sized_ascii() {
+        let t = super::TEXT;
+        assert!(t.len() > 4000, "{}", t.len());
+        assert!(t.is_ascii());
+    }
+}

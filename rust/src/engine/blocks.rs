@@ -1,0 +1,238 @@
+//! Thin wrappers binding the AOT entry points to named parameters.
+//!
+//! Each function assembles borrowed [`Arg`]s (parameters go through the
+//! runtime's device-buffer cache — uploaded once per optimizer step, not
+//! once per execution), calls the PJRT executable, and returns outputs
+//! (+ named parameter gradients on the backward side, ready for
+//! `ParamStore::accum_grad`).
+
+use anyhow::Result;
+
+use crate::engine::params::ParamStore;
+use crate::runtime::executor::Arg;
+use crate::runtime::{Runtime, Value};
+use crate::util::tensor::{IntTensor, Tensor};
+
+fn p<'a>(st: &'a ParamStore, name: &'a str) -> Arg<'a> {
+    Arg::Param(name, st.param(name))
+}
+
+fn f32_out(outs: &[Value], i: usize) -> Result<Tensor> {
+    Ok(outs[i].as_f32()?.clone())
+}
+
+pub fn embed_fwd(rt: &mut Runtime, st: &ParamStore, ids: &IntTensor) -> Result<Tensor> {
+    let outs = rt.execute_args(
+        "embed_fwd",
+        &[p(st, "embed.emb"), p(st, "embed.pos"), Arg::I32(ids)],
+    )?;
+    f32_out(&outs, 0)
+}
+
+pub fn embed_bwd(
+    rt: &mut Runtime,
+    st: &ParamStore,
+    ids: &IntTensor,
+    dx: &Tensor,
+) -> Result<Vec<(String, Tensor)>> {
+    let outs = rt.execute_args(
+        "embed_bwd",
+        &[p(st, "embed.emb"), p(st, "embed.pos"), Arg::I32(ids), Arg::F32(dx)],
+    )?;
+    Ok(vec![
+        ("embed.emb".into(), f32_out(&outs, 0)?),
+        ("embed.pos".into(), f32_out(&outs, 1)?),
+    ])
+}
+
+/// The six attention parameter names for layer `i`, in entry-point order.
+fn attn_names(i: usize) -> [String; 6] {
+    let pr = format!("layer{i}.attn");
+    [
+        format!("{pr}.ln_g"),
+        format!("{pr}.ln_b"),
+        format!("{pr}.wqkv"),
+        format!("{pr}.bqkv"),
+        format!("{pr}.wo"),
+        format!("{pr}.bo"),
+    ]
+}
+
+fn ffn_names(prefix: &str) -> [String; 6] {
+    [
+        format!("{prefix}.ln_g"),
+        format!("{prefix}.ln_b"),
+        format!("{prefix}.w1"),
+        format!("{prefix}.b1"),
+        format!("{prefix}.w2"),
+        format!("{prefix}.b2"),
+    ]
+}
+
+/// Attention shard forward: PARTIAL output (TP all-reduce pending).
+pub fn attn_fwd(rt: &mut Runtime, st: &ParamStore, i: usize, x: &Tensor) -> Result<Tensor> {
+    let names = attn_names(i);
+    let mut args: Vec<Arg> = names.iter().map(|n| p(st, n)).collect();
+    args.push(Arg::F32(x));
+    let outs = rt.execute_args("attn_fwd", &args)?;
+    f32_out(&outs, 0)
+}
+
+/// Attention shard backward: (named param grads, PARTIAL dx).
+pub fn attn_bwd(
+    rt: &mut Runtime,
+    st: &ParamStore,
+    i: usize,
+    x: &Tensor,
+    dy: &Tensor,
+) -> Result<(Vec<(String, Tensor)>, Tensor)> {
+    let names = attn_names(i);
+    let mut args: Vec<Arg> = names.iter().map(|n| p(st, n)).collect();
+    args.push(Arg::F32(x));
+    args.push(Arg::F32(dy));
+    let outs = rt.execute_args("attn_bwd", &args)?;
+    let grads = names
+        .iter()
+        .enumerate()
+        .map(|(j, n)| Ok((n.clone(), f32_out(&outs, j)?)))
+        .collect::<Result<Vec<_>>>()?;
+    Ok((grads, f32_out(&outs, 6)?))
+}
+
+/// Dense FFN shard forward: PARTIAL output.
+pub fn ffn_fwd(rt: &mut Runtime, st: &ParamStore, i: usize, x: &Tensor) -> Result<Tensor> {
+    let names = ffn_names(&format!("layer{i}.ffn"));
+    let mut args: Vec<Arg> = names.iter().map(|n| p(st, n)).collect();
+    args.push(Arg::F32(x));
+    let outs = rt.execute_args("ffn_fwd", &args)?;
+    f32_out(&outs, 0)
+}
+
+pub fn ffn_bwd(
+    rt: &mut Runtime,
+    st: &ParamStore,
+    i: usize,
+    x: &Tensor,
+    dy: &Tensor,
+) -> Result<(Vec<(String, Tensor)>, Tensor)> {
+    let names = ffn_names(&format!("layer{i}.ffn"));
+    let mut args: Vec<Arg> = names.iter().map(|n| p(st, n)).collect();
+    args.push(Arg::F32(x));
+    args.push(Arg::F32(dy));
+    let outs = rt.execute_args("ffn_bwd", &args)?;
+    let grads = names
+        .iter()
+        .enumerate()
+        .map(|(j, n)| Ok((n.clone(), f32_out(&outs, j)?)))
+        .collect::<Result<Vec<_>>>()?;
+    Ok((grads, f32_out(&outs, 6)?))
+}
+
+/// MoE LN + fused router gate: (xn [N,D], probs [N,E]).
+pub fn router_fwd(rt: &mut Runtime, st: &ParamStore, i: usize, x: &Tensor) -> Result<(Tensor, Tensor)> {
+    let pr = format!("layer{i}.moe");
+    let (g, b, w) = (format!("{pr}.ln_g"), format!("{pr}.ln_b"), format!("{pr}.gate"));
+    let outs = rt.execute_args(
+        "moe_ln_router_fwd",
+        &[p(st, &g), p(st, &b), p(st, &w), Arg::F32(x)],
+    )?;
+    Ok((f32_out(&outs, 0)?, f32_out(&outs, 1)?))
+}
+
+/// Router backward: (named grads, dx full).
+pub fn router_bwd(
+    rt: &mut Runtime,
+    st: &ParamStore,
+    i: usize,
+    x: &Tensor,
+    dxn: &Tensor,
+    dprobs: &Tensor,
+) -> Result<(Vec<(String, Tensor)>, Tensor)> {
+    let pr = format!("layer{i}.moe");
+    let (g, b, w) = (format!("{pr}.ln_g"), format!("{pr}.ln_b"), format!("{pr}.gate"));
+    let outs = rt.execute_args(
+        "moe_ln_router_bwd",
+        &[p(st, &g), p(st, &b), p(st, &w), Arg::F32(x), Arg::F32(dxn), Arg::F32(dprobs)],
+    )?;
+    let grads = vec![
+        (g, f32_out(&outs, 0)?),
+        (b, f32_out(&outs, 1)?),
+        (w, f32_out(&outs, 2)?),
+    ];
+    Ok((grads, f32_out(&outs, 3)?))
+}
+
+fn expert_names(i: usize, e: usize) -> [String; 4] {
+    let pr = format!("layer{i}.expert{e}");
+    [
+        format!("{pr}.w1"),
+        format!("{pr}.b1"),
+        format!("{pr}.w2"),
+        format!("{pr}.b2"),
+    ]
+}
+
+/// One local expert's FFN shard forward over its capacity buffer: PARTIAL.
+pub fn expert_fwd(rt: &mut Runtime, st: &ParamStore, i: usize, e: usize, xe: &Tensor) -> Result<Tensor> {
+    let names = expert_names(i, e);
+    let mut args: Vec<Arg> = names.iter().map(|n| p(st, n)).collect();
+    args.push(Arg::F32(xe));
+    let outs = rt.execute_args("expert_ffn_fwd", &args)?;
+    f32_out(&outs, 0)
+}
+
+/// Expert backward: (named grads, PARTIAL dxe).
+pub fn expert_bwd(
+    rt: &mut Runtime,
+    st: &ParamStore,
+    i: usize,
+    e: usize,
+    xe: &Tensor,
+    dye: &Tensor,
+) -> Result<(Vec<(String, Tensor)>, Tensor)> {
+    let names = expert_names(i, e);
+    let mut args: Vec<Arg> = names.iter().map(|n| p(st, n)).collect();
+    args.push(Arg::F32(xe));
+    args.push(Arg::F32(dye));
+    let outs = rt.execute_args("expert_ffn_bwd", &args)?;
+    let grads = names
+        .iter()
+        .enumerate()
+        .map(|(j, n)| Ok((n.clone(), f32_out(&outs, j)?)))
+        .collect::<Result<Vec<_>>>()?;
+    Ok((grads, f32_out(&outs, 4)?))
+}
+
+/// Forward-only loss (validation).
+pub fn head_loss_fwd(
+    rt: &mut Runtime,
+    st: &ParamStore,
+    x: &Tensor,
+    targets: &IntTensor,
+) -> Result<f32> {
+    let outs = rt.execute_args(
+        "head_loss_fwd",
+        &[p(st, "head.lnf_g"), p(st, "head.lnf_b"), p(st, "head.wh"), Arg::F32(x), Arg::I32(targets)],
+    )?;
+    Ok(outs[0].as_f32()?.scalar_value())
+}
+
+/// Fused loss + head backward: (loss, named grads, dx at cotangent 1).
+pub fn head_loss_bwd(
+    rt: &mut Runtime,
+    st: &ParamStore,
+    x: &Tensor,
+    targets: &IntTensor,
+) -> Result<(f32, Vec<(String, Tensor)>, Tensor)> {
+    let outs = rt.execute_args(
+        "head_loss_bwd",
+        &[p(st, "head.lnf_g"), p(st, "head.lnf_b"), p(st, "head.wh"), Arg::F32(x), Arg::I32(targets)],
+    )?;
+    let loss = outs[0].as_f32()?.scalar_value();
+    let grads = vec![
+        ("head.lnf_g".to_string(), f32_out(&outs, 1)?),
+        ("head.lnf_b".to_string(), f32_out(&outs, 2)?),
+        ("head.wh".to_string(), f32_out(&outs, 3)?),
+    ];
+    Ok((loss, grads, f32_out(&outs, 4)?))
+}

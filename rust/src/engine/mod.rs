@@ -1,0 +1,17 @@
+//! The TED training engine (the paper's system contribution, L3).
+//!
+//! * [`params`] — layout-independent parameter init + Megatron sharding +
+//!   the two ZeRO flat groups (expert / non-expert).
+//! * [`blocks`] — bindings from named parameters to the AOT entry points.
+//! * [`stash`] — activation checkpointing stash; CAC is a stash policy.
+//! * [`trainer::Trainer`] — the per-rank engine: forward/backward over the
+//!   hybrid 3-D topology, gradient reduction, ZeRO-1 tiled AdamW step.
+
+pub mod blocks;
+pub mod params;
+pub mod stash;
+pub mod trainer;
+
+pub use params::{init_params, is_moe_layer, ParamStore};
+pub use stash::{LayerParts, LayerStash};
+pub use trainer::{StepStats, Trainer};

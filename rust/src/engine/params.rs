@@ -1,0 +1,304 @@
+//! Parameter initialization and TED sharding.
+//!
+//! **Layout-independent init**: every full weight matrix is generated from a
+//! PRNG stream named after the parameter (`Rng::named(seed, name)`), then
+//! the rank slices out its Megatron shard. A tp=1 run and a tp=4 run thus
+//! materialize the *same model*, which is what makes the Fig.-7 parity
+//! experiment meaningful.
+//!
+//! Slicing semantics (must mirror python/tests/test_model_blocks.py):
+//! * `wqkv` [D, 3D]: within each of the Q|K|V column sections take the
+//!   rank's `D/T` band; biases likewise.
+//! * `wo` [D, D]: row band `D/T`.
+//! * FFN `w1` [D, F]: column band `F/T`; `w2` [F, D]: row band; `b1`
+//!   sliced, `b2` kept full (the kernel scales it by 1/T).
+//! * LayerNorms, router gate, embeddings, LM head: replicated.
+//!
+//! Grouping (section 4): expert parameters (`layer*.expert*`) form the
+//! expert flat group (ZeRO-sharded over `G_dp^exp`); everything else is the
+//! non-expert group (sharded over `G_dp^nonexp`).
+
+use std::collections::BTreeMap;
+
+use crate::optimizer::FlatGroup;
+use crate::runtime::Dims;
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+/// Is layer `i` a MoE layer? Experts on alternate layers (odd indices),
+/// as in the paper's setup ("every alternate layer has expert feedforward").
+pub fn is_moe_layer(i: usize) -> bool {
+    i % 2 == 1
+}
+
+/// Per-rank parameter and gradient store plus the two ZeRO flat groups.
+pub struct ParamStore {
+    pub params: BTreeMap<String, Tensor>,
+    pub grads: BTreeMap<String, Tensor>,
+    pub nonexpert_group: FlatGroup,
+    pub expert_group: FlatGroup,
+}
+
+impl ParamStore {
+    pub fn zero_grads(&mut self) {
+        for g in self.grads.values_mut() {
+            g.fill(0.0);
+        }
+    }
+
+    pub fn param(&self, name: &str) -> &Tensor {
+        self.params
+            .get(name)
+            .unwrap_or_else(|| panic!("missing param '{name}'"))
+    }
+
+    /// Accumulate into a named gradient.
+    pub fn accum_grad(&mut self, name: &str, g: &Tensor) {
+        self.grads
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("missing grad '{name}'"))
+            .add_assign(g);
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.values().map(|t| t.numel()).sum()
+    }
+}
+
+/// Generate the full matrix for `name` and return the rank's shard.
+fn gen_full(seed: u64, name: &str, shape: &[usize], std: f32) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    let mut rng = Rng::named(seed, name);
+    rng.fill_normal(t.data_mut(), std);
+    t
+}
+
+fn qkv_shard(full: &Tensor, tp: usize, tp_pos: usize) -> Tensor {
+    // full: [D, 3D] = Q|K|V sections; take the tp band within each section
+    let d = full.shape()[0];
+    let dt = d / tp;
+    let q = full.slice_cols_2d(tp_pos * dt, dt);
+    let k = full.slice_cols_2d(d + tp_pos * dt, dt);
+    let v = full.slice_cols_2d(2 * d + tp_pos * dt, dt);
+    let mut out = Tensor::zeros(&[d, 3 * dt]);
+    for r in 0..d {
+        out.row_mut(r)[..dt].copy_from_slice(q.row(r));
+        out.row_mut(r)[dt..2 * dt].copy_from_slice(k.row(r));
+        out.row_mut(r)[2 * dt..].copy_from_slice(v.row(r));
+    }
+    out
+}
+
+fn qkv_bias_shard(full: &Tensor, tp: usize, tp_pos: usize) -> Tensor {
+    let d3 = full.numel();
+    let d = d3 / 3;
+    let dt = d / tp;
+    let f = full.data();
+    let mut out = Vec::with_capacity(3 * dt);
+    for s in 0..3 {
+        out.extend_from_slice(&f[s * d + tp_pos * dt..s * d + (tp_pos + 1) * dt]);
+    }
+    Tensor::from_vec(&[3 * dt], out)
+}
+
+/// Initialize all parameters this rank owns.
+///
+/// `local_expert_ids`: the global expert ids hosted on this rank's EP index.
+pub fn init_params(dims: &Dims, tp_pos: usize, local_expert_ids: &[usize], seed: u64) -> ParamStore {
+    let (d, f, v, s, l) = (dims.d_model, dims.d_ff, dims.vocab, dims.seq, dims.n_layers);
+    let tp = dims.tp;
+    let (dt, ft) = (d / tp, f / tp);
+    let std = 0.02f32;
+    // GPT-2 residual-projection scaling keeps activations O(1) across depth
+    let std_resid = std / ((2 * l) as f32).sqrt();
+
+    let mut params: BTreeMap<String, Tensor> = BTreeMap::new();
+    let put = |map: &mut BTreeMap<String, Tensor>, name: String, t: Tensor| {
+        map.insert(name, t);
+    };
+
+    put(&mut params, "embed.emb".into(), gen_full(seed, "embed.emb", &[v, d], std));
+    put(&mut params, "embed.pos".into(), gen_full(seed, "embed.pos", &[s, d], std));
+
+    for i in 0..l {
+        let p = format!("layer{i}.attn");
+        put(&mut params, format!("{p}.ln_g"), {
+            let mut t = Tensor::zeros(&[d]);
+            t.fill(1.0);
+            t
+        });
+        put(&mut params, format!("{p}.ln_b"), Tensor::zeros(&[d]));
+        let wqkv_full = gen_full(seed, &format!("{p}.wqkv"), &[d, 3 * d], std);
+        put(&mut params, format!("{p}.wqkv"), qkv_shard(&wqkv_full, tp, tp_pos));
+        put(&mut params, format!("{p}.bqkv"), qkv_bias_shard(&Tensor::zeros(&[3 * d]), tp, tp_pos));
+        let wo_full = gen_full(seed, &format!("{p}.wo"), &[d, d], std_resid);
+        put(&mut params, format!("{p}.wo"), wo_full.slice_rows(tp_pos * dt, dt));
+        put(&mut params, format!("{p}.bo"), Tensor::zeros(&[d]));
+
+        if is_moe_layer(i) {
+            let p = format!("layer{i}.moe");
+            put(&mut params, format!("{p}.ln_g"), {
+                let mut t = Tensor::zeros(&[d]);
+                t.fill(1.0);
+                t
+            });
+            put(&mut params, format!("{p}.ln_b"), Tensor::zeros(&[d]));
+            put(
+                &mut params,
+                format!("{p}.gate"),
+                gen_full(seed, &format!("{p}.gate"), &[d, dims.n_experts], std),
+            );
+            for &e in local_expert_ids {
+                let p = format!("layer{i}.expert{e}");
+                let w1_full = gen_full(seed, &format!("{p}.w1"), &[d, f], std);
+                put(&mut params, format!("{p}.w1"), w1_full.slice_cols_2d(tp_pos * ft, ft));
+                put(&mut params, format!("{p}.b1"), Tensor::zeros(&[ft]));
+                let w2_full = gen_full(seed, &format!("{p}.w2"), &[f, d], std_resid);
+                put(&mut params, format!("{p}.w2"), w2_full.slice_rows(tp_pos * ft, ft));
+                put(&mut params, format!("{p}.b2"), Tensor::zeros(&[d]));
+            }
+        } else {
+            let p = format!("layer{i}.ffn");
+            put(&mut params, format!("{p}.ln_g"), {
+                let mut t = Tensor::zeros(&[d]);
+                t.fill(1.0);
+                t
+            });
+            put(&mut params, format!("{p}.ln_b"), Tensor::zeros(&[d]));
+            let w1_full = gen_full(seed, &format!("{p}.w1"), &[d, f], std);
+            put(&mut params, format!("{p}.w1"), w1_full.slice_cols_2d(tp_pos * ft, ft));
+            put(&mut params, format!("{p}.b1"), Tensor::zeros(&[ft]));
+            let w2_full = gen_full(seed, &format!("{p}.w2"), &[f, d], std_resid);
+            put(&mut params, format!("{p}.w2"), w2_full.slice_rows(tp_pos * ft, ft));
+            put(&mut params, format!("{p}.b2"), Tensor::zeros(&[d]));
+        }
+    }
+
+    put(&mut params, "head.lnf_g".into(), {
+        let mut t = Tensor::zeros(&[d]);
+        t.fill(1.0);
+        t
+    });
+    put(&mut params, "head.lnf_b".into(), Tensor::zeros(&[d]));
+    put(&mut params, "head.wh".into(), gen_full(seed, "head.wh", &[d, v], std));
+
+    let grads: BTreeMap<String, Tensor> =
+        params.iter().map(|(k, t)| (k.clone(), Tensor::zeros(t.shape()))).collect();
+
+    // flat groups: BTreeMap iteration order (sorted names) is identical on
+    // every rank of a DP group, so shard ranges line up.
+    let mut nonexp = Vec::new();
+    let mut exp = Vec::new();
+    for (name, t) in &params {
+        let item = (name.clone(), t.shape().to_vec());
+        if name.contains(".expert") {
+            exp.push(item);
+        } else {
+            nonexp.push(item);
+        }
+    }
+
+    ParamStore {
+        nonexpert_group: FlatGroup::new(&nonexp),
+        expert_group: FlatGroup::new(&exp),
+        params,
+        grads,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims(tp: usize) -> Dims {
+        Dims {
+            d_model: 16,
+            n_heads: 4,
+            d_ff: 32,
+            vocab: 32,
+            seq: 8,
+            n_layers: 2,
+            n_experts: 2,
+            tp,
+            batch: 2,
+            capacity: 8,
+            export_ep: 2,
+        }
+    }
+
+    #[test]
+    fn shards_reassemble_full_matrices() {
+        let d = dims(1);
+        let full = init_params(&d, 0, &[0, 1], 7);
+        let d2 = dims(2);
+        let s0 = init_params(&d2, 0, &[0, 1], 7);
+        let s1 = init_params(&d2, 1, &[0, 1], 7);
+
+        // wo: row-concat of shards == full
+        let w_full = full.param("layer0.attn.wo");
+        let cat = Tensor::concat_rows(&[s0.param("layer0.attn.wo"), s1.param("layer0.attn.wo")]);
+        assert_eq!(w_full, &cat);
+
+        // w1: column slices
+        let w1_full = full.param("layer0.ffn.w1");
+        let a = s0.param("layer0.ffn.w1");
+        let b = s1.param("layer0.ffn.w1");
+        assert_eq!(&w1_full.slice_cols_2d(0, 16), a);
+        assert_eq!(&w1_full.slice_cols_2d(16, 16), b);
+
+        // qkv: per-section bands
+        let qkv_full = full.param("layer0.attn.wqkv"); // [16, 48]
+        let q_band0 = qkv_full.slice_cols_2d(0, 8);
+        let got_q0 = s0.param("layer0.attn.wqkv").slice_cols_2d(0, 8);
+        assert_eq!(q_band0, got_q0);
+        let k_band1 = qkv_full.slice_cols_2d(16 + 8, 8);
+        let got_k1 = s1.param("layer0.attn.wqkv").slice_cols_2d(8, 8);
+        assert_eq!(k_band1, got_k1);
+
+        // replicated params identical across shards
+        assert_eq!(s0.param("embed.emb"), s1.param("embed.emb"));
+        assert_eq!(s0.param("layer1.moe.gate"), s1.param("layer1.moe.gate"));
+    }
+
+    #[test]
+    fn expert_grouping() {
+        let d = dims(1);
+        let store = init_params(&d, 0, &[0], 7);
+        for name in store.expert_group.names() {
+            assert!(name.contains(".expert"), "{name}");
+        }
+        for name in store.nonexpert_group.names() {
+            assert!(!name.contains(".expert"), "{name}");
+        }
+        // only local expert 0 present
+        assert!(store.params.contains_key("layer1.expert0.w1"));
+        assert!(!store.params.contains_key("layer1.expert1.w1"));
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let d = dims(2);
+        let a = init_params(&d, 1, &[1], 42);
+        let b = init_params(&d, 1, &[1], 42);
+        assert_eq!(a.param("layer0.attn.wqkv"), b.param("layer0.attn.wqkv"));
+        let c = init_params(&d, 1, &[1], 43);
+        assert_ne!(a.param("layer0.attn.wqkv"), c.param("layer0.attn.wqkv"));
+    }
+
+    #[test]
+    fn moe_layers_alternate() {
+        assert!(!is_moe_layer(0));
+        assert!(is_moe_layer(1));
+        assert!(!is_moe_layer(2));
+        assert!(is_moe_layer(3));
+    }
+
+    #[test]
+    fn grads_match_param_shapes() {
+        let d = dims(2);
+        let store = init_params(&d, 0, &[0], 7);
+        for (name, p) in &store.params {
+            assert_eq!(p.shape(), store.grads[name].shape(), "{name}");
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Activation stash: what the engine keeps between forward and backward.
+//!
+//! The AOT backward blocks recompute *within-block* intermediates from their
+//! inputs (activation checkpointing is baked into the interchange format —
+//! see model.py), so the engine only ever stashes **block boundary** values.
+//! Those boundaries are exactly the collective outputs, which makes the
+//! paper's CAC (section 5.2) a stash policy:
+//!
+//! * **CAC on** — keep the post-collective values (`y1`, routing decision,
+//!   dispatched capacity buffers, combined expert rows). Backward re-issues
+//!   no forward collectives.
+//! * **CAC off** (paper baseline) — [`LayerStash::strip`] drops everything
+//!   but the layer input; backward re-runs the layer forward *including*
+//!   its all-reduce / all-to-all / all-gather calls, reproducing the 1.5x
+//!   communication volume of naive checkpointing.
+
+use crate::moe::{DispatchResult, RoutingDecision};
+use crate::util::tensor::Tensor;
+
+/// Post-collective intermediates of one MoE layer pass.
+#[derive(Debug, Clone)]
+pub struct MoeParts {
+    /// attention residual output (input to the router block)
+    pub y1: Tensor,
+    pub dec: RoutingDecision,
+    /// dispatched capacity buffers (expert inputs) + return-path origins
+    pub disp: DispatchResult,
+    /// combined (post all-reduce, post return-A2A) expert output row per
+    /// local token; None = dropped token
+    pub rows: Vec<Option<Vec<f32>>>,
+}
+
+/// Post-collective intermediates of one dense layer pass.
+#[derive(Debug, Clone)]
+pub struct DenseParts {
+    pub y1: Tensor,
+}
+
+#[derive(Debug, Clone)]
+pub enum LayerParts {
+    Dense(DenseParts),
+    Moe(MoeParts),
+}
+
+/// Checkpoint for one layer of one microbatch.
+#[derive(Debug, Clone)]
+pub struct LayerStash {
+    /// layer input — the classic activation checkpoint
+    pub x_in: Tensor,
+    /// post-collective values (CAC); None after `strip`
+    pub parts: Option<LayerParts>,
+}
+
+impl LayerStash {
+    /// Drop everything but the checkpoint input (CAC off).
+    pub fn strip(&mut self) {
+        self.parts = None;
+    }
+
+    /// Approximate stash footprint in bytes (memory instrumentation).
+    pub fn bytes(&self) -> usize {
+        let mut b = 4 * self.x_in.numel();
+        match &self.parts {
+            None => {}
+            Some(LayerParts::Dense(d)) => b += 4 * d.y1.numel(),
+            Some(LayerParts::Moe(m)) => {
+                b += 4 * m.y1.numel();
+                for buf in &m.disp.buffers {
+                    b += 4 * buf.numel();
+                }
+                for r in m.rows.iter().flatten() {
+                    b += 4 * r.len();
+                }
+            }
+        }
+        b
+    }
+}
+
+/// y2 = y1 + p_t * row_t for routed tokens (identity for dropped) — the
+/// combine step; `y1` is [B, S, D] laid out as [N, D] token rows.
+pub fn combine(y1: &Tensor, dec: &RoutingDecision, rows: &[Option<Vec<f32>>]) -> Tensor {
+    let d = *y1.shape().last().unwrap();
+    let n = y1.numel() / d;
+    assert_eq!(rows.len(), n, "combine row count");
+    let mut y2 = y1.clone();
+    let data = y2.data_mut();
+    for (t, row) in rows.iter().enumerate() {
+        if let Some(r) = row {
+            let p = dec.prob_of_token[t];
+            let base = t * d;
+            for j in 0..d {
+                data[base + j] += p * r[j];
+            }
+        }
+    }
+    y2
+}
+
+/// Backward of [`combine`]: given dy2 [N*D], produce
+/// (per-token gradient rows w.r.t. expert outputs [N, D], and the combine
+/// part of dprobs [N, E]). The residual path gradient is dy2 itself.
+pub fn combine_bwd(
+    dy2: &Tensor,
+    dec: &RoutingDecision,
+    rows: &[Option<Vec<f32>>],
+    n_experts: usize,
+) -> (Tensor, Tensor) {
+    let d = *dy2.shape().last().unwrap();
+    let n = dy2.numel() / d;
+    let mut drows = Tensor::zeros(&[n, d]);
+    let mut dprobs = Tensor::zeros(&[n, n_experts]);
+    let dy = dy2.data();
+    for (t, row) in rows.iter().enumerate() {
+        let Some(r) = row else { continue };
+        let p = dec.prob_of_token[t];
+        let e = dec.expert_of_token[t];
+        let base = t * d;
+        let out = drows.row_mut(t);
+        let mut dot = 0.0f32;
+        for j in 0..d {
+            out[j] = p * dy[base + j];
+            dot += dy[base + j] * r[j];
+        }
+        dprobs.row_mut(t)[e] = dot;
+    }
+    (drows, dprobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dec2() -> RoutingDecision {
+        RoutingDecision {
+            expert_of_token: vec![1, 0],
+            prob_of_token: vec![0.5, 0.25],
+            slot_of_token: vec![Some(0), None],
+            f_frac: vec![0.5, 0.5],
+            p_mean: vec![0.5, 0.5],
+            group_tokens: 2,
+            aux_loss: 1.0,
+        }
+    }
+
+    #[test]
+    fn combine_adds_scaled_rows() {
+        let y1 = Tensor::from_vec(&[1, 2, 3], vec![1., 1., 1., 2., 2., 2.]);
+        let rows = vec![Some(vec![10., 20., 30.]), None];
+        let y2 = combine(&y1, &dec2(), &rows);
+        assert_eq!(y2.data(), &[6., 11., 16., 2., 2., 2.]);
+    }
+
+    #[test]
+    fn combine_bwd_matches_forward_linearization() {
+        let dec = dec2();
+        let rows = vec![Some(vec![3.0, -1.0]), None];
+        let dy2 = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 5.0, 6.0]);
+        let (drows, dprobs) = combine_bwd(&dy2, &dec, &rows, 2);
+        // token 0: drow = p*dy = [0.5, 1.0]; dp[0,1] = dy . row = 3 - 2 = 1
+        assert_eq!(drows.row(0), &[0.5, 1.0]);
+        assert_eq!(drows.row(1), &[0.0, 0.0]);
+        assert_eq!(dprobs.row(0), &[0.0, 1.0]);
+        assert_eq!(dprobs.row(1), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn strip_drops_parts() {
+        let mut st = LayerStash {
+            x_in: Tensor::zeros(&[2, 2]),
+            parts: Some(LayerParts::Dense(DenseParts { y1: Tensor::zeros(&[2, 2]) })),
+        };
+        let full = st.bytes();
+        st.strip();
+        assert!(st.parts.is_none());
+        assert!(st.bytes() < full);
+    }
+}

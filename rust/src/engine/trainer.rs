@@ -1,0 +1,597 @@
+//! The TED training engine: one [`Trainer`] per simulated rank.
+//!
+//! Drives the full hybrid-parallel training step of section 3 (Fig. 3):
+//! per layer, the Megatron f/g all-reduces around the attention and FFN
+//! shards, the router + expert all-to-all with optional DTD, activation
+//! checkpointing with optional CAC, gradient reduction over the *two*
+//! data-parallel groups (non-expert over `G_dp^nonexp`, expert over
+//! `G_dp^exp`), and the ZeRO-1 tiled AdamW step followed by the parameter
+//! all-gather.
+
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+use crate::collectives::{Communicator, Rendezvous};
+use crate::config::{EngineOptions, TrainingConfig};
+use crate::engine::blocks;
+use crate::engine::params::{init_params, is_moe_layer, ParamStore};
+use crate::engine::stash::{combine, combine_bwd, DenseParts, LayerParts, LayerStash, MoeParts};
+use crate::moe::{dispatch, return_to_origin, route_top1, MoeComm};
+use crate::optimizer::{AdamwStep, TilingOpts, Zero1Optimizer};
+use crate::runtime::{Manifest, Runtime};
+use crate::topology::{RankGroups, Topology};
+use crate::util::tensor::{IntTensor, Tensor};
+
+/// Result of one optimizer step across all microbatches.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    /// mean cross-entropy over the global batch
+    pub loss: f32,
+    /// mean auxiliary (load-balancing) loss
+    pub aux_loss: f32,
+    /// pre-clip global gradient norm (unscaled)
+    pub grad_norm: f32,
+    pub lr: f32,
+    /// true if the step was skipped on non-finite gradients
+    pub skipped: bool,
+}
+
+/// Should this parameter's local gradient be scaled by `tp`? (`bo`/`b2`
+/// are applied as `b/T` inside each shard, so each rank's local gradient is
+/// `1/T` of the true one — identical on every TP rank, hence a local fix.)
+fn tp_bias_scaled(name: &str) -> bool {
+    name.ends_with(".bo") || name.ends_with(".b2")
+}
+
+/// Is this parameter genuinely sharded across the TP group (vs replicated)?
+/// Used to de-duplicate the global gradient-norm computation.
+fn tp_sharded(name: &str) -> bool {
+    name.ends_with(".wqkv")
+        || name.ends_with(".bqkv")
+        || name.ends_with(".wo")
+        || name.ends_with(".w1")
+        || name.ends_with(".b1")
+        || name.ends_with(".w2")
+}
+
+pub struct Trainer {
+    pub rank: usize,
+    pub groups: RankGroups,
+    pub comm: Communicator,
+    pub rt: Runtime,
+    pub manifest: Manifest,
+    pub store: ParamStore,
+    pub opts: EngineOptions,
+    pub tcfg: TrainingConfig,
+    opt_nonexp: Zero1Optimizer,
+    opt_exp: Zero1Optimizer,
+    local_expert_ids: Vec<usize>,
+    ep_pos: usize,
+    tp_pos: usize,
+    step_count: usize,
+    /// peak activation-stash bytes across microbatches (CAC memory cost)
+    pub peak_stash_bytes: usize,
+}
+
+impl Trainer {
+    /// Build the trainer for `rank`. Compiles all AOT entries (one PJRT
+    /// client per rank thread — the xla crate's client is not Send).
+    pub fn new(
+        rez: Arc<Rendezvous>,
+        topo: &Topology,
+        rank: usize,
+        manifest: Manifest,
+        opts: EngineOptions,
+        tcfg: TrainingConfig,
+    ) -> Result<Self> {
+        let cfg = topo.cfg;
+        if manifest.dims.tp != cfg.tp {
+            bail!("manifest tp={} but topology tp={}", manifest.dims.tp, cfg.tp);
+        }
+        if manifest.dims.export_ep != cfg.ep {
+            bail!(
+                "manifest was exported for ep={} (capacity sizing) but topology has ep={}",
+                manifest.dims.export_ep, cfg.ep
+            );
+        }
+        if manifest.dims.n_experts % cfg.ep != 0 {
+            bail!("{} experts not divisible by ep={}", manifest.dims.n_experts, cfg.ep);
+        }
+        let groups = topo.groups(rank);
+        let comm = Communicator::new(rez, rank);
+        let mut rt = Runtime::new()?;
+        rt.load_all(&manifest, "")?;
+
+        let local_expert_ids = topo.local_expert_ids(rank, manifest.dims.n_experts);
+        let tp_pos = groups.coords.tp_idx;
+        let ep_pos = groups.ep_group.iter().position(|&m| m == rank).unwrap();
+        let store = init_params(&manifest.dims, tp_pos, &local_expert_ids, tcfg.seed);
+
+        let tiling = TilingOpts { tiled: opts.optimizer_tiling, tile_size: opts.tile_size };
+        let dp_ne_pos = groups.dp_nonexp_group.iter().position(|&m| m == rank).unwrap();
+        let flat_ne = store.nonexpert_group.flatten(&store.params);
+        let opt_nonexp = Zero1Optimizer::new(
+            store.nonexpert_group.clone(),
+            &flat_ne,
+            dp_ne_pos,
+            groups.dp_nonexp_group.len(),
+            tiling,
+        );
+        let dp_e_pos = groups.dp_exp_group.iter().position(|&m| m == rank).unwrap();
+        let flat_e = store.expert_group.flatten(&store.params);
+        let opt_exp = Zero1Optimizer::new(
+            store.expert_group.clone(),
+            &flat_e,
+            dp_e_pos,
+            groups.dp_exp_group.len(),
+            tiling,
+        );
+
+        Ok(Trainer {
+            rank,
+            groups,
+            comm,
+            rt,
+            manifest,
+            store,
+            opts,
+            tcfg,
+            opt_nonexp,
+            opt_exp,
+            local_expert_ids,
+            ep_pos,
+            tp_pos,
+            step_count: 0,
+            peak_stash_bytes: 0,
+        })
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step_count
+    }
+
+    pub fn local_experts(&self) -> usize {
+        self.local_expert_ids.len()
+    }
+
+    fn tp_allreduce(&mut self, t: &mut Tensor) {
+        self.comm
+            .all_reduce(self.groups.tp_group_id, &self.groups.tp_group, t);
+    }
+
+    // ---------------------------------------------------------------
+    // forward
+    // ---------------------------------------------------------------
+
+    /// One layer forward; returns the output and the full stash
+    /// (caller strips it when CAC is off).
+    fn layer_forward(&mut self, i: usize, x: &Tensor) -> Result<(Tensor, LayerStash)> {
+        // attention shard + TP all-reduce + residual
+        let mut ar = blocks::attn_fwd(&mut self.rt, &self.store, i, x)?;
+        self.tp_allreduce(&mut ar);
+        let mut y1 = x.clone();
+        y1.add_assign(&ar);
+
+        if !is_moe_layer(i) {
+            let mut ar2 = blocks::ffn_fwd(&mut self.rt, &self.store, i, &y1)?;
+            self.tp_allreduce(&mut ar2);
+            let mut y2 = y1.clone();
+            y2.add_assign(&ar2);
+            let stash = LayerStash {
+                x_in: x.clone(),
+                parts: Some(LayerParts::Dense(DenseParts { y1 })),
+            };
+            return Ok((y2, stash));
+        }
+
+        // MoE layer: LN + gate, route, dispatch (DTD), experts, return, combine
+        let (xn, probs) = blocks::router_fwd(&mut self.rt, &self.store, i, &y1)?;
+        let cap = self.manifest.dims.capacity;
+        let n_experts = self.manifest.dims.n_experts;
+        let dec = route_top1(
+            &mut self.comm,
+            self.groups.ep_group_id,
+            &self.groups.ep_group,
+            self.ep_pos,
+            &probs,
+            n_experts,
+            cap,
+        );
+        let local = self.local_expert_ids.len();
+        let disp = {
+            let mut ctx = MoeComm {
+                comm: &mut self.comm,
+                ep_gid: self.groups.ep_group_id,
+                ep_members: &self.groups.ep_group,
+                ep_pos: self.ep_pos,
+                tp_gid: self.groups.tp_group_id,
+                tp_members: &self.groups.tp_group,
+                tp_pos: self.tp_pos,
+                dtd: self.opts.dtd,
+            };
+            dispatch(&mut ctx, &xn, &dec, local, cap)
+        };
+        let mut expert_out = Vec::with_capacity(local);
+        for (le, &e) in self.local_expert_ids.clone().iter().enumerate() {
+            let mut part = blocks::expert_fwd(&mut self.rt, &self.store, i, e, &disp.buffers[le])?;
+            self.tp_allreduce(&mut part);
+            expert_out.push(part);
+        }
+        let rows = {
+            let mut ctx = MoeComm {
+                comm: &mut self.comm,
+                ep_gid: self.groups.ep_group_id,
+                ep_members: &self.groups.ep_group,
+                ep_pos: self.ep_pos,
+                tp_gid: self.groups.tp_group_id,
+                tp_members: &self.groups.tp_group,
+                tp_pos: self.tp_pos,
+                dtd: self.opts.dtd,
+            };
+            return_to_origin(&mut ctx, &expert_out, &disp, &dec, local, cap)
+        };
+        let y2 = combine(&y1, &dec, &rows);
+        let stash = LayerStash {
+            x_in: x.clone(),
+            parts: Some(LayerParts::Moe(MoeParts { y1, dec, disp, rows })),
+        };
+        Ok((y2, stash))
+    }
+
+    // ---------------------------------------------------------------
+    // backward
+    // ---------------------------------------------------------------
+
+    /// One layer backward from checkpoint; returns dx.
+    fn layer_backward(&mut self, i: usize, stash: &LayerStash, dy2: &Tensor) -> Result<Tensor> {
+        // CAC off: rematerialize the post-collective values by re-running
+        // the layer forward — *including* its collectives (the paper's
+        // naive-checkpointing communication overhead).
+        let parts = match &stash.parts {
+            Some(p) => p.clone(),
+            None => {
+                let (_, full) = self.layer_forward(i, &stash.x_in)?;
+                full.parts.unwrap()
+            }
+        };
+
+        let dy1 = match parts {
+            LayerParts::Dense(DenseParts { y1 }) => {
+                let (grads, mut dxp) = blocks::ffn_bwd(&mut self.rt, &self.store, i, &y1, dy2)?;
+                for (n, g) in grads {
+                    self.store.accum_grad(&n, &g);
+                }
+                self.tp_allreduce(&mut dxp);
+                let mut dy1 = dy2.clone();
+                dy1.add_assign(&dxp);
+                dy1
+            }
+            LayerParts::Moe(MoeParts { y1, dec, disp, rows }) => {
+                let n_experts = self.manifest.dims.n_experts;
+                let cap = self.manifest.dims.capacity;
+                let local = self.local_expert_ids.len();
+                // combine backward
+                let (drows, mut dprobs) = combine_bwd(dy2, &dec, &rows, n_experts);
+                dec.aux_grad_into(self.opts.aux_loss_coef * self.tcfg.loss_scale, &mut dprobs);
+                // gradient rows travel the same drop -> A2A -> all-gather path
+                let disp_b = {
+                    let mut ctx = MoeComm {
+                        comm: &mut self.comm,
+                        ep_gid: self.groups.ep_group_id,
+                        ep_members: &self.groups.ep_group,
+                        ep_pos: self.ep_pos,
+                        tp_gid: self.groups.tp_group_id,
+                        tp_members: &self.groups.tp_group,
+                        tp_pos: self.tp_pos,
+                        dtd: self.opts.dtd,
+                    };
+                    dispatch(&mut ctx, &drows, &dec, local, cap)
+                };
+                let mut dxe_full = Vec::with_capacity(local);
+                for (le, &e) in self.local_expert_ids.clone().iter().enumerate() {
+                    let (grads, mut dxe) = blocks::expert_bwd(
+                        &mut self.rt,
+                        &self.store,
+                        i,
+                        e,
+                        &disp.buffers[le],
+                        &disp_b.buffers[le],
+                    )?;
+                    for (n, g) in grads {
+                        self.store.accum_grad(&n, &g);
+                    }
+                    self.tp_allreduce(&mut dxe);
+                    dxe_full.push(dxe);
+                }
+                let ret = {
+                    let mut ctx = MoeComm {
+                        comm: &mut self.comm,
+                        ep_gid: self.groups.ep_group_id,
+                        ep_members: &self.groups.ep_group,
+                        ep_pos: self.ep_pos,
+                        tp_gid: self.groups.tp_group_id,
+                        tp_members: &self.groups.tp_group,
+                        tp_pos: self.tp_pos,
+                        dtd: self.opts.dtd,
+                    };
+                    return_to_origin(&mut ctx, &dxe_full, &disp_b, &dec, local, cap)
+                };
+                // assemble dxn [N, D] (zero rows for dropped tokens)
+                let d = self.manifest.dims.d_model;
+                let n = self.manifest.dims.tokens();
+                let mut dxn = Tensor::zeros(&[n, d]);
+                for (t, row) in ret.iter().enumerate() {
+                    if let Some(r) = row {
+                        dxn.copy_row_from(t, r);
+                    }
+                }
+                let (grads, dx_router) =
+                    blocks::router_bwd(&mut self.rt, &self.store, i, &y1, &dxn, &dprobs)?;
+                for (nm, g) in grads {
+                    self.store.accum_grad(&nm, &g);
+                }
+                let mut dy1 = dy2.clone();
+                dy1.add_assign(&dx_router);
+                dy1
+            }
+        };
+
+        // attention backward + residual
+        let (grads, mut dxp) = blocks::attn_bwd(&mut self.rt, &self.store, i, &stash.x_in, &dy1)?;
+        for (n, g) in grads {
+            self.store.accum_grad(&n, &g);
+        }
+        self.tp_allreduce(&mut dxp);
+        let mut dx = dy1;
+        dx.add_assign(&dxp);
+        Ok(dx)
+    }
+
+    // ---------------------------------------------------------------
+    // microbatch fwd+bwd
+    // ---------------------------------------------------------------
+
+    /// Forward + backward for one microbatch; accumulates into grads.
+    /// Returns (cross-entropy, aux loss summed over MoE layers).
+    pub fn microbatch(&mut self, ids: &IntTensor, targets: &IntTensor) -> Result<(f32, f32)> {
+        let ls = self.tcfg.loss_scale;
+        let n_layers = self.manifest.dims.n_layers;
+
+        let mut x = blocks::embed_fwd(&mut self.rt, &self.store, ids)?;
+        let mut stashes = Vec::with_capacity(n_layers);
+        let mut aux_total = 0.0f32;
+        for i in 0..n_layers {
+            let (x2, mut st) = self.layer_forward(i, &x)?;
+            if let Some(LayerParts::Moe(m)) = &st.parts {
+                aux_total += m.dec.aux_loss;
+            }
+            if !self.opts.cac {
+                st.strip();
+            }
+            x = x2;
+            stashes.push(st);
+        }
+        let stash_bytes: usize = stashes.iter().map(|s| s.bytes()).sum();
+        self.peak_stash_bytes = self.peak_stash_bytes.max(stash_bytes);
+
+        let (loss, hgrads, mut dx) = blocks::head_loss_bwd(&mut self.rt, &self.store, &x, targets)?;
+        for (n, mut g) in hgrads {
+            g.scale(ls);
+            self.store.accum_grad(&n, &g);
+        }
+        dx.scale(ls);
+
+        for i in (0..n_layers).rev() {
+            dx = self.layer_backward(i, &stashes[i], &dx)?;
+        }
+        let egrads = blocks::embed_bwd(&mut self.rt, &self.store, ids, &dx)?;
+        for (n, mut g) in egrads {
+            g.scale(ls);
+            self.store.accum_grad(&n, &g);
+        }
+        Ok((loss, aux_total))
+    }
+
+    /// Forward-only loss (validation; no grads, no stash kept).
+    pub fn eval_loss(&mut self, ids: &IntTensor, targets: &IntTensor) -> Result<f32> {
+        let n_layers = self.manifest.dims.n_layers;
+        let mut x = blocks::embed_fwd(&mut self.rt, &self.store, ids)?;
+        for i in 0..n_layers {
+            let (x2, _st) = self.layer_forward(i, &x)?;
+            x = x2;
+        }
+        blocks::head_loss_fwd(&mut self.rt, &self.store, &x, targets)
+    }
+
+    // ---------------------------------------------------------------
+    // full step
+    // ---------------------------------------------------------------
+
+    /// One optimizer step over `micro` microbatches ([B, S] id/target pairs
+    /// local to this rank; TP peers must pass identical data).
+    pub fn train_step(&mut self, micro: &[(IntTensor, IntTensor)]) -> Result<StepStats> {
+        assert!(!micro.is_empty());
+        self.store.zero_grads();
+        let mut loss_sum = 0.0f32;
+        let mut aux_sum = 0.0f32;
+        for (ids, targets) in micro {
+            let (l, a) = self.microbatch(ids, targets)?;
+            loss_sum += l;
+            aux_sum += a;
+        }
+        let n_micro = micro.len() as f32;
+
+        // fix the 1/T bias-gradient convention before flattening
+        let tp = self.groups.tp_group.len() as f32;
+        if tp > 1.0 {
+            for (name, g) in self.store.grads.iter_mut() {
+                if tp_bias_scaled(name) {
+                    g.scale(tp);
+                }
+            }
+        }
+
+        // flatten, average over microbatches, all-reduce-average over DP
+        let mut flat_ne = self.store.nonexpert_group.flatten(&self.store.grads);
+        let mut flat_e = self.store.expert_group.flatten(&self.store.grads);
+        let dp_ne = self.groups.dp_nonexp_group.len() as f32;
+        let dp_e = self.groups.dp_exp_group.len() as f32;
+        {
+            let mut t = Tensor::from_vec(&[flat_ne.len()], std::mem::take(&mut flat_ne));
+            self.comm
+                .all_reduce(self.groups.dp_nonexp_group_id, &self.groups.dp_nonexp_group, &mut t);
+            t.scale(1.0 / (n_micro * dp_ne));
+            flat_ne = t.into_vec();
+        }
+        if !flat_e.is_empty() {
+            let mut t = Tensor::from_vec(&[flat_e.len()], std::mem::take(&mut flat_e));
+            self.comm
+                .all_reduce(self.groups.dp_exp_group_id, &self.groups.dp_exp_group, &mut t);
+            t.scale(1.0 / (n_micro * dp_e));
+            flat_e = t.into_vec();
+        }
+
+        // global gradient norm with TP/EP de-duplication
+        let grad_norm = self.global_grad_norm(&flat_ne, &flat_e) / self.tcfg.loss_scale;
+        let skipped = !grad_norm.is_finite();
+        if !skipped {
+            if self.tcfg.grad_clip > 0.0 && grad_norm > self.tcfg.grad_clip {
+                let coef = self.tcfg.grad_clip / (grad_norm + 1e-6);
+                for g in flat_ne.iter_mut() {
+                    *g *= coef;
+                }
+                for g in flat_e.iter_mut() {
+                    *g *= coef;
+                }
+            }
+            self.apply_optimizer(&flat_ne, &flat_e)?;
+            self.step_count += 1;
+        }
+
+        // average loss across the non-expert DP group (TP peers identical)
+        let mut lt = Tensor::from_vec(&[2], vec![loss_sum / n_micro, aux_sum / n_micro]);
+        self.comm
+            .all_reduce(self.groups.dp_nonexp_group_id, &self.groups.dp_nonexp_group, &mut lt);
+        lt.scale(1.0 / dp_ne);
+
+        Ok(StepStats {
+            loss: lt.data()[0],
+            aux_loss: lt.data()[1],
+            grad_norm,
+            lr: self.tcfg.lr_at(self.step_count.saturating_sub(1)),
+            skipped,
+        })
+    }
+
+    /// Global gradient norm: TP-sharded spans summed over the TP group,
+    /// replicated spans counted once, expert spans additionally summed over
+    /// the EP group. Identical on every rank.
+    fn global_grad_norm(&mut self, flat_ne: &[f32], flat_e: &[f32]) -> f32 {
+        let sq = |s: &[f32]| s.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>();
+        let mut ne_sharded = 0.0f64;
+        let mut ne_repl = 0.0f64;
+        for (i, name) in self.store.nonexpert_group.names().iter().enumerate() {
+            let (lo, hi) = self.store.nonexpert_group.span(i);
+            let s = sq(&flat_ne[lo..hi]);
+            if tp_sharded(name) {
+                ne_sharded += s;
+            } else {
+                ne_repl += s;
+            }
+        }
+        let mut e_sharded = 0.0f64;
+        let mut e_repl = 0.0f64;
+        for (i, name) in self.store.expert_group.names().iter().enumerate() {
+            let (lo, hi) = self.store.expert_group.span(i);
+            let s = sq(&flat_e[lo..hi]);
+            if tp_sharded(name) {
+                e_sharded += s;
+            } else {
+                e_repl += s;
+            }
+        }
+        // sum TP-sharded parts over the TP group
+        let mut t = Tensor::from_vec(&[2], vec![ne_sharded as f32, e_sharded as f32]);
+        self.comm
+            .all_reduce(self.groups.tp_group_id, &self.groups.tp_group, &mut t);
+        let ne_total = t.data()[0] as f64 + ne_repl;
+        // sum the expert contribution over the EP group (distinct experts)
+        let mut e = Tensor::from_vec(&[1], vec![(t.data()[1] as f64 + e_repl) as f32]);
+        self.comm
+            .all_reduce(self.groups.ep_group_id, &self.groups.ep_group, &mut e);
+        ((ne_total + e.data()[0] as f64).max(0.0)).sqrt() as f32
+    }
+
+    fn apply_optimizer(&mut self, flat_ne: &[f32], flat_e: &[f32]) -> Result<()> {
+        let t = self.step_count + 1;
+        let (bc1, bc2) = self.tcfg.bias_corrections(t);
+        let h = AdamwStep {
+            lr: self.tcfg.lr_at(self.step_count),
+            beta1: self.tcfg.beta1,
+            beta2: self.tcfg.beta2,
+            eps: self.tcfg.eps,
+            weight_decay: self.tcfg.weight_decay,
+            bias_corr1: bc1,
+            bias_corr2: bc2,
+            inv_loss_scale: 1.0 / self.tcfg.loss_scale,
+        };
+        let tile = self.manifest.tile_size;
+        let use_pjrt = self.opts.optimizer_use_pjrt;
+
+        // non-expert group: step shard, all-gather params over dp_nonexp
+        let shard: Vec<f32> = if use_pjrt {
+            self.opt_nonexp
+                .step_pjrt(&mut self.rt, "adamw_tile", tile, flat_ne, h)?
+                .to_vec()
+        } else {
+            self.opt_nonexp.step_native(flat_ne, h).to_vec()
+        };
+        let gathered = self.comm.all_gather(
+            self.groups.dp_nonexp_group_id,
+            &self.groups.dp_nonexp_group,
+            &Tensor::from_vec(&[shard.len()], shard),
+        );
+        let mut full = Vec::with_capacity(self.store.nonexpert_group.total());
+        for part in gathered {
+            full.extend_from_slice(&part);
+        }
+        self.store
+            .nonexpert_group
+            .unflatten_into(&full, &mut self.store.params);
+
+        // expert group over dp_exp
+        if !flat_e.is_empty() {
+            let shard: Vec<f32> = if use_pjrt {
+                self.opt_exp
+                    .step_pjrt(&mut self.rt, "adamw_tile", tile, flat_e, h)?
+                    .to_vec()
+            } else {
+                self.opt_exp.step_native(flat_e, h).to_vec()
+            };
+            let gathered = self.comm.all_gather(
+                self.groups.dp_exp_group_id,
+                &self.groups.dp_exp_group,
+                &Tensor::from_vec(&[shard.len()], shard),
+            );
+            let mut full = Vec::with_capacity(self.store.expert_group.total());
+            for part in gathered {
+                full.extend_from_slice(&part);
+            }
+            self.store
+                .expert_group
+                .unflatten_into(&full, &mut self.store.params);
+        }
+        // parameters changed: drop the runtime's cached device buffers
+        self.rt.invalidate_params();
+        Ok(())
+    }
+
+    /// Optimizer memory-spike gauges (Fig. 4 instrumentation).
+    pub fn optimizer_peak_temp_bytes(&self) -> (usize, usize) {
+        (self.opt_nonexp.peak_temp_bytes, self.opt_exp.peak_temp_bytes)
+    }
+
+    pub fn optimizer_state_bytes(&self) -> usize {
+        self.opt_nonexp.state_bytes() + self.opt_exp.state_bytes()
+    }
+}

@@ -1,0 +1,35 @@
+//! # DeepSpeed-TED, reproduced
+//!
+//! A three-layer reproduction of *"A Hybrid Tensor-Expert-Data Parallelism
+//! Approach to Optimize Mixture-of-Experts Training"* (Singh et al.,
+//! ICS '23):
+//!
+//! * **L3 (this crate)** — the coordinator: TED topology (Eq. 1), functional
+//!   in-process collectives, the MoE router + DTD communication optimization,
+//!   a training engine with activation checkpointing + CAC, a ZeRO-1 sharded
+//!   *tiled* AdamW optimizer, and the paper's analytic memory & performance
+//!   models that regenerate every table and figure.
+//! * **L2 (python/compile/model.py)** — per-rank JAX block programs, AOT
+//!   lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (fused expert FFN,
+//!   tiled matmul, fused router, tiled AdamW).
+//!
+//! The rust binary never runs python: `make artifacts` is the only python
+//! step; afterwards everything executes through PJRT (`runtime`).
+//!
+//! Start with [`sim::SimCluster`] and [`engine::Trainer`], or the examples:
+//! `examples/quickstart.rs` is the smallest end-to-end TED training run.
+
+pub mod collectives;
+pub mod config;
+pub mod data;
+pub mod engine;
+pub mod memory;
+pub mod metrics;
+pub mod moe;
+pub mod optimizer;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sim;
+pub mod topology;
+pub mod util;

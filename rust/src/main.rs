@@ -1,0 +1,167 @@
+//! `ted` — the DeepSpeed-TED reproduction CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   train    run TED training on the simulated cluster
+//!   info     print topology / memory breakdown for a configuration
+//!   figures  shorthand pointing at the paper-figure generators
+//!
+//! Examples:
+//!   ted train --config tiny --world 4 --tp 2 --ep 2 --steps 20
+//!   ted info  --model 6.7B --experts 16 --gpus 128 --tp 4 --cluster summit
+
+use anyhow::{anyhow, bail, Result};
+
+use ted::config::{model, ClusterConfig, EngineOptions, ParallelConfig, TrainingConfig};
+use ted::data::{DataGen, SyntheticLM, TextCorpus};
+use ted::memory::{MemoryModel, PHASES};
+use ted::runtime::Manifest;
+use ted::sim::{train, RunConfig};
+use ted::topology::Topology;
+use ted::util::cli::Args;
+
+const USAGE: &str = "\
+ted — DeepSpeed-TED reproduction (hybrid tensor-expert-data parallel MoE training)
+
+USAGE:
+  ted train  --config NAME [--world N --tp N --ep N] [--steps N] [--micro N]
+             [--data synthetic|corpus] [--lr X] [--no-dtd] [--no-cac]
+             [--no-tiling] [--batch N] [--verbose]
+  ted info   --model {1.3B|2.7B|6.7B|13.0B} --experts E --gpus G --tp T
+             [--cluster summit|thetagpu|perlmutter]
+  ted figures [--only ID]    (alias of `cargo run --example paper_figures`)
+
+`make artifacts` must have produced artifacts/<config>_tp<T>_b<B>/ first.";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}\n\n{USAGE}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let all: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = all.first().cloned() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let flags = ["no-dtd", "no-cac", "no-tiling", "verbose", "help"];
+    let args = Args::parse(all.into_iter().skip(1), &flags)?;
+    if args.flag("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "info" => cmd_info(&args),
+        "figures" => {
+            println!("run: cargo run --release --example paper_figures{}",
+                args.get("only").map(|o| format!(" -- --only {o}")).unwrap_or_default());
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    args.reject_unknown(&[
+        "config", "world", "tp", "ep", "steps", "micro", "lr", "seed", "data", "batch",
+        "no-dtd", "no-cac", "no-tiling", "verbose",
+    ])?;
+    let config = args.get_or("config", "tiny").to_string();
+    let tp = args.get_usize("tp", 2)?;
+    let ep = args.get_usize("ep", 2)?;
+    let world = args.get_usize("world", 4)?;
+    let batch = args.get_usize("batch", 2)?;
+    let steps = args.get_usize("steps", 20)?;
+    let micro = args.get_usize("micro", 1)?;
+
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = Manifest::load(&Manifest::variant_dir(&root, &config, tp, batch))
+        .map_err(|e| anyhow!("{e:#}\nhint: run `make artifacts` (or artifacts-e2e)"))?;
+    let topo = Topology::new(ParallelConfig::derive(world, tp, ep)?)?;
+    let opts = EngineOptions {
+        dtd: !args.flag("no-dtd"),
+        cac: !args.flag("no-cac"),
+        optimizer_tiling: !args.flag("no-tiling"),
+        ..Default::default()
+    };
+    let tcfg = TrainingConfig {
+        lr: args.get_f64("lr", 1e-3)? as f32,
+        seed: args.get_u64("seed", 1234)?,
+        ..Default::default()
+    };
+    let data_kind = args.get_or("data", "synthetic").to_string();
+    let synth;
+    let corpus;
+    let data: &dyn DataGen = match data_kind.as_str() {
+        "synthetic" => {
+            synth = SyntheticLM::new(manifest.dims.vocab, tcfg.seed);
+            &synth
+        }
+        "corpus" => {
+            corpus = TextCorpus::new(tcfg.seed);
+            &corpus
+        }
+        other => bail!("unknown --data '{other}' (synthetic|corpus)"),
+    };
+
+    println!(
+        "ted train: {config} on world={world} (tensor={tp} expert={ep} dp_exp={} dp_nonexp={}) dtd={} cac={} tiling={}",
+        topo.cfg.dp_exp, topo.cfg.dp_nonexp, opts.dtd, opts.cac, opts.optimizer_tiling
+    );
+    let run = RunConfig {
+        steps,
+        micro_per_step: micro,
+        eval_every: (steps / 4).max(1),
+        eval_micro: 2,
+        verbose: true,
+    };
+    let log = train(&topo, &manifest, opts, tcfg, run, data)?;
+    println!("\ndone in {:.1}s; final loss {:.4}", log.wall_s, log.steps.last().unwrap().loss);
+    println!("comm volumes:");
+    for (kind, bytes) in log.comm_bytes {
+        if bytes > 0 {
+            println!("  {:<14} {bytes:>14} bytes", kind.name());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.reject_unknown(&["model", "experts", "gpus", "tp", "cluster"])?;
+    let name = args.get_or("model", "6.7B");
+    let experts = args.get_usize("experts", 16)?;
+    let gpus = args.get_usize("gpus", 128)?;
+    let tp = args.get_usize("tp", 4)?;
+    let cluster = ClusterConfig::by_name(args.get_or("cluster", "summit"))
+        .ok_or_else(|| anyhow!("unknown cluster"))?;
+    let m = model::table1_by_name(name)
+        .or_else(|| model::executable(name))
+        .ok_or_else(|| anyhow!("unknown model '{name}'"))?;
+    let ep = experts.min(gpus / tp);
+    let par = ParallelConfig::derive(gpus, tp, ep)?;
+    let mm = MemoryModel::new(m.clone(), experts, par);
+
+    println!("model {name}: {} base params, {} with {experts} experts",
+        m.n_params_base(), m.n_params_moe(experts));
+    println!(
+        "topology: G={gpus} tensor={tp} expert={ep} dp_exp={} dp_nonexp={}",
+        par.dp_exp, par.dp_nonexp
+    );
+    println!("per-GPU parameters: non-expert {}, expert {}", mm.np_gpu_nonexpert(), mm.np_gpu_expert());
+    println!("\nper-GPU memory ({}, {:.0} GiB/GPU):", cluster.name, cluster.mem_per_gpu_gib);
+    println!("{:<12} {:>14} {:>14}", "phase", "untiled (GiB)", "tiled (GiB)");
+    for p in PHASES {
+        let u = mm.phase_bytes(p, false, 0, false) as f64 / (1u64 << 30) as f64;
+        let t = mm.phase_bytes(p, true, 1_800_000, false) as f64 / (1u64 << 30) as f64;
+        println!("{:<12} {u:>14.2} {t:>14.2}", p.name());
+    }
+    println!(
+        "\nfits (tiled): {}   fits (untiled): {}",
+        mm.fits(&cluster, true, 1_800_000, false),
+        mm.fits(&cluster, false, 0, false)
+    );
+    println!("Eq. 5 lower bound: {:.2} GiB", mm.eq5_lower_bound_bytes() as f64 / (1u64 << 30) as f64);
+    Ok(())
+}

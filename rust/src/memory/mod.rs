@@ -1,0 +1,339 @@
+//! Analytic per-GPU memory model — section 3.1 (Eq. 2–7) and section 4.
+//!
+//! Mixed-precision accounting (per parameter): 2 B fp16 weights + 2 B fp16
+//! gradients resident, plus 12 B of ZeRO-1-sharded optimizer state (fp32
+//! master + two Adam moments) divided by the group's data-parallel degree —
+//! Rajbhandari et al.'s `(4 + 12/G_data) * NP_gpu` lower bound, applied
+//! separately to TED's two parameter groups (Eq. 4).
+//!
+//! The functional engine measures the same quantities on the simulated
+//! cluster (`Trainer::optimizer_peak_temp_bytes`, `peak_stash_bytes`); this
+//! module extrapolates them to the paper's scales to regenerate Fig. 4 and
+//! Fig. 9.
+
+use crate::config::{ClusterConfig, ModelConfig, ParallelConfig};
+
+/// Per-GPU memory model for one (model, experts, topology) choice.
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    pub model: ModelConfig,
+    pub n_experts: usize,
+    pub par: ParallelConfig,
+    /// microbatch (sequences) processed per GPU between checkpoints
+    pub micro_batch: usize,
+}
+
+/// Training phases profiled in Fig. 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Baseline, // parameters + grads + optimizer states resident
+    Forward,
+    Backward,
+    OptimizerStep,
+}
+
+pub const PHASES: [Phase; 4] = [Phase::Baseline, Phase::Forward, Phase::Backward, Phase::OptimizerStep];
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Baseline => "baseline",
+            Phase::Forward => "forward",
+            Phase::Backward => "backward",
+            Phase::OptimizerStep => "optimizer",
+        }
+    }
+}
+
+impl MemoryModel {
+    pub fn new(model: ModelConfig, n_experts: usize, par: ParallelConfig) -> Self {
+        MemoryModel { model, n_experts, par, micro_batch: 1 }
+    }
+
+    // -- parameter counts (Eq. 2 / Eq. 3, exact block arithmetic) ---------
+
+    pub fn np_expert_total(&self) -> u64 {
+        self.model.n_params_expert(self.n_experts)
+    }
+
+    pub fn np_nonexpert_total(&self) -> u64 {
+        self.model.n_params_nonexpert()
+    }
+
+    /// Non-expert parameters per GPU (Megatron split over G_tensor).
+    pub fn np_gpu_nonexpert(&self) -> u64 {
+        self.np_nonexpert_total() / self.par.tp as u64
+    }
+
+    /// Expert parameters per GPU (split over G_tensor x G_expert).
+    pub fn np_gpu_expert(&self) -> u64 {
+        self.np_expert_total() / (self.par.tp * self.par.ep) as u64
+    }
+
+    // -- Eq. 4: resident model-state bytes per GPU ------------------------
+
+    pub fn model_state_bytes(&self) -> u64 {
+        let ne = self.np_gpu_nonexpert() as f64;
+        let ex = self.np_gpu_expert() as f64;
+        let b_ne = (4.0 + 12.0 / self.par.dp_nonexp as f64) * ne;
+        let b_ex = (4.0 + 12.0 / self.par.dp_exp as f64) * ex;
+        (b_ne + b_ex) as u64
+    }
+
+    /// Eq. 5 closed form: `4 * NP_base * (1/G_tensor + (E+2)/G)` — the
+    /// paper's lower bound, using the nominal NP_base.
+    pub fn eq5_lower_bound_bytes(&self) -> u64 {
+        let np_base = self.model.n_params_base() as f64;
+        let g = self.par.world as f64;
+        let bound =
+            4.0 * np_base * (1.0 / self.par.tp as f64 + (self.n_experts as f64 + 2.0) / g);
+        bound as u64
+    }
+
+    // -- section 4: the optimizer up-cast spike ---------------------------
+
+    /// fp32 gradient up-cast buffer at the optimizer step. ZeRO-1 shards
+    /// states over the group's DP degree, so the *expert* shard (divided by
+    /// the E-times-smaller G_dp^exp) dominates and grows with E — unless
+    /// tiled, in which case the spike is `4 * tile` regardless.
+    pub fn optimizer_spike_bytes(&self, tiled: bool, tile: usize) -> u64 {
+        if tiled {
+            return 4 * tile as u64;
+        }
+        let shard_ne = self.np_gpu_nonexpert() / self.par.dp_nonexp as u64;
+        let shard_ex = self.np_gpu_expert() / self.par.dp_exp as u64;
+        4 * shard_ne.max(shard_ex)
+    }
+
+    // -- activations -------------------------------------------------------
+
+    /// Activation bytes with checkpointing: one fp16 [B, S, D] checkpoint
+    /// per layer (replicated over TP), plus the working set of one layer
+    /// (a handful of [B, S, D]-sized live tensors; `WORKING_TENSORS` covers
+    /// attention scores at seq 2048 amortized by the TP split).
+    pub fn activation_bytes(&self, cac: bool) -> u64 {
+        const WORKING_TENSORS: u64 = 8;
+        let b = self.micro_batch as u64;
+        let s = self.model.seq as u64;
+        let d = self.model.d_model as u64;
+        let l = self.model.n_layers as u64;
+        let token_bytes = 2 * b * s * d;
+        let checkpoints = l * token_bytes;
+        let working = WORKING_TENSORS * token_bytes / self.par.tp as u64;
+        // CAC stashes the collective outputs of each MoE layer: y1, the
+        // dispatched capacity buffers (~cf x tokens) and the combined rows.
+        let cac_extra = if cac {
+            (self.model.n_layers as u64 / 2) * 3 * token_bytes
+        } else {
+            0
+        };
+        checkpoints + working + cac_extra
+    }
+
+    /// Peak bytes per GPU in a given phase (Fig. 4's bars).
+    pub fn phase_bytes(&self, phase: Phase, tiled: bool, tile: usize, cac: bool) -> u64 {
+        let base = self.model_state_bytes();
+        match phase {
+            Phase::Baseline => base,
+            Phase::Forward => base + self.activation_bytes(cac),
+            Phase::Backward => base + self.activation_bytes(cac),
+            Phase::OptimizerStep => base + self.optimizer_spike_bytes(tiled, tile),
+        }
+    }
+
+    /// Total MoE parameter count (model size reported in Fig. 9).
+    pub fn total_params(&self) -> u64 {
+        self.model.n_params_moe(self.n_experts)
+    }
+
+    pub fn fits(&self, cluster: &ClusterConfig, tiled: bool, tile: usize, cac: bool) -> bool {
+        // 20% of device memory reserved for framework overhead (NCCL
+        // buffers, allocator fragmentation, cuDNN workspaces). Calibration:
+        // Eq. 4 is a *lower bound*; the paper's measured 31.3 GB for a
+        // config our bound puts near 24 GB implies ~25% overhead, and 20%
+        // reproduces the paper's weak-scaling tensor-parallel ladder
+        // (1.3B:1, 2.7B:2, 6.7B:4, 13B:8 on 16 GiB V100s) exactly.
+        const RESERVE: f64 = 0.20;
+        let peak = PHASES
+            .iter()
+            .map(|p| self.phase_bytes(*p, tiled, tile, cac))
+            .max()
+            .unwrap();
+        (peak as f64) <= cluster.mem_per_gpu_bytes() as f64 * (1.0 - RESERVE)
+    }
+}
+
+/// Fig.-9 search: the largest MoE (params) trainable on `gpus` GPUs of
+/// `cluster`, over Table-1 base models, expert counts 4..=128 (doubling),
+/// and tensor-parallel degrees up to `max_tp` (1 for the DeepSpeed-MoE
+/// baseline; min(6, gpus/node) for TED on Summit, per section 7.2).
+pub fn max_moe_size(
+    cluster: &ClusterConfig,
+    gpus: usize,
+    max_tp: usize,
+    tiled: bool,
+    tile: usize,
+) -> Option<(ModelConfig, usize, usize, u64)> {
+    let mut best: Option<(ModelConfig, usize, usize, u64)> = None;
+    for model in crate::config::model::table1() {
+        let mut e = 4usize;
+        while e <= 128 {
+            // paper: G_expert = number of experts (when it fits in the grid)
+            let mut tp = 1usize;
+            while tp <= max_tp {
+                if gpus % tp == 0 {
+                    let dp = gpus / tp;
+                    let ep = e.min(dp);
+                    if dp % ep == 0 && e % ep == 0 {
+                        if let Ok(par) = ParallelConfig::derive(gpus, tp, ep) {
+                            let mm = MemoryModel::new(model.clone(), e, par);
+                            if mm.fits(cluster, tiled, tile, false) {
+                                let total = mm.total_params();
+                                if best.as_ref().map(|b| total > b.3).unwrap_or(true) {
+                                    best = Some((model.clone(), e, tp, total));
+                                }
+                            }
+                        }
+                    }
+                }
+                tp += 1;
+            }
+            e *= 2;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::table1_by_name;
+
+    fn model(name: &str) -> ModelConfig {
+        table1_by_name(name).unwrap()
+    }
+
+    #[test]
+    fn eq7_expert_dp_is_e_times_smaller() {
+        let par = ParallelConfig::derive(128, 4, 16).unwrap();
+        assert_eq!(par.dp_exp * 16, par.dp_nonexp);
+    }
+
+    #[test]
+    fn eq5_bound_tracks_exact_model_within_factor() {
+        // closed form vs exact block accounting: same order, same trends
+        let par = ParallelConfig::derive(128, 4, 16).unwrap();
+        let mm = MemoryModel::new(model("6.7B"), 16, par);
+        let exact = mm.model_state_bytes() as f64;
+        let bound = mm.eq5_lower_bound_bytes() as f64;
+        let ratio = exact / bound;
+        assert!((0.5..2.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn memory_decreases_with_tp() {
+        let m = model("6.7B");
+        let a = MemoryModel::new(m.clone(), 16, ParallelConfig::derive(128, 1, 16).unwrap());
+        let b = MemoryModel::new(m.clone(), 16, ParallelConfig::derive(128, 2, 16).unwrap());
+        let c = MemoryModel::new(m, 16, ParallelConfig::derive(128, 4, 16).unwrap());
+        assert!(b.model_state_bytes() < a.model_state_bytes());
+        assert!(c.model_state_bytes() < b.model_state_bytes());
+    }
+
+    #[test]
+    fn spike_grows_with_experts_untiled_but_not_tiled() {
+        // Fig. 4's mechanism: G_dp^exp = G_dp^nonexp / E shrinks as E grows,
+        // so the untiled up-cast buffer grows; the tiled one is constant.
+        let m = model("2.7B");
+        let spike = |e: usize| {
+            let par = ParallelConfig::derive(32, 1, e).unwrap();
+            MemoryModel::new(m.clone(), e, par).optimizer_spike_bytes(false, 0)
+        };
+        assert!(spike(32) > spike(8));
+        let tiled = |e: usize| {
+            let par = ParallelConfig::derive(32, 1, e).unwrap();
+            MemoryModel::new(m.clone(), e, par).optimizer_spike_bytes(true, 1_800_000)
+        };
+        assert_eq!(tiled(8), tiled(32));
+        assert_eq!(tiled(32), 4 * 1_800_000);
+    }
+
+    #[test]
+    fn fig4_spike_magnitude_matches_paper_order() {
+        // paper: 2.7B base, 32 experts, 32 GPUs (tp=1, ep=32) -> ~4.5 GB
+        // spike untiled; tiling caps it around 7 MB (1.8M tile).
+        let par = ParallelConfig::derive(32, 1, 32).unwrap();
+        let mm = MemoryModel::new(model("2.7B"), 32, par);
+        let untiled = mm.optimizer_spike_bytes(false, 0) as f64 / 1e9;
+        assert!((2.0..8.0).contains(&untiled), "untiled spike {untiled} GB");
+        let tiled = mm.optimizer_spike_bytes(true, 1_800_000) as f64 / 1e6;
+        assert!(tiled < 10.0, "tiled spike {tiled} MB");
+    }
+
+    #[test]
+    fn tiling_changes_feasibility_at_the_boundary() {
+        // section 4's phenomenon: near the memory boundary, the untiled
+        // up-cast spike is the difference between training and OOM (the
+        // paper's 6.7B+16e-on-32-A100 case). Assert such boundary configs
+        // exist and are common across both testbeds.
+        let mut found = 0;
+        for cluster in [ClusterConfig::summit(), ClusterConfig::thetagpu()] {
+            for gpus in [32usize, 64, 128] {
+                for m in ["1.3B", "2.7B", "6.7B"] {
+                    for e in [8usize, 16, 32, 64, 128] {
+                        for tp in [1usize, 2, 4] {
+                            if gpus % tp != 0 {
+                                continue;
+                            }
+                            let dp = gpus / tp;
+                            let ep = e.min(dp);
+                            if dp % ep != 0 || e % ep != 0 {
+                                continue;
+                            }
+                            let par = ParallelConfig::derive(gpus, tp, ep).unwrap();
+                            let mm = MemoryModel::new(model(m), e, par);
+                            if mm.fits(&cluster, true, 1_800_000, false)
+                                && !mm.fits(&cluster, false, 0, false)
+                            {
+                                found += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        assert!(found >= 3, "only {found} boundary configs where tiling decides feasibility");
+    }
+
+    #[test]
+    fn fig9_ted_beats_dsmoe_and_ratio_grows() {
+        // paper band: TED supports 1.09-4.8x larger MoEs, broadly growing
+        // with GPU count (our search over doubling expert counts makes the
+        // per-point ratio jumpy, so assert the trend, not monotonicity).
+        let cluster = ClusterConfig::summit();
+        let mut ratios = Vec::new();
+        for gpus in [32, 64, 128, 256, 512] {
+            let ted = max_moe_size(&cluster, gpus, 6, true, 1_800_000);
+            let ds = max_moe_size(&cluster, gpus, 1, true, 1_800_000);
+            let (t, d) = (ted.map(|x| x.3).unwrap_or(0), ds.map(|x| x.3).unwrap_or(0));
+            assert!(t >= d, "{gpus} GPUs: TED {t} < DS-MoE {d}");
+            if d > 0 {
+                ratios.push(t as f64 / d as f64);
+            }
+        }
+        assert!(ratios.iter().all(|r| *r >= 1.0), "{ratios:?}");
+        let early = ratios.first().copied().unwrap_or(1.0);
+        let peak = ratios.iter().cloned().fold(0.0, f64::max);
+        assert!(peak >= early, "{ratios:?}");
+        assert!(peak > 1.5 && peak < 10.0, "peak ratio {peak} ({ratios:?})");
+    }
+
+    #[test]
+    fn eq6_base_model_bound_scales_with_tp() {
+        // NP_base <= G_tensor/4 * M_gpu: TED supports tp x larger bases
+        let cluster = ClusterConfig::summit();
+        let m = cluster.mem_per_gpu_bytes() as f64;
+        let bound = |tp: f64| tp / 4.0 * m;
+        assert_eq!(bound(6.0) / bound(1.0), 6.0);
+    }
+}

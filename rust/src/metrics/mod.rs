@@ -1,0 +1,217 @@
+//! Metrics: timers, running stats, CSV logging, and the micro-bench harness
+//! used by the `cargo bench` targets (criterion is not in the vendored
+//! crate set; `bench::run` covers the warmup/iterate/report loop we need).
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch accumulating named phase durations.
+#[derive(Debug, Default)]
+pub struct PhaseTimer {
+    phases: Vec<(String, Duration)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a phase name (accumulates across calls).
+    pub fn time<R>(&mut self, name: &str, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.add(name, t0.elapsed());
+        r
+    }
+
+    pub fn add(&mut self, name: &str, d: Duration) {
+        if let Some(e) = self.phases.iter_mut().find(|(n, _)| n == name) {
+            e.1 += d;
+        } else {
+            self.phases.push((name.to_string(), d));
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Duration {
+        self.phases
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .unwrap_or_default()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|(_, d)| *d).sum()
+    }
+
+    pub fn render(&self) -> String {
+        let total = self.total().as_secs_f64().max(1e-12);
+        let mut out = String::new();
+        for (n, d) in &self.phases {
+            let s = d.as_secs_f64();
+            let _ = writeln!(out, "{n:<24} {s:>9.4}s  {:>5.1}%", 100.0 * s / total);
+        }
+        out
+    }
+}
+
+/// Running mean/min/max.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Running {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Running {
+    pub fn push(&mut self, v: f64) {
+        if self.n == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.n += 1;
+        self.sum += v;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+/// Minimal CSV writer for loss curves / sweep tables.
+pub struct CsvWriter {
+    file: std::fs::File,
+}
+
+impl CsvWriter {
+    pub fn create(path: &str, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> std::io::Result<()> {
+        writeln!(self.file, "{}", values.join(","))
+    }
+}
+
+/// Micro-bench harness for the `cargo bench` targets.
+pub mod bench {
+    use super::*;
+
+    #[derive(Debug, Clone, Copy)]
+    pub struct BenchResult {
+        pub iters: u32,
+        pub mean: Duration,
+        pub min: Duration,
+        pub max: Duration,
+        pub stddev: Duration,
+    }
+
+    /// Warm up, run `iters` timed iterations, print a criterion-style line.
+    pub fn run(name: &str, warmup: u32, iters: u32, mut f: impl FnMut()) -> BenchResult {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters.max(1) {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        let n = samples.len() as f64;
+        let mean_s = samples.iter().map(|d| d.as_secs_f64()).sum::<f64>() / n;
+        let var = samples
+            .iter()
+            .map(|d| (d.as_secs_f64() - mean_s).powi(2))
+            .sum::<f64>()
+            / n;
+        let result = BenchResult {
+            iters: iters.max(1),
+            mean: Duration::from_secs_f64(mean_s),
+            min: *samples.iter().min().unwrap(),
+            max: *samples.iter().max().unwrap(),
+            stddev: Duration::from_secs_f64(var.sqrt()),
+        };
+        println!(
+            "bench {name:<44} {:>12} mean  [{:>12} .. {:>12}]  ±{:<10} ({} iters)",
+            fmt_d(result.mean),
+            fmt_d(result.min),
+            fmt_d(result.max),
+            fmt_d(result.stddev),
+            result.iters
+        );
+        result
+    }
+
+    pub fn fmt_d(d: Duration) -> String {
+        let s = d.as_secs_f64();
+        if s >= 1.0 {
+            format!("{s:.3} s")
+        } else if s >= 1e-3 {
+            format!("{:.3} ms", s * 1e3)
+        } else {
+            format!("{:.3} µs", s * 1e6)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::new();
+        t.add("a", Duration::from_millis(5));
+        t.add("a", Duration::from_millis(7));
+        t.add("b", Duration::from_millis(3));
+        assert_eq!(t.get("a"), Duration::from_millis(12));
+        assert_eq!(t.total(), Duration::from_millis(15));
+        assert!(t.render().contains('a'));
+    }
+
+    #[test]
+    fn running_stats() {
+        let mut r = Running::default();
+        for v in [1.0, 3.0, 2.0] {
+            r.push(v);
+        }
+        assert_eq!(r.mean(), 2.0);
+        assert_eq!(r.min, 1.0);
+        assert_eq!(r.max, 3.0);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut acc = 0u64;
+        let r = bench::run("noop", 1, 5, || {
+            acc = acc.wrapping_add(1);
+        });
+        assert_eq!(r.iters, 5);
+        assert!(acc >= 6);
+    }
+
+    #[test]
+    fn csv_writes() {
+        let path = std::env::temp_dir().join("ted_test_metrics.csv");
+        let p = path.to_str().unwrap();
+        let mut w = CsvWriter::create(p, &["a", "b"]).unwrap();
+        w.row(&["1".into(), "2".into()]).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+}

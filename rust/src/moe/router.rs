@@ -1,0 +1,264 @@
+//! Top-1 MoE routing: expert selection, capacity-slot assignment, and the
+//! load-balancing auxiliary loss — the integer control flow the paper's
+//! framework inherits from DeepSpeed-MoE/Switch.
+//!
+//! The gate *probabilities* come from the AOT Pallas kernel
+//! (`moe_ln_router_fwd`); this module turns them into dispatch decisions.
+//!
+//! Capacity slots are assigned in **canonical EP-group order** (EP member
+//! position, then local token index). Two properties follow:
+//! * every rank computes identical decisions from identical probabilities
+//!   (bit-identical across the TP group, since HLO execution is
+//!   deterministic), and
+//! * the decision depends only on the global token order, not on the
+//!   topology — which is what makes the tp=2/ep=2 run loss-identical to the
+//!   tp=1 baseline (paper Fig. 7).
+
+use crate::collectives::Communicator;
+use crate::topology::GroupId;
+use crate::util::tensor::Tensor;
+
+/// Routing decision for one rank's local tokens in one MoE layer pass.
+#[derive(Debug, Clone)]
+pub struct RoutingDecision {
+    /// Chosen expert per local token (argmax of gate probs).
+    pub expert_of_token: Vec<usize>,
+    /// Gate probability of the chosen expert (the combine scale).
+    pub prob_of_token: Vec<f32>,
+    /// Capacity slot within the chosen expert's buffer; `None` = dropped
+    /// (buffer overflow). Slots are unique within (EP group, expert).
+    pub slot_of_token: Vec<Option<usize>>,
+    /// Global (EP-group-wide) token fraction per expert: f_e of the aux loss.
+    pub f_frac: Vec<f32>,
+    /// Global mean gate probability per expert: P_e of the aux loss.
+    pub p_mean: Vec<f32>,
+    /// Total tokens routed in the EP group this pass.
+    pub group_tokens: usize,
+    /// Auxiliary (load-balancing) loss value: E * sum_e f_e * P_e.
+    pub aux_loss: f32,
+}
+
+impl RoutingDecision {
+    pub fn n_experts(&self) -> usize {
+        self.f_frac.len()
+    }
+
+    /// Local tokens actually dispatched (not dropped).
+    pub fn kept(&self) -> usize {
+        self.slot_of_token.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Gradient of `aux_coef * aux_loss` w.r.t. the gate probabilities,
+    /// dense [n, E] (the f_e factor is treated as constant, as in Switch:
+    /// the discrete routing is not differentiated).
+    ///
+    ///   d l_aux / d p[i,e] = coef * E * f_e / N_group
+    pub fn aux_grad_into(&self, coef: f32, dprobs: &mut Tensor) {
+        let e = self.n_experts();
+        let n = self.expert_of_token.len();
+        assert_eq!(dprobs.shape(), &[n, e]);
+        let scale = coef * e as f32 / self.group_tokens as f32;
+        let data = dprobs.data_mut();
+        for i in 0..n {
+            for j in 0..e {
+                data[i * e + j] += scale * self.f_frac[j];
+            }
+        }
+    }
+}
+
+/// Compute the routing decision for this rank's `probs` [n, E].
+///
+/// `ep_pos` is this rank's position within its EP group (`capacity` slots
+/// per expert are assigned EP-member-position-major so that every member
+/// agrees on the slot map after a counts all-gather).
+#[allow(clippy::too_many_arguments)]
+pub fn route_top1(
+    comm: &mut Communicator,
+    ep_gid: GroupId,
+    ep_members: &[usize],
+    ep_pos: usize,
+    probs: &Tensor,
+    n_experts: usize,
+    capacity: usize,
+) -> RoutingDecision {
+    let n = probs.rows();
+    assert_eq!(probs.row_len(), n_experts, "probs shape mismatch");
+
+    // 1. local top-1
+    let mut expert_of_token = Vec::with_capacity(n);
+    let mut prob_of_token = Vec::with_capacity(n);
+    let mut local_counts = vec![0usize; n_experts];
+    let mut local_psum = vec![0f32; n_experts];
+    // order of arrival per expert among local tokens
+    let mut order_in_expert = Vec::with_capacity(n);
+    for i in 0..n {
+        let row = probs.row(i);
+        let (mut best, mut best_p) = (0usize, f32::NEG_INFINITY);
+        for (e, &p) in row.iter().enumerate() {
+            if p > best_p {
+                best = e;
+                best_p = p;
+            }
+            local_psum[e] += p;
+        }
+        expert_of_token.push(best);
+        prob_of_token.push(best_p);
+        order_in_expert.push(local_counts[best]);
+        local_counts[best] += 1;
+    }
+
+    // 2. exchange per-expert counts + prob sums within the EP group
+    //    (one small all-gather; payload [E] counts ++ [E] prob sums).
+    let mut payload = Vec::with_capacity(2 * n_experts + 1);
+    payload.extend(local_counts.iter().map(|&c| c as f32));
+    payload.extend(local_psum.iter());
+    payload.push(n as f32);
+    let gathered = comm.all_gather(
+        ep_gid,
+        ep_members,
+        &Tensor::from_vec(&[2 * n_experts + 1], payload),
+    );
+
+    // 3. slot assignment: members before us claim their counts first
+    let mut prefix = vec![0usize; n_experts];
+    let mut total_counts = vec![0usize; n_experts];
+    let mut total_psum = vec![0f32; n_experts];
+    let mut group_tokens = 0usize;
+    for (pos, contrib) in gathered.iter().enumerate() {
+        assert_eq!(contrib.len(), 2 * n_experts + 1, "counts payload mismatch");
+        for e in 0..n_experts {
+            let c = contrib[e] as usize;
+            if pos < ep_pos {
+                prefix[e] += c;
+            }
+            total_counts[e] += c;
+            total_psum[e] += contrib[n_experts + e];
+        }
+        group_tokens += contrib[2 * n_experts] as usize;
+    }
+
+    let slot_of_token: Vec<Option<usize>> = (0..n)
+        .map(|i| {
+            let e = expert_of_token[i];
+            let slot = prefix[e] + order_in_expert[i];
+            if slot < capacity {
+                Some(slot)
+            } else {
+                None // over capacity: token passes through on the residual
+            }
+        })
+        .collect();
+
+    // 4. aux loss stats over the whole EP group
+    let gt = group_tokens.max(1) as f32;
+    let f_frac: Vec<f32> = total_counts.iter().map(|&c| c as f32 / gt).collect();
+    let p_mean: Vec<f32> = total_psum.iter().map(|&s| s / gt).collect();
+    let aux_loss = n_experts as f32
+        * f_frac.iter().zip(&p_mean).map(|(f, p)| f * p).sum::<f32>();
+
+    RoutingDecision {
+        expert_of_token,
+        prob_of_token,
+        slot_of_token,
+        f_frac,
+        p_mean,
+        group_tokens,
+        aux_loss,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::Rendezvous;
+    use crate::topology::{GroupId, GroupKind};
+    use std::sync::Arc;
+
+    fn gid() -> GroupId {
+        GroupId { kind: GroupKind::Expert, index: 0 }
+    }
+
+    /// single-rank EP group helper
+    fn route_local(probs: Tensor, e: usize, cap: usize) -> RoutingDecision {
+        let rez = Rendezvous::new(1);
+        let mut comm = Communicator::new(Arc::clone(&rez), 0);
+        route_top1(&mut comm, gid(), &[0], 0, &probs, e, cap)
+    }
+
+    #[test]
+    fn argmax_and_slots() {
+        // 4 tokens, 2 experts: tokens 0,2 -> e1; 1,3 -> e0
+        let probs = Tensor::from_vec(
+            &[4, 2],
+            vec![0.1, 0.9, 0.8, 0.2, 0.3, 0.7, 0.6, 0.4],
+        );
+        let d = route_local(probs, 2, 8);
+        assert_eq!(d.expert_of_token, vec![1, 0, 1, 0]);
+        assert_eq!(d.prob_of_token, vec![0.9, 0.8, 0.7, 0.6]);
+        assert_eq!(d.slot_of_token, vec![Some(0), Some(0), Some(1), Some(1)]);
+        assert_eq!(d.kept(), 4);
+    }
+
+    #[test]
+    fn capacity_drops_overflow_in_order() {
+        // all 5 tokens to expert 0, capacity 3 -> last two dropped
+        let probs = Tensor::from_vec(&[5, 2], vec![0.9, 0.1].repeat(5));
+        let d = route_local(probs, 2, 3);
+        assert_eq!(
+            d.slot_of_token,
+            vec![Some(0), Some(1), Some(2), None, None]
+        );
+        assert_eq!(d.kept(), 3);
+    }
+
+    #[test]
+    fn aux_loss_balanced_is_minimal() {
+        // perfectly balanced: f = [.5,.5], P = [.5,.5] -> aux = 2*(0.25+0.25) = 1
+        let probs = Tensor::from_vec(&[4, 2], vec![0.6, 0.4, 0.4, 0.6, 0.6, 0.4, 0.4, 0.6]);
+        let d = route_local(probs, 2, 8);
+        assert!((d.aux_loss - (2.0 * (0.5 * 0.5 + 0.5 * 0.5))).abs() < 1e-5);
+        // imbalanced: all to expert 0
+        let probs = Tensor::from_vec(&[4, 2], vec![0.9, 0.1].repeat(4));
+        let d2 = route_local(probs, 2, 8);
+        assert!(d2.aux_loss > d.aux_loss);
+    }
+
+    #[test]
+    fn aux_grad_shape_and_value() {
+        let probs = Tensor::from_vec(&[2, 2], vec![0.9, 0.1, 0.8, 0.2]);
+        let d = route_local(probs, 2, 8);
+        let mut dp = Tensor::zeros(&[2, 2]);
+        d.aux_grad_into(0.01, &mut dp);
+        // f = [1, 0]; scale = 0.01 * 2 / 2 = 0.01
+        assert!((dp.data()[0] - 0.01).abs() < 1e-7);
+        assert!((dp.data()[1] - 0.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn two_rank_ep_group_slots_disjoint_and_ordered() {
+        let rez = Rendezvous::new(2);
+        let members = vec![0usize, 1];
+        let outs: Vec<RoutingDecision> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..2)
+                .map(|r| {
+                    let rez = Arc::clone(&rez);
+                    let members = members.clone();
+                    s.spawn(move || {
+                        let mut comm = Communicator::new(rez, r);
+                        // both ranks route both tokens to expert 0
+                        let probs = Tensor::from_vec(&[2, 2], vec![0.9, 0.1, 0.8, 0.2]);
+                        route_top1(&mut comm, gid(), &members, r, &probs, 2, 3)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // rank 0 gets slots 0,1; rank 1 gets slot 2 then drop (cap 3)
+        assert_eq!(outs[0].slot_of_token, vec![Some(0), Some(1)]);
+        assert_eq!(outs[1].slot_of_token, vec![Some(2), None]);
+        // both agree on global stats
+        assert_eq!(outs[0].f_frac, outs[1].f_frac);
+        assert_eq!(outs[0].group_tokens, 4);
+    }
+}

@@ -1,0 +1,143 @@
+//! AdamW update math (native rust path).
+//!
+//! Mirrors the Pallas kernel (`python/compile/kernels/adamw.py`) exactly:
+//! decoupled weight decay, bias-corrected moments, gradient un-scaling.
+//! The hyper vector layout is shared with the kernel:
+//! `[lr, beta1, beta2, eps, wd, bias_corr1, bias_corr2, inv_loss_scale]`.
+
+/// Step hyper-parameters for one optimizer step (bias corrections folded in
+/// by the caller so the math is stateless).
+#[derive(Debug, Clone, Copy)]
+pub struct AdamwStep {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub bias_corr1: f32,
+    pub bias_corr2: f32,
+    pub inv_loss_scale: f32,
+}
+
+impl AdamwStep {
+    /// The 8-float vector the Pallas `adamw_tile` entry expects.
+    pub fn to_hyper_vec(self) -> Vec<f32> {
+        vec![
+            self.lr,
+            self.beta1,
+            self.beta2,
+            self.eps,
+            self.weight_decay,
+            self.bias_corr1,
+            self.bias_corr2,
+            self.inv_loss_scale,
+        ]
+    }
+}
+
+/// In-place fused AdamW over one contiguous span. `g` is the *scaled*
+/// gradient (multiplied by loss_scale upstream); `gbuf` is the caller's
+/// up-cast temporary (tile-sized under tiling — the paper's section-4 fix).
+pub fn adamw_update(
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    gbuf: &mut [f32],
+    h: AdamwStep,
+) {
+    let n = p.len();
+    assert!(m.len() == n && v.len() == n && g.len() == n && gbuf.len() >= n);
+    // The explicit up-cast: in mixed precision this materializes fp32 from
+    // fp16 grads; the buffer it fills is exactly the memory spike Fig. 4
+    // profiles. We keep it a real, separate write so the tiled/untiled
+    // memory behaviour of the two code paths is physically faithful.
+    for i in 0..n {
+        gbuf[i] = g[i] * h.inv_loss_scale;
+    }
+    for i in 0..n {
+        let gi = gbuf[i];
+        let mi = h.beta1 * m[i] + (1.0 - h.beta1) * gi;
+        let vi = h.beta2 * v[i] + (1.0 - h.beta2) * gi * gi;
+        m[i] = mi;
+        v[i] = vi;
+        let mhat = mi / h.bias_corr1;
+        let vhat = vi / h.bias_corr2;
+        p[i] -= h.lr * (mhat / (vhat.sqrt() + h.eps) + h.weight_decay * p[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn h() -> AdamwStep {
+        AdamwStep {
+            lr: 1e-1,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            bias_corr1: 0.1,
+            bias_corr2: 0.001,
+            inv_loss_scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn first_step_moves_by_lr() {
+        // with bias correction at t=1, mhat = g, vhat = g^2 -> step ~= lr*sign(g)
+        let mut p = vec![0.0f32; 4];
+        let mut m = vec![0.0; 4];
+        let mut v = vec![0.0; 4];
+        let g = vec![0.5, -0.5, 2.0, -2.0];
+        let mut buf = vec![0.0; 4];
+        adamw_update(&mut p, &mut m, &mut v, &g, &mut buf, h());
+        for (i, &gi) in g.iter().enumerate() {
+            let want = -0.1 * gi.signum();
+            assert!((p[i] - want).abs() < 1e-4, "{i}: {} vs {want}", p[i]);
+        }
+    }
+
+    #[test]
+    fn weight_decay_is_decoupled() {
+        let mut p = vec![1.0f32];
+        let mut m = vec![0.0];
+        let mut v = vec![0.0];
+        let g = vec![0.0];
+        let mut buf = vec![0.0];
+        let mut hh = h();
+        hh.weight_decay = 0.5;
+        adamw_update(&mut p, &mut m, &mut v, &g, &mut buf, hh);
+        assert!((p[0] - (1.0 - 0.1 * 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn loss_scale_cancels() {
+        let run = |scale: f32| {
+            let mut p = vec![0.3f32; 8];
+            let mut m = vec![0.01; 8];
+            let mut v = vec![0.002; 8];
+            let g: Vec<f32> = (0..8).map(|i| (i as f32 - 3.5) * scale).collect();
+            let mut buf = vec![0.0; 8];
+            let mut hh = h();
+            hh.inv_loss_scale = 1.0 / scale;
+            adamw_update(&mut p, &mut m, &mut v, &g, &mut buf, hh);
+            p
+        };
+        let a = run(1.0);
+        let b = run(1024.0);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matches_pallas_hyper_layout() {
+        let hh = h();
+        let v = hh.to_hyper_vec();
+        assert_eq!(v.len(), 8);
+        assert_eq!(v[0], hh.lr);
+        assert_eq!(v[7], hh.inv_loss_scale);
+    }
+}

@@ -1,0 +1,169 @@
+//! Flat parameter groups: a stable (name -> offset) layout over which the
+//! ZeRO-1 shards and the tiled optimizer walk.
+//!
+//! TED keeps **two** groups per rank (the crux of section 4): the
+//! non-expert group (sharded over `G_dp^nonexp`) and the expert group
+//! (sharded over the `E x` smaller `G_dp^exp`) — see engine/params.rs for
+//! which parameter goes where.
+
+use std::collections::BTreeMap;
+
+use crate::util::tensor::Tensor;
+
+/// Ordered flat layout of named tensors.
+#[derive(Debug, Clone)]
+pub struct FlatGroup {
+    names: Vec<String>,
+    shapes: Vec<Vec<usize>>,
+    offsets: Vec<usize>,
+    total: usize,
+}
+
+impl FlatGroup {
+    /// Build from (name, shape) pairs; order is the flat order.
+    pub fn new(items: &[(String, Vec<usize>)]) -> Self {
+        let mut names = Vec::with_capacity(items.len());
+        let mut shapes = Vec::with_capacity(items.len());
+        let mut offsets = Vec::with_capacity(items.len());
+        let mut total = 0usize;
+        for (n, s) in items {
+            names.push(n.clone());
+            shapes.push(s.clone());
+            offsets.push(total);
+            total += s.iter().product::<usize>();
+        }
+        FlatGroup { names, shapes, offsets, total }
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn span(&self, i: usize) -> (usize, usize) {
+        let n: usize = self.shapes[i].iter().product();
+        (self.offsets[i], self.offsets[i] + n)
+    }
+
+    /// Gather the named tensors into one flat vector (param or grad side).
+    pub fn flatten(&self, store: &BTreeMap<String, Tensor>) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.total];
+        for i in 0..self.names.len() {
+            let t = store
+                .get(&self.names[i])
+                .unwrap_or_else(|| panic!("flatten: missing tensor '{}'", self.names[i]));
+            assert_eq!(t.shape(), self.shapes[i].as_slice(), "'{}' shape drift", self.names[i]);
+            let (lo, hi) = self.span(i);
+            out[lo..hi].copy_from_slice(t.data());
+        }
+        out
+    }
+
+    /// Scatter a flat vector back into the named tensors.
+    pub fn unflatten_into(&self, flat: &[f32], store: &mut BTreeMap<String, Tensor>) {
+        assert_eq!(flat.len(), self.total);
+        for i in 0..self.names.len() {
+            let (lo, hi) = self.span(i);
+            let t = store
+                .get_mut(&self.names[i])
+                .unwrap_or_else(|| panic!("unflatten: missing tensor '{}'", self.names[i]));
+            t.data_mut().copy_from_slice(&flat[lo..hi]);
+        }
+    }
+
+    /// Equal-split shard range for `pos` of `n` (last shard takes the tail).
+    pub fn shard_range(&self, pos: usize, n: usize) -> (usize, usize) {
+        assert!(pos < n);
+        let base = self.total / n;
+        let rem = self.total % n;
+        // first `rem` shards get one extra element
+        let lo = pos * base + pos.min(rem);
+        let len = base + usize::from(pos < rem);
+        (lo, lo + len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::props;
+    use crate::util::rng::Rng;
+
+    fn group() -> FlatGroup {
+        FlatGroup::new(&[
+            ("a".into(), vec![2, 3]),
+            ("b".into(), vec![4]),
+            ("c".into(), vec![1, 1, 5]),
+        ])
+    }
+
+    #[test]
+    fn spans_and_total() {
+        let g = group();
+        assert_eq!(g.total(), 15);
+        assert_eq!(g.span(0), (0, 6));
+        assert_eq!(g.span(1), (6, 10));
+        assert_eq!(g.span(2), (10, 15));
+    }
+
+    #[test]
+    fn flatten_unflatten_roundtrip() {
+        let g = group();
+        let mut store = BTreeMap::new();
+        store.insert("a".to_string(), Tensor::from_vec(&[2, 3], (0..6).map(|v| v as f32).collect()));
+        store.insert("b".to_string(), Tensor::from_vec(&[4], vec![9.0; 4]));
+        store.insert("c".to_string(), Tensor::from_vec(&[1, 1, 5], vec![-1.0; 5]));
+        let flat = g.flatten(&store);
+        assert_eq!(flat[0..6], [0., 1., 2., 3., 4., 5.]);
+        let mut store2 = store.clone();
+        for t in store2.values_mut() {
+            t.fill(0.0);
+        }
+        g.unflatten_into(&flat, &mut store2);
+        assert_eq!(store, store2);
+    }
+
+    #[test]
+    fn shards_cover_exactly() {
+        props::check(
+            3,
+            100,
+            |rng: &mut Rng| {
+                let total = 1 + rng.below(1000);
+                let n = 1 + rng.below(8);
+                (total, n)
+            },
+            |&(total, n)| {
+                let g = FlatGroup::new(&[("x".into(), vec![total])]);
+                let mut covered = 0usize;
+                let mut prev_hi = 0usize;
+                for pos in 0..n {
+                    let (lo, hi) = g.shard_range(pos, n);
+                    if lo != prev_hi {
+                        return Err(format!("gap at shard {pos}: {lo} != {prev_hi}"));
+                    }
+                    if hi < lo {
+                        return Err("negative shard".into());
+                    }
+                    covered += hi - lo;
+                    prev_hi = hi;
+                }
+                if prev_hi != total || covered != total {
+                    return Err(format!("coverage {covered}/{total}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

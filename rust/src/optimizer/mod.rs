@@ -1,0 +1,17 @@
+//! ZeRO-1 sharded, tiled AdamW — the paper's section-4 optimizer.
+//!
+//! * [`flat::FlatGroup`] — stable flat layout of a parameter group
+//!   (TED keeps two: non-expert sharded over G_dp^nonexp, expert sharded
+//!   over the E-times-smaller G_dp^exp).
+//! * [`adamw`] — the update math, hyper layout shared with the Pallas tile
+//!   kernel.
+//! * [`zero1::Zero1Optimizer`] — shard ownership, the tiled/untiled up-cast
+//!   buffer (the Fig. 4 memory spike), native and PJRT step paths.
+
+pub mod adamw;
+pub mod flat;
+pub mod zero1;
+
+pub use adamw::{adamw_update, AdamwStep};
+pub use flat::FlatGroup;
+pub use zero1::{TilingOpts, Zero1Optimizer};

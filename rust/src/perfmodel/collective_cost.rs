@@ -1,0 +1,122 @@
+//! α-β cost model for the collectives, with Summit/ThetaGPU's two-level
+//! (NVLink intra-node / InfiniBand inter-node) hierarchy.
+//!
+//! Standard ring/pairwise formulations (NCCL-style):
+//!   all-reduce:  t = 2(n-1)/n * bytes / bw + 2(n-1) α
+//!   all-gather:  t = (n-1)/n * total_bytes / bw + (n-1) α
+//!   all-to-all:  t = (n-1)/n * local_bytes / bw + (n-1) α
+//! where `bw` is the per-direction effective bandwidth of the *slowest*
+//! link the group crosses.
+
+use crate::config::ClusterConfig;
+
+/// Does a communicator group live entirely inside one node?
+pub fn group_intranode(members: &[usize], gpus_per_node: usize) -> bool {
+    let Some(first) = members.first() else { return true };
+    let node = first / gpus_per_node;
+    members.iter().all(|&m| m / gpus_per_node == node)
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct GroupShape {
+    pub size: usize,
+    pub intranode: bool,
+}
+
+impl GroupShape {
+    pub fn of(members: &[usize], cluster: &ClusterConfig) -> Self {
+        GroupShape {
+            size: members.len(),
+            intranode: group_intranode(members, cluster.gpus_per_node),
+        }
+    }
+}
+
+fn bw_alpha(cluster: &ClusterConfig, g: GroupShape) -> (f64, f64) {
+    (
+        cluster.effective_bw_bytes(g.size, g.intranode),
+        cluster.latency_s(g.size, g.intranode),
+    )
+}
+
+/// Ring all-reduce over `bytes` payload per rank.
+pub fn allreduce_s(cluster: &ClusterConfig, g: GroupShape, bytes: f64) -> f64 {
+    if g.size <= 1 {
+        return 0.0;
+    }
+    let (bw, alpha) = bw_alpha(cluster, g);
+    let n = g.size as f64;
+    2.0 * (n - 1.0) / n * bytes / bw + 2.0 * (n - 1.0) * alpha
+}
+
+/// All-gather where each rank contributes `bytes` (total moved: n*bytes).
+pub fn allgather_s(cluster: &ClusterConfig, g: GroupShape, bytes_per_rank: f64) -> f64 {
+    if g.size <= 1 {
+        return 0.0;
+    }
+    let (bw, alpha) = bw_alpha(cluster, g);
+    let n = g.size as f64;
+    (n - 1.0) * bytes_per_rank / bw + (n - 1.0) * alpha
+}
+
+/// All-to-all where each rank holds `local_bytes` total, (n-1)/n of which
+/// crosses the wire.
+pub fn alltoall_s(cluster: &ClusterConfig, g: GroupShape, local_bytes: f64) -> f64 {
+    if g.size <= 1 {
+        return 0.0;
+    }
+    let (bw, alpha) = bw_alpha(cluster, g);
+    let n = g.size as f64;
+    (n - 1.0) / n * local_bytes / bw + (n - 1.0) * alpha
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summit() -> ClusterConfig {
+        ClusterConfig::summit()
+    }
+
+    #[test]
+    fn intranode_detection() {
+        assert!(group_intranode(&[0, 1, 2], 6));
+        assert!(group_intranode(&[6, 7], 6));
+        assert!(!group_intranode(&[5, 6], 6));
+    }
+
+    #[test]
+    fn singleton_groups_cost_nothing() {
+        let c = summit();
+        let g = GroupShape { size: 1, intranode: true };
+        assert_eq!(allreduce_s(&c, g, 1e9), 0.0);
+        assert_eq!(alltoall_s(&c, g, 1e9), 0.0);
+    }
+
+    #[test]
+    fn allreduce_monotone_in_bytes_and_slower_across_nodes() {
+        let c = summit();
+        let intra = GroupShape { size: 4, intranode: true };
+        let inter = GroupShape { size: 4, intranode: false };
+        assert!(allreduce_s(&c, intra, 2e9) > allreduce_s(&c, intra, 1e9));
+        assert!(allreduce_s(&c, inter, 1e9) > allreduce_s(&c, intra, 1e9));
+    }
+
+    #[test]
+    fn large_message_approaches_bandwidth_bound() {
+        // 1 GB all-reduce over 6 intra-node GPUs on Summit: ~2*(5/6)*1e9/bw
+        let c = summit();
+        let g = GroupShape { size: 6, intranode: true };
+        let t = allreduce_s(&c, g, 1e9);
+        let bw = c.effective_bw_bytes(6, true);
+        let ideal = 2.0 * 5.0 / 6.0 * 1e9 / bw;
+        assert!((t / ideal - 1.0).abs() < 0.01, "{t} vs {ideal}");
+    }
+
+    #[test]
+    fn alltoall_cheaper_than_allreduce_same_bytes() {
+        let c = summit();
+        let g = GroupShape { size: 8, intranode: false };
+        assert!(alltoall_s(&c, g, 1e8) < allreduce_s(&c, g, 1e8));
+    }
+}

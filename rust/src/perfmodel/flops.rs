@@ -1,0 +1,83 @@
+//! Floating-point operation counts per training iteration.
+//!
+//! Narayanan et al.'s analytical formulation (the one the paper's section
+//! 6.2 uses to derive percent-of-peak):
+//!
+//!   F = 96 * B * s * l * h^2 * (1 + s/(6h) + V/(16*l*h))
+//!
+//! for forward + backward + the activation-checkpointing re-forward
+//! (96 = 24 coefficient x 4; without checkpointing the factor is 72 = 24x3).
+//! Top-1 MoE layers process each token through exactly one expert, so MoE
+//! adds **no** flops over the base model (the paper's central premise);
+//! the router's gate matmul is negligible (B*s*h*E).
+
+use crate::config::ModelConfig;
+
+/// Flops per iteration with activation checkpointing (the paper's setting).
+pub fn flops_per_iter_checkpointed(m: &ModelConfig, batch: usize) -> f64 {
+    flops_per_iter(m, batch, true)
+}
+
+pub fn flops_per_iter(m: &ModelConfig, batch: usize, checkpointing: bool) -> f64 {
+    let b = batch as f64;
+    let s = m.seq as f64;
+    let l = m.n_layers as f64;
+    let h = m.d_model as f64;
+    let v = m.vocab as f64;
+    let coef = if checkpointing { 96.0 } else { 72.0 };
+    coef * b * s * l * h * h * (1.0 + s / (6.0 * h) + v / (16.0 * l * h))
+}
+
+/// Percent of aggregate peak half-precision throughput achieved.
+pub fn percent_of_peak(
+    m: &ModelConfig,
+    batch: usize,
+    iter_time_s: f64,
+    gpus: usize,
+    peak_tflops_per_gpu: f64,
+) -> f64 {
+    let achieved = flops_per_iter_checkpointed(m, batch) / iter_time_s;
+    let peak = gpus as f64 * peak_tflops_per_gpu * 1e12;
+    100.0 * achieved / peak
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::table1_by_name;
+
+    #[test]
+    fn flops_scale_linearly_in_batch_and_layers() {
+        let m = table1_by_name("1.3B").unwrap();
+        let f1 = flops_per_iter_checkpointed(&m, 512);
+        let f2 = flops_per_iter_checkpointed(&m, 1024);
+        assert!((f2 / f1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn checkpointing_costs_a_third_more() {
+        let m = table1_by_name("2.7B").unwrap();
+        let with = flops_per_iter(&m, 512, true);
+        let without = flops_per_iter(&m, 512, false);
+        assert!((with / without - 4.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn magnitude_sane_for_6_7b() {
+        // ~8*N*T flops: 6.7e9 params * (1024*2048 = 2.1e6) tokens * 6 * 4/3
+        // ~ 1.1e17. Formula should land nearby.
+        let m = table1_by_name("6.7B").unwrap();
+        let f = flops_per_iter_checkpointed(&m, 1024);
+        assert!((5e16..5e17).contains(&f), "{f:e}");
+    }
+
+    #[test]
+    fn percent_of_peak_roundtrips() {
+        let m = table1_by_name("1.3B").unwrap();
+        let f = flops_per_iter_checkpointed(&m, 512);
+        // if the job runs exactly at 50% of peak on 32 GPUs @125 Tflops:
+        let t = f / (0.5 * 32.0 * 125e12);
+        let pct = percent_of_peak(&m, 512, t, 32, 125.0);
+        assert!((pct - 50.0).abs() < 1e-6);
+    }
+}

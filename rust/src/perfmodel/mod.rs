@@ -1,0 +1,15 @@
+//! Analytic performance model: α-β hierarchical collective costs, Narayanan
+//! flop counting, per-iteration batch-time decomposition, and the
+//! generators for every evaluation figure (Fig. 5, 8, 9, 10, 11, Tables 1
+//! and 2). Functional measurements from the simulated cluster calibrate
+//! the collective counts; the cluster configs carry the paper's quoted
+//! bandwidths (section 6).
+
+pub mod batch_time;
+pub mod collective_cost;
+pub mod figures;
+pub mod flops;
+
+pub use batch_time::{batch_time, BatchTime, CommOpts, Scenario};
+pub use collective_cost::{allgather_s, allreduce_s, alltoall_s, GroupShape};
+pub use flops::{flops_per_iter, flops_per_iter_checkpointed, percent_of_peak};

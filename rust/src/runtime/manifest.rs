@@ -1,0 +1,213 @@
+//! Artifact manifest loading: the shape contract between L2 (aot.py) and L3.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype '{other}' in manifest"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Shape+dtype of one executable input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Spec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl Spec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub file: PathBuf,
+    pub inputs: Vec<Spec>,
+    pub outputs: Vec<Spec>,
+}
+
+/// Static model dimensions the variant was exported with (mirrors
+/// `python/compile/model.py::ModelDims` + the export's EP assumption).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dims {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub tp: usize,
+    pub batch: usize,
+    pub capacity: usize,
+    pub export_ep: usize,
+}
+
+impl Dims {
+    pub fn d_tp(&self) -> usize {
+        self.d_model / self.tp
+    }
+
+    pub fn ff_tp(&self) -> usize {
+        self.d_ff / self.tp
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.batch * self.seq
+    }
+}
+
+/// A parsed `manifest.json` plus the directory its HLO files live in.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config_name: String,
+    pub dims: Dims,
+    pub tile_size: usize,
+    pub capacity_factor: f32,
+    pub entries: BTreeMap<String, Entry>,
+    pub dir: PathBuf,
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    j.expect(key)?
+        .as_usize()
+        .with_context(|| format!("manifest key '{key}' is not a usize"))
+}
+
+fn parse_spec(j: &Json) -> Result<Spec> {
+    let shape = j
+        .expect("shape")?
+        .as_array()
+        .context("spec 'shape' not an array")?
+        .iter()
+        .map(|d| d.as_usize().context("non-integer dim"))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = DType::parse(j.expect("dtype")?.as_str().context("dtype not a string")?)?;
+    Ok(Spec { shape, dtype })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", mpath.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", mpath.display()))?;
+
+        let version = get_usize(&j, "format_version")?;
+        if version != 1 {
+            bail!("unsupported manifest format_version {version}");
+        }
+        let d = j.expect("dims")?;
+        let dims = Dims {
+            d_model: get_usize(d, "d_model")?,
+            n_heads: get_usize(d, "n_heads")?,
+            d_ff: get_usize(d, "d_ff")?,
+            vocab: get_usize(d, "vocab")?,
+            seq: get_usize(d, "seq")?,
+            n_layers: get_usize(d, "n_layers")?,
+            n_experts: get_usize(d, "n_experts")?,
+            tp: get_usize(d, "tp")?,
+            batch: get_usize(d, "batch")?,
+            capacity: get_usize(d, "capacity")?,
+            export_ep: get_usize(d, "export_ep")?,
+        };
+
+        let mut entries = BTreeMap::new();
+        for (name, e) in j.expect("entries")?.as_object().context("entries not an object")? {
+            let file = dir.join(e.expect("file")?.as_str().context("file not a string")?);
+            let inputs = e
+                .expect("inputs")?
+                .as_array()
+                .context("inputs not an array")?
+                .iter()
+                .map(parse_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .expect("outputs")?
+                .as_array()
+                .context("outputs not an array")?
+                .iter()
+                .map(parse_spec)
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(name.clone(), Entry { file, inputs, outputs });
+        }
+
+        Ok(Manifest {
+            config_name: j
+                .expect("config_name")?
+                .as_str()
+                .context("config_name not a string")?
+                .to_string(),
+            dims,
+            tile_size: get_usize(&j, "tile_size")?,
+            capacity_factor: j
+                .expect("capacity_factor")?
+                .as_f64()
+                .context("capacity_factor not a number")? as f32,
+            entries,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("entry '{name}' not in manifest {}", self.dir.display()))
+    }
+
+    /// Standard artifact directory for a (config, tp, batch) variant.
+    pub fn variant_dir(artifacts_root: &Path, config: &str, tp: usize, batch: usize) -> PathBuf {
+        artifacts_root.join(format!("{config}_tp{tp}_b{batch}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        let dir = Manifest::variant_dir(&artifacts_root(), "tiny", 2, 2);
+        if !dir.exists() {
+            eprintln!("skipping: {} missing (run `make artifacts`)", dir.display());
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config_name, "tiny");
+        assert_eq!(m.dims.tp, 2);
+        assert_eq!(m.dims.d_model, 64);
+        let attn = m.entry("attn_fwd").unwrap();
+        assert!(attn.file.exists());
+        // qkv shard shape [D, 3*D/tp]
+        assert_eq!(attn.inputs[2].shape, vec![64, 96]);
+        assert_eq!(attn.outputs.len(), 1);
+        assert!(m.entry("nope").is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by `make artifacts`
+//! and executes them from the coordinator hot path.
+//!
+//! Layering (see DESIGN.md): python/jax/Pallas exist only at build time; at
+//! run time this module is the *only* place that touches the `xla` crate
+//! (`PjRtClient::cpu()` -> `HloModuleProto::from_text_file` -> `compile`
+//! -> `execute`).
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{load_manifest, Runtime, Value};
+pub use manifest::{DType, Dims, Entry, Manifest, Spec};

@@ -1,0 +1,195 @@
+//! The simulated cluster: runs `G` TED ranks as threads against a shared
+//! [`Rendezvous`], standing in for the paper's multi-GPU job (see DESIGN.md
+//! section 2 for why this substitution preserves the algorithm).
+//!
+//! Every rank builds its own [`Trainer`] (own PJRT client + compiled
+//! executables), generates its own deterministic data shard, and the whole
+//! job runs lock-step through the collectives — real data movement, real
+//! byte counts, bit-reproducible results.
+
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::collectives::{CommKind, Rendezvous};
+use crate::config::{EngineOptions, TrainingConfig};
+use crate::data::DataGen;
+use crate::engine::{StepStats, Trainer};
+use crate::runtime::Manifest;
+use crate::topology::Topology;
+
+/// Result of a simulated training run.
+#[derive(Debug, Clone)]
+pub struct TrainLog {
+    /// per-step stats (identical on every rank; rank 0's copy)
+    pub steps: Vec<StepStats>,
+    /// (step, validation loss) pairs if eval_every was set
+    pub evals: Vec<(usize, f32)>,
+    /// total wall-clock seconds
+    pub wall_s: f64,
+    /// total payload bytes per collective kind across all ranks
+    pub comm_bytes: [(CommKind, u64); 6],
+    pub comm_calls: [(CommKind, u64); 6],
+    /// peak activation-stash bytes over ranks (CAC memory cost)
+    pub peak_stash_bytes: usize,
+    /// peak optimizer up-cast temp bytes over ranks (Fig. 4 spike)
+    pub peak_opt_temp_bytes: usize,
+}
+
+/// Options for one simulated run.
+#[derive(Clone)]
+pub struct RunConfig {
+    pub steps: usize,
+    pub micro_per_step: usize,
+    /// evaluate validation loss every N steps (0 = never)
+    pub eval_every: usize,
+    /// microbatches used for each eval
+    pub eval_micro: usize,
+    /// print progress lines from rank 0
+    pub verbose: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig { steps: 10, micro_per_step: 1, eval_every: 0, eval_micro: 2, verbose: false }
+    }
+}
+
+/// Run TED training on the simulated cluster. `data` provides deterministic
+/// per-(step, micro, dp_idx) batches; TP peers automatically see identical
+/// tokens because they share the dp index.
+pub fn train(
+    topo: &Topology,
+    manifest: &Manifest,
+    opts: EngineOptions,
+    tcfg: TrainingConfig,
+    run: RunConfig,
+    data: &dyn DataGen,
+) -> Result<TrainLog> {
+    let world = topo.world();
+    let rez = Rendezvous::new(world);
+    let t0 = Instant::now();
+
+    let results: Vec<Result<RankOutput>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..world)
+            .map(|rank| {
+                let rez = Arc::clone(&rez);
+                let topo = topo.clone();
+                let manifest = manifest.clone();
+                let opts = opts;
+                let tcfg = tcfg.clone();
+                let run = run.clone();
+                scope.spawn(move || rank_main(rez, &topo, rank, manifest, opts, tcfg, run, data))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().map_err(|e| anyhow!("rank panicked: {e:?}"))?)
+            .collect()
+    });
+
+    let mut rank0 = None;
+    let mut peak_stash = 0usize;
+    let mut peak_opt = 0usize;
+    for (rank, r) in results.into_iter().enumerate() {
+        let out = r.map_err(|e| anyhow!("rank {rank} failed: {e:#}"))?;
+        peak_stash = peak_stash.max(out.peak_stash_bytes);
+        peak_opt = peak_opt.max(out.peak_opt_temp_bytes);
+        if rank == 0 {
+            rank0 = Some(out);
+        }
+    }
+    let out = rank0.expect("world >= 1");
+
+    let mut comm_bytes = [(CommKind::AllReduce, 0u64); 6];
+    let mut comm_calls = [(CommKind::AllReduce, 0u64); 6];
+    for (i, kind) in crate::collectives::accounting::ALL_KINDS.iter().enumerate() {
+        let t = rez.stats.total(*kind);
+        comm_bytes[i] = (*kind, t.bytes);
+        comm_calls[i] = (*kind, t.calls);
+    }
+
+    Ok(TrainLog {
+        steps: out.steps,
+        evals: out.evals,
+        wall_s: t0.elapsed().as_secs_f64(),
+        comm_bytes,
+        comm_calls,
+        peak_stash_bytes: peak_stash,
+        peak_opt_temp_bytes: peak_opt,
+    })
+}
+
+struct RankOutput {
+    steps: Vec<StepStats>,
+    evals: Vec<(usize, f32)>,
+    peak_stash_bytes: usize,
+    peak_opt_temp_bytes: usize,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn rank_main(
+    rez: Arc<Rendezvous>,
+    topo: &Topology,
+    rank: usize,
+    manifest: Manifest,
+    opts: EngineOptions,
+    tcfg: TrainingConfig,
+    run: RunConfig,
+    data: &dyn DataGen,
+) -> Result<RankOutput> {
+    let mut trainer = Trainer::new(rez, topo, rank, manifest, opts, tcfg)?;
+    let dims = trainer.manifest.dims;
+    let dp_idx = trainer.groups.coords.dp_nonexp_idx;
+    let mut steps = Vec::with_capacity(run.steps);
+    let mut evals = Vec::new();
+
+    for step in 0..run.steps {
+        let micro: Vec<_> = (0..run.micro_per_step)
+            .map(|m| data.batch(step, m, dp_idx, dims.batch, dims.seq))
+            .collect();
+        let stats = trainer.train_step(&micro)?;
+        if run.verbose && rank == 0 {
+            println!(
+                "step {:>4}  loss {:.4}  aux {:.4}  gnorm {:.3}  lr {:.2e}{}",
+                step,
+                stats.loss,
+                stats.aux_loss,
+                stats.grad_norm,
+                stats.lr,
+                if stats.skipped { "  SKIPPED" } else { "" }
+            );
+        }
+        steps.push(stats);
+
+        if run.eval_every > 0 && (step + 1) % run.eval_every == 0 {
+            let mut sum = 0.0;
+            for m in 0..run.eval_micro {
+                // eval stream: offset the step key so it never overlaps train
+                let (ids, tg) = data.batch(1_000_000 + m, 0, dp_idx, dims.batch, dims.seq);
+                sum += trainer.eval_loss(&ids, &tg)?;
+            }
+            let local = sum / run.eval_micro as f32;
+            // average over the non-expert DP group for a global number
+            let mut t = crate::util::tensor::Tensor::from_vec(&[1], vec![local]);
+            trainer.comm.all_reduce(
+                trainer.groups.dp_nonexp_group_id,
+                &trainer.groups.dp_nonexp_group,
+                &mut t,
+            );
+            let v = t.data()[0] / trainer.groups.dp_nonexp_group.len() as f32;
+            if run.verbose && rank == 0 {
+                println!("  eval @ step {:>4}: val loss {v:.4}", step + 1);
+            }
+            evals.push((step + 1, v));
+        }
+    }
+
+    let (a, b) = trainer.optimizer_peak_temp_bytes();
+    Ok(RankOutput {
+        steps,
+        evals,
+        peak_stash_bytes: trainer.peak_stash_bytes,
+        peak_opt_temp_bytes: a.max(b),
+    })
+}

@@ -1,0 +1,278 @@
+//! Process topology: maps each rank to its TED coordinates and communicator
+//! groups, exactly as the paper's Figures 2-3.
+//!
+//! Rank layout (row-major over [dp_nonexp, tp]):
+//!     tp_idx        = rank % tp
+//!     dp_nonexp_idx = rank / tp
+//! so a TP group is `tp` *consecutive* ranks — the placement that keeps
+//! tensor parallelism inside a node, which section 7.2 requires (tp <=
+//! gpus/node). The non-expert DP group for a tp coordinate is the column of
+//! ranks with that coordinate.
+//!
+//! For expert blocks the non-expert DP dimension is decomposed 2-D:
+//!     ep_idx     = dp_nonexp_idx % ep      (expert parallel, inner => the
+//!                                           A2A spans nearby nodes)
+//!     dp_exp_idx = dp_nonexp_idx / ep      (expert data parallel, outer)
+//!
+//! Worked example — Fig. 3 (G=4, tp=2, ep=2):
+//!     rank 0 -> tp 0, dp 0, ep 0 ; rank 1 -> tp 1, dp 0, ep 0
+//!     rank 2 -> tp 0, dp 1, ep 1 ; rank 3 -> tp 1, dp 1, ep 1
+//!     TP groups {0,1} {2,3}; EP groups {0,2} {1,3}; dp_exp singletons.
+
+use crate::config::ParallelConfig;
+use anyhow::Result;
+
+/// Logical coordinates of one rank in both virtual topologies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankCoords {
+    pub rank: usize,
+    pub tp_idx: usize,
+    pub dp_nonexp_idx: usize,
+    pub ep_idx: usize,
+    pub dp_exp_idx: usize,
+}
+
+/// One rank's communicator view: the member lists (sorted, including self)
+/// of each group it belongs to, plus stable group ids for the rendezvous.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankGroups {
+    pub coords: RankCoords,
+    pub tp_group: Vec<usize>,
+    pub dp_nonexp_group: Vec<usize>,
+    pub ep_group: Vec<usize>,
+    pub dp_exp_group: Vec<usize>,
+    pub tp_group_id: GroupId,
+    pub dp_nonexp_group_id: GroupId,
+    pub ep_group_id: GroupId,
+    pub dp_exp_group_id: GroupId,
+    pub world_group_id: GroupId,
+}
+
+/// Stable, collision-free communicator id: (kind, index-within-kind).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GroupId {
+    pub kind: GroupKind,
+    pub index: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum GroupKind {
+    Tensor,
+    DataNonExpert,
+    Expert,
+    DataExpert,
+    World,
+}
+
+/// The full topology for a job; cheap to construct, shared read-only.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub cfg: ParallelConfig,
+}
+
+impl Topology {
+    pub fn new(cfg: ParallelConfig) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Topology { cfg })
+    }
+
+    pub fn world(&self) -> usize {
+        self.cfg.world
+    }
+
+    pub fn coords(&self, rank: usize) -> RankCoords {
+        assert!(rank < self.cfg.world, "rank {rank} out of range");
+        let tp_idx = rank % self.cfg.tp;
+        let dp_nonexp_idx = rank / self.cfg.tp;
+        RankCoords {
+            rank,
+            tp_idx,
+            dp_nonexp_idx,
+            ep_idx: dp_nonexp_idx % self.cfg.ep,
+            dp_exp_idx: dp_nonexp_idx / self.cfg.ep,
+        }
+    }
+
+    pub fn rank_of(&self, tp_idx: usize, dp_nonexp_idx: usize) -> usize {
+        dp_nonexp_idx * self.cfg.tp + tp_idx
+    }
+
+    /// All groups for `rank`. Group member lists are sorted ascending; the
+    /// rank's position in the list is its index within the communicator.
+    pub fn groups(&self, rank: usize) -> RankGroups {
+        let c = self.coords(rank);
+        let tp_group: Vec<usize> = (0..self.cfg.tp).map(|t| self.rank_of(t, c.dp_nonexp_idx)).collect();
+        let dp_nonexp_group: Vec<usize> =
+            (0..self.cfg.dp_nonexp).map(|d| self.rank_of(c.tp_idx, d)).collect();
+        let ep_group: Vec<usize> = (0..self.cfg.ep)
+            .map(|e| self.rank_of(c.tp_idx, c.dp_exp_idx * self.cfg.ep + e))
+            .collect();
+        let dp_exp_group: Vec<usize> = (0..self.cfg.dp_exp)
+            .map(|d| self.rank_of(c.tp_idx, d * self.cfg.ep + c.ep_idx))
+            .collect();
+
+        RankGroups {
+            coords: c,
+            tp_group_id: GroupId { kind: GroupKind::Tensor, index: c.dp_nonexp_idx },
+            dp_nonexp_group_id: GroupId { kind: GroupKind::DataNonExpert, index: c.tp_idx },
+            ep_group_id: GroupId {
+                kind: GroupKind::Expert,
+                index: c.tp_idx * self.cfg.dp_exp + c.dp_exp_idx,
+            },
+            dp_exp_group_id: GroupId {
+                kind: GroupKind::DataExpert,
+                index: c.tp_idx * self.cfg.ep + c.ep_idx,
+            },
+            world_group_id: GroupId { kind: GroupKind::World, index: 0 },
+            tp_group,
+            dp_nonexp_group,
+            ep_group,
+            dp_exp_group,
+        }
+    }
+
+    /// Global expert ids hosted by `rank` for a model with `n_experts`.
+    /// Expert e lives on the EP rank with ep_idx == e / local_experts.
+    pub fn local_expert_ids(&self, rank: usize, n_experts: usize) -> Vec<usize> {
+        let local = n_experts / self.cfg.ep;
+        let c = self.coords(rank);
+        (0..local).map(|i| c.ep_idx * local + i).collect()
+    }
+
+    /// Which ep_idx hosts global expert `e`.
+    pub fn ep_index_of_expert(&self, e: usize, n_experts: usize) -> usize {
+        let local = n_experts / self.cfg.ep;
+        e / local
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::props;
+    use crate::util::rng::Rng;
+
+    fn topo(world: usize, tp: usize, ep: usize) -> Topology {
+        Topology::new(ParallelConfig::derive(world, tp, ep).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn fig3_groups() {
+        let t = topo(4, 2, 2);
+        let g0 = t.groups(0);
+        assert_eq!(g0.tp_group, vec![0, 1]);
+        assert_eq!(g0.dp_nonexp_group, vec![0, 2]);
+        assert_eq!(g0.ep_group, vec![0, 2]);
+        assert_eq!(g0.dp_exp_group, vec![0]);
+        let g3 = t.groups(3);
+        assert_eq!(g3.tp_group, vec![2, 3]);
+        assert_eq!(g3.ep_group, vec![1, 3]);
+    }
+
+    #[test]
+    fn groups_contain_self_and_are_sorted() {
+        let t = topo(16, 2, 4);
+        for r in 0..16 {
+            let g = t.groups(r);
+            for list in [&g.tp_group, &g.dp_nonexp_group, &g.ep_group, &g.dp_exp_group] {
+                assert!(list.contains(&r), "rank {r} missing from {list:?}");
+                let mut sorted = list.clone();
+                sorted.sort_unstable();
+                assert_eq!(&sorted, list);
+            }
+        }
+    }
+
+    #[test]
+    fn groups_partition_world() {
+        // Every group kind partitions the world: each rank appears in
+        // exactly one group of that kind, and same-id groups agree.
+        let t = topo(24, 2, 3);
+        for kind_sel in 0..4 {
+            let mut seen = vec![0usize; 24];
+            let mut by_id: std::collections::HashMap<GroupId, Vec<usize>> = Default::default();
+            for r in 0..24 {
+                let g = t.groups(r);
+                let (id, list) = match kind_sel {
+                    0 => (g.tp_group_id, g.tp_group.clone()),
+                    1 => (g.dp_nonexp_group_id, g.dp_nonexp_group.clone()),
+                    2 => (g.ep_group_id, g.ep_group.clone()),
+                    _ => (g.dp_exp_group_id, g.dp_exp_group.clone()),
+                };
+                for &m in &list {
+                    if m == r {
+                        seen[r] += 1;
+                    }
+                }
+                let entry = by_id.entry(id).or_insert_with(|| list.clone());
+                assert_eq!(entry, &list, "group id {id:?} inconsistent");
+            }
+            assert!(seen.iter().all(|&c| c == 1), "kind {kind_sel}: {seen:?}");
+        }
+    }
+
+    #[test]
+    fn ep_groups_span_dp_dimension() {
+        // EP group members share tp_idx and dp_exp_idx, differ in ep_idx.
+        let t = topo(16, 2, 4);
+        for r in 0..16 {
+            let g = t.groups(r);
+            for &m in &g.ep_group {
+                let cm = t.coords(m);
+                assert_eq!(cm.tp_idx, g.coords.tp_idx);
+                assert_eq!(cm.dp_exp_idx, g.coords.dp_exp_idx);
+            }
+            let eps: Vec<usize> = g.ep_group.iter().map(|&m| t.coords(m).ep_idx).collect();
+            assert_eq!(eps, (0..4).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn expert_placement_round_trips() {
+        let t = topo(8, 2, 4);
+        let n_experts = 8; // 2 local experts per EP rank
+        for r in 0..8 {
+            for e in t.local_expert_ids(r, n_experts) {
+                assert_eq!(t.ep_index_of_expert(e, n_experts), t.coords(r).ep_idx);
+            }
+        }
+    }
+
+    #[test]
+    fn property_random_topologies_consistent() {
+        props::check(
+            5,
+            100,
+            |rng: &mut Rng| {
+                let tp = 1 << rng.below(3);
+                let ep = 1 << rng.below(3);
+                let dp_exp = 1 + rng.below(4);
+                (tp, ep, dp_exp)
+            },
+            |&(tp, ep, dp_exp)| {
+                let world = tp * ep * dp_exp;
+                let t = Topology::new(ParallelConfig::derive(world, tp, ep).unwrap()).unwrap();
+                for r in 0..world {
+                    let g = t.groups(r);
+                    // coords round-trip
+                    if t.rank_of(g.coords.tp_idx, g.coords.dp_nonexp_idx) != r {
+                        return Err(format!("rank_of mismatch at {r}"));
+                    }
+                    // ep x dp_exp recomposes dp_nonexp
+                    if g.coords.dp_exp_idx * ep + g.coords.ep_idx != g.coords.dp_nonexp_idx {
+                        return Err(format!("dp decomposition broken at {r}"));
+                    }
+                    // group sizes
+                    if g.tp_group.len() != tp
+                        || g.ep_group.len() != ep
+                        || g.dp_exp_group.len() != dp_exp
+                        || g.dp_nonexp_group.len() != ep * dp_exp
+                    {
+                        return Err(format!("bad group size at {r}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,170 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the vendored crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text from registered options. Used by `src/main.rs` and
+//! every example binary.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct ArgError(pub String);
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "argument error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+impl Args {
+    /// Parse `std::env::args().skip(1)`-style iterator. `flag_names` lists
+    /// options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, flag_names: &[&str]) -> Result<Args, ArgError> {
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest positional
+                    positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    flags.push(body.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        return Err(ArgError(format!("option --{body} expects a value")));
+                    }
+                    options.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    return Err(ArgError(format!("option --{body} expects a value")));
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Ok(Args { options, flags, positional })
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Result<Args, ArgError> {
+        Self::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError(format!("--{name}: '{v}' is not a non-negative integer"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ArgError(format!("--{name}: '{v}' is not a u64"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ArgError(format!("--{name}: '{v}' is not a number"))),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Unknown-option guard: error if any parsed option is not in `known`.
+    pub fn reject_unknown(&self, known: &[&str]) -> Result<(), ArgError> {
+        for k in self.options.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(ArgError(format!("unknown option --{k}")));
+            }
+        }
+        for f in &self.flags {
+            if !known.contains(&f.as_str()) {
+                return Err(ArgError(format!("unknown flag --{f}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], flags: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let a = parse(&["--tp", "2", "--verbose", "--steps=100", "cmd"], &["verbose"]);
+        assert_eq!(a.get("tp"), Some("2"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["cmd".to_string()]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(["--tp".to_string()], &[]).is_err());
+        assert!(Args::parse(["--tp".to_string(), "--x".to_string()], &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[], &[]);
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.get_or("mode", "fast"), "fast");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse(&["--n", "abc"], &[]);
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_rejection() {
+        let a = parse(&["--typo", "1"], &[]);
+        assert!(a.reject_unknown(&["tp"]).is_err());
+        let b = parse(&["--tp", "1"], &[]);
+        assert!(b.reject_unknown(&["tp"]).is_ok());
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["--tp", "1", "--", "--not-an-option"], &[]);
+        assert_eq!(a.positional(), &["--not-an-option".to_string()]);
+    }
+}

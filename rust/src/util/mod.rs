@@ -1,0 +1,16 @@
+//! Shared substrate utilities: JSON parsing, deterministic RNG, host
+//! tensors, CLI parsing, and a small property-testing driver.
+//!
+//! These exist because the build is fully offline against a minimal vendored
+//! crate set (no serde / rand / clap / proptest); each module implements the
+//! small slice of those crates this project needs.
+
+pub mod cli;
+pub mod json;
+pub mod props;
+pub mod rng;
+pub mod tensor;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use tensor::{IntTensor, Tensor};

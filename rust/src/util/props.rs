@@ -1,0 +1,83 @@
+//! Tiny property-based testing driver (`proptest` is not in the vendored
+//! crate set, so we roll the 5% of it we need).
+//!
+//! `props::check(seed, cases, gen, prop)` draws `cases` random inputs from
+//! `gen` and asserts `prop` on each; on failure it re-raises with the case
+//! index and a debug dump of the failing input so it can be replayed by
+//! seeding `check` with the reported per-case seed.
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` inputs drawn by `gen`. Panics with replay info.
+pub fn check<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{cases} (replay seed {case_seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert two f32 slices are close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let diff = (x - y).abs();
+        let tol = atol + 1e-4 * y.abs();
+        if !(diff <= tol) {
+            return Err(format!("{what}: elem {i}: {x} vs {y} (|diff|={diff} > {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(
+            1,
+            50,
+            |rng| rng.below(100),
+            |&n| {
+                if n < 100 {
+                    Ok(())
+                } else {
+                    Err(format!("{n} out of range"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        check(2, 50, |rng| rng.below(10), |&n| {
+            if n < 5 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn close_check() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.00001], 1e-3, "x").is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3, "x").is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3, "x").is_err());
+    }
+}

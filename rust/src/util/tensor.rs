@@ -1,0 +1,277 @@
+//! Host-side dense tensors (f32 / i32) exchanged with the PJRT runtime.
+//!
+//! Deliberately simple: contiguous row-major storage, shape vector, and the
+//! handful of operations the coordinator hot path needs (row gather/scatter
+//! for MoE dispatch, axpy-style accumulation for gradient reduction). All
+//! heavy math lives in the AOT-compiled HLO; anything here is O(bytes).
+
+use std::fmt;
+
+/// Contiguous row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} vs data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshaped(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn scalar_value(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "scalar_value on non-scalar {:?}", self.shape);
+        self.data[0]
+    }
+
+    /// Leading-dim row count (1 for scalars).
+    pub fn rows(&self) -> usize {
+        self.shape.first().copied().unwrap_or(1)
+    }
+
+    /// Elements per leading-dim row.
+    pub fn row_len(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.data.len() / self.shape[0]
+        }
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.row_len();
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let w = self.row_len();
+        &mut self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn copy_row_from(&mut self, i: usize, src: &[f32]) {
+        let w = self.row_len();
+        debug_assert_eq!(src.len(), w);
+        self.data[i * w..(i + 1) * w].copy_from_slice(src);
+    }
+
+    /// self += other (shape-checked).
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "add_assign shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// self += alpha * other.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "axpy shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    /// Max |x| — used for overflow / divergence checks.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+
+    /// Slice rows [start, start+len) of the leading dim into a new tensor.
+    pub fn slice_rows(&self, start: usize, len: usize) -> Tensor {
+        let w = self.row_len();
+        let mut shape = self.shape.clone();
+        assert!(!shape.is_empty() && start + len <= shape[0]);
+        shape[0] = len;
+        Tensor::from_vec(&shape, self.data[start * w..(start + len) * w].to_vec())
+    }
+
+    /// Concatenate along the leading dim.
+    pub fn concat_rows(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let w = parts[0].row_len();
+        let mut shape = parts[0].shape.clone();
+        let mut rows = 0;
+        let mut data = Vec::new();
+        for p in parts {
+            assert_eq!(p.row_len(), w, "concat_rows row width mismatch");
+            rows += p.rows();
+            data.extend_from_slice(&p.data);
+        }
+        shape[0] = rows;
+        Tensor::from_vec(&shape, data)
+    }
+
+    /// Column slice of a 2-D tensor: keep columns [c0, c0+w).
+    pub fn slice_cols_2d(&self, c0: usize, w: usize) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        assert!(c0 + w <= c);
+        let mut data = Vec::with_capacity(r * w);
+        for i in 0..r {
+            data.extend_from_slice(&self.data[i * c + c0..i * c + c0 + w]);
+        }
+        Tensor::from_vec(&[r, w], data)
+    }
+}
+
+/// Contiguous row-major i32 tensor (token ids / targets).
+#[derive(Clone, PartialEq)]
+pub struct IntTensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl fmt::Debug for IntTensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "IntTensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl IntTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        IntTensor { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        IntTensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_and_slices() {
+        let t = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.row(1), &[3., 4.]);
+        let s = t.slice_rows(1, 2);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn concat_roundtrip() {
+        let a = Tensor::from_vec(&[1, 2], vec![1., 2.]);
+        let b = Tensor::from_vec(&[2, 2], vec![3., 4., 5., 6.]);
+        let c = Tensor::concat_rows(&[&a, &b]);
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.slice_rows(0, 1).data(), a.data());
+        assert_eq!(c.slice_rows(1, 2).data(), b.data());
+    }
+
+    #[test]
+    fn col_slice() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let c = t.slice_cols_2d(1, 2);
+        assert_eq!(c.shape(), &[2, 2]);
+        assert_eq!(c.data(), &[2., 3., 5., 6.]);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::from_vec(&[2], vec![1., 2.]);
+        let b = Tensor::from_vec(&[2], vec![10., 20.]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[6., 12.]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[12., 24.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn add_assign_shape_mismatch_panics() {
+        let mut a = Tensor::zeros(&[2, 2]);
+        let b = Tensor::zeros(&[4]);
+        a.add_assign(&b);
+    }
+
+    #[test]
+    fn finite_and_absmax() {
+        let t = Tensor::from_vec(&[3], vec![-5., 2., 3.]);
+        assert_eq!(t.abs_max(), 5.0);
+        assert!(t.is_finite());
+        let bad = Tensor::from_vec(&[1], vec![f32::NAN]);
+        assert!(!bad.is_finite());
+    }
+}

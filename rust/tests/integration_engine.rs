@@ -1,0 +1,223 @@
+//! End-to-end engine integration tests on the simulated cluster.
+//!
+//! The crown jewel is the **topology-parity** family (paper Fig. 7): the
+//! same model trained under different TED decompositions (tp=1 baseline =
+//! DeepSpeed-MoE, vs tp=2 = full TED, DTD/CAC on/off) must produce the same
+//! loss trajectory, because the parallelization is mathematically a
+//! no-op. That single property exercises every moving part: Megatron
+//! sharding, the f/g all-reduces, routing determinism, dispatch/DTD
+//! round-trips, CAC stash correctness, the two-group ZeRO-1 optimizer and
+//! its all-gathers.
+//!
+//! Requires `make artifacts` (tiny/mini variants). Tests skip gracefully if
+//! artifacts are missing.
+
+use std::path::PathBuf;
+
+use ted::config::{EngineOptions, ParallelConfig, TrainingConfig};
+use ted::data::{DataGen, SyntheticLM};
+use ted::runtime::Manifest;
+use ted::sim::{train, RunConfig, TrainLog};
+use ted::topology::Topology;
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn load(config: &str, tp: usize, batch: usize) -> Option<Manifest> {
+    let dir = Manifest::variant_dir(&artifacts_root(), config, tp, batch);
+    if dir.exists() {
+        Some(Manifest::load(&dir).unwrap())
+    } else {
+        eprintln!("SKIP: {} missing (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+fn tcfg() -> TrainingConfig {
+    TrainingConfig {
+        lr: 1e-3,
+        warmup_steps: 2,
+        seed: 2024,
+        grad_clip: 1.0,
+        ..Default::default()
+    }
+}
+
+fn run_tiny(world: usize, tp: usize, ep: usize, opts: EngineOptions, steps: usize) -> Option<TrainLog> {
+    let manifest = load("tiny", tp, 2)?;
+    let topo = Topology::new(ParallelConfig::derive(world, tp, ep).unwrap()).unwrap();
+    let data = SyntheticLM::new(manifest.dims.vocab, 7);
+    let run = RunConfig { steps, micro_per_step: 2, eval_every: 0, ..Default::default() };
+    Some(train(&topo, &manifest, opts, tcfg(), run, &data).unwrap())
+}
+
+fn losses(log: &TrainLog) -> Vec<f32> {
+    log.steps.iter().map(|s| s.loss).collect()
+}
+
+fn assert_close_traj(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + y.abs()),
+            "{what}: step {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn single_topology_trains_and_loss_decreases() {
+    let Some(log) = run_tiny(2, 1, 2, EngineOptions::default(), 12) else { return };
+    let l = losses(&log);
+    assert!(l.iter().all(|v| v.is_finite()), "{l:?}");
+    let first = l[..3].iter().sum::<f32>() / 3.0;
+    let last = l[l.len() - 3..].iter().sum::<f32>() / 3.0;
+    assert!(
+        last < first - 0.05,
+        "loss did not decrease: first {first:.4} last {last:.4} ({l:?})"
+    );
+    assert!(!log.steps.iter().any(|s| s.skipped));
+}
+
+#[test]
+fn parity_tp2_matches_tp1_baseline() {
+    // DeepSpeed-MoE baseline: G=2, tp=1, ep=2 (dp_nonexp=2)
+    // Full TED:               G=4, tp=2, ep=2 (dp_nonexp=2)
+    // Identical global batch, identical model, identical data.
+    let Some(base) = run_tiny(2, 1, 2, EngineOptions::default(), 8) else { return };
+    let Some(ted) = run_tiny(4, 2, 2, EngineOptions::default(), 8) else { return };
+    assert_close_traj(&losses(&base), &losses(&ted), 2e-3, "tp1 vs tp2 loss");
+    // gradient norms should agree too (stronger: exercises the norm dedup)
+    let gn_a: Vec<f32> = base.steps.iter().map(|s| s.grad_norm).collect();
+    let gn_b: Vec<f32> = ted.steps.iter().map(|s| s.grad_norm).collect();
+    assert_close_traj(&gn_a, &gn_b, 5e-3, "tp1 vs tp2 grad norm");
+}
+
+#[test]
+fn parity_dtd_on_off() {
+    let on = EngineOptions::default();
+    let off = EngineOptions { dtd: false, ..EngineOptions::default() };
+    let Some(a) = run_tiny(4, 2, 2, on, 6) else { return };
+    let Some(b) = run_tiny(4, 2, 2, off, 6) else { return };
+    // DTD is a pure communication-schedule change: bit-identical results
+    assert_close_traj(&losses(&a), &losses(&b), 1e-6, "dtd on vs off");
+}
+
+#[test]
+fn parity_cac_on_off() {
+    let on = EngineOptions::default();
+    let off = EngineOptions { cac: false, ..EngineOptions::default() };
+    let Some(a) = run_tiny(4, 2, 2, on, 6) else { return };
+    let Some(b) = run_tiny(4, 2, 2, off, 6) else { return };
+    assert_close_traj(&losses(&a), &losses(&b), 1e-6, "cac on vs off");
+}
+
+#[test]
+fn dtd_halves_a2a_bytes_at_tp2() {
+    use ted::collectives::CommKind;
+    let on = EngineOptions { cac: true, dtd: true, ..Default::default() };
+    let off = EngineOptions { cac: true, dtd: false, ..Default::default() };
+    let Some(a) = run_tiny(4, 2, 2, on, 3) else { return };
+    let Some(b) = run_tiny(4, 2, 2, off, 3) else { return };
+    let a2a = |log: &TrainLog| {
+        log.comm_bytes
+            .iter()
+            .find(|(k, _)| *k == CommKind::AllToAll)
+            .unwrap()
+            .1
+    };
+    let (with, without) = (a2a(&a), a2a(&b));
+    assert_eq!(
+        with * 2,
+        without,
+        "DTD at tp=2 must halve A2A payload: {with} vs {without}"
+    );
+}
+
+#[test]
+fn cac_eliminates_recompute_collectives() {
+    use ted::collectives::CommKind;
+    let on = EngineOptions { cac: true, dtd: false, ..Default::default() };
+    let off = EngineOptions { cac: false, dtd: false, ..Default::default() };
+    let Some(a) = run_tiny(4, 2, 2, on, 3) else { return };
+    let Some(b) = run_tiny(4, 2, 2, off, 3) else { return };
+    let calls = |log: &TrainLog, k: CommKind| {
+        log.comm_calls.iter().find(|(kk, _)| *kk == k).unwrap().1
+    };
+    // checkpoint recompute re-issues the layer's forward A2As & all-reduces
+    assert!(
+        calls(&b, CommKind::AllToAll) > calls(&a, CommKind::AllToAll),
+        "CAC off should add A2A calls"
+    );
+    assert!(
+        calls(&b, CommKind::AllReduce) > calls(&a, CommKind::AllReduce),
+        "CAC off should add all-reduce calls"
+    );
+    // and CAC must cost stash memory
+    assert!(a.peak_stash_bytes > b.peak_stash_bytes);
+}
+
+#[test]
+fn optimizer_tiling_caps_the_spike() {
+    let tiled = EngineOptions { optimizer_tiling: true, tile_size: 4096, ..Default::default() };
+    let untiled = EngineOptions { optimizer_tiling: false, ..Default::default() };
+    let Some(a) = run_tiny(2, 1, 2, tiled, 2) else { return };
+    let Some(b) = run_tiny(2, 1, 2, untiled, 2) else { return };
+    assert!(a.peak_opt_temp_bytes <= 4096 * 4);
+    assert!(
+        b.peak_opt_temp_bytes > a.peak_opt_temp_bytes,
+        "untiled spike {} should exceed tiled cap {}",
+        b.peak_opt_temp_bytes,
+        a.peak_opt_temp_bytes
+    );
+    // and tiling must not change the numbers
+    assert_close_traj(&losses(&a), &losses(&b), 1e-6, "tiled vs untiled loss");
+}
+
+#[test]
+fn pjrt_optimizer_path_matches_native() {
+    let native = EngineOptions::default();
+    let pjrt = EngineOptions { optimizer_use_pjrt: true, ..Default::default() };
+    let Some(a) = run_tiny(2, 1, 2, native, 4) else { return };
+    let Some(b) = run_tiny(2, 1, 2, pjrt, 4) else { return };
+    assert_close_traj(&losses(&a), &losses(&b), 1e-5, "native vs pjrt optimizer");
+}
+
+#[test]
+fn multi_local_expert_topology_trains() {
+    // mini has 4 experts; run with ep=4 and tp=2 on 8 ranks? keep it light:
+    // ep=4, tp=1, world=4 -> 1 local expert; instead exercise 2 local
+    // experts per rank: world=2, tp=1, ep=2 with 4 experts.
+    // (mini manifests were exported with ep=4, so build a matching topo.)
+    let Some(manifest) = load("mini", 1, 2) else { return };
+    let topo = Topology::new(ParallelConfig::derive(4, 1, 4).unwrap()).unwrap();
+    let data = SyntheticLM::new(manifest.dims.vocab, 9);
+    let run = RunConfig { steps: 3, micro_per_step: 1, ..Default::default() };
+    let log = train(&topo, &manifest, EngineOptions::default(), tcfg(), run, &data).unwrap();
+    assert!(log.steps.iter().all(|s| s.loss.is_finite()));
+}
+
+#[test]
+fn eval_loss_tracks_training() {
+    let Some(manifest) = load("tiny", 1, 2) else { return };
+    let topo = Topology::new(ParallelConfig::derive(2, 1, 2).unwrap()).unwrap();
+    let data = SyntheticLM::new(manifest.dims.vocab, 11);
+    let run = RunConfig { steps: 10, micro_per_step: 2, eval_every: 5, eval_micro: 2, ..Default::default() };
+    let log = train(&topo, &manifest, EngineOptions::default(), tcfg(), run, &data).unwrap();
+    assert_eq!(log.evals.len(), 2);
+    let (_, v1) = log.evals[0];
+    let (_, v2) = log.evals[1];
+    assert!(v2 < v1 + 0.05, "val loss should not explode: {v1} -> {v2}");
+}
+
+#[test]
+fn data_batches_are_valid_for_dims() {
+    let Some(manifest) = load("tiny", 1, 2) else { return };
+    let d = manifest.dims;
+    let data = SyntheticLM::new(d.vocab, 3);
+    let (ids, tgt) = data.batch(0, 0, 0, d.batch, d.seq);
+    assert_eq!(ids.shape(), &[d.batch, d.seq]);
+    assert!(ids.data().iter().all(|&t| (t as usize) < d.vocab));
+    assert!(tgt.data().iter().all(|&t| (t as usize) < d.vocab));
+}
