@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use ted::collectives::{Communicator, Rendezvous};
+use ted::collectives::{CollectiveStrategy, Communicator, Rendezvous};
 use ted::metrics::bench;
 use ted::topology::{GroupId, GroupKind};
 use ted::util::tensor::Tensor;
@@ -13,8 +13,23 @@ fn gid(i: usize) -> GroupId {
     GroupId { kind: GroupKind::World, index: i }
 }
 
-fn bench_allreduce(world: usize, len: usize, iters: u32) {
-    let name = format!("all_reduce/world{world}/{len}f32");
+fn label(op: &str, world: usize, payload: &str, strategy: CollectiveStrategy, gpn: usize) -> String {
+    match strategy {
+        CollectiveStrategy::Flat => format!("{op}/world{world}/{payload}/flat"),
+        CollectiveStrategy::Hierarchical => {
+            format!("{op}/world{world}/{payload}/hier-gpn{gpn}")
+        }
+    }
+}
+
+fn bench_allreduce(
+    world: usize,
+    len: usize,
+    iters: u32,
+    strategy: CollectiveStrategy,
+    gpn: usize,
+) {
+    let name = label("all_reduce", world, &format!("{len}f32"), strategy, gpn);
     let rez = Rendezvous::new(world);
     // worker threads loop forever on all_reduce; rank 0 is timed
     std::thread::scope(|s| {
@@ -22,7 +37,7 @@ fn bench_allreduce(world: usize, len: usize, iters: u32) {
             let rez = Arc::clone(&rez);
             s.spawn(move || {
                 let members: Vec<usize> = (0..world).collect();
-                let mut comm = Communicator::new(rez, rank);
+                let mut comm = Communicator::with_transport(rez, rank, strategy, gpn);
                 let mut t = Tensor::from_vec(&[len], vec![rank as f32; len]);
                 for _ in 0..(iters + 3) {
                     comm.all_reduce(gid(0), &members, &mut t);
@@ -30,7 +45,7 @@ fn bench_allreduce(world: usize, len: usize, iters: u32) {
             });
         }
         let members: Vec<usize> = (0..world).collect();
-        let mut comm = Communicator::new(Arc::clone(&rez), 0);
+        let mut comm = Communicator::with_transport(Arc::clone(&rez), 0, strategy, gpn);
         let mut t = Tensor::from_vec(&[len], vec![0.5; len]);
         bench::run(&name, 3, iters, || {
             comm.all_reduce(gid(0), &members, &mut t);
@@ -38,15 +53,22 @@ fn bench_allreduce(world: usize, len: usize, iters: u32) {
     });
 }
 
-fn bench_alltoall(world: usize, rows: usize, d: usize, iters: u32) {
-    let name = format!("all_to_all/world{world}/{rows}x{d}");
+fn bench_alltoall(
+    world: usize,
+    rows: usize,
+    d: usize,
+    iters: u32,
+    strategy: CollectiveStrategy,
+    gpn: usize,
+) {
+    let name = label("all_to_all", world, &format!("{rows}x{d}"), strategy, gpn);
     let rez = Rendezvous::new(world);
     std::thread::scope(|s| {
         for rank in 1..world {
             let rez = Arc::clone(&rez);
             s.spawn(move || {
                 let members: Vec<usize> = (0..world).collect();
-                let mut comm = Communicator::new(rez, rank);
+                let mut comm = Communicator::with_transport(rez, rank, strategy, gpn);
                 for _ in 0..(iters + 3) {
                     let send: Vec<Vec<f32>> = (0..world).map(|_| vec![1.0; rows * d]).collect();
                     let _ = comm.all_to_all(gid(1), &members, send);
@@ -54,7 +76,7 @@ fn bench_alltoall(world: usize, rows: usize, d: usize, iters: u32) {
             });
         }
         let members: Vec<usize> = (0..world).collect();
-        let mut comm = Communicator::new(Arc::clone(&rez), 0);
+        let mut comm = Communicator::with_transport(Arc::clone(&rez), 0, strategy, gpn);
         bench::run(&name, 3, iters, || {
             let send: Vec<Vec<f32>> = (0..world).map(|_| vec![1.0; rows * d]).collect();
             let _ = comm.all_to_all(gid(1), &members, send);
@@ -64,13 +86,20 @@ fn bench_alltoall(world: usize, rows: usize, d: usize, iters: u32) {
 
 fn main() {
     println!("# bench_collectives — functional rendezvous collectives");
+    println!("## flat transport");
     for world in [2, 4, 8] {
-        bench_allreduce(world, 1, 200);
-        bench_allreduce(world, 65_536, 50);
-        bench_allreduce(world, 1_048_576, 15);
+        bench_allreduce(world, 1, 200, CollectiveStrategy::Flat, 0);
+        bench_allreduce(world, 65_536, 50, CollectiveStrategy::Flat, 0);
+        bench_allreduce(world, 1_048_576, 15, CollectiveStrategy::Flat, 0);
     }
     for world in [2, 4, 8] {
-        bench_alltoall(world, 64, 64, 100);
-        bench_alltoall(world, 512, 512, 15);
+        bench_alltoall(world, 64, 64, 100, CollectiveStrategy::Flat, 0);
+        bench_alltoall(world, 512, 512, 15, CollectiveStrategy::Flat, 0);
+    }
+    println!("## hierarchical transport (2-node layout: gpn = world/2)");
+    for world in [4, 8] {
+        bench_allreduce(world, 65_536, 50, CollectiveStrategy::Hierarchical, world / 2);
+        bench_alltoall(world, 64, 64, 100, CollectiveStrategy::Hierarchical, world / 2);
+        bench_alltoall(world, 512, 512, 15, CollectiveStrategy::Hierarchical, world / 2);
     }
 }

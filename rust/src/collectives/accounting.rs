@@ -1,9 +1,34 @@
-//! Per-rank, per-kind communication volume accounting.
+//! Per-rank, per-kind communication volume accounting, split into
+//! **intra-node** and **inter-node** lanes.
 //!
 //! Counts *logical payload bytes leaving each rank* (self-destined traffic
 //! excluded), which is the quantity DTD shrinks and the quantity the paper's
 //! Figure 5 decomposes. Algorithmic inflation (ring all-reduce moving
 //! 2(n-1)/n of the buffer, etc.) is applied by the perf model, not here.
+//!
+//! The two lanes mirror the transport backends (see
+//! `collectives::transport`):
+//!
+//! * the **flat** backend is topology-oblivious — it cannot attribute a
+//!   byte to a fabric, so its entire volume lands in one undifferentiated
+//!   lane: the *inter-node* (bottleneck) lane whenever the **job** spans
+//!   nodes, the intra-node lane on a single-node job. This is deliberately
+//!   coarser than the α-β *time* model, which still prices a provably
+//!   node-local group at NVLink even under the flat backend: measured
+//!   lanes answer "what can this transport claim about its traffic?",
+//!   pricing answers "how long does the op take?" — only the hierarchical
+//!   backend makes the two attributions coincide;
+//! * the **hierarchical** backend decomposes each collective into an
+//!   intra-node phase and an inter-node phase and records each phase in
+//!   its own lane — only bytes that genuinely cross a node boundary are
+//!   charged to the inter-node fabric.
+//!
+//! `bytes` is always `intra_bytes + inter_bytes`. All-to-all totals are
+//! backend-invariant (each row leaves its rank exactly once either way),
+//! so assertions like DTD's exact payload halving hold on any backend;
+//! gather/reduce ops under the hierarchical backend additionally charge
+//! each node leader's partial/block, which is that algorithm's real
+//! logical volume.
 
 use std::sync::Mutex;
 
@@ -53,7 +78,12 @@ impl CommKind {
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CommStats {
     pub calls: u64,
+    /// Total payload bytes (always `intra_bytes + inter_bytes`).
     pub bytes: u64,
+    /// Bytes that stay on the intra-node fabric (NVLink lane).
+    pub intra_bytes: u64,
+    /// Bytes that cross a node boundary (InfiniBand lane).
+    pub inter_bytes: u64,
 }
 
 /// One row per rank, one column per kind.
@@ -67,11 +97,20 @@ impl StatsBoard {
         StatsBoard { inner: Mutex::new(vec![[CommStats::default(); 6]; world]) }
     }
 
+    /// Record one op with all bytes in the intra-node lane (single-fabric
+    /// legacy entry point; the transports use [`StatsBoard::record_split`]).
     pub fn record(&self, rank: usize, kind: CommKind, bytes: u64) {
+        self.record_split(rank, kind, bytes, 0);
+    }
+
+    /// Record one logical collective call with lane-attributed volume.
+    pub fn record_split(&self, rank: usize, kind: CommKind, intra_bytes: u64, inter_bytes: u64) {
         let mut g = self.inner.lock().unwrap();
         let cell = &mut g[rank][kind.index()];
         cell.calls += 1;
-        cell.bytes += bytes;
+        cell.intra_bytes += intra_bytes;
+        cell.inter_bytes += inter_bytes;
+        cell.bytes += intra_bytes + inter_bytes;
     }
 
     pub fn rank_stats(&self, rank: usize) -> [CommStats; 6] {
@@ -87,8 +126,11 @@ impl StatsBoard {
         let g = self.inner.lock().unwrap();
         let mut acc = CommStats::default();
         for row in g.iter() {
-            acc.calls += row[kind.index()].calls;
-            acc.bytes += row[kind.index()].bytes;
+            let c = row[kind.index()];
+            acc.calls += c.calls;
+            acc.bytes += c.bytes;
+            acc.intra_bytes += c.intra_bytes;
+            acc.inter_bytes += c.inter_bytes;
         }
         acc
     }
@@ -102,11 +144,19 @@ impl StatsBoard {
 
     /// Pretty table for logs/benches.
     pub fn render(&self) -> String {
-        let mut out = String::from("kind            calls        bytes\n");
+        let mut out =
+            String::from("kind            calls        bytes        intra        inter\n");
         for kind in ALL_KINDS {
             let t = self.total(kind);
             if t.calls > 0 {
-                out.push_str(&format!("{:<14} {:>7} {:>12}\n", kind.name(), t.calls, t.bytes));
+                out.push_str(&format!(
+                    "{:<14} {:>7} {:>12} {:>12} {:>12}\n",
+                    kind.name(),
+                    t.calls,
+                    t.bytes,
+                    t.intra_bytes,
+                    t.inter_bytes
+                ));
             }
         }
         out
@@ -123,10 +173,36 @@ mod tests {
         b.record(0, CommKind::AllToAll, 100);
         b.record(1, CommKind::AllToAll, 50);
         b.record(0, CommKind::AllReduce, 10);
-        assert_eq!(b.get(0, CommKind::AllToAll), CommStats { calls: 1, bytes: 100 });
-        assert_eq!(b.total(CommKind::AllToAll), CommStats { calls: 2, bytes: 150 });
+        assert_eq!(
+            b.get(0, CommKind::AllToAll),
+            CommStats { calls: 1, bytes: 100, intra_bytes: 100, inter_bytes: 0 }
+        );
+        assert_eq!(b.total(CommKind::AllToAll).bytes, 150);
+        assert_eq!(b.total(CommKind::AllToAll).calls, 2);
         assert_eq!(b.total(CommKind::Barrier), CommStats::default());
         b.reset();
         assert_eq!(b.total(CommKind::AllToAll), CommStats::default());
+    }
+
+    #[test]
+    fn split_lanes_sum_into_bytes() {
+        let b = StatsBoard::new(1);
+        b.record_split(0, CommKind::AllGather, 30, 12);
+        b.record_split(0, CommKind::AllGather, 5, 0);
+        let s = b.get(0, CommKind::AllGather);
+        assert_eq!(s.calls, 2);
+        assert_eq!(s.intra_bytes, 35);
+        assert_eq!(s.inter_bytes, 12);
+        assert_eq!(s.bytes, s.intra_bytes + s.inter_bytes);
+    }
+
+    #[test]
+    fn render_includes_lanes() {
+        let b = StatsBoard::new(1);
+        b.record_split(0, CommKind::AllToAll, 7, 9);
+        let r = b.render();
+        assert!(r.contains("all_to_all"));
+        assert!(r.contains("intra"));
+        assert!(r.contains("16"));
     }
 }

@@ -1,22 +1,42 @@
-//! Functional in-process collectives.
+//! Functional in-process collectives with a pluggable transport layer.
 //!
 //! The simulated cluster runs every rank as a thread; collectives are real
 //! data movement through a shared [`Rendezvous`] keyed by (group id, op
-//! sequence number). Semantics mirror NCCL/MPI:
+//! sequence number, phase tag). Semantics mirror NCCL/MPI:
 //!
 //! * deterministic reductions (accumulation in member order, so a run is
-//!   bit-reproducible regardless of thread scheduling),
+//!   bit-reproducible regardless of thread scheduling *and* of the
+//!   selected transport backend),
 //! * per-rank, per-kind **byte accounting** — the functional analog of the
 //!   paper's Figure 5 communication breakdown (DTD must show up here as an
-//!   exact `G_tensor x` reduction in all-to-all payload),
+//!   exact `G_tensor x` reduction in all-to-all payload) — now split into
+//!   intra-node and inter-node lanes,
 //! * deadlock detection via timeout (a mismatched op sequence in the engine
 //!   is a bug; we panic with the op descriptor instead of hanging).
+//!
+//! Two transports implement every op (select via
+//! [`Communicator::with_transport`] or `EngineOptions::strategy`):
+//!
+//! * [`CollectiveStrategy::Flat`] — the topology-oblivious single
+//!   exchange; its volume is charged to the inter-node (bottleneck) lane
+//!   whenever the job spans nodes.
+//! * [`CollectiveStrategy::Hierarchical`] — decomposes all-to-all and
+//!   all-gather into an intra-node phase followed by an inter-node phase
+//!   (node boundaries from `ClusterConfig::gpus_per_node`), charging each
+//!   phase to its own lane. Training results are bitwise identical across
+//!   backends; only the traffic attribution (and hence the modeled cost)
+//!   changes. All-to-all volume is backend-invariant (each row crosses
+//!   once either way); gather/reduce ops additionally charge the leaders'
+//!   node partials, which is the hierarchical algorithm's real volume.
+//!   `rust/tests/parity_matrix.rs` locks the parity invariant down.
 //!
 //! The α-β *cost* model for paper-scale figures lives in `perfmodel`, not
 //! here; this module is about correctness and measured volume.
 
 pub mod accounting;
 pub mod rendezvous;
+pub mod transport;
 
 pub use accounting::{CommKind, CommStats, StatsBoard};
 pub use rendezvous::{Communicator, Rendezvous};
+pub use transport::{CollectiveStrategy, NodeMap, NodePlan};

@@ -1,24 +1,49 @@
-//! The rendezvous: a shared meeting point implementing the collectives.
+//! The rendezvous substrate plus the two collective transports.
 //!
-//! Every collective call on a group allocates a slot keyed by
-//! (group id, per-group sequence number). Ranks deposit their contribution,
-//! the last arrival performs any reduction, and every member picks up its
-//! result; the last pickup frees the slot. Sequence numbers are tracked
-//! per (rank, group) inside each [`Communicator`], so program order per
-//! group defines matching — exactly MPI communicator semantics.
+//! Every collective call on a group allocates one or more slots keyed by
+//! (group id, per-group sequence number, phase tag). Ranks deposit their
+//! contribution, the last arrival performs any reduction, and every member
+//! picks up its result; the last pickup frees the slot. Sequence numbers
+//! are tracked per (rank, group) inside each [`Communicator`], so program
+//! order per group defines matching — exactly MPI communicator semantics.
+//! The phase tag lets one logical collective decompose into independent
+//! sub-exchanges (the hierarchical backend's intra-node and inter-node
+//! phases) without perturbing the sequence space.
+//!
+//! Transport selection (see `transport.rs` for the semantics):
+//!
+//! * **flat** — one exchange per collective, all volume in a single lane
+//!   (the inter-node lane when the job spans nodes: a topology-oblivious
+//!   transport cannot prove any byte stayed on-node, so its accounting is
+//!   conservative; see `accounting.rs` for how this relates to — and
+//!   deliberately differs from — the per-group α-β time pricing);
+//! * **hierarchical** — all-to-all and all-gather physically run as an
+//!   intra-node phase followed by an inter-node phase; reducing ops keep
+//!   the canonical member-order reduction (bit-reproducibility across
+//!   backends) with hierarchically attributed volume.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::collectives::accounting::{CommKind, StatsBoard};
+use crate::collectives::transport::{CollectiveStrategy, NodeMap, NodePlan};
 use crate::topology::GroupId;
 use crate::util::tensor::Tensor;
 
 /// How long a rank waits on peers before declaring the program deadlocked.
 const DEADLOCK_TIMEOUT: Duration = Duration::from_secs(120);
 
-type SlotKey = (GroupId, u64);
+/// (group, op sequence, phase tag). Tag 0 is the whole-group exchange;
+/// hierarchical phases use `ptag(phase, node_ordinal)`.
+type SlotKey = (GroupId, u64, u32);
+
+/// Encode a hierarchical phase sub-slot: phase in the high bits, the
+/// node ordinal within the group's node plan in the low 16 bits.
+fn ptag(phase: u32, ord: usize) -> u32 {
+    debug_assert!(ord < (1 << 16), "node ordinal {ord} overflows phase tag");
+    (phase << 16) | (ord as u32)
+}
 
 /// Per-op state. `contributions[i]` is member i's deposit: a vector of
 /// payloads (one per destination for all-to-all; a single payload for the
@@ -121,20 +146,49 @@ impl Rendezvous {
     }
 }
 
-/// One rank's handle: owns the per-group sequence counters.
+/// One rank's handle: owns the per-group sequence counters plus the
+/// transport selection (strategy + node boundaries).
 pub struct Communicator {
     rez: Arc<Rendezvous>,
     rank: usize,
     seqs: HashMap<GroupId, u64>,
+    strategy: CollectiveStrategy,
+    nodes: NodeMap,
 }
 
 impl Communicator {
+    /// Flat transport on a single node (the historical default).
     pub fn new(rez: Arc<Rendezvous>, rank: usize) -> Self {
-        Communicator { rez, rank, seqs: HashMap::new() }
+        Self::with_transport(rez, rank, CollectiveStrategy::Flat, 0)
+    }
+
+    /// Select a transport backend and node boundaries (`gpus_per_node == 0`
+    /// means one big node — no inter-node fabric).
+    pub fn with_transport(
+        rez: Arc<Rendezvous>,
+        rank: usize,
+        strategy: CollectiveStrategy,
+        gpus_per_node: usize,
+    ) -> Self {
+        Communicator {
+            rez,
+            rank,
+            seqs: HashMap::new(),
+            strategy,
+            nodes: NodeMap::new(gpus_per_node),
+        }
     }
 
     pub fn rank(&self) -> usize {
         self.rank
+    }
+
+    pub fn strategy(&self) -> CollectiveStrategy {
+        self.strategy
+    }
+
+    pub fn node_map(&self) -> NodeMap {
+        self.nodes
     }
 
     pub fn stats(&self) -> &StatsBoard {
@@ -155,6 +209,34 @@ impl Communicator {
             .unwrap_or_else(|| panic!("rank {} not in group {members:?}", self.rank))
     }
 
+    /// Lane attribution for the flat transport: one undifferentiated lane,
+    /// charged to the bottleneck (inter-node) fabric when the job spans
+    /// nodes — the flat backend cannot distinguish, which is exactly the
+    /// limitation the hierarchical backend removes.
+    fn flat_lanes(&self, bytes: u64) -> (u64, u64) {
+        if self.nodes.spans_nodes(self.rez.world()) {
+            (0, bytes)
+        } else {
+            (bytes, 0)
+        }
+    }
+
+    /// Lane attribution for hierarchical reducing ops (all-reduce /
+    /// reduce-scatter): each member combines into its node's partial over
+    /// the intra-node fabric (when it has node peers), and each node
+    /// leader exchanges one partial-sized message over the wire.
+    fn hier_reduce_lanes(&self, members: &[usize], pos: usize, bytes: u64) -> (u64, u64) {
+        let plan = NodePlan::build(self.nodes, members, pos);
+        let intra = if plan.my_subset().len() > 1 { bytes } else { 0 };
+        let inter = if plan.n_nodes() > 1 && plan.is_leader() { bytes } else { 0 };
+        (intra, inter)
+    }
+
+    // ------------------------------------------------------------------
+    // reducing ops: canonical member-order reduction on one slot (bitwise
+    // identical across backends), lane attribution per transport
+    // ------------------------------------------------------------------
+
     /// In-place sum all-reduce over the group (deterministic member order).
     pub fn all_reduce(&mut self, gid: GroupId, members: &[usize], t: &mut Tensor) {
         let n = members.len();
@@ -163,9 +245,13 @@ impl Communicator {
         }
         let pos = self.my_pos(members);
         let seq = self.next_seq(gid);
-        let key = (gid, seq);
+        let key = (gid, seq, 0u32);
         let bytes = (t.numel() * 4) as u64;
-        self.rez.stats.record(self.rank, CommKind::AllReduce, bytes);
+        let (intra, inter) = match self.strategy {
+            CollectiveStrategy::Flat => self.flat_lanes(bytes),
+            CollectiveStrategy::Hierarchical => self.hier_reduce_lanes(members, pos, bytes),
+        };
+        self.rez.stats.record_split(self.rank, CommKind::AllReduce, intra, inter);
         self.rez.deposit(key, CommKind::AllReduce, pos, n, vec![t.data().to_vec()],
             &format!("all_reduce g={gid:?} seq={seq}"));
         let result = self.rez.take(key, n, |slot| {
@@ -187,83 +273,6 @@ impl Communicator {
         t.data_mut().copy_from_slice(&result);
     }
 
-    /// All-gather: returns each member's tensor in member order.
-    pub fn all_gather(&mut self, gid: GroupId, members: &[usize], t: &Tensor) -> Vec<Vec<f32>> {
-        let n = members.len();
-        if n == 1 {
-            return vec![t.data().to_vec()];
-        }
-        let pos = self.my_pos(members);
-        let seq = self.next_seq(gid);
-        let key = (gid, seq);
-        self.rez.stats.record(self.rank, CommKind::AllGather, (t.numel() * 4) as u64);
-        self.rez.deposit(key, CommKind::AllGather, pos, n, vec![t.data().to_vec()],
-            &format!("all_gather g={gid:?} seq={seq}"));
-        self.rez.take(key, n, |slot| {
-            slot.contributions
-                .iter()
-                .map(|c| c.as_ref().expect("missing contribution")[0].clone())
-                .collect()
-        })
-    }
-
-    /// All-to-all(v): `send[i]` goes to `members[i]`; returns what each
-    /// member sent to us, in member order. Variable lengths allowed.
-    pub fn all_to_all(
-        &mut self,
-        gid: GroupId,
-        members: &[usize],
-        send: Vec<Vec<f32>>,
-    ) -> Vec<Vec<f32>> {
-        let n = members.len();
-        assert_eq!(send.len(), n, "all_to_all needs one payload per member");
-        let pos = self.my_pos(members);
-        if n == 1 {
-            return send;
-        }
-        // bytes leaving this rank = everything not destined to self
-        let bytes: u64 = send
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| *i != pos)
-            .map(|(_, v)| (v.len() * 4) as u64)
-            .sum();
-        let seq = self.next_seq(gid);
-        let key = (gid, seq);
-        self.rez.stats.record(self.rank, CommKind::AllToAll, bytes);
-        self.rez.deposit(key, CommKind::AllToAll, pos, n, send,
-            &format!("all_to_all g={gid:?} seq={seq}"));
-        self.rez.take(key, n, |slot| {
-            slot.contributions
-                .iter()
-                .map(|c| c.as_ref().expect("missing contribution")[pos].clone())
-                .collect()
-        })
-    }
-
-    /// Broadcast from `root` (a member index into `members`, not a rank id).
-    pub fn broadcast(&mut self, gid: GroupId, members: &[usize], root_pos: usize, t: &mut Tensor) {
-        let n = members.len();
-        if n == 1 {
-            return;
-        }
-        let pos = self.my_pos(members);
-        let seq = self.next_seq(gid);
-        let key = (gid, seq);
-        if pos == root_pos {
-            self.rez.stats.record(self.rank, CommKind::Broadcast, (t.numel() * 4) as u64);
-            self.rez.deposit(key, CommKind::Broadcast, pos, n, vec![t.data().to_vec()],
-                &format!("broadcast g={gid:?} seq={seq}"));
-        } else {
-            self.rez.deposit(key, CommKind::Broadcast, pos, n, vec![],
-                &format!("broadcast g={gid:?} seq={seq}"));
-        }
-        let result = self.rez.take(key, n, |slot| {
-            slot.contributions[root_pos].as_ref().expect("root missing")[0].clone()
-        });
-        t.data_mut().copy_from_slice(&result);
-    }
-
     /// Reduce-scatter (sum): input length must divide evenly by group size;
     /// returns this rank's shard.
     pub fn reduce_scatter(&mut self, gid: GroupId, members: &[usize], t: &Tensor) -> Vec<f32> {
@@ -274,8 +283,13 @@ impl Communicator {
         let pos = self.my_pos(members);
         assert_eq!(t.numel() % n, 0, "reduce_scatter length not divisible by group");
         let seq = self.next_seq(gid);
-        let key = (gid, seq);
-        self.rez.stats.record(self.rank, CommKind::ReduceScatter, (t.numel() * 4) as u64);
+        let key = (gid, seq, 0u32);
+        let bytes = (t.numel() * 4) as u64;
+        let (intra, inter) = match self.strategy {
+            CollectiveStrategy::Flat => self.flat_lanes(bytes),
+            CollectiveStrategy::Hierarchical => self.hier_reduce_lanes(members, pos, bytes),
+        };
+        self.rez.stats.record_split(self.rank, CommKind::ReduceScatter, intra, inter);
         self.rez.deposit(key, CommKind::ReduceScatter, pos, n, vec![t.data().to_vec()],
             &format!("reduce_scatter g={gid:?} seq={seq}"));
         self.rez.take(key, n, |slot| {
@@ -294,6 +308,39 @@ impl Communicator {
         })
     }
 
+    /// Broadcast from `root` (a member index into `members`, not a rank id).
+    pub fn broadcast(&mut self, gid: GroupId, members: &[usize], root_pos: usize, t: &mut Tensor) {
+        let n = members.len();
+        if n == 1 {
+            return;
+        }
+        let pos = self.my_pos(members);
+        let seq = self.next_seq(gid);
+        let key = (gid, seq, 0u32);
+        if pos == root_pos {
+            let bytes = (t.numel() * 4) as u64;
+            let (intra, inter) = match self.strategy {
+                CollectiveStrategy::Flat => self.flat_lanes(bytes),
+                CollectiveStrategy::Hierarchical => {
+                    let plan = NodePlan::build(self.nodes, members, pos);
+                    let intra = if plan.my_subset().len() > 1 { bytes } else { 0 };
+                    let inter = if plan.n_nodes() > 1 { bytes } else { 0 };
+                    (intra, inter)
+                }
+            };
+            self.rez.stats.record_split(self.rank, CommKind::Broadcast, intra, inter);
+            self.rez.deposit(key, CommKind::Broadcast, pos, n, vec![t.data().to_vec()],
+                &format!("broadcast g={gid:?} seq={seq}"));
+        } else {
+            self.rez.deposit(key, CommKind::Broadcast, pos, n, vec![],
+                &format!("broadcast g={gid:?} seq={seq}"));
+        }
+        let result = self.rez.take(key, n, |slot| {
+            slot.contributions[root_pos].as_ref().expect("root missing")[0].clone()
+        });
+        t.data_mut().copy_from_slice(&result);
+    }
+
     /// Barrier over the group.
     pub fn barrier(&mut self, gid: GroupId, members: &[usize]) {
         let n = members.len();
@@ -302,11 +349,289 @@ impl Communicator {
         }
         let pos = self.my_pos(members);
         let seq = self.next_seq(gid);
-        let key = (gid, seq);
-        self.rez.stats.record(self.rank, CommKind::Barrier, 0);
+        let key = (gid, seq, 0u32);
+        self.rez.stats.record_split(self.rank, CommKind::Barrier, 0, 0);
         self.rez.deposit(key, CommKind::Barrier, pos, n, vec![],
             &format!("barrier g={gid:?} seq={seq}"));
         self.rez.take(key, n, |_| ());
+    }
+
+    // ------------------------------------------------------------------
+    // all-gather: flat single exchange, or intra-node gather -> leader
+    // inter-node exchange -> intra-node redistribution
+    // ------------------------------------------------------------------
+
+    /// All-gather: returns each member's tensor in member order.
+    pub fn all_gather(&mut self, gid: GroupId, members: &[usize], t: &Tensor) -> Vec<Vec<f32>> {
+        let n = members.len();
+        if n == 1 {
+            return vec![t.data().to_vec()];
+        }
+        let pos = self.my_pos(members);
+        let seq = self.next_seq(gid);
+        match self.strategy {
+            CollectiveStrategy::Flat => {
+                let (intra, inter) = self.flat_lanes((t.numel() * 4) as u64);
+                self.rez.stats.record_split(self.rank, CommKind::AllGather, intra, inter);
+                self.all_gather_exchange(gid, seq, 0, pos, n, t)
+            }
+            CollectiveStrategy::Hierarchical => self.all_gather_hier(gid, seq, members, pos, t),
+        }
+    }
+
+    /// One whole-group gather exchange on `tag`.
+    fn all_gather_exchange(
+        &self,
+        gid: GroupId,
+        seq: u64,
+        tag: u32,
+        pos: usize,
+        n: usize,
+        t: &Tensor,
+    ) -> Vec<Vec<f32>> {
+        let key = (gid, seq, tag);
+        self.rez.deposit(key, CommKind::AllGather, pos, n, vec![t.data().to_vec()],
+            &format!("all_gather g={gid:?} seq={seq} tag={tag}"));
+        self.rez.take(key, n, |slot| {
+            slot.contributions
+                .iter()
+                .map(|c| c.as_ref().expect("missing contribution")[0].clone())
+                .collect()
+        })
+    }
+
+    fn all_gather_hier(
+        &self,
+        gid: GroupId,
+        seq: u64,
+        members: &[usize],
+        pos: usize,
+        t: &Tensor,
+    ) -> Vec<Vec<f32>> {
+        let n = members.len();
+        let plan = NodePlan::build(self.nodes, members, pos);
+        let own_bytes = (t.numel() * 4) as u64;
+        if plan.n_nodes() == 1 {
+            // group fits in one node: a single intra-node exchange
+            self.rez.stats.record_split(self.rank, CommKind::AllGather, own_bytes, 0);
+            return self.all_gather_exchange(gid, seq, ptag(1, 0), pos, n, t);
+        }
+
+        // phase 1 (intra): node members gather the node block; only the
+        // leader materializes it (it alone forwards the block in phase 2)
+        let subset = plan.my_subset().to_vec();
+        let my_subpos = plan.my_subpos;
+        let leader = plan.is_leader();
+        let node_block: Vec<Vec<f32>> = if subset.len() > 1 {
+            let key = (gid, seq, ptag(1, plan.my_node));
+            self.rez.deposit(key, CommKind::AllGather, my_subpos, subset.len(),
+                vec![t.data().to_vec()],
+                &format!("all_gather/intra g={gid:?} seq={seq} node={}", plan.my_node));
+            self.rez.take(key, subset.len(), |slot| {
+                if leader {
+                    slot.contributions
+                        .iter()
+                        .map(|c| c.as_ref().expect("missing contribution")[0].clone())
+                        .collect()
+                } else {
+                    Vec::new()
+                }
+            })
+        } else {
+            vec![t.data().to_vec()]
+        };
+
+        // phase 2 (inter): each node's leader publishes its node block
+        let key2 = (gid, seq, ptag(2, 0));
+        let payloads = node_block; // empty for non-leaders
+        self.rez.deposit(key2, CommKind::AllGather, pos, n, payloads,
+            &format!("all_gather/inter g={gid:?} seq={seq}"));
+        let leader_positions: Vec<usize> = plan.nodes.iter().map(|(_, s)| s[0]).collect();
+        let blocks: Vec<Vec<Vec<f32>>> = self.rez.take(key2, n, |slot| {
+            leader_positions
+                .iter()
+                .map(|&lp| slot.contributions[lp].as_ref().expect("leader block missing").clone())
+                .collect()
+        });
+
+        // reassemble member-order output (phase 3 is the leaders' intra-node
+        // redistribution of remote blocks; in shared memory the data is
+        // already here, so it only shows up in the lane accounting)
+        let mut out: Vec<Vec<f32>> = vec![Vec::new(); n];
+        let mut total_bytes = 0u64;
+        let mut my_block_bytes = 0u64;
+        for (k, block) in blocks.into_iter().enumerate() {
+            let subset_k = &plan.nodes[k].1;
+            assert_eq!(block.len(), subset_k.len(), "node block size mismatch");
+            let mut bb = 0u64;
+            for (v, &p) in block.into_iter().zip(subset_k.iter()) {
+                bb += (v.len() * 4) as u64;
+                out[p] = v;
+            }
+            total_bytes += bb;
+            if k == plan.my_node {
+                my_block_bytes = bb;
+            }
+        }
+
+        let mut intra = if subset.len() > 1 { own_bytes } else { 0 };
+        let mut inter = 0u64;
+        if plan.is_leader() {
+            inter += my_block_bytes;
+            if subset.len() > 1 {
+                // redistributing the remote blocks to node peers
+                intra += total_bytes - my_block_bytes;
+            }
+        }
+        self.rez.stats.record_split(self.rank, CommKind::AllGather, intra, inter);
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // all-to-all: flat single exchange, or same-node payloads intra-node
+    // followed by cross-node payloads inter-node
+    // ------------------------------------------------------------------
+
+    /// All-to-all(v): `send[i]` goes to `members[i]`; returns what each
+    /// member sent to us, in member order. Variable lengths allowed.
+    pub fn all_to_all(
+        &mut self,
+        gid: GroupId,
+        members: &[usize],
+        send: Vec<Vec<f32>>,
+    ) -> Vec<Vec<f32>> {
+        let n = members.len();
+        assert_eq!(send.len(), n, "all_to_all needs one payload per member");
+        let pos = self.my_pos(members);
+        if n == 1 {
+            return send;
+        }
+        let seq = self.next_seq(gid);
+        match self.strategy {
+            CollectiveStrategy::Flat => {
+                // bytes leaving this rank = everything not destined to self
+                let bytes: u64 = send
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| *i != pos)
+                    .map(|(_, v)| (v.len() * 4) as u64)
+                    .sum();
+                let (intra, inter) = self.flat_lanes(bytes);
+                self.rez.stats.record_split(self.rank, CommKind::AllToAll, intra, inter);
+                self.all_to_all_exchange(gid, seq, 0, pos, n, send)
+            }
+            CollectiveStrategy::Hierarchical => {
+                self.all_to_all_hier(gid, seq, members, pos, send)
+            }
+        }
+    }
+
+    /// One whole-group all-to-all exchange on `tag`.
+    fn all_to_all_exchange(
+        &self,
+        gid: GroupId,
+        seq: u64,
+        tag: u32,
+        pos: usize,
+        n: usize,
+        send: Vec<Vec<f32>>,
+    ) -> Vec<Vec<f32>> {
+        let key = (gid, seq, tag);
+        self.rez.deposit(key, CommKind::AllToAll, pos, n, send,
+            &format!("all_to_all g={gid:?} seq={seq} tag={tag}"));
+        self.rez.take(key, n, |slot| {
+            slot.contributions
+                .iter()
+                .map(|c| c.as_ref().expect("missing contribution")[pos].clone())
+                .collect()
+        })
+    }
+
+    fn all_to_all_hier(
+        &self,
+        gid: GroupId,
+        seq: u64,
+        members: &[usize],
+        pos: usize,
+        mut send: Vec<Vec<f32>>,
+    ) -> Vec<Vec<f32>> {
+        let n = members.len();
+        let plan = NodePlan::build(self.nodes, members, pos);
+        if plan.n_nodes() == 1 {
+            let bytes: u64 = send
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != pos)
+                .map(|(_, v)| (v.len() * 4) as u64)
+                .sum();
+            self.rez.stats.record_split(self.rank, CommKind::AllToAll, bytes, 0);
+            return self.all_to_all_exchange(gid, seq, ptag(1, 0), pos, n, send);
+        }
+
+        let subset = plan.my_subset().to_vec();
+        let my_subpos = plan.my_subpos;
+        let mut same_node = vec![false; n];
+        for &p in &subset {
+            same_node[p] = true;
+        }
+        let mine = std::mem::take(&mut send[pos]);
+        let intra_bytes: u64 = subset
+            .iter()
+            .filter(|&&p| p != pos)
+            .map(|&p| (send[p].len() * 4) as u64)
+            .sum();
+        let inter_bytes: u64 = (0..n)
+            .filter(|&p| !same_node[p])
+            .map(|p| (send[p].len() * 4) as u64)
+            .sum();
+
+        let mut out: Vec<Vec<f32>> = vec![Vec::new(); n];
+
+        // phase 1 (intra): exchange payloads between same-node members
+        if subset.len() > 1 {
+            let sub_send: Vec<Vec<f32>> = subset
+                .iter()
+                .map(|&p| if p == pos { Vec::new() } else { std::mem::take(&mut send[p]) })
+                .collect();
+            let key = (gid, seq, ptag(1, plan.my_node));
+            self.rez.deposit(key, CommKind::AllToAll, my_subpos, subset.len(), sub_send,
+                &format!("all_to_all/intra g={gid:?} seq={seq} node={}", plan.my_node));
+            let got: Vec<Vec<f32>> = self.rez.take(key, subset.len(), |slot| {
+                slot.contributions
+                    .iter()
+                    .map(|c| c.as_ref().expect("missing contribution")[my_subpos].clone())
+                    .collect()
+            });
+            for (v, &p) in got.into_iter().zip(subset.iter()) {
+                if p != pos {
+                    out[p] = v;
+                }
+            }
+        }
+
+        // phase 2 (inter): exchange cross-node payloads over the full group
+        {
+            let remote_send: Vec<Vec<f32>> =
+                (0..n).map(|p| std::mem::take(&mut send[p])).collect();
+            let key = (gid, seq, ptag(2, 0));
+            self.rez.deposit(key, CommKind::AllToAll, pos, n, remote_send,
+                &format!("all_to_all/inter g={gid:?} seq={seq}"));
+            let got: Vec<Vec<f32>> = self.rez.take(key, n, |slot| {
+                slot.contributions
+                    .iter()
+                    .map(|c| c.as_ref().expect("missing contribution")[pos].clone())
+                    .collect()
+            });
+            for (p, v) in got.into_iter().enumerate() {
+                if !same_node[p] {
+                    out[p] = v;
+                }
+            }
+        }
+
+        out[pos] = mine;
+        self.rez.stats.record_split(self.rank, CommKind::AllToAll, intra_bytes, inter_bytes);
+        out
     }
 }
 
@@ -335,6 +660,32 @@ mod tests {
                 .collect();
             handles.into_iter().map(|h| h.join().unwrap()).collect()
         })
+    }
+
+    /// Same as [`run_ranks`] but with a transport selection.
+    fn run_ranks_transport<F, R>(
+        n: usize,
+        strategy: CollectiveStrategy,
+        gpus_per_node: usize,
+        f: F,
+    ) -> (Vec<R>, Arc<Rendezvous>)
+    where
+        F: Fn(usize, Communicator) -> R + Sync,
+        R: Send,
+    {
+        let rez = Rendezvous::new(n);
+        let outs = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|r| {
+                    let comm = Communicator::with_transport(
+                        Arc::clone(&rez), r, strategy, gpus_per_node);
+                    let f = &f;
+                    s.spawn(move || f(r, comm))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        (outs, rez)
     }
 
     #[test]
@@ -460,5 +811,172 @@ mod tests {
             t.into_vec()[0]
         });
         assert_eq!(outs, vec![1.0, 1.0, 5.0, 5.0]);
+    }
+
+    // ---- hierarchical transport ----
+
+    /// Hierarchical all-to-all delivers exactly what flat delivers, for
+    /// spanning groups, node-local groups, and uneven payloads.
+    #[test]
+    fn hierarchical_alltoall_matches_flat() {
+        for gpn in [1usize, 2, 3] {
+            let members: Vec<usize> = (0..6).collect();
+            let mk_send = |r: usize| -> Vec<Vec<f32>> {
+                (0..6)
+                    .map(|j| (0..(r + j) % 4).map(|k| (100 * r + 10 * j + k) as f32).collect())
+                    .collect()
+            };
+            let flat = run_ranks(6, |r, mut c| c.all_to_all(gid(2), &members, mk_send(r)));
+            let (hier, rez) = run_ranks_transport(
+                6,
+                CollectiveStrategy::Hierarchical,
+                gpn,
+                |r, mut c| c.all_to_all(gid(2), &members, mk_send(r)),
+            );
+            assert_eq!(flat, hier, "gpn={gpn}");
+            let t = rez.stats.total(CommKind::AllToAll);
+            assert_eq!(t.calls, 6);
+            assert_eq!(t.bytes, t.intra_bytes + t.inter_bytes);
+        }
+    }
+
+    #[test]
+    fn hierarchical_allgather_matches_flat() {
+        for gpn in [1usize, 2, 4] {
+            let members: Vec<usize> = (0..4).collect();
+            let flat = run_ranks(4, |r, mut c| {
+                let t = Tensor::from_vec(&[r + 1], vec![r as f32; r + 1]);
+                c.all_gather(gid(3), &members, &t)
+            });
+            let (hier, _rez) = run_ranks_transport(
+                4,
+                CollectiveStrategy::Hierarchical,
+                gpn,
+                |r, mut c| {
+                    let t = Tensor::from_vec(&[r + 1], vec![r as f32; r + 1]);
+                    c.all_gather(gid(3), &members, &t)
+                },
+            );
+            assert_eq!(flat, hier, "gpn={gpn}");
+        }
+    }
+
+    /// Reducing ops are bitwise identical across backends (canonical
+    /// member-order reduction regardless of transport).
+    #[test]
+    fn hierarchical_allreduce_bitwise_matches_flat() {
+        let members: Vec<usize> = (0..4).collect();
+        let mk = |r: usize| {
+            Tensor::from_vec(&[3], vec![0.1 + r as f32 * 0.3, 1e-7 * r as f32, -(r as f32)])
+        };
+        let flat = run_ranks(4, |r, mut c| {
+            let mut t = mk(r);
+            c.all_reduce(gid(9), &members, &mut t);
+            t.into_vec()
+        });
+        let (hier, _) = run_ranks_transport(
+            4,
+            CollectiveStrategy::Hierarchical,
+            2,
+            |r, mut c| {
+                let mut t = mk(r);
+                c.all_reduce(gid(9), &members, &mut t);
+                t.into_vec()
+            },
+        );
+        for (a, b) in flat.iter().zip(&hier) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    /// Lane attribution: a node-local all-to-all is pure intra traffic
+    /// under the hierarchical backend, while the flat backend charges a
+    /// multi-node job entirely to the inter lane.
+    #[test]
+    fn lanes_split_by_node_boundary() {
+        let members: Vec<usize> = (0..4).collect();
+        let send = |_r: usize| vec![vec![1.0f32; 8]; 4];
+        // 2 nodes of 2: each rank has 1 same-node peer (8 floats = 32B)
+        // and 2 cross-node peers (64B)
+        let (_, hier) = run_ranks_transport(
+            4,
+            CollectiveStrategy::Hierarchical,
+            2,
+            |r, mut c| c.all_to_all(gid(1), &members, send(r)),
+        );
+        let h = hier.stats.get(0, CommKind::AllToAll);
+        assert_eq!(h.intra_bytes, 32);
+        assert_eq!(h.inter_bytes, 64);
+        // flat on the same 2-node job: everything in the inter lane
+        let (_, flat) = run_ranks_transport(
+            4,
+            CollectiveStrategy::Flat,
+            2,
+            |r, mut c| c.all_to_all(gid(1), &members, send(r)),
+        );
+        let f = flat.stats.get(0, CommKind::AllToAll);
+        assert_eq!(f.intra_bytes, 0);
+        assert_eq!(f.inter_bytes, 96);
+        // totals agree; hierarchical strictly reduces the inter lane
+        assert_eq!(f.bytes, h.bytes);
+        assert!(h.inter_bytes < f.inter_bytes);
+        // single-node job: flat stays in the intra lane
+        let (_, single) = run_ranks_transport(
+            4,
+            CollectiveStrategy::Flat,
+            4,
+            |r, mut c| c.all_to_all(gid(1), &members, send(r)),
+        );
+        let s = single.stats.get(0, CommKind::AllToAll);
+        assert_eq!(s.inter_bytes, 0);
+        assert_eq!(s.intra_bytes, 96);
+    }
+
+    /// All-gather lanes: per-node blocks cross the wire once (leaders),
+    /// member contributions and redistribution stay intra.
+    #[test]
+    fn allgather_hier_lane_accounting() {
+        let members: Vec<usize> = (0..4).collect();
+        let (_, rez) = run_ranks_transport(
+            4,
+            CollectiveStrategy::Hierarchical,
+            2,
+            |r, mut c| {
+                let t = Tensor::from_vec(&[4], vec![r as f32; 4]); // 16B each
+                c.all_gather(gid(5), &members, &t)
+            },
+        );
+        // leader (rank 0): own 16B intra + remote block 32B intra redist,
+        // ships its node block (32B) inter
+        let l = rez.stats.get(0, CommKind::AllGather);
+        assert_eq!(l.intra_bytes, 16 + 32);
+        assert_eq!(l.inter_bytes, 32);
+        // non-leader (rank 1): own contribution only
+        let nl = rez.stats.get(1, CommKind::AllGather);
+        assert_eq!(nl.intra_bytes, 16);
+        assert_eq!(nl.inter_bytes, 0);
+    }
+
+    /// Mixed node sizes: one rank alone on its node still round-trips.
+    #[test]
+    fn hierarchical_uneven_nodes() {
+        // 3 ranks, nodes of 2: node0 {0,1}, node1 {2}
+        let members: Vec<usize> = (0..3).collect();
+        let flat = run_ranks(3, |r, mut c| {
+            let send: Vec<Vec<f32>> = (0..3).map(|j| vec![(10 * r + j) as f32]).collect();
+            c.all_to_all(gid(2), &members, send)
+        });
+        let (hier, _) = run_ranks_transport(
+            3,
+            CollectiveStrategy::Hierarchical,
+            2,
+            |r, mut c| {
+                let send: Vec<Vec<f32>> = (0..3).map(|j| vec![(10 * r + j) as f32]).collect();
+                c.all_to_all(gid(2), &members, send)
+            },
+        );
+        assert_eq!(flat, hier);
     }
 }

@@ -1,0 +1,195 @@
+//! Pluggable collective transport: the strategy selector, node-boundary
+//! map, and the per-group node plan the hierarchical backend runs on.
+//!
+//! Two backends implement every collective (see `rendezvous.rs` for the
+//! op bodies):
+//!
+//! * [`CollectiveStrategy::Flat`] — the original single-exchange
+//!   rendezvous. Topology-oblivious: it cannot attribute traffic to a
+//!   fabric, so on a multi-node job its whole volume is charged to the
+//!   inter-node (bottleneck) lane — the same convention the α-β cost
+//!   model uses when a group is not provably intra-node.
+//! * [`CollectiveStrategy::Hierarchical`] — decomposes **all-to-all**
+//!   and **all-gather** into an intra-node phase followed by an
+//!   inter-node phase (MoNTA / PXN style), using node boundaries from
+//!   `ClusterConfig::gpus_per_node`. Only bytes that genuinely cross a
+//!   node boundary are charged to the inter-node lane. Reducing ops
+//!   (all-reduce, reduce-scatter) keep the canonical member-order
+//!   reduction of the flat backend — so results stay **bit-identical
+//!   across backends** — while their volume is attributed
+//!   hierarchically (intra-node combine + one node-partial per leader
+//!   over the wire).
+//!
+//! The invariant locked down by `rust/tests/parity_matrix.rs`: switching
+//! the backend never changes a single bit of the training result, only
+//! where the bytes (and therefore the modeled time) go.
+
+/// Which transport implements the collectives of a [`super::Communicator`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum CollectiveStrategy {
+    /// Single flat exchange per collective (topology-oblivious).
+    #[default]
+    Flat,
+    /// Intra-node phase, then inter-node phase (topology-aware).
+    Hierarchical,
+}
+
+impl CollectiveStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            CollectiveStrategy::Flat => "flat",
+            CollectiveStrategy::Hierarchical => "hierarchical",
+        }
+    }
+
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "flat" => Some(CollectiveStrategy::Flat),
+            "hier" | "hierarchical" => Some(CollectiveStrategy::Hierarchical),
+            _ => None,
+        }
+    }
+}
+
+/// Node-boundary map for a job: rank `r` lives on node `r / node_size`.
+/// `node_size == 0` means "one big node" (no inter-node fabric).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeMap {
+    pub node_size: usize,
+}
+
+impl NodeMap {
+    pub fn new(node_size: usize) -> Self {
+        NodeMap { node_size }
+    }
+
+    /// Single-node convenience (everything intra).
+    pub fn single_node() -> Self {
+        NodeMap { node_size: 0 }
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        if self.node_size == 0 {
+            0
+        } else {
+            rank / self.node_size
+        }
+    }
+
+    /// Does a world of `world` ranks span more than one node?
+    pub fn spans_nodes(&self, world: usize) -> bool {
+        self.node_size > 0 && world > self.node_size
+    }
+
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+}
+
+/// Per-group node decomposition for one hierarchical collective.
+///
+/// `nodes[k] = (node_id, member positions on that node)`; because member
+/// lists are sorted ascending, positions within a node are contiguous
+/// and node ids appear in ascending order.
+#[derive(Debug, Clone)]
+pub struct NodePlan {
+    pub nodes: Vec<(usize, Vec<usize>)>,
+    /// Index into `nodes` of the calling rank's node.
+    pub my_node: usize,
+    /// The calling rank's position within its node's subset.
+    pub my_subpos: usize,
+}
+
+impl NodePlan {
+    /// Build the plan for `members` (sorted global ranks); `my_pos` is the
+    /// caller's position in `members`.
+    pub fn build(map: NodeMap, members: &[usize], my_pos: usize) -> NodePlan {
+        let mut nodes: Vec<(usize, Vec<usize>)> = Vec::new();
+        for (pos, &rank) in members.iter().enumerate() {
+            let node = map.node_of(rank);
+            match nodes.last_mut() {
+                Some((n, subset)) if *n == node => subset.push(pos),
+                _ => nodes.push((node, vec![pos])),
+            }
+        }
+        let mut my_node = 0;
+        let mut my_subpos = 0;
+        for (k, (_, subset)) in nodes.iter().enumerate() {
+            if let Some(i) = subset.iter().position(|&p| p == my_pos) {
+                my_node = k;
+                my_subpos = i;
+            }
+        }
+        NodePlan { nodes, my_node, my_subpos }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Positions of the caller's node subset.
+    pub fn my_subset(&self) -> &[usize] {
+        &self.nodes[self.my_node].1
+    }
+
+    /// Is the caller its node's leader (first member position on the node)?
+    pub fn is_leader(&self) -> bool {
+        self.my_subpos == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parse_and_name() {
+        assert_eq!(CollectiveStrategy::parse("flat"), Some(CollectiveStrategy::Flat));
+        assert_eq!(CollectiveStrategy::parse("hier"), Some(CollectiveStrategy::Hierarchical));
+        assert_eq!(
+            CollectiveStrategy::parse("hierarchical"),
+            Some(CollectiveStrategy::Hierarchical)
+        );
+        assert_eq!(CollectiveStrategy::parse("nope"), None);
+        assert_eq!(CollectiveStrategy::default().name(), "flat");
+    }
+
+    #[test]
+    fn node_map_boundaries() {
+        let m = NodeMap::new(4);
+        assert_eq!(m.node_of(0), 0);
+        assert_eq!(m.node_of(3), 0);
+        assert_eq!(m.node_of(4), 1);
+        assert!(m.spans_nodes(8));
+        assert!(!m.spans_nodes(4));
+        assert!(m.same_node(1, 2));
+        assert!(!m.same_node(3, 4));
+        let one = NodeMap::single_node();
+        assert_eq!(one.node_of(17), 0);
+        assert!(!one.spans_nodes(1000));
+    }
+
+    #[test]
+    fn plan_groups_contiguous_positions() {
+        // members {1, 2, 5, 6} with 4-GPU nodes: node0 {1,2}, node1 {5,6}
+        let plan = NodePlan::build(NodeMap::new(4), &[1, 2, 5, 6], 2);
+        assert_eq!(plan.nodes.len(), 2);
+        assert_eq!(plan.nodes[0], (0, vec![0, 1]));
+        assert_eq!(plan.nodes[1], (1, vec![2, 3]));
+        assert_eq!(plan.my_node, 1);
+        assert_eq!(plan.my_subpos, 0);
+        assert!(plan.is_leader());
+        let plan2 = NodePlan::build(NodeMap::new(4), &[1, 2, 5, 6], 1);
+        assert_eq!(plan2.my_node, 0);
+        assert_eq!(plan2.my_subpos, 1);
+        assert!(!plan2.is_leader());
+    }
+
+    #[test]
+    fn plan_single_node_is_one_subset() {
+        let plan = NodePlan::build(NodeMap::single_node(), &[0, 3, 9], 2);
+        assert_eq!(plan.n_nodes(), 1);
+        assert_eq!(plan.my_subset(), &[0, 1, 2]);
+    }
+}

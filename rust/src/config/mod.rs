@@ -9,5 +9,6 @@ pub mod training;
 
 pub use cluster::ClusterConfig;
 pub use model::ModelConfig;
+pub use crate::collectives::CollectiveStrategy;
 pub use parallel::{EngineOptions, ParallelConfig};
 pub use training::TrainingConfig;

@@ -8,6 +8,8 @@
 
 use anyhow::{bail, Result};
 
+use crate::collectives::CollectiveStrategy;
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ParallelConfig {
     /// Total ranks ("GPUs") in the job.
@@ -96,6 +98,14 @@ pub struct EngineOptions {
     /// Run the optimizer tile update through the AOT Pallas executable
     /// instead of the native rust path (identical math; see optimizer/).
     pub optimizer_use_pjrt: bool,
+    /// Collective transport backend (flat single-exchange vs hierarchical
+    /// intra-node-then-inter-node). Training results are bitwise identical
+    /// across backends; only byte-lane attribution and modeled cost change.
+    pub strategy: CollectiveStrategy,
+    /// Node boundary for the transport layer: rank r lives on node
+    /// `r / gpus_per_node`. 0 means one big node (no inter-node fabric);
+    /// real clusters take it from `ClusterConfig::gpus_per_node`.
+    pub gpus_per_node: usize,
 }
 
 impl Default for EngineOptions {
@@ -109,6 +119,8 @@ impl Default for EngineOptions {
             capacity_factor: 1.25,
             aux_loss_coef: 0.01,
             optimizer_use_pjrt: false,
+            strategy: CollectiveStrategy::Flat,
+            gpus_per_node: 0,
         }
     }
 }
@@ -118,6 +130,22 @@ impl EngineOptions {
     /// the communication optimizations.
     pub fn baseline() -> Self {
         EngineOptions { dtd: false, cac: false, ..Default::default() }
+    }
+
+    /// Select the hierarchical transport with the given node size.
+    pub fn hierarchical(gpus_per_node: usize) -> Self {
+        EngineOptions {
+            strategy: CollectiveStrategy::Hierarchical,
+            gpus_per_node,
+            ..Default::default()
+        }
+    }
+
+    /// Override the transport on an existing option set.
+    pub fn with_transport(mut self, strategy: CollectiveStrategy, gpus_per_node: usize) -> Self {
+        self.strategy = strategy;
+        self.gpus_per_node = gpus_per_node;
+        self
     }
 }
 
@@ -156,6 +184,21 @@ mod tests {
         let p = ParallelConfig::derive(4, 1, 2).unwrap();
         assert_eq!(p.local_experts(8).unwrap(), 4);
         assert!(p.local_experts(3).is_err());
+    }
+
+    #[test]
+    fn transport_selection_threads_through_options() {
+        let d = EngineOptions::default();
+        assert_eq!(d.strategy, CollectiveStrategy::Flat);
+        assert_eq!(d.gpus_per_node, 0);
+        let h = EngineOptions::hierarchical(8);
+        assert_eq!(h.strategy, CollectiveStrategy::Hierarchical);
+        assert_eq!(h.gpus_per_node, 8);
+        // the communication-optimization switches are independent axes
+        assert_eq!(h.dtd, d.dtd);
+        let b = EngineOptions::baseline().with_transport(CollectiveStrategy::Hierarchical, 4);
+        assert!(!b.dtd && !b.cac);
+        assert_eq!(b.gpus_per_node, 4);
     }
 
     #[test]

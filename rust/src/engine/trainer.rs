@@ -98,7 +98,7 @@ impl Trainer {
             bail!("{} experts not divisible by ep={}", manifest.dims.n_experts, cfg.ep);
         }
         let groups = topo.groups(rank);
-        let comm = Communicator::new(rez, rank);
+        let comm = Communicator::with_transport(rez, rank, opts.strategy, opts.gpus_per_node);
         let mut rt = Runtime::new()?;
         rt.load_all(&manifest, "")?;
 

@@ -5,10 +5,30 @@
 //! ICS '23):
 //!
 //! * **L3 (this crate)** — the coordinator: TED topology (Eq. 1), functional
-//!   in-process collectives, the MoE router + DTD communication optimization,
-//!   a training engine with activation checkpointing + CAC, a ZeRO-1 sharded
-//!   *tiled* AdamW optimizer, and the paper's analytic memory & performance
-//!   models that regenerate every table and figure.
+//!   in-process collectives behind a **pluggable transport layer**, the MoE
+//!   router + DTD communication optimization, a training engine with
+//!   activation checkpointing + CAC, a ZeRO-1 sharded *tiled* AdamW
+//!   optimizer, and the paper's analytic memory & performance models that
+//!   regenerate every table and figure.
+//!
+//! ## Collective transport backends
+//!
+//! The collectives (`collectives::Communicator`) are implemented by one of
+//! two transports, selected via [`config::EngineOptions`] (`strategy` +
+//! `gpus_per_node`), `Communicator::with_transport`, or the CLI
+//! (`ted train --transport flat|hierarchical --gpus-per-node N`):
+//!
+//! * **flat** — one exchange per collective, topology-oblivious; its byte
+//!   accounting lands in the inter-node (bottleneck) lane whenever the job
+//!   spans nodes.
+//! * **hierarchical** — decomposes all-to-all and all-gather into an
+//!   intra-node phase followed by an inter-node phase using the node
+//!   boundaries of the cluster (`gpus_per_node`), and attributes every
+//!   byte to the fabric it actually crosses. Reductions stay in canonical
+//!   member order, so **training results are bitwise identical across
+//!   backends** — the topology-parity matrix in `rust/tests/parity_matrix.rs`
+//!   enforces this, and `perfmodel::collective_cost` prices the two phases
+//!   separately (`*_phased`, `lane_bytes_*`).
 //! * **L2 (python/compile/model.py)** — per-rank JAX block programs, AOT
 //!   lowered to HLO text at build time.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (fused expert FFN,

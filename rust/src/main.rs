@@ -26,6 +26,7 @@ USAGE:
   ted train  --config NAME [--world N --tp N --ep N] [--steps N] [--micro N]
              [--data synthetic|corpus] [--lr X] [--no-dtd] [--no-cac]
              [--no-tiling] [--batch N] [--verbose]
+             [--transport flat|hierarchical] [--gpus-per-node N]
   ted info   --model {1.3B|2.7B|6.7B|13.0B} --experts E --gpus G --tp T
              [--cluster summit|thetagpu|perlmutter]
   ted figures [--only ID]    (alias of `cargo run --example paper_figures`)
@@ -66,7 +67,7 @@ fn run() -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "config", "world", "tp", "ep", "steps", "micro", "lr", "seed", "data", "batch",
-        "no-dtd", "no-cac", "no-tiling", "verbose",
+        "no-dtd", "no-cac", "no-tiling", "verbose", "transport", "gpus-per-node",
     ])?;
     let config = args.get_or("config", "tiny").to_string();
     let tp = args.get_usize("tp", 2)?;
@@ -80,10 +81,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     let manifest = Manifest::load(&Manifest::variant_dir(&root, &config, tp, batch))
         .map_err(|e| anyhow!("{e:#}\nhint: run `make artifacts` (or artifacts-e2e)"))?;
     let topo = Topology::new(ParallelConfig::derive(world, tp, ep)?)?;
+    let strategy = match args.get("transport") {
+        None => ted::config::CollectiveStrategy::Flat,
+        Some(s) => ted::config::CollectiveStrategy::parse(s)
+            .ok_or_else(|| anyhow!("unknown --transport '{s}' (flat|hierarchical)"))?,
+    };
     let opts = EngineOptions {
         dtd: !args.flag("no-dtd"),
         cac: !args.flag("no-cac"),
         optimizer_tiling: !args.flag("no-tiling"),
+        strategy,
+        gpus_per_node: args.get_usize("gpus-per-node", 0)?,
         ..Default::default()
     };
     let tcfg = TrainingConfig {
@@ -107,8 +115,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
 
     println!(
-        "ted train: {config} on world={world} (tensor={tp} expert={ep} dp_exp={} dp_nonexp={}) dtd={} cac={} tiling={}",
-        topo.cfg.dp_exp, topo.cfg.dp_nonexp, opts.dtd, opts.cac, opts.optimizer_tiling
+        "ted train: {config} on world={world} (tensor={tp} expert={ep} dp_exp={} dp_nonexp={}) dtd={} cac={} tiling={} transport={}",
+        topo.cfg.dp_exp, topo.cfg.dp_nonexp, opts.dtd, opts.cac, opts.optimizer_tiling,
+        opts.strategy.name()
     );
     let run = RunConfig {
         steps,
@@ -119,10 +128,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let log = train(&topo, &manifest, opts, tcfg, run, data)?;
     println!("\ndone in {:.1}s; final loss {:.4}", log.wall_s, log.steps.last().unwrap().loss);
-    println!("comm volumes:");
-    for (kind, bytes) in log.comm_bytes {
+    println!("comm volumes (total / intra-node / inter-node):");
+    for (i, (kind, bytes)) in log.comm_bytes.into_iter().enumerate() {
         if bytes > 0 {
-            println!("  {:<14} {bytes:>14} bytes", kind.name());
+            println!(
+                "  {:<14} {bytes:>14} {:>14} {:>14} bytes",
+                kind.name(),
+                log.comm_intra_bytes[i].1,
+                log.comm_inter_bytes[i].1
+            );
         }
     }
     Ok(())

@@ -17,6 +17,12 @@
 //! Payload format: each row is `[key, x_0 .. x_{D-1}]` where
 //! `key = expert_id * capacity + slot` uniquely addresses a buffer cell
 //! within the EP group; f32 encodes the key exactly (keys < 2^24).
+//!
+//! The dispatch/return path is transport-agnostic: the EP all-to-all and
+//! the DTD all-gather run on whichever backend the [`Communicator`] was
+//! built with (`EngineOptions::strategy`), and the round-trip tests below
+//! assert bitwise-identical results across flat and hierarchical
+//! transports — DTD's `G_tensor x` payload reduction holds per lane.
 
 use crate::collectives::Communicator;
 use crate::moe::router::RoutingDecision;
@@ -223,7 +229,7 @@ pub fn return_to_origin(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::collectives::{CommKind, Rendezvous};
+    use crate::collectives::{CollectiveStrategy, CommKind, Rendezvous};
     use crate::config::ParallelConfig;
     use crate::moe::router::route_top1;
     use crate::topology::Topology;
@@ -231,8 +237,20 @@ mod tests {
 
     /// Full dispatch->return round trip on a (tp, ep) grid; every rank
     /// routes `n` tokens with a deterministic pattern; expert "compute"
-    /// negates rows so we can verify the round trip.
-    fn round_trip(tp: usize, ep: usize, dtd: bool, n: usize, d: usize, cap: usize, n_experts: usize) {
+    /// negates rows so we can verify the round trip. Runs on the given
+    /// transport (`gpn` = gpus per node; 0 = single node).
+    #[allow(clippy::too_many_arguments)]
+    fn round_trip_on(
+        strategy: CollectiveStrategy,
+        gpn: usize,
+        tp: usize,
+        ep: usize,
+        dtd: bool,
+        n: usize,
+        d: usize,
+        cap: usize,
+        n_experts: usize,
+    ) {
         let world = tp * ep;
         let topo = Topology::new(ParallelConfig::derive(world, tp, ep).unwrap()).unwrap();
         let rez = Rendezvous::new(world);
@@ -245,7 +263,7 @@ mod tests {
                     let topo = topo.clone();
                     s.spawn(move || {
                         let g = topo.groups(r);
-                        let mut comm = Communicator::new(rez, r);
+                        let mut comm = Communicator::with_transport(rez, r, strategy, gpn);
                         // tokens identical across the TP group: value encodes
                         // (dp_nonexp_idx, token) so EP peers differ.
                         let dpi = g.coords.dp_nonexp_idx;
@@ -316,6 +334,11 @@ mod tests {
         }
     }
 
+    /// Flat single-node transport (the historical default).
+    fn round_trip(tp: usize, ep: usize, dtd: bool, n: usize, d: usize, cap: usize, n_experts: usize) {
+        round_trip_on(CollectiveStrategy::Flat, 0, tp, ep, dtd, n, d, cap, n_experts);
+    }
+
     #[test]
     fn round_trip_no_tp() {
         round_trip(1, 2, false, 6, 4, 16, 2);
@@ -334,6 +357,16 @@ mod tests {
     #[test]
     fn round_trip_tp4_dtd_multi_local_expert() {
         round_trip(4, 2, true, 8, 3, 24, 4); // 2 local experts per EP rank
+    }
+
+    #[test]
+    fn round_trip_hierarchical_transport() {
+        // same workloads over the hierarchical backend, nodes of 2: EP
+        // groups span nodes at tp=2 (members stride by tp)
+        for dtd in [false, true] {
+            round_trip_on(CollectiveStrategy::Hierarchical, 2, 2, 2, dtd, 6, 4, 16, 2);
+        }
+        round_trip_on(CollectiveStrategy::Hierarchical, 4, 4, 2, true, 8, 3, 24, 4);
     }
 
     #[test]
@@ -390,6 +423,68 @@ mod tests {
         let with = bytes(true);
         // row payload halves exactly with tp=2 (key+4 floats per row either way)
         assert_eq!(with * 2, without, "DTD should halve A2A bytes (got {with} vs {without})");
+    }
+
+    #[test]
+    fn dtd_reduction_holds_per_lane_hierarchical() {
+        // same forced-cross-EP workload as above, hierarchical transport on
+        // nodes of 2: the EP a2a crosses nodes (inter lane), the DTD TP
+        // all-gather stays on-node (intra lane); DTD must halve the a2a
+        // volume *within its lane*
+        let lanes = |dtd: bool| -> (u64, u64) {
+            let tp = 2;
+            let ep = 2;
+            let world = 4;
+            let topo = Topology::new(ParallelConfig::derive(world, tp, ep).unwrap()).unwrap();
+            let rez = Rendezvous::new(world);
+            std::thread::scope(|s| {
+                for r in 0..world {
+                    let rez = Arc::clone(&rez);
+                    let topo = topo.clone();
+                    s.spawn(move || {
+                        let g = topo.groups(r);
+                        let mut comm = Communicator::with_transport(
+                            rez, r, CollectiveStrategy::Hierarchical, 2);
+                        let n = 8;
+                        let d = 4;
+                        let cap = 16;
+                        let rows = Tensor::zeros(&[n, d]);
+                        let mut probs = Tensor::zeros(&[n, 2]);
+                        for i in 0..n {
+                            let e = 1 - g.coords.ep_idx;
+                            probs.row_mut(i)[e] = 0.9;
+                            probs.row_mut(i)[1 - e] = 0.1;
+                        }
+                        let ep_pos = g.ep_group.iter().position(|&m| m == r).unwrap();
+                        let tp_pos = g.tp_group.iter().position(|&m| m == r).unwrap();
+                        let dec = route_top1(
+                            &mut comm, g.ep_group_id, &g.ep_group, ep_pos, &probs, 2, cap,
+                        );
+                        let mut ctx = MoeComm {
+                            comm: &mut comm,
+                            ep_gid: g.ep_group_id,
+                            ep_members: &g.ep_group,
+                            ep_pos,
+                            tp_gid: g.tp_group_id,
+                            tp_members: &g.tp_group,
+                            tp_pos,
+                            dtd,
+                        };
+                        let disp = dispatch(&mut ctx, &rows, &dec, 1, cap);
+                        let _ = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, 1, cap);
+                    });
+                }
+            });
+            let a2a = rez.stats.total(CommKind::AllToAll);
+            (a2a.intra_bytes, a2a.inter_bytes)
+        };
+        let (intra_off, inter_off) = lanes(false);
+        let (intra_on, inter_on) = lanes(true);
+        // EP groups {0,2}/{1,3} sit on different 2-GPU nodes: pure inter
+        assert_eq!(intra_off, 0);
+        assert_eq!(intra_on, 0);
+        assert!(inter_off > 0);
+        assert_eq!(inter_on * 2, inter_off, "DTD must halve the inter-node a2a lane");
     }
 
     #[test]

@@ -13,8 +13,11 @@
 //! CAC removes the recompute copies of the forward collectives; DTD divides
 //! the A2A payload by `G_tensor` and adds the TP all-gather.
 
+use crate::collectives::CollectiveStrategy;
 use crate::config::{ClusterConfig, ModelConfig, ParallelConfig};
-use crate::perfmodel::collective_cost::{allgather_s, allreduce_s, alltoall_s, GroupShape};
+use crate::perfmodel::collective_cost::{
+    allgather_phased, allreduce_phased, alltoall_phased,
+};
 use crate::perfmodel::flops::flops_per_iter_checkpointed;
 use crate::topology::Topology;
 
@@ -23,19 +26,34 @@ pub struct CommOpts {
     pub dtd: bool,
     pub cac: bool,
     pub capacity_factor: f64,
+    /// Collective transport backend the scenario is priced with: flat
+    /// prices every spanning group at the bottleneck fabric; hierarchical
+    /// prices the intra-node and inter-node phases separately.
+    pub strategy: CollectiveStrategy,
 }
 
 impl CommOpts {
     pub fn baseline() -> Self {
-        CommOpts { dtd: false, cac: false, capacity_factor: 1.25 }
+        CommOpts {
+            dtd: false,
+            cac: false,
+            capacity_factor: 1.25,
+            strategy: CollectiveStrategy::Flat,
+        }
     }
 
     pub fn optimized() -> Self {
-        CommOpts { dtd: true, cac: true, capacity_factor: 1.25 }
+        CommOpts { dtd: true, cac: true, ..Self::baseline() }
     }
 
     pub fn dtd_only() -> Self {
-        CommOpts { dtd: true, cac: false, capacity_factor: 1.25 }
+        CommOpts { dtd: true, cac: false, ..Self::baseline() }
+    }
+
+    /// Same optimization switches, hierarchical transport.
+    pub fn with_strategy(mut self, strategy: CollectiveStrategy) -> Self {
+        self.strategy = strategy;
+        self
     }
 }
 
@@ -75,10 +93,18 @@ pub fn batch_time(s: &Scenario) -> BatchTime {
     let c = &s.cluster;
     let topo = Topology::new(par).expect("valid parallel config");
     let g0 = topo.groups(0);
-    let tp_shape = GroupShape::of(&g0.tp_group, c);
-    let ep_shape = GroupShape::of(&g0.ep_group, c);
-    let dp_ne_shape = GroupShape::of(&g0.dp_nonexp_group, c);
-    let dp_e_shape = GroupShape::of(&g0.dp_exp_group, c);
+    let strat = s.opts.strategy;
+    // per-backend pricing: flat charges a spanning group at the bottleneck
+    // fabric, hierarchical prices each phase on its own fabric
+    let allreduce_c = |members: &[usize], bytes: f64| -> f64 {
+        allreduce_phased(c, strat, members, bytes).total()
+    };
+    let allgather_c = |members: &[usize], bytes: f64| -> f64 {
+        allgather_phased(c, strat, members, bytes).total()
+    };
+    let alltoall_c = |members: &[usize], bytes: f64| -> f64 {
+        alltoall_phased(c, strat, members, bytes).total()
+    };
 
     let l = m.n_layers as f64;
     let moe_layers = (m.n_layers / 2) as f64;
@@ -100,29 +126,29 @@ pub fn batch_time(s: &Scenario) -> BatchTime {
     let attn_ars = l * passes_fwd(passes);
     let ffn_ars = (l - moe_layers) * passes_fwd(passes);
     let expert_ars = moe_layers * passes_fwd(passes);
-    let mut allreduce_s_total = (attn_ars + ffn_ars) * allreduce_s(c, tp_shape, act_bytes)
-        + expert_ars * allreduce_s(c, tp_shape, cap_bytes);
+    let mut allreduce_s_total = (attn_ars + ffn_ars) * allreduce_c(&g0.tp_group, act_bytes)
+        + expert_ars * allreduce_c(&g0.tp_group, cap_bytes);
 
     // ---- expert-parallel all-to-alls ----
     // 2 per MoE layer per pass (dispatch + return)
     let a2a_count = moe_layers * 2.0 * passes;
     let a2a_bytes = if s.opts.dtd { act_bytes / par.tp as f64 } else { act_bytes };
-    let alltoall_s_total = a2a_count * alltoall_s(c, ep_shape, a2a_bytes);
+    let alltoall_s_total = a2a_count * alltoall_c(&g0.ep_group, a2a_bytes);
 
     // ---- all-gathers ----
     let mut allgather_s_total = 0.0;
     if s.opts.dtd {
         // one TP all-gather per A2A, each rank contributing its 1/tp slice
-        allgather_s_total += a2a_count * allgather_s(c, tp_shape, act_bytes / par.tp as f64);
+        allgather_s_total += a2a_count * allgather_c(&g0.tp_group, act_bytes / par.tp as f64);
     }
 
     // ---- gradient reduction + ZeRO-1 parameter all-gather (per iter) ----
     let np_ne_gpu = m.n_params_nonexpert() as f64 / par.tp as f64;
     let np_e_gpu = m.n_params_expert(s.n_experts) as f64 / (par.tp * par.ep) as f64;
-    allreduce_s_total += allreduce_s(c, dp_ne_shape, 2.0 * np_ne_gpu);
-    allreduce_s_total += allreduce_s(c, dp_e_shape, 2.0 * np_e_gpu);
-    allgather_s_total += allgather_s(c, dp_ne_shape, 2.0 * np_ne_gpu / par.dp_nonexp as f64);
-    allgather_s_total += allgather_s(c, dp_e_shape, 2.0 * np_e_gpu / par.dp_exp as f64);
+    allreduce_s_total += allreduce_c(&g0.dp_nonexp_group, 2.0 * np_ne_gpu);
+    allreduce_s_total += allreduce_c(&g0.dp_exp_group, 2.0 * np_e_gpu);
+    allgather_s_total += allgather_c(&g0.dp_nonexp_group, 2.0 * np_ne_gpu / par.dp_nonexp as f64);
+    allgather_s_total += allgather_c(&g0.dp_exp_group, 2.0 * np_e_gpu / par.dp_exp as f64);
 
     BatchTime {
         compute_s,
@@ -210,6 +236,25 @@ mod tests {
             "CAC alone should cut A2A by exactly 1/3 at tp=1");
         let gain = 1.0 - opt.total() / base.total();
         assert!((0.0..0.15).contains(&gain), "gain {gain}");
+    }
+
+    #[test]
+    fn hierarchical_transport_prices_below_flat() {
+        // same workload, same optimization switches: the topology-aware
+        // transport can only help (EP/DP groups span Summit nodes, so their
+        // intra-node share moves off the InfiniBand bottleneck)
+        let flat = batch_time(&scenario(CommOpts::baseline()));
+        let hier = batch_time(&scenario(
+            CommOpts::baseline().with_strategy(CollectiveStrategy::Hierarchical),
+        ));
+        assert_eq!(hier.compute_s, flat.compute_s);
+        assert!(hier.alltoall_s < flat.alltoall_s, "{} vs {}", hier.alltoall_s, flat.alltoall_s);
+        assert!(hier.comm_s() < flat.comm_s());
+        // and it composes with DTD + CAC
+        let both = batch_time(&scenario(
+            CommOpts::optimized().with_strategy(CollectiveStrategy::Hierarchical),
+        ));
+        assert!(both.total() < batch_time(&scenario(CommOpts::optimized())).total());
     }
 
     #[test]

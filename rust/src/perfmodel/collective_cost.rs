@@ -7,7 +7,26 @@
 //!   all-to-all:  t = (n-1)/n * local_bytes / bw + (n-1) α
 //! where `bw` is the per-direction effective bandwidth of the *slowest*
 //! link the group crosses.
+//!
+//! Two layers of model live here:
+//!
+//! * the classic single-fabric functions above (used by the flat
+//!   transport: the whole op priced at the bottleneck link), and
+//! * **phased** variants ([`alltoall_phased`], [`allgather_phased`],
+//!   [`allreduce_phased`]) that price the hierarchical backend's
+//!   intra-node and inter-node phases separately, plus analytic
+//!   **lane-byte predictions** (`lane_bytes_*`) that mirror
+//!   `collectives::accounting` exactly — the integration tests assert
+//!   measured == predicted for both backends.
+//!
+//! Note one deliberate asymmetry: *time* pricing for the flat backend is
+//! per-group (a provably node-local group still rides NVLink), while the
+//! flat backend's *byte lanes* are per-job (it cannot attribute traffic,
+//! so everything lands in the bottleneck lane on multi-node jobs). The
+//! `lane_bytes_*` functions mirror the accounting convention, not the
+//! pricing one; under the hierarchical backend the two coincide.
 
+use crate::collectives::{CollectiveStrategy, NodeMap, NodePlan};
 use crate::config::ClusterConfig;
 
 /// Does a communicator group live entirely inside one node?
@@ -70,6 +89,291 @@ pub fn alltoall_s(cluster: &ClusterConfig, g: GroupShape, local_bytes: f64) -> f
     (n - 1.0) / n * local_bytes / bw + (n - 1.0) * alpha
 }
 
+// ---------------------------------------------------------------------
+// phased (hierarchical) pricing
+// ---------------------------------------------------------------------
+
+/// Cost of one collective split by fabric; flat ops fill a single field.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhasedCost {
+    pub intra_s: f64,
+    pub inter_s: f64,
+}
+
+impl PhasedCost {
+    pub fn total(&self) -> f64 {
+        self.intra_s + self.inter_s
+    }
+}
+
+/// Largest per-node member count and node count for a group.
+fn node_profile(members: &[usize], gpus_per_node: usize) -> (usize, usize) {
+    let map = NodeMap::new(gpus_per_node);
+    let plan = NodePlan::build(map, members, 0);
+    // NodePlan wants a valid position; position 0 always exists for
+    // non-empty groups and the node decomposition is caller-independent.
+    let max_subset = plan.nodes.iter().map(|(_, s)| s.len()).max().unwrap_or(1);
+    (max_subset, plan.n_nodes())
+}
+
+fn intra_shape(size: usize) -> GroupShape {
+    GroupShape { size, intranode: true }
+}
+
+fn inter_shape(size: usize) -> GroupShape {
+    GroupShape { size, intranode: false }
+}
+
+/// All-to-all priced per backend. `local_bytes` is one rank's total
+/// payload; `same_node_frac` of it stays on the node under the
+/// hierarchical decomposition (for a node-aligned group of `n` members
+/// with `k` per node that fraction is `(k-1)/(n-1)`).
+pub fn alltoall_phased(
+    cluster: &ClusterConfig,
+    strategy: CollectiveStrategy,
+    members: &[usize],
+    local_bytes: f64,
+) -> PhasedCost {
+    let n = members.len();
+    if n <= 1 {
+        return PhasedCost::default();
+    }
+    match strategy {
+        CollectiveStrategy::Flat => {
+            let g = GroupShape::of(members, cluster);
+            let t = alltoall_s(cluster, g, local_bytes);
+            if g.intranode {
+                PhasedCost { intra_s: t, inter_s: 0.0 }
+            } else {
+                PhasedCost { intra_s: 0.0, inter_s: t }
+            }
+        }
+        CollectiveStrategy::Hierarchical => {
+            let (k, nodes) = node_profile(members, cluster.gpus_per_node);
+            if nodes == 1 {
+                return PhasedCost {
+                    intra_s: alltoall_s(cluster, intra_shape(n), local_bytes),
+                    inter_s: 0.0,
+                };
+            }
+            let same_frac = (k.saturating_sub(1)) as f64 / (n - 1) as f64;
+            let intra_bytes = local_bytes * same_frac;
+            let inter_bytes = local_bytes - intra_bytes;
+            PhasedCost {
+                intra_s: alltoall_s(cluster, intra_shape(k), intra_bytes),
+                inter_s: alltoall_s(cluster, inter_shape(n), inter_bytes),
+            }
+        }
+    }
+}
+
+/// All-gather priced per backend: intra-node gather of `bytes_per_rank`,
+/// leaders exchange node blocks (`k * bytes_per_rank`) across `nodes`
+/// endpoints, then intra-node redistribution of the remote blocks.
+pub fn allgather_phased(
+    cluster: &ClusterConfig,
+    strategy: CollectiveStrategy,
+    members: &[usize],
+    bytes_per_rank: f64,
+) -> PhasedCost {
+    let n = members.len();
+    if n <= 1 {
+        return PhasedCost::default();
+    }
+    match strategy {
+        CollectiveStrategy::Flat => {
+            let g = GroupShape::of(members, cluster);
+            let t = allgather_s(cluster, g, bytes_per_rank);
+            if g.intranode {
+                PhasedCost { intra_s: t, inter_s: 0.0 }
+            } else {
+                PhasedCost { intra_s: 0.0, inter_s: t }
+            }
+        }
+        CollectiveStrategy::Hierarchical => {
+            let (k, nodes) = node_profile(members, cluster.gpus_per_node);
+            if nodes == 1 {
+                return PhasedCost {
+                    intra_s: allgather_s(cluster, intra_shape(n), bytes_per_rank),
+                    inter_s: 0.0,
+                };
+            }
+            let block = k as f64 * bytes_per_rank;
+            // gather + redistribution on the node, block exchange on the wire
+            let intra = allgather_s(cluster, intra_shape(k), bytes_per_rank)
+                + allgather_s(cluster, intra_shape(k), (nodes - 1) as f64 * block / k as f64);
+            let inter = allgather_s(cluster, inter_shape(nodes), block);
+            PhasedCost { intra_s: intra, inter_s: inter }
+        }
+    }
+}
+
+/// All-reduce priced per backend: intra-node reduce + broadcast around an
+/// inter-node all-reduce of one node partial per leader.
+pub fn allreduce_phased(
+    cluster: &ClusterConfig,
+    strategy: CollectiveStrategy,
+    members: &[usize],
+    bytes: f64,
+) -> PhasedCost {
+    let n = members.len();
+    if n <= 1 {
+        return PhasedCost::default();
+    }
+    match strategy {
+        CollectiveStrategy::Flat => {
+            let g = GroupShape::of(members, cluster);
+            let t = allreduce_s(cluster, g, bytes);
+            if g.intranode {
+                PhasedCost { intra_s: t, inter_s: 0.0 }
+            } else {
+                PhasedCost { intra_s: 0.0, inter_s: t }
+            }
+        }
+        CollectiveStrategy::Hierarchical => {
+            let (k, nodes) = node_profile(members, cluster.gpus_per_node);
+            if nodes == 1 {
+                return PhasedCost {
+                    intra_s: allreduce_s(cluster, intra_shape(n), bytes),
+                    inter_s: 0.0,
+                };
+            }
+            PhasedCost {
+                intra_s: allreduce_s(cluster, intra_shape(k), bytes),
+                inter_s: allreduce_s(cluster, inter_shape(nodes), bytes),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// analytic lane-byte predictions (mirror collectives::accounting)
+// ---------------------------------------------------------------------
+
+/// Predicted (intra, inter) payload bytes recorded by rank `members[my_pos]`
+/// for one all-to-all with per-destination payload sizes `send_bytes`.
+pub fn lane_bytes_alltoall(
+    strategy: CollectiveStrategy,
+    members: &[usize],
+    my_pos: usize,
+    send_bytes: &[u64],
+    gpus_per_node: usize,
+    world: usize,
+) -> (u64, u64) {
+    assert_eq!(send_bytes.len(), members.len());
+    if members.len() <= 1 {
+        return (0, 0);
+    }
+    let map = NodeMap::new(gpus_per_node);
+    let nonself: u64 = send_bytes
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != my_pos)
+        .map(|(_, &b)| b)
+        .sum();
+    match strategy {
+        CollectiveStrategy::Flat => {
+            if map.spans_nodes(world) {
+                (0, nonself)
+            } else {
+                (nonself, 0)
+            }
+        }
+        CollectiveStrategy::Hierarchical => {
+            let me = members[my_pos];
+            let mut intra = 0;
+            let mut inter = 0;
+            for (i, &b) in send_bytes.iter().enumerate() {
+                if i == my_pos {
+                    continue;
+                }
+                if map.same_node(me, members[i]) {
+                    intra += b;
+                } else {
+                    inter += b;
+                }
+            }
+            (intra, inter)
+        }
+    }
+}
+
+/// Predicted (intra, inter) bytes recorded by rank `members[my_pos]` for
+/// one all-gather where member `i` contributes `contrib_bytes[i]`.
+pub fn lane_bytes_allgather(
+    strategy: CollectiveStrategy,
+    members: &[usize],
+    my_pos: usize,
+    contrib_bytes: &[u64],
+    gpus_per_node: usize,
+    world: usize,
+) -> (u64, u64) {
+    assert_eq!(contrib_bytes.len(), members.len());
+    if members.len() <= 1 {
+        return (0, 0);
+    }
+    let map = NodeMap::new(gpus_per_node);
+    let own = contrib_bytes[my_pos];
+    match strategy {
+        CollectiveStrategy::Flat => {
+            if map.spans_nodes(world) {
+                (0, own)
+            } else {
+                (own, 0)
+            }
+        }
+        CollectiveStrategy::Hierarchical => {
+            let plan = NodePlan::build(map, members, my_pos);
+            if plan.n_nodes() == 1 {
+                return (own, 0);
+            }
+            let subset = plan.my_subset();
+            let my_block: u64 = subset.iter().map(|&p| contrib_bytes[p]).sum();
+            let total: u64 = contrib_bytes.iter().sum();
+            let mut intra = if subset.len() > 1 { own } else { 0 };
+            let mut inter = 0;
+            if plan.is_leader() {
+                inter += my_block;
+                if subset.len() > 1 {
+                    intra += total - my_block;
+                }
+            }
+            (intra, inter)
+        }
+    }
+}
+
+/// Predicted (intra, inter) bytes recorded by rank `members[my_pos]` for
+/// one all-reduce (or reduce-scatter) of `bytes` payload.
+pub fn lane_bytes_allreduce(
+    strategy: CollectiveStrategy,
+    members: &[usize],
+    my_pos: usize,
+    bytes: u64,
+    gpus_per_node: usize,
+    world: usize,
+) -> (u64, u64) {
+    if members.len() <= 1 {
+        return (0, 0);
+    }
+    let map = NodeMap::new(gpus_per_node);
+    match strategy {
+        CollectiveStrategy::Flat => {
+            if map.spans_nodes(world) {
+                (0, bytes)
+            } else {
+                (bytes, 0)
+            }
+        }
+        CollectiveStrategy::Hierarchical => {
+            let plan = NodePlan::build(map, members, my_pos);
+            let intra = if plan.my_subset().len() > 1 { bytes } else { 0 };
+            let inter = if plan.n_nodes() > 1 && plan.is_leader() { bytes } else { 0 };
+            (intra, inter)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,5 +422,71 @@ mod tests {
         let c = summit();
         let g = GroupShape { size: 8, intranode: false };
         assert!(alltoall_s(&c, g, 1e8) < allreduce_s(&c, g, 1e8));
+    }
+
+    #[test]
+    fn phased_alltoall_beats_flat_on_spanning_groups() {
+        // 12 ranks over 2 Summit nodes (6/node): 5 of 11 peers are local
+        let c = summit();
+        let members: Vec<usize> = (0..12).collect();
+        let flat = alltoall_phased(&c, CollectiveStrategy::Flat, &members, 1e9);
+        let hier = alltoall_phased(&c, CollectiveStrategy::Hierarchical, &members, 1e9);
+        assert_eq!(flat.intra_s, 0.0);
+        assert!(flat.inter_s > 0.0);
+        assert!(hier.inter_s < flat.inter_s, "{} vs {}", hier.inter_s, flat.inter_s);
+        assert!(hier.total() < flat.total());
+        // node-local group: both price at NVLink, no inter phase
+        let local: Vec<usize> = (0..6).collect();
+        let f2 = alltoall_phased(&c, CollectiveStrategy::Flat, &local, 1e9);
+        let h2 = alltoall_phased(&c, CollectiveStrategy::Hierarchical, &local, 1e9);
+        assert_eq!(f2.inter_s, 0.0);
+        assert_eq!(h2.inter_s, 0.0);
+        assert!((f2.intra_s - h2.intra_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phased_allgather_and_allreduce_split_fabrics() {
+        let c = summit();
+        let members: Vec<usize> = (0..12).collect();
+        let ag = allgather_phased(&c, CollectiveStrategy::Hierarchical, &members, 1e8);
+        assert!(ag.intra_s > 0.0 && ag.inter_s > 0.0);
+        let ar = allreduce_phased(&c, CollectiveStrategy::Hierarchical, &members, 1e8);
+        assert!(ar.intra_s > 0.0 && ar.inter_s > 0.0);
+        // hierarchical all-reduce of a spanning group beats the flat price
+        // (the big volume rides NVLink; only node partials cross the wire)
+        let flat = allreduce_phased(&c, CollectiveStrategy::Flat, &members, 1e8);
+        assert!(ar.total() < flat.total());
+    }
+
+    #[test]
+    fn lane_bytes_mirror_transport_conventions() {
+        // 4 ranks on 2 nodes of 2; rank 0 sends 8B to each of 3 peers
+        let members = [0usize, 1, 2, 3];
+        let send = [0u64, 8, 8, 8];
+        let (fi, fx) =
+            lane_bytes_alltoall(CollectiveStrategy::Flat, &members, 0, &send, 2, 4);
+        assert_eq!((fi, fx), (0, 24));
+        let (hi, hx) =
+            lane_bytes_alltoall(CollectiveStrategy::Hierarchical, &members, 0, &send, 2, 4);
+        assert_eq!((hi, hx), (8, 16));
+        // single-node job: flat volume stays intra
+        let (si, sx) =
+            lane_bytes_alltoall(CollectiveStrategy::Flat, &members, 0, &send, 0, 4);
+        assert_eq!((si, sx), (24, 0));
+        // all-gather: leader ships node block inter + redistributes
+        let contrib = [16u64, 16, 16, 16];
+        let (li, lx) =
+            lane_bytes_allgather(CollectiveStrategy::Hierarchical, &members, 0, &contrib, 2, 4);
+        assert_eq!((li, lx), (16 + 32, 32));
+        let (ni, nx) =
+            lane_bytes_allgather(CollectiveStrategy::Hierarchical, &members, 1, &contrib, 2, 4);
+        assert_eq!((ni, nx), (16, 0));
+        // all-reduce leaders ship one partial each
+        let (ri, rx) =
+            lane_bytes_allreduce(CollectiveStrategy::Hierarchical, &members, 2, 64, 2, 4);
+        assert_eq!((ri, rx), (64, 64)); // rank 2 is node 1's leader
+        let (qi, qx) =
+            lane_bytes_allreduce(CollectiveStrategy::Hierarchical, &members, 3, 64, 2, 4);
+        assert_eq!((qi, qx), (64, 0));
     }
 }

@@ -11,5 +11,8 @@ pub mod figures;
 pub mod flops;
 
 pub use batch_time::{batch_time, BatchTime, CommOpts, Scenario};
-pub use collective_cost::{allgather_s, allreduce_s, alltoall_s, GroupShape};
+pub use collective_cost::{
+    allgather_phased, allgather_s, allreduce_phased, allreduce_s, alltoall_phased, alltoall_s,
+    lane_bytes_allgather, lane_bytes_allreduce, lane_bytes_alltoall, GroupShape, PhasedCost,
+};
 pub use flops::{flops_per_iter, flops_per_iter_checkpointed, percent_of_peak};

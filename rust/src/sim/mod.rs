@@ -6,6 +6,11 @@
 //! executables), generates its own deterministic data shard, and the whole
 //! job runs lock-step through the collectives — real data movement, real
 //! byte counts, bit-reproducible results.
+//!
+//! The collective transport (`EngineOptions::strategy` +
+//! `EngineOptions::gpus_per_node`) selects between the flat and the
+//! hierarchical backend; [`TrainLog`] reports the per-lane
+//! (intra-node / inter-node) byte split alongside the totals.
 
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
@@ -30,6 +35,11 @@ pub struct TrainLog {
     /// total payload bytes per collective kind across all ranks
     pub comm_bytes: [(CommKind, u64); 6],
     pub comm_calls: [(CommKind, u64); 6],
+    /// intra-node lane of `comm_bytes` (NVLink-side traffic)
+    pub comm_intra_bytes: [(CommKind, u64); 6],
+    /// inter-node lane of `comm_bytes` (InfiniBand-side traffic); the flat
+    /// transport charges its whole volume here on multi-node jobs
+    pub comm_inter_bytes: [(CommKind, u64); 6],
     /// peak activation-stash bytes over ranks (CAC memory cost)
     pub peak_stash_bytes: usize,
     /// peak optimizer up-cast temp bytes over ranks (Fig. 4 spike)
@@ -103,10 +113,14 @@ pub fn train(
 
     let mut comm_bytes = [(CommKind::AllReduce, 0u64); 6];
     let mut comm_calls = [(CommKind::AllReduce, 0u64); 6];
+    let mut comm_intra_bytes = [(CommKind::AllReduce, 0u64); 6];
+    let mut comm_inter_bytes = [(CommKind::AllReduce, 0u64); 6];
     for (i, kind) in crate::collectives::accounting::ALL_KINDS.iter().enumerate() {
         let t = rez.stats.total(*kind);
         comm_bytes[i] = (*kind, t.bytes);
         comm_calls[i] = (*kind, t.calls);
+        comm_intra_bytes[i] = (*kind, t.intra_bytes);
+        comm_inter_bytes[i] = (*kind, t.inter_bytes);
     }
 
     Ok(TrainLog {
@@ -115,6 +129,8 @@ pub fn train(
         wall_s: t0.elapsed().as_secs_f64(),
         comm_bytes,
         comm_calls,
+        comm_intra_bytes,
+        comm_inter_bytes,
         peak_stash_bytes: peak_stash,
         peak_opt_temp_bytes: peak_opt,
     })

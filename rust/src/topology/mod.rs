@@ -238,6 +238,117 @@ mod tests {
         }
     }
 
+    /// Partition property over random grids: for every group kind, every
+    /// rank appears in exactly one group, member lists are sorted and
+    /// self-containing, and same-id groups agree across ranks.
+    #[test]
+    fn property_groups_partition_sorted_and_consistent() {
+        props::check(
+            23,
+            60,
+            |rng: &mut Rng| {
+                let tp = 1 << rng.below(3);
+                let ep = 1 << rng.below(3);
+                let dp_exp = 1 + rng.below(3);
+                (tp, ep, dp_exp)
+            },
+            |&(tp, ep, dp_exp)| {
+                let world = tp * ep * dp_exp;
+                let t = Topology::new(ParallelConfig::derive(world, tp, ep).unwrap()).unwrap();
+                for kind_sel in 0..4 {
+                    let mut membership = vec![0usize; world];
+                    let mut by_id: std::collections::HashMap<GroupId, Vec<usize>> =
+                        Default::default();
+                    for r in 0..world {
+                        let g = t.groups(r);
+                        let (id, list) = match kind_sel {
+                            0 => (g.tp_group_id, g.tp_group),
+                            1 => (g.dp_nonexp_group_id, g.dp_nonexp_group),
+                            2 => (g.ep_group_id, g.ep_group),
+                            _ => (g.dp_exp_group_id, g.dp_exp_group),
+                        };
+                        if !list.contains(&r) {
+                            return Err(format!("kind {kind_sel}: rank {r} not in own group"));
+                        }
+                        if !list.windows(2).all(|w| w[0] < w[1]) {
+                            return Err(format!(
+                                "kind {kind_sel}: group {list:?} not strictly sorted"
+                            ));
+                        }
+                        for &m in &list {
+                            if m >= world {
+                                return Err(format!("kind {kind_sel}: member {m} out of range"));
+                            }
+                            if m == r {
+                                membership[r] += 1;
+                            }
+                        }
+                        match by_id.entry(id) {
+                            std::collections::hash_map::Entry::Occupied(e) => {
+                                if e.get() != &list {
+                                    return Err(format!(
+                                        "kind {kind_sel}: group id {id:?} inconsistent"
+                                    ));
+                                }
+                            }
+                            std::collections::hash_map::Entry::Vacant(v) => {
+                                v.insert(list);
+                            }
+                        }
+                    }
+                    if !membership.iter().all(|&c| c == 1) {
+                        return Err(format!(
+                            "kind {kind_sel}: not a partition: {membership:?}"
+                        ));
+                    }
+                    // groups of one kind partition the world: sizes sum to G
+                    let covered: usize = by_id.values().map(|v| v.len()).sum();
+                    if covered != world {
+                        return Err(format!(
+                            "kind {kind_sel}: groups cover {covered} of {world} ranks"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Fig. 3's worked example (G=4, tp=2, ep=2), stated as data: the
+    /// paper's exact coordinates and groups for every rank.
+    #[test]
+    fn fig3_worked_example_holds_for_all_ranks() {
+        let t = topo(4, 2, 2);
+        // (rank, tp_idx, dp_nonexp_idx, ep_idx, dp_exp_idx)
+        let coords = [
+            (0usize, 0usize, 0usize, 0usize, 0usize),
+            (1, 1, 0, 0, 0),
+            (2, 0, 1, 1, 0),
+            (3, 1, 1, 1, 0),
+        ];
+        for &(r, tpi, dpi, epi, dpei) in &coords {
+            let c = t.coords(r);
+            assert_eq!(
+                (c.tp_idx, c.dp_nonexp_idx, c.ep_idx, c.dp_exp_idx),
+                (tpi, dpi, epi, dpei),
+                "rank {r}"
+            );
+        }
+        let groups = [
+            (0usize, vec![0usize, 1], vec![0usize, 2], vec![0usize, 2], vec![0usize]),
+            (1, vec![0, 1], vec![1, 3], vec![1, 3], vec![1]),
+            (2, vec![2, 3], vec![0, 2], vec![0, 2], vec![2]),
+            (3, vec![2, 3], vec![1, 3], vec![1, 3], vec![3]),
+        ];
+        for (r, tp_g, dp_g, ep_g, dpe_g) in groups {
+            let g = t.groups(r);
+            assert_eq!(g.tp_group, tp_g, "rank {r} tp");
+            assert_eq!(g.dp_nonexp_group, dp_g, "rank {r} dp_nonexp");
+            assert_eq!(g.ep_group, ep_g, "rank {r} ep");
+            assert_eq!(g.dp_exp_group, dpe_g, "rank {r} dp_exp");
+        }
+    }
+
     #[test]
     fn property_random_topologies_consistent() {
         props::check(

@@ -1,0 +1,356 @@
+//! Topology-parity test matrix for the collective transport layer.
+//!
+//! The tentpole invariant: switching the collective backend (flat vs
+//! hierarchical) or toggling DTD is a pure communication-schedule change —
+//! training results must be **bitwise identical**, while the hierarchical
+//! backend must report strictly fewer inter-node bytes on multi-node
+//! topologies.
+//!
+//! Two layers of coverage:
+//!
+//! * a PJRT-free deterministic **toy MoE layer** driven through the real
+//!   router (`route_top1`), the real dispatch/return path (with DTD), and
+//!   the real collectives — runs on every build, over a grid of
+//!   (tp, ep, dp_exp) topologies x backend x DTD x node size;
+//! * the full engine (`sim::train`) when `make artifacts` has produced
+//!   the tiny variant — skips gracefully otherwise, like the rest of the
+//!   artifact-dependent suite.
+
+use std::sync::Arc;
+
+use ted::collectives::{CollectiveStrategy, CommKind, Communicator, Rendezvous};
+use ted::config::ParallelConfig;
+use ted::moe::{dispatch, return_to_origin, route_top1, MoeComm};
+use ted::topology::Topology;
+use ted::util::tensor::Tensor;
+
+const N_TOKENS: usize = 6;
+const D: usize = 4;
+const N_EXPERTS: usize = 4;
+const STEPS: usize = 3;
+
+/// Deterministic per-(dp shard, step) activations; identical across the
+/// TP group by construction, distinct across EP peers.
+fn make_rows(dpn: usize, step: usize) -> Tensor {
+    let mut t = Tensor::zeros(&[N_TOKENS, D]);
+    for i in 0..N_TOKENS {
+        for j in 0..D {
+            t.row_mut(i)[j] = (dpn * 1000 + step * 100 + i) as f32 * 1e-3 + j as f32 * 0.01;
+        }
+    }
+    t
+}
+
+/// Deterministic gate probabilities: token i prefers expert (i+dpn+step)%E.
+fn make_probs(dpn: usize, step: usize) -> Tensor {
+    let mut t = Tensor::zeros(&[N_TOKENS, N_EXPERTS]);
+    for i in 0..N_TOKENS {
+        let star = (i + dpn + step) % N_EXPERTS;
+        for e in 0..N_EXPERTS {
+            t.row_mut(i)[e] =
+                if e == star { 0.8 } else { 0.2 / (N_EXPERTS - 1) as f32 };
+        }
+    }
+    t
+}
+
+/// Per-step result of one rank: loss bits + per-expert kept-token counts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct RankTrace {
+    dpn: usize,
+    loss_bits: Vec<u32>,
+    kept_counts: Vec<Vec<usize>>,
+}
+
+/// Run STEPS toy MoE "training steps" (route -> dispatch -> expert
+/// compute -> return -> combine -> dp loss reduce) on one topology and
+/// transport. Returns rank traces plus the total (intra, inter, total)
+/// all-to-all bytes.
+fn run_toy(
+    tp: usize,
+    ep: usize,
+    dp_exp: usize,
+    strategy: CollectiveStrategy,
+    gpn: usize,
+    dtd: bool,
+) -> (Vec<RankTrace>, (u64, u64, u64)) {
+    let world = tp * ep * dp_exp;
+    let topo = Topology::new(ParallelConfig::derive(world, tp, ep).unwrap()).unwrap();
+    let rez = Rendezvous::new(world);
+    let cap = N_TOKENS * ep; // no overflow drops in this workload
+    let local_experts = N_EXPERTS / ep;
+
+    let traces: Vec<RankTrace> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..world)
+            .map(|r| {
+                let rez = Arc::clone(&rez);
+                let topo = topo.clone();
+                s.spawn(move || {
+                    let g = topo.groups(r);
+                    let dpn = g.coords.dp_nonexp_idx;
+                    let mut comm = Communicator::with_transport(rez, r, strategy, gpn);
+                    let ep_pos = g.ep_group.iter().position(|&m| m == r).unwrap();
+                    let tp_pos = g.tp_group.iter().position(|&m| m == r).unwrap();
+                    let mut loss_bits = Vec::with_capacity(STEPS);
+                    let mut kept_counts = Vec::with_capacity(STEPS);
+                    for step in 0..STEPS {
+                        let rows = make_rows(dpn, step);
+                        let probs = make_probs(dpn, step);
+                        let dec = route_top1(
+                            &mut comm, g.ep_group_id, &g.ep_group, ep_pos, &probs,
+                            N_EXPERTS, cap,
+                        );
+                        let disp = {
+                            let mut ctx = MoeComm {
+                                comm: &mut comm,
+                                ep_gid: g.ep_group_id,
+                                ep_members: &g.ep_group,
+                                ep_pos,
+                                tp_gid: g.tp_group_id,
+                                tp_members: &g.tp_group,
+                                tp_pos,
+                                dtd,
+                            };
+                            dispatch(&mut ctx, &rows, &dec, local_experts, cap)
+                        };
+                        // toy expert compute: expert e scales its rows by a
+                        // per-expert constant (elementwise, TP-plane safe)
+                        let outs: Vec<Tensor> = disp
+                            .buffers
+                            .iter()
+                            .enumerate()
+                            .map(|(le, b)| {
+                                let e = ep_pos * local_experts + le;
+                                let mut t = b.clone();
+                                t.scale(1.0 + e as f32 * 0.25);
+                                t
+                            })
+                            .collect();
+                        let back = {
+                            let mut ctx = MoeComm {
+                                comm: &mut comm,
+                                ep_gid: g.ep_group_id,
+                                ep_members: &g.ep_group,
+                                ep_pos,
+                                tp_gid: g.tp_group_id,
+                                tp_members: &g.tp_group,
+                                tp_pos,
+                                dtd,
+                            };
+                            return_to_origin(&mut ctx, &outs, &disp, &dec, local_experts, cap)
+                        };
+                        let y2 = ted::engine::stash::combine(&rows, &dec, &back);
+                        // deterministic "loss": mean activation, averaged
+                        // over the non-expert DP group
+                        let local =
+                            y2.data().iter().sum::<f32>() / (N_TOKENS * D) as f32;
+                        let mut lt = Tensor::from_vec(&[1], vec![local]);
+                        comm.all_reduce(
+                            g.dp_nonexp_group_id, &g.dp_nonexp_group, &mut lt,
+                        );
+                        let loss = lt.data()[0] / g.dp_nonexp_group.len() as f32;
+                        loss_bits.push(loss.to_bits());
+                        // per-expert kept-token counts (routing side, so the
+                        // numbers are identical across TP planes)
+                        let mut counts = vec![0usize; N_EXPERTS];
+                        for i in 0..N_TOKENS {
+                            if dec.slot_of_token[i].is_some() {
+                                counts[dec.expert_of_token[i]] += 1;
+                            }
+                        }
+                        kept_counts.push(counts);
+                    }
+                    RankTrace { dpn, loss_bits, kept_counts }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let a2a = rez.stats.total(CommKind::AllToAll);
+    (traces, (a2a.intra_bytes, a2a.inter_bytes, a2a.bytes))
+}
+
+/// The backend/DTD combos every topology is checked under. `gpn = 2`
+/// makes EP groups span nodes at tp >= 2 (members stride by tp).
+fn combos() -> Vec<(CollectiveStrategy, usize, bool)> {
+    vec![
+        (CollectiveStrategy::Flat, 0, false),
+        (CollectiveStrategy::Flat, 0, true),
+        (CollectiveStrategy::Flat, 2, false),
+        (CollectiveStrategy::Hierarchical, 2, false),
+        (CollectiveStrategy::Hierarchical, 2, true),
+        (CollectiveStrategy::Hierarchical, 4, true),
+    ]
+}
+
+#[test]
+fn parity_matrix_backends_and_dtd_bitwise_identical() {
+    // (tp, ep, dp_exp) grid; world = tp*ep*dp_exp
+    let grid = [(1, 2, 1), (2, 2, 1), (1, 2, 2), (2, 2, 2), (1, 4, 1), (2, 4, 1)];
+    for &(tp, ep, dp_exp) in &grid {
+        let (reference, _) = run_toy(tp, ep, dp_exp, CollectiveStrategy::Flat, 0, false);
+        for (strategy, gpn, dtd) in combos() {
+            let (got, _) = run_toy(tp, ep, dp_exp, strategy, gpn, dtd);
+            assert_eq!(
+                reference, got,
+                "trace diverged at tp={tp} ep={ep} dp_exp={dp_exp} \
+                 strategy={strategy:?} gpn={gpn} dtd={dtd}"
+            );
+        }
+    }
+}
+
+#[test]
+fn parity_matrix_tp_degree_is_a_noop() {
+    // tp=1 vs tp=2 with identical (ep, dp_exp): same global batch, same
+    // routing, same experts -> identical per-shard losses and counts
+    for &(ep, dp_exp) in &[(2usize, 1usize), (2, 2), (4, 1)] {
+        let (base, _) = run_toy(1, ep, dp_exp, CollectiveStrategy::Flat, 0, false);
+        for (strategy, gpn, dtd) in combos() {
+            let (ted, _) = run_toy(2, ep, dp_exp, strategy, gpn, dtd);
+            // compare one representative per dp shard (TP planes agree by
+            // the previous test)
+            for t in &base {
+                let peer = ted
+                    .iter()
+                    .find(|x| x.dpn == t.dpn)
+                    .expect("dp shard missing");
+                assert_eq!(
+                    t, peer,
+                    "tp=1 vs tp=2 diverged at ep={ep} dp_exp={dp_exp} \
+                     strategy={strategy:?} gpn={gpn} dtd={dtd}"
+                );
+            }
+        }
+    }
+}
+
+/// The ISSUE's acceptance scenario: a simulated 2-node job (G=8, tp=2,
+/// ep=2, 4 GPUs per node). TED placement keeps the EP all-to-all inside a
+/// node; only the topology-aware backend can see (and report) that.
+#[test]
+fn hierarchical_reports_strictly_fewer_inter_node_a2a_bytes() {
+    let (flat_trace, (f_intra, f_inter, f_total)) =
+        run_toy(2, 2, 2, CollectiveStrategy::Flat, 4, false);
+    let (hier_trace, (h_intra, h_inter, h_total)) =
+        run_toy(2, 2, 2, CollectiveStrategy::Hierarchical, 4, false);
+    // bitwise-identical results...
+    assert_eq!(flat_trace, hier_trace);
+    // ...same total volume...
+    assert_eq!(f_total, h_total);
+    assert!(f_total > 0);
+    // ...but the flat backend charges everything to the bottleneck lane
+    assert_eq!(f_intra, 0);
+    assert_eq!(f_inter, f_total);
+    // while the hierarchical backend proves the EP a2a never leaves a node
+    assert!(
+        h_inter < f_inter,
+        "hierarchical must report strictly fewer inter-node a2a bytes \
+         ({h_inter} vs {f_inter})"
+    );
+    assert_eq!(h_inter, 0);
+    assert_eq!(h_intra, f_total);
+
+    // with 2-GPU nodes the EP groups genuinely span nodes: the inter lane
+    // is nonzero but still strictly below the flat attribution
+    let (_, (s_intra, s_inter, s_total)) =
+        run_toy(2, 2, 2, CollectiveStrategy::Hierarchical, 2, true);
+    assert_eq!(s_intra + s_inter, s_total);
+    assert!(s_inter > 0);
+    let (_, (_, flat2_inter, flat2_total)) =
+        run_toy(2, 2, 2, CollectiveStrategy::Flat, 2, true);
+    assert_eq!(flat2_inter, flat2_total);
+    assert!(s_inter <= flat2_inter);
+}
+
+// ---------------------------------------------------------------------
+// full-engine parity (requires `make artifacts`; skips otherwise)
+// ---------------------------------------------------------------------
+
+mod engine_parity {
+    use std::path::PathBuf;
+
+    use ted::collectives::{CollectiveStrategy, CommKind};
+    use ted::config::{EngineOptions, ParallelConfig, TrainingConfig};
+    use ted::data::SyntheticLM;
+    use ted::runtime::Manifest;
+    use ted::sim::{train, RunConfig, TrainLog};
+    use ted::topology::Topology;
+
+    fn load_tiny(tp: usize) -> Option<Manifest> {
+        let dir = Manifest::variant_dir(
+            &PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+            "tiny",
+            tp,
+            2,
+        );
+        if dir.exists() {
+            Some(Manifest::load(&dir).unwrap())
+        } else {
+            eprintln!("SKIP: {} missing (run `make artifacts`)", dir.display());
+            None
+        }
+    }
+
+    fn run(opts: EngineOptions) -> Option<TrainLog> {
+        let manifest = load_tiny(2)?;
+        let topo = Topology::new(ParallelConfig::derive(4, 2, 2).unwrap()).unwrap();
+        let tcfg = TrainingConfig {
+            lr: 1e-3,
+            warmup_steps: 2,
+            seed: 2024,
+            grad_clip: 1.0,
+            ..Default::default()
+        };
+        let data = SyntheticLM::new(manifest.dims.vocab, 7);
+        let rc = RunConfig { steps: 4, micro_per_step: 2, ..Default::default() };
+        Some(train(&topo, &manifest, opts, tcfg, rc, &data).unwrap())
+    }
+
+    fn loss_bits(log: &TrainLog) -> Vec<u32> {
+        log.steps.iter().map(|s| s.loss.to_bits()).collect()
+    }
+
+    #[test]
+    fn trainlog_bitwise_identical_across_backends_and_dtd() {
+        let Some(reference) = run(EngineOptions::default()) else { return };
+        let combos = [
+            EngineOptions { dtd: false, ..EngineOptions::default() },
+            EngineOptions::default().with_transport(CollectiveStrategy::Hierarchical, 2),
+            EngineOptions { dtd: false, ..EngineOptions::default() }
+                .with_transport(CollectiveStrategy::Hierarchical, 2),
+        ];
+        for (i, opts) in combos.into_iter().enumerate() {
+            let log = run(opts).unwrap();
+            assert_eq!(
+                loss_bits(&reference),
+                loss_bits(&log),
+                "TrainLog.steps losses diverged for combo {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn trainlog_lanes_split_under_hierarchical() {
+        let Some(flat) = run(
+            EngineOptions::default().with_transport(CollectiveStrategy::Flat, 2),
+        ) else {
+            return;
+        };
+        let hier = run(
+            EngineOptions::default().with_transport(CollectiveStrategy::Hierarchical, 2),
+        )
+        .unwrap();
+        let lane = |arr: &[(CommKind, u64); 6], k: CommKind| {
+            arr.iter().find(|(kk, _)| *kk == k).unwrap().1
+        };
+        let f_inter = lane(&flat.comm_inter_bytes, CommKind::AllToAll);
+        let h_inter = lane(&hier.comm_inter_bytes, CommKind::AllToAll);
+        let f_total = lane(&flat.comm_bytes, CommKind::AllToAll);
+        let h_total = lane(&hier.comm_bytes, CommKind::AllToAll);
+        assert_eq!(f_total, h_total, "transport must not change total a2a volume");
+        assert_eq!(f_inter, f_total, "flat charges the bottleneck lane");
+        assert!(h_inter < f_inter, "hierarchical must shrink the inter lane");
+    }
+}
