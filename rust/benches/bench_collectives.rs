@@ -1,10 +1,15 @@
 //! Collective micro-benchmarks: rendezvous overhead and throughput across
-//! group sizes and payloads — the L3 substrate the engine's step time
-//! stands on (perf-pass target: sub-µs matching overhead for small groups).
+//! group sizes, payloads, transports ({flat, hierarchical,
+//! hierarchical-pxn}) and schedules ({blocking, nonblocking issue/wait})
+//! — the L3 substrate the engine's step time stands on (perf-pass target:
+//! sub-µs matching overhead for small groups).
+//!
+//! Smoke mode (`BENCH_SMOKE=1` or `cargo bench -- --test`) clamps every
+//! bench to one iteration; CI runs it so bench bit-rot is caught.
 
 use std::sync::Arc;
 
-use ted::collectives::{CollectiveStrategy, Communicator, Rendezvous};
+use ted::collectives::{ALL_STRATEGIES, CollectiveStrategy, Communicator, Rendezvous};
 use ted::metrics::bench;
 use ted::topology::{GroupId, GroupKind};
 use ted::util::tensor::Tensor;
@@ -19,6 +24,9 @@ fn label(op: &str, world: usize, payload: &str, strategy: CollectiveStrategy, gp
         CollectiveStrategy::Hierarchical => {
             format!("{op}/world{world}/{payload}/hier-gpn{gpn}")
         }
+        CollectiveStrategy::HierarchicalPxn => {
+            format!("{op}/world{world}/{payload}/pxn-gpn{gpn}")
+        }
     }
 }
 
@@ -29,6 +37,7 @@ fn bench_allreduce(
     strategy: CollectiveStrategy,
     gpn: usize,
 ) {
+    let iters = bench::iters(iters);
     let name = label("all_reduce", world, &format!("{len}f32"), strategy, gpn);
     let rez = Rendezvous::new(world);
     // worker threads loop forever on all_reduce; rank 0 is timed
@@ -61,6 +70,7 @@ fn bench_alltoall(
     strategy: CollectiveStrategy,
     gpn: usize,
 ) {
+    let iters = bench::iters(iters);
     let name = label("all_to_all", world, &format!("{rows}x{d}"), strategy, gpn);
     let rez = Rendezvous::new(world);
     std::thread::scope(|s| {
@@ -84,6 +94,91 @@ fn bench_alltoall(
     });
 }
 
+/// Nonblocking pair: two all-reduces issued together, waited in order —
+/// the trainer's overlapped gradient-reduction shape.
+fn bench_allreduce_nonblocking_pair(
+    world: usize,
+    len: usize,
+    iters: u32,
+    strategy: CollectiveStrategy,
+    gpn: usize,
+) {
+    let iters = bench::iters(iters);
+    let name = format!(
+        "{}+issue-wait",
+        label("all_reduce-pair", world, &format!("{len}f32"), strategy, gpn)
+    );
+    let rez = Rendezvous::new(world);
+    std::thread::scope(|s| {
+        for rank in 1..world {
+            let rez = Arc::clone(&rez);
+            s.spawn(move || {
+                let members: Vec<usize> = (0..world).collect();
+                let mut comm = Communicator::with_transport(rez, rank, strategy, gpn);
+                let mut a = Tensor::from_vec(&[len], vec![rank as f32; len]);
+                let mut b = Tensor::from_vec(&[len], vec![-(rank as f32); len]);
+                for _ in 0..(iters + 3) {
+                    let pa = comm.issue_all_reduce(gid(2), &members, &a);
+                    let pb = comm.issue_all_reduce(gid(3), &members, &b);
+                    comm.wait_all_reduce(pa, &mut a);
+                    comm.wait_all_reduce(pb, &mut b);
+                }
+            });
+        }
+        let members: Vec<usize> = (0..world).collect();
+        let mut comm = Communicator::with_transport(Arc::clone(&rez), 0, strategy, gpn);
+        let mut a = Tensor::from_vec(&[len], vec![0.5; len]);
+        let mut b = Tensor::from_vec(&[len], vec![1.5; len]);
+        bench::run(&name, 3, iters, || {
+            let pa = comm.issue_all_reduce(gid(2), &members, &a);
+            let pb = comm.issue_all_reduce(gid(3), &members, &b);
+            comm.wait_all_reduce(pa, &mut a);
+            comm.wait_all_reduce(pb, &mut b);
+        });
+    });
+}
+
+/// Nonblocking all-to-all with the early intra pickup — the
+/// `moe::dispatch` pipelined-DTD shape.
+fn bench_alltoall_phase_split(
+    world: usize,
+    rows: usize,
+    d: usize,
+    iters: u32,
+    strategy: CollectiveStrategy,
+    gpn: usize,
+) {
+    let iters = bench::iters(iters);
+    let name = format!(
+        "{}+intra-pickup",
+        label("all_to_all", world, &format!("{rows}x{d}"), strategy, gpn)
+    );
+    let rez = Rendezvous::new(world);
+    std::thread::scope(|s| {
+        for rank in 1..world {
+            let rez = Arc::clone(&rez);
+            s.spawn(move || {
+                let members: Vec<usize> = (0..world).collect();
+                let mut comm = Communicator::with_transport(rez, rank, strategy, gpn);
+                for _ in 0..(iters + 3) {
+                    let send: Vec<Vec<f32>> = (0..world).map(|_| vec![1.0; rows * d]).collect();
+                    let mut p = comm.issue_all_to_all(gid(4), &members, send);
+                    let _ = comm.wait_all_to_all_intra(&mut p);
+                    let _ = comm.wait_all_to_all(p);
+                }
+            });
+        }
+        let members: Vec<usize> = (0..world).collect();
+        let mut comm = Communicator::with_transport(Arc::clone(&rez), 0, strategy, gpn);
+        bench::run(&name, 3, iters, || {
+            let send: Vec<Vec<f32>> = (0..world).map(|_| vec![1.0; rows * d]).collect();
+            let mut p = comm.issue_all_to_all(gid(4), &members, send);
+            let _ = comm.wait_all_to_all_intra(&mut p);
+            let _ = comm.wait_all_to_all(p);
+        });
+    });
+}
+
 fn main() {
     println!("# bench_collectives — functional rendezvous collectives");
     println!("## flat transport");
@@ -96,10 +191,18 @@ fn main() {
         bench_alltoall(world, 64, 64, 100, CollectiveStrategy::Flat, 0);
         bench_alltoall(world, 512, 512, 15, CollectiveStrategy::Flat, 0);
     }
-    println!("## hierarchical transport (2-node layout: gpn = world/2)");
-    for world in [4, 8] {
-        bench_allreduce(world, 65_536, 50, CollectiveStrategy::Hierarchical, world / 2);
-        bench_alltoall(world, 64, 64, 100, CollectiveStrategy::Hierarchical, world / 2);
-        bench_alltoall(world, 512, 512, 15, CollectiveStrategy::Hierarchical, world / 2);
+    println!("## hierarchical transports (2-node layout: gpn = world/2)");
+    for strategy in [CollectiveStrategy::Hierarchical, CollectiveStrategy::HierarchicalPxn] {
+        for world in [4, 8] {
+            bench_allreduce(world, 65_536, 50, strategy, world / 2);
+            bench_alltoall(world, 64, 64, 100, strategy, world / 2);
+            bench_alltoall(world, 512, 512, 15, strategy, world / 2);
+        }
+    }
+    println!("## nonblocking issue/wait (every strategy)");
+    for strategy in ALL_STRATEGIES {
+        let gpn = if strategy == CollectiveStrategy::Flat { 0 } else { 4 };
+        bench_allreduce_nonblocking_pair(8, 65_536, 50, strategy, gpn);
+        bench_alltoall_phase_split(8, 64, 64, 100, strategy, gpn);
     }
 }

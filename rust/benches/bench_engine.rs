@@ -22,7 +22,7 @@ fn run_case(config: &str, world: usize, tp: usize, ep: usize, opts: EngineOption
     let data = SyntheticLM::new(manifest.dims.vocab, 5);
 
     // one warm run builds PJRT clients; then time steady-state steps
-    let steps = 3usize;
+    let steps = if bench::smoke() { 1 } else { 3 };
     let r = bench::run(&format!("train_step/{label}"), 0, 2, || {
         let run = RunConfig { steps, micro_per_step: 1, ..Default::default() };
         let log = train(&topo, &manifest, opts, tcfg.clone(), run, &data).unwrap();

@@ -42,6 +42,9 @@ fn bench_route(n: usize, e: usize, iters: u32) {
 }
 
 fn bench_dispatch_roundtrip(tp: usize, ep: usize, n: usize, d: usize, dtd: bool, iters: u32) {
+    // clamp here (not only inside bench::run): the worker threads size
+    // their loops from the same count
+    let iters = bench::iters(iters);
     let world = tp * ep;
     let label = format!(
         "dispatch_return/tp{tp}ep{ep}/{n}x{d}/{}",
@@ -114,6 +117,7 @@ fn one_pass(
         tp_members: &g.tp_group,
         tp_pos,
         dtd,
+        overlap: false,
     };
     let disp = dispatch(&mut ctx, rows, &dec, local_experts, cap);
     let _ = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, local_experts, cap);

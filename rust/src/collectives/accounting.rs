@@ -1,5 +1,6 @@
 //! Per-rank, per-kind communication volume accounting, split into
-//! **intra-node** and **inter-node** lanes.
+//! **intra-node** and **inter-node** lanes, plus the modeled **overlap
+//! timeline** the nonblocking issue/wait API feeds.
 //!
 //! Counts *logical payload bytes leaving each rank* (self-destined traffic
 //! excluded), which is the quantity DTD shrinks and the quantity the paper's
@@ -17,18 +18,34 @@
 //!   node-local group at NVLink even under the flat backend: measured
 //!   lanes answer "what can this transport claim about its traffic?",
 //!   pricing answers "how long does the op take?" — only the hierarchical
-//!   backend makes the two attributions coincide;
-//! * the **hierarchical** backend decomposes each collective into an
-//!   intra-node phase and an inter-node phase and records each phase in
+//!   backends make the two attributions coincide;
+//! * the **hierarchical** backends decompose each collective into an
+//!   intra-node phase and an inter-node phase and record each phase in
 //!   its own lane — only bytes that genuinely cross a node boundary are
-//!   charged to the inter-node fabric.
+//!   charged to the inter-node fabric. The **leader-aggregated (PXN)**
+//!   all-to-all additionally charges the gather-to-leader and
+//!   redistribute hops to the intra lane, which is that schedule's real
+//!   extra NVLink volume.
+//!
+//! Besides bytes, each lane counts **messages** — the α-term driver. For
+//! all-to-all the transports record the real per-peer message count
+//! (flat: `n-1`; hierarchical: `k-1` intra + `n-k` inter; PXN leader:
+//! `m-1` inter, one batch per peer node); for the other kinds a lane
+//! counts one message event per call that touches it.
 //!
 //! `bytes` is always `intra_bytes + inter_bytes`. All-to-all totals are
-//! backend-invariant (each row leaves its rank exactly once either way),
-//! so assertions like DTD's exact payload halving hold on any backend;
-//! gather/reduce ops under the hierarchical backend additionally charge
-//! each node leader's partial/block, which is that algorithm's real
-//! logical volume.
+//! invariant between flat and hierarchical (each row leaves its rank
+//! exactly once either way), so assertions like DTD's exact payload
+//! halving hold on any backend; PXN adds the leader forwarding hops to
+//! the intra lane while keeping the inter lane byte total unchanged.
+//!
+//! The [`TimelineBoard`] models a per-rank two-lane (NVLink / IB) virtual
+//! clock: every priced collective schedules its intra and inter phases on
+//! the lanes, blocking ops advance the clock to their finish, nonblocking
+//! ops advance it only at `wait`. `serialized_s` sums every phase
+//! duration; `clock_s` is the critical path the issue/wait schedule
+//! actually exposes — `clock_s <= serialized_s` always, with equality
+//! exactly when every op is blocking (`--no-overlap`).
 
 use std::sync::Mutex;
 
@@ -84,6 +101,11 @@ pub struct CommStats {
     pub intra_bytes: u64,
     /// Bytes that cross a node boundary (InfiniBand lane).
     pub inter_bytes: u64,
+    /// Messages sent on the intra-node lane (per-peer for all-to-all).
+    pub intra_msgs: u64,
+    /// Messages sent on the inter-node lane (per-peer for all-to-all;
+    /// one batch per peer node under the PXN schedule — the α-term).
+    pub inter_msgs: u64,
 }
 
 /// One row per rank, one column per kind.
@@ -103,14 +125,33 @@ impl StatsBoard {
         self.record_split(rank, kind, bytes, 0);
     }
 
-    /// Record one logical collective call with lane-attributed volume.
+    /// Record one logical collective call with lane-attributed volume and
+    /// one message event per lane the call touches.
     pub fn record_split(&self, rank: usize, kind: CommKind, intra_bytes: u64, inter_bytes: u64) {
+        let im = u64::from(intra_bytes > 0);
+        let xm = u64::from(inter_bytes > 0);
+        self.record_split_msgs(rank, kind, intra_bytes, inter_bytes, im, xm);
+    }
+
+    /// Record one logical collective call with explicit per-lane message
+    /// counts (the all-to-all transports count real per-peer messages).
+    pub fn record_split_msgs(
+        &self,
+        rank: usize,
+        kind: CommKind,
+        intra_bytes: u64,
+        inter_bytes: u64,
+        intra_msgs: u64,
+        inter_msgs: u64,
+    ) {
         let mut g = self.inner.lock().unwrap();
         let cell = &mut g[rank][kind.index()];
         cell.calls += 1;
         cell.intra_bytes += intra_bytes;
         cell.inter_bytes += inter_bytes;
         cell.bytes += intra_bytes + inter_bytes;
+        cell.intra_msgs += intra_msgs;
+        cell.inter_msgs += inter_msgs;
     }
 
     pub fn rank_stats(&self, rank: usize) -> [CommStats; 6] {
@@ -131,6 +172,8 @@ impl StatsBoard {
             acc.bytes += c.bytes;
             acc.intra_bytes += c.intra_bytes;
             acc.inter_bytes += c.inter_bytes;
+            acc.intra_msgs += c.intra_msgs;
+            acc.inter_msgs += c.inter_msgs;
         }
         acc
     }
@@ -144,22 +187,122 @@ impl StatsBoard {
 
     /// Pretty table for logs/benches.
     pub fn render(&self) -> String {
-        let mut out =
-            String::from("kind            calls        bytes        intra        inter\n");
+        let mut out = String::from(
+            "kind            calls        bytes        intra        inter   intra-msgs   inter-msgs\n",
+        );
         for kind in ALL_KINDS {
             let t = self.total(kind);
             if t.calls > 0 {
                 out.push_str(&format!(
-                    "{:<14} {:>7} {:>12} {:>12} {:>12}\n",
+                    "{:<14} {:>7} {:>12} {:>12} {:>12} {:>12} {:>12}\n",
                     kind.name(),
                     t.calls,
                     t.bytes,
                     t.intra_bytes,
-                    t.inter_bytes
+                    t.inter_bytes,
+                    t.intra_msgs,
+                    t.inter_msgs
                 ));
             }
         }
         out
+    }
+}
+
+// ---------------------------------------------------------------------
+// modeled overlap timeline
+// ---------------------------------------------------------------------
+
+/// One rank's modeled communication timeline (virtual seconds).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RankTimeline {
+    /// Virtual clock: completion time of the last awaited/blocking op.
+    pub clock_s: f64,
+    /// NVLink lane occupied until this virtual time.
+    pub intra_busy_s: f64,
+    /// InfiniBand lane occupied until this virtual time.
+    pub inter_busy_s: f64,
+    /// Sum of every phase duration — the no-overlap (serialized) cost.
+    pub serialized_s: f64,
+}
+
+/// Per-rank two-lane virtual scheduler. Ops are priced by the communicator
+/// (α-β model) and scheduled here; the board never blocks a real thread —
+/// it only accounts virtual time.
+#[derive(Debug)]
+pub struct TimelineBoard {
+    inner: Mutex<Vec<RankTimeline>>,
+}
+
+impl TimelineBoard {
+    pub fn new(world: usize) -> Self {
+        TimelineBoard { inner: Mutex::new(vec![RankTimeline::default(); world]) }
+    }
+
+    /// Schedule one op's phases on the rank's lanes — intra, then inter,
+    /// then an optional post-wire intra phase (the PXN redistribute hop,
+    /// which physically follows the leaders' wire exchange) — starting no
+    /// earlier than the rank's clock. Returns `(intra_finish_s,
+    /// finish_s)`; `intra_finish_s` is when the *pre-wire* intra phase
+    /// completes (the early same-node pickup time). A blocking op advances
+    /// the clock to its finish; a nonblocking op leaves the clock for
+    /// [`Self::complete`].
+    pub fn schedule(
+        &self,
+        rank: usize,
+        intra_s: f64,
+        inter_s: f64,
+        intra_post_s: f64,
+        blocking: bool,
+    ) -> (f64, f64) {
+        let mut g = self.inner.lock().unwrap();
+        let tl = &mut g[rank];
+        let mut t = tl.clock_s;
+        let mut intra_finish = t;
+        if intra_s > 0.0 {
+            let start = t.max(tl.intra_busy_s);
+            t = start + intra_s;
+            tl.intra_busy_s = t;
+            intra_finish = t;
+        }
+        if inter_s > 0.0 {
+            let start = t.max(tl.inter_busy_s);
+            t = start + inter_s;
+            tl.inter_busy_s = t;
+        }
+        if intra_post_s > 0.0 {
+            let start = t.max(tl.intra_busy_s);
+            t = start + intra_post_s;
+            tl.intra_busy_s = t;
+        }
+        // accumulate phase by phase, mirroring the clock's additions, so a
+        // purely blocking schedule keeps clock_s == serialized_s *bitwise*
+        tl.serialized_s += intra_s;
+        tl.serialized_s += inter_s;
+        tl.serialized_s += intra_post_s;
+        if blocking {
+            tl.clock_s = t;
+        }
+        (intra_finish, t)
+    }
+
+    /// Advance the rank's clock to a previously scheduled finish time
+    /// (the `wait` side of a nonblocking op).
+    pub fn complete(&self, rank: usize, finish_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let tl = &mut g[rank];
+        tl.clock_s = tl.clock_s.max(finish_s);
+    }
+
+    pub fn get(&self, rank: usize) -> RankTimeline {
+        self.inner.lock().unwrap()[rank]
+    }
+
+    pub fn reset(&self) {
+        let mut g = self.inner.lock().unwrap();
+        for tl in g.iter_mut() {
+            *tl = RankTimeline::default();
+        }
     }
 }
 
@@ -175,7 +318,14 @@ mod tests {
         b.record(0, CommKind::AllReduce, 10);
         assert_eq!(
             b.get(0, CommKind::AllToAll),
-            CommStats { calls: 1, bytes: 100, intra_bytes: 100, inter_bytes: 0 }
+            CommStats {
+                calls: 1,
+                bytes: 100,
+                intra_bytes: 100,
+                inter_bytes: 0,
+                intra_msgs: 1,
+                inter_msgs: 0
+            }
         );
         assert_eq!(b.total(CommKind::AllToAll).bytes, 150);
         assert_eq!(b.total(CommKind::AllToAll).calls, 2);
@@ -194,6 +344,17 @@ mod tests {
         assert_eq!(s.intra_bytes, 35);
         assert_eq!(s.inter_bytes, 12);
         assert_eq!(s.bytes, s.intra_bytes + s.inter_bytes);
+        assert_eq!(s.intra_msgs, 2);
+        assert_eq!(s.inter_msgs, 1);
+    }
+
+    #[test]
+    fn explicit_message_counts() {
+        let b = StatsBoard::new(1);
+        b.record_split_msgs(0, CommKind::AllToAll, 64, 128, 3, 4);
+        let s = b.get(0, CommKind::AllToAll);
+        assert_eq!((s.intra_msgs, s.inter_msgs), (3, 4));
+        assert_eq!(b.total(CommKind::AllToAll).inter_msgs, 4);
     }
 
     #[test]
@@ -204,5 +365,44 @@ mod tests {
         assert!(r.contains("all_to_all"));
         assert!(r.contains("intra"));
         assert!(r.contains("16"));
+    }
+
+    #[test]
+    fn timeline_blocking_equals_serialized() {
+        let t = TimelineBoard::new(1);
+        let (_, f1) = t.schedule(0, 2.0, 3.0, 0.0, true);
+        assert_eq!(f1, 5.0);
+        let (_, f2) = t.schedule(0, 1.0, 0.0, 0.0, true);
+        assert_eq!(f2, 6.0);
+        let tl = t.get(0);
+        assert_eq!(tl.clock_s, 6.0);
+        assert_eq!(tl.serialized_s, 6.0);
+    }
+
+    #[test]
+    fn timeline_nonblocking_overlaps_lanes() {
+        let t = TimelineBoard::new(1);
+        // op A: intra 2s then inter 3s; op B: intra 2s then inter 3s,
+        // issued before A completes — B's intra rides NVLink while A's
+        // inter phase occupies IB.
+        let (_, fa) = t.schedule(0, 2.0, 3.0, 0.0, false);
+        let (_, fb) = t.schedule(0, 2.0, 3.0, 0.0, false);
+        assert_eq!(fa, 5.0);
+        // B intra: [2,4] (lane busy), inter: starts max(4, 5) = 5 -> 8
+        assert_eq!(fb, 8.0);
+        t.complete(0, fa);
+        t.complete(0, fb);
+        let tl = t.get(0);
+        assert_eq!(tl.clock_s, 8.0);
+        assert_eq!(tl.serialized_s, 10.0);
+        assert!(tl.clock_s < tl.serialized_s);
+    }
+
+    #[test]
+    fn timeline_reset() {
+        let t = TimelineBoard::new(2);
+        t.schedule(1, 1.0, 1.0, 0.0, true);
+        t.reset();
+        assert_eq!(t.get(1), RankTimeline::default());
     }
 }

@@ -1,4 +1,5 @@
-//! Functional in-process collectives with a pluggable transport layer.
+//! Functional in-process collectives with a pluggable transport layer and
+//! a nonblocking issue/wait API.
 //!
 //! The simulated cluster runs every rank as a thread; collectives are real
 //! data movement through a shared [`Rendezvous`] keyed by (group id, op
@@ -7,14 +8,15 @@
 //! * deterministic reductions (accumulation in member order, so a run is
 //!   bit-reproducible regardless of thread scheduling *and* of the
 //!   selected transport backend),
-//! * per-rank, per-kind **byte accounting** — the functional analog of the
-//!   paper's Figure 5 communication breakdown (DTD must show up here as an
-//!   exact `G_tensor x` reduction in all-to-all payload) — now split into
-//!   intra-node and inter-node lanes,
+//! * per-rank, per-kind **byte and message accounting** — the functional
+//!   analog of the paper's Figure 5 communication breakdown (DTD must show
+//!   up here as an exact `G_tensor x` reduction in all-to-all payload) —
+//!   split into intra-node and inter-node lanes, with per-peer message
+//!   counts (the α-term) on the all-to-all,
 //! * deadlock detection via timeout (a mismatched op sequence in the engine
 //!   is a bug; we panic with the op descriptor instead of hanging).
 //!
-//! Two transports implement every op (select via
+//! Three transports implement every op (select via
 //! [`Communicator::with_transport`] or `EngineOptions::strategy`):
 //!
 //! * [`CollectiveStrategy::Flat`] — the topology-oblivious single
@@ -23,20 +25,39 @@
 //! * [`CollectiveStrategy::Hierarchical`] — decomposes all-to-all and
 //!   all-gather into an intra-node phase followed by an inter-node phase
 //!   (node boundaries from `ClusterConfig::gpus_per_node`), charging each
-//!   phase to its own lane. Training results are bitwise identical across
-//!   backends; only the traffic attribution (and hence the modeled cost)
-//!   changes. All-to-all volume is backend-invariant (each row crosses
-//!   once either way); gather/reduce ops additionally charge the leaders'
-//!   node partials, which is the hierarchical algorithm's real volume.
-//!   `rust/tests/parity_matrix.rs` locks the parity invariant down.
+//!   phase to its own lane.
+//! * [`CollectiveStrategy::HierarchicalPxn`] — hierarchical with a
+//!   **leader-aggregated (PXN-style) all-to-all**: node leaders batch all
+//!   cross-node rows into one message per peer node, cutting the
+//!   inter-node message count (α-term) at unchanged inter-node bytes,
+//!   paid for with two extra NVLink hops.
+//!
+//! Training results are bitwise identical across every backend *and*
+//! across blocking vs nonblocking schedules; only traffic attribution
+//! (and hence modeled cost) changes. `rust/tests/parity_matrix.rs` locks
+//! the invariant down over the full
+//! {flat, hierarchical, hierarchical-pxn} x {blocking, nonblocking} grid.
+//!
+//! The **issue/wait API** (`issue_all_reduce` / `issue_all_gather` /
+//! `issue_all_to_all` returning `Pending*` handles) lets callers keep one
+//! collective in flight while another proceeds;
+//! [`Communicator::wait_all_to_all_intra`] exposes a hierarchical
+//! all-to-all's same-node receipts while its inter-node phase is still in
+//! flight. When a cost model is attached
+//! ([`Communicator::set_cost_model`]) each op is priced with the α-β
+//! model and scheduled on a per-rank two-lane [`TimelineBoard`], yielding
+//! a measured serialized-vs-critical-path overlap timeline.
 //!
 //! The α-β *cost* model for paper-scale figures lives in `perfmodel`, not
-//! here; this module is about correctness and measured volume.
+//! here; this module is about correctness, measured volume, and the
+//! measured overlap schedule.
 
 pub mod accounting;
 pub mod rendezvous;
 pub mod transport;
 
-pub use accounting::{CommKind, CommStats, StatsBoard};
-pub use rendezvous::{Communicator, Rendezvous};
-pub use transport::{CollectiveStrategy, NodeMap, NodePlan};
+pub use accounting::{CommKind, CommStats, RankTimeline, StatsBoard, TimelineBoard};
+pub use rendezvous::{
+    Communicator, PendingAllGather, PendingAllReduce, PendingAllToAll, Rendezvous,
+};
+pub use transport::{ALL_STRATEGIES, CollectiveStrategy, NodeMap, NodePlan};

@@ -1,38 +1,77 @@
-//! The rendezvous substrate plus the two collective transports.
+//! The rendezvous substrate plus the collective transports, with a
+//! **nonblocking issue/wait API** on top.
 //!
 //! Every collective call on a group allocates one or more slots keyed by
 //! (group id, per-group sequence number, phase tag). Ranks deposit their
-//! contribution, the last arrival performs any reduction, and every member
+//! contribution, the last arrival makes the slot complete, and every member
 //! picks up its result; the last pickup frees the slot. Sequence numbers
 //! are tracked per (rank, group) inside each [`Communicator`], so program
 //! order per group defines matching — exactly MPI communicator semantics.
 //! The phase tag lets one logical collective decompose into independent
-//! sub-exchanges (the hierarchical backend's intra-node and inter-node
-//! phases) without perturbing the sequence space.
+//! sub-exchanges (the hierarchical backends' intra-node, inter-node,
+//! gather-to-leader and redistribute phases) without perturbing the
+//! sequence space.
 //!
-//! Transport selection (see `transport.rs` for the semantics):
+//! ## Issue / wait
 //!
-//! * **flat** — one exchange per collective, all volume in a single lane
-//!   (the inter-node lane when the job spans nodes: a topology-oblivious
-//!   transport cannot prove any byte stayed on-node, so its accounting is
-//!   conservative; see `accounting.rs` for how this relates to — and
-//!   deliberately differs from — the per-group α-β time pricing);
-//! * **hierarchical** — all-to-all and all-gather physically run as an
-//!   intra-node phase followed by an inter-node phase; reducing ops keep
-//!   the canonical member-order reduction (bit-reproducibility across
-//!   backends) with hierarchically attributed volume.
+//! `issue_all_reduce` / `issue_all_gather` / `issue_all_to_all` deposit
+//! whatever is locally available **without waiting for peers** and return
+//! a `Pending*` handle; the matching `wait_*` completes any remaining
+//! phases and returns the result. The blocking methods are now thin
+//! wrappers (issue + immediate wait). Rules, mirroring MPI nonblocking
+//! collectives: every issued op must be waited exactly once, and ranks
+//! must wait ops **in issue order** (phases deferred to `wait` — the
+//! leaders' exchanges — otherwise deadlock across ranks).
+//! [`Communicator::wait_all_to_all_intra`] additionally exposes the
+//! same-node receipts of a hierarchical all-to-all as soon as its
+//! intra-node phase completes, while the inter-node phase is still in
+//! flight — the hook `moe::dispatch` uses to pipeline the DTD all-gather
+//! against the expert all-to-all (MoNTA-style comm/comm overlap).
+//!
+//! ## Transports
+//!
+//! * **flat** — one exchange per collective, all volume in a single lane;
+//! * **hierarchical** — all-to-all and all-gather run as an intra-node
+//!   phase followed by an inter-node phase; reducing ops keep the
+//!   canonical member-order reduction (bit-reproducibility across
+//!   backends) with hierarchically attributed volume;
+//! * **hierarchical-pxn** — like hierarchical, but the all-to-all is
+//!   **leader-aggregated**: members forward cross-node rows to their node
+//!   leader (intra), each leader ships *one batched message per peer
+//!   node* (inter — the α-term drops from `n-k` to `m-1` messages per
+//!   participant), and the receiving leader redistributes (intra).
+//!   Results stay bitwise identical; only lane/message attribution and
+//!   modeled time change.
+//!
+//! ## Modeled time
+//!
+//! When a cost model is attached ([`Communicator::set_cost_model`]),
+//! every op is priced with the α-β `perfmodel` phased costs and scheduled
+//! on the rank's two-lane [`TimelineBoard`]: blocking ops advance the
+//! rank's virtual clock to their finish, issued ops advance it only at
+//! `wait` — so the board measures the critical-path comm seconds the
+//! issue/wait schedule actually exposes, against the serialized sum.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-use crate::collectives::accounting::{CommKind, StatsBoard};
+use crate::collectives::accounting::{CommKind, StatsBoard, TimelineBoard};
 use crate::collectives::transport::{CollectiveStrategy, NodeMap, NodePlan};
+use crate::config::ClusterConfig;
+use crate::perfmodel::collective_cost::{
+    allgather_phased, allreduce_phased, alltoall_phased, alltoall_pxn_schedule, PhasedCost,
+};
 use crate::topology::GroupId;
 use crate::util::tensor::Tensor;
 
 /// How long a rank waits on peers before declaring the program deadlocked.
 const DEADLOCK_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// One member's payload in a collective.
+type Payload = Vec<f32>;
+/// One payload per member (or per destination, for all-to-all).
+type Payloads = Vec<Vec<f32>>;
 
 /// (group, op sequence, phase tag). Tag 0 is the whole-group exchange;
 /// hierarchical phases use `ptag(phase, node_ordinal)`.
@@ -40,6 +79,8 @@ type SlotKey = (GroupId, u64, u32);
 
 /// Encode a hierarchical phase sub-slot: phase in the high bits, the
 /// node ordinal within the group's node plan in the low 16 bits.
+/// Phases: 1 = intra exchange, 2 = inter exchange, 3 = PXN gather to
+/// leader, 4 = PXN leaders-only exchange, 5 = PXN redistribute.
 fn ptag(phase: u32, ord: usize) -> u32 {
     debug_assert!(ord < (1 << 16), "node ordinal {ord} overflows phase tag");
     (phase << 16) | (ord as u32)
@@ -49,7 +90,7 @@ fn ptag(phase: u32, ord: usize) -> u32 {
 /// payloads (one per destination for all-to-all; a single payload for the
 /// other ops). `reduced` caches the all-reduce result.
 struct Slot {
-    contributions: Vec<Option<Vec<Vec<f32>>>>,
+    contributions: Vec<Option<Payloads>>,
     kind: CommKind,
     arrived: usize,
     taken: usize,
@@ -66,6 +107,7 @@ pub struct Rendezvous {
     state: Mutex<State>,
     cv: Condvar,
     pub stats: StatsBoard,
+    pub timeline: TimelineBoard,
     world: usize,
 }
 
@@ -75,6 +117,7 @@ impl Rendezvous {
             state: Mutex::new(State::default()),
             cv: Condvar::new(),
             stats: StatsBoard::new(world),
+            timeline: TimelineBoard::new(world),
             world,
         })
     }
@@ -83,15 +126,15 @@ impl Rendezvous {
         self.world
     }
 
-    /// Deposit a contribution and wait until all `n` members have arrived.
-    /// Returns nothing; pickup happens in `take`.
-    fn deposit(
+    /// Deposit a contribution without waiting for peers (the issue side of
+    /// a nonblocking collective).
+    fn deposit_nowait(
         &self,
         key: SlotKey,
         kind: CommKind,
         my_pos: usize,
         n: usize,
-        payloads: Vec<Vec<f32>>,
+        payloads: Payloads,
         desc: &str,
     ) {
         let mut st = self.state.lock().unwrap();
@@ -102,21 +145,30 @@ impl Rendezvous {
             taken: 0,
             reduced: None,
         });
-        assert_eq!(slot.kind, kind, "collective kind mismatch at {desc} (got {kind:?}, slot {:?})", slot.kind);
+        assert_eq!(
+            slot.kind, kind,
+            "collective kind mismatch at {desc} (got {kind:?}, slot {:?})",
+            slot.kind
+        );
         assert_eq!(slot.contributions.len(), n, "group size mismatch at {desc}");
         assert!(slot.contributions[my_pos].is_none(), "double deposit at {desc}");
         slot.contributions[my_pos] = Some(payloads);
         slot.arrived += 1;
         self.cv.notify_all();
+    }
 
-        // wait for everyone
+    /// Block until `n` members have deposited into `key` (the wait side).
+    fn wait_full(&self, key: SlotKey, n: usize, desc: &str) {
+        let mut st = self.state.lock().unwrap();
         let deadline = std::time::Instant::now() + DEADLOCK_TIMEOUT;
-        while st.slots.get(&key).map(|s| s.arrived).unwrap_or(n) < n {
+        while st.slots.get(&key).map(|s| s.arrived).unwrap_or(0) < n {
             let remaining = deadline
                 .checked_duration_since(std::time::Instant::now())
                 .unwrap_or_else(|| {
-                    panic!("collective deadlock: {desc} (only {} of {} ranks arrived)",
-                        st.slots.get(&key).map(|s| s.arrived).unwrap_or(0), n)
+                    panic!(
+                        "collective deadlock: {desc} (only {} of {n} ranks arrived)",
+                        st.slots.get(&key).map(|s| s.arrived).unwrap_or(0)
+                    )
                 });
             let (g, timeout) = self.cv.wait_timeout(st, remaining).unwrap();
             st = g;
@@ -127,33 +179,124 @@ impl Rendezvous {
         }
     }
 
-    /// Read out this rank's result; the closure maps the complete slot to
-    /// the local result. The last reader frees the slot.
-    fn take<R>(
+    /// Deposit and wait until all `n` members have arrived (the blocking
+    /// path); pickup happens in `take`.
+    fn deposit(
         &self,
         key: SlotKey,
+        kind: CommKind,
+        my_pos: usize,
         n: usize,
-        f: impl FnOnce(&mut Slot) -> R,
-    ) -> R {
+        payloads: Payloads,
+        desc: &str,
+    ) {
+        self.deposit_nowait(key, kind, my_pos, n, payloads, desc);
+        self.wait_full(key, n, desc);
+    }
+
+    /// Read out this rank's result; the closure maps the complete slot to
+    /// the local result. The slot is freed after `n_takes` reads.
+    fn take<R>(&self, key: SlotKey, n_takes: usize, f: impl FnOnce(&mut Slot) -> R) -> R {
         let mut st = self.state.lock().unwrap();
         let slot = st.slots.get_mut(&key).expect("slot vanished before pickup");
         let out = f(slot);
         slot.taken += 1;
-        if slot.taken == n {
+        if slot.taken == n_takes {
             st.slots.remove(&key);
         }
         out
     }
 }
 
+/// Virtual finish times of one scheduled op on the rank's timeline.
+#[derive(Debug, Clone, Copy)]
+struct OpTimes {
+    intra_finish_s: f64,
+    finish_s: f64,
+}
+
+/// In-flight all-reduce handle (see `issue_all_reduce`).
+pub struct PendingAllReduce {
+    key: SlotKey,
+    n: usize,
+    finish_s: f64,
+}
+
+enum AgState {
+    /// Singleton group: result known at issue.
+    Ready(Payloads),
+    /// One whole-group exchange (flat, or hierarchical on one node).
+    Exchange { key: SlotKey, n: usize },
+    /// Spanning hierarchical gather: phase 1 deposited, leader exchange
+    /// and redistribution happen at wait.
+    Hier { gid: GroupId, seq: u64, plan: NodePlan, pos: usize, n: usize, own: Payload },
+}
+
+/// In-flight all-gather handle (see `issue_all_gather`).
+pub struct PendingAllGather {
+    finish_s: f64,
+    state: AgState,
+}
+
+enum A2aState {
+    /// Singleton group: result known at issue.
+    Ready(Payloads),
+    /// One whole-group exchange (flat, or hierarchical on one node).
+    Exchange { key: SlotKey, pos: usize, n: usize },
+    /// Spanning hierarchical all-to-all: both phases deposited at issue.
+    Hier {
+        gid: GroupId,
+        seq: u64,
+        plan: NodePlan,
+        pos: usize,
+        n: usize,
+        same_node: Vec<bool>,
+        mine: Payload,
+        early: Option<Vec<(usize, Payload)>>,
+    },
+    /// Spanning leader-aggregated (PXN) all-to-all: same-node exchange and
+    /// gather-to-leader deposited at issue; the leaders' batched exchange
+    /// and the redistribution happen at wait.
+    Pxn {
+        gid: GroupId,
+        seq: u64,
+        plan: NodePlan,
+        pos: usize,
+        n: usize,
+        mine: Payload,
+        /// `k == 1` only: the solo leader keeps its cross-node rows local.
+        own_cross: Option<Payloads>,
+        own_same_bytes: u64,
+        own_cross_bytes: u64,
+        early: Option<Vec<(usize, Payload)>>,
+    },
+}
+
+/// In-flight all-to-all handle (see `issue_all_to_all`).
+pub struct PendingAllToAll {
+    finish_s: f64,
+    intra_finish_s: f64,
+    state: A2aState,
+}
+
+impl PendingAllToAll {
+    /// Does this op deliver same-node receipts early (hierarchical phase
+    /// split)? Flat and single-node ops complete in one exchange.
+    pub fn has_phases(&self) -> bool {
+        matches!(self.state, A2aState::Hier { .. } | A2aState::Pxn { .. })
+    }
+}
+
 /// One rank's handle: owns the per-group sequence counters plus the
-/// transport selection (strategy + node boundaries).
+/// transport selection (strategy + node boundaries) and the optional α-β
+/// cost model that feeds the overlap timeline.
 pub struct Communicator {
     rez: Arc<Rendezvous>,
     rank: usize,
     seqs: HashMap<GroupId, u64>,
     strategy: CollectiveStrategy,
     nodes: NodeMap,
+    cost: Option<ClusterConfig>,
 }
 
 impl Communicator {
@@ -176,6 +319,7 @@ impl Communicator {
             seqs: HashMap::new(),
             strategy,
             nodes: NodeMap::new(gpus_per_node),
+            cost: None,
         }
     }
 
@@ -195,6 +339,21 @@ impl Communicator {
         &self.rez.stats
     }
 
+    /// Attach an α-β cost model: every subsequent collective is priced
+    /// with the `perfmodel` phased costs and scheduled on this rank's
+    /// overlap timeline. The cluster's `gpus_per_node` is overridden by
+    /// the communicator's own node map so pricing and transport agree.
+    pub fn set_cost_model(&mut self, mut cluster: ClusterConfig) {
+        cluster.gpus_per_node =
+            if self.nodes.node_size == 0 { usize::MAX } else { self.nodes.node_size };
+        self.cost = Some(cluster);
+    }
+
+    /// This rank's modeled comm timeline (zeros without a cost model).
+    pub fn timeline(&self) -> crate::collectives::accounting::RankTimeline {
+        self.rez.timeline.get(self.rank)
+    }
+
     fn next_seq(&mut self, gid: GroupId) -> u64 {
         let c = self.seqs.entry(gid).or_insert(0);
         let s = *c;
@@ -209,10 +368,57 @@ impl Communicator {
             .unwrap_or_else(|| panic!("rank {} not in group {members:?}", self.rank))
     }
 
+    /// Price one op (zero without a cost model) and schedule its phases on
+    /// the rank's two-lane timeline. The PXN all-to-all schedules three
+    /// phases (pre-wire intra, wire, post-wire redistribute) so the early
+    /// same-node pickup time excludes the redistribute hop, which
+    /// physically follows the leaders' wire exchange.
+    fn schedule_op(
+        &self,
+        kind: CommKind,
+        members: &[usize],
+        bytes: f64,
+        blocking: bool,
+    ) -> OpTimes {
+        let (intra_s, inter_s, post_s) = match &self.cost {
+            None => (0.0, 0.0, 0.0),
+            Some(c) => {
+                if kind == CommKind::AllToAll
+                    && self.strategy == CollectiveStrategy::HierarchicalPxn
+                {
+                    alltoall_pxn_schedule(c, members, bytes)
+                } else {
+                    let pc = match kind {
+                        CommKind::AllReduce => allreduce_phased(c, self.strategy, members, bytes),
+                        CommKind::ReduceScatter => {
+                            // one of the two stages of a ring all-reduce
+                            let p = allreduce_phased(c, self.strategy, members, bytes);
+                            PhasedCost { intra_s: 0.5 * p.intra_s, inter_s: 0.5 * p.inter_s }
+                        }
+                        CommKind::AllGather => allgather_phased(c, self.strategy, members, bytes),
+                        CommKind::AllToAll => alltoall_phased(c, self.strategy, members, bytes),
+                        // one root block reaching every member ~ an all-gather
+                        CommKind::Broadcast => allgather_phased(c, self.strategy, members, bytes),
+                        CommKind::Barrier => PhasedCost::default(),
+                    };
+                    (pc.intra_s, pc.inter_s, 0.0)
+                }
+            }
+        };
+        let (intra_finish_s, finish_s) =
+            self.rez.timeline.schedule(self.rank, intra_s, inter_s, post_s, blocking);
+        OpTimes { intra_finish_s, finish_s }
+    }
+
+    /// Current virtual clock (used as the finish time of free ops).
+    fn clock(&self) -> f64 {
+        self.rez.timeline.get(self.rank).clock_s
+    }
+
     /// Lane attribution for the flat transport: one undifferentiated lane,
     /// charged to the bottleneck (inter-node) fabric when the job spans
     /// nodes — the flat backend cannot distinguish, which is exactly the
-    /// limitation the hierarchical backend removes.
+    /// limitation the hierarchical backends remove.
     fn flat_lanes(&self, bytes: u64) -> (u64, u64) {
         if self.nodes.spans_nodes(self.rez.world()) {
             (0, bytes)
@@ -239,38 +445,81 @@ impl Communicator {
 
     /// In-place sum all-reduce over the group (deterministic member order).
     pub fn all_reduce(&mut self, gid: GroupId, members: &[usize], t: &mut Tensor) {
+        let p = self.issue_all_reduce_at(gid, members, t, true);
+        self.wait_all_reduce(p, t);
+    }
+
+    /// Nonblocking all-reduce: deposits this rank's contribution and
+    /// returns immediately. Redeem with [`Self::wait_all_reduce`].
+    pub fn issue_all_reduce(
+        &mut self,
+        gid: GroupId,
+        members: &[usize],
+        t: &Tensor,
+    ) -> PendingAllReduce {
+        self.issue_all_reduce_at(gid, members, t, false)
+    }
+
+    fn issue_all_reduce_at(
+        &mut self,
+        gid: GroupId,
+        members: &[usize],
+        t: &Tensor,
+        blocking: bool,
+    ) -> PendingAllReduce {
         let n = members.len();
         if n == 1 {
-            return; // singleton group: no comm, no accounting
+            // singleton group: no comm, no accounting
+            return PendingAllReduce { key: (gid, 0, 0), n, finish_s: self.clock() };
         }
         let pos = self.my_pos(members);
         let seq = self.next_seq(gid);
         let key = (gid, seq, 0u32);
         let bytes = (t.numel() * 4) as u64;
+        let times = self.schedule_op(CommKind::AllReduce, members, bytes as f64, blocking);
         let (intra, inter) = match self.strategy {
             CollectiveStrategy::Flat => self.flat_lanes(bytes),
-            CollectiveStrategy::Hierarchical => self.hier_reduce_lanes(members, pos, bytes),
+            CollectiveStrategy::Hierarchical | CollectiveStrategy::HierarchicalPxn => {
+                self.hier_reduce_lanes(members, pos, bytes)
+            }
         };
         self.rez.stats.record_split(self.rank, CommKind::AllReduce, intra, inter);
-        self.rez.deposit(key, CommKind::AllReduce, pos, n, vec![t.data().to_vec()],
-            &format!("all_reduce g={gid:?} seq={seq}"));
-        let result = self.rez.take(key, n, |slot| {
-            if slot.reduced.is_none() {
-                // reduce in member order for determinism
-                let len = slot.contributions[0].as_ref().unwrap()[0].len();
-                let mut acc = vec![0.0f32; len];
-                for c in slot.contributions.iter() {
-                    let v = &c.as_ref().expect("missing contribution")[0];
-                    assert_eq!(v.len(), len, "all_reduce length mismatch");
-                    for (a, b) in acc.iter_mut().zip(v) {
-                        *a += *b;
+        self.rez.deposit_nowait(
+            key,
+            CommKind::AllReduce,
+            pos,
+            n,
+            vec![t.data().to_vec()],
+            &format!("all_reduce g={gid:?} seq={seq}"),
+        );
+        PendingAllReduce { key, n, finish_s: times.finish_s }
+    }
+
+    /// Complete a pending all-reduce, overwriting `t` with the sum. The
+    /// tensor must have the same length as the one passed at issue.
+    pub fn wait_all_reduce(&mut self, p: PendingAllReduce, t: &mut Tensor) {
+        if p.n > 1 {
+            let desc = format!("all_reduce wait g={:?} seq={}", p.key.0, p.key.1);
+            self.rez.wait_full(p.key, p.n, &desc);
+            let result = self.rez.take(p.key, p.n, |slot| {
+                if slot.reduced.is_none() {
+                    // reduce in member order for determinism
+                    let len = slot.contributions[0].as_ref().unwrap()[0].len();
+                    let mut acc = vec![0.0f32; len];
+                    for c in slot.contributions.iter() {
+                        let v = &c.as_ref().expect("missing contribution")[0];
+                        assert_eq!(v.len(), len, "all_reduce length mismatch");
+                        for (a, b) in acc.iter_mut().zip(v) {
+                            *a += *b;
+                        }
                     }
+                    slot.reduced = Some(Arc::new(acc));
                 }
-                slot.reduced = Some(Arc::new(acc));
-            }
-            Arc::clone(slot.reduced.as_ref().unwrap())
-        });
-        t.data_mut().copy_from_slice(&result);
+                Arc::clone(slot.reduced.as_ref().unwrap())
+            });
+            t.data_mut().copy_from_slice(&result);
+        }
+        self.rez.timeline.complete(self.rank, p.finish_s);
     }
 
     /// Reduce-scatter (sum): input length must divide evenly by group size;
@@ -285,13 +534,22 @@ impl Communicator {
         let seq = self.next_seq(gid);
         let key = (gid, seq, 0u32);
         let bytes = (t.numel() * 4) as u64;
+        self.schedule_op(CommKind::ReduceScatter, members, bytes as f64, true);
         let (intra, inter) = match self.strategy {
             CollectiveStrategy::Flat => self.flat_lanes(bytes),
-            CollectiveStrategy::Hierarchical => self.hier_reduce_lanes(members, pos, bytes),
+            CollectiveStrategy::Hierarchical | CollectiveStrategy::HierarchicalPxn => {
+                self.hier_reduce_lanes(members, pos, bytes)
+            }
         };
         self.rez.stats.record_split(self.rank, CommKind::ReduceScatter, intra, inter);
-        self.rez.deposit(key, CommKind::ReduceScatter, pos, n, vec![t.data().to_vec()],
-            &format!("reduce_scatter g={gid:?} seq={seq}"));
+        self.rez.deposit(
+            key,
+            CommKind::ReduceScatter,
+            pos,
+            n,
+            vec![t.data().to_vec()],
+            &format!("reduce_scatter g={gid:?} seq={seq}"),
+        );
         self.rez.take(key, n, |slot| {
             let len = t.numel();
             let shard = len / n;
@@ -317,11 +575,12 @@ impl Communicator {
         let pos = self.my_pos(members);
         let seq = self.next_seq(gid);
         let key = (gid, seq, 0u32);
+        self.schedule_op(CommKind::Broadcast, members, (t.numel() * 4) as f64, true);
         if pos == root_pos {
             let bytes = (t.numel() * 4) as u64;
             let (intra, inter) = match self.strategy {
                 CollectiveStrategy::Flat => self.flat_lanes(bytes),
-                CollectiveStrategy::Hierarchical => {
+                CollectiveStrategy::Hierarchical | CollectiveStrategy::HierarchicalPxn => {
                     let plan = NodePlan::build(self.nodes, members, pos);
                     let intra = if plan.my_subset().len() > 1 { bytes } else { 0 };
                     let inter = if plan.n_nodes() > 1 { bytes } else { 0 };
@@ -362,72 +621,122 @@ impl Communicator {
     // ------------------------------------------------------------------
 
     /// All-gather: returns each member's tensor in member order.
-    pub fn all_gather(&mut self, gid: GroupId, members: &[usize], t: &Tensor) -> Vec<Vec<f32>> {
+    pub fn all_gather(&mut self, gid: GroupId, members: &[usize], t: &Tensor) -> Payloads {
+        let p = self.issue_all_gather_at(gid, members, t, true);
+        self.wait_all_gather(p)
+    }
+
+    /// Nonblocking all-gather: deposits this rank's contribution (and, on
+    /// the hierarchical backends, its intra-node phase) and returns
+    /// immediately. Redeem with [`Self::wait_all_gather`].
+    pub fn issue_all_gather(
+        &mut self,
+        gid: GroupId,
+        members: &[usize],
+        t: &Tensor,
+    ) -> PendingAllGather {
+        self.issue_all_gather_at(gid, members, t, false)
+    }
+
+    fn issue_all_gather_at(
+        &mut self,
+        gid: GroupId,
+        members: &[usize],
+        t: &Tensor,
+        blocking: bool,
+    ) -> PendingAllGather {
         let n = members.len();
         if n == 1 {
-            return vec![t.data().to_vec()];
+            return PendingAllGather {
+                finish_s: self.clock(),
+                state: AgState::Ready(vec![t.data().to_vec()]),
+            };
         }
         let pos = self.my_pos(members);
         let seq = self.next_seq(gid);
-        match self.strategy {
+        let own_bytes = (t.numel() * 4) as u64;
+        let times = self.schedule_op(CommKind::AllGather, members, own_bytes as f64, blocking);
+        let state = match self.strategy {
             CollectiveStrategy::Flat => {
-                let (intra, inter) = self.flat_lanes((t.numel() * 4) as u64);
+                let (intra, inter) = self.flat_lanes(own_bytes);
                 self.rez.stats.record_split(self.rank, CommKind::AllGather, intra, inter);
-                self.all_gather_exchange(gid, seq, 0, pos, n, t)
+                let key = (gid, seq, 0u32);
+                self.rez.deposit_nowait(key, CommKind::AllGather, pos, n,
+                    vec![t.data().to_vec()],
+                    &format!("all_gather g={gid:?} seq={seq}"));
+                AgState::Exchange { key, n }
             }
-            CollectiveStrategy::Hierarchical => self.all_gather_hier(gid, seq, members, pos, t),
-        }
+            CollectiveStrategy::Hierarchical | CollectiveStrategy::HierarchicalPxn => {
+                let plan = NodePlan::build(self.nodes, members, pos);
+                if plan.n_nodes() == 1 {
+                    // group fits in one node: a single intra-node exchange
+                    self.rez.stats.record_split(self.rank, CommKind::AllGather, own_bytes, 0);
+                    let key = (gid, seq, ptag(1, 0));
+                    self.rez.deposit_nowait(key, CommKind::AllGather, pos, n,
+                        vec![t.data().to_vec()],
+                        &format!("all_gather g={gid:?} seq={seq}"));
+                    AgState::Exchange { key, n }
+                } else {
+                    // phase 1 (intra): node members gather the node block
+                    if plan.my_subset().len() > 1 {
+                        let key = (gid, seq, ptag(1, plan.my_node));
+                        self.rez.deposit_nowait(key, CommKind::AllGather, plan.my_subpos,
+                            plan.my_subset().len(), vec![t.data().to_vec()],
+                            &format!("all_gather/intra g={gid:?} seq={seq} node={}", plan.my_node));
+                    }
+                    AgState::Hier { gid, seq, plan, pos, n, own: t.data().to_vec() }
+                }
+            }
+        };
+        PendingAllGather { finish_s: times.finish_s, state }
     }
 
-    /// One whole-group gather exchange on `tag`.
-    fn all_gather_exchange(
+    /// Complete a pending all-gather.
+    pub fn wait_all_gather(&mut self, p: PendingAllGather) -> Payloads {
+        let out = match p.state {
+            AgState::Ready(v) => v,
+            AgState::Exchange { key, n } => {
+                let desc = format!("all_gather wait g={:?} seq={}", key.0, key.1);
+                self.rez.wait_full(key, n, &desc);
+                self.rez.take(key, n, |slot| {
+                    slot.contributions
+                        .iter()
+                        .map(|c| c.as_ref().expect("missing contribution")[0].clone())
+                        .collect()
+                })
+            }
+            AgState::Hier { gid, seq, plan, pos, n, own } => {
+                self.finish_all_gather_hier(gid, seq, &plan, pos, n, own)
+            }
+        };
+        self.rez.timeline.complete(self.rank, p.finish_s);
+        out
+    }
+
+    /// Phases 2..3 of a spanning hierarchical all-gather: the leaders'
+    /// node-block exchange plus the intra-node redistribution (which in
+    /// shared memory only shows up in the lane accounting).
+    fn finish_all_gather_hier(
         &self,
         gid: GroupId,
         seq: u64,
-        tag: u32,
+        plan: &NodePlan,
         pos: usize,
         n: usize,
-        t: &Tensor,
-    ) -> Vec<Vec<f32>> {
-        let key = (gid, seq, tag);
-        self.rez.deposit(key, CommKind::AllGather, pos, n, vec![t.data().to_vec()],
-            &format!("all_gather g={gid:?} seq={seq} tag={tag}"));
-        self.rez.take(key, n, |slot| {
-            slot.contributions
-                .iter()
-                .map(|c| c.as_ref().expect("missing contribution")[0].clone())
-                .collect()
-        })
-    }
-
-    fn all_gather_hier(
-        &self,
-        gid: GroupId,
-        seq: u64,
-        members: &[usize],
-        pos: usize,
-        t: &Tensor,
-    ) -> Vec<Vec<f32>> {
-        let n = members.len();
-        let plan = NodePlan::build(self.nodes, members, pos);
-        let own_bytes = (t.numel() * 4) as u64;
-        if plan.n_nodes() == 1 {
-            // group fits in one node: a single intra-node exchange
-            self.rez.stats.record_split(self.rank, CommKind::AllGather, own_bytes, 0);
-            return self.all_gather_exchange(gid, seq, ptag(1, 0), pos, n, t);
-        }
-
-        // phase 1 (intra): node members gather the node block; only the
-        // leader materializes it (it alone forwards the block in phase 2)
+        own: Payload,
+    ) -> Payloads {
         let subset = plan.my_subset().to_vec();
-        let my_subpos = plan.my_subpos;
+        let k = subset.len();
         let leader = plan.is_leader();
-        let node_block: Vec<Vec<f32>> = if subset.len() > 1 {
+        let own_bytes = (own.len() * 4) as u64;
+
+        // phase 1 pickup: only the leader materializes the node block (it
+        // alone forwards the block in phase 2)
+        let node_block: Payloads = if k > 1 {
             let key = (gid, seq, ptag(1, plan.my_node));
-            self.rez.deposit(key, CommKind::AllGather, my_subpos, subset.len(),
-                vec![t.data().to_vec()],
-                &format!("all_gather/intra g={gid:?} seq={seq} node={}", plan.my_node));
-            self.rez.take(key, subset.len(), |slot| {
+            let desc = format!("all_gather/intra g={gid:?} seq={seq} node={}", plan.my_node);
+            self.rez.wait_full(key, k, &desc);
+            self.rez.take(key, k, |slot| {
                 if leader {
                     slot.contributions
                         .iter()
@@ -438,16 +747,16 @@ impl Communicator {
                 }
             })
         } else {
-            vec![t.data().to_vec()]
+            vec![own]
         };
 
         // phase 2 (inter): each node's leader publishes its node block
         let key2 = (gid, seq, ptag(2, 0));
-        let payloads = node_block; // empty for non-leaders
-        self.rez.deposit(key2, CommKind::AllGather, pos, n, payloads,
-            &format!("all_gather/inter g={gid:?} seq={seq}"));
-        let leader_positions: Vec<usize> = plan.nodes.iter().map(|(_, s)| s[0]).collect();
-        let blocks: Vec<Vec<Vec<f32>>> = self.rez.take(key2, n, |slot| {
+        let desc2 = format!("all_gather/inter g={gid:?} seq={seq}");
+        self.rez.deposit_nowait(key2, CommKind::AllGather, pos, n, node_block, &desc2);
+        self.rez.wait_full(key2, n, &desc2);
+        let leader_positions = plan.leader_positions();
+        let blocks: Vec<Payloads> = self.rez.take(key2, n, |slot| {
             leader_positions
                 .iter()
                 .map(|&lp| slot.contributions[lp].as_ref().expect("leader block missing").clone())
@@ -457,11 +766,11 @@ impl Communicator {
         // reassemble member-order output (phase 3 is the leaders' intra-node
         // redistribution of remote blocks; in shared memory the data is
         // already here, so it only shows up in the lane accounting)
-        let mut out: Vec<Vec<f32>> = vec![Vec::new(); n];
+        let mut out: Payloads = vec![Vec::new(); n];
         let mut total_bytes = 0u64;
         let mut my_block_bytes = 0u64;
-        for (k, block) in blocks.into_iter().enumerate() {
-            let subset_k = &plan.nodes[k].1;
+        for (kk, block) in blocks.into_iter().enumerate() {
+            let subset_k = &plan.nodes[kk].1;
             assert_eq!(block.len(), subset_k.len(), "node block size mismatch");
             let mut bb = 0u64;
             for (v, &p) in block.into_iter().zip(subset_k.iter()) {
@@ -469,16 +778,16 @@ impl Communicator {
                 out[p] = v;
             }
             total_bytes += bb;
-            if k == plan.my_node {
+            if kk == plan.my_node {
                 my_block_bytes = bb;
             }
         }
 
-        let mut intra = if subset.len() > 1 { own_bytes } else { 0 };
+        let mut intra = if k > 1 { own_bytes } else { 0 };
         let mut inter = 0u64;
-        if plan.is_leader() {
+        if leader {
             inter += my_block_bytes;
-            if subset.len() > 1 {
+            if k > 1 {
                 // redistributing the remote blocks to node peers
                 intra += total_bytes - my_block_bytes;
             }
@@ -488,149 +797,503 @@ impl Communicator {
     }
 
     // ------------------------------------------------------------------
-    // all-to-all: flat single exchange, or same-node payloads intra-node
-    // followed by cross-node payloads inter-node
+    // all-to-all: flat single exchange; hierarchical same-node phase then
+    // cross-node phase; or PXN leader-aggregated batching
     // ------------------------------------------------------------------
 
     /// All-to-all(v): `send[i]` goes to `members[i]`; returns what each
     /// member sent to us, in member order. Variable lengths allowed.
-    pub fn all_to_all(
+    pub fn all_to_all(&mut self, gid: GroupId, members: &[usize], send: Payloads) -> Payloads {
+        let p = self.issue_all_to_all_at(gid, members, send, true);
+        self.wait_all_to_all(p)
+    }
+
+    /// Nonblocking all-to-all: deposits every locally available phase and
+    /// returns immediately. Redeem with [`Self::wait_all_to_all`]
+    /// (optionally [`Self::wait_all_to_all_intra`] first).
+    pub fn issue_all_to_all(
         &mut self,
         gid: GroupId,
         members: &[usize],
-        send: Vec<Vec<f32>>,
-    ) -> Vec<Vec<f32>> {
+        send: Payloads,
+    ) -> PendingAllToAll {
+        self.issue_all_to_all_at(gid, members, send, false)
+    }
+
+    fn issue_all_to_all_at(
+        &mut self,
+        gid: GroupId,
+        members: &[usize],
+        mut send: Payloads,
+        blocking: bool,
+    ) -> PendingAllToAll {
         let n = members.len();
         assert_eq!(send.len(), n, "all_to_all needs one payload per member");
         let pos = self.my_pos(members);
         if n == 1 {
-            return send;
+            let c = self.clock();
+            return PendingAllToAll { finish_s: c, intra_finish_s: c, state: A2aState::Ready(send) };
         }
         let seq = self.next_seq(gid);
-        match self.strategy {
+        // bytes leaving this rank = everything not destined to self
+        let local_bytes: u64 = send
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != pos)
+            .map(|(_, v)| (v.len() * 4) as u64)
+            .sum();
+        let times = self.schedule_op(CommKind::AllToAll, members, local_bytes as f64, blocking);
+        let peer_msgs = (n - 1) as u64;
+
+        let state = match self.strategy {
             CollectiveStrategy::Flat => {
-                // bytes leaving this rank = everything not destined to self
-                let bytes: u64 = send
-                    .iter()
-                    .enumerate()
-                    .filter(|(i, _)| *i != pos)
-                    .map(|(_, v)| (v.len() * 4) as u64)
-                    .sum();
-                let (intra, inter) = self.flat_lanes(bytes);
-                self.rez.stats.record_split(self.rank, CommKind::AllToAll, intra, inter);
-                self.all_to_all_exchange(gid, seq, 0, pos, n, send)
+                let (intra, inter) = self.flat_lanes(local_bytes);
+                let (im, xm) = if self.nodes.spans_nodes(self.rez.world()) {
+                    (0, peer_msgs)
+                } else {
+                    (peer_msgs, 0)
+                };
+                self.rez
+                    .stats
+                    .record_split_msgs(self.rank, CommKind::AllToAll, intra, inter, im, xm);
+                let key = (gid, seq, 0u32);
+                self.rez.deposit_nowait(key, CommKind::AllToAll, pos, n, send,
+                    &format!("all_to_all g={gid:?} seq={seq}"));
+                A2aState::Exchange { key, pos, n }
             }
             CollectiveStrategy::Hierarchical => {
-                self.all_to_all_hier(gid, seq, members, pos, send)
+                let plan = NodePlan::build(self.nodes, members, pos);
+                if plan.n_nodes() == 1 {
+                    self.rez.stats.record_split_msgs(
+                        self.rank, CommKind::AllToAll, local_bytes, 0, peer_msgs, 0);
+                    let key = (gid, seq, ptag(1, 0));
+                    self.rez.deposit_nowait(key, CommKind::AllToAll, pos, n, send,
+                        &format!("all_to_all g={gid:?} seq={seq}"));
+                    A2aState::Exchange { key, pos, n }
+                } else {
+                    let subset = plan.my_subset().to_vec();
+                    let k = subset.len();
+                    let mut same_node = vec![false; n];
+                    for &p in &subset {
+                        same_node[p] = true;
+                    }
+                    let mine = std::mem::take(&mut send[pos]);
+                    let intra_bytes: u64 = subset
+                        .iter()
+                        .filter(|&&p| p != pos)
+                        .map(|&p| (send[p].len() * 4) as u64)
+                        .sum();
+                    let inter_bytes: u64 = (0..n)
+                        .filter(|&p| !same_node[p])
+                        .map(|p| (send[p].len() * 4) as u64)
+                        .sum();
+
+                    // phase 1 (intra): payloads between same-node members
+                    if k > 1 {
+                        let sub_send: Payloads = subset
+                            .iter()
+                            .map(|&p| {
+                                if p == pos { Vec::new() } else { std::mem::take(&mut send[p]) }
+                            })
+                            .collect();
+                        let key = (gid, seq, ptag(1, plan.my_node));
+                        self.rez.deposit_nowait(key, CommKind::AllToAll, plan.my_subpos, k,
+                            sub_send,
+                            &format!("all_to_all/intra g={gid:?} seq={seq} node={}", plan.my_node));
+                    }
+                    // phase 2 (inter): cross-node payloads over the full group
+                    let remote_send: Payloads =
+                        (0..n).map(|p| std::mem::take(&mut send[p])).collect();
+                    let key2 = (gid, seq, ptag(2, 0));
+                    self.rez.deposit_nowait(key2, CommKind::AllToAll, pos, n, remote_send,
+                        &format!("all_to_all/inter g={gid:?} seq={seq}"));
+                    self.rez.stats.record_split_msgs(
+                        self.rank,
+                        CommKind::AllToAll,
+                        intra_bytes,
+                        inter_bytes,
+                        (k - 1) as u64,
+                        (n - k) as u64,
+                    );
+                    A2aState::Hier { gid, seq, plan, pos, n, same_node, mine, early: None }
+                }
             }
+            CollectiveStrategy::HierarchicalPxn => {
+                let plan = NodePlan::build(self.nodes, members, pos);
+                if plan.n_nodes() == 1 {
+                    self.rez.stats.record_split_msgs(
+                        self.rank, CommKind::AllToAll, local_bytes, 0, peer_msgs, 0);
+                    let key = (gid, seq, ptag(1, 0));
+                    self.rez.deposit_nowait(key, CommKind::AllToAll, pos, n, send,
+                        &format!("all_to_all g={gid:?} seq={seq}"));
+                    A2aState::Exchange { key, pos, n }
+                } else {
+                    let subset = plan.my_subset().to_vec();
+                    let k = subset.len();
+                    let mut same_node = vec![false; n];
+                    for &p in &subset {
+                        same_node[p] = true;
+                    }
+                    let mine = std::mem::take(&mut send[pos]);
+                    let own_same_bytes: u64 = subset
+                        .iter()
+                        .filter(|&&p| p != pos)
+                        .map(|&p| (send[p].len() * 4) as u64)
+                        .sum();
+                    let own_cross_bytes: u64 = (0..n)
+                        .filter(|&p| !same_node[p])
+                        .map(|p| (send[p].len() * 4) as u64)
+                        .sum();
+                    let mut own_cross = None;
+                    if k > 1 {
+                        // phase 1a (intra): same-node direct exchange
+                        let sub_send: Payloads = subset
+                            .iter()
+                            .map(|&p| {
+                                if p == pos { Vec::new() } else { std::mem::take(&mut send[p]) }
+                            })
+                            .collect();
+                        let key = (gid, seq, ptag(1, plan.my_node));
+                        self.rez.deposit_nowait(key, CommKind::AllToAll, plan.my_subpos, k,
+                            sub_send,
+                            &format!("all_to_all/intra g={gid:?} seq={seq} node={}", plan.my_node));
+                        // phase 1b (intra): forward cross-node rows to the
+                        // node leader (only cross entries are non-empty now)
+                        let cross_send: Payloads =
+                            (0..n).map(|p| std::mem::take(&mut send[p])).collect();
+                        let key1b = (gid, seq, ptag(3, plan.my_node));
+                        self.rez.deposit_nowait(key1b, CommKind::AllToAll, plan.my_subpos, k,
+                            cross_send,
+                            &format!("all_to_all/pxn-gather g={gid:?} seq={seq} node={}",
+                                plan.my_node));
+                    } else {
+                        // solo leader: its cross rows never leave the rank
+                        // until the leaders' exchange
+                        let cross_send: Payloads =
+                            (0..n).map(|p| std::mem::take(&mut send[p])).collect();
+                        own_cross = Some(cross_send);
+                    }
+                    // stats recorded at wait: the leader's redistribution
+                    // volume depends on what the other nodes send
+                    A2aState::Pxn {
+                        gid,
+                        seq,
+                        plan,
+                        pos,
+                        n,
+                        mine,
+                        own_cross,
+                        own_same_bytes,
+                        own_cross_bytes,
+                        early: None,
+                    }
+                }
+            }
+        };
+        PendingAllToAll { finish_s: times.finish_s, intra_finish_s: times.intra_finish_s, state }
+    }
+
+    /// Pick up the same-node receipts of a pending hierarchical/PXN
+    /// all-to-all as soon as the intra-node phase completes — the
+    /// inter-node phase may still be in flight. Returns `(member position,
+    /// rows)` pairs (empty for flat or single-node ops, which have no
+    /// phase split). Idempotent; the final `wait_all_to_all` still returns
+    /// the complete member-order result.
+    pub fn wait_all_to_all_intra<'p>(
+        &mut self,
+        p: &'p mut PendingAllToAll,
+    ) -> &'p [(usize, Payload)] {
+        self.rez.timeline.complete(self.rank, p.intra_finish_s);
+        match &mut p.state {
+            A2aState::Hier { gid, seq, plan, pos, early, .. }
+            | A2aState::Pxn { gid, seq, plan, pos, early, .. } => {
+                if early.is_none() {
+                    *early = Some(Self::take_a2a_intra(&self.rez, *gid, *seq, plan, *pos));
+                }
+                early.as_deref().unwrap()
+            }
+            _ => &[],
         }
     }
 
-    /// One whole-group all-to-all exchange on `tag`.
-    fn all_to_all_exchange(
-        &self,
+    /// Take the phase-1 (same-node exchange) receipts: `(member position,
+    /// rows)` for every same-node peer.
+    fn take_a2a_intra(
+        rez: &Rendezvous,
         gid: GroupId,
         seq: u64,
-        tag: u32,
+        plan: &NodePlan,
         pos: usize,
-        n: usize,
-        send: Vec<Vec<f32>>,
-    ) -> Vec<Vec<f32>> {
-        let key = (gid, seq, tag);
-        self.rez.deposit(key, CommKind::AllToAll, pos, n, send,
-            &format!("all_to_all g={gid:?} seq={seq} tag={tag}"));
-        self.rez.take(key, n, |slot| {
+    ) -> Vec<(usize, Payload)> {
+        let subset = plan.my_subset().to_vec();
+        let k = subset.len();
+        if k <= 1 {
+            return Vec::new();
+        }
+        let my_subpos = plan.my_subpos;
+        let key = (gid, seq, ptag(1, plan.my_node));
+        let desc = format!("all_to_all/intra g={gid:?} seq={seq} node={}", plan.my_node);
+        rez.wait_full(key, k, &desc);
+        let rows: Payloads = rez.take(key, k, |slot| {
             slot.contributions
                 .iter()
-                .map(|c| c.as_ref().expect("missing contribution")[pos].clone())
+                .map(|c| c.as_ref().expect("missing contribution")[my_subpos].clone())
                 .collect()
-        })
+        });
+        rows.into_iter()
+            .zip(subset.iter())
+            .filter(|(_, &p2)| p2 != pos)
+            .map(|(v, &p2)| (p2, v))
+            .collect()
     }
 
-    fn all_to_all_hier(
+    /// Complete a pending all-to-all, returning what each member sent to
+    /// us, in member order.
+    pub fn wait_all_to_all(&mut self, p: PendingAllToAll) -> Payloads {
+        let out = match p.state {
+            A2aState::Ready(v) => v,
+            A2aState::Exchange { key, pos, n } => {
+                let desc = format!("all_to_all wait g={:?} seq={}", key.0, key.1);
+                self.rez.wait_full(key, n, &desc);
+                self.rez.take(key, n, |slot| {
+                    slot.contributions
+                        .iter()
+                        .map(|c| c.as_ref().expect("missing contribution")[pos].clone())
+                        .collect()
+                })
+            }
+            A2aState::Hier { gid, seq, plan, pos, n, same_node, mine, early } => {
+                let early_rows = early
+                    .unwrap_or_else(|| Self::take_a2a_intra(&self.rez, gid, seq, &plan, pos));
+                let mut out: Payloads = vec![Vec::new(); n];
+                for (p2, v) in early_rows {
+                    out[p2] = v;
+                }
+                let key2 = (gid, seq, ptag(2, 0));
+                let desc2 = format!("all_to_all/inter g={gid:?} seq={seq}");
+                self.rez.wait_full(key2, n, &desc2);
+                let got: Payloads = self.rez.take(key2, n, |slot| {
+                    slot.contributions
+                        .iter()
+                        .map(|c| c.as_ref().expect("missing contribution")[pos].clone())
+                        .collect()
+                });
+                for (p2, v) in got.into_iter().enumerate() {
+                    if !same_node[p2] {
+                        out[p2] = v;
+                    }
+                }
+                out[pos] = mine;
+                out
+            }
+            A2aState::Pxn {
+                gid,
+                seq,
+                plan,
+                pos,
+                n,
+                mine,
+                own_cross,
+                own_same_bytes,
+                own_cross_bytes,
+                early,
+            } => self.finish_all_to_all_pxn(
+                gid,
+                seq,
+                &plan,
+                pos,
+                n,
+                mine,
+                own_cross,
+                own_same_bytes,
+                own_cross_bytes,
+                early,
+            ),
+        };
+        self.rez.timeline.complete(self.rank, p.finish_s);
+        out
+    }
+
+    /// PXN phases 1b..3: gather the node's cross rows to the leader, the
+    /// leaders' batched exchange (one framed message per peer node), and
+    /// the redistribution to node peers. Framing is `[len, row...]` per
+    /// (source, destination) pair in canonical plan order on both sides,
+    /// so assembly is deterministic and bitwise identical to the other
+    /// backends.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_all_to_all_pxn(
         &self,
         gid: GroupId,
         seq: u64,
-        members: &[usize],
+        plan: &NodePlan,
         pos: usize,
-        mut send: Vec<Vec<f32>>,
-    ) -> Vec<Vec<f32>> {
-        let n = members.len();
-        let plan = NodePlan::build(self.nodes, members, pos);
-        if plan.n_nodes() == 1 {
-            let bytes: u64 = send
-                .iter()
-                .enumerate()
-                .filter(|(i, _)| *i != pos)
-                .map(|(_, v)| (v.len() * 4) as u64)
-                .sum();
-            self.rez.stats.record_split(self.rank, CommKind::AllToAll, bytes, 0);
-            return self.all_to_all_exchange(gid, seq, ptag(1, 0), pos, n, send);
-        }
-
+        n: usize,
+        mine: Payload,
+        own_cross: Option<Payloads>,
+        own_same_bytes: u64,
+        own_cross_bytes: u64,
+        early: Option<Vec<(usize, Payload)>>,
+    ) -> Payloads {
         let subset = plan.my_subset().to_vec();
+        let k = subset.len();
+        let m = plan.n_nodes();
+        let my_node = plan.my_node;
         let my_subpos = plan.my_subpos;
-        let mut same_node = vec![false; n];
-        for &p in &subset {
-            same_node[p] = true;
-        }
-        let mine = std::mem::take(&mut send[pos]);
-        let intra_bytes: u64 = subset
-            .iter()
-            .filter(|&&p| p != pos)
-            .map(|&p| (send[p].len() * 4) as u64)
-            .sum();
-        let inter_bytes: u64 = (0..n)
-            .filter(|&p| !same_node[p])
-            .map(|p| (send[p].len() * 4) as u64)
-            .sum();
+        let leader = plan.is_leader();
+        let mut out: Payloads = vec![Vec::new(); n];
 
-        let mut out: Vec<Vec<f32>> = vec![Vec::new(); n];
-
-        // phase 1 (intra): exchange payloads between same-node members
-        if subset.len() > 1 {
-            let sub_send: Vec<Vec<f32>> = subset
-                .iter()
-                .map(|&p| if p == pos { Vec::new() } else { std::mem::take(&mut send[p]) })
-                .collect();
-            let key = (gid, seq, ptag(1, plan.my_node));
-            self.rez.deposit(key, CommKind::AllToAll, my_subpos, subset.len(), sub_send,
-                &format!("all_to_all/intra g={gid:?} seq={seq} node={}", plan.my_node));
-            let got: Vec<Vec<f32>> = self.rez.take(key, subset.len(), |slot| {
-                slot.contributions
-                    .iter()
-                    .map(|c| c.as_ref().expect("missing contribution")[my_subpos].clone())
-                    .collect()
-            });
-            for (v, &p) in got.into_iter().zip(subset.iter()) {
-                if p != pos {
-                    out[p] = v;
-                }
-            }
+        // phase 1a receipts (same-node rows)
+        let early_rows =
+            early.unwrap_or_else(|| Self::take_a2a_intra(&self.rez, gid, seq, plan, pos));
+        for (p2, v) in early_rows {
+            out[p2] = v;
         }
 
-        // phase 2 (inter): exchange cross-node payloads over the full group
-        {
-            let remote_send: Vec<Vec<f32>> =
-                (0..n).map(|p| std::mem::take(&mut send[p])).collect();
-            let key = (gid, seq, ptag(2, 0));
-            self.rez.deposit(key, CommKind::AllToAll, pos, n, remote_send,
-                &format!("all_to_all/inter g={gid:?} seq={seq}"));
-            let got: Vec<Vec<f32>> = self.rez.take(key, n, |slot| {
-                slot.contributions
-                    .iter()
-                    .map(|c| c.as_ref().expect("missing contribution")[pos].clone())
-                    .collect()
-            });
-            for (p, v) in got.into_iter().enumerate() {
-                if !same_node[p] {
-                    out[p] = v;
+        // canonical cross-node source order: nodes ascending (skipping
+        // ours), members in subset order within each node — both the
+        // leader's frame layout and the peers' parse follow this
+        let cross_sources: Vec<usize> = (0..m)
+            .filter(|&kk| kk != my_node)
+            .flat_map(|kk| plan.nodes[kk].1.iter().copied())
+            .collect();
+
+        let desc3 = format!("all_to_all/pxn-dist g={gid:?} seq={seq} node={my_node}");
+        let mut intra_bytes = own_same_bytes;
+        let mut inter_bytes = 0u64;
+        let (intra_msgs, inter_msgs);
+
+        if leader {
+            // phase 1b pickup: the node's cross-node send vectors, in
+            // subpos order
+            let node_sends: Vec<Payloads> = if k > 1 {
+                let key1b = (gid, seq, ptag(3, my_node));
+                let desc1b = format!("all_to_all/pxn-gather g={gid:?} seq={seq} node={my_node}");
+                self.rez.wait_full(key1b, k, &desc1b);
+                // sole reader: move the payloads out instead of cloning
+                // (the slot is freed right after this take)
+                self.rez.take(key1b, 1, |slot| {
+                    slot.contributions
+                        .iter_mut()
+                        .map(|c| c.take().expect("missing cross payload"))
+                        .collect()
+                })
+            } else {
+                vec![own_cross.expect("solo leader keeps its cross rows")]
+            };
+
+            // build one batched message per peer node
+            let mut batches: Payloads = vec![Vec::new(); m];
+            for (kk, batch) in batches.iter_mut().enumerate() {
+                if kk == my_node {
+                    continue;
+                }
+                for send_vec in node_sends.iter() {
+                    for &dest in plan.nodes[kk].1.iter() {
+                        let rows = &send_vec[dest];
+                        // frame lengths ride in f32 (like the dispatch
+                        // keys); beyond 2^24 the cast would round and
+                        // silently corrupt the frame cursor
+                        assert!(
+                            rows.len() < (1 << 24),
+                            "pxn frame of {} floats overflows f32 framing",
+                            rows.len()
+                        );
+                        batch.push(rows.len() as f32);
+                        batch.extend_from_slice(rows);
+                        inter_bytes += (rows.len() * 4) as u64;
+                    }
                 }
             }
+
+            // phase 2: leaders-only exchange of the batches
+            let key2 = (gid, seq, ptag(4, 0));
+            let desc2 = format!("all_to_all/pxn-inter g={gid:?} seq={seq}");
+            self.rez.deposit_nowait(key2, CommKind::AllToAll, my_node, m, batches, &desc2);
+            self.rez.wait_full(key2, m, &desc2);
+            let got: Payloads = self.rez.take(key2, m, |slot| {
+                (0..m)
+                    .map(|kk| {
+                        if kk == my_node {
+                            Vec::new()
+                        } else {
+                            slot.contributions[kk].as_ref().expect("missing leader batch")
+                                [my_node]
+                                .clone()
+                        }
+                    })
+                    .collect()
+            });
+
+            // parse incoming batches: keep rows addressed to us, frame the
+            // rest per node peer for phase 3
+            let mut per_member: Payloads = vec![Vec::new(); k];
+            for (kk, batch) in got.into_iter().enumerate() {
+                if kk == my_node {
+                    continue;
+                }
+                let mut cur = 0usize;
+                for &src in plan.nodes[kk].1.iter() {
+                    for (i, &dest) in subset.iter().enumerate() {
+                        let len = batch[cur] as usize;
+                        cur += 1;
+                        let data = &batch[cur..cur + len];
+                        cur += len;
+                        if dest == pos {
+                            out[src] = data.to_vec();
+                        } else {
+                            per_member[i].push(len as f32);
+                            per_member[i].extend_from_slice(data);
+                            intra_bytes += (len * 4) as u64;
+                        }
+                    }
+                }
+                assert_eq!(cur, batch.len(), "pxn batch framing mismatch");
+            }
+
+            // phase 3 (intra): redistribute to node peers; the leader's own
+            // entry stays empty (it already placed its rows)
+            if k > 1 {
+                per_member[my_subpos] = Vec::new();
+                let key3 = (gid, seq, ptag(5, my_node));
+                self.rez.deposit_nowait(key3, CommKind::AllToAll, 0, 1, per_member, &desc3);
+                self.rez.wait_full(key3, 1, &desc3);
+                let _own: Payload = self.rez.take(key3, k, |slot| {
+                    slot.contributions[0].as_ref().expect("leader dist missing")[my_subpos]
+                        .clone()
+                });
+            }
+            intra_msgs = 2 * (k as u64 - 1);
+            inter_msgs = m as u64 - 1;
+        } else {
+            // non-leader: the cross rows were forwarded to the leader over
+            // NVLink at issue; pick up our remote rows from phase 3
+            intra_bytes += own_cross_bytes;
+            let key3 = (gid, seq, ptag(5, my_node));
+            self.rez.wait_full(key3, 1, &desc3);
+            let frames: Payload = self.rez.take(key3, k, |slot| {
+                slot.contributions[0].as_ref().expect("leader dist missing")[my_subpos].clone()
+            });
+            let mut cur = 0usize;
+            for &src in cross_sources.iter() {
+                let len = frames[cur] as usize;
+                cur += 1;
+                out[src] = frames[cur..cur + len].to_vec();
+                cur += len;
+            }
+            assert_eq!(cur, frames.len(), "pxn redistribution framing mismatch");
+            intra_msgs = k as u64; // (k-1) same-node peers + 1 leader forward
+            inter_msgs = 0;
         }
 
         out[pos] = mine;
-        self.rez.stats.record_split(self.rank, CommKind::AllToAll, intra_bytes, inter_bytes);
+        self.rez.stats.record_split_msgs(
+            self.rank,
+            CommKind::AllToAll,
+            intra_bytes,
+            inter_bytes,
+            intra_msgs,
+            inter_msgs,
+        );
         out
     }
 }
@@ -638,6 +1301,7 @@ impl Communicator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collectives::transport::ALL_STRATEGIES;
     use crate::topology::{GroupId, GroupKind};
 
     fn gid(i: usize) -> GroupId {
@@ -813,51 +1477,55 @@ mod tests {
         assert_eq!(outs, vec![1.0, 1.0, 5.0, 5.0]);
     }
 
-    // ---- hierarchical transport ----
+    // ---- hierarchical + PXN transports ----
 
-    /// Hierarchical all-to-all delivers exactly what flat delivers, for
-    /// spanning groups, node-local groups, and uneven payloads.
+    /// Hierarchical and PXN all-to-all deliver exactly what flat delivers,
+    /// for spanning groups, node-local groups, and uneven payloads.
     #[test]
-    fn hierarchical_alltoall_matches_flat() {
-        for gpn in [1usize, 2, 3] {
-            let members: Vec<usize> = (0..6).collect();
-            let mk_send = |r: usize| -> Vec<Vec<f32>> {
-                (0..6)
-                    .map(|j| (0..(r + j) % 4).map(|k| (100 * r + 10 * j + k) as f32).collect())
-                    .collect()
-            };
-            let flat = run_ranks(6, |r, mut c| c.all_to_all(gid(2), &members, mk_send(r)));
-            let (hier, rez) = run_ranks_transport(
-                6,
-                CollectiveStrategy::Hierarchical,
-                gpn,
-                |r, mut c| c.all_to_all(gid(2), &members, mk_send(r)),
-            );
-            assert_eq!(flat, hier, "gpn={gpn}");
-            let t = rez.stats.total(CommKind::AllToAll);
-            assert_eq!(t.calls, 6);
-            assert_eq!(t.bytes, t.intra_bytes + t.inter_bytes);
+    fn hierarchical_and_pxn_alltoall_match_flat() {
+        for strategy in [CollectiveStrategy::Hierarchical, CollectiveStrategy::HierarchicalPxn] {
+            for gpn in [1usize, 2, 3] {
+                let members: Vec<usize> = (0..6).collect();
+                let mk_send = |r: usize| -> Vec<Vec<f32>> {
+                    (0..6)
+                        .map(|j| (0..(r + j) % 4).map(|k| (100 * r + 10 * j + k) as f32).collect())
+                        .collect()
+                };
+                let flat = run_ranks(6, |r, mut c| c.all_to_all(gid(2), &members, mk_send(r)));
+                let (hier, rez) = run_ranks_transport(
+                    6,
+                    strategy,
+                    gpn,
+                    |r, mut c| c.all_to_all(gid(2), &members, mk_send(r)),
+                );
+                assert_eq!(flat, hier, "strategy={strategy:?} gpn={gpn}");
+                let t = rez.stats.total(CommKind::AllToAll);
+                assert_eq!(t.calls, 6);
+                assert_eq!(t.bytes, t.intra_bytes + t.inter_bytes);
+            }
         }
     }
 
     #[test]
     fn hierarchical_allgather_matches_flat() {
-        for gpn in [1usize, 2, 4] {
-            let members: Vec<usize> = (0..4).collect();
-            let flat = run_ranks(4, |r, mut c| {
-                let t = Tensor::from_vec(&[r + 1], vec![r as f32; r + 1]);
-                c.all_gather(gid(3), &members, &t)
-            });
-            let (hier, _rez) = run_ranks_transport(
-                4,
-                CollectiveStrategy::Hierarchical,
-                gpn,
-                |r, mut c| {
+        for strategy in [CollectiveStrategy::Hierarchical, CollectiveStrategy::HierarchicalPxn] {
+            for gpn in [1usize, 2, 4] {
+                let members: Vec<usize> = (0..4).collect();
+                let flat = run_ranks(4, |r, mut c| {
                     let t = Tensor::from_vec(&[r + 1], vec![r as f32; r + 1]);
                     c.all_gather(gid(3), &members, &t)
-                },
-            );
-            assert_eq!(flat, hier, "gpn={gpn}");
+                });
+                let (hier, _rez) = run_ranks_transport(
+                    4,
+                    strategy,
+                    gpn,
+                    |r, mut c| {
+                        let t = Tensor::from_vec(&[r + 1], vec![r as f32; r + 1]);
+                        c.all_gather(gid(3), &members, &t)
+                    },
+                );
+                assert_eq!(flat, hier, "strategy={strategy:?} gpn={gpn}");
+            }
         }
     }
 
@@ -874,19 +1542,21 @@ mod tests {
             c.all_reduce(gid(9), &members, &mut t);
             t.into_vec()
         });
-        let (hier, _) = run_ranks_transport(
-            4,
-            CollectiveStrategy::Hierarchical,
-            2,
-            |r, mut c| {
-                let mut t = mk(r);
-                c.all_reduce(gid(9), &members, &mut t);
-                t.into_vec()
-            },
-        );
-        for (a, b) in flat.iter().zip(&hier) {
-            for (x, y) in a.iter().zip(b) {
-                assert_eq!(x.to_bits(), y.to_bits());
+        for strategy in [CollectiveStrategy::Hierarchical, CollectiveStrategy::HierarchicalPxn] {
+            let (hier, _) = run_ranks_transport(
+                4,
+                strategy,
+                2,
+                |r, mut c| {
+                    let mut t = mk(r);
+                    c.all_reduce(gid(9), &members, &mut t);
+                    t.into_vec()
+                },
+            );
+            for (a, b) in flat.iter().zip(&hier) {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
             }
         }
     }
@@ -934,6 +1604,47 @@ mod tests {
         assert_eq!(s.intra_bytes, 96);
     }
 
+    /// PXN lane + message accounting on a uniform workload: the leader
+    /// carries the node's aggregated inter traffic in (m-1) batched
+    /// messages; inter byte totals equal plain hierarchical; the leader
+    /// hops add intra volume.
+    #[test]
+    fn pxn_lanes_and_message_counts() {
+        let members: Vec<usize> = (0..4).collect();
+        let send = |_r: usize| vec![vec![1.0f32; 8]; 4];
+        let (_, hier) = run_ranks_transport(
+            4,
+            CollectiveStrategy::Hierarchical,
+            2,
+            |r, mut c| c.all_to_all(gid(1), &members, send(r)),
+        );
+        let (_, pxn) = run_ranks_transport(
+            4,
+            CollectiveStrategy::HierarchicalPxn,
+            2,
+            |r, mut c| c.all_to_all(gid(1), &members, send(r)),
+        );
+        let ht = hier.stats.total(CommKind::AllToAll);
+        let pt = pxn.stats.total(CommKind::AllToAll);
+        // inter bytes identical, inter messages strictly fewer
+        assert_eq!(pt.inter_bytes, ht.inter_bytes);
+        assert!(pt.inter_msgs < ht.inter_msgs, "{} vs {}", pt.inter_msgs, ht.inter_msgs);
+        // hier: 2 inter msgs per rank; pxn: 1 per leader (2 leaders)
+        assert_eq!(ht.inter_msgs, 8);
+        assert_eq!(pt.inter_msgs, 2);
+        // leader (rank 0): same-node 32B + redistribution of rank 1's
+        // inbound cross rows (2 rows x 32B = 64B) intra; node cross 128B inter
+        let l = pxn.stats.get(0, CommKind::AllToAll);
+        assert_eq!(l.intra_bytes, 32 + 64);
+        assert_eq!(l.inter_bytes, 128);
+        assert_eq!((l.intra_msgs, l.inter_msgs), (2, 1));
+        // non-leader (rank 1): same-node 32B + forwarded cross 64B, no inter
+        let nl = pxn.stats.get(1, CommKind::AllToAll);
+        assert_eq!(nl.intra_bytes, 32 + 64);
+        assert_eq!(nl.inter_bytes, 0);
+        assert_eq!((nl.intra_msgs, nl.inter_msgs), (2, 0));
+    }
+
     /// All-gather lanes: per-node blocks cross the wire once (leaders),
     /// member contributions and redistribution stay intra.
     #[test]
@@ -968,15 +1679,133 @@ mod tests {
             let send: Vec<Vec<f32>> = (0..3).map(|j| vec![(10 * r + j) as f32]).collect();
             c.all_to_all(gid(2), &members, send)
         });
-        let (hier, _) = run_ranks_transport(
-            3,
-            CollectiveStrategy::Hierarchical,
-            2,
-            |r, mut c| {
-                let send: Vec<Vec<f32>> = (0..3).map(|j| vec![(10 * r + j) as f32]).collect();
-                c.all_to_all(gid(2), &members, send)
-            },
+        for strategy in [CollectiveStrategy::Hierarchical, CollectiveStrategy::HierarchicalPxn] {
+            let (hier, _) = run_ranks_transport(
+                3,
+                strategy,
+                2,
+                |r, mut c| {
+                    let send: Vec<Vec<f32>> = (0..3).map(|j| vec![(10 * r + j) as f32]).collect();
+                    c.all_to_all(gid(2), &members, send)
+                },
+            );
+            assert_eq!(flat, hier, "strategy={strategy:?}");
+        }
+    }
+
+    // ---- nonblocking issue/wait ----
+
+    /// Two collectives issued before either is waited deliver the same
+    /// results as the blocking schedule, on every backend.
+    #[test]
+    fn issue_wait_pair_matches_blocking() {
+        let members: Vec<usize> = (0..4).collect();
+        let blocking = run_ranks(4, |r, mut c| {
+            let mut a = Tensor::from_vec(&[2], vec![r as f32, 1.0]);
+            c.all_reduce(gid(20), &members, &mut a);
+            let mut b = Tensor::from_vec(&[2], vec![10.0 * r as f32, -1.0]);
+            c.all_reduce(gid(21), &members, &mut b);
+            (a.into_vec(), b.into_vec())
+        });
+        for strategy in ALL_STRATEGIES {
+            let (nb, _) = run_ranks_transport(4, strategy, 2, |r, mut c| {
+                let mut a = Tensor::from_vec(&[2], vec![r as f32, 1.0]);
+                let mut b = Tensor::from_vec(&[2], vec![10.0 * r as f32, -1.0]);
+                let pa = c.issue_all_reduce(gid(20), &members, &a);
+                let pb = c.issue_all_reduce(gid(21), &members, &b);
+                c.wait_all_reduce(pa, &mut a);
+                c.wait_all_reduce(pb, &mut b);
+                (a.into_vec(), b.into_vec())
+            });
+            assert_eq!(blocking, nb, "strategy={strategy:?}");
+        }
+    }
+
+    /// The early-intra pickup delivers exactly the same-node rows, and the
+    /// final wait still returns the complete member-order result.
+    #[test]
+    fn alltoall_intra_early_pickup() {
+        let members: Vec<usize> = (0..4).collect();
+        let mk_send = |r: usize| -> Vec<Vec<f32>> {
+            (0..4).map(|j| vec![(10 * r + j) as f32]).collect()
+        };
+        let flat = run_ranks(4, |r, mut c| c.all_to_all(gid(2), &members, mk_send(r)));
+        for strategy in [CollectiveStrategy::Hierarchical, CollectiveStrategy::HierarchicalPxn] {
+            let (outs, _) = run_ranks_transport(4, strategy, 2, |r, mut c| {
+                let mut p = c.issue_all_to_all(gid(2), &members, mk_send(r));
+                assert!(p.has_phases());
+                let early: Vec<(usize, Vec<f32>)> =
+                    c.wait_all_to_all_intra(&mut p).to_vec();
+                // 2-GPU nodes: exactly one same-node peer delivered early
+                assert_eq!(early.len(), 1, "strategy={strategy:?}");
+                let (peer, rows) = &early[0];
+                assert_eq!(rows.as_slice(), &[(10 * *peer + r) as f32]);
+                c.wait_all_to_all(p)
+            });
+            assert_eq!(flat, outs, "strategy={strategy:?}");
+        }
+    }
+
+    /// Nonblocking all-gathers issued back-to-back match blocking results.
+    #[test]
+    fn issue_wait_allgather_matches_blocking() {
+        let members: Vec<usize> = (0..4).collect();
+        let blocking = run_ranks(4, |r, mut c| {
+            let t1 = Tensor::from_vec(&[1], vec![r as f32]);
+            let t2 = Tensor::from_vec(&[2], vec![r as f32; 2]);
+            (c.all_gather(gid(30), &members, &t1), c.all_gather(gid(31), &members, &t2))
+        });
+        for strategy in ALL_STRATEGIES {
+            let (nb, _) = run_ranks_transport(4, strategy, 2, |r, mut c| {
+                let t1 = Tensor::from_vec(&[1], vec![r as f32]);
+                let t2 = Tensor::from_vec(&[2], vec![r as f32; 2]);
+                let p1 = c.issue_all_gather(gid(30), &members, &t1);
+                let p2 = c.issue_all_gather(gid(31), &members, &t2);
+                (c.wait_all_gather(p1), c.wait_all_gather(p2))
+            });
+            assert_eq!(blocking, nb, "strategy={strategy:?}");
+        }
+    }
+
+    /// With a cost model attached, overlapped ops shrink the critical path
+    /// below the serialized sum; blocking ops keep them exactly equal.
+    #[test]
+    fn timeline_overlap_vs_blocking() {
+        use crate::config::ClusterConfig;
+        let members: Vec<usize> = (0..4).collect();
+        let run = |overlap: bool| -> crate::collectives::accounting::RankTimeline {
+            let (tl, _) = run_ranks_transport(
+                4,
+                CollectiveStrategy::Hierarchical,
+                2,
+                |r, mut c| {
+                    c.set_cost_model(ClusterConfig::summit());
+                    let mut a = Tensor::from_vec(&[4096], vec![r as f32; 4096]);
+                    let mut b = Tensor::from_vec(&[4096], vec![-(r as f32); 4096]);
+                    if overlap {
+                        let pa = c.issue_all_reduce(gid(40), &members, &a);
+                        let pb = c.issue_all_reduce(gid(41), &members, &b);
+                        c.wait_all_reduce(pa, &mut a);
+                        c.wait_all_reduce(pb, &mut b);
+                    } else {
+                        c.all_reduce(gid(40), &members, &mut a);
+                        c.all_reduce(gid(41), &members, &mut b);
+                    }
+                    c.timeline()
+                },
+            );
+            tl[0]
+        };
+        let blocking = run(false);
+        assert!(blocking.serialized_s > 0.0);
+        assert!((blocking.clock_s - blocking.serialized_s).abs() < 1e-15);
+        let overlapped = run(true);
+        assert!((overlapped.serialized_s - blocking.serialized_s).abs() < 1e-15);
+        assert!(
+            overlapped.clock_s < overlapped.serialized_s,
+            "{} vs {}",
+            overlapped.clock_s,
+            overlapped.serialized_s
         );
-        assert_eq!(flat, hier);
     }
 }

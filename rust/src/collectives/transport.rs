@@ -1,7 +1,7 @@
 //! Pluggable collective transport: the strategy selector, node-boundary
-//! map, and the per-group node plan the hierarchical backend runs on.
+//! map, and the per-group node plan the hierarchical backends run on.
 //!
-//! Two backends implement every collective (see `rendezvous.rs` for the
+//! Three backends implement every collective (see `rendezvous.rs` for the
 //! op bodies):
 //!
 //! * [`CollectiveStrategy::Flat`] — the original single-exchange
@@ -11,7 +11,7 @@
 //!   model uses when a group is not provably intra-node.
 //! * [`CollectiveStrategy::Hierarchical`] — decomposes **all-to-all**
 //!   and **all-gather** into an intra-node phase followed by an
-//!   inter-node phase (MoNTA / PXN style), using node boundaries from
+//!   inter-node phase (MoNTA style), using node boundaries from
 //!   `ClusterConfig::gpus_per_node`. Only bytes that genuinely cross a
 //!   node boundary are charged to the inter-node lane. Reducing ops
 //!   (all-reduce, reduce-scatter) keep the canonical member-order
@@ -19,10 +19,20 @@
 //!   across backends** — while their volume is attributed
 //!   hierarchically (intra-node combine + one node-partial per leader
 //!   over the wire).
+//! * [`CollectiveStrategy::HierarchicalPxn`] — hierarchical with
+//!   **leader-aggregated (PXN-style) all-to-all**: every member first
+//!   forwards its cross-node rows to its node leader over NVLink, each
+//!   leader sends **one batched message per peer node** over the wire,
+//!   and the receiving leader redistributes to its node peers. Fewer,
+//!   larger inter-node messages — the α-term drops from one message per
+//!   cross-node *peer* to one per cross-node *node* — at the cost of two
+//!   extra intra-node hops for the cross-node rows. All-gather is
+//!   already leader-aggregated under `Hierarchical`, and reducing ops
+//!   are unchanged, so PXN differs only in the all-to-all schedule.
 //!
 //! The invariant locked down by `rust/tests/parity_matrix.rs`: switching
 //! the backend never changes a single bit of the training result, only
-//! where the bytes (and therefore the modeled time) go.
+//! where the bytes/messages (and therefore the modeled time) go.
 
 /// Which transport implements the collectives of a [`super::Communicator`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
@@ -32,13 +42,24 @@ pub enum CollectiveStrategy {
     Flat,
     /// Intra-node phase, then inter-node phase (topology-aware).
     Hierarchical,
+    /// Hierarchical with leader-aggregated (PXN-style) all-to-all: node
+    /// leaders batch all cross-node rows into one message per peer node.
+    HierarchicalPxn,
 }
+
+/// Every strategy, in CLI-listing order (benches sweep this).
+pub const ALL_STRATEGIES: [CollectiveStrategy; 3] = [
+    CollectiveStrategy::Flat,
+    CollectiveStrategy::Hierarchical,
+    CollectiveStrategy::HierarchicalPxn,
+];
 
 impl CollectiveStrategy {
     pub fn name(self) -> &'static str {
         match self {
             CollectiveStrategy::Flat => "flat",
             CollectiveStrategy::Hierarchical => "hierarchical",
+            CollectiveStrategy::HierarchicalPxn => "hierarchical-pxn",
         }
     }
 
@@ -47,8 +68,14 @@ impl CollectiveStrategy {
         match s {
             "flat" => Some(CollectiveStrategy::Flat),
             "hier" | "hierarchical" => Some(CollectiveStrategy::Hierarchical),
+            "pxn" | "hier-pxn" | "hierarchical-pxn" => Some(CollectiveStrategy::HierarchicalPxn),
             _ => None,
         }
+    }
+
+    /// Does this strategy split collectives into intra/inter-node phases?
+    pub fn is_hierarchical(self) -> bool {
+        !matches!(self, CollectiveStrategy::Flat)
     }
 }
 
@@ -128,6 +155,11 @@ impl NodePlan {
         self.nodes.len()
     }
 
+    /// Leader position (first member position) of every node, in node order.
+    pub fn leader_positions(&self) -> Vec<usize> {
+        self.nodes.iter().map(|(_, s)| s[0]).collect()
+    }
+
     /// Positions of the caller's node subset.
     pub fn my_subset(&self) -> &[usize] {
         &self.nodes[self.my_node].1
@@ -151,8 +183,19 @@ mod tests {
             CollectiveStrategy::parse("hierarchical"),
             Some(CollectiveStrategy::Hierarchical)
         );
+        assert_eq!(
+            CollectiveStrategy::parse("hierarchical-pxn"),
+            Some(CollectiveStrategy::HierarchicalPxn)
+        );
+        assert_eq!(CollectiveStrategy::parse("pxn"), Some(CollectiveStrategy::HierarchicalPxn));
         assert_eq!(CollectiveStrategy::parse("nope"), None);
         assert_eq!(CollectiveStrategy::default().name(), "flat");
+        assert!(!CollectiveStrategy::Flat.is_hierarchical());
+        assert!(CollectiveStrategy::Hierarchical.is_hierarchical());
+        assert!(CollectiveStrategy::HierarchicalPxn.is_hierarchical());
+        for s in ALL_STRATEGIES {
+            assert_eq!(CollectiveStrategy::parse(s.name()), Some(s));
+        }
     }
 
     #[test]

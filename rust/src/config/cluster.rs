@@ -111,6 +111,44 @@ impl ClusterConfig {
     }
 }
 
+/// A `Copy` handle on the built-in cluster presets, so engine options can
+/// carry the selected cluster (and thus price the overlap timeline)
+/// without giving up `Copy`. Selecting a preset on the CLI also threads
+/// its `gpus_per_node` into the transport layer automatically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterPreset {
+    Summit,
+    ThetaGpu,
+    Perlmutter,
+}
+
+impl ClusterPreset {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "summit" => Some(ClusterPreset::Summit),
+            "thetagpu" => Some(ClusterPreset::ThetaGpu),
+            "perlmutter" => Some(ClusterPreset::Perlmutter),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ClusterPreset::Summit => "summit",
+            ClusterPreset::ThetaGpu => "thetagpu",
+            ClusterPreset::Perlmutter => "perlmutter",
+        }
+    }
+
+    pub fn config(self) -> ClusterConfig {
+        match self {
+            ClusterPreset::Summit => ClusterConfig::summit(),
+            ClusterPreset::ThetaGpu => ClusterConfig::thetagpu(),
+            ClusterPreset::Perlmutter => ClusterConfig::perlmutter(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,5 +177,15 @@ mod tests {
     fn lookup() {
         assert!(ClusterConfig::by_name("summit").is_some());
         assert!(ClusterConfig::by_name("frontier").is_none());
+    }
+
+    #[test]
+    fn presets_round_trip() {
+        for p in [ClusterPreset::Summit, ClusterPreset::ThetaGpu, ClusterPreset::Perlmutter] {
+            assert_eq!(ClusterPreset::parse(p.name()), Some(p));
+            assert_eq!(p.config().name, p.name());
+        }
+        assert_eq!(ClusterPreset::parse("frontier"), None);
+        assert_eq!(ClusterPreset::Summit.config().gpus_per_node, 6);
     }
 }

@@ -9,6 +9,7 @@
 use anyhow::{bail, Result};
 
 use crate::collectives::CollectiveStrategy;
+use crate::config::cluster::ClusterPreset;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ParallelConfig {
@@ -98,14 +99,25 @@ pub struct EngineOptions {
     /// Run the optimizer tile update through the AOT Pallas executable
     /// instead of the native rust path (identical math; see optimizer/).
     pub optimizer_use_pjrt: bool,
-    /// Collective transport backend (flat single-exchange vs hierarchical
-    /// intra-node-then-inter-node). Training results are bitwise identical
-    /// across backends; only byte-lane attribution and modeled cost change.
+    /// Collective transport backend (flat single-exchange, hierarchical
+    /// intra-node-then-inter-node, or hierarchical with PXN-style
+    /// leader-aggregated all-to-all). Training results are bitwise
+    /// identical across backends; only lane/message attribution and
+    /// modeled cost change.
     pub strategy: CollectiveStrategy,
     /// Node boundary for the transport layer: rank r lives on node
     /// `r / gpus_per_node`. 0 means one big node (no inter-node fabric);
-    /// real clusters take it from `ClusterConfig::gpus_per_node`.
+    /// real clusters take it from `ClusterConfig::gpus_per_node` (threaded
+    /// automatically when a `cluster` preset is selected on the CLI).
     pub gpus_per_node: usize,
+    /// Nonblocking collectives: issue/wait scheduling with phase overlap
+    /// (independent gradient reductions in flight together, the DTD
+    /// all-gather pipelined against the expert all-to-all). Results are
+    /// bitwise identical with or without; `--no-overlap` turns it off.
+    pub overlap: bool,
+    /// Cluster preset pricing the overlap timeline (`TrainLog` reports
+    /// serialized vs critical-path comm seconds when set).
+    pub cluster: Option<ClusterPreset>,
 }
 
 impl Default for EngineOptions {
@@ -121,6 +133,8 @@ impl Default for EngineOptions {
             optimizer_use_pjrt: false,
             strategy: CollectiveStrategy::Flat,
             gpus_per_node: 0,
+            overlap: true,
+            cluster: None,
         }
     }
 }
@@ -146,6 +160,39 @@ impl EngineOptions {
         self.strategy = strategy;
         self.gpus_per_node = gpus_per_node;
         self
+    }
+
+    /// Select a cluster preset: prices the overlap timeline and threads
+    /// the preset's `gpus_per_node` into the transport layer (unless a
+    /// node size was already chosen explicitly).
+    pub fn with_cluster(mut self, preset: ClusterPreset) -> Self {
+        self.cluster = Some(preset);
+        if self.gpus_per_node == 0 {
+            self.gpus_per_node = preset.config().gpus_per_node;
+        }
+        self
+    }
+
+    /// Validate the transport/topology combination before any rank spawns:
+    /// a node size that does not divide the world would silently produce a
+    /// ragged trailing node in topology partitioning — error early instead.
+    pub fn validate_topology(&self, world: usize) -> Result<()> {
+        if self.gpus_per_node > 0 && world % self.gpus_per_node != 0 {
+            bail!(
+                "gpus_per_node={} does not divide world={} (the trailing node \
+                 would be ragged; pick a node size that divides the rank count)",
+                self.gpus_per_node,
+                world
+            );
+        }
+        if self.strategy.is_hierarchical() && self.gpus_per_node == 0 {
+            bail!(
+                "transport '{}' needs a node boundary: pass --gpus-per-node or \
+                 select a --cluster preset",
+                self.strategy.name()
+            );
+        }
+        Ok(())
     }
 }
 
@@ -199,6 +246,33 @@ mod tests {
         let b = EngineOptions::baseline().with_transport(CollectiveStrategy::Hierarchical, 4);
         assert!(!b.dtd && !b.cac);
         assert_eq!(b.gpus_per_node, 4);
+    }
+
+    #[test]
+    fn cluster_preset_threads_gpus_per_node() {
+        use crate::config::cluster::ClusterPreset;
+        let o = EngineOptions::default().with_cluster(ClusterPreset::Summit);
+        assert_eq!(o.gpus_per_node, 6);
+        assert_eq!(o.cluster, Some(ClusterPreset::Summit));
+        // an explicit node size wins over the preset's
+        let e = EngineOptions::hierarchical(2).with_cluster(ClusterPreset::Summit);
+        assert_eq!(e.gpus_per_node, 2);
+        // overlap defaults on
+        assert!(EngineOptions::default().overlap);
+    }
+
+    #[test]
+    fn topology_validation_errors_early() {
+        // node size must divide the world
+        let o = EngineOptions::hierarchical(6);
+        assert!(o.validate_topology(12).is_ok());
+        assert!(o.validate_topology(8).is_err());
+        // hierarchical transports need a node boundary
+        let h = EngineOptions::default()
+            .with_transport(CollectiveStrategy::HierarchicalPxn, 0);
+        assert!(h.validate_topology(8).is_err());
+        // flat on one big node is always fine
+        assert!(EngineOptions::default().validate_topology(8).is_ok());
     }
 
     #[test]

@@ -7,6 +7,14 @@
 //! data-parallel groups (non-expert over `G_dp^nonexp`, expert over
 //! `G_dp^exp`), and the ZeRO-1 tiled AdamW step followed by the parameter
 //! all-gather.
+//!
+//! With `EngineOptions::overlap` on, the independent comm pairs run on
+//! the nonblocking issue/wait schedule: the expert gradient all-reduce is
+//! issued first and the non-expert one rides alongside it (their groups
+//! are disjoint fabrics under the hierarchical transports), and the two
+//! ZeRO-1 parameter all-gathers are likewise in flight together. Results
+//! are bitwise identical to the blocking schedule — the parity matrix
+//! enforces it — only the modeled overlap timeline changes.
 
 use anyhow::{bail, Result};
 use std::sync::Arc;
@@ -98,7 +106,12 @@ impl Trainer {
             bail!("{} experts not divisible by ep={}", manifest.dims.n_experts, cfg.ep);
         }
         let groups = topo.groups(rank);
-        let comm = Communicator::with_transport(rez, rank, opts.strategy, opts.gpus_per_node);
+        let mut comm = Communicator::with_transport(rez, rank, opts.strategy, opts.gpus_per_node);
+        if let Some(preset) = opts.cluster {
+            // price every collective with the preset's α-β model so the
+            // TrainLog can report the measured overlap timeline
+            comm.set_cost_model(preset.config());
+        }
         let mut rt = Runtime::new()?;
         rt.load_all(&manifest, "")?;
 
@@ -208,6 +221,7 @@ impl Trainer {
                 tp_members: &self.groups.tp_group,
                 tp_pos: self.tp_pos,
                 dtd: self.opts.dtd,
+                overlap: self.opts.overlap,
             };
             dispatch(&mut ctx, &xn, &dec, local, cap)
         };
@@ -227,6 +241,7 @@ impl Trainer {
                 tp_members: &self.groups.tp_group,
                 tp_pos: self.tp_pos,
                 dtd: self.opts.dtd,
+                overlap: self.opts.overlap,
             };
             return_to_origin(&mut ctx, &expert_out, &disp, &dec, local, cap)
         };
@@ -284,6 +299,7 @@ impl Trainer {
                         tp_members: &self.groups.tp_group,
                         tp_pos: self.tp_pos,
                         dtd: self.opts.dtd,
+                        overlap: self.opts.overlap,
                     };
                     dispatch(&mut ctx, &drows, &dec, local, cap)
                 };
@@ -313,6 +329,7 @@ impl Trainer {
                         tp_members: &self.groups.tp_group,
                         tp_pos: self.tp_pos,
                         dtd: self.opts.dtd,
+                        overlap: self.opts.overlap,
                     };
                     return_to_origin(&mut ctx, &dxe_full, &disp_b, &dec, local, cap)
                 };
@@ -436,19 +453,48 @@ impl Trainer {
         let mut flat_e = self.store.expert_group.flatten(&self.store.grads);
         let dp_ne = self.groups.dp_nonexp_group.len() as f32;
         let dp_e = self.groups.dp_exp_group.len() as f32;
-        {
-            let mut t = Tensor::from_vec(&[flat_ne.len()], std::mem::take(&mut flat_ne));
-            self.comm
-                .all_reduce(self.groups.dp_nonexp_group_id, &self.groups.dp_nonexp_group, &mut t);
-            t.scale(1.0 / (n_micro * dp_ne));
-            flat_ne = t.into_vec();
-        }
-        if !flat_e.is_empty() {
-            let mut t = Tensor::from_vec(&[flat_e.len()], std::mem::take(&mut flat_e));
-            self.comm
-                .all_reduce(self.groups.dp_exp_group_id, &self.groups.dp_exp_group, &mut t);
-            t.scale(1.0 / (n_micro * dp_e));
-            flat_e = t.into_vec();
+        let has_e = !flat_e.is_empty();
+        if self.opts.overlap && has_e {
+            // nonblocking schedule: issue the expert gradient reduction,
+            // then put the non-expert one in flight alongside it — the two
+            // DP groups are independent, so their intra/inter phases
+            // pipeline across fabrics (bitwise-identical results)
+            let mut te = Tensor::from_vec(&[flat_e.len()], std::mem::take(&mut flat_e));
+            let mut tne = Tensor::from_vec(&[flat_ne.len()], std::mem::take(&mut flat_ne));
+            let pe = self.comm.issue_all_reduce(
+                self.groups.dp_exp_group_id,
+                &self.groups.dp_exp_group,
+                &te,
+            );
+            let pne = self.comm.issue_all_reduce(
+                self.groups.dp_nonexp_group_id,
+                &self.groups.dp_nonexp_group,
+                &tne,
+            );
+            self.comm.wait_all_reduce(pe, &mut te);
+            self.comm.wait_all_reduce(pne, &mut tne);
+            te.scale(1.0 / (n_micro * dp_e));
+            tne.scale(1.0 / (n_micro * dp_ne));
+            flat_e = te.into_vec();
+            flat_ne = tne.into_vec();
+        } else {
+            {
+                let mut t = Tensor::from_vec(&[flat_ne.len()], std::mem::take(&mut flat_ne));
+                self.comm.all_reduce(
+                    self.groups.dp_nonexp_group_id,
+                    &self.groups.dp_nonexp_group,
+                    &mut t,
+                );
+                t.scale(1.0 / (n_micro * dp_ne));
+                flat_ne = t.into_vec();
+            }
+            if has_e {
+                let mut t = Tensor::from_vec(&[flat_e.len()], std::mem::take(&mut flat_e));
+                self.comm
+                    .all_reduce(self.groups.dp_exp_group_id, &self.groups.dp_exp_group, &mut t);
+                t.scale(1.0 / (n_micro * dp_e));
+                flat_e = t.into_vec();
+            }
         }
 
         // global gradient norm with TP/EP de-duplication
@@ -538,41 +584,66 @@ impl Trainer {
         let tile = self.manifest.tile_size;
         let use_pjrt = self.opts.optimizer_use_pjrt;
 
-        // non-expert group: step shard, all-gather params over dp_nonexp
-        let shard: Vec<f32> = if use_pjrt {
+        // step both ZeRO shards first (pure local compute), so the two
+        // parameter all-gathers can be in flight together under overlap
+        let shard_ne: Vec<f32> = if use_pjrt {
             self.opt_nonexp
                 .step_pjrt(&mut self.rt, "adamw_tile", tile, flat_ne, h)?
                 .to_vec()
         } else {
             self.opt_nonexp.step_native(flat_ne, h).to_vec()
         };
-        let gathered = self.comm.all_gather(
-            self.groups.dp_nonexp_group_id,
-            &self.groups.dp_nonexp_group,
-            &Tensor::from_vec(&[shard.len()], shard),
-        );
+        let shard_e: Option<Vec<f32>> = if flat_e.is_empty() {
+            None
+        } else if use_pjrt {
+            Some(self.opt_exp.step_pjrt(&mut self.rt, "adamw_tile", tile, flat_e, h)?.to_vec())
+        } else {
+            Some(self.opt_exp.step_native(flat_e, h).to_vec())
+        };
+
+        let (gathered_ne, gathered_e): (Vec<Vec<f32>>, Option<Vec<Vec<f32>>>) =
+            match (self.opts.overlap, shard_e) {
+                (true, Some(se)) => {
+                    let tne = Tensor::from_vec(&[shard_ne.len()], shard_ne);
+                    let te = Tensor::from_vec(&[se.len()], se);
+                    let pne = self.comm.issue_all_gather(
+                        self.groups.dp_nonexp_group_id,
+                        &self.groups.dp_nonexp_group,
+                        &tne,
+                    );
+                    let pe = self.comm.issue_all_gather(
+                        self.groups.dp_exp_group_id,
+                        &self.groups.dp_exp_group,
+                        &te,
+                    );
+                    (self.comm.wait_all_gather(pne), Some(self.comm.wait_all_gather(pe)))
+                }
+                (_, se) => {
+                    let g_ne = self.comm.all_gather(
+                        self.groups.dp_nonexp_group_id,
+                        &self.groups.dp_nonexp_group,
+                        &Tensor::from_vec(&[shard_ne.len()], shard_ne),
+                    );
+                    let g_e = se.map(|se| {
+                        self.comm.all_gather(
+                            self.groups.dp_exp_group_id,
+                            &self.groups.dp_exp_group,
+                            &Tensor::from_vec(&[se.len()], se),
+                        )
+                    });
+                    (g_ne, g_e)
+                }
+            };
+
         let mut full = Vec::with_capacity(self.store.nonexpert_group.total());
-        for part in gathered {
+        for part in gathered_ne {
             full.extend_from_slice(&part);
         }
         self.store
             .nonexpert_group
             .unflatten_into(&full, &mut self.store.params);
 
-        // expert group over dp_exp
-        if !flat_e.is_empty() {
-            let shard: Vec<f32> = if use_pjrt {
-                self.opt_exp
-                    .step_pjrt(&mut self.rt, "adamw_tile", tile, flat_e, h)?
-                    .to_vec()
-            } else {
-                self.opt_exp.step_native(flat_e, h).to_vec()
-            };
-            let gathered = self.comm.all_gather(
-                self.groups.dp_exp_group_id,
-                &self.groups.dp_exp_group,
-                &Tensor::from_vec(&[shard.len()], shard),
-            );
+        if let Some(gathered) = gathered_e {
             let mut full = Vec::with_capacity(self.store.expert_group.total());
             for part in gathered {
                 full.extend_from_slice(&part);

@@ -14,9 +14,10 @@
 //! ## Collective transport backends
 //!
 //! The collectives (`collectives::Communicator`) are implemented by one of
-//! two transports, selected via [`config::EngineOptions`] (`strategy` +
+//! three transports, selected via [`config::EngineOptions`] (`strategy` +
 //! `gpus_per_node`), `Communicator::with_transport`, or the CLI
-//! (`ted train --transport flat|hierarchical --gpus-per-node N`):
+//! (`ted train --transport flat|hierarchical|hierarchical-pxn
+//! --gpus-per-node N` / `--cluster <preset>`):
 //!
 //! * **flat** — one exchange per collective, topology-oblivious; its byte
 //!   accounting lands in the inter-node (bottleneck) lane whenever the job
@@ -24,11 +25,37 @@
 //! * **hierarchical** — decomposes all-to-all and all-gather into an
 //!   intra-node phase followed by an inter-node phase using the node
 //!   boundaries of the cluster (`gpus_per_node`), and attributes every
-//!   byte to the fabric it actually crosses. Reductions stay in canonical
-//!   member order, so **training results are bitwise identical across
-//!   backends** — the topology-parity matrix in `rust/tests/parity_matrix.rs`
-//!   enforces this, and `perfmodel::collective_cost` prices the two phases
-//!   separately (`*_phased`, `lane_bytes_*`).
+//!   byte to the fabric it actually crosses.
+//! * **hierarchical-pxn** — hierarchical with a leader-aggregated
+//!   (PXN-style) all-to-all: node leaders batch every cross-node row into
+//!   one message per peer node, cutting the inter-node message count (the
+//!   α-term, counted per lane by `collectives::accounting`) at unchanged
+//!   inter-node bytes.
+//!
+//! Reductions stay in canonical member order, so **training results are
+//! bitwise identical across backends** — the topology-parity matrix in
+//! `rust/tests/parity_matrix.rs` enforces this over every backend and
+//! schedule, and `perfmodel::collective_cost` prices the phases
+//! separately (`*_phased`, `lane_bytes_*`, `lane_msgs_alltoall`).
+//!
+//! ## Nonblocking collectives and overlap
+//!
+//! Every collective also has an **issue/wait form**
+//! (`Communicator::issue_* -> Pending*`, `wait_*`): issue deposits what is
+//! locally available and returns immediately, so independent ops can be
+//! in flight together. The engine uses it (`EngineOptions::overlap`, on
+//! by default; CLI `--no-overlap`) to reduce the expert and non-expert
+//! gradients concurrently, to overlap the two ZeRO-1 parameter
+//! all-gathers, and — via `wait_all_to_all_intra`, which hands out a
+//! hierarchical all-to-all's same-node rows while its inter-node phase is
+//! still in flight — to pipeline the DTD all-gather against the expert
+//! all-to-all (MoNTA-style comm/comm overlap). With a cluster preset
+//! selected, each op is priced by the α-β model and scheduled on a
+//! per-rank two-lane virtual timeline; `sim::TrainLog::overlap_timeline`
+//! reports serialized vs critical-path comm seconds per step, and
+//! `perfmodel::batch_time_overlapped` is the analytic counterpart with an
+//! `overlap_efficiency` knob (validated against the measured timeline in
+//! `rust/tests/integration_accounting.rs`).
 //! * **L2 (python/compile/model.py)** — per-rank JAX block programs, AOT
 //!   lowered to HLO text at build time.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (fused expert FFN,

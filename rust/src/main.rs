@@ -26,10 +26,16 @@ USAGE:
   ted train  --config NAME [--world N --tp N --ep N] [--steps N] [--micro N]
              [--data synthetic|corpus] [--lr X] [--no-dtd] [--no-cac]
              [--no-tiling] [--batch N] [--verbose]
-             [--transport flat|hierarchical] [--gpus-per-node N]
+             [--transport flat|hierarchical|hierarchical-pxn]
+             [--gpus-per-node N] [--cluster summit|thetagpu|perlmutter]
+             [--no-overlap]
   ted info   --model {1.3B|2.7B|6.7B|13.0B} --experts E --gpus G --tp T
              [--cluster summit|thetagpu|perlmutter]
   ted figures [--only ID]    (alias of `cargo run --example paper_figures`)
+
+Selecting --cluster threads the preset's gpus-per-node into the transport
+layer and prices an overlap timeline (serialized vs critical-path comm
+seconds); --no-overlap falls back to blocking collectives.
 
 `make artifacts` must have produced artifacts/<config>_tp<T>_b<B>/ first.";
 
@@ -46,7 +52,7 @@ fn run() -> Result<()> {
         println!("{USAGE}");
         return Ok(());
     };
-    let flags = ["no-dtd", "no-cac", "no-tiling", "verbose", "help"];
+    let flags = ["no-dtd", "no-cac", "no-tiling", "no-overlap", "verbose", "help"];
     let args = Args::parse(all.into_iter().skip(1), &flags)?;
     if args.flag("help") {
         println!("{USAGE}");
@@ -67,7 +73,8 @@ fn run() -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "config", "world", "tp", "ep", "steps", "micro", "lr", "seed", "data", "batch",
-        "no-dtd", "no-cac", "no-tiling", "verbose", "transport", "gpus-per-node",
+        "no-dtd", "no-cac", "no-tiling", "no-overlap", "verbose", "transport",
+        "gpus-per-node", "cluster",
     ])?;
     let config = args.get_or("config", "tiny").to_string();
     let tp = args.get_usize("tp", 2)?;
@@ -83,17 +90,32 @@ fn cmd_train(args: &Args) -> Result<()> {
     let topo = Topology::new(ParallelConfig::derive(world, tp, ep)?)?;
     let strategy = match args.get("transport") {
         None => ted::config::CollectiveStrategy::Flat,
-        Some(s) => ted::config::CollectiveStrategy::parse(s)
-            .ok_or_else(|| anyhow!("unknown --transport '{s}' (flat|hierarchical)"))?,
+        Some(s) => ted::config::CollectiveStrategy::parse(s).ok_or_else(|| {
+            anyhow!("unknown --transport '{s}' (flat|hierarchical|hierarchical-pxn)")
+        })?,
     };
-    let opts = EngineOptions {
+    // a --cluster preset prices the overlap timeline and supplies the node
+    // size when --gpus-per-node was not given explicitly (ROADMAP follow-up)
+    let preset = match args.get("cluster") {
+        None => None,
+        Some(c) => Some(
+            ted::config::ClusterPreset::parse(c)
+                .ok_or_else(|| anyhow!("unknown --cluster '{c}' (summit|thetagpu|perlmutter)"))?,
+        ),
+    };
+    let mut opts = EngineOptions {
         dtd: !args.flag("no-dtd"),
         cac: !args.flag("no-cac"),
         optimizer_tiling: !args.flag("no-tiling"),
+        overlap: !args.flag("no-overlap"),
         strategy,
         gpus_per_node: args.get_usize("gpus-per-node", 0)?,
         ..Default::default()
     };
+    if let Some(p) = preset {
+        opts = opts.with_cluster(p);
+    }
+    opts.validate_topology(world)?;
     let tcfg = TrainingConfig {
         lr: args.get_f64("lr", 1e-3)? as f32,
         seed: args.get_u64("seed", 1234)?,
@@ -115,9 +137,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
 
     println!(
-        "ted train: {config} on world={world} (tensor={tp} expert={ep} dp_exp={} dp_nonexp={}) dtd={} cac={} tiling={} transport={}",
+        "ted train: {config} on world={world} (tensor={tp} expert={ep} dp_exp={} dp_nonexp={}) dtd={} cac={} tiling={} transport={} overlap={}{}",
         topo.cfg.dp_exp, topo.cfg.dp_nonexp, opts.dtd, opts.cac, opts.optimizer_tiling,
-        opts.strategy.name()
+        opts.strategy.name(), opts.overlap,
+        opts.cluster.map(|p| format!(" cluster={}", p.name())).unwrap_or_default()
     );
     let run = RunConfig {
         steps,
@@ -128,16 +151,26 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let log = train(&topo, &manifest, opts, tcfg, run, data)?;
     println!("\ndone in {:.1}s; final loss {:.4}", log.wall_s, log.steps.last().unwrap().loss);
-    println!("comm volumes (total / intra-node / inter-node):");
+    println!("comm volumes (total / intra-node / inter-node / inter-msgs):");
     for (i, (kind, bytes)) in log.comm_bytes.into_iter().enumerate() {
         if bytes > 0 {
             println!(
-                "  {:<14} {bytes:>14} {:>14} {:>14} bytes",
+                "  {:<14} {bytes:>14} {:>14} {:>14} bytes {:>10} msgs",
                 kind.name(),
                 log.comm_intra_bytes[i].1,
-                log.comm_inter_bytes[i].1
+                log.comm_inter_bytes[i].1,
+                log.comm_inter_msgs[i].1
             );
         }
+    }
+    if opts.cluster.is_some() && log.comm_serialized_s > 0.0 {
+        let hidden = log.comm_serialized_s - log.comm_critical_s;
+        println!(
+            "modeled comm time: serialized {:.4}s, critical-path {:.4}s ({:.1}% hidden by overlap)",
+            log.comm_serialized_s,
+            log.comm_critical_s,
+            100.0 * hidden / log.comm_serialized_s
+        );
     }
     Ok(())
 }

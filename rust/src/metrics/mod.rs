@@ -111,6 +111,27 @@ impl CsvWriter {
 pub mod bench {
     use super::*;
 
+    /// Smoke mode: `BENCH_SMOKE=1` in the environment, or `--smoke` /
+    /// `--test` on the bench binary's argv (the spelling
+    /// `cargo bench -- --test` forwards). CI uses it to run every bench
+    /// for one iteration so bench bit-rot is caught without paying for a
+    /// full measurement run.
+    pub fn smoke() -> bool {
+        std::env::var("BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+            || std::env::args().any(|a| a == "--smoke" || a == "--test")
+    }
+
+    /// The iteration count a bench should run: `full` normally, 1 in
+    /// smoke mode. Apply at the call site that also sizes any worker
+    /// threads, so timed and worker loops stay in lock-step.
+    pub fn iters(full: u32) -> u32 {
+        if smoke() {
+            1
+        } else {
+            full
+        }
+    }
+
     #[derive(Debug, Clone, Copy)]
     pub struct BenchResult {
         pub iters: u32,
@@ -121,7 +142,12 @@ pub mod bench {
     }
 
     /// Warm up, run `iters` timed iterations, print a criterion-style line.
+    /// Smoke mode clamps the timed iterations (never the warmup — benches
+    /// that pre-size worker threads count on `warmup + iters` staying in
+    /// lock-step with the iteration count they passed in, which they must
+    /// already have clamped via [`iters`]).
     pub fn run(name: &str, warmup: u32, iters: u32, mut f: impl FnMut()) -> BenchResult {
+        let iters = if smoke() { 1 } else { iters };
         for _ in 0..warmup {
             f();
         }

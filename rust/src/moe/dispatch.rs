@@ -23,8 +23,18 @@
 //! built with (`EngineOptions::strategy`), and the round-trip tests below
 //! assert bitwise-identical results across flat and hierarchical
 //! transports — DTD's `G_tensor x` payload reduction holds per lane.
+//!
+//! With `overlap` on (and a hierarchical transport), the DTD all-gather is
+//! **pipelined against the expert all-to-all** (MoNTA-style): the a2a is
+//! issued nonblocking, the rows arriving from *same-node* EP peers are
+//! picked up as soon as the intra-node phase completes and start gathering
+//! across the TP group (NVLink) while the cross-node rows are still in
+//! flight on the wire; a second gather moves the late rows. The scatter is
+//! keyed by buffer cell, so the two-gather schedule is bitwise identical
+//! to the blocking one — only the timeline (and the per-call accounting)
+//! changes.
 
-use crate::collectives::Communicator;
+use crate::collectives::{Communicator, PendingAllToAll};
 use crate::moe::router::RoutingDecision;
 use crate::topology::GroupId;
 use crate::util::tensor::Tensor;
@@ -40,6 +50,9 @@ pub struct MoeComm<'a> {
     pub tp_pos: usize,
     /// duplicate token dropping on/off
     pub dtd: bool,
+    /// nonblocking schedule: pipeline the DTD all-gather against the
+    /// expert all-to-all's inter-node phase (bitwise-identical results)
+    pub overlap: bool,
 }
 
 impl MoeComm<'_> {
@@ -51,6 +64,75 @@ impl MoeComm<'_> {
     fn owns_slot(&self, s: usize) -> bool {
         !self.dtd || s % self.tp() == self.tp_pos
     }
+
+    /// Is the pipelined (split-gather) DTD schedule active? Must be
+    /// uniform across the TP group: it depends only on option switches
+    /// and the strategy, never on this rank's node layout.
+    fn pipelined(&self) -> bool {
+        self.overlap && self.dtd && self.tp() > 1 && self.comm.strategy().is_hierarchical()
+    }
+}
+
+/// Run the EP all-to-all and the DTD TP all-gathers under the pipelined
+/// schedule: returns the member-order a2a receipts plus the gathered
+/// payloads of the *other* TP planes (own plane excluded), in a
+/// deterministic order. The early gather carries rows whose EP source is
+/// on this rank's node (available after the a2a intra phase); the late
+/// gather carries the cross-node rows.
+fn pipelined_a2a_gather(
+    ctx: &mut MoeComm,
+    send: Vec<Vec<f32>>,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let n_members = ctx.ep_members.len();
+    let mut pend: PendingAllToAll = ctx.comm.issue_all_to_all(ctx.ep_gid, ctx.ep_members, send);
+
+    // Both gathers are issued unconditionally — even when this rank's a2a
+    // turned out to have no phase split (node-local EP group, empty early
+    // set). Deliberate: TP peers sit in *different* EP groups whose node
+    // layouts can differ (e.g. gpn=3: {0,2} is node-local, {1,3} spans),
+    // so gating the gather count on `pend.has_phases()` would desync the
+    // TP group's collective sequence and deadlock. The empty early gather
+    // costs one α; uniformity is what keeps the schedule deadlock-free.
+
+    // same-node receipts become available after the intra phase; gather
+    // them across the TP group while the inter phase is still in flight
+    let mut early_from = vec![false; n_members];
+    let mut early_concat: Vec<f32> = Vec::new();
+    for (p, rows) in ctx.comm.wait_all_to_all_intra(&mut pend).iter() {
+        early_from[*p] = true;
+        early_concat.extend_from_slice(rows);
+    }
+    let pg1 = ctx.comm.issue_all_gather(
+        ctx.tp_gid,
+        ctx.tp_members,
+        &Tensor::from_vec(&[early_concat.len()], early_concat),
+    );
+
+    let received = ctx.comm.wait_all_to_all(pend);
+
+    // late rows: everything not delivered early (cross-node sources plus
+    // this rank's own self-destined payload)
+    let mut late_concat: Vec<f32> = Vec::new();
+    for (p, payload) in received.iter().enumerate() {
+        if !early_from[p] {
+            late_concat.extend_from_slice(payload);
+        }
+    }
+    let pg2 = ctx.comm.issue_all_gather(
+        ctx.tp_gid,
+        ctx.tp_members,
+        &Tensor::from_vec(&[late_concat.len()], late_concat),
+    );
+
+    let g1 = ctx.comm.wait_all_gather(pg1);
+    let g2 = ctx.comm.wait_all_gather(pg2);
+    let mut others: Vec<Vec<f32>> = Vec::with_capacity(2 * (ctx.tp() - 1));
+    for (pos, payload) in g1.into_iter().chain(g2.into_iter()).enumerate() {
+        if pos % ctx.tp() != ctx.tp_pos {
+            others.push(payload);
+        }
+    }
+    (received, others)
 }
 
 /// Result of dispatching local tokens to the expert buffers.
@@ -100,12 +182,19 @@ pub fn dispatch(
         payload.extend_from_slice(rows.row(i));
     }
 
-    let received = ctx.comm.all_to_all(ctx.ep_gid, ctx.ep_members, send);
+    // run the EP a2a — pipelined against the DTD gathers when overlap is
+    // on and the transport has a phase split, blocking otherwise
+    let (received, gathered_others) = if ctx.pipelined() {
+        pipelined_a2a_gather(ctx, send)
+    } else {
+        (ctx.comm.all_to_all(ctx.ep_gid, ctx.ep_members, send), Vec::new())
+    };
 
     // scatter received rows into local buffers
     let mut buffers = vec![Tensor::zeros(&[capacity, d]); local_experts];
     let mut origin_of_slot = vec![vec![None; capacity]; local_experts];
     let first_expert = ctx.ep_pos * local_experts;
+    let ep_pos = ctx.ep_pos;
     let scatter = |payload: &[f32], origin: Option<usize>, buffers: &mut Vec<Tensor>, origins: &mut Vec<Vec<Option<usize>>>| {
         assert_eq!(payload.len() % (d + 1), 0, "ragged dispatch payload");
         for row in payload.chunks_exact(d + 1) {
@@ -113,8 +202,7 @@ pub fn dispatch(
             let (e, slot) = (key / capacity, key % capacity);
             assert!(
                 (first_expert..first_expert + local_experts).contains(&e),
-                "expert {e} misrouted to ep_pos {} (local range {first_expert}..)",
-                ctx.ep_pos
+                "expert {e} misrouted to ep_pos {ep_pos} (local range {first_expert}..)"
             );
             let le = e - first_expert;
             buffers[le].copy_row_from(slot, &row[1..]);
@@ -127,10 +215,16 @@ pub fn dispatch(
         scatter(payload, Some(pos), &mut buffers, &mut origin_of_slot);
     }
 
-    // DTD: TP all-gather to fill the slots the other planes carried. The
+    // DTD: TP all-gather(s) fill the slots the other planes carried. The
     // gathered rows re-use the same key format; their origins stay None
-    // (only the direct receiver answers on the return path).
-    if ctx.dtd && ctx.tp() > 1 {
+    // (only the direct receiver answers on the return path). The scatter
+    // is keyed per buffer cell, so the pipelined two-gather schedule lands
+    // bit-identically to the blocking single gather.
+    if ctx.pipelined() {
+        for payload in &gathered_others {
+            scatter(payload, None, &mut buffers, &mut origin_of_slot);
+        }
+    } else if ctx.dtd && ctx.tp() > 1 {
         let mut mine: Vec<f32> = Vec::new();
         for payload in &received {
             mine.extend_from_slice(payload);
@@ -182,7 +276,13 @@ pub fn return_to_origin(
         }
     }
 
-    let received = ctx.comm.all_to_all(ctx.ep_gid, ctx.ep_members, send);
+    // return-path a2a — pipelined against the DTD gather when overlap is
+    // on (the ISSUE's comm/comm overlap case), blocking otherwise
+    let (received, gathered_others) = if ctx.pipelined() {
+        pipelined_a2a_gather(ctx, send)
+    } else {
+        (ctx.comm.all_to_all(ctx.ep_gid, ctx.ep_members, send), Vec::new())
+    };
 
     // origin side: flatten all received rows; with DTD, all-gather across
     // the TP group so every plane sees every token's row.
@@ -190,7 +290,13 @@ pub fn return_to_origin(
     for payload in &received {
         all_rows.extend_from_slice(payload);
     }
-    if ctx.dtd && ctx.tp() > 1 {
+    if ctx.pipelined() {
+        // own receipts already in all_rows; append the other planes' rows
+        // (key-addressed, so concatenation order does not matter)
+        for payload in &gathered_others {
+            all_rows.extend_from_slice(payload);
+        }
+    } else if ctx.dtd && ctx.tp() > 1 {
         let gathered = ctx.comm.all_gather(
             ctx.tp_gid,
             ctx.tp_members,
@@ -238,7 +344,8 @@ mod tests {
     /// Full dispatch->return round trip on a (tp, ep) grid; every rank
     /// routes `n` tokens with a deterministic pattern; expert "compute"
     /// negates rows so we can verify the round trip. Runs on the given
-    /// transport (`gpn` = gpus per node; 0 = single node).
+    /// transport (`gpn` = gpus per node; 0 = single node), blocking
+    /// schedule; see `round_trip_sched` for the overlap variant.
     #[allow(clippy::too_many_arguments)]
     fn round_trip_on(
         strategy: CollectiveStrategy,
@@ -246,6 +353,22 @@ mod tests {
         tp: usize,
         ep: usize,
         dtd: bool,
+        n: usize,
+        d: usize,
+        cap: usize,
+        n_experts: usize,
+    ) {
+        round_trip_sched(strategy, gpn, tp, ep, dtd, false, n, d, cap, n_experts);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn round_trip_sched(
+        strategy: CollectiveStrategy,
+        gpn: usize,
+        tp: usize,
+        ep: usize,
+        dtd: bool,
+        overlap: bool,
         n: usize,
         d: usize,
         cap: usize,
@@ -293,6 +416,7 @@ mod tests {
                             tp_members: &g.tp_group,
                             tp_pos,
                             dtd,
+                            overlap,
                         };
                         let disp = dispatch(&mut ctx, &rows, &dec, local_experts, cap);
                         // fake expert compute: negate every filled row
@@ -370,6 +494,26 @@ mod tests {
     }
 
     #[test]
+    fn round_trip_pxn_transport() {
+        for dtd in [false, true] {
+            round_trip_on(CollectiveStrategy::HierarchicalPxn, 2, 2, 2, dtd, 6, 4, 16, 2);
+        }
+        round_trip_on(CollectiveStrategy::HierarchicalPxn, 4, 4, 2, true, 8, 3, 24, 4);
+    }
+
+    #[test]
+    fn round_trip_overlap_pipelined_gathers() {
+        // the pipelined split-gather schedule must round-trip on both
+        // hierarchical backends, spanning and node-local EP groups
+        for strategy in [CollectiveStrategy::Hierarchical, CollectiveStrategy::HierarchicalPxn] {
+            round_trip_sched(strategy, 2, 2, 2, true, true, 6, 4, 16, 2);
+            round_trip_sched(strategy, 4, 4, 2, true, true, 8, 3, 24, 4);
+        }
+        // overlap with the flat transport falls back to the single gather
+        round_trip_sched(CollectiveStrategy::Flat, 0, 2, 2, true, true, 6, 4, 16, 2);
+    }
+
+    #[test]
     fn dtd_reduces_a2a_bytes_by_tp() {
         // measure A2A bytes with and without DTD on the same workload
         let bytes = |dtd: bool| -> u64 {
@@ -411,6 +555,7 @@ mod tests {
                             tp_members: &g.tp_group,
                             tp_pos,
                             dtd,
+                            overlap: false,
                         };
                         let disp = dispatch(&mut ctx, &rows, &dec, 1, cap);
                         let _ = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, 1, cap);
@@ -469,6 +614,7 @@ mod tests {
                             tp_members: &g.tp_group,
                             tp_pos,
                             dtd,
+                            overlap: false,
                         };
                         let disp = dispatch(&mut ctx, &rows, &dec, 1, cap);
                         let _ = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, 1, cap);
@@ -508,6 +654,7 @@ mod tests {
             tp_members: &g.tp_group,
             tp_pos: 0,
             dtd: false,
+            overlap: false,
         };
         let disp = dispatch(&mut ctx, &rows, &dec, 2, cap);
         let back = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, 2, cap);

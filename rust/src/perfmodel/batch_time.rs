@@ -12,11 +12,22 @@
 //!
 //! CAC removes the recompute copies of the forward collectives; DTD divides
 //! the A2A payload by `G_tensor` and adds the TP all-gather.
+//!
+//! [`batch_time_overlapped`] layers the comm/comm overlap model on top:
+//! the serialized comm time splits into an NVLink lane and an IB lane
+//! (accumulated per phase by [`batch_time`]), and a nonblocking schedule
+//! can hide up to `min(intra, inter)` of one lane behind the other — the
+//! `overlap_efficiency` knob scales how much of that bound the schedule
+//! actually achieves (0 = fully serialized = `--no-overlap`, 1 = perfect
+//! two-lane pipelining). The functional engine's measured per-step
+//! timeline (`sim::TrainLog::overlap_timeline`) is the measured
+//! counterpart; `rust/tests/integration_accounting.rs` pins the two
+//! layers together on scripted schedules.
 
 use crate::collectives::CollectiveStrategy;
 use crate::config::{ClusterConfig, ModelConfig, ParallelConfig};
 use crate::perfmodel::collective_cost::{
-    allgather_phased, allreduce_phased, alltoall_phased,
+    allgather_phased, allreduce_phased, alltoall_phased, PhasedCost,
 };
 use crate::perfmodel::flops::flops_per_iter_checkpointed;
 use crate::topology::Topology;
@@ -75,6 +86,10 @@ pub struct BatchTime {
     pub allreduce_s: f64,
     pub alltoall_s: f64,
     pub allgather_s: f64,
+    /// NVLink-lane share of the comm time (sum of all intra phases).
+    pub comm_intra_s: f64,
+    /// InfiniBand-lane share of the comm time (sum of all inter phases).
+    pub comm_inter_s: f64,
 }
 
 impl BatchTime {
@@ -94,17 +109,6 @@ pub fn batch_time(s: &Scenario) -> BatchTime {
     let topo = Topology::new(par).expect("valid parallel config");
     let g0 = topo.groups(0);
     let strat = s.opts.strategy;
-    // per-backend pricing: flat charges a spanning group at the bottleneck
-    // fabric, hierarchical prices each phase on its own fabric
-    let allreduce_c = |members: &[usize], bytes: f64| -> f64 {
-        allreduce_phased(c, strat, members, bytes).total()
-    };
-    let allgather_c = |members: &[usize], bytes: f64| -> f64 {
-        allgather_phased(c, strat, members, bytes).total()
-    };
-    let alltoall_c = |members: &[usize], bytes: f64| -> f64 {
-        alltoall_phased(c, strat, members, bytes).total()
-    };
 
     let l = m.n_layers as f64;
     let moe_layers = (m.n_layers / 2) as f64;
@@ -119,6 +123,17 @@ pub fn batch_time(s: &Scenario) -> BatchTime {
     let compute_s = flops
         / (par.world as f64 * c.peak_half_tflops * 1e12 * c.flops_efficiency);
 
+    // per-backend pricing: flat charges a spanning group at the bottleneck
+    // fabric, the hierarchical backends price each phase on its own
+    // fabric; `add` accumulates the per-lane totals alongside
+    let mut intra_s = 0.0f64;
+    let mut inter_s = 0.0f64;
+    let mut add = |count: f64, pc: PhasedCost| -> f64 {
+        intra_s += count * pc.intra_s;
+        inter_s += count * pc.inter_s;
+        count * pc.total()
+    };
+
     // ---- tensor-parallel all-reduces ----
     // per pass counts: fwd 1 per block, bwd 1 per block; recompute re-adds
     // the forward set when CAC is off.
@@ -126,35 +141,95 @@ pub fn batch_time(s: &Scenario) -> BatchTime {
     let attn_ars = l * passes_fwd(passes);
     let ffn_ars = (l - moe_layers) * passes_fwd(passes);
     let expert_ars = moe_layers * passes_fwd(passes);
-    let mut allreduce_s_total = (attn_ars + ffn_ars) * allreduce_c(&g0.tp_group, act_bytes)
-        + expert_ars * allreduce_c(&g0.tp_group, cap_bytes);
+    let mut allreduce_s_total =
+        add(attn_ars + ffn_ars, allreduce_phased(c, strat, &g0.tp_group, act_bytes))
+            + add(expert_ars, allreduce_phased(c, strat, &g0.tp_group, cap_bytes));
 
     // ---- expert-parallel all-to-alls ----
     // 2 per MoE layer per pass (dispatch + return)
     let a2a_count = moe_layers * 2.0 * passes;
     let a2a_bytes = if s.opts.dtd { act_bytes / par.tp as f64 } else { act_bytes };
-    let alltoall_s_total = a2a_count * alltoall_c(&g0.ep_group, a2a_bytes);
+    let alltoall_s_total = add(a2a_count, alltoall_phased(c, strat, &g0.ep_group, a2a_bytes));
 
     // ---- all-gathers ----
     let mut allgather_s_total = 0.0;
     if s.opts.dtd {
         // one TP all-gather per A2A, each rank contributing its 1/tp slice
-        allgather_s_total += a2a_count * allgather_c(&g0.tp_group, act_bytes / par.tp as f64);
+        allgather_s_total +=
+            add(a2a_count, allgather_phased(c, strat, &g0.tp_group, act_bytes / par.tp as f64));
     }
 
     // ---- gradient reduction + ZeRO-1 parameter all-gather (per iter) ----
     let np_ne_gpu = m.n_params_nonexpert() as f64 / par.tp as f64;
     let np_e_gpu = m.n_params_expert(s.n_experts) as f64 / (par.tp * par.ep) as f64;
-    allreduce_s_total += allreduce_c(&g0.dp_nonexp_group, 2.0 * np_ne_gpu);
-    allreduce_s_total += allreduce_c(&g0.dp_exp_group, 2.0 * np_e_gpu);
-    allgather_s_total += allgather_c(&g0.dp_nonexp_group, 2.0 * np_ne_gpu / par.dp_nonexp as f64);
-    allgather_s_total += allgather_c(&g0.dp_exp_group, 2.0 * np_e_gpu / par.dp_exp as f64);
+    allreduce_s_total += add(1.0, allreduce_phased(c, strat, &g0.dp_nonexp_group, 2.0 * np_ne_gpu));
+    allreduce_s_total += add(1.0, allreduce_phased(c, strat, &g0.dp_exp_group, 2.0 * np_e_gpu));
+    allgather_s_total += add(
+        1.0,
+        allgather_phased(c, strat, &g0.dp_nonexp_group, 2.0 * np_ne_gpu / par.dp_nonexp as f64),
+    );
+    allgather_s_total += add(
+        1.0,
+        allgather_phased(c, strat, &g0.dp_exp_group, 2.0 * np_e_gpu / par.dp_exp as f64),
+    );
 
     BatchTime {
         compute_s,
         allreduce_s: allreduce_s_total,
         alltoall_s: alltoall_s_total,
         allgather_s: allgather_s_total,
+        comm_intra_s: intra_s,
+        comm_inter_s: inter_s,
+    }
+}
+
+/// Overlap-aware batch time: the comm critical path under a nonblocking
+/// two-lane schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct OverlappedBatchTime {
+    pub base: BatchTime,
+    pub overlap_efficiency: f64,
+    /// Comm time with every op serialized (= `base.comm_s()`).
+    pub serialized_comm_s: f64,
+    /// Comm critical path: `serialized - eff * min(intra, inter)`.
+    pub critical_comm_s: f64,
+}
+
+impl OverlappedBatchTime {
+    pub fn total(&self) -> f64 {
+        self.base.compute_s + self.critical_comm_s
+    }
+
+    /// Fraction of the serialized comm time the overlap hides.
+    pub fn overlap_win(&self) -> f64 {
+        if self.serialized_comm_s <= 0.0 {
+            0.0
+        } else {
+            1.0 - self.critical_comm_s / self.serialized_comm_s
+        }
+    }
+}
+
+/// Price a scenario under a nonblocking schedule: of the two comm lanes,
+/// at most `min(intra, inter)` can hide behind the other lane (the
+/// two-lane makespan lower bound is `max(intra, inter)`), and
+/// `overlap_efficiency` in `[0, 1]` scales how much of that bound the
+/// actual issue/wait schedule achieves. `0` reproduces `batch_time`
+/// exactly (`--no-overlap`); `1` is perfect cross-fabric pipelining.
+pub fn batch_time_overlapped(s: &Scenario, overlap_efficiency: f64) -> OverlappedBatchTime {
+    assert!(
+        (0.0..=1.0).contains(&overlap_efficiency),
+        "overlap_efficiency must be in [0, 1], got {overlap_efficiency}"
+    );
+    let base = batch_time(s);
+    let serialized = base.comm_intra_s + base.comm_inter_s;
+    let overlappable = base.comm_intra_s.min(base.comm_inter_s);
+    let critical = serialized - overlap_efficiency * overlappable;
+    OverlappedBatchTime {
+        base,
+        overlap_efficiency,
+        serialized_comm_s: serialized,
+        critical_comm_s: critical,
     }
 }
 
@@ -255,6 +330,53 @@ mod tests {
             CommOpts::optimized().with_strategy(CollectiveStrategy::Hierarchical),
         ));
         assert!(both.total() < batch_time(&scenario(CommOpts::optimized())).total());
+    }
+
+    #[test]
+    fn lanes_sum_to_comm_time() {
+        for strat in crate::collectives::ALL_STRATEGIES {
+            let t = batch_time(&scenario(CommOpts::optimized().with_strategy(strat)));
+            let lanes = t.comm_intra_s + t.comm_inter_s;
+            assert!(
+                (lanes - t.comm_s()).abs() < 1e-9 * t.comm_s().max(1.0),
+                "{strat:?}: lanes {lanes} vs comm {}",
+                t.comm_s()
+            );
+            // every backend prices node-local groups (the tp=4 groups on
+            // 6-GPU Summit nodes) at NVLink and the spanning EP/DP groups'
+            // cross-node phases at IB, so both lanes are populated
+            assert!(t.comm_intra_s > 0.0 && t.comm_inter_s > 0.0, "{strat:?}");
+        }
+    }
+
+    #[test]
+    fn overlap_model_brackets_serialized_time() {
+        let s = scenario(CommOpts::optimized().with_strategy(CollectiveStrategy::Hierarchical));
+        let none = batch_time_overlapped(&s, 0.0);
+        let half = batch_time_overlapped(&s, 0.5);
+        let full = batch_time_overlapped(&s, 1.0);
+        // eff = 0 reproduces the serialized model exactly
+        assert_eq!(none.critical_comm_s, none.serialized_comm_s);
+        assert_eq!(none.overlap_win(), 0.0);
+        // monotone in the knob, never below the two-lane makespan bound
+        assert!(half.critical_comm_s < none.critical_comm_s);
+        assert!(full.critical_comm_s < half.critical_comm_s);
+        let bound = none.base.comm_intra_s.max(none.base.comm_inter_s);
+        assert!(full.critical_comm_s >= bound - 1e-12);
+        assert!(full.total() < none.total());
+        // the hidden time is exactly eff * min(intra, inter)
+        let overlappable = none.base.comm_intra_s.min(none.base.comm_inter_s);
+        assert!(
+            (none.critical_comm_s - half.critical_comm_s - 0.5 * overlappable).abs() < 1e-12,
+            "overlap win should scale linearly with the knob"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "overlap_efficiency")]
+    fn overlap_efficiency_out_of_range_panics() {
+        let s = scenario(CommOpts::baseline());
+        let _ = batch_time_overlapped(&s, 1.5);
     }
 
     #[test]

@@ -13,11 +13,21 @@
 //! * the classic single-fabric functions above (used by the flat
 //!   transport: the whole op priced at the bottleneck link), and
 //! * **phased** variants ([`alltoall_phased`], [`allgather_phased`],
-//!   [`allreduce_phased`]) that price the hierarchical backend's
+//!   [`allreduce_phased`]) that price the hierarchical backends'
 //!   intra-node and inter-node phases separately, plus analytic
-//!   **lane-byte predictions** (`lane_bytes_*`) that mirror
+//!   **lane-byte predictions** (`lane_bytes_*`) and **lane-message
+//!   predictions** ([`lane_msgs_alltoall`]) that mirror
 //!   `collectives::accounting` exactly — the integration tests assert
-//!   measured == predicted for both backends.
+//!   measured == predicted for every backend.
+//!
+//! The **PXN (leader-aggregated)** all-to-all trades bandwidth for α:
+//! each leader sends one batched message per peer *node* instead of every
+//! rank messaging every cross-node *peer*, cutting the inter-node α-term
+//! from `(n-1)` to `(m-1)` messages, while the leader serializes its
+//! node's cross-node volume (`k x` the per-rank share) and the cross-node
+//! rows pay two extra NVLink hops (gather-to-leader + redistribute). It
+//! wins when the all-to-all is latency-bound (many small messages) and
+//! loses when bandwidth-bound — exactly the Megatron-Core/MoNTA trade.
 //!
 //! Note one deliberate asymmetry: *time* pricing for the flat backend is
 //! per-group (a provably node-local group still rides NVLink), while the
@@ -164,7 +174,43 @@ pub fn alltoall_phased(
                 inter_s: alltoall_s(cluster, inter_shape(n), inter_bytes),
             }
         }
+        CollectiveStrategy::HierarchicalPxn => {
+            let (pre, wire, post) = alltoall_pxn_schedule(cluster, members, local_bytes);
+            PhasedCost { intra_s: pre + post, inter_s: wire }
+        }
     }
+}
+
+/// The PXN all-to-all priced phase by phase, in physical order:
+/// `(pre-wire intra, wire, post-wire intra)` — the same-node exchange plus
+/// the gather-to-leader hop, then the leaders' batched exchange (one
+/// aggregated message per peer node: the α-term drops to `m-1` while each
+/// leader serializes its node's k-fold cross-node volume), then the
+/// redistribute hop back over NVLink. [`alltoall_phased`] sums the two
+/// intra parts; the timeline scheduler keeps them separate so the early
+/// same-node pickup (`wait_all_to_all_intra`) lands after the pre-wire
+/// phase only and the redistribute correctly queues *behind* the wire.
+pub fn alltoall_pxn_schedule(
+    cluster: &ClusterConfig,
+    members: &[usize],
+    local_bytes: f64,
+) -> (f64, f64, f64) {
+    let n = members.len();
+    if n <= 1 {
+        return (0.0, 0.0, 0.0);
+    }
+    let (k, nodes) = node_profile(members, cluster.gpus_per_node);
+    if nodes == 1 {
+        return (alltoall_s(cluster, intra_shape(n), local_bytes), 0.0, 0.0);
+    }
+    let same_frac = (k.saturating_sub(1)) as f64 / (n - 1) as f64;
+    let intra_bytes = local_bytes * same_frac;
+    let inter_bytes = local_bytes - intra_bytes;
+    let pre = alltoall_s(cluster, intra_shape(k), intra_bytes)
+        + alltoall_s(cluster, intra_shape(k), inter_bytes);
+    let wire = alltoall_s(cluster, inter_shape(nodes), k as f64 * inter_bytes);
+    let post = alltoall_s(cluster, intra_shape(k), inter_bytes);
+    (pre, wire, post)
 }
 
 /// All-gather priced per backend: intra-node gather of `bytes_per_rank`,
@@ -190,7 +236,9 @@ pub fn allgather_phased(
                 PhasedCost { intra_s: 0.0, inter_s: t }
             }
         }
-        CollectiveStrategy::Hierarchical => {
+        // all-gather is already leader-aggregated under Hierarchical;
+        // PXN changes nothing here
+        CollectiveStrategy::Hierarchical | CollectiveStrategy::HierarchicalPxn => {
             let (k, nodes) = node_profile(members, cluster.gpus_per_node);
             if nodes == 1 {
                 return PhasedCost {
@@ -230,7 +278,8 @@ pub fn allreduce_phased(
                 PhasedCost { intra_s: 0.0, inter_s: t }
             }
         }
-        CollectiveStrategy::Hierarchical => {
+        // reductions are identical across the hierarchical backends
+        CollectiveStrategy::Hierarchical | CollectiveStrategy::HierarchicalPxn => {
             let (k, nodes) = node_profile(members, cluster.gpus_per_node);
             if nodes == 1 {
                 return PhasedCost {
@@ -295,6 +344,126 @@ pub fn lane_bytes_alltoall(
             }
             (intra, inter)
         }
+        CollectiveStrategy::HierarchicalPxn => panic!(
+            "PXN lane bytes depend on the whole node's send matrix; \
+             use lane_bytes_alltoall_pxn"
+        ),
+    }
+}
+
+/// Predicted (intra, inter) payload bytes recorded by rank
+/// `members[my_pos]` for one **leader-aggregated (PXN)** all-to-all.
+/// `send_bytes[i][j]` is the payload member `i` addresses to member `j`
+/// — the full matrix is needed because a node leader also carries its
+/// node's aggregated cross-node traffic and the redistribution of the
+/// rows received for its node peers.
+pub fn lane_bytes_alltoall_pxn(
+    members: &[usize],
+    my_pos: usize,
+    send_bytes: &[Vec<u64>],
+    gpus_per_node: usize,
+) -> (u64, u64) {
+    let n = members.len();
+    assert_eq!(send_bytes.len(), n);
+    if n <= 1 {
+        return (0, 0);
+    }
+    let map = NodeMap::new(gpus_per_node);
+    let plan = NodePlan::build(map, members, my_pos);
+    let nonself_row = |src: usize| -> u64 {
+        send_bytes[src]
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| *j != src)
+            .map(|(_, &b)| b)
+            .sum()
+    };
+    if plan.n_nodes() == 1 {
+        return (nonself_row(my_pos), 0);
+    }
+    let subset = plan.my_subset();
+    let on_node = |p: usize| subset.contains(&p);
+    let own_same: u64 = subset
+        .iter()
+        .filter(|&&p| p != my_pos)
+        .map(|&p| send_bytes[my_pos][p])
+        .sum();
+    let own_cross: u64 =
+        (0..n).filter(|&p| !on_node(p)).map(|p| send_bytes[my_pos][p]).sum();
+    if !plan.is_leader() {
+        // same-node exchange + forwarding the cross-node rows to the leader
+        return (own_same + own_cross, 0);
+    }
+    // leader: its own cross rows never cross NVLink (it holds them); it
+    // ships the node's aggregated cross-node volume over the wire and
+    // redistributes the rows received for its node peers over NVLink.
+    let node_cross: u64 = subset
+        .iter()
+        .map(|&s| (0..n).filter(|&p| !on_node(p)).map(|p| send_bytes[s][p]).sum::<u64>())
+        .sum();
+    let dist: u64 = (0..n)
+        .filter(|&src| !on_node(src))
+        .map(|src| {
+            subset
+                .iter()
+                .filter(|&&p| p != my_pos)
+                .map(|&p| send_bytes[src][p])
+                .sum::<u64>()
+        })
+        .sum();
+    (own_same + dist, node_cross)
+}
+
+/// Predicted (intra, inter) **message counts** recorded by rank
+/// `members[my_pos]` for one all-to-all — the α-term the PXN schedule
+/// shrinks. Structural (independent of payload sizes), mirroring the
+/// transports exactly: flat sends `n-1` messages on its single lane;
+/// hierarchical sends `k-1` intra + `n-k` inter; PXN non-leaders send
+/// `k-1` same-node + 1 leader-forward messages, leaders send `k-1`
+/// same-node + `k-1` redistribution intra messages and one batch per
+/// peer node (`m-1`) on the wire.
+pub fn lane_msgs_alltoall(
+    strategy: CollectiveStrategy,
+    members: &[usize],
+    my_pos: usize,
+    gpus_per_node: usize,
+    world: usize,
+) -> (u64, u64) {
+    let n = members.len();
+    if n <= 1 {
+        return (0, 0);
+    }
+    let map = NodeMap::new(gpus_per_node);
+    let peers = (n - 1) as u64;
+    match strategy {
+        CollectiveStrategy::Flat => {
+            if map.spans_nodes(world) {
+                (0, peers)
+            } else {
+                (peers, 0)
+            }
+        }
+        CollectiveStrategy::Hierarchical => {
+            let plan = NodePlan::build(map, members, my_pos);
+            if plan.n_nodes() == 1 {
+                return (peers, 0);
+            }
+            let k = plan.my_subset().len() as u64;
+            (k - 1, n as u64 - k)
+        }
+        CollectiveStrategy::HierarchicalPxn => {
+            let plan = NodePlan::build(map, members, my_pos);
+            if plan.n_nodes() == 1 {
+                return (peers, 0);
+            }
+            let k = plan.my_subset().len() as u64;
+            let m = plan.n_nodes() as u64;
+            if plan.is_leader() {
+                (2 * (k - 1), m - 1)
+            } else {
+                (k, 0)
+            }
+        }
     }
 }
 
@@ -322,7 +491,7 @@ pub fn lane_bytes_allgather(
                 (own, 0)
             }
         }
-        CollectiveStrategy::Hierarchical => {
+        CollectiveStrategy::Hierarchical | CollectiveStrategy::HierarchicalPxn => {
             let plan = NodePlan::build(map, members, my_pos);
             if plan.n_nodes() == 1 {
                 return (own, 0);
@@ -365,7 +534,7 @@ pub fn lane_bytes_allreduce(
                 (bytes, 0)
             }
         }
-        CollectiveStrategy::Hierarchical => {
+        CollectiveStrategy::Hierarchical | CollectiveStrategy::HierarchicalPxn => {
             let plan = NodePlan::build(map, members, my_pos);
             let intra = if plan.my_subset().len() > 1 { bytes } else { 0 };
             let inter = if plan.n_nodes() > 1 && plan.is_leader() { bytes } else { 0 };
@@ -488,5 +657,79 @@ mod tests {
         let (qi, qx) =
             lane_bytes_allreduce(CollectiveStrategy::Hierarchical, &members, 3, 64, 2, 4);
         assert_eq!((qi, qx), (64, 0));
+    }
+
+    #[test]
+    fn pxn_alltoall_cuts_alpha_term() {
+        // 16 ranks over 2 nodes of 8, tiny payload: latency-bound, so the
+        // (m-1) vs (n-1) α reduction dominates and PXN wins
+        let c = summit();
+        let mut c8 = c.clone();
+        c8.gpus_per_node = 8;
+        let members: Vec<usize> = (0..16).collect();
+        let small = 4096.0;
+        let hier = alltoall_phased(&c8, CollectiveStrategy::Hierarchical, &members, small);
+        let pxn = alltoall_phased(&c8, CollectiveStrategy::HierarchicalPxn, &members, small);
+        assert!(pxn.inter_s < hier.inter_s, "{} vs {}", pxn.inter_s, hier.inter_s);
+        assert!(pxn.total() < hier.total(), "{} vs {}", pxn.total(), hier.total());
+        // huge payload: bandwidth-bound, the leader serialization loses
+        let big = 1e9;
+        let hier_b = alltoall_phased(&c8, CollectiveStrategy::Hierarchical, &members, big);
+        let pxn_b = alltoall_phased(&c8, CollectiveStrategy::HierarchicalPxn, &members, big);
+        assert!(pxn_b.total() > hier_b.total());
+        // node-local group: PXN degenerates to the plain intra exchange
+        let local: Vec<usize> = (0..8).collect();
+        let h2 = alltoall_phased(&c8, CollectiveStrategy::Hierarchical, &local, 1e6);
+        let p2 = alltoall_phased(&c8, CollectiveStrategy::HierarchicalPxn, &local, 1e6);
+        assert_eq!(p2.inter_s, 0.0);
+        assert!((h2.intra_s - p2.intra_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn pxn_lane_bytes_and_msgs() {
+        // 4 ranks, 2 nodes of 2; uniform 8B payload to every peer
+        let members = [0usize, 1, 2, 3];
+        let m: Vec<Vec<u64>> = (0..4)
+            .map(|s| (0..4).map(|d| if s == d { 0 } else { 8 }).collect())
+            .collect();
+        // rank 0 (leader of node 0): 8B same-node; ships node cross
+        // volume 4x8=32B inter; redistributes 2 cross rows (16B) to rank 1
+        let (li, lx) = lane_bytes_alltoall_pxn(&members, 0, &m, 2);
+        assert_eq!((li, lx), (8 + 16, 32));
+        // rank 1 (non-leader): same-node 8B + forwards its 16B cross rows
+        let (ni, nx) = lane_bytes_alltoall_pxn(&members, 1, &m, 2);
+        assert_eq!((ni, nx), (8 + 16, 0));
+        // inter byte total equals the plain hierarchical attribution
+        let pxn_inter: u64 =
+            (0..4).map(|p| lane_bytes_alltoall_pxn(&members, p, &m, 2).1).sum();
+        let hier_inter: u64 = (0..4)
+            .map(|p| {
+                let row: Vec<u64> = m[p].clone();
+                lane_bytes_alltoall(CollectiveStrategy::Hierarchical, &members, p, &row, 2, 4).1
+            })
+            .sum();
+        assert_eq!(pxn_inter, hier_inter);
+        // message counts: hierarchical 2 inter msgs per rank, PXN 1 per leader
+        assert_eq!(
+            lane_msgs_alltoall(CollectiveStrategy::Hierarchical, &members, 0, 2, 4),
+            (1, 2)
+        );
+        assert_eq!(
+            lane_msgs_alltoall(CollectiveStrategy::HierarchicalPxn, &members, 0, 2, 4),
+            (2, 1)
+        );
+        assert_eq!(
+            lane_msgs_alltoall(CollectiveStrategy::HierarchicalPxn, &members, 1, 2, 4),
+            (2, 0)
+        );
+        let pxn_inter_msgs: u64 = (0..4)
+            .map(|p| lane_msgs_alltoall(CollectiveStrategy::HierarchicalPxn, &members, p, 2, 4).1)
+            .sum();
+        let hier_inter_msgs: u64 = (0..4)
+            .map(|p| lane_msgs_alltoall(CollectiveStrategy::Hierarchical, &members, p, 2, 4).1)
+            .sum();
+        assert!(pxn_inter_msgs < hier_inter_msgs, "{pxn_inter_msgs} vs {hier_inter_msgs}");
+        // single-node job: flat convention
+        assert_eq!(lane_msgs_alltoall(CollectiveStrategy::Flat, &members, 0, 0, 4), (3, 0));
     }
 }

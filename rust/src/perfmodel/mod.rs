@@ -10,9 +10,12 @@ pub mod collective_cost;
 pub mod figures;
 pub mod flops;
 
-pub use batch_time::{batch_time, BatchTime, CommOpts, Scenario};
+pub use batch_time::{
+    batch_time, batch_time_overlapped, BatchTime, CommOpts, OverlappedBatchTime, Scenario,
+};
 pub use collective_cost::{
     allgather_phased, allgather_s, allreduce_phased, allreduce_s, alltoall_phased, alltoall_s,
-    lane_bytes_allgather, lane_bytes_allreduce, lane_bytes_alltoall, GroupShape, PhasedCost,
+    lane_bytes_allgather, lane_bytes_allreduce, lane_bytes_alltoall, lane_bytes_alltoall_pxn,
+    lane_msgs_alltoall, GroupShape, PhasedCost,
 };
 pub use flops::{flops_per_iter, flops_per_iter_checkpointed, percent_of_peak};

@@ -8,9 +8,15 @@
 //! byte counts, bit-reproducible results.
 //!
 //! The collective transport (`EngineOptions::strategy` +
-//! `EngineOptions::gpus_per_node`) selects between the flat and the
-//! hierarchical backend; [`TrainLog`] reports the per-lane
-//! (intra-node / inter-node) byte split alongside the totals.
+//! `EngineOptions::gpus_per_node`) selects among the flat, hierarchical,
+//! and leader-aggregated (PXN) backends; [`TrainLog`] reports the
+//! per-lane (intra-node / inter-node) byte and message split alongside
+//! the totals. When a cluster preset is selected
+//! (`EngineOptions::cluster`), every collective is priced with the α-β
+//! model and [`TrainLog::overlap_timeline`] records, per step, the
+//! serialized comm seconds against the critical-path comm seconds the
+//! nonblocking issue/wait schedule actually achieved (equal when
+//! `overlap` is off).
 
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
@@ -22,6 +28,25 @@ use crate::data::DataGen;
 use crate::engine::{StepStats, Trainer};
 use crate::runtime::Manifest;
 use crate::topology::Topology;
+
+/// One step's modeled comm schedule (rank 0's lanes): how long the step's
+/// collectives take fully serialized vs on the critical path the
+/// issue/wait schedule exposes. Zero without a cluster cost model.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OverlapStep {
+    /// Sum of every collective phase duration (no overlap).
+    pub serialized_s: f64,
+    /// Makespan of the two-lane schedule (`<= serialized_s`; equal when
+    /// `EngineOptions::overlap` is off).
+    pub critical_s: f64,
+}
+
+impl OverlapStep {
+    /// Seconds of comm hidden by the overlap schedule this step.
+    pub fn hidden_s(&self) -> f64 {
+        self.serialized_s - self.critical_s
+    }
+}
 
 /// Result of a simulated training run.
 #[derive(Debug, Clone)]
@@ -40,6 +65,16 @@ pub struct TrainLog {
     /// inter-node lane of `comm_bytes` (InfiniBand-side traffic); the flat
     /// transport charges its whole volume here on multi-node jobs
     pub comm_inter_bytes: [(CommKind, u64); 6],
+    /// inter-node message counts per kind (the α-term the PXN transport
+    /// shrinks on the all-to-all)
+    pub comm_inter_msgs: [(CommKind, u64); 6],
+    /// per-step modeled overlap timeline (rank 0; empty-cost zeros when no
+    /// `EngineOptions::cluster` preset prices the run)
+    pub overlap_timeline: Vec<OverlapStep>,
+    /// whole-run serialized comm seconds (rank 0's lane)
+    pub comm_serialized_s: f64,
+    /// whole-run critical-path comm seconds (rank 0's lane)
+    pub comm_critical_s: f64,
     /// peak activation-stash bytes over ranks (CAC memory cost)
     pub peak_stash_bytes: usize,
     /// peak optimizer up-cast temp bytes over ranks (Fig. 4 spike)
@@ -77,6 +112,9 @@ pub fn train(
     data: &dyn DataGen,
 ) -> Result<TrainLog> {
     let world = topo.world();
+    // error early on a transport/topology mismatch instead of letting the
+    // node partitioning produce a ragged layout mid-run
+    opts.validate_topology(world)?;
     let rez = Rendezvous::new(world);
     let t0 = Instant::now();
 
@@ -115,13 +153,16 @@ pub fn train(
     let mut comm_calls = [(CommKind::AllReduce, 0u64); 6];
     let mut comm_intra_bytes = [(CommKind::AllReduce, 0u64); 6];
     let mut comm_inter_bytes = [(CommKind::AllReduce, 0u64); 6];
+    let mut comm_inter_msgs = [(CommKind::AllReduce, 0u64); 6];
     for (i, kind) in crate::collectives::accounting::ALL_KINDS.iter().enumerate() {
         let t = rez.stats.total(*kind);
         comm_bytes[i] = (*kind, t.bytes);
         comm_calls[i] = (*kind, t.calls);
         comm_intra_bytes[i] = (*kind, t.intra_bytes);
         comm_inter_bytes[i] = (*kind, t.inter_bytes);
+        comm_inter_msgs[i] = (*kind, t.inter_msgs);
     }
+    let tl0 = rez.timeline.get(0);
 
     Ok(TrainLog {
         steps: out.steps,
@@ -131,6 +172,10 @@ pub fn train(
         comm_calls,
         comm_intra_bytes,
         comm_inter_bytes,
+        comm_inter_msgs,
+        overlap_timeline: out.overlap_steps,
+        comm_serialized_s: tl0.serialized_s,
+        comm_critical_s: tl0.clock_s,
         peak_stash_bytes: peak_stash,
         peak_opt_temp_bytes: peak_opt,
     })
@@ -139,6 +184,7 @@ pub fn train(
 struct RankOutput {
     steps: Vec<StepStats>,
     evals: Vec<(usize, f32)>,
+    overlap_steps: Vec<OverlapStep>,
     peak_stash_bytes: usize,
     peak_opt_temp_bytes: usize,
 }
@@ -159,12 +205,20 @@ fn rank_main(
     let dp_idx = trainer.groups.coords.dp_nonexp_idx;
     let mut steps = Vec::with_capacity(run.steps);
     let mut evals = Vec::new();
+    let mut overlap_steps = Vec::with_capacity(run.steps);
+    let mut tl_prev = trainer.comm.timeline();
 
     for step in 0..run.steps {
         let micro: Vec<_> = (0..run.micro_per_step)
             .map(|m| data.batch(step, m, dp_idx, dims.batch, dims.seq))
             .collect();
         let stats = trainer.train_step(&micro)?;
+        let tl_now = trainer.comm.timeline();
+        overlap_steps.push(OverlapStep {
+            serialized_s: tl_now.serialized_s - tl_prev.serialized_s,
+            critical_s: tl_now.clock_s - tl_prev.clock_s,
+        });
+        tl_prev = tl_now;
         if run.verbose && rank == 0 {
             println!(
                 "step {:>4}  loss {:.4}  aux {:.4}  gnorm {:.3}  lr {:.2e}{}",
@@ -205,6 +259,7 @@ fn rank_main(
     Ok(RankOutput {
         steps,
         evals,
+        overlap_steps,
         peak_stash_bytes: trainer.peak_stash_bytes,
         peak_opt_temp_bytes: a.max(b),
     })

@@ -1,0 +1,225 @@
+//! Property tests for the modeled overlap timeline.
+//!
+//! Over randomized collective schedules on every transport backend:
+//!
+//! * critical-path comm seconds <= serialized comm seconds, always;
+//! * with the blocking schedule (`--no-overlap`), the two are **exactly**
+//!   equal — the virtual clock advances op by op, so no phase can hide;
+//! * the nonblocking schedule never changes a result bit.
+
+use std::sync::Arc;
+
+use ted::collectives::{
+    ALL_STRATEGIES, CollectiveStrategy, Communicator, RankTimeline, Rendezvous,
+};
+use ted::config::ClusterConfig;
+use ted::topology::{GroupId, GroupKind};
+use ted::util::rng::Rng;
+use ted::util::tensor::Tensor;
+
+fn gid(i: usize) -> GroupId {
+    GroupId { kind: GroupKind::World, index: i }
+}
+
+const WORLD: usize = 8;
+const GPN: usize = 2;
+
+/// One randomized op in the shared schedule (identical on every rank).
+#[derive(Debug, Clone, Copy)]
+enum Op {
+    /// World all-reduce of `len` floats.
+    AllReduce(usize),
+    /// Node-local pair all-gather of `len` floats.
+    PairGather(usize),
+    /// World all-to-all, `len` floats per destination.
+    AllToAll(usize),
+}
+
+/// Derive a schedule from a seed; every rank builds the same one.
+fn schedule(seed: u64, n_ops: usize) -> Vec<Op> {
+    let mut rng = Rng::named(seed, "overlap-schedule");
+    (0..n_ops)
+        .map(|_| {
+            let len = 16 + rng.below(2048);
+            match rng.below(3) {
+                0 => Op::AllReduce(len),
+                1 => Op::PairGather(len),
+                _ => Op::AllToAll(len / 8 + 1),
+            }
+        })
+        .collect()
+}
+
+/// Execute the schedule on one rank; `overlap` switches consecutive op
+/// pairs onto the issue/wait path. Returns a digest of every result plus
+/// the rank's timeline.
+fn run_rank(
+    mut comm: Communicator,
+    rank: usize,
+    ops: &[Op],
+    overlap: bool,
+) -> (Vec<u32>, RankTimeline) {
+    comm.set_cost_model(ClusterConfig::summit());
+    let world_members: Vec<usize> = (0..WORLD).collect();
+    let pair = vec![rank - rank % 2, rank - rank % 2 + 1];
+    let pair_gid = gid(100 + rank / 2);
+    let mut digest: Vec<u32> = Vec::new();
+    let mut push = |digest: &mut Vec<u32>, vals: &[f32]| {
+        for v in vals {
+            digest.push(v.to_bits());
+        }
+    };
+
+    // execute in pairs so the nonblocking path genuinely has two ops in
+    // flight; a trailing odd op runs alone
+    let mut i = 0;
+    while i < ops.len() {
+        let chunk: Vec<Op> = ops[i..(i + 2).min(ops.len())].to_vec();
+        i += chunk.len();
+        if overlap {
+            // issue everything in the chunk, then wait in issue order
+            let mut pending = Vec::new();
+            for (j, op) in chunk.iter().enumerate() {
+                match *op {
+                    Op::AllReduce(len) => {
+                        let t = Tensor::from_vec(
+                            &[len], (0..len).map(|k| (rank + k + j) as f32).collect());
+                        let p = comm.issue_all_reduce(gid(0), &world_members, &t);
+                        pending.push((0usize, Some((p, t)), None, None));
+                    }
+                    Op::PairGather(len) => {
+                        let t = Tensor::from_vec(&[len], vec![rank as f32; len]);
+                        let p = comm.issue_all_gather(pair_gid, &pair, &t);
+                        pending.push((1usize, None, Some(p), None));
+                    }
+                    Op::AllToAll(len) => {
+                        let send: Vec<Vec<f32>> = (0..WORLD)
+                            .map(|d| vec![(rank * WORLD + d + j) as f32; len])
+                            .collect();
+                        let p = comm.issue_all_to_all(gid(0), &world_members, send);
+                        pending.push((2usize, None, None, Some(p)));
+                    }
+                }
+            }
+            for (tag, ar, ag, a2a) in pending {
+                match tag {
+                    0 => {
+                        let (p, mut t) = ar.unwrap();
+                        comm.wait_all_reduce(p, &mut t);
+                        push(&mut digest, t.data());
+                    }
+                    1 => {
+                        for part in comm.wait_all_gather(ag.unwrap()) {
+                            push(&mut digest, &part);
+                        }
+                    }
+                    _ => {
+                        for part in comm.wait_all_to_all(a2a.unwrap()) {
+                            push(&mut digest, &part);
+                        }
+                    }
+                }
+            }
+        } else {
+            for (j, op) in chunk.iter().enumerate() {
+                match *op {
+                    Op::AllReduce(len) => {
+                        let mut t = Tensor::from_vec(
+                            &[len], (0..len).map(|k| (rank + k + j) as f32).collect());
+                        comm.all_reduce(gid(0), &world_members, &mut t);
+                        push(&mut digest, t.data());
+                    }
+                    Op::PairGather(len) => {
+                        let t = Tensor::from_vec(&[len], vec![rank as f32; len]);
+                        for part in comm.all_gather(pair_gid, &pair, &t) {
+                            push(&mut digest, &part);
+                        }
+                    }
+                    Op::AllToAll(len) => {
+                        let send: Vec<Vec<f32>> = (0..WORLD)
+                            .map(|d| vec![(rank * WORLD + d + j) as f32; len])
+                            .collect();
+                        for part in comm.all_to_all(gid(0), &world_members, send) {
+                            push(&mut digest, &part);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (digest, comm.timeline())
+}
+
+fn run_world(
+    strategy: CollectiveStrategy,
+    ops: &[Op],
+    overlap: bool,
+) -> Vec<(Vec<u32>, RankTimeline)> {
+    let rez = Rendezvous::new(WORLD);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..WORLD)
+            .map(|r| {
+                let comm =
+                    Communicator::with_transport(Arc::clone(&rez), r, strategy, GPN);
+                let ops = ops.to_vec();
+                s.spawn(move || run_rank(comm, r, &ops, overlap))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[test]
+fn critical_path_le_serialized_with_equality_iff_blocking() {
+    for seed in 0..4u64 {
+        let ops = schedule(seed, 7);
+        for strategy in ALL_STRATEGIES {
+            let blocking = run_world(strategy, &ops, false);
+            let overlapped = run_world(strategy, &ops, true);
+            for r in 0..WORLD {
+                let (bd, bt) = &blocking[r];
+                let (od, ot) = &overlapped[r];
+                // bitwise result parity across schedules
+                assert_eq!(bd, od, "seed={seed} strategy={strategy:?} rank={r}");
+                // blocking: critical == serialized EXACTLY
+                assert!(bt.serialized_s > 0.0);
+                assert_eq!(
+                    bt.clock_s.to_bits(),
+                    bt.serialized_s.to_bits(),
+                    "blocking schedule must serialize exactly \
+                     (seed={seed} strategy={strategy:?} rank={r})"
+                );
+                // nonblocking: critical <= serialized, same serialized sum
+                assert_eq!(ot.serialized_s.to_bits(), bt.serialized_s.to_bits());
+                assert!(
+                    ot.clock_s <= ot.serialized_s,
+                    "critical {} > serialized {} (seed={seed} strategy={strategy:?} rank={r})",
+                    ot.clock_s,
+                    ot.serialized_s
+                );
+            }
+        }
+    }
+}
+
+/// A hand-built schedule with cross-fabric phases must show a strict win.
+#[test]
+fn overlap_strictly_hides_cross_fabric_time() {
+    // spanning all-reduce (intra+inter) twice: under the hierarchical
+    // backend the second op's intra phase hides behind the first's inter
+    let ops = [Op::AllReduce(4096), Op::AllReduce(4096)];
+    for strategy in [CollectiveStrategy::Hierarchical, CollectiveStrategy::HierarchicalPxn] {
+        let overlapped = run_world(strategy, &ops, true);
+        let (_, tl) = &overlapped[0];
+        assert!(
+            tl.clock_s < tl.serialized_s,
+            "strategy={strategy:?}: {} vs {}",
+            tl.clock_s,
+            tl.serialized_s
+        );
+    }
+    // flat: both ops ride one fabric, nothing can hide
+    let flat = run_world(CollectiveStrategy::Flat, &ops, true);
+    let (_, tl) = &flat[0];
+    assert_eq!(tl.clock_s.to_bits(), tl.serialized_s.to_bits());
+}

@@ -1,24 +1,28 @@
 //! Topology-parity test matrix for the collective transport layer.
 //!
 //! The tentpole invariant: switching the collective backend (flat vs
-//! hierarchical) or toggling DTD is a pure communication-schedule change —
-//! training results must be **bitwise identical**, while the hierarchical
-//! backend must report strictly fewer inter-node bytes on multi-node
-//! topologies.
+//! hierarchical vs leader-aggregated PXN), toggling DTD, or switching the
+//! blocking schedule to the nonblocking issue/wait schedule is a pure
+//! communication-schedule change — training results must be **bitwise
+//! identical**, while the hierarchical backends must report strictly
+//! fewer inter-node bytes on multi-node topologies and the PXN backend
+//! strictly fewer inter-node *messages* (the α-term) at unchanged
+//! inter-node bytes.
 //!
 //! Two layers of coverage:
 //!
 //! * a PJRT-free deterministic **toy MoE layer** driven through the real
-//!   router (`route_top1`), the real dispatch/return path (with DTD), and
-//!   the real collectives — runs on every build, over a grid of
-//!   (tp, ep, dp_exp) topologies x backend x DTD x node size;
+//!   router (`route_top1`), the real dispatch/return path (with DTD and
+//!   the pipelined overlap schedule), and the real collectives — runs on
+//!   every build, over a grid of (tp, ep, dp_exp) topologies x backend x
+//!   DTD x node size x {blocking, nonblocking};
 //! * the full engine (`sim::train`) when `make artifacts` has produced
 //!   the tiny variant — skips gracefully otherwise, like the rest of the
 //!   artifact-dependent suite.
 
 use std::sync::Arc;
 
-use ted::collectives::{CollectiveStrategy, CommKind, Communicator, Rendezvous};
+use ted::collectives::{CollectiveStrategy, CommKind, CommStats, Communicator, Rendezvous};
 use ted::config::ParallelConfig;
 use ted::moe::{dispatch, return_to_origin, route_top1, MoeComm};
 use ted::topology::Topology;
@@ -62,18 +66,21 @@ struct RankTrace {
     kept_counts: Vec<Vec<usize>>,
 }
 
-/// Run STEPS toy MoE "training steps" (route -> dispatch -> expert
-/// compute -> return -> combine -> dp loss reduce) on one topology and
-/// transport. Returns rank traces plus the total (intra, inter, total)
-/// all-to-all bytes.
-fn run_toy(
-    tp: usize,
-    ep: usize,
-    dp_exp: usize,
+/// One schedule/transport combination the toy run executes under.
+#[derive(Debug, Clone, Copy)]
+struct Combo {
     strategy: CollectiveStrategy,
     gpn: usize,
     dtd: bool,
-) -> (Vec<RankTrace>, (u64, u64, u64)) {
+    overlap: bool,
+}
+
+/// Run STEPS toy MoE "training steps" (route -> dispatch -> expert
+/// compute -> return -> combine -> dp loss reduce) on one topology and
+/// transport/schedule. Returns rank traces plus the all-ranks all-to-all
+/// stats (lanes + message counts).
+fn run_toy(tp: usize, ep: usize, dp_exp: usize, combo: Combo) -> (Vec<RankTrace>, CommStats) {
+    let Combo { strategy, gpn, dtd, overlap } = combo;
     let world = tp * ep * dp_exp;
     let topo = Topology::new(ParallelConfig::derive(world, tp, ep).unwrap()).unwrap();
     let rez = Rendezvous::new(world);
@@ -110,6 +117,7 @@ fn run_toy(
                                 tp_members: &g.tp_group,
                                 tp_pos,
                                 dtd,
+                                overlap,
                             };
                             dispatch(&mut ctx, &rows, &dec, local_experts, cap)
                         };
@@ -136,6 +144,7 @@ fn run_toy(
                                 tp_members: &g.tp_group,
                                 tp_pos,
                                 dtd,
+                                overlap,
                             };
                             return_to_origin(&mut ctx, &outs, &disp, &dec, local_experts, cap)
                         };
@@ -168,34 +177,43 @@ fn run_toy(
     });
 
     let a2a = rez.stats.total(CommKind::AllToAll);
-    (traces, (a2a.intra_bytes, a2a.inter_bytes, a2a.bytes))
+    (traces, a2a)
 }
 
-/// The backend/DTD combos every topology is checked under. `gpn = 2`
-/// makes EP groups span nodes at tp >= 2 (members stride by tp).
-fn combos() -> Vec<(CollectiveStrategy, usize, bool)> {
-    vec![
-        (CollectiveStrategy::Flat, 0, false),
-        (CollectiveStrategy::Flat, 0, true),
-        (CollectiveStrategy::Flat, 2, false),
-        (CollectiveStrategy::Hierarchical, 2, false),
-        (CollectiveStrategy::Hierarchical, 2, true),
-        (CollectiveStrategy::Hierarchical, 4, true),
-    ]
+/// The backend/DTD/schedule combos every topology is checked under.
+/// `gpn = 2` makes EP groups span nodes at tp >= 2 (members stride by tp).
+fn combos() -> Vec<Combo> {
+    let mut out = Vec::new();
+    for overlap in [false, true] {
+        out.push(Combo { strategy: CollectiveStrategy::Flat, gpn: 0, dtd: false, overlap });
+        out.push(Combo { strategy: CollectiveStrategy::Flat, gpn: 0, dtd: true, overlap });
+        out.push(Combo { strategy: CollectiveStrategy::Flat, gpn: 2, dtd: false, overlap });
+        for strategy in
+            [CollectiveStrategy::Hierarchical, CollectiveStrategy::HierarchicalPxn]
+        {
+            out.push(Combo { strategy, gpn: 2, dtd: false, overlap });
+            out.push(Combo { strategy, gpn: 2, dtd: true, overlap });
+            out.push(Combo { strategy, gpn: 4, dtd: true, overlap });
+        }
+    }
+    out
+}
+
+fn reference_combo() -> Combo {
+    Combo { strategy: CollectiveStrategy::Flat, gpn: 0, dtd: false, overlap: false }
 }
 
 #[test]
-fn parity_matrix_backends_and_dtd_bitwise_identical() {
+fn parity_matrix_backends_dtd_and_schedule_bitwise_identical() {
     // (tp, ep, dp_exp) grid; world = tp*ep*dp_exp
     let grid = [(1, 2, 1), (2, 2, 1), (1, 2, 2), (2, 2, 2), (1, 4, 1), (2, 4, 1)];
     for &(tp, ep, dp_exp) in &grid {
-        let (reference, _) = run_toy(tp, ep, dp_exp, CollectiveStrategy::Flat, 0, false);
-        for (strategy, gpn, dtd) in combos() {
-            let (got, _) = run_toy(tp, ep, dp_exp, strategy, gpn, dtd);
+        let (reference, _) = run_toy(tp, ep, dp_exp, reference_combo());
+        for combo in combos() {
+            let (got, _) = run_toy(tp, ep, dp_exp, combo);
             assert_eq!(
                 reference, got,
-                "trace diverged at tp={tp} ep={ep} dp_exp={dp_exp} \
-                 strategy={strategy:?} gpn={gpn} dtd={dtd}"
+                "trace diverged at tp={tp} ep={ep} dp_exp={dp_exp} {combo:?}"
             );
         }
     }
@@ -206,9 +224,9 @@ fn parity_matrix_tp_degree_is_a_noop() {
     // tp=1 vs tp=2 with identical (ep, dp_exp): same global batch, same
     // routing, same experts -> identical per-shard losses and counts
     for &(ep, dp_exp) in &[(2usize, 1usize), (2, 2), (4, 1)] {
-        let (base, _) = run_toy(1, ep, dp_exp, CollectiveStrategy::Flat, 0, false);
-        for (strategy, gpn, dtd) in combos() {
-            let (ted, _) = run_toy(2, ep, dp_exp, strategy, gpn, dtd);
+        let (base, _) = run_toy(1, ep, dp_exp, reference_combo());
+        for combo in combos() {
+            let (ted, _) = run_toy(2, ep, dp_exp, combo);
             // compare one representative per dp shard (TP planes agree by
             // the previous test)
             for t in &base {
@@ -216,52 +234,86 @@ fn parity_matrix_tp_degree_is_a_noop() {
                     .iter()
                     .find(|x| x.dpn == t.dpn)
                     .expect("dp shard missing");
-                assert_eq!(
-                    t, peer,
-                    "tp=1 vs tp=2 diverged at ep={ep} dp_exp={dp_exp} \
-                     strategy={strategy:?} gpn={gpn} dtd={dtd}"
-                );
+                assert_eq!(t, peer, "tp=1 vs tp=2 diverged at ep={ep} dp_exp={dp_exp} {combo:?}");
             }
         }
     }
 }
 
-/// The ISSUE's acceptance scenario: a simulated 2-node job (G=8, tp=2,
+/// The transport acceptance scenario: a simulated 2-node job (G=8, tp=2,
 /// ep=2, 4 GPUs per node). TED placement keeps the EP all-to-all inside a
-/// node; only the topology-aware backend can see (and report) that.
+/// node; only the topology-aware backends can see (and report) that.
 #[test]
 fn hierarchical_reports_strictly_fewer_inter_node_a2a_bytes() {
-    let (flat_trace, (f_intra, f_inter, f_total)) =
-        run_toy(2, 2, 2, CollectiveStrategy::Flat, 4, false);
-    let (hier_trace, (h_intra, h_inter, h_total)) =
-        run_toy(2, 2, 2, CollectiveStrategy::Hierarchical, 4, false);
+    let (flat_trace, f) = run_toy(
+        2, 2, 2,
+        Combo { strategy: CollectiveStrategy::Flat, gpn: 4, dtd: false, overlap: false },
+    );
+    let (hier_trace, h) = run_toy(
+        2, 2, 2,
+        Combo { strategy: CollectiveStrategy::Hierarchical, gpn: 4, dtd: false, overlap: false },
+    );
     // bitwise-identical results...
     assert_eq!(flat_trace, hier_trace);
     // ...same total volume...
-    assert_eq!(f_total, h_total);
-    assert!(f_total > 0);
+    assert_eq!(f.bytes, h.bytes);
+    assert!(f.bytes > 0);
     // ...but the flat backend charges everything to the bottleneck lane
-    assert_eq!(f_intra, 0);
-    assert_eq!(f_inter, f_total);
+    assert_eq!(f.intra_bytes, 0);
+    assert_eq!(f.inter_bytes, f.bytes);
     // while the hierarchical backend proves the EP a2a never leaves a node
     assert!(
-        h_inter < f_inter,
+        h.inter_bytes < f.inter_bytes,
         "hierarchical must report strictly fewer inter-node a2a bytes \
-         ({h_inter} vs {f_inter})"
+         ({} vs {})", h.inter_bytes, f.inter_bytes
     );
-    assert_eq!(h_inter, 0);
-    assert_eq!(h_intra, f_total);
+    assert_eq!(h.inter_bytes, 0);
+    assert_eq!(h.intra_bytes, f.bytes);
 
     // with 2-GPU nodes the EP groups genuinely span nodes: the inter lane
     // is nonzero but still strictly below the flat attribution
-    let (_, (s_intra, s_inter, s_total)) =
-        run_toy(2, 2, 2, CollectiveStrategy::Hierarchical, 2, true);
-    assert_eq!(s_intra + s_inter, s_total);
-    assert!(s_inter > 0);
-    let (_, (_, flat2_inter, flat2_total)) =
-        run_toy(2, 2, 2, CollectiveStrategy::Flat, 2, true);
-    assert_eq!(flat2_inter, flat2_total);
-    assert!(s_inter <= flat2_inter);
+    let (_, s) = run_toy(
+        2, 2, 2,
+        Combo { strategy: CollectiveStrategy::Hierarchical, gpn: 2, dtd: true, overlap: false },
+    );
+    assert_eq!(s.intra_bytes + s.inter_bytes, s.bytes);
+    assert!(s.inter_bytes > 0);
+    let (_, flat2) = run_toy(
+        2, 2, 2,
+        Combo { strategy: CollectiveStrategy::Flat, gpn: 2, dtd: true, overlap: false },
+    );
+    assert_eq!(flat2.inter_bytes, flat2.bytes);
+    assert!(s.inter_bytes <= flat2.inter_bytes);
+}
+
+/// The PXN acceptance scenario: tp=2, ep=4 on one 8-rank job over two
+/// 4-GPU nodes — each EP group has 2 members per node, so the leader can
+/// batch. Leader aggregation must strictly cut the inter-node all-to-all
+/// message count (α-term) at exactly equal inter-node bytes, with
+/// bitwise-identical training results.
+#[test]
+fn pxn_cuts_inter_node_messages_at_equal_bytes() {
+    let hier =
+        Combo { strategy: CollectiveStrategy::Hierarchical, gpn: 4, dtd: false, overlap: false };
+    let pxn =
+        Combo { strategy: CollectiveStrategy::HierarchicalPxn, gpn: 4, dtd: false, overlap: false };
+    let (h_trace, h) = run_toy(2, 4, 1, hier);
+    let (p_trace, p) = run_toy(2, 4, 1, pxn);
+    assert_eq!(h_trace, p_trace, "PXN must not change a single bit");
+    assert!(h.inter_bytes > 0, "EP groups must span nodes in this scenario");
+    assert_eq!(p.inter_bytes, h.inter_bytes, "leader batching moves the same bytes");
+    assert!(
+        p.inter_msgs < h.inter_msgs,
+        "PXN must send strictly fewer inter-node messages ({} vs {})",
+        p.inter_msgs, h.inter_msgs
+    );
+    // the leader hops are visible as extra intra-node volume
+    assert!(p.intra_bytes > h.intra_bytes);
+    // and the nonblocking schedule preserves all of it
+    let (p2_trace, p2) = run_toy(2, 4, 1, Combo { overlap: true, ..pxn });
+    assert_eq!(h_trace, p2_trace);
+    assert_eq!(p2.inter_msgs, p.inter_msgs);
+    assert_eq!(p2.inter_bytes, p.inter_bytes);
 }
 
 // ---------------------------------------------------------------------
@@ -313,13 +365,19 @@ mod engine_parity {
     }
 
     #[test]
-    fn trainlog_bitwise_identical_across_backends_and_dtd() {
+    fn trainlog_bitwise_identical_across_backends_dtd_and_schedule() {
         let Some(reference) = run(EngineOptions::default()) else { return };
         let combos = [
             EngineOptions { dtd: false, ..EngineOptions::default() },
+            EngineOptions { overlap: false, ..EngineOptions::default() },
             EngineOptions::default().with_transport(CollectiveStrategy::Hierarchical, 2),
+            EngineOptions { overlap: false, ..EngineOptions::default() }
+                .with_transport(CollectiveStrategy::Hierarchical, 2),
             EngineOptions { dtd: false, ..EngineOptions::default() }
                 .with_transport(CollectiveStrategy::Hierarchical, 2),
+            EngineOptions::default().with_transport(CollectiveStrategy::HierarchicalPxn, 2),
+            EngineOptions { overlap: false, ..EngineOptions::default() }
+                .with_transport(CollectiveStrategy::HierarchicalPxn, 2),
         ];
         for (i, opts) in combos.into_iter().enumerate() {
             let log = run(opts).unwrap();
@@ -352,5 +410,39 @@ mod engine_parity {
         assert_eq!(f_total, h_total, "transport must not change total a2a volume");
         assert_eq!(f_inter, f_total, "flat charges the bottleneck lane");
         assert!(h_inter < f_inter, "hierarchical must shrink the inter lane");
+        // PXN: fewer inter messages than hierarchical at equal inter bytes
+        let pxn = run(
+            EngineOptions::default().with_transport(CollectiveStrategy::HierarchicalPxn, 2),
+        )
+        .unwrap();
+        let p_inter = lane(&pxn.comm_inter_bytes, CommKind::AllToAll);
+        assert_eq!(p_inter, h_inter);
+        let h_msgs = lane(&hier.comm_inter_msgs, CommKind::AllToAll);
+        let p_msgs = lane(&pxn.comm_inter_msgs, CommKind::AllToAll);
+        assert!(p_msgs < h_msgs, "PXN must cut the a2a α-term ({p_msgs} vs {h_msgs})");
+    }
+
+    #[test]
+    fn trainlog_overlap_timeline_with_cluster_preset() {
+        use ted::config::ClusterPreset;
+        let opts = EngineOptions::default()
+            .with_transport(CollectiveStrategy::Hierarchical, 2)
+            .with_cluster(ClusterPreset::Summit);
+        // with_cluster keeps the explicit gpn=2 (it divides world=4)
+        let Some(log) = run(opts) else { return };
+        assert_eq!(log.overlap_timeline.len(), log.steps.len());
+        assert!(log.comm_serialized_s > 0.0);
+        assert!(log.comm_critical_s <= log.comm_serialized_s);
+        for st in &log.overlap_timeline {
+            assert!(st.critical_s <= st.serialized_s + 1e-12);
+            assert!(st.serialized_s > 0.0);
+        }
+        // blocking schedule: the timeline collapses to serialized
+        let blocking = run(EngineOptions { overlap: false, ..opts }).unwrap();
+        assert!(
+            (blocking.comm_critical_s - blocking.comm_serialized_s).abs()
+                < 1e-9 * blocking.comm_serialized_s.max(1.0),
+            "--no-overlap must serialize the timeline"
+        );
     }
 }
