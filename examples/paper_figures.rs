@@ -3,6 +3,13 @@
 //!
 //!     cargo run --release --example paper_figures            # everything
 //!     cargo run --release --example paper_figures -- --only fig5
+//!     cargo run --release --example paper_figures -- --overlap-eff 0.42
+//!
+//! `--overlap-eff E` additionally prints the Fig. 5/8/10/11 sweeps under
+//! the compute-aware overlap model (hierarchical transport, comm priced
+//! on the critical path with the calibrated knob). Calibrate E from a
+//! measured run: `ted train --cluster <preset>` reports the fitted
+//! `overlap_efficiency` of its three-lane timeline.
 //!
 //! Fig. 7 (loss parity) is a *measured* experiment — run
 //! `cargo run --release --example convergence_parity` for it.
@@ -18,10 +25,18 @@ fn want(only: &Option<String>, id: &str) -> bool {
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env(&[])?;
-    args.reject_unknown(&["only", "cluster"])?;
+    args.reject_unknown(&["only", "cluster", "overlap-eff"])?;
     let only = args.get("only").map(|s| s.to_string());
     let cluster = ClusterConfig::by_name(args.get_or("cluster", "summit"))
         .ok_or_else(|| anyhow::anyhow!("unknown cluster (summit|thetagpu|perlmutter)"))?;
+    let overlap_eff = match args.get("overlap-eff") {
+        None => None,
+        Some(_) => {
+            let e = args.get_f64("overlap-eff", 0.0)?;
+            anyhow::ensure!((0.0..=1.0).contains(&e), "--overlap-eff must be in [0, 1]");
+            Some(e)
+        }
+    };
 
     if want(&only, "table1") {
         println!("== Table 1: base-model architectures ==");
@@ -62,6 +77,22 @@ fn main() -> anyhow::Result<()> {
         let a2a_cut = 100.0 * (1.0 - rows[2].t.alltoall_s / rows[0].t.alltoall_s);
         let ar_cut = 100.0 * (1.0 - rows[2].t.allreduce_s / rows[0].t.allreduce_s);
         println!("reductions vs baseline: a2a {a2a_cut:.1}% (paper 64.12%), all-reduce {ar_cut:.1}% (paper 33%)\n");
+        if let Some(eff) = overlap_eff {
+            println!("-- overlapped (hierarchical transport, overlap_efficiency {eff:.2}) --");
+            println!("{:<10} {:>9} {:>11} {:>11} {:>9} {:>9}", "config", "compute", "comm(serl)", "comm(crit)", "hidden", "total");
+            for r in F::fig5_overlapped(&cluster, 128, 1024, eff) {
+                println!(
+                    "{:<10} {:>8.2}s {:>10.2}s {:>10.2}s {:>8.1}% {:>8.2}s",
+                    r.label,
+                    r.t.base.compute_s,
+                    r.t.serialized_comm_s,
+                    r.t.critical_comm_s,
+                    100.0 * r.t.overlap_win(),
+                    r.t.total()
+                );
+            }
+            println!();
+        }
     }
 
     if want(&only, "fig8") {
@@ -75,12 +106,24 @@ fn main() -> anyhow::Result<()> {
                     p.gpus, p.experts, p.tp, p.baseline_s, p.optimized_s, p.speedup_pct()
                 );
             }
+            if let Some(eff) = overlap_eff {
+                println!("   overlapped (hierarchical, eff {eff:.2}):");
+                for p in F::fig8_overlapped(name, &cluster, &[32, 64, 128, 256], batch, eff) {
+                    println!(
+                        "{:>6} {:>8} {:>4} {:>12.2} {:>12.2} {:>8.1}%",
+                        p.gpus, p.experts, p.tp, p.baseline_s, p.optimized_s, p.speedup_pct()
+                    );
+                }
+            }
         }
         println!();
     }
 
     if want(&only, "fig9") {
-        println!("== Fig. 9: largest supported MoE, TED vs DeepSpeed-MoE (Summit, tp<=6) ==");
+        println!(
+            "== Fig. 9: largest supported MoE, TED vs DeepSpeed-MoE ({}, tp<={}) ==",
+            cluster.name, cluster.gpus_per_node
+        );
         println!("{:>6} {:>12} {:<18} {:>12} {:<18} {:>6}", "gpus", "TED (B)", "config", "DS-MoE (B)", "config", "ratio");
         for r in F::fig9(&cluster, &[32, 64, 128, 256, 512]) {
             println!(
@@ -105,6 +148,15 @@ fn main() -> anyhow::Result<()> {
                 p.gpus, p.tp, p.baseline_s, p.optimized_s, p.speedup_pct()
             );
         }
+        if let Some(eff) = overlap_eff {
+            println!("   overlapped (hierarchical, eff {eff:.2}):");
+            for p in F::fig10_overlapped("6.7B", &cluster, &[32, 64, 128, 256], 4, 1024, eff) {
+                println!(
+                    "{:>6} {:>4} {:>12.2} {:>12.2} {:>8.1}%",
+                    p.gpus, p.tp, p.baseline_s, p.optimized_s, p.speedup_pct()
+                );
+            }
+        }
         println!();
     }
 
@@ -125,6 +177,21 @@ fn main() -> anyhow::Result<()> {
                 100.0 * (1.0 - r.optimized_s / r.baseline_s),
                 r.pct_peak
             );
+        }
+        if let Some(eff) = overlap_eff {
+            println!("   overlapped (hierarchical, eff {eff:.2}):");
+            for r in F::fig11_table2_overlapped(&cluster, eff) {
+                println!(
+                    "{:>6} {:<8} {:>4} {:>12.2} {:>12.2} {:>8.1}% {:>9.1}%",
+                    r.gpus,
+                    r.model_name,
+                    r.tp,
+                    r.baseline_s,
+                    r.optimized_s,
+                    100.0 * (1.0 - r.optimized_s / r.baseline_s),
+                    r.pct_peak
+                );
+            }
         }
         println!("(paper Table 2: 36.7 / 30.0 / 26.2 / 11.7 % of peak)\n");
     }

@@ -28,6 +28,14 @@ fn bench_figures() {
     bench::run("figures/fig11_table2", 1, 5, || {
         std::hint::black_box(F::fig11_table2(&c));
     });
+    // the compute-aware overlapped sweeps price the same scenarios through
+    // batch_time_overlapped; keep their cost visible next to the serialized
+    bench::run("figures/fig10_overlapped", 1, 5, || {
+        std::hint::black_box(F::fig10_overlapped("6.7B", &c, &[32, 64, 128, 256], 4, 1024, 0.5));
+    });
+    bench::run("figures/fig5_overlapped", 1, 20, || {
+        std::hint::black_box(F::fig5_overlapped(&c, 128, 1024, 0.5));
+    });
 }
 
 fn bench_blocks() {

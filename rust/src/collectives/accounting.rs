@@ -39,13 +39,22 @@
 //! halving hold on any backend; PXN adds the leader forwarding hops to
 //! the intra lane while keeping the inter lane byte total unchanged.
 //!
-//! The [`TimelineBoard`] models a per-rank two-lane (NVLink / IB) virtual
-//! clock: every priced collective schedules its intra and inter phases on
-//! the lanes, blocking ops advance the clock to their finish, nonblocking
-//! ops advance it only at `wait`. `serialized_s` sums every phase
-//! duration; `clock_s` is the critical path the issue/wait schedule
-//! actually exposes — `clock_s <= serialized_s` always, with equality
-//! exactly when every op is blocking (`--no-overlap`).
+//! The [`TimelineBoard`] models a per-rank **three-lane** (compute /
+//! NVLink / IB) virtual clock: every priced collective schedules its
+//! intra and inter phases on the comm lanes, blocking ops advance the
+//! clock to their finish, nonblocking ops advance it only at `wait`, and
+//! [`TimelineBoard::advance_compute`] occupies the compute lane — the
+//! rank's own execution stream — for a priced block duration. Compute is
+//! synchronous on its rank (it starts at the current clock and blocks the
+//! clock for its duration), but comm ops issued *before* it keep
+//! progressing on their lanes meanwhile, so an issue → compute → wait
+//! window measures exactly how much of a collective hides behind compute
+//! (the MoNTA-style expert-FFN / all-to-all overlap). `serialized_s` sums
+//! every comm phase (split per lane into `intra_serialized_s` /
+//! `inter_serialized_s`), `compute_s` sums the compute lane, and
+//! `clock_s` is the critical path the schedule actually exposes —
+//! `clock_s <= serialized_s + compute_s` always, with equality exactly
+//! when every op is blocking (`--no-overlap`).
 
 use std::sync::Mutex;
 
@@ -213,21 +222,30 @@ impl StatsBoard {
 // modeled overlap timeline
 // ---------------------------------------------------------------------
 
-/// One rank's modeled communication timeline (virtual seconds).
+/// One rank's modeled compute + communication timeline (virtual seconds).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct RankTimeline {
-    /// Virtual clock: completion time of the last awaited/blocking op.
+    /// Virtual clock: completion time of the last awaited/blocking op or
+    /// compute block.
     pub clock_s: f64,
     /// NVLink lane occupied until this virtual time.
     pub intra_busy_s: f64,
     /// InfiniBand lane occupied until this virtual time.
     pub inter_busy_s: f64,
-    /// Sum of every phase duration — the no-overlap (serialized) cost.
+    /// Sum of every comm phase duration — the no-overlap (serialized)
+    /// comm cost (always `intra_serialized_s + inter_serialized_s`).
     pub serialized_s: f64,
+    /// NVLink-lane share of `serialized_s`.
+    pub intra_serialized_s: f64,
+    /// InfiniBand-lane share of `serialized_s`.
+    pub inter_serialized_s: f64,
+    /// Total priced compute seconds on the compute lane.
+    pub compute_s: f64,
 }
 
-/// Per-rank two-lane virtual scheduler. Ops are priced by the communicator
-/// (α-β model) and scheduled here; the board never blocks a real thread —
+/// Per-rank three-lane (compute / NVLink / IB) virtual scheduler. Ops are
+/// priced by the communicator (α-β model for comm, flop pricing for
+/// compute) and scheduled here; the board never blocks a real thread —
 /// it only accounts virtual time.
 #[derive(Debug)]
 pub struct TimelineBoard {
@@ -276,14 +294,34 @@ impl TimelineBoard {
             tl.intra_busy_s = t;
         }
         // accumulate phase by phase, mirroring the clock's additions, so a
-        // purely blocking schedule keeps clock_s == serialized_s *bitwise*
+        // purely blocking comm schedule keeps clock_s == serialized_s
+        // *bitwise*; the per-lane sums split the same additions by fabric
         tl.serialized_s += intra_s;
         tl.serialized_s += inter_s;
         tl.serialized_s += intra_post_s;
+        tl.intra_serialized_s += intra_s;
+        tl.inter_serialized_s += inter_s;
+        tl.intra_serialized_s += intra_post_s;
         if blocking {
             tl.clock_s = t;
         }
         (intra_finish, t)
+    }
+
+    /// Occupy the rank's compute lane for `seconds` of priced block time.
+    /// Compute is synchronous on its rank: it starts at the current clock
+    /// and blocks the clock for its duration (the lane never overlaps
+    /// itself), while comm ops already issued keep progressing on their
+    /// own lanes — a following `complete` only advances the clock to the
+    /// op's finish if the compute did not already run past it.
+    pub fn advance_compute(&self, rank: usize, seconds: f64) {
+        if seconds <= 0.0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let tl = &mut g[rank];
+        tl.clock_s += seconds;
+        tl.compute_s += seconds;
     }
 
     /// Advance the rank's clock to a previously scheduled finish time
@@ -399,9 +437,60 @@ mod tests {
     }
 
     #[test]
+    fn timeline_lane_serialized_sums_split_by_fabric() {
+        let t = TimelineBoard::new(1);
+        t.schedule(0, 2.0, 3.0, 1.5, true);
+        t.schedule(0, 0.5, 0.0, 0.0, true);
+        let tl = t.get(0);
+        assert_eq!(tl.intra_serialized_s, 2.0 + 1.5 + 0.5);
+        assert_eq!(tl.inter_serialized_s, 3.0);
+        assert_eq!(tl.serialized_s, tl.intra_serialized_s + tl.inter_serialized_s);
+    }
+
+    #[test]
+    fn compute_lane_hides_inflight_comm() {
+        let t = TimelineBoard::new(1);
+        // issue a 5s inter-node op nonblocking, run 3s of compute while it
+        // is on the wire, then wait: the compute hides 3 of the 5 seconds
+        let (_, f) = t.schedule(0, 0.0, 5.0, 0.0, false);
+        t.advance_compute(0, 3.0);
+        t.complete(0, f);
+        let tl = t.get(0);
+        assert_eq!(tl.clock_s, 5.0);
+        assert_eq!(tl.serialized_s, 5.0);
+        assert_eq!(tl.compute_s, 3.0);
+        // hidden comm = serialized + compute - clock
+        assert_eq!(tl.serialized_s + tl.compute_s - tl.clock_s, 3.0);
+        // compute longer than the op: the comm hides entirely
+        let t2 = TimelineBoard::new(1);
+        let (_, f2) = t2.schedule(0, 0.0, 5.0, 0.0, false);
+        t2.advance_compute(0, 8.0);
+        t2.complete(0, f2);
+        let tl2 = t2.get(0);
+        assert_eq!(tl2.clock_s, 8.0);
+        assert_eq!(tl2.serialized_s + tl2.compute_s - tl2.clock_s, 5.0);
+    }
+
+    #[test]
+    fn compute_blocks_its_own_rank() {
+        // compute after a blocking op serializes: nothing hides
+        let t = TimelineBoard::new(1);
+        t.schedule(0, 2.0, 3.0, 0.0, true);
+        t.advance_compute(0, 4.0);
+        let tl = t.get(0);
+        assert_eq!(tl.clock_s, 9.0);
+        assert_eq!(tl.clock_s, tl.serialized_s + tl.compute_s);
+        // zero/negative advances are ignored
+        t.advance_compute(0, 0.0);
+        t.advance_compute(0, -1.0);
+        assert_eq!(t.get(0), tl);
+    }
+
+    #[test]
     fn timeline_reset() {
         let t = TimelineBoard::new(2);
         t.schedule(1, 1.0, 1.0, 0.0, true);
+        t.advance_compute(1, 2.0);
         t.reset();
         assert_eq!(t.get(1), RankTimeline::default());
     }

@@ -47,10 +47,13 @@
 //!
 //! When a cost model is attached ([`Communicator::set_cost_model`]),
 //! every op is priced with the α-β `perfmodel` phased costs and scheduled
-//! on the rank's two-lane [`TimelineBoard`]: blocking ops advance the
-//! rank's virtual clock to their finish, issued ops advance it only at
-//! `wait` — so the board measures the critical-path comm seconds the
-//! issue/wait schedule actually exposes, against the serialized sum.
+//! on the rank's three-lane (compute / NVLink / IB) [`TimelineBoard`]:
+//! blocking ops advance the rank's virtual clock to their finish, issued
+//! ops advance it only at `wait`, and the engine prices its block compute
+//! onto the compute lane via [`Communicator::advance_compute`] — so the
+//! board measures the critical-path seconds the issue/wait schedule
+//! actually exposes, against the serialized comm + compute sum, including
+//! which collectives hide behind compute.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -349,9 +352,18 @@ impl Communicator {
         self.cost = Some(cluster);
     }
 
-    /// This rank's modeled comm timeline (zeros without a cost model).
+    /// This rank's modeled timeline (zeros without a cost model).
     pub fn timeline(&self) -> crate::collectives::accounting::RankTimeline {
         self.rez.timeline.get(self.rank)
+    }
+
+    /// Occupy this rank's compute lane for `seconds` of priced block
+    /// time. Collectives issued before the compute keep progressing on
+    /// their comm lanes, so the wait that follows measures how much of
+    /// the op hid behind the compute (MoNTA-style overlap). The caller
+    /// prices the seconds (e.g. block flops / achievable flop rate).
+    pub fn advance_compute(&mut self, seconds: f64) {
+        self.rez.timeline.advance_compute(self.rank, seconds);
     }
 
     fn next_seq(&mut self, gid: GroupId) -> u64 {

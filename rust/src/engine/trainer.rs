@@ -11,21 +11,40 @@
 //! With `EngineOptions::overlap` on, the independent comm pairs run on
 //! the nonblocking issue/wait schedule: the expert gradient all-reduce is
 //! issued first and the non-expert one rides alongside it (their groups
-//! are disjoint fabrics under the hierarchical transports), and the two
-//! ZeRO-1 parameter all-gathers are likewise in flight together. Results
-//! are bitwise identical to the blocking schedule — the parity matrix
-//! enforces it — only the modeled overlap timeline changes.
+//! are disjoint fabrics under the hierarchical transports), the two
+//! ZeRO-1 parameter all-gathers are likewise in flight together, and the
+//! per-expert TP all-reduces pipeline behind the next expert's FFN — each
+//! expert's reduction is issued nonblocking and waited only after the
+//! following expert's shard has been computed (MoNTA-style compute/comm
+//! overlap). Results are bitwise identical to the blocking schedule — the
+//! parity matrix enforces it — only the modeled overlap timeline changes.
+//!
+//! When a cluster preset prices the run (`EngineOptions::cluster`), every
+//! executed block additionally advances the timeline's **compute lane**
+//! by its modeled duration (per-block flops from `perfmodel::flops`
+//! divided by the preset's achievable flop rate; TP-sharded blocks carry
+//! `1/tp` of the block cost), so the measured timeline shows which
+//! collectives actually hide behind compute and which serialize. The
+//! lane prices the schedule this engine *executes*: with CAC on the
+//! stash keeps full activations and no re-forward runs (3 pass-units per
+//! layer block instead of the analytic model's uniform 4; the head is
+//! fwd + bwd in both) — so the measured compute lane is the executed
+//! budget, while `perfmodel::batch_time` prices the paper's checkpointed
+//! budget; the fitted `overlap_efficiency` is a ratio of the measured
+//! schedule and transfers to the analytic sweeps as a calibration, not
+//! an identity.
 
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
-use crate::collectives::{Communicator, Rendezvous};
+use crate::collectives::{Communicator, PendingAllReduce, Rendezvous};
 use crate::config::{EngineOptions, TrainingConfig};
 use crate::engine::blocks;
 use crate::engine::params::{init_params, is_moe_layer, ParamStore};
 use crate::engine::stash::{combine, combine_bwd, DenseParts, LayerParts, LayerStash, MoeParts};
 use crate::moe::{dispatch, return_to_origin, route_top1, MoeComm};
 use crate::optimizer::{AdamwStep, TilingOpts, Zero1Optimizer};
+use crate::perfmodel::flops::{attn_fwd_flops, ffn_fwd_flops, head_fwd_flops};
 use crate::runtime::{Manifest, Runtime};
 use crate::topology::{RankGroups, Topology};
 use crate::util::tensor::{IntTensor, Tensor};
@@ -77,6 +96,10 @@ pub struct Trainer {
     ep_pos: usize,
     tp_pos: usize,
     step_count: usize,
+    /// Achievable flops/s of one GPU under the pricing cluster preset
+    /// (None without a preset: the compute lane stays unpriced, like the
+    /// comm lanes).
+    flops_rate: Option<f64>,
     /// peak activation-stash bytes across microbatches (CAC memory cost)
     pub peak_stash_bytes: usize,
 }
@@ -107,10 +130,14 @@ impl Trainer {
         }
         let groups = topo.groups(rank);
         let mut comm = Communicator::with_transport(rez, rank, opts.strategy, opts.gpus_per_node);
+        let mut flops_rate = None;
         if let Some(preset) = opts.cluster {
-            // price every collective with the preset's α-β model so the
-            // TrainLog can report the measured overlap timeline
-            comm.set_cost_model(preset.config());
+            // price every collective with the preset's α-β model (and
+            // every block with its flop rate) so the TrainLog can report
+            // the measured three-lane overlap timeline
+            let cluster = preset.config();
+            flops_rate = Some(cluster.peak_half_tflops * 1e12 * cluster.flops_efficiency);
+            comm.set_cost_model(cluster);
         }
         let mut rt = Runtime::new()?;
         rt.load_all(&manifest, "")?;
@@ -155,6 +182,7 @@ impl Trainer {
             ep_pos,
             tp_pos,
             step_count: 0,
+            flops_rate,
             peak_stash_bytes: 0,
         })
     }
@@ -173,6 +201,44 @@ impl Trainer {
     }
 
     // ---------------------------------------------------------------
+    // compute pricing (the timeline's compute lane)
+    // ---------------------------------------------------------------
+
+    /// Advance this rank's compute lane by the modeled duration of
+    /// `flops` floating-point operations (no-op without a cluster preset).
+    fn price_compute(&mut self, flops: f64) {
+        if let Some(rate) = self.flops_rate {
+            self.comm.advance_compute(flops / rate);
+        }
+    }
+
+    /// This rank's flops for one attention-shard pass over the local
+    /// batch (`passes`: 1.0 forward, 2.0 backward).
+    fn attn_shard_flops(&self, passes: f64) -> f64 {
+        let d = &self.manifest.dims;
+        passes * attn_fwd_flops(d.d_model, d.seq, d.tokens()) / self.groups.tp_group.len() as f64
+    }
+
+    /// This rank's flops for one dense-FFN-shard pass.
+    fn ffn_shard_flops(&self, passes: f64) -> f64 {
+        let d = &self.manifest.dims;
+        passes * ffn_fwd_flops(d.d_model, d.d_ff, d.tokens()) / self.groups.tp_group.len() as f64
+    }
+
+    /// This rank's flops for one expert-FFN-shard pass over one capacity
+    /// buffer.
+    fn expert_shard_flops(&self, passes: f64) -> f64 {
+        let d = &self.manifest.dims;
+        passes * ffn_fwd_flops(d.d_model, d.d_ff, d.capacity) / self.groups.tp_group.len() as f64
+    }
+
+    /// This rank's flops for one LM-head pass (replicated, not sharded).
+    fn head_flops(&self, passes: f64) -> f64 {
+        let d = &self.manifest.dims;
+        passes * head_fwd_flops(d.d_model, d.vocab, d.tokens())
+    }
+
+    // ---------------------------------------------------------------
     // forward
     // ---------------------------------------------------------------
 
@@ -181,12 +247,14 @@ impl Trainer {
     fn layer_forward(&mut self, i: usize, x: &Tensor) -> Result<(Tensor, LayerStash)> {
         // attention shard + TP all-reduce + residual
         let mut ar = blocks::attn_fwd(&mut self.rt, &self.store, i, x)?;
+        self.price_compute(self.attn_shard_flops(1.0));
         self.tp_allreduce(&mut ar);
         let mut y1 = x.clone();
         y1.add_assign(&ar);
 
         if !is_moe_layer(i) {
             let mut ar2 = blocks::ffn_fwd(&mut self.rt, &self.store, i, &y1)?;
+            self.price_compute(self.ffn_shard_flops(1.0));
             self.tp_allreduce(&mut ar2);
             let mut y2 = y1.clone();
             y2.add_assign(&ar2);
@@ -226,10 +294,40 @@ impl Trainer {
             dispatch(&mut ctx, &xn, &dec, local, cap)
         };
         let mut expert_out = Vec::with_capacity(local);
-        for (le, &e) in self.local_expert_ids.clone().iter().enumerate() {
-            let mut part = blocks::expert_fwd(&mut self.rt, &self.store, i, e, &disp.buffers[le])?;
-            self.tp_allreduce(&mut part);
-            expert_out.push(part);
+        if self.opts.overlap {
+            // MoNTA-style compute/comm pipelining: each expert's TP
+            // all-reduce is issued nonblocking and waited only after the
+            // *next* expert's FFN shard has been computed, so the
+            // reduction rides NVLink behind the compute lane
+            // (bitwise-identical: reductions are schedule-invariant)
+            let mut pending: Option<(PendingAllReduce, Tensor)> = None;
+            for (le, &e) in self.local_expert_ids.clone().iter().enumerate() {
+                let part =
+                    blocks::expert_fwd(&mut self.rt, &self.store, i, e, &disp.buffers[le])?;
+                self.price_compute(self.expert_shard_flops(1.0));
+                let p = self.comm.issue_all_reduce(
+                    self.groups.tp_group_id,
+                    &self.groups.tp_group,
+                    &part,
+                );
+                if let Some((prev, mut done)) = pending.take() {
+                    self.comm.wait_all_reduce(prev, &mut done);
+                    expert_out.push(done);
+                }
+                pending = Some((p, part));
+            }
+            if let Some((prev, mut done)) = pending.take() {
+                self.comm.wait_all_reduce(prev, &mut done);
+                expert_out.push(done);
+            }
+        } else {
+            for (le, &e) in self.local_expert_ids.clone().iter().enumerate() {
+                let mut part =
+                    blocks::expert_fwd(&mut self.rt, &self.store, i, e, &disp.buffers[le])?;
+                self.price_compute(self.expert_shard_flops(1.0));
+                self.tp_allreduce(&mut part);
+                expert_out.push(part);
+            }
         }
         let rows = {
             let mut ctx = MoeComm {
@@ -273,6 +371,7 @@ impl Trainer {
         let dy1 = match parts {
             LayerParts::Dense(DenseParts { y1 }) => {
                 let (grads, mut dxp) = blocks::ffn_bwd(&mut self.rt, &self.store, i, &y1, dy2)?;
+                self.price_compute(self.ffn_shard_flops(2.0));
                 for (n, g) in grads {
                     self.store.accum_grad(&n, &g);
                 }
@@ -304,20 +403,56 @@ impl Trainer {
                     dispatch(&mut ctx, &drows, &dec, local, cap)
                 };
                 let mut dxe_full = Vec::with_capacity(local);
-                for (le, &e) in self.local_expert_ids.clone().iter().enumerate() {
-                    let (grads, mut dxe) = blocks::expert_bwd(
-                        &mut self.rt,
-                        &self.store,
-                        i,
-                        e,
-                        &disp.buffers[le],
-                        &disp_b.buffers[le],
-                    )?;
-                    for (n, g) in grads {
-                        self.store.accum_grad(&n, &g);
+                if self.opts.overlap {
+                    // same compute/comm pipeline as the forward pass: the
+                    // next expert's backward shard hides the previous
+                    // expert's dxe all-reduce
+                    let mut pending: Option<(PendingAllReduce, Tensor)> = None;
+                    for (le, &e) in self.local_expert_ids.clone().iter().enumerate() {
+                        let (grads, dxe) = blocks::expert_bwd(
+                            &mut self.rt,
+                            &self.store,
+                            i,
+                            e,
+                            &disp.buffers[le],
+                            &disp_b.buffers[le],
+                        )?;
+                        self.price_compute(self.expert_shard_flops(2.0));
+                        for (n, g) in grads {
+                            self.store.accum_grad(&n, &g);
+                        }
+                        let p = self.comm.issue_all_reduce(
+                            self.groups.tp_group_id,
+                            &self.groups.tp_group,
+                            &dxe,
+                        );
+                        if let Some((prev, mut done)) = pending.take() {
+                            self.comm.wait_all_reduce(prev, &mut done);
+                            dxe_full.push(done);
+                        }
+                        pending = Some((p, dxe));
                     }
-                    self.tp_allreduce(&mut dxe);
-                    dxe_full.push(dxe);
+                    if let Some((prev, mut done)) = pending.take() {
+                        self.comm.wait_all_reduce(prev, &mut done);
+                        dxe_full.push(done);
+                    }
+                } else {
+                    for (le, &e) in self.local_expert_ids.clone().iter().enumerate() {
+                        let (grads, mut dxe) = blocks::expert_bwd(
+                            &mut self.rt,
+                            &self.store,
+                            i,
+                            e,
+                            &disp.buffers[le],
+                            &disp_b.buffers[le],
+                        )?;
+                        self.price_compute(self.expert_shard_flops(2.0));
+                        for (n, g) in grads {
+                            self.store.accum_grad(&n, &g);
+                        }
+                        self.tp_allreduce(&mut dxe);
+                        dxe_full.push(dxe);
+                    }
                 }
                 let ret = {
                     let mut ctx = MoeComm {
@@ -355,6 +490,7 @@ impl Trainer {
 
         // attention backward + residual
         let (grads, mut dxp) = blocks::attn_bwd(&mut self.rt, &self.store, i, &stash.x_in, &dy1)?;
+        self.price_compute(self.attn_shard_flops(2.0));
         for (n, g) in grads {
             self.store.accum_grad(&n, &g);
         }
@@ -392,6 +528,7 @@ impl Trainer {
         self.peak_stash_bytes = self.peak_stash_bytes.max(stash_bytes);
 
         let (loss, hgrads, mut dx) = blocks::head_loss_bwd(&mut self.rt, &self.store, &x, targets)?;
+        self.price_compute(self.head_flops(3.0)); // fused head fwd + bwd
         for (n, mut g) in hgrads {
             g.scale(ls);
             self.store.accum_grad(&n, &g);
@@ -417,6 +554,7 @@ impl Trainer {
             let (x2, _st) = self.layer_forward(i, &x)?;
             x = x2;
         }
+        self.price_compute(self.head_flops(1.0));
         blocks::head_loss_fwd(&mut self.rt, &self.store, &x, targets)
     }
 

@@ -10,6 +10,13 @@
 //!   activation checkpointing + CAC, a ZeRO-1 sharded *tiled* AdamW
 //!   optimizer, and the paper's analytic memory & performance models that
 //!   regenerate every table and figure.
+//! * **L2 (python/compile/model.py)** — per-rank JAX block programs, AOT
+//!   lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (fused expert FFN,
+//!   tiled matmul, fused router, tiled AdamW).
+//!
+//! The rust binary never runs python: `make artifacts` is the only python
+//! step; afterwards everything executes through PJRT (`runtime`).
 //!
 //! ## Collective transport backends
 //!
@@ -38,7 +45,7 @@
 //! schedule, and `perfmodel::collective_cost` prices the phases
 //! separately (`*_phased`, `lane_bytes_*`, `lane_msgs_alltoall`).
 //!
-//! ## Nonblocking collectives and overlap
+//! ## Nonblocking collectives and compute-aware overlap
 //!
 //! Every collective also has an **issue/wait form**
 //! (`Communicator::issue_* -> Pending*`, `wait_*`): issue deposits what is
@@ -46,23 +53,30 @@
 //! in flight together. The engine uses it (`EngineOptions::overlap`, on
 //! by default; CLI `--no-overlap`) to reduce the expert and non-expert
 //! gradients concurrently, to overlap the two ZeRO-1 parameter
-//! all-gathers, and — via `wait_all_to_all_intra`, which hands out a
-//! hierarchical all-to-all's same-node rows while its inter-node phase is
-//! still in flight — to pipeline the DTD all-gather against the expert
-//! all-to-all (MoNTA-style comm/comm overlap). With a cluster preset
-//! selected, each op is priced by the α-β model and scheduled on a
-//! per-rank two-lane virtual timeline; `sim::TrainLog::overlap_timeline`
-//! reports serialized vs critical-path comm seconds per step, and
-//! `perfmodel::batch_time_overlapped` is the analytic counterpart with an
-//! `overlap_efficiency` knob (validated against the measured timeline in
-//! `rust/tests/integration_accounting.rs`).
-//! * **L2 (python/compile/model.py)** — per-rank JAX block programs, AOT
-//!   lowered to HLO text at build time.
-//! * **L1 (python/compile/kernels/)** — Pallas kernels (fused expert FFN,
-//!   tiled matmul, fused router, tiled AdamW).
+//! all-gathers, to pipeline each expert's TP all-reduce behind the next
+//! expert's FFN shard, and — via `wait_all_to_all_intra`, which hands out
+//! a hierarchical all-to-all's same-node rows while its inter-node phase
+//! is still in flight — to pipeline the DTD all-gather (and the dispatch
+//! scatter itself) against the expert all-to-all (MoNTA-style overlap).
 //!
-//! The rust binary never runs python: `make artifacts` is the only python
-//! step; afterwards everything executes through PJRT (`runtime`).
+//! With a cluster preset selected, each op is priced by the α-β model,
+//! each executed block by the preset's flop rate
+//! (`perfmodel::flops::{attn,ffn,head}_fwd_flops`), and both are
+//! scheduled on a per-rank **three-lane** (compute / NVLink / IB) virtual
+//! timeline; `sim::TrainLog::overlap_timeline` reports serialized comm +
+//! compute vs critical-path seconds per step, so the measured schedule
+//! shows which collectives hide behind compute and which serialize.
+//! `perfmodel::batch_time_overlapped` is the analytic counterpart: comm
+//! hides behind the other comm lane and behind the compute budget, scaled
+//! by an `overlap_efficiency` knob. The loop closes by **calibration**:
+//! `ted train --cluster <preset>` fits the knob from the measured
+//! timeline (`TrainLog::overlap_efficiency`, via
+//! `perfmodel::fit_overlap_efficiency`) and
+//! `examples/paper_figures -- --overlap-eff <E>` prices the Fig. 5/8/10/11
+//! sweeps with it (`figures::{fig5,fig8,fig10,fig11_table2}_overlapped`)
+//! instead of fully serialized comm. Measured == analytic is pinned in
+//! `rust/tests/integration_accounting.rs`; the model's invariants live in
+//! `rust/tests/compute_overlap_model.rs`.
 //!
 //! Start with [`sim::SimCluster`] and [`engine::Trainer`], or the examples:
 //! `examples/quickstart.rs` is the smallest end-to-end TED training run.

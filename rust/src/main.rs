@@ -34,8 +34,10 @@ USAGE:
   ted figures [--only ID]    (alias of `cargo run --example paper_figures`)
 
 Selecting --cluster threads the preset's gpus-per-node into the transport
-layer and prices an overlap timeline (serialized vs critical-path comm
-seconds); --no-overlap falls back to blocking collectives.
+layer and prices a three-lane (compute/NVLink/IB) overlap timeline:
+serialized comm + compute vs the critical path, plus a fitted
+overlap-efficiency knob for the paper_figures overlapped sweeps
+(--overlap-eff); --no-overlap falls back to blocking collectives.
 
 `make artifacts` must have produced artifacts/<config>_tp<T>_b<B>/ first.";
 
@@ -164,12 +166,21 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
     }
     if opts.cluster.is_some() && log.comm_serialized_s > 0.0 {
-        let hidden = log.comm_serialized_s - log.comm_critical_s;
+        println!("modeled three-lane timeline:");
+        print!(
+            "{}",
+            ted::metrics::render_timeline(
+                log.compute_s,
+                log.comm_intra_s,
+                log.comm_inter_s,
+                log.critical_s,
+                log.overlap_efficiency,
+            )
+        );
         println!(
-            "modeled comm time: serialized {:.4}s, critical-path {:.4}s ({:.1}% hidden by overlap)",
-            log.comm_serialized_s,
-            log.comm_critical_s,
-            100.0 * hidden / log.comm_serialized_s
+            "feed the fitted knob to the paper sweeps: \
+             cargo run --release --example paper_figures -- --overlap-eff {:.3}",
+            log.overlap_efficiency
         );
     }
     Ok(())

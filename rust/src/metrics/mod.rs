@@ -56,6 +56,33 @@ impl PhaseTimer {
     }
 }
 
+/// Render a modeled three-lane (compute / NVLink / IB) timeline summary:
+/// one line per lane with its serialized seconds and share of the
+/// critical path, plus the hidden-comm total and the fitted overlap
+/// efficiency. Used by the CLI after a priced `ted train` run.
+pub fn render_timeline(
+    compute_s: f64,
+    comm_intra_s: f64,
+    comm_inter_s: f64,
+    critical_s: f64,
+    overlap_efficiency: f64,
+) -> String {
+    let serialized = comm_intra_s + comm_inter_s;
+    let hidden = compute_s + serialized - critical_s;
+    let pct = |x: f64| if critical_s > 0.0 { 100.0 * x / critical_s } else { 0.0 };
+    let mut out = String::new();
+    let _ = writeln!(out, "lane        serialized      vs critical");
+    let _ = writeln!(out, "compute     {compute_s:>9.4}s  {:>9.1}%", pct(compute_s));
+    let _ = writeln!(out, "nvlink      {comm_intra_s:>9.4}s  {:>9.1}%", pct(comm_intra_s));
+    let _ = writeln!(out, "infiniband  {comm_inter_s:>9.4}s  {:>9.1}%", pct(comm_inter_s));
+    let _ = writeln!(
+        out,
+        "critical path {critical_s:.4}s ({hidden:.4}s of comm hidden; fitted overlap \
+         efficiency {overlap_efficiency:.3})"
+    );
+    out
+}
+
 /// Running mean/min/max.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Running {
@@ -207,6 +234,21 @@ mod tests {
         assert_eq!(t.get("a"), Duration::from_millis(12));
         assert_eq!(t.total(), Duration::from_millis(15));
         assert!(t.render().contains('a'));
+    }
+
+    #[test]
+    fn timeline_render_reports_lanes_and_fit() {
+        let s = render_timeline(2.0, 1.0, 0.5, 2.5, 0.667);
+        assert!(s.contains("compute"));
+        assert!(s.contains("nvlink"));
+        assert!(s.contains("infiniband"));
+        // hidden = 2.0 + 1.5 - 2.5 = 1.0
+        assert!(s.contains("1.0000s of comm hidden"));
+        assert!(s.contains("0.667"));
+        // zero critical path: the percent guard must keep NaN/inf out
+        let z = render_timeline(0.0, 0.0, 0.0, 0.0, 0.0);
+        assert!(!z.contains("NaN") && !z.contains("inf"), "{z}");
+        assert!(z.contains("0.0%"));
     }
 
     #[test]

@@ -29,9 +29,12 @@
 //! issued nonblocking, the rows arriving from *same-node* EP peers are
 //! picked up as soon as the intra-node phase completes and start gathering
 //! across the TP group (NVLink) while the cross-node rows are still in
-//! flight on the wire; a second gather moves the late rows. The scatter is
-//! keyed by buffer cell, so the two-gather schedule is bitwise identical
-//! to the blocking one — only the timeline (and the per-call accounting)
+//! flight on the wire; a second gather moves the late rows. The dispatch
+//! scatter and return reassembly also run *inside* those issue/wait
+//! windows (same-node rows scatter during the inter-node flight,
+//! cross-node rows while the gathers drain). The scatter is keyed by
+//! buffer cell, so the pipelined schedule is bitwise identical to the
+//! blocking one — only the timeline (and the per-call accounting)
 //! changes.
 
 use crate::collectives::{Communicator, PendingAllToAll};
@@ -74,15 +77,22 @@ impl MoeComm<'_> {
 }
 
 /// Run the EP all-to-all and the DTD TP all-gathers under the pipelined
-/// schedule: returns the member-order a2a receipts plus the gathered
-/// payloads of the *other* TP planes (own plane excluded), in a
-/// deterministic order. The early gather carries rows whose EP source is
-/// on this rank's node (available after the a2a intra phase); the late
-/// gather carries the cross-node rows.
+/// schedule. `on_row(member position, rows)` is invoked once for every
+/// a2a receipt — same-node rows are handed over **while the inter-node
+/// phase is still in flight** (right after the intra pickup feeds the
+/// early gather) and cross-node rows while the gathers are on the wire,
+/// so the caller's row processing (the dispatch scatter / return
+/// reassembly) runs inside the collectives' issue/wait windows instead of
+/// serializing after them. Returns the gathered payloads of the *other*
+/// TP planes (own plane excluded), in a deterministic order. The early
+/// gather carries rows whose EP source is on this rank's node (available
+/// after the a2a intra phase); the late gather carries the cross-node
+/// rows.
 fn pipelined_a2a_gather(
     ctx: &mut MoeComm,
     send: Vec<Vec<f32>>,
-) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    mut on_row: impl FnMut(usize, &[f32]),
+) -> Vec<Vec<f32>> {
     let n_members = ctx.ep_members.len();
     let mut pend: PendingAllToAll = ctx.comm.issue_all_to_all(ctx.ep_gid, ctx.ep_members, send);
 
@@ -96,9 +106,12 @@ fn pipelined_a2a_gather(
 
     // same-node receipts become available after the intra phase; gather
     // them across the TP group while the inter phase is still in flight
+    // (the early slice borrows `pend`, not the communicator, so the
+    // gather can be issued while it is alive)
+    let early = ctx.comm.wait_all_to_all_intra(&mut pend);
     let mut early_from = vec![false; n_members];
     let mut early_concat: Vec<f32> = Vec::new();
-    for (p, rows) in ctx.comm.wait_all_to_all_intra(&mut pend).iter() {
+    for (p, rows) in early {
         early_from[*p] = true;
         early_concat.extend_from_slice(rows);
     }
@@ -107,6 +120,10 @@ fn pipelined_a2a_gather(
         ctx.tp_members,
         &Tensor::from_vec(&[early_concat.len()], early_concat),
     );
+    // process the early rows with the gather and the inter phase in flight
+    for (p, rows) in early {
+        on_row(*p, rows);
+    }
 
     let received = ctx.comm.wait_all_to_all(pend);
 
@@ -123,6 +140,12 @@ fn pipelined_a2a_gather(
         ctx.tp_members,
         &Tensor::from_vec(&[late_concat.len()], late_concat),
     );
+    // process the late rows while the two gathers drain
+    for (p, payload) in received.iter().enumerate() {
+        if !early_from[p] {
+            on_row(p, payload);
+        }
+    }
 
     let g1 = ctx.comm.wait_all_gather(pg1);
     let g2 = ctx.comm.wait_all_gather(pg2);
@@ -132,7 +155,7 @@ fn pipelined_a2a_gather(
             others.push(payload);
         }
     }
-    (received, others)
+    others
 }
 
 /// Result of dispatching local tokens to the expert buffers.
@@ -182,15 +205,8 @@ pub fn dispatch(
         payload.extend_from_slice(rows.row(i));
     }
 
-    // run the EP a2a — pipelined against the DTD gathers when overlap is
-    // on and the transport has a phase split, blocking otherwise
-    let (received, gathered_others) = if ctx.pipelined() {
-        pipelined_a2a_gather(ctx, send)
-    } else {
-        (ctx.comm.all_to_all(ctx.ep_gid, ctx.ep_members, send), Vec::new())
-    };
-
-    // scatter received rows into local buffers
+    // scatter target state, created up front so the pipelined schedule
+    // can fill it while the collectives are still in flight
     let mut buffers = vec![Tensor::zeros(&[capacity, d]); local_experts];
     let mut origin_of_slot = vec![vec![None; capacity]; local_experts];
     let first_expert = ctx.ep_pos * local_experts;
@@ -211,34 +227,44 @@ pub fn dispatch(
             }
         }
     };
-    for (pos, payload) in received.iter().enumerate() {
-        scatter(payload, Some(pos), &mut buffers, &mut origin_of_slot);
-    }
 
-    // DTD: TP all-gather(s) fill the slots the other planes carried. The
-    // gathered rows re-use the same key format; their origins stay None
-    // (only the direct receiver answers on the return path). The scatter
-    // is keyed per buffer cell, so the pipelined two-gather schedule lands
-    // bit-identically to the blocking single gather.
+    // run the EP a2a — pipelined against the DTD gathers when overlap is
+    // on and the transport has a phase split, blocking otherwise. The
+    // scatter is keyed per buffer cell (each key arrives exactly once per
+    // a2a), so the pipelined schedule — which scatters same-node rows
+    // during the inter-node flight and cross-node rows while the gathers
+    // drain — lands bit-identically to the blocking order. DTD's TP
+    // all-gather(s) fill the slots the other planes carried; the gathered
+    // rows re-use the same key format and their origins stay None (only
+    // the direct receiver answers on the return path).
     if ctx.pipelined() {
+        let gathered_others = pipelined_a2a_gather(ctx, send, |pos, payload| {
+            scatter(payload, Some(pos), &mut buffers, &mut origin_of_slot)
+        });
         for payload in &gathered_others {
             scatter(payload, None, &mut buffers, &mut origin_of_slot);
         }
-    } else if ctx.dtd && ctx.tp() > 1 {
-        let mut mine: Vec<f32> = Vec::new();
-        for payload in &received {
-            mine.extend_from_slice(payload);
+    } else {
+        let received = ctx.comm.all_to_all(ctx.ep_gid, ctx.ep_members, send);
+        for (pos, payload) in received.iter().enumerate() {
+            scatter(payload, Some(pos), &mut buffers, &mut origin_of_slot);
         }
-        let gathered = ctx.comm.all_gather(
-            ctx.tp_gid,
-            ctx.tp_members,
-            &Tensor::from_vec(&[mine.len()], mine),
-        );
-        for (pos, payload) in gathered.into_iter().enumerate() {
-            if pos == ctx.tp_pos {
-                continue; // already scattered our own
+        if ctx.dtd && ctx.tp() > 1 {
+            let mut mine: Vec<f32> = Vec::new();
+            for payload in &received {
+                mine.extend_from_slice(payload);
             }
-            scatter(&payload, None, &mut buffers, &mut origin_of_slot);
+            let gathered = ctx.comm.all_gather(
+                ctx.tp_gid,
+                ctx.tp_members,
+                &Tensor::from_vec(&[mine.len()], mine),
+            );
+            for (pos, payload) in gathered.into_iter().enumerate() {
+                if pos == ctx.tp_pos {
+                    continue; // already scattered our own
+                }
+                scatter(&payload, None, &mut buffers, &mut origin_of_slot);
+            }
         }
     }
 
@@ -277,34 +303,35 @@ pub fn return_to_origin(
     }
 
     // return-path a2a — pipelined against the DTD gather when overlap is
-    // on (the ISSUE's comm/comm overlap case), blocking otherwise
-    let (received, gathered_others) = if ctx.pipelined() {
-        pipelined_a2a_gather(ctx, send)
-    } else {
-        (ctx.comm.all_to_all(ctx.ep_gid, ctx.ep_members, send), Vec::new())
-    };
-
-    // origin side: flatten all received rows; with DTD, all-gather across
-    // the TP group so every plane sees every token's row.
+    // on (the MoNTA comm/comm overlap case), blocking otherwise. Origin
+    // side: flatten all received rows; with DTD, all-gather across the TP
+    // group so every plane sees every token's row. Rows are key-addressed,
+    // so concatenation order does not matter — the pipelined schedule
+    // collects them mid-flight.
     let mut all_rows: Vec<f32> = Vec::new();
-    for payload in &received {
-        all_rows.extend_from_slice(payload);
-    }
     if ctx.pipelined() {
+        let gathered_others = pipelined_a2a_gather(ctx, send, |_pos, payload| {
+            all_rows.extend_from_slice(payload)
+        });
         // own receipts already in all_rows; append the other planes' rows
-        // (key-addressed, so concatenation order does not matter)
         for payload in &gathered_others {
             all_rows.extend_from_slice(payload);
         }
-    } else if ctx.dtd && ctx.tp() > 1 {
-        let gathered = ctx.comm.all_gather(
-            ctx.tp_gid,
-            ctx.tp_members,
-            &Tensor::from_vec(&[all_rows.len()], all_rows.clone()),
-        );
-        all_rows.clear();
-        for payload in gathered {
-            all_rows.extend_from_slice(&payload);
+    } else {
+        let received = ctx.comm.all_to_all(ctx.ep_gid, ctx.ep_members, send);
+        for payload in &received {
+            all_rows.extend_from_slice(payload);
+        }
+        if ctx.dtd && ctx.tp() > 1 {
+            let gathered = ctx.comm.all_gather(
+                ctx.tp_gid,
+                ctx.tp_members,
+                &Tensor::from_vec(&[all_rows.len()], all_rows.clone()),
+            );
+            all_rows.clear();
+            for payload in gathered {
+                all_rows.extend_from_slice(&payload);
+            }
         }
     }
 

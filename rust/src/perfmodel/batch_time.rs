@@ -13,16 +13,22 @@
 //! CAC removes the recompute copies of the forward collectives; DTD divides
 //! the A2A payload by `G_tensor` and adds the TP all-gather.
 //!
-//! [`batch_time_overlapped`] layers the comm/comm overlap model on top:
-//! the serialized comm time splits into an NVLink lane and an IB lane
-//! (accumulated per phase by [`batch_time`]), and a nonblocking schedule
-//! can hide up to `min(intra, inter)` of one lane behind the other — the
-//! `overlap_efficiency` knob scales how much of that bound the schedule
-//! actually achieves (0 = fully serialized = `--no-overlap`, 1 = perfect
-//! two-lane pipelining). The functional engine's measured per-step
-//! timeline (`sim::TrainLog::overlap_timeline`) is the measured
-//! counterpart; `rust/tests/integration_accounting.rs` pins the two
-//! layers together on scripted schedules.
+//! [`batch_time_overlapped`] layers the compute-aware overlap model on
+//! top: the serialized comm time splits into an NVLink lane and an IB
+//! lane (accumulated per phase by [`batch_time`]), and a nonblocking
+//! schedule can hide comm both behind the *other comm lane* (up to
+//! `min(intra, inter)`) and behind the *compute lane* (up to the
+//! iteration's compute budget, itself capped by the longer comm lane) —
+//! the three-lane makespan lower bound is `max(compute, intra, inter)`.
+//! The `overlap_efficiency` knob scales how much of that hideable bound
+//! ([`hideable_comm_s`]) the schedule actually achieves (0 = fully
+//! serialized = `--no-overlap`, 1 = perfect three-lane pipelining). The
+//! functional engine's measured per-step timeline
+//! (`sim::TrainLog::overlap_timeline`) is the measured counterpart;
+//! [`fit_overlap_efficiency`] inverts the model to calibrate the knob
+//! from a measured timeline, and
+//! `rust/tests/integration_accounting.rs` pins the two layers together
+//! on scripted schedules.
 
 use crate::collectives::CollectiveStrategy;
 use crate::config::{ClusterConfig, ModelConfig, ParallelConfig};
@@ -135,28 +141,33 @@ pub fn batch_time(s: &Scenario) -> BatchTime {
     };
 
     // ---- tensor-parallel all-reduces ----
-    // per pass counts: fwd 1 per block, bwd 1 per block; recompute re-adds
-    // the forward set when CAC is off.
+    // per-block appearances across the passes: fwd(1) + bwd(1), and the
+    // checkpointing re-forward re-adds the forward set when CAC is off —
+    // so each block's collective runs `passes` = 2 (CAC) or 3 times.
     let passes = if s.opts.cac { 2.0 } else { 3.0 };
-    let attn_ars = l * passes_fwd(passes);
-    let ffn_ars = (l - moe_layers) * passes_fwd(passes);
-    let expert_ars = moe_layers * passes_fwd(passes);
+    let attn_ars = l * passes;
+    let ffn_ars = (l - moe_layers) * passes;
+    let expert_ars = moe_layers * passes;
     let mut allreduce_s_total =
         add(attn_ars + ffn_ars, allreduce_phased(c, strat, &g0.tp_group, act_bytes))
             + add(expert_ars, allreduce_phased(c, strat, &g0.tp_group, cap_bytes));
 
     // ---- expert-parallel all-to-alls ----
-    // 2 per MoE layer per pass (dispatch + return)
+    // 2 per MoE layer per pass (dispatch + return). Dispatched tokens are
+    // capacity-buffered, so the payload is the capacity-factored volume
+    // (cf x the activations), like the expert TP all-reduce above; DTD
+    // ships each TP plane's 1/tp slice of it.
     let a2a_count = moe_layers * 2.0 * passes;
-    let a2a_bytes = if s.opts.dtd { act_bytes / par.tp as f64 } else { act_bytes };
+    let a2a_bytes = if s.opts.dtd { cap_bytes / par.tp as f64 } else { cap_bytes };
     let alltoall_s_total = add(a2a_count, alltoall_phased(c, strat, &g0.ep_group, a2a_bytes));
 
     // ---- all-gathers ----
     let mut allgather_s_total = 0.0;
     if s.opts.dtd {
-        // one TP all-gather per A2A, each rank contributing its 1/tp slice
+        // one TP all-gather per A2A reassembles the capacity buffers, each
+        // rank contributing the 1/tp slice it carried through the A2A
         allgather_s_total +=
-            add(a2a_count, allgather_phased(c, strat, &g0.tp_group, act_bytes / par.tp as f64));
+            add(a2a_count, allgather_phased(c, strat, &g0.tp_group, cap_bytes / par.tp as f64));
     }
 
     // ---- gradient reduction + ZeRO-1 parameter all-gather (per iter) ----
@@ -184,14 +195,22 @@ pub fn batch_time(s: &Scenario) -> BatchTime {
 }
 
 /// Overlap-aware batch time: the comm critical path under a nonblocking
-/// two-lane schedule.
+/// three-lane (compute / NVLink / IB) schedule.
 #[derive(Debug, Clone, Copy)]
 pub struct OverlappedBatchTime {
     pub base: BatchTime,
     pub overlap_efficiency: f64,
     /// Comm time with every op serialized (= `base.comm_s()`).
     pub serialized_comm_s: f64,
-    /// Comm critical path: `serialized - eff * min(intra, inter)`.
+    /// Comm seconds a perfect schedule could hide — behind the other comm
+    /// lane and behind compute (see [`hideable_comm_s`]).
+    pub hideable_comm_s: f64,
+    /// Of the hidden time at this efficiency, the share the compute lane
+    /// absorbs (`eff * min(compute, max-lane)`); the rest hides behind
+    /// the other comm lane.
+    pub hidden_behind_compute_s: f64,
+    /// Comm critical path beyond compute:
+    /// `serialized - eff * hideable`.
     pub critical_comm_s: f64,
 }
 
@@ -210,12 +229,48 @@ impl OverlappedBatchTime {
     }
 }
 
-/// Price a scenario under a nonblocking schedule: of the two comm lanes,
-/// at most `min(intra, inter)` can hide behind the other lane (the
-/// two-lane makespan lower bound is `max(intra, inter)`), and
-/// `overlap_efficiency` in `[0, 1]` scales how much of that bound the
-/// actual issue/wait schedule achieves. `0` reproduces `batch_time`
-/// exactly (`--no-overlap`); `1` is perfect cross-fabric pipelining.
+/// Comm seconds a perfect three-lane schedule can hide: the shorter comm
+/// lane behind the longer one (`min(intra, inter)`), plus comm behind the
+/// compute lane up to the compute budget (`min(compute, max(intra,
+/// inter))` — compute can only hide the lane that is still exposed).
+/// Equivalently `compute + intra + inter - max(compute, intra, inter)`:
+/// the serialized total minus the three-lane makespan lower bound.
+pub fn hideable_comm_s(compute_s: f64, comm_intra_s: f64, comm_inter_s: f64) -> f64 {
+    compute_s + comm_intra_s + comm_inter_s
+        - compute_s.max(comm_intra_s).max(comm_inter_s)
+}
+
+/// Fit the overlap-efficiency knob from a measured three-lane timeline:
+/// the fraction of the hideable comm seconds (see [`hideable_comm_s`])
+/// the schedule actually hid, where `critical_s` is the measured makespan
+/// (compute included, e.g. `TrainLog`'s whole-run critical path). Returns
+/// 0 when nothing is hideable; clamped to `[0, 1]` against float noise.
+/// The fitted value reproduces the measurement exactly:
+/// `batch_time_overlapped(s, eff).total()` recovers `critical_s` for the
+/// scenario the timeline was measured on.
+pub fn fit_overlap_efficiency(
+    compute_s: f64,
+    comm_intra_s: f64,
+    comm_inter_s: f64,
+    critical_s: f64,
+) -> f64 {
+    let hideable = hideable_comm_s(compute_s, comm_intra_s, comm_inter_s);
+    if hideable <= 0.0 {
+        return 0.0;
+    }
+    let hidden = compute_s + comm_intra_s + comm_inter_s - critical_s;
+    (hidden / hideable).clamp(0.0, 1.0)
+}
+
+/// Price a scenario under a nonblocking three-lane schedule: comm can
+/// hide behind the other comm lane *and* behind the iteration's compute
+/// (up to the compute budget), with the makespan bounded below by
+/// `max(compute, intra, inter)`. `overlap_efficiency` in `[0, 1]` scales
+/// how much of that hideable bound the actual issue/wait schedule
+/// achieves. `0` reproduces `batch_time` exactly (`--no-overlap`); `1` is
+/// perfect three-lane pipelining. Calibrate the knob from a measured run
+/// with [`fit_overlap_efficiency`] (reported as
+/// `sim::TrainLog::overlap_efficiency`).
 pub fn batch_time_overlapped(s: &Scenario, overlap_efficiency: f64) -> OverlappedBatchTime {
     assert!(
         (0.0..=1.0).contains(&overlap_efficiency),
@@ -223,20 +278,18 @@ pub fn batch_time_overlapped(s: &Scenario, overlap_efficiency: f64) -> Overlappe
     );
     let base = batch_time(s);
     let serialized = base.comm_intra_s + base.comm_inter_s;
-    let overlappable = base.comm_intra_s.min(base.comm_inter_s);
-    let critical = serialized - overlap_efficiency * overlappable;
+    let hideable = hideable_comm_s(base.compute_s, base.comm_intra_s, base.comm_inter_s);
+    let behind_compute =
+        base.compute_s.min(base.comm_intra_s.max(base.comm_inter_s));
+    let critical = serialized - overlap_efficiency * hideable;
     OverlappedBatchTime {
         base,
         overlap_efficiency,
         serialized_comm_s: serialized,
+        hideable_comm_s: hideable,
+        hidden_behind_compute_s: overlap_efficiency * behind_compute,
         critical_comm_s: critical,
     }
-}
-
-/// forward appearances of a block's collective across the passes:
-/// fwd(1) + bwd(1) [+ recompute fwd(1)] — passes is 2.0 or 3.0.
-fn passes_fwd(passes: f64) -> f64 {
-    passes
 }
 
 #[cfg(test)]
@@ -358,18 +411,60 @@ mod tests {
         // eff = 0 reproduces the serialized model exactly
         assert_eq!(none.critical_comm_s, none.serialized_comm_s);
         assert_eq!(none.overlap_win(), 0.0);
-        // monotone in the knob, never below the two-lane makespan bound
+        assert_eq!(none.hidden_behind_compute_s, 0.0);
+        // monotone in the knob
         assert!(half.critical_comm_s < none.critical_comm_s);
         assert!(full.critical_comm_s < half.critical_comm_s);
-        let bound = none.base.comm_intra_s.max(none.base.comm_inter_s);
-        assert!(full.critical_comm_s >= bound - 1e-12);
         assert!(full.total() < none.total());
-        // the hidden time is exactly eff * min(intra, inter)
-        let overlappable = none.base.comm_intra_s.min(none.base.comm_inter_s);
+        // never below the three-lane makespan bound: total >= max lane
+        let b = &none.base;
+        let bound = b.compute_s.max(b.comm_intra_s).max(b.comm_inter_s);
+        assert!(full.total() >= bound - 1e-12, "{} vs {bound}", full.total());
+        // compute can hide comm beyond the two-lane bound, but only up to
+        // the compute budget
+        let two_lane = b.comm_intra_s.max(b.comm_inter_s);
+        assert!(full.critical_comm_s < two_lane);
+        assert!(full.critical_comm_s >= two_lane - full.hidden_behind_compute_s - 1e-12);
+        // the hidden time is exactly eff * hideable
         assert!(
-            (none.critical_comm_s - half.critical_comm_s - 0.5 * overlappable).abs() < 1e-12,
+            (none.critical_comm_s - half.critical_comm_s - 0.5 * none.hideable_comm_s).abs()
+                < 1e-12,
             "overlap win should scale linearly with the knob"
         );
+        // the fit inverts the model exactly
+        let eff = fit_overlap_efficiency(
+            b.compute_s,
+            b.comm_intra_s,
+            b.comm_inter_s,
+            half.total(),
+        );
+        assert!((eff - 0.5).abs() < 1e-9, "fitted {eff}");
+    }
+
+    #[test]
+    fn capacity_factor_scales_the_dispatch_payload() {
+        // dispatched tokens are capacity-buffered: the a2a (and the DTD
+        // reassembly all-gather) must grow with the capacity factor, like
+        // the expert TP all-reduce always did
+        let mk = |cf: f64, dtd: bool| {
+            let mut o = if dtd { CommOpts::dtd_only() } else { CommOpts::baseline() };
+            o.capacity_factor = cf;
+            batch_time(&scenario(o))
+        };
+        for dtd in [false, true] {
+            let lo = mk(1.0, dtd);
+            let hi = mk(1.25, dtd);
+            assert!(
+                hi.alltoall_s > 1.2 * lo.alltoall_s,
+                "dtd={dtd}: {} vs {}",
+                hi.alltoall_s,
+                lo.alltoall_s
+            );
+            assert_eq!(hi.compute_s, lo.compute_s);
+        }
+        // DTD's all-gather ships the same capacity-factored slices
+        let (lo, hi) = (mk(1.0, true), mk(1.25, true));
+        assert!(hi.allgather_s > lo.allgather_s);
     }
 
     #[test]

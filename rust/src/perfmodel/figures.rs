@@ -2,9 +2,12 @@
 //! (DESIGN.md section 5 maps each to its source here). The
 //! `examples/paper_figures.rs` binary renders these as text tables.
 
+use crate::collectives::CollectiveStrategy;
 use crate::config::{model, ClusterConfig, ModelConfig, ParallelConfig};
 use crate::memory::{max_moe_size, MemoryModel, Phase, PHASES};
-use crate::perfmodel::batch_time::{batch_time, BatchTime, CommOpts, Scenario};
+use crate::perfmodel::batch_time::{
+    batch_time, batch_time_overlapped, BatchTime, CommOpts, OverlappedBatchTime, Scenario,
+};
 use crate::perfmodel::flops::percent_of_peak;
 
 pub const TILE: usize = 1_800_000; // the paper's 1.8M-parameter tile
@@ -84,7 +87,12 @@ pub struct Fig5Row {
     pub t: BatchTime,
 }
 
-pub fn fig5(cluster: &ClusterConfig, gpus: usize, batch: usize) -> Vec<Fig5Row> {
+/// The three Fig. 5 configurations on the paper's 6.7B/16e workload.
+fn fig5_scenarios(
+    cluster: &ClusterConfig,
+    gpus: usize,
+    batch: usize,
+) -> Vec<(&'static str, Scenario)> {
     let m = model::table1_by_name("6.7B").unwrap();
     let n_experts = 16;
     let tp = min_tp_to_fit(&m, n_experts, gpus, cluster).unwrap_or(4);
@@ -98,10 +106,43 @@ pub fn fig5(cluster: &ClusterConfig, gpus: usize, batch: usize) -> Vec<Fig5Row> 
         opts,
     };
     vec![
-        Fig5Row { label: "baseline", t: batch_time(&mk(CommOpts::baseline())) },
-        Fig5Row { label: "+DTD", t: batch_time(&mk(CommOpts::dtd_only())) },
-        Fig5Row { label: "+DTD+CAC", t: batch_time(&mk(CommOpts::optimized())) },
+        ("baseline", mk(CommOpts::baseline())),
+        ("+DTD", mk(CommOpts::dtd_only())),
+        ("+DTD+CAC", mk(CommOpts::optimized())),
     ]
+}
+
+pub fn fig5(cluster: &ClusterConfig, gpus: usize, batch: usize) -> Vec<Fig5Row> {
+    fig5_scenarios(cluster, gpus, batch)
+        .into_iter()
+        .map(|(label, s)| Fig5Row { label, t: batch_time(&s) })
+        .collect()
+}
+
+/// Fig. 5 bars under the compute-aware overlap model: comm priced on the
+/// critical path of the hierarchical transport's nonblocking schedule,
+/// with the calibrated `overlap_efficiency` knob (fit one with
+/// `ted train --cluster <preset>` → `TrainLog::overlap_efficiency`)
+/// instead of fully serialized.
+#[derive(Debug, Clone)]
+pub struct Fig5OverlapRow {
+    pub label: &'static str,
+    pub t: OverlappedBatchTime,
+}
+
+pub fn fig5_overlapped(
+    cluster: &ClusterConfig,
+    gpus: usize,
+    batch: usize,
+    overlap_efficiency: f64,
+) -> Vec<Fig5OverlapRow> {
+    fig5_scenarios(cluster, gpus, batch)
+        .into_iter()
+        .map(|(label, mut s)| {
+            s.opts = s.opts.with_strategy(CollectiveStrategy::Hierarchical);
+            Fig5OverlapRow { label, t: batch_time_overlapped(&s, overlap_efficiency) }
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------
@@ -127,6 +168,28 @@ impl ScalingPoint {
 /// smallest GPU count use as many experts as fit (capped at 128), then
 /// scale E with G.
 pub fn fig8(model_name: &str, cluster: &ClusterConfig, gpu_counts: &[usize], batch: usize) -> Vec<ScalingPoint> {
+    fig8_priced(model_name, cluster, gpu_counts, batch, None)
+}
+
+/// Fig. 8 under the compute-aware overlap model (hierarchical transport,
+/// calibrated efficiency knob) instead of serialized comm pricing.
+pub fn fig8_overlapped(
+    model_name: &str,
+    cluster: &ClusterConfig,
+    gpu_counts: &[usize],
+    batch: usize,
+    overlap_efficiency: f64,
+) -> Vec<ScalingPoint> {
+    fig8_priced(model_name, cluster, gpu_counts, batch, Some(overlap_efficiency))
+}
+
+fn fig8_priced(
+    model_name: &str,
+    cluster: &ClusterConfig,
+    gpu_counts: &[usize],
+    batch: usize,
+    overlap: Option<f64>,
+) -> Vec<ScalingPoint> {
     let m = model::table1_by_name(model_name).expect("table1 model");
     let g0 = gpu_counts[0];
     // max experts fitting at the base count
@@ -143,7 +206,7 @@ pub fn fig8(model_name: &str, cluster: &ClusterConfig, gpu_counts: &[usize], bat
         .iter()
         .map(|&g| {
             let experts = (e0 * g / g0).min(128);
-            strong_point(&m, experts, g, cluster, batch)
+            strong_point_priced(&m, experts, g, cluster, batch, overlap)
         })
         .collect()
 }
@@ -157,7 +220,39 @@ pub fn fig10(model_name: &str, cluster: &ClusterConfig, gpu_counts: &[usize], ex
         .collect()
 }
 
+/// Fig. 10 under the compute-aware overlap model (hierarchical
+/// transport, calibrated efficiency knob).
+pub fn fig10_overlapped(
+    model_name: &str,
+    cluster: &ClusterConfig,
+    gpu_counts: &[usize],
+    experts: usize,
+    batch: usize,
+    overlap_efficiency: f64,
+) -> Vec<ScalingPoint> {
+    let m = model::table1_by_name(model_name).expect("table1 model");
+    gpu_counts
+        .iter()
+        .map(|&g| strong_point_priced(&m, experts, g, cluster, batch, Some(overlap_efficiency)))
+        .collect()
+}
+
 fn strong_point(m: &ModelConfig, experts: usize, gpus: usize, cluster: &ClusterConfig, batch: usize) -> ScalingPoint {
+    strong_point_priced(m, experts, gpus, cluster, batch, None)
+}
+
+/// One strong-scaling point. `overlap`: `None` prices serialized comm on
+/// the flat transport (the paper's model); `Some(eff)` prices the
+/// compute-aware critical path on the hierarchical transport with the
+/// calibrated overlap-efficiency knob.
+fn strong_point_priced(
+    m: &ModelConfig,
+    experts: usize,
+    gpus: usize,
+    cluster: &ClusterConfig,
+    batch: usize,
+    overlap: Option<f64>,
+) -> ScalingPoint {
     let tp = min_tp_to_fit(m, experts, gpus, cluster)
         .unwrap_or_else(|| panic!("{} with {experts} experts does not fit on {gpus}", m.name));
     let ep = experts.min(gpus / tp);
@@ -170,13 +265,20 @@ fn strong_point(m: &ModelConfig, experts: usize, gpus: usize, cluster: &ClusterC
         global_batch: batch,
         opts,
     };
-    ScalingPoint {
-        gpus,
-        experts,
-        tp,
-        baseline_s: batch_time(&mk(CommOpts::baseline())).total(),
-        optimized_s: batch_time(&mk(CommOpts::optimized())).total(),
-    }
+    let (baseline_s, optimized_s) = match overlap {
+        None => (
+            batch_time(&mk(CommOpts::baseline())).total(),
+            batch_time(&mk(CommOpts::optimized())).total(),
+        ),
+        Some(eff) => {
+            let h = CollectiveStrategy::Hierarchical;
+            (
+                batch_time_overlapped(&mk(CommOpts::baseline().with_strategy(h)), eff).total(),
+                batch_time_overlapped(&mk(CommOpts::optimized().with_strategy(h)), eff).total(),
+            )
+        }
+    };
+    ScalingPoint { gpus, experts, tp, baseline_s, optimized_s }
 }
 
 // ---------------------------------------------------------------------
@@ -195,6 +297,20 @@ pub struct WeakScalingRow {
 }
 
 pub fn fig11_table2(cluster: &ClusterConfig) -> Vec<WeakScalingRow> {
+    fig11_table2_priced(cluster, None)
+}
+
+/// Fig. 11 / Table 2 under the compute-aware overlap model
+/// (hierarchical transport, calibrated efficiency knob); `pct_peak`
+/// reflects the overlapped iteration time.
+pub fn fig11_table2_overlapped(
+    cluster: &ClusterConfig,
+    overlap_efficiency: f64,
+) -> Vec<WeakScalingRow> {
+    fig11_table2_priced(cluster, Some(overlap_efficiency))
+}
+
+fn fig11_table2_priced(cluster: &ClusterConfig, overlap: Option<f64>) -> Vec<WeakScalingRow> {
     let ladder = [(32usize, "1.3B"), (64, "2.7B"), (128, "6.7B"), (256, "13.0B")];
     let experts = 16;
     ladder
@@ -202,7 +318,7 @@ pub fn fig11_table2(cluster: &ClusterConfig) -> Vec<WeakScalingRow> {
         .map(|&(gpus, name)| {
             let m = model::table1_by_name(name).unwrap();
             let batch = m.batch_size;
-            let p = strong_point(&m, experts, gpus, cluster, batch);
+            let p = strong_point_priced(&m, experts, gpus, cluster, batch, overlap);
             let pct = percent_of_peak(&m, batch, p.optimized_s, gpus, cluster.peak_half_tflops);
             WeakScalingRow {
                 gpus,
@@ -236,7 +352,10 @@ impl Fig9Row {
 }
 
 pub fn fig9(cluster: &ClusterConfig, gpu_counts: &[usize]) -> Vec<Fig9Row> {
-    let max_tp = cluster.gpus_per_node.min(6); // section 7.2: tp <= node size
+    // section 7.2: tp is bounded by the node size — derived from the
+    // cluster preset (Summit: 6), not hard-coded, so 8-GPU-node clusters
+    // get their full tp=8 plans
+    let max_tp = cluster.gpus_per_node;
     gpu_counts
         .iter()
         .map(|&g| {
@@ -333,6 +452,76 @@ mod tests {
         // paper band: 1.09-4.8x, increasing with GPUs
         let last = rows.last().unwrap().ratio();
         assert!(last > 1.5 && last < 10.0, "final ratio {last}");
+    }
+
+    #[test]
+    fn fig9_tp_cap_follows_cluster_node_size() {
+        // regression for the Summit-specific `min(6)` cap: on an
+        // 8-GPU/node preset Fig. 9 must search the full tp <= 8 ladder,
+        // never silently under-reporting TED's max model size
+        let c = ClusterConfig::thetagpu();
+        assert_eq!(c.gpus_per_node, 8);
+        for (row, &g) in fig9(&c, &[64, 128]).iter().zip(&[64usize, 128]) {
+            let full = max_moe_size(&c, g, c.gpus_per_node, true, TILE);
+            assert_eq!(
+                row.ted_params,
+                full.as_ref().map(|x| x.3).unwrap_or(0),
+                "{g} GPUs: Fig. 9 must search tp up to the node size"
+            );
+            let capped = max_moe_size(&c, g, 6, true, TILE);
+            assert!(
+                row.ted_params >= capped.as_ref().map(|x| x.3).unwrap_or(0),
+                "{g} GPUs: deriving the cap must never shrink the answer"
+            );
+        }
+    }
+
+    #[test]
+    fn overlapped_sweeps_consume_the_knob() {
+        let c = ClusterConfig::summit();
+        // strictly monotone in the calibrated efficiency (eff = 0 is the
+        // serialized hierarchical pricing; topology derivation unchanged)
+        let serialized = fig10("6.7B", &c, &[64, 128], 4, 1024);
+        let effs = [0.0, 0.5, 1.0];
+        let sweeps: Vec<_> = effs
+            .iter()
+            .map(|&e| fig10_overlapped("6.7B", &c, &[64, 128], 4, 1024, e))
+            .collect();
+        for (i, pts) in sweeps.iter().enumerate() {
+            for (p, s) in pts.iter().zip(&serialized) {
+                assert_eq!(p.tp, s.tp);
+                assert_eq!(p.experts, s.experts);
+            }
+            if i > 0 {
+                for (hi, lo) in pts.iter().zip(&sweeps[i - 1]) {
+                    assert!(
+                        hi.optimized_s < lo.optimized_s,
+                        "eff={} must beat eff={}",
+                        effs[i],
+                        effs[i - 1]
+                    );
+                    assert!(hi.baseline_s < lo.baseline_s);
+                }
+            }
+        }
+        // fig5/fig8/fig11 variants wire the same knob through
+        let f5 = fig5_overlapped(&c, 128, 1024, 0.6);
+        assert_eq!(f5.len(), 3);
+        for r in &f5 {
+            assert_eq!(r.t.overlap_efficiency, 0.6);
+            assert!(r.t.critical_comm_s < r.t.serialized_comm_s);
+        }
+        let f8a = fig8_overlapped("6.7B", &c, &[64, 128], 1024, 0.0);
+        let f8b = fig8_overlapped("6.7B", &c, &[64, 128], 1024, 0.8);
+        for (a, b) in f8a.iter().zip(&f8b) {
+            assert!(b.optimized_s < a.optimized_s);
+        }
+        let t2a = fig11_table2_overlapped(&c, 0.0);
+        let t2b = fig11_table2_overlapped(&c, 0.8);
+        for (a, b) in t2a.iter().zip(&t2b) {
+            assert!(b.optimized_s < a.optimized_s);
+            assert!(b.pct_peak > a.pct_peak, "hiding comm must raise %-of-peak");
+        }
     }
 
     #[test]

@@ -28,6 +28,48 @@ pub fn flops_per_iter(m: &ModelConfig, batch: usize, checkpointing: bool) -> f64
     coef * b * s * l * h * h * (1.0 + s / (6.0 * h) + v / (16.0 * l * h))
 }
 
+// ---------------------------------------------------------------------
+// per-block decomposition (the compute lane's price list)
+// ---------------------------------------------------------------------
+//
+// The iteration formula above decomposes exactly into per-block forward
+// costs: attention + FFN over layers at four pass units each (fwd 1,
+// bwd 2, re-forward 1) plus the head at three (fwd 1, bwd 2 — the head
+// is never checkpointed) reproduces `flops_per_iter_checkpointed`
+// exactly (unit-pinned below). The engine
+// prices each block it *actually executes* onto the timeline's compute
+// lane with these — which is fewer units than the formula's uniform
+// budget when its CAC mode stashes activations instead of re-running the
+// forward, and the fused head never re-forwards — so a measured
+// compute lane can legitimately sit below the analytic
+// `BatchTime::compute_s` (see `engine::Trainer` for the executed-pass
+// accounting). Top-1 MoE expert FFNs price like the dense FFN per
+// processed token; router gate and embedding lookups are negligible,
+// matching the iteration formula which omits them.
+
+/// Forward flops of one attention block over `tokens` tokens
+/// (QKV + output projections `8 t h^2`, scores + context `4 t s h`).
+pub fn attn_fwd_flops(d_model: usize, seq: usize, tokens: usize) -> f64 {
+    let (t, h, s) = (tokens as f64, d_model as f64, seq as f64);
+    8.0 * t * h * h + 4.0 * t * s * h
+}
+
+/// Forward flops of one (dense or expert) FFN block over `tokens` tokens:
+/// two matmuls `h -> d_ff -> h`.
+pub fn ffn_fwd_flops(d_model: usize, d_ff: usize, tokens: usize) -> f64 {
+    let (t, h, f) = (tokens as f64, d_model as f64, d_ff as f64);
+    4.0 * t * h * f
+}
+
+/// Forward flops of the LM head over `tokens` tokens: one `h x V`
+/// matmul (`2 t h V`). The head is never checkpointed, so its
+/// fwd(1) + bwd(2) = `6 t h V` is exactly the Narayanan formula's vocab
+/// term — no re-forward unit.
+pub fn head_fwd_flops(d_model: usize, vocab: usize, tokens: usize) -> f64 {
+    let (t, h, v) = (tokens as f64, d_model as f64, vocab as f64);
+    2.0 * t * h * v
+}
+
 /// Percent of aggregate peak half-precision throughput achieved.
 pub fn percent_of_peak(
     m: &ModelConfig,
@@ -69,6 +111,24 @@ mod tests {
         let m = table1_by_name("6.7B").unwrap();
         let f = flops_per_iter_checkpointed(&m, 1024);
         assert!((5e16..5e17).contains(&f), "{f:e}");
+    }
+
+    #[test]
+    fn block_split_reassembles_iteration_flops() {
+        // fwd(1) + bwd(2) + re-forward(1) over every layer block plus
+        // fwd(1) + bwd(2) of the head must reproduce the Narayanan
+        // iteration formula exactly
+        for name in ["1.3B", "6.7B"] {
+            let m = table1_by_name(name).unwrap();
+            let batch = 512;
+            let tokens = batch * m.seq;
+            let layer = attn_fwd_flops(m.d_model, m.seq, tokens)
+                + ffn_fwd_flops(m.d_model, m.d_ff, tokens);
+            let iter = 4.0 * m.n_layers as f64 * layer
+                + 3.0 * head_fwd_flops(m.d_model, m.vocab, tokens);
+            let want = flops_per_iter_checkpointed(&m, batch);
+            assert!((iter / want - 1.0).abs() < 1e-12, "{name}: {iter:e} vs {want:e}");
+        }
     }
 
     #[test]

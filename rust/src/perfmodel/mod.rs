@@ -11,11 +11,15 @@ pub mod figures;
 pub mod flops;
 
 pub use batch_time::{
-    batch_time, batch_time_overlapped, BatchTime, CommOpts, OverlappedBatchTime, Scenario,
+    batch_time, batch_time_overlapped, fit_overlap_efficiency, hideable_comm_s, BatchTime,
+    CommOpts, OverlappedBatchTime, Scenario,
 };
 pub use collective_cost::{
-    allgather_phased, allgather_s, allreduce_phased, allreduce_s, alltoall_phased, alltoall_s,
-    lane_bytes_allgather, lane_bytes_allreduce, lane_bytes_alltoall, lane_bytes_alltoall_pxn,
-    lane_msgs_alltoall, GroupShape, PhasedCost,
+    allgather_phased, allgather_s, allreduce_phased, allreduce_s, alltoall_phased,
+    alltoall_pxn_schedule, alltoall_s, lane_bytes_allgather, lane_bytes_allreduce,
+    lane_bytes_alltoall, lane_bytes_alltoall_pxn, lane_msgs_alltoall, GroupShape, PhasedCost,
 };
-pub use flops::{flops_per_iter, flops_per_iter_checkpointed, percent_of_peak};
+pub use flops::{
+    attn_fwd_flops, ffn_fwd_flops, flops_per_iter, flops_per_iter_checkpointed, head_fwd_flops,
+    percent_of_peak,
+};

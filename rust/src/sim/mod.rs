@@ -13,10 +13,16 @@
 //! per-lane (intra-node / inter-node) byte and message split alongside
 //! the totals. When a cluster preset is selected
 //! (`EngineOptions::cluster`), every collective is priced with the α-β
-//! model and [`TrainLog::overlap_timeline`] records, per step, the
-//! serialized comm seconds against the critical-path comm seconds the
-//! nonblocking issue/wait schedule actually achieved (equal when
-//! `overlap` is off).
+//! model, every block with the preset's flop rate, and
+//! [`TrainLog::overlap_timeline`] records, per step, the three-lane
+//! (compute / NVLink / IB) schedule: serialized comm + compute seconds
+//! against the critical path the nonblocking issue/wait schedule
+//! actually achieved (equal when `overlap` is off). The whole-run
+//! timeline additionally yields [`TrainLog::overlap_efficiency`] — the
+//! knob `perfmodel::batch_time_overlapped` consumes, fitted from the
+//! measurement via `perfmodel::fit_overlap_efficiency` — closing the
+//! calibration loop `ted train --cluster …` → fitted efficiency →
+//! `paper_figures -- --overlap-eff …`.
 
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
@@ -29,22 +35,32 @@ use crate::engine::{StepStats, Trainer};
 use crate::runtime::Manifest;
 use crate::topology::Topology;
 
-/// One step's modeled comm schedule (rank 0's lanes): how long the step's
-/// collectives take fully serialized vs on the critical path the
-/// issue/wait schedule exposes. Zero without a cluster cost model.
+/// One step's modeled three-lane schedule (rank 0's lanes): how long the
+/// step's collectives and compute take fully serialized vs on the
+/// critical path the issue/wait schedule exposes. Zero without a cluster
+/// cost model.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct OverlapStep {
-    /// Sum of every collective phase duration (no overlap).
+    /// Sum of every collective phase duration (no overlap; always
+    /// `comm_intra_s + comm_inter_s`).
     pub serialized_s: f64,
-    /// Makespan of the two-lane schedule (`<= serialized_s`; equal when
+    /// NVLink-lane share of `serialized_s`.
+    pub comm_intra_s: f64,
+    /// InfiniBand-lane share of `serialized_s`.
+    pub comm_inter_s: f64,
+    /// Priced block compute on the compute lane this step.
+    pub compute_s: f64,
+    /// Makespan of the three-lane schedule
+    /// (`<= serialized_s + compute_s`; equal when
     /// `EngineOptions::overlap` is off).
     pub critical_s: f64,
 }
 
 impl OverlapStep {
-    /// Seconds of comm hidden by the overlap schedule this step.
+    /// Seconds of comm hidden by the overlap schedule this step (behind
+    /// the other comm lane or behind compute).
     pub fn hidden_s(&self) -> f64 {
-        self.serialized_s - self.critical_s
+        self.serialized_s + self.compute_s - self.critical_s
     }
 }
 
@@ -69,12 +85,25 @@ pub struct TrainLog {
     /// shrinks on the all-to-all)
     pub comm_inter_msgs: [(CommKind, u64); 6],
     /// per-step modeled overlap timeline (rank 0; empty-cost zeros when no
-    /// `EngineOptions::cluster` preset prices the run)
+    /// `EngineOptions::cluster` preset prices the run). Eval passes are
+    /// excluded — the timeline covers the training schedule only.
     pub overlap_timeline: Vec<OverlapStep>,
-    /// whole-run serialized comm seconds (rank 0's lane)
+    /// training-step serialized comm seconds (rank 0's lanes, summed
+    /// over `overlap_timeline` — eval comm excluded)
     pub comm_serialized_s: f64,
-    /// whole-run critical-path comm seconds (rank 0's lane)
-    pub comm_critical_s: f64,
+    /// NVLink-lane share of `comm_serialized_s`
+    pub comm_intra_s: f64,
+    /// InfiniBand-lane share of `comm_serialized_s`
+    pub comm_inter_s: f64,
+    /// training-step priced compute seconds (rank 0's compute lane)
+    pub compute_s: f64,
+    /// training-step critical path — the three-lane makespan, compute
+    /// included (rank 0's virtual clock, eval intervals excluded)
+    pub critical_s: f64,
+    /// overlap efficiency fitted from the measured three-lane training
+    /// timeline (`perfmodel::fit_overlap_efficiency`); the calibrated
+    /// knob the `perfmodel::figures` overlapped sweeps consume
+    pub overlap_efficiency: f64,
     /// peak activation-stash bytes over ranks (CAC memory cost)
     pub peak_stash_bytes: usize,
     /// peak optimizer up-cast temp bytes over ranks (Fig. 4 spike)
@@ -162,7 +191,21 @@ pub fn train(
         comm_inter_bytes[i] = (*kind, t.inter_bytes);
         comm_inter_msgs[i] = (*kind, t.inter_msgs);
     }
-    let tl0 = rez.timeline.get(0);
+    // whole-run training timeline: the sum of the per-step windows, so
+    // eval passes (fully serialized, not part of the schedule the
+    // efficiency knob models) never skew the calibration
+    let mut comm_serialized_s = 0.0;
+    let mut comm_intra_s = 0.0;
+    let mut comm_inter_s = 0.0;
+    let mut compute_s = 0.0;
+    let mut critical_s = 0.0;
+    for st in &out.overlap_steps {
+        comm_serialized_s += st.serialized_s;
+        comm_intra_s += st.comm_intra_s;
+        comm_inter_s += st.comm_inter_s;
+        compute_s += st.compute_s;
+        critical_s += st.critical_s;
+    }
 
     Ok(TrainLog {
         steps: out.steps,
@@ -174,8 +217,17 @@ pub fn train(
         comm_inter_bytes,
         comm_inter_msgs,
         overlap_timeline: out.overlap_steps,
-        comm_serialized_s: tl0.serialized_s,
-        comm_critical_s: tl0.clock_s,
+        comm_serialized_s,
+        comm_intra_s,
+        comm_inter_s,
+        compute_s,
+        critical_s,
+        overlap_efficiency: crate::perfmodel::fit_overlap_efficiency(
+            compute_s,
+            comm_intra_s,
+            comm_inter_s,
+            critical_s,
+        ),
         peak_stash_bytes: peak_stash,
         peak_opt_temp_bytes: peak_opt,
     })
@@ -216,6 +268,9 @@ fn rank_main(
         let tl_now = trainer.comm.timeline();
         overlap_steps.push(OverlapStep {
             serialized_s: tl_now.serialized_s - tl_prev.serialized_s,
+            comm_intra_s: tl_now.intra_serialized_s - tl_prev.intra_serialized_s,
+            comm_inter_s: tl_now.inter_serialized_s - tl_prev.inter_serialized_s,
+            compute_s: tl_now.compute_s - tl_prev.compute_s,
             critical_s: tl_now.clock_s - tl_prev.clock_s,
         });
         tl_prev = tl_now;
@@ -252,6 +307,10 @@ fn rank_main(
                 println!("  eval @ step {:>4}: val loss {v:.4}", step + 1);
             }
             evals.push((step + 1, v));
+            // eval comm/compute landed on the timeline after this step's
+            // snapshot; re-snapshot so the next step's window (and the
+            // whole-run calibration) covers training work only
+            tl_prev = trainer.comm.timeline();
         }
     }
 

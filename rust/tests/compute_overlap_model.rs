@@ -1,0 +1,135 @@
+//! Property tests for the compute-aware overlap model
+//! (`perfmodel::batch_time_overlapped`): over a grid of scenarios x all
+//! three transport strategies x the efficiency knob,
+//!
+//! * the comm critical path never drops below what the compute budget can
+//!   absorb: `critical_comm_s >= max(intra, inter) - hidden_behind_compute`;
+//! * the total never drops below the three-lane makespan bound
+//!   `max(compute, intra, inter)`;
+//! * eff = 0 reproduces the serialized `batch_time` model exactly (the
+//!   measured `--no-overlap` timeline — pinned against the functional
+//!   layer in `integration_accounting.rs`);
+//! * total time is strictly monotone decreasing in the calibrated
+//!   efficiency, for every strategy;
+//! * `fit_overlap_efficiency` inverts the model.
+
+use ted::collectives::{ALL_STRATEGIES, CollectiveStrategy};
+use ted::config::{model, ClusterConfig, ParallelConfig};
+use ted::perfmodel::{
+    batch_time, batch_time_overlapped, fit_overlap_efficiency, hideable_comm_s, CommOpts,
+    Scenario,
+};
+
+/// The scenario grid: two models, two clusters, two topologies, all three
+/// optimization settings.
+fn scenarios(strategy: CollectiveStrategy) -> Vec<Scenario> {
+    let mut out = Vec::new();
+    let cases = [
+        ("6.7B", 16usize, 128usize, 4usize, 1024usize, ClusterConfig::summit()),
+        ("6.7B", 16, 128, 4, 1024, ClusterConfig::thetagpu()),
+        ("1.3B", 32, 32, 1, 512, ClusterConfig::summit()),
+        ("2.7B", 16, 64, 2, 512, ClusterConfig::summit()),
+    ];
+    for (name, experts, gpus, tp, batch, cluster) in cases {
+        for opts in [CommOpts::baseline(), CommOpts::dtd_only(), CommOpts::optimized()] {
+            out.push(Scenario {
+                model: model::table1_by_name(name).unwrap(),
+                n_experts: experts,
+                par: ParallelConfig::derive(gpus, tp, experts.min(gpus / tp)).unwrap(),
+                cluster: cluster.clone(),
+                global_batch: batch,
+                opts: opts.with_strategy(strategy),
+            });
+        }
+    }
+    out
+}
+
+#[test]
+fn critical_path_respects_compute_budget_and_lane_bounds() {
+    for strategy in ALL_STRATEGIES {
+        for s in scenarios(strategy) {
+            for eff in [0.0, 0.25, 0.5, 0.75, 1.0] {
+                let o = batch_time_overlapped(&s, eff);
+                let b = &o.base;
+                let max_lane = b.comm_intra_s.max(b.comm_inter_s);
+                let tol = 1e-12 * (o.serialized_comm_s + b.compute_s).max(1.0);
+                // comm can hide behind compute only up to the budget
+                assert!(
+                    o.critical_comm_s >= max_lane - o.hidden_behind_compute_s - tol,
+                    "{strategy:?} eff={eff}: critical {} < {} - {}",
+                    o.critical_comm_s,
+                    max_lane,
+                    o.hidden_behind_compute_s
+                );
+                assert!(o.hidden_behind_compute_s <= eff * b.compute_s + tol);
+                // three-lane makespan bound on the total
+                let bound = b.compute_s.max(max_lane);
+                assert!(o.total() >= bound - tol, "{strategy:?} eff={eff}");
+                // bracketed by the serialized model
+                assert!(o.critical_comm_s <= o.serialized_comm_s + tol);
+                assert!(
+                    (o.hideable_comm_s
+                        - hideable_comm_s(b.compute_s, b.comm_intra_s, b.comm_inter_s))
+                    .abs()
+                        < tol
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn eff_zero_is_the_serialized_model() {
+    for strategy in ALL_STRATEGIES {
+        for s in scenarios(strategy) {
+            let o = batch_time_overlapped(&s, 0.0);
+            let t = batch_time(&s);
+            assert_eq!(o.critical_comm_s, o.serialized_comm_s);
+            let tol = 1e-9 * t.total().max(1.0);
+            assert!((o.total() - t.total()).abs() < tol, "{strategy:?}");
+            assert!(o.overlap_win() == 0.0 && o.hidden_behind_compute_s == 0.0);
+        }
+    }
+}
+
+#[test]
+fn total_time_monotone_in_calibrated_efficiency() {
+    let effs = [0.0, 0.2, 0.4, 0.6, 0.8, 1.0];
+    for strategy in ALL_STRATEGIES {
+        for s in scenarios(strategy) {
+            let totals: Vec<f64> =
+                effs.iter().map(|&e| batch_time_overlapped(&s, e).total()).collect();
+            let hideable = batch_time_overlapped(&s, 0.0).hideable_comm_s;
+            assert!(hideable > 0.0, "{strategy:?}: nothing hideable?");
+            for w in totals.windows(2) {
+                assert!(
+                    w[1] < w[0],
+                    "{strategy:?}: total must fall strictly with the knob ({totals:?})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fit_inverts_the_model_across_strategies() {
+    for strategy in ALL_STRATEGIES {
+        for s in scenarios(strategy).into_iter().take(3) {
+            for eff in [0.0, 0.33, 0.77, 1.0] {
+                let o = batch_time_overlapped(&s, eff);
+                let b = &o.base;
+                let fitted = fit_overlap_efficiency(
+                    b.compute_s,
+                    b.comm_intra_s,
+                    b.comm_inter_s,
+                    o.total(),
+                );
+                assert!(
+                    (fitted - eff).abs() < 1e-9,
+                    "{strategy:?}: fitted {fitted} != {eff}"
+                );
+            }
+        }
+    }
+}

@@ -3,7 +3,8 @@
 //! workload must match the `perfmodel::collective_cost` analytic
 //! predictions exactly, for every transport backend and several node
 //! sizes — and the measured **overlap timeline** must match the analytic
-//! two-lane schedule built from the very same α-β phased costs.
+//! three-lane (compute / NVLink / IB) schedule built from the very same
+//! α-β phased costs and compute prices.
 //!
 //! This is the contract that lets the perf model price a workload without
 //! running it: the functional layer and the analytic layer agree byte for
@@ -17,8 +18,9 @@ use ted::collectives::{
 };
 use ted::config::ClusterConfig;
 use ted::perfmodel::{
-    allgather_phased, allreduce_phased, lane_bytes_allgather, lane_bytes_allreduce,
-    lane_bytes_alltoall, lane_bytes_alltoall_pxn, lane_msgs_alltoall,
+    allgather_phased, allreduce_phased, alltoall_phased, alltoall_pxn_schedule,
+    lane_bytes_allgather, lane_bytes_allreduce, lane_bytes_alltoall, lane_bytes_alltoall_pxn,
+    lane_msgs_alltoall,
 };
 use ted::topology::{GroupId, GroupKind};
 use ted::util::tensor::Tensor;
@@ -289,12 +291,12 @@ fn measured_timeline_matches_analytic_schedule() {
 
 /// The `batch_time_overlapped` analytic model and the measured timeline
 /// agree on the bracket: with the efficiency knob at 0 the model equals
-/// the serialized measurement; the measured critical path implies an
-/// efficiency in [0, 1] that reproduces it exactly.
+/// the serialized measurement; any measured three-lane critical path is
+/// reproduced exactly by the `fit_overlap_efficiency` inversion.
 #[test]
 fn overlap_efficiency_knob_reproduces_measured_timeline() {
     use ted::config::{ClusterPreset, ParallelConfig};
-    use ted::perfmodel::{batch_time_overlapped, CommOpts, Scenario};
+    use ted::perfmodel::{batch_time_overlapped, fit_overlap_efficiency, CommOpts, Scenario};
     let s = Scenario {
         model: ted::config::model::table1_by_name("6.7B").unwrap(),
         n_experts: 16,
@@ -306,18 +308,203 @@ fn overlap_efficiency_knob_reproduces_measured_timeline() {
     let none = batch_time_overlapped(&s, 0.0);
     // eff=0 is the serialized (blocking, --no-overlap) model
     assert_eq!(none.critical_comm_s, none.serialized_comm_s);
-    // any measured critical path c in [max-lane, serialized] is
-    // reproduced exactly by eff = (serialized - c) / min(intra, inter)
-    let overlappable = none.base.comm_intra_s.min(none.base.comm_inter_s);
-    assert!(overlappable > 0.0);
-    let measured_critical = none.serialized_comm_s - 0.37 * overlappable;
-    let eff = (none.serialized_comm_s - measured_critical) / overlappable;
+    // any measured critical path (compute included) in
+    // [serialized + compute - hideable, serialized + compute] is
+    // reproduced exactly by the fitted knob
+    assert!(none.hideable_comm_s > 0.0);
+    let b = &none.base;
+    let measured_critical =
+        b.compute_s + none.serialized_comm_s - 0.37 * none.hideable_comm_s;
+    let eff = fit_overlap_efficiency(
+        b.compute_s,
+        b.comm_intra_s,
+        b.comm_inter_s,
+        measured_critical,
+    );
+    assert!((eff - 0.37).abs() < 1e-9, "fitted {eff}");
     let fitted = batch_time_overlapped(&s, eff);
     assert!(
-        (fitted.critical_comm_s - measured_critical).abs()
-            < 1e-12 * none.serialized_comm_s.max(1.0),
+        (fitted.total() - measured_critical).abs() < 1e-9 * measured_critical.max(1.0),
         "knob {} should reproduce the measured critical path",
         eff
     );
     assert!(fitted.overlap_win() > 0.0);
+}
+
+// ---------------------------------------------------------------------
+// compute-aware critical path: measured == analytic
+// ---------------------------------------------------------------------
+
+/// Analytic replica of the three-lane `TimelineBoard` transitions, driven
+/// by the same α-β phased costs the communicator prices with.
+#[derive(Default, Clone, Copy)]
+struct Lanes {
+    clock: f64,
+    intra_busy: f64,
+    inter_busy: f64,
+    serialized: f64,
+    compute: f64,
+}
+
+impl Lanes {
+    fn schedule(&mut self, intra: f64, inter: f64, post: f64, blocking: bool) -> f64 {
+        let mut t = self.clock;
+        if intra > 0.0 {
+            t = t.max(self.intra_busy) + intra;
+            self.intra_busy = t;
+        }
+        if inter > 0.0 {
+            t = t.max(self.inter_busy) + inter;
+            self.inter_busy = t;
+        }
+        if post > 0.0 {
+            t = t.max(self.intra_busy) + post;
+            self.intra_busy = t;
+        }
+        self.serialized += intra;
+        self.serialized += inter;
+        self.serialized += post;
+        if blocking {
+            self.clock = t;
+        }
+        t
+    }
+
+    fn advance_compute(&mut self, dt: f64) {
+        self.clock += dt;
+        self.compute += dt;
+    }
+
+    fn complete(&mut self, finish: f64) {
+        self.clock = self.clock.max(finish);
+    }
+}
+
+/// The scripted compute/comm workload: an all-to-all issued nonblocking,
+/// a priced slab of compute while it is in flight, the wait, then a
+/// blocking node-local pair all-gather.
+fn run_compute_workload(
+    strategy: CollectiveStrategy,
+    gpn: usize,
+    a2a_floats: usize,
+    compute_s: f64,
+    blocking: bool,
+) -> Arc<Rendezvous> {
+    const AG_FLOATS: usize = 1024;
+    let world_members: Vec<usize> = (0..WORLD).collect();
+    let rez = Rendezvous::new(WORLD);
+    std::thread::scope(|s| {
+        for r in 0..WORLD {
+            let rez = Arc::clone(&rez);
+            let world_members = world_members.clone();
+            s.spawn(move || {
+                let mut c = Communicator::with_transport(rez, r, strategy, gpn);
+                c.set_cost_model(ClusterConfig::summit());
+                let send: Vec<Vec<f32>> =
+                    (0..WORLD).map(|_| vec![0.5; a2a_floats]).collect();
+                if blocking {
+                    let _ = c.all_to_all(gid(0), &world_members, send);
+                    c.advance_compute(compute_s);
+                } else {
+                    let p = c.issue_all_to_all(gid(0), &world_members, send);
+                    c.advance_compute(compute_s);
+                    let _ = c.wait_all_to_all(p);
+                }
+                let pair = vec![r - r % 2, r - r % 2 + 1];
+                let g = Tensor::from_vec(&[AG_FLOATS], vec![1.0; AG_FLOATS]);
+                let _ = c.all_gather(gid(30 + r / 2), &pair, &g);
+            });
+        }
+    });
+    rez
+}
+
+/// Measured == analytic for the compute-aware critical path, on two node
+/// topologies x all three strategies, in both the comm-bound regime (the
+/// compute slab partially hides the a2a) and the compute-bound regime
+/// (the a2a hides entirely).
+#[test]
+fn measured_compute_aware_timeline_matches_analytic() {
+    const A2A_FLOATS: usize = 2048;
+    const AG_FLOATS: usize = 1024;
+    let world_members: Vec<usize> = (0..WORLD).collect();
+    for strategy in ALL_STRATEGIES {
+        for gpn in [2usize, 4] {
+            for compute_s in [1e-4f64, 1.0] {
+                let rez =
+                    run_compute_workload(strategy, gpn, A2A_FLOATS, compute_s, false);
+
+                // analytic replica from the same phased α-β costs (every
+                // rank is symmetric in this workload)
+                let cluster = pricing_cluster(gpn);
+                let local_bytes = ((WORLD - 1) * A2A_FLOATS * 4) as f64;
+                let (pre, wire, post) = if strategy == CollectiveStrategy::HierarchicalPxn {
+                    alltoall_pxn_schedule(&cluster, &world_members, local_bytes)
+                } else {
+                    let pc = alltoall_phased(&cluster, strategy, &world_members, local_bytes);
+                    (pc.intra_s, pc.inter_s, 0.0)
+                };
+                let ag =
+                    allgather_phased(&cluster, strategy, &[0usize, 1], (AG_FLOATS * 4) as f64);
+                let mut lanes = Lanes::default();
+                let finish = lanes.schedule(pre, wire, post, false);
+                lanes.advance_compute(compute_s);
+                lanes.complete(finish);
+                lanes.schedule(ag.intra_s, ag.inter_s, 0.0, true);
+
+                let tol = 1e-12 * (lanes.clock + lanes.serialized + 1.0);
+                for r in 0..WORLD {
+                    let tl = rez.timeline.get(r);
+                    let ctx = format!("strategy={strategy:?} gpn={gpn} compute={compute_s}");
+                    assert!(
+                        (tl.clock_s - lanes.clock).abs() < tol,
+                        "{ctx} rank={r}: clock {} != {}",
+                        tl.clock_s,
+                        lanes.clock
+                    );
+                    assert!(
+                        (tl.serialized_s - lanes.serialized).abs() < tol,
+                        "{ctx} rank={r}: serialized {} != {}",
+                        tl.serialized_s,
+                        lanes.serialized
+                    );
+                    assert!((tl.compute_s - lanes.compute).abs() < tol, "{ctx} rank={r}");
+                    assert!(
+                        (tl.serialized_s - tl.intra_serialized_s - tl.inter_serialized_s).abs()
+                            < tol,
+                        "{ctx} rank={r}: lanes must sum to the serialized total"
+                    );
+                }
+                // the overlap is real: exactly min(compute, a2a makespan)
+                // of the schedule hid behind the compute slab
+                let tl0 = rez.timeline.get(0);
+                let hidden = tl0.serialized_s + tl0.compute_s - tl0.clock_s;
+                let a2a_makespan = pre + wire + post;
+                assert!(
+                    (hidden - compute_s.min(a2a_makespan)).abs() < tol,
+                    "strategy={strategy:?} gpn={gpn}: hidden {hidden}"
+                );
+            }
+        }
+    }
+}
+
+/// `--no-overlap` (every op blocking): the measured timeline collapses to
+/// the serialized comm + compute sum — the eff = 0 analytic model.
+#[test]
+fn blocking_schedule_with_compute_serializes_exactly() {
+    for strategy in ALL_STRATEGIES {
+        for gpn in [2usize, 4] {
+            let rez = run_compute_workload(strategy, gpn, 2048, 0.25, true);
+            for r in 0..WORLD {
+                let tl = rez.timeline.get(r);
+                let want = tl.serialized_s + tl.compute_s;
+                assert!(
+                    (tl.clock_s - want).abs() < 1e-12 * want.max(1.0),
+                    "strategy={strategy:?} gpn={gpn} rank={r}: {} != {want}",
+                    tl.clock_s
+                );
+            }
+        }
+    }
 }
