@@ -4,12 +4,18 @@
 //!     cargo run --release --example paper_figures            # everything
 //!     cargo run --release --example paper_figures -- --only fig5
 //!     cargo run --release --example paper_figures -- --overlap-eff 0.42
+//!     cargo run --release --example paper_figures -- --json
 //!
 //! `--overlap-eff E` additionally prints the Fig. 5/8/10/11 sweeps under
-//! the compute-aware overlap model (hierarchical transport, comm priced
-//! on the critical path with the calibrated knob). Calibrate E from a
-//! measured run: `ted train --cluster <preset>` reports the fitted
-//! `overlap_efficiency` of its three-lane timeline.
+//! the compute-aware overlap model (comm priced on the critical path
+//! with the calibrated knob; Fig. 11 picks its transport via the
+//! planner). Calibrate E from a measured run: `ted train --cluster
+//! <preset>` reports the fitted `overlap_efficiency` of its three-lane
+//! timeline.
+//!
+//! `--json` appends one machine-readable line per sweep
+//! (`{"id":"fig10","rows":[...]}`, stable key order) so bench trajectory
+//! tooling can diff sweeps across PRs without scraping the text tables.
 //!
 //! Fig. 7 (loss parity) is a *measured* experiment — run
 //! `cargo run --release --example convergence_parity` for it.
@@ -18,14 +24,48 @@ use ted::config::ClusterConfig;
 use ted::memory::PHASES;
 use ted::perfmodel::figures as F;
 use ted::util::cli::Args;
+use ted::util::json::Json;
 
 fn want(only: &Option<String>, id: &str) -> bool {
     only.as_deref().map(|o| o == id).unwrap_or(true)
 }
 
+/// One `{"id": ..., "rows": [...]}` sweep line for `--json` mode.
+fn emit_json(id: &str, cluster: &ClusterConfig, rows: Vec<Json>) {
+    let doc = Json::obj([
+        ("id", Json::str(id)),
+        ("cluster", Json::str(cluster.name.clone())),
+        ("rows", Json::Arr(rows)),
+    ]);
+    println!("{}", doc.render());
+}
+
+fn scaling_row(p: &F::ScalingPoint) -> Json {
+    Json::obj([
+        ("gpus", Json::Num(p.gpus as f64)),
+        ("experts", Json::Num(p.experts as f64)),
+        ("tp", Json::Num(p.tp as f64)),
+        ("baseline_s", Json::Num(p.baseline_s)),
+        ("optimized_s", Json::Num(p.optimized_s)),
+        ("speedup_pct", Json::Num(p.speedup_pct())),
+    ])
+}
+
+fn weak_row(r: &F::WeakScalingRow) -> Json {
+    Json::obj([
+        ("gpus", Json::Num(r.gpus as f64)),
+        ("model", Json::str(r.model_name.clone())),
+        ("tp", Json::Num(r.tp as f64)),
+        ("baseline_s", Json::Num(r.baseline_s)),
+        ("optimized_s", Json::Num(r.optimized_s)),
+        ("pct_peak", Json::Num(r.pct_peak)),
+    ])
+}
+
 fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(&[])?;
-    args.reject_unknown(&["only", "cluster", "overlap-eff"])?;
+    let args = Args::from_env(&["json"])?;
+    args.reject_unknown(&["only", "cluster", "overlap-eff", "json"])?;
+    let json = args.flag("json");
     let only = args.get("only").map(|s| s.to_string());
     let cluster = ClusterConfig::by_name(args.get_or("cluster", "summit"))
         .ok_or_else(|| anyhow::anyhow!("unknown cluster (summit|thetagpu|perlmutter)"))?;
@@ -77,10 +117,29 @@ fn main() -> anyhow::Result<()> {
         let a2a_cut = 100.0 * (1.0 - rows[2].t.alltoall_s / rows[0].t.alltoall_s);
         let ar_cut = 100.0 * (1.0 - rows[2].t.allreduce_s / rows[0].t.allreduce_s);
         println!("reductions vs baseline: a2a {a2a_cut:.1}% (paper 64.12%), all-reduce {ar_cut:.1}% (paper 33%)\n");
+        if json {
+            emit_json(
+                "fig5",
+                &cluster,
+                rows.iter()
+                    .map(|r| {
+                        Json::obj([
+                            ("config", Json::str(r.label)),
+                            ("compute_s", Json::Num(r.t.compute_s)),
+                            ("alltoall_s", Json::Num(r.t.alltoall_s)),
+                            ("allreduce_s", Json::Num(r.t.allreduce_s)),
+                            ("allgather_s", Json::Num(r.t.allgather_s)),
+                            ("total_s", Json::Num(r.t.total())),
+                        ])
+                    })
+                    .collect(),
+            );
+        }
         if let Some(eff) = overlap_eff {
             println!("-- overlapped (hierarchical transport, overlap_efficiency {eff:.2}) --");
             println!("{:<10} {:>9} {:>11} {:>11} {:>9} {:>9}", "config", "compute", "comm(serl)", "comm(crit)", "hidden", "total");
-            for r in F::fig5_overlapped(&cluster, 128, 1024, eff) {
+            let orows = F::fig5_overlapped(&cluster, 128, 1024, eff);
+            for r in &orows {
                 println!(
                     "{:<10} {:>8.2}s {:>10.2}s {:>10.2}s {:>8.1}% {:>8.2}s",
                     r.label,
@@ -89,6 +148,25 @@ fn main() -> anyhow::Result<()> {
                     r.t.critical_comm_s,
                     100.0 * r.t.overlap_win(),
                     r.t.total()
+                );
+            }
+            if json {
+                emit_json(
+                    "fig5-overlapped",
+                    &cluster,
+                    orows
+                        .iter()
+                        .map(|r| {
+                            Json::obj([
+                                ("config", Json::str(r.label)),
+                                ("compute_s", Json::Num(r.t.base.compute_s)),
+                                ("serialized_comm_s", Json::Num(r.t.serialized_comm_s)),
+                                ("critical_comm_s", Json::Num(r.t.critical_comm_s)),
+                                ("overlap_win", Json::Num(r.t.overlap_win())),
+                                ("total_s", Json::Num(r.t.total())),
+                            ])
+                        })
+                        .collect(),
                 );
             }
             println!();
@@ -100,18 +178,30 @@ fn main() -> anyhow::Result<()> {
         for (name, batch) in [("1.3B", 512), ("2.7B", 512), ("6.7B", 1024)] {
             println!("-- base {name}, batch {batch} --");
             println!("{:>6} {:>8} {:>4} {:>12} {:>12} {:>9}", "gpus", "experts", "tp", "baseline(s)", "DTD+CAC(s)", "speedup");
-            for p in F::fig8(name, &cluster, &[32, 64, 128, 256], batch) {
+            let pts = F::fig8(name, &cluster, &[32, 64, 128, 256], batch);
+            for p in &pts {
                 println!(
                     "{:>6} {:>8} {:>4} {:>12.2} {:>12.2} {:>8.1}%",
                     p.gpus, p.experts, p.tp, p.baseline_s, p.optimized_s, p.speedup_pct()
                 );
             }
+            if json {
+                emit_json(&format!("fig8-{name}"), &cluster, pts.iter().map(scaling_row).collect());
+            }
             if let Some(eff) = overlap_eff {
                 println!("   overlapped (hierarchical, eff {eff:.2}):");
-                for p in F::fig8_overlapped(name, &cluster, &[32, 64, 128, 256], batch, eff) {
+                let opts = F::fig8_overlapped(name, &cluster, &[32, 64, 128, 256], batch, eff);
+                for p in &opts {
                     println!(
                         "{:>6} {:>8} {:>4} {:>12.2} {:>12.2} {:>8.1}%",
                         p.gpus, p.experts, p.tp, p.baseline_s, p.optimized_s, p.speedup_pct()
+                    );
+                }
+                if json {
+                    emit_json(
+                        &format!("fig8-{name}-overlapped"),
+                        &cluster,
+                        opts.iter().map(scaling_row).collect(),
                     );
                 }
             }
@@ -125,7 +215,8 @@ fn main() -> anyhow::Result<()> {
             cluster.name, cluster.gpus_per_node
         );
         println!("{:>6} {:>12} {:<18} {:>12} {:<18} {:>6}", "gpus", "TED (B)", "config", "DS-MoE (B)", "config", "ratio");
-        for r in F::fig9(&cluster, &[32, 64, 128, 256, 512]) {
+        let rows = F::fig9(&cluster, &[32, 64, 128, 256, 512]);
+        for r in &rows {
             println!(
                 "{:>6} {:>12.1} {:<18} {:>12.1} {:<18} {:>5.2}x",
                 r.gpus,
@@ -137,24 +228,50 @@ fn main() -> anyhow::Result<()> {
             );
         }
         println!("(paper band: 1.09-4.8x, growing with GPU count)\n");
+        if json {
+            emit_json(
+                "fig9",
+                &cluster,
+                rows.iter()
+                    .map(|r| {
+                        Json::obj([
+                            ("gpus", Json::Num(r.gpus as f64)),
+                            ("ted_params", Json::Num(r.ted_params as f64)),
+                            ("ted_config", Json::str(r.ted_desc.clone())),
+                            ("dsmoe_params", Json::Num(r.dsmoe_params as f64)),
+                            ("dsmoe_config", Json::str(r.dsmoe_desc.clone())),
+                            ("ratio", Json::Num(r.ratio())),
+                        ])
+                    })
+                    .collect(),
+            );
+        }
     }
 
     if want(&only, "fig10") {
         println!("== Fig. 10: strong scaling, 6.7B base, experts fixed at 4 (Summit, batch 1024) ==");
         println!("{:>6} {:>4} {:>12} {:>12} {:>9}", "gpus", "tp", "baseline(s)", "DTD+CAC(s)", "speedup");
-        for p in F::fig10("6.7B", &cluster, &[32, 64, 128, 256], 4, 1024) {
+        let pts = F::fig10("6.7B", &cluster, &[32, 64, 128, 256], 4, 1024);
+        for p in &pts {
             println!(
                 "{:>6} {:>4} {:>12.2} {:>12.2} {:>8.1}%",
                 p.gpus, p.tp, p.baseline_s, p.optimized_s, p.speedup_pct()
             );
         }
+        if json {
+            emit_json("fig10", &cluster, pts.iter().map(scaling_row).collect());
+        }
         if let Some(eff) = overlap_eff {
             println!("   overlapped (hierarchical, eff {eff:.2}):");
-            for p in F::fig10_overlapped("6.7B", &cluster, &[32, 64, 128, 256], 4, 1024, eff) {
+            let opts = F::fig10_overlapped("6.7B", &cluster, &[32, 64, 128, 256], 4, 1024, eff);
+            for p in &opts {
                 println!(
                     "{:>6} {:>4} {:>12.2} {:>12.2} {:>8.1}%",
                     p.gpus, p.tp, p.baseline_s, p.optimized_s, p.speedup_pct()
                 );
+            }
+            if json {
+                emit_json("fig10-overlapped", &cluster, opts.iter().map(scaling_row).collect());
             }
         }
         println!();
@@ -166,7 +283,8 @@ fn main() -> anyhow::Result<()> {
             "{:>6} {:<8} {:>4} {:>12} {:>12} {:>9} {:>10}",
             "gpus", "base", "tp", "baseline(s)", "DTD+CAC(s)", "speedup", "% of peak"
         );
-        for r in F::fig11_table2(&cluster) {
+        let rows = F::fig11_table2(&cluster);
+        for r in &rows {
             println!(
                 "{:>6} {:<8} {:>4} {:>12.2} {:>12.2} {:>8.1}% {:>9.1}%",
                 r.gpus,
@@ -178,9 +296,13 @@ fn main() -> anyhow::Result<()> {
                 r.pct_peak
             );
         }
+        if json {
+            emit_json("fig11", &cluster, rows.iter().map(weak_row).collect());
+        }
         if let Some(eff) = overlap_eff {
-            println!("   overlapped (hierarchical, eff {eff:.2}):");
-            for r in F::fig11_table2_overlapped(&cluster, eff) {
+            println!("   overlapped (planner-selected transport, eff {eff:.2}):");
+            let orows = F::fig11_table2_overlapped(&cluster, eff);
+            for r in &orows {
                 println!(
                     "{:>6} {:<8} {:>4} {:>12.2} {:>12.2} {:>8.1}% {:>9.1}%",
                     r.gpus,
@@ -191,6 +313,9 @@ fn main() -> anyhow::Result<()> {
                     100.0 * (1.0 - r.optimized_s / r.baseline_s),
                     r.pct_peak
                 );
+            }
+            if json {
+                emit_json("fig11-overlapped", &cluster, orows.iter().map(weak_row).collect());
             }
         }
         println!("(paper Table 2: 36.7 / 30.0 / 26.2 / 11.7 % of peak)\n");

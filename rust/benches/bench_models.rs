@@ -38,6 +38,36 @@ fn bench_figures() {
     });
 }
 
+fn bench_planner() {
+    use ted::config::model::table1_by_name;
+    use ted::planner::{plan, PlanRequest};
+    // the Fig. 5 / Table 2 headline config: full default knob space
+    let summit = ClusterConfig::summit();
+    bench::run("planner/6.7B_16e_128gpu_summit", 1, 10, || {
+        let mut req = PlanRequest::new(
+            table1_by_name("6.7B").unwrap(),
+            16,
+            128,
+            summit.clone(),
+            1024,
+        );
+        req.overlap_efficiency = 0.5;
+        std::hint::black_box(plan(&req));
+    });
+    // a divisible-node cluster searches all three transports
+    let theta = ClusterConfig::thetagpu();
+    bench::run("planner/6.7B_16e_128gpu_thetagpu", 1, 10, || {
+        let req = PlanRequest::new(
+            table1_by_name("6.7B").unwrap(),
+            16,
+            128,
+            theta.clone(),
+            1024,
+        );
+        std::hint::black_box(plan(&req));
+    });
+}
+
 fn bench_blocks() {
     let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let dir = Manifest::variant_dir(&root, "mini", 2, 2);
@@ -74,7 +104,8 @@ fn bench_blocks() {
 }
 
 fn main() {
-    println!("# bench_models — analytic figure generators + PJRT block timings");
+    println!("# bench_models — analytic figure generators + planner + PJRT block timings");
     bench_figures();
+    bench_planner();
     bench_blocks();
 }

@@ -77,13 +77,12 @@ impl ClusterConfig {
         }
     }
 
+    /// Look up a built-in preset by name. Routed through
+    /// [`ClusterPreset::parse`] so the preset enum is the single string
+    /// table: a new preset added there is automatically reachable here
+    /// (and vice versa, a name unknown there is unknown here).
     pub fn by_name(name: &str) -> Option<Self> {
-        match name {
-            "summit" => Some(Self::summit()),
-            "thetagpu" => Some(Self::thetagpu()),
-            "perlmutter" => Some(Self::perlmutter()),
-            _ => None,
-        }
+        ClusterPreset::parse(name).map(|p| p.config())
     }
 
     pub fn mem_per_gpu_bytes(&self) -> u64 {
@@ -123,13 +122,15 @@ pub enum ClusterPreset {
 }
 
 impl ClusterPreset {
+    /// Every built-in preset, in CLI-listing order. `parse`, `name`, and
+    /// `ClusterConfig::by_name` all derive from this list + [`Self::name`],
+    /// so a new preset only needs a variant, a `name` arm, and a `config`
+    /// arm — there is no second string table to forget.
+    pub const ALL: [ClusterPreset; 3] =
+        [ClusterPreset::Summit, ClusterPreset::ThetaGpu, ClusterPreset::Perlmutter];
+
     pub fn parse(s: &str) -> Option<Self> {
-        match s {
-            "summit" => Some(ClusterPreset::Summit),
-            "thetagpu" => Some(ClusterPreset::ThetaGpu),
-            "perlmutter" => Some(ClusterPreset::Perlmutter),
-            _ => None,
-        }
+        Self::ALL.into_iter().find(|p| p.name() == s)
     }
 
     pub fn name(self) -> &'static str {
@@ -181,11 +182,23 @@ mod tests {
 
     #[test]
     fn presets_round_trip() {
-        for p in [ClusterPreset::Summit, ClusterPreset::ThetaGpu, ClusterPreset::Perlmutter] {
+        for p in ClusterPreset::ALL {
             assert_eq!(ClusterPreset::parse(p.name()), Some(p));
             assert_eq!(p.config().name, p.name());
         }
         assert_eq!(ClusterPreset::parse("frontier"), None);
         assert_eq!(ClusterPreset::Summit.config().gpus_per_node, 6);
+    }
+
+    #[test]
+    fn by_name_and_parse_share_one_table() {
+        // the regression this unification closes: a preset reachable via
+        // one lookup but not the other
+        for p in ClusterPreset::ALL {
+            let via_config = ClusterConfig::by_name(p.name())
+                .unwrap_or_else(|| panic!("{} parses as a preset but not a config", p.name()));
+            assert_eq!(via_config, p.config());
+        }
+        assert!(ClusterConfig::by_name("frontier").is_none());
     }
 }

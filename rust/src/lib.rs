@@ -78,6 +78,42 @@
 //! `rust/tests/integration_accounting.rs`; the model's invariants live in
 //! `rust/tests/compute_overlap_model.rs`.
 //!
+//! ## The parallelism planner
+//!
+//! `planner` is the capability layer above the transports: given a
+//! (model, expert count, cluster, GPU budget, global batch) deployment,
+//! `planner::plan` searches the legal configuration space and returns a
+//! ranked plan list (`ted plan --cluster <preset> --model <name>
+//! --experts N --gpus G [--overlap-eff E] [--top K] [--json]`).
+//!
+//! * **Search space** — every tensor-parallel degree dividing the GPU
+//!   count (≤ `max_tp`) × every expert-parallel degree dividing both the
+//!   data-parallel degree and the expert count
+//!   (`config::ParallelConfig::derive`) × transport backend × overlap
+//!   on/off × CAC on/off × optimizer tile × micro-batch. Hierarchical
+//!   transports only enter when the node size divides the world, so
+//!   every emitted plan's `EngineOptions` pass `validate_topology` by
+//!   construction.
+//! * **Pruning order** — topology first, then the Eq. 4/5 memory model:
+//!   resident model state, then activations, then the section-4
+//!   optimizer up-cast spike, each against
+//!   `memory::MemoryModel::budget_bytes`; rejections carry the binding
+//!   reason and bytes (`planner::RejectReason`).
+//! * **Pricing inputs** — `perfmodel::batch_time_overlapped` with
+//!   per-pass-phase compute budgets (fwd:bwd:recompute = 1:2:1; comm
+//!   only hides behind its own phase's compute slice —
+//!   `perfmodel::hideable_comm_phased_s`), consuming the
+//!   `overlap_efficiency` knob fitted by `ted train --cluster <preset>`.
+//!
+//! `perfmodel::figures::fig11_table2*` pick their weak-scaling
+//! configurations through the planner, and the loop closes with a
+//! **measured** counterpart: `sim::replay_scenario` executes a plan's
+//! per-iteration op list (`perfmodel::comm_ops` — the same source the
+//! analytic pricing sums) through the real transports on the priced
+//! timeline; `rust/tests/planner_validation.rs` requires the planner's
+//! ranking to agree with the measured timelines on toy grids and pins
+//! the paper's Table-2 picks.
+//!
 //! Start with [`sim::SimCluster`] and [`engine::Trainer`], or the examples:
 //! `examples/quickstart.rs` is the smallest end-to-end TED training run.
 
@@ -90,6 +126,7 @@ pub mod metrics;
 pub mod moe;
 pub mod optimizer;
 pub mod perfmodel;
+pub mod planner;
 pub mod runtime;
 pub mod sim;
 pub mod topology;

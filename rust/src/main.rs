@@ -2,11 +2,13 @@
 //!
 //! Subcommands:
 //!   train    run TED training on the simulated cluster
+//!   plan     rank TED configurations for a deployment (the autotuner)
 //!   info     print topology / memory breakdown for a configuration
 //!   figures  shorthand pointing at the paper-figure generators
 //!
 //! Examples:
 //!   ted train --config tiny --world 4 --tp 2 --ep 2 --steps 20
+//!   ted plan  --cluster summit --model 6.7B --experts 16 --gpus 128
 //!   ted info  --model 6.7B --experts 16 --gpus 128 --tp 4 --cluster summit
 
 use anyhow::{anyhow, bail, Result};
@@ -14,6 +16,7 @@ use anyhow::{anyhow, bail, Result};
 use ted::config::{model, ClusterConfig, EngineOptions, ParallelConfig, TrainingConfig};
 use ted::data::{DataGen, SyntheticLM, TextCorpus};
 use ted::memory::{MemoryModel, PHASES};
+use ted::planner::{plan, report_json, PlanRequest};
 use ted::runtime::Manifest;
 use ted::sim::{train, RunConfig};
 use ted::topology::Topology;
@@ -29,17 +32,31 @@ USAGE:
              [--transport flat|hierarchical|hierarchical-pxn]
              [--gpus-per-node N] [--cluster summit|thetagpu|perlmutter]
              [--no-overlap]
+  ted plan   [--cluster summit|thetagpu|perlmutter] [--model NAME]
+             [--experts E] [--gpus G] [--batch N] [--overlap-eff E]
+             [--max-tp N] [--micro N] [--top K] [--json]
   ted info   --model {1.3B|2.7B|6.7B|13.0B} --experts E --gpus G --tp T
              [--cluster summit|thetagpu|perlmutter]
   ted figures [--only ID]    (alias of `cargo run --example paper_figures`)
 
-Selecting --cluster threads the preset's gpus-per-node into the transport
-layer and prices a three-lane (compute/NVLink/IB) overlap timeline:
-serialized comm + compute vs the critical path, plus a fitted
-overlap-efficiency knob for the paper_figures overlapped sweeps
-(--overlap-eff); --no-overlap falls back to blocking collectives.
+`ted plan` searches every legal (tp, ep, dp) factorization x transport x
+{overlap, CAC, optimizer tiling, micro-batch}, prunes with the paper's
+memory model (reporting WHY infeasible points fail: model state vs
+activations vs the optimizer spike), prices survivors with the
+compute-aware overlap model, and prints a ranked plan list.
+Calibrate --overlap-eff from a measured run: `ted train --cluster
+<preset>` reports the fitted knob. --json emits a machine-readable
+report for trajectory diffing.
 
-`make artifacts` must have produced artifacts/<config>_tp<T>_b<B>/ first.";
+Selecting --cluster on `train` threads the preset's gpus-per-node into
+the transport layer and prices a three-lane (compute/NVLink/IB) overlap
+timeline: serialized comm + compute vs the critical path, plus the
+fitted overlap-efficiency knob the planner and the paper_figures
+overlapped sweeps consume; --no-overlap falls back to blocking
+collectives.
+
+`make artifacts` must have produced artifacts/<config>_tp<T>_b<B>/ first
+(train only; plan/info need no artifacts).";
 
 fn main() {
     if let Err(e) = run() {
@@ -54,7 +71,7 @@ fn run() -> Result<()> {
         println!("{USAGE}");
         return Ok(());
     };
-    let flags = ["no-dtd", "no-cac", "no-tiling", "no-overlap", "verbose", "help"];
+    let flags = ["no-dtd", "no-cac", "no-tiling", "no-overlap", "verbose", "help", "json"];
     let args = Args::parse(all.into_iter().skip(1), &flags)?;
     if args.flag("help") {
         println!("{USAGE}");
@@ -62,6 +79,7 @@ fn run() -> Result<()> {
     }
     match cmd.as_str() {
         "train" => cmd_train(&args),
+        "plan" => cmd_plan(&args),
         "info" => cmd_info(&args),
         "figures" => {
             println!("run: cargo run --release --example paper_figures{}",
@@ -182,6 +200,132 @@ fn cmd_train(args: &Args) -> Result<()> {
              cargo run --release --example paper_figures -- --overlap-eff {:.3}",
             log.overlap_efficiency
         );
+    }
+    Ok(())
+}
+
+/// `ted plan`: the parallelism autotuner. Enumerate, prune (with
+/// reasons), price with the calibrated overlap model, rank.
+fn cmd_plan(args: &Args) -> Result<()> {
+    args.reject_unknown(&[
+        "model", "experts", "gpus", "batch", "cluster", "overlap-eff", "max-tp", "micro", "top",
+        "json",
+    ])?;
+    let cluster = ClusterConfig::by_name(args.get_or("cluster", "summit"))
+        .ok_or_else(|| anyhow!("unknown --cluster (summit|thetagpu|perlmutter)"))?;
+    let name = args.get_or("model", "6.7B");
+    let m = model::table1_by_name(name)
+        .or_else(|| model::executable(name))
+        .ok_or_else(|| anyhow!("unknown model '{name}'"))?;
+    let experts = args.get_usize("experts", 16)?;
+    let gpus = args.get_usize("gpus", 128)?;
+    let batch = args.get_usize("batch", m.batch_size)?;
+    let top = args.get_usize("top", 10)?;
+    if experts == 0 || gpus == 0 || batch == 0 {
+        bail!("--experts/--gpus/--batch must be positive");
+    }
+    let mut req = PlanRequest::new(m, experts, gpus, cluster, batch);
+    let eff = args.get_f64("overlap-eff", 0.0)?;
+    if !(0.0..=1.0).contains(&eff) {
+        bail!("--overlap-eff must be in [0, 1], got {eff}");
+    }
+    req.overlap_efficiency = eff;
+    req.max_tp = args.get_usize("max-tp", req.max_tp)?;
+    if req.max_tp == 0 {
+        bail!("--max-tp must be positive");
+    }
+    if args.get("micro").is_some() {
+        let micro = args.get_usize("micro", 1)?;
+        if micro == 0 {
+            bail!("--micro must be positive");
+        }
+        req.micro_batch_choices = vec![micro];
+    }
+
+    let report = plan(&req);
+    if args.flag("json") {
+        println!("{}", report_json(&req, &report, top).render());
+        return Ok(());
+    }
+
+    println!(
+        "ted plan: {} x{}e on {} GPUs of {} (batch {}, overlap-eff {:.2}, max tp {})",
+        req.model.name, req.n_experts, req.gpus, req.cluster.name, req.global_batch,
+        req.overlap_efficiency, req.max_tp
+    );
+    if report.plans.is_empty() {
+        println!("no feasible configuration — every point was pruned:");
+    } else {
+        let shown = if top == 0 { report.plans.len() } else { top.min(report.plans.len()) };
+        println!("{} feasible plans; top {}:", report.plans.len(), shown);
+        println!(
+            "{:>4} {:>4} {:>4} {:>7} {:<16} {:>7} {:>5} {:>6} {:>9} {:>9} {:>9} {:>9} {:>9}",
+            "rank", "tp", "ep", "dp_exp", "transport", "overlap", "cac", "tile",
+            "total(s)", "compute", "comm", "hidden", "headroom"
+        );
+        for (i, p) in report.plans.iter().take(shown).enumerate() {
+            let k = &p.knobs;
+            println!(
+                "{:>4} {:>4} {:>4} {:>7} {:<16} {:>7} {:>5} {:>6} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>8.1}G",
+                i + 1,
+                k.par.tp,
+                k.par.ep,
+                k.par.dp_exp,
+                k.strategy.name(),
+                k.overlap,
+                k.cac,
+                k.tile.map(|t| format!("{}M", t / 1_000_000)).unwrap_or_else(|| "off".into()),
+                p.total_s(),
+                p.time.base.compute_s,
+                p.time.critical_comm_s,
+                p.hidden_comm_s(),
+                p.headroom_bytes() as f64 / (1u64 << 30) as f64
+            );
+        }
+        let best = report.best().unwrap();
+        println!(
+            "\nrecommended: {} (memory-bound by {}, {:.1} GiB headroom)",
+            best.knobs.describe(),
+            best.mem_peak_phase.name(),
+            best.headroom_bytes() as f64 / (1u64 << 30) as f64
+        );
+        let mut cmd = format!(
+            "ted train --world {} --tp {} --ep {} --transport {}",
+            best.knobs.par.world,
+            best.knobs.par.tp,
+            best.knobs.par.ep,
+            best.knobs.strategy.name()
+        );
+        if best.knobs.gpus_per_node > 0 {
+            // the preset node size divides this world, so the cluster
+            // preset attaches cleanly (pricing the overlap timeline and
+            // supplying the node boundary)
+            cmd.push_str(&format!(" --cluster {}", req.cluster.name));
+            if best.knobs.gpus_per_node != req.cluster.gpus_per_node {
+                cmd.push_str(&format!(" --gpus-per-node {}", best.knobs.gpus_per_node));
+            }
+        }
+        cmd.push_str(&format!(" --micro {}", best.knobs.micro_batch));
+        if !best.knobs.overlap {
+            cmd.push_str(" --no-overlap");
+        }
+        if !best.knobs.cac {
+            cmd.push_str(" --no-cac");
+        }
+        if best.knobs.tile.is_none() {
+            cmd.push_str(" --no-tiling");
+        }
+        println!("run it: {cmd}");
+    }
+    let summary = report.rejection_summary();
+    if !summary.is_empty() {
+        let parts: Vec<String> = summary.iter().map(|(k, n)| format!("{k} {n}")).collect();
+        println!("pruned: {}", parts.join(", "));
+        for kind in ["model-state", "activation", "optimizer-spike", "topology"] {
+            if let Some(r) = report.rejections.iter().find(|r| r.reason.kind() == kind) {
+                println!("  e.g. {}: {}", r.knobs.describe(), r.reason.describe());
+            }
+        }
     }
     Ok(())
 }

@@ -9,6 +9,7 @@ use crate::perfmodel::batch_time::{
     batch_time, batch_time_overlapped, BatchTime, CommOpts, OverlappedBatchTime, Scenario,
 };
 use crate::perfmodel::flops::percent_of_peak;
+use crate::planner::{plan, PlanRequest};
 
 pub const TILE: usize = 1_800_000; // the paper's 1.8M-parameter tile
 
@@ -300,9 +301,9 @@ pub fn fig11_table2(cluster: &ClusterConfig) -> Vec<WeakScalingRow> {
     fig11_table2_priced(cluster, None)
 }
 
-/// Fig. 11 / Table 2 under the compute-aware overlap model
-/// (hierarchical transport, calibrated efficiency knob); `pct_peak`
-/// reflects the overlapped iteration time.
+/// Fig. 11 / Table 2 under the compute-aware overlap model (calibrated
+/// efficiency knob, best transport the planner finds executable);
+/// `pct_peak` reflects the overlapped iteration time.
 pub fn fig11_table2_overlapped(
     cluster: &ClusterConfig,
     overlap_efficiency: f64,
@@ -310,6 +311,16 @@ pub fn fig11_table2_overlapped(
     fig11_table2_priced(cluster, Some(overlap_efficiency))
 }
 
+/// Each weak-scaling rung's configuration comes from the **planner**
+/// (PR 5) rather than a hand-rolled `min_tp_to_fit` ladder: the search
+/// over (tp, ep) factorizations with the paper's optimized switches (DTD
+/// + CAC + tiled optimizer, 16 experts) picks the fastest
+/// memory-feasible point. `overlap = None` restricts the space to the
+/// paper's serialized flat pricing; `Some(eff)` searches every
+/// executable transport with overlap on at the calibrated knob. The
+/// baseline bar prices the communication-unoptimized engine on the
+/// *same* chosen topology and transport — Fig. 11 compares the
+/// communication optimizations, not topologies.
 fn fig11_table2_priced(cluster: &ClusterConfig, overlap: Option<f64>) -> Vec<WeakScalingRow> {
     let ladder = [(32usize, "1.3B"), (64, "2.7B"), (128, "6.7B"), (256, "13.0B")];
     let experts = 16;
@@ -318,14 +329,43 @@ fn fig11_table2_priced(cluster: &ClusterConfig, overlap: Option<f64>) -> Vec<Wea
         .map(|&(gpus, name)| {
             let m = model::table1_by_name(name).unwrap();
             let batch = m.batch_size;
-            let p = strong_point_priced(&m, experts, gpus, cluster, batch, overlap);
-            let pct = percent_of_peak(&m, batch, p.optimized_s, gpus, cluster.peak_half_tflops);
+            let mut req = PlanRequest::new(m.clone(), experts, gpus, cluster.clone(), batch);
+            req.cac_choices = vec![true];
+            req.tile_choices = vec![Some(TILE)];
+            match overlap {
+                None => {
+                    req.strategies = vec![CollectiveStrategy::Flat];
+                    req.overlap_choices = vec![false];
+                }
+                Some(eff) => {
+                    req.overlap_efficiency = eff;
+                    req.overlap_choices = vec![true];
+                }
+            }
+            let report = plan(&req);
+            let best = report
+                .best()
+                .unwrap_or_else(|| panic!("{name} with {experts} experts does not fit on {gpus}"))
+                .clone();
+            let optimized_s = best.total_s();
+            // baseline: same topology and transport, optimizations off
+            let sbase = Scenario {
+                model: m.clone(),
+                n_experts: experts,
+                par: best.knobs.par,
+                cluster: cluster.clone(),
+                global_batch: batch,
+                opts: CommOpts::baseline().with_strategy(best.knobs.strategy),
+            };
+            let eff = if best.knobs.overlap { req.overlap_efficiency } else { 0.0 };
+            let baseline_s = batch_time_overlapped(&sbase, eff).total();
+            let pct = percent_of_peak(&m, batch, optimized_s, gpus, cluster.peak_half_tflops);
             WeakScalingRow {
                 gpus,
                 model_name: name.to_string(),
-                tp: p.tp,
-                baseline_s: p.baseline_s,
-                optimized_s: p.optimized_s,
+                tp: best.knobs.par.tp,
+                baseline_s,
+                optimized_s,
                 pct_peak: pct,
             }
         })

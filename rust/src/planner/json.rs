@@ -1,0 +1,130 @@
+//! Machine-readable planner output (`ted plan --json`): a stable,
+//! single-line JSON document bench/trajectory tooling can diff across
+//! PRs. Keys are alphabetical (`util::json` renders `BTreeMap` order);
+//! plans appear in rank order.
+
+use crate::planner::{Plan, PlanReport, PlanRequest};
+use crate::util::json::Json;
+
+const GIB: f64 = (1u64 << 30) as f64;
+
+fn knob_fields(p: &Plan) -> Vec<(&'static str, Json)> {
+    let k = &p.knobs;
+    vec![
+        ("tp", Json::Num(k.par.tp as f64)),
+        ("ep", Json::Num(k.par.ep as f64)),
+        ("dp_exp", Json::Num(k.par.dp_exp as f64)),
+        ("dp_nonexp", Json::Num(k.par.dp_nonexp as f64)),
+        ("strategy", Json::str(k.strategy.name())),
+        ("gpus_per_node", Json::Num(k.gpus_per_node as f64)),
+        ("overlap", Json::Bool(k.overlap)),
+        ("dtd", Json::Bool(k.dtd)),
+        ("cac", Json::Bool(k.cac)),
+        ("tile", k.tile.map(|t| Json::Num(t as f64)).unwrap_or(Json::Null)),
+        ("micro_batch", Json::Num(k.micro_batch as f64)),
+    ]
+}
+
+fn plan_json(p: &Plan) -> Json {
+    let mut fields = knob_fields(p);
+    let t = &p.time;
+    fields.extend([
+        ("total_s", Json::Num(p.total_s())),
+        ("compute_s", Json::Num(t.base.compute_s)),
+        ("comm_intra_s", Json::Num(t.base.comm_intra_s)),
+        ("comm_inter_s", Json::Num(t.base.comm_inter_s)),
+        ("serialized_comm_s", Json::Num(t.serialized_comm_s)),
+        ("critical_comm_s", Json::Num(t.critical_comm_s)),
+        ("hidden_comm_s", Json::Num(p.hidden_comm_s())),
+        ("overlap_efficiency", Json::Num(t.overlap_efficiency)),
+        ("mem_peak_phase", Json::str(p.mem_peak_phase.name())),
+        ("mem_peak_gib", Json::Num(p.mem_peak_bytes as f64 / GIB)),
+        ("mem_budget_gib", Json::Num(p.mem_budget_bytes as f64 / GIB)),
+        ("mem_headroom_gib", Json::Num(p.headroom_bytes() as f64 / GIB)),
+    ]);
+    Json::obj(fields)
+}
+
+/// The full report as one JSON document; `top` caps the emitted plan list
+/// (0 = all). Rejections are summarized per reason kind with one example
+/// each — the full list is usually dominated by repeats of one cause.
+pub fn report_json(req: &PlanRequest, report: &PlanReport, top: usize) -> Json {
+    let request = Json::obj([
+        ("model", Json::str(req.model.name.clone())),
+        ("experts", Json::Num(req.n_experts as f64)),
+        ("gpus", Json::Num(req.gpus as f64)),
+        ("cluster", Json::str(req.cluster.name.clone())),
+        ("global_batch", Json::Num(req.global_batch as f64)),
+        ("overlap_efficiency", Json::Num(req.overlap_efficiency)),
+        ("max_tp", Json::Num(req.max_tp as f64)),
+        ("capacity_factor", Json::Num(req.capacity_factor)),
+    ]);
+    let shown = if top == 0 { report.plans.len() } else { top.min(report.plans.len()) };
+    let plans = Json::Arr(report.plans[..shown].iter().map(plan_json).collect());
+    let rejections = Json::Arr(
+        report
+            .rejection_summary()
+            .into_iter()
+            .map(|(kind, count)| {
+                let example = report
+                    .rejections
+                    .iter()
+                    .find(|r| r.reason.kind() == kind)
+                    .map(|r| {
+                        Json::str(format!("{}: {}", r.knobs.describe(), r.reason.describe()))
+                    })
+                    .unwrap_or(Json::Null);
+                Json::obj([
+                    ("kind", Json::str(kind)),
+                    ("count", Json::Num(count as f64)),
+                    ("example", example),
+                ])
+            })
+            .collect(),
+    );
+    Json::obj([
+        ("request", request),
+        ("feasible", Json::Num(report.plans.len() as f64)),
+        ("plans", plans),
+        ("rejections", rejections),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::table1_by_name;
+    use crate::config::ClusterConfig;
+    use crate::planner::plan;
+
+    #[test]
+    fn report_renders_and_parses_back() {
+        let req = PlanRequest::new(
+            table1_by_name("6.7B").unwrap(),
+            16,
+            128,
+            ClusterConfig::summit(),
+            1024,
+        );
+        let report = plan(&req);
+        let doc = report_json(&req, &report, 3);
+        let text = doc.render();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, doc);
+        assert_eq!(back.get("request").unwrap().get("model").unwrap().as_str(), Some("6.7B"));
+        let plans = back.get("plans").unwrap().as_array().unwrap();
+        assert_eq!(plans.len(), 3);
+        // ranked: totals non-decreasing in emitted order
+        let totals: Vec<f64> =
+            plans.iter().map(|p| p.get("total_s").unwrap().as_f64().unwrap()).collect();
+        for w in totals.windows(2) {
+            assert!(w[0] <= w[1] + 1e-15);
+        }
+        assert!(back.get("feasible").unwrap().as_f64().unwrap() >= 3.0);
+        // every emitted plan names its binding memory phase and headroom
+        for p in plans {
+            assert!(p.get("mem_peak_phase").unwrap().as_str().is_some());
+            assert!(p.get("mem_headroom_gib").unwrap().as_f64().unwrap() >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,635 @@
+//! The parallelism planner: a memory- and comm-aware autotuner that picks
+//! the best TED configuration for a (model, experts, cluster, GPU budget,
+//! global batch) deployment — the capability layer above the transports
+//! that turns the calibrated analytic models from "reproduce the paper's
+//! numbers" into "recommend a deployment" (Table 2 / Fig. 11's premise:
+//! the *right* hybrid beats the state of the art).
+//!
+//! Pipeline, in pruning order:
+//!
+//! 1. **Enumerate** the legal knob space: every tensor-parallel degree
+//!    dividing the GPU count (up to `max_tp`), every expert-parallel
+//!    degree dividing both the data-parallel degree and the expert count
+//!    (`ParallelConfig::derive`), every transport backend
+//!    (`CollectiveStrategy`), overlap on/off, CAC on/off, the
+//!    tiled-optimizer tile size, and the micro-batch. Hierarchical
+//!    transports are only emitted when the cluster's node size divides
+//!    the world — every surviving plan's `EngineOptions` passes
+//!    `validate_topology` *by construction*.
+//! 2. **Prune on memory** with the paper's Eq. 4/5 model
+//!    (`memory::MemoryModel`), recording *why* an infeasible point fails:
+//!    resident model state (Eq. 4), activations, or the section-4
+//!    optimizer up-cast spike — each compared against the post-reserve
+//!    byte budget (`MemoryModel::budget_bytes`).
+//! 3. **Price** the survivors with the calibrated compute-aware overlap
+//!    model (`perfmodel::batch_time_overlapped`, per-phase compute
+//!    budgets): overlap-on plans consume the fitted `overlap_efficiency`
+//!    from a measured `ted train --cluster <preset>` run; overlap-off
+//!    plans price fully serialized.
+//! 4. **Rank** by modeled iteration time, ties broken by a canonical knob
+//!    order ([`PlanKnobs::rank_key`]) so the choice is deterministic.
+//!
+//! The CLI surface is `ted plan --cluster <preset> --model <name>
+//! --experts N --gpus G [--overlap-eff E] [--top K] [--json]`;
+//! `perfmodel::figures::fig11_table2*` consume the planner instead of
+//! hand-rolled configs, and `sim::replay` closes the loop by *measuring*
+//! a plan's collective schedule on the simulated cluster — the
+//! plan-vs-measured ranking agreement is enforced in
+//! `rust/tests/planner_validation.rs`.
+
+pub mod json;
+
+pub use json::report_json;
+
+use crate::collectives::{ALL_STRATEGIES, CollectiveStrategy};
+use crate::config::{ClusterConfig, EngineOptions, ModelConfig, ParallelConfig};
+use crate::memory::{MemoryModel, Phase};
+use crate::perfmodel::{batch_time, overlap_from_base, CommOpts, OverlappedBatchTime, Scenario};
+
+/// The paper's 1.8M-parameter optimizer tile (re-exported for defaults).
+pub const DEFAULT_TILE: usize = crate::perfmodel::figures::TILE;
+
+/// What to plan for: the workload, the cluster, and the knob space to
+/// search. [`PlanRequest::new`] fills the full default space; narrow the
+/// choice vectors to restrict it (e.g. `overlap_choices = vec![false]`
+/// for a serialized-only search).
+#[derive(Debug, Clone)]
+pub struct PlanRequest {
+    pub model: ModelConfig,
+    pub n_experts: usize,
+    /// Total GPUs (the world size every factorization must multiply to).
+    pub gpus: usize,
+    pub cluster: ClusterConfig,
+    /// Global batch in sequences.
+    pub global_batch: usize,
+    /// Calibrated overlap-efficiency knob consumed by overlap-on plans
+    /// (fit one with `ted train --cluster <preset>`; 0 prices overlap-on
+    /// identically to overlap-off, with ties broken toward overlap-on).
+    pub overlap_efficiency: f64,
+    /// Largest tensor-parallel degree to consider.
+    pub max_tp: usize,
+    /// MoE router capacity factor the pricing assumes.
+    pub capacity_factor: f64,
+    pub strategies: Vec<CollectiveStrategy>,
+    pub overlap_choices: Vec<bool>,
+    pub cac_choices: Vec<bool>,
+    /// Optimizer tiling candidates: `Some(tile)` tiled, `None` untiled.
+    pub tile_choices: Vec<Option<usize>>,
+    /// Micro-batch (sequences per GPU between checkpoints) candidates —
+    /// a memory knob: activations scale with it, priced time does not.
+    pub micro_batch_choices: Vec<usize>,
+}
+
+impl PlanRequest {
+    pub fn new(
+        model: ModelConfig,
+        n_experts: usize,
+        gpus: usize,
+        cluster: ClusterConfig,
+        global_batch: usize,
+    ) -> Self {
+        // the paper searches tp up to the node size; allow the ladder to
+        // cross the node (Table 2's 13B rung needs tp=8 on 6-GPU nodes)
+        let max_tp = cluster.gpus_per_node.max(8);
+        PlanRequest {
+            model,
+            n_experts,
+            gpus,
+            cluster,
+            global_batch,
+            overlap_efficiency: 0.0,
+            max_tp,
+            capacity_factor: 1.25,
+            strategies: ALL_STRATEGIES.to_vec(),
+            overlap_choices: vec![true, false],
+            cac_choices: vec![true, false],
+            tile_choices: vec![Some(DEFAULT_TILE), None],
+            micro_batch_choices: vec![1],
+        }
+    }
+}
+
+/// One candidate configuration: the full knob assignment a plan prices.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanKnobs {
+    pub par: ParallelConfig,
+    pub strategy: CollectiveStrategy,
+    /// Node size the engine would run with: the cluster's when it divides
+    /// the world (required for the hierarchical transports), else 0
+    /// (flat, topology-oblivious execution). Pricing always uses the
+    /// cluster's physical node size.
+    pub gpus_per_node: usize,
+    pub overlap: bool,
+    pub dtd: bool,
+    pub cac: bool,
+    pub tile: Option<usize>,
+    pub micro_batch: usize,
+}
+
+impl PlanKnobs {
+    /// The engine options that would execute this plan; passes
+    /// `validate_topology(par.world)` for every emitted plan.
+    pub fn engine_options(&self) -> EngineOptions {
+        EngineOptions {
+            dtd: self.dtd,
+            cac: self.cac,
+            optimizer_tiling: self.tile.is_some(),
+            tile_size: self.tile.unwrap_or(DEFAULT_TILE),
+            strategy: self.strategy,
+            gpus_per_node: self.gpus_per_node,
+            overlap: self.overlap,
+            ..EngineOptions::default()
+        }
+    }
+
+    /// Canonical tie-break order: smaller tp first (less tensor-parallel
+    /// comm at equal price), then larger ep (less expert-parameter
+    /// replication), transport in CLI-listing order, overlap-on before
+    /// off, CAC-on before off, tiled before untiled, smaller micro-batch.
+    pub fn rank_key(&self) -> (usize, usize, usize, bool, bool, bool, usize) {
+        let strat = ALL_STRATEGIES
+            .iter()
+            .position(|s| *s == self.strategy)
+            .unwrap_or(ALL_STRATEGIES.len());
+        (
+            self.par.tp,
+            self.par.dp_exp, // larger ep == smaller dp_exp first
+            strat,
+            !self.overlap,
+            !self.cac,
+            self.tile.is_none(),
+            self.micro_batch,
+        )
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "tp{} ep{} dp_exp{} {} overlap={} cac={} tile={} micro={}",
+            self.par.tp,
+            self.par.ep,
+            self.par.dp_exp,
+            self.strategy.name(),
+            self.overlap,
+            self.cac,
+            self.tile.map(|t| t.to_string()).unwrap_or_else(|| "off".into()),
+            self.micro_batch
+        )
+    }
+}
+
+/// Why an enumerated point was pruned, with the binding numbers.
+#[derive(Debug, Clone)]
+pub enum RejectReason {
+    /// The knob combination cannot execute on this topology at all.
+    Topology(String),
+    /// Eq. 4 resident model state (params + grads + optimizer shards)
+    /// exceeds the budget even before activations.
+    ModelState { need_bytes: u64, budget_bytes: u64 },
+    /// Model state fits but the forward/backward activation working set
+    /// does not.
+    Activation { need_bytes: u64, budget_bytes: u64 },
+    /// Everything fits until the optimizer step's fp32 up-cast spike
+    /// (section 4; tiling is the fix).
+    OptimizerSpike { need_bytes: u64, budget_bytes: u64 },
+}
+
+impl RejectReason {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RejectReason::Topology(_) => "topology",
+            RejectReason::ModelState { .. } => "model-state",
+            RejectReason::Activation { .. } => "activation",
+            RejectReason::OptimizerSpike { .. } => "optimizer-spike",
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        let gib = |b: u64| b as f64 / (1u64 << 30) as f64;
+        match self {
+            RejectReason::Topology(msg) => msg.clone(),
+            RejectReason::ModelState { need_bytes, budget_bytes } => format!(
+                "model state {:.2} GiB exceeds budget {:.2} GiB",
+                gib(*need_bytes),
+                gib(*budget_bytes)
+            ),
+            RejectReason::Activation { need_bytes, budget_bytes } => format!(
+                "activations push peak to {:.2} GiB over budget {:.2} GiB",
+                gib(*need_bytes),
+                gib(*budget_bytes)
+            ),
+            RejectReason::OptimizerSpike { need_bytes, budget_bytes } => format!(
+                "optimizer up-cast spike peaks at {:.2} GiB over budget {:.2} GiB",
+                gib(*need_bytes),
+                gib(*budget_bytes)
+            ),
+        }
+    }
+}
+
+/// One pruned point.
+#[derive(Debug, Clone)]
+pub struct Rejection {
+    pub knobs: PlanKnobs,
+    pub reason: RejectReason,
+}
+
+/// A feasible, priced configuration.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub knobs: PlanKnobs,
+    /// Full cost breakdown: compute, per-lane serialized comm, hidden
+    /// comm, critical path (see `perfmodel::OverlappedBatchTime`).
+    pub time: OverlappedBatchTime,
+    /// The binding memory phase and its per-GPU bytes.
+    pub mem_peak_phase: Phase,
+    pub mem_peak_bytes: u64,
+    pub mem_budget_bytes: u64,
+}
+
+impl Plan {
+    /// Modeled per-iteration seconds (the ranking objective).
+    pub fn total_s(&self) -> f64 {
+        self.time.total()
+    }
+
+    /// Per-GPU memory headroom under the binding phase.
+    pub fn headroom_bytes(&self) -> u64 {
+        self.mem_budget_bytes.saturating_sub(self.mem_peak_bytes)
+    }
+
+    /// Comm seconds the overlap schedule hides at the calibrated knob.
+    pub fn hidden_comm_s(&self) -> f64 {
+        self.time.serialized_comm_s - self.time.critical_comm_s
+    }
+
+    /// The pricing scenario this plan was evaluated with.
+    pub fn scenario(&self, req: &PlanRequest) -> Scenario {
+        scenario_for(req, &self.knobs)
+    }
+}
+
+/// The search result: feasible plans ranked fastest-first (ties broken by
+/// [`PlanKnobs::rank_key`]) plus every pruned point with its reason.
+#[derive(Debug, Clone)]
+pub struct PlanReport {
+    pub plans: Vec<Plan>,
+    pub rejections: Vec<Rejection>,
+}
+
+impl PlanReport {
+    /// The recommended configuration (none if nothing fits).
+    pub fn best(&self) -> Option<&Plan> {
+        self.plans.first()
+    }
+
+    /// Rejection counts per reason kind, in a stable order.
+    pub fn rejection_summary(&self) -> Vec<(&'static str, usize)> {
+        let mut out: Vec<(&'static str, usize)> = Vec::new();
+        for kind in ["topology", "model-state", "activation", "optimizer-spike"] {
+            let n = self.rejections.iter().filter(|r| r.reason.kind() == kind).count();
+            if n > 0 {
+                out.push((kind, n));
+            }
+        }
+        out
+    }
+}
+
+/// Build the pricing scenario for a knob assignment.
+pub fn scenario_for(req: &PlanRequest, knobs: &PlanKnobs) -> Scenario {
+    Scenario {
+        model: req.model.clone(),
+        n_experts: req.n_experts,
+        par: knobs.par,
+        cluster: req.cluster.clone(),
+        global_batch: req.global_batch,
+        opts: CommOpts {
+            dtd: knobs.dtd,
+            cac: knobs.cac,
+            capacity_factor: req.capacity_factor,
+            strategy: knobs.strategy,
+        },
+    }
+}
+
+/// Memory feasibility in pruning order: model state, then activations,
+/// then the optimizer spike — the first phase that overflows the budget
+/// names the rejection. On success returns the binding (phase, bytes,
+/// budget) triple. Decision-identical to `MemoryModel::fits`.
+fn memory_verdict(
+    mm: &MemoryModel,
+    cluster: &ClusterConfig,
+    tile: Option<usize>,
+    cac: bool,
+) -> Result<(Phase, u64, u64), RejectReason> {
+    let tiled = tile.is_some();
+    let t = tile.unwrap_or(0);
+    let budget = MemoryModel::budget_bytes(cluster);
+    let base = mm.phase_bytes(Phase::Baseline, tiled, t, cac);
+    if base > budget {
+        return Err(RejectReason::ModelState { need_bytes: base, budget_bytes: budget });
+    }
+    let act = mm.phase_bytes(Phase::Forward, tiled, t, cac);
+    if act > budget {
+        return Err(RejectReason::Activation { need_bytes: act, budget_bytes: budget });
+    }
+    let opt = mm.phase_bytes(Phase::OptimizerStep, tiled, t, cac);
+    if opt > budget {
+        return Err(RejectReason::OptimizerSpike { need_bytes: opt, budget_bytes: budget });
+    }
+    if act >= opt {
+        Ok((Phase::Forward, act, budget))
+    } else {
+        Ok((Phase::OptimizerStep, opt, budget))
+    }
+}
+
+fn divisors_up_to(n: usize, cap: usize) -> Vec<usize> {
+    (1..=cap.min(n)).filter(|d| n % d == 0).collect()
+}
+
+/// Run the search. See the module docs for the pruning order.
+pub fn plan(req: &PlanRequest) -> PlanReport {
+    let mut plans: Vec<Plan> = Vec::new();
+    let mut rejections: Vec<Rejection> = Vec::new();
+    if req.gpus == 0 {
+        return PlanReport { plans, rejections };
+    }
+
+    let node = req.cluster.gpus_per_node;
+    let node_divides = node > 0 && req.gpus % node == 0;
+    // engine-side node size: the hierarchical transports need the node
+    // boundary to divide the world; flat execution is topology-oblivious
+    let flat_gpn = if node_divides { node } else { 0 };
+
+    // which requested transports are executable on this (world, node):
+    // divisibility is a cluster-level fact, so an inapplicable transport
+    // is recorded once, not once per (tp, ep) grid point
+    let mut strategies: Vec<(CollectiveStrategy, usize)> = Vec::new();
+    for &st in &req.strategies {
+        if st.is_hierarchical() && !node_divides {
+            let par = ParallelConfig::derive(req.gpus, 1, 1).expect("gpus >= 1");
+            rejections.push(Rejection {
+                knobs: PlanKnobs {
+                    par,
+                    strategy: st,
+                    gpus_per_node: node,
+                    overlap: true,
+                    dtd: true,
+                    cac: true,
+                    tile: req.tile_choices.first().copied().unwrap_or(Some(DEFAULT_TILE)),
+                    micro_batch: req.micro_batch_choices.first().copied().unwrap_or(1),
+                },
+                reason: RejectReason::Topology(format!(
+                    "transport '{}' needs gpus_per_node={} to divide world={}",
+                    st.name(),
+                    node,
+                    req.gpus
+                )),
+            });
+        } else {
+            strategies.push((st, if st.is_hierarchical() { node } else { flat_gpn }));
+        }
+    }
+
+    for tp in divisors_up_to(req.gpus, req.max_tp) {
+        let dp = req.gpus / tp;
+        for ep in divisors_up_to(dp, dp) {
+            if req.n_experts % ep != 0 {
+                continue;
+            }
+            let par = match ParallelConfig::derive(req.gpus, tp, ep) {
+                Ok(p) => p,
+                Err(_) => continue, // unreachable for divisor-enumerated (tp, ep)
+            };
+            for &cac in &req.cac_choices {
+                for &tile in &req.tile_choices {
+                    for &micro in &req.micro_batch_choices {
+                        let mut mm = MemoryModel::new(req.model.clone(), req.n_experts, par);
+                        mm.micro_batch = micro;
+                        let verdict = memory_verdict(&mm, &req.cluster, tile, cac);
+                        let (peak_phase, peak_bytes, budget) = match verdict {
+                            Err(reason) => {
+                                // memory is strategy/overlap-independent:
+                                // one rejection covers the whole sub-grid
+                                rejections.push(Rejection {
+                                    knobs: PlanKnobs {
+                                        par,
+                                        strategy: CollectiveStrategy::Flat,
+                                        gpus_per_node: flat_gpn,
+                                        overlap: true,
+                                        dtd: true,
+                                        cac,
+                                        tile,
+                                        micro_batch: micro,
+                                    },
+                                    reason,
+                                });
+                                continue;
+                            }
+                            Ok(v) => v,
+                        };
+                        for &(st, gpn) in &strategies {
+                            // price the serialized base once per point:
+                            // the overlap on/off twins differ only in
+                            // the efficiency knob applied to it
+                            let point = PlanKnobs {
+                                par,
+                                strategy: st,
+                                gpus_per_node: gpn,
+                                overlap: true,
+                                dtd: true,
+                                cac,
+                                tile,
+                                micro_batch: micro,
+                            };
+                            let base = batch_time(&scenario_for(req, &point));
+                            for &ov in &req.overlap_choices {
+                                let knobs = PlanKnobs { overlap: ov, ..point };
+                                let eff = if ov { req.overlap_efficiency } else { 0.0 };
+                                plans.push(Plan {
+                                    knobs,
+                                    time: overlap_from_base(base, eff),
+                                    mem_peak_phase: peak_phase,
+                                    mem_peak_bytes: peak_bytes,
+                                    mem_budget_bytes: budget,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    plans.sort_by(|a, b| {
+        a.total_s()
+            .partial_cmp(&b.total_s())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.knobs.rank_key().cmp(&b.knobs.rank_key()))
+    });
+    PlanReport { plans, rejections }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::table1_by_name;
+
+    fn summit_req() -> PlanRequest {
+        PlanRequest::new(
+            table1_by_name("6.7B").unwrap(),
+            16,
+            128,
+            ClusterConfig::summit(),
+            1024,
+        )
+    }
+
+    #[test]
+    fn divisor_enumeration() {
+        assert_eq!(divisors_up_to(128, 8), vec![1, 2, 4, 8]);
+        assert_eq!(divisors_up_to(12, 6), vec![1, 2, 3, 4, 6]);
+        assert_eq!(divisors_up_to(8, 64), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn rank_key_breaks_ties_deterministically() {
+        let mk = |tp: usize, overlap: bool, cac: bool| PlanKnobs {
+            par: ParallelConfig::derive(128, tp, 16).unwrap(),
+            strategy: CollectiveStrategy::Flat,
+            gpus_per_node: 0,
+            overlap,
+            dtd: true,
+            cac,
+            tile: Some(DEFAULT_TILE),
+            micro_batch: 1,
+        };
+        assert!(mk(4, true, true).rank_key() < mk(8, true, true).rank_key());
+        assert!(mk(4, true, true).rank_key() < mk(4, false, true).rank_key());
+        assert!(mk(4, true, true).rank_key() < mk(4, true, false).rank_key());
+    }
+
+    #[test]
+    fn summit_128_search_shape() {
+        // 128 is not divisible by Summit's 6-GPU nodes: every hierarchical
+        // point is a topology rejection and every plan is flat with a
+        // validating (zero) engine node size
+        let report = plan(&summit_req());
+        assert!(!report.plans.is_empty());
+        for p in &report.plans {
+            assert_eq!(p.knobs.strategy, CollectiveStrategy::Flat);
+            assert_eq!(p.knobs.gpus_per_node, 0);
+            p.knobs.engine_options().validate_topology(128).unwrap();
+        }
+        assert!(report.rejections.iter().any(|r| matches!(r.reason, RejectReason::Topology(_))));
+        // ranked ascending
+        for w in report.plans.windows(2) {
+            assert!(w[0].total_s() <= w[1].total_s() + 1e-15);
+        }
+        // the summary partitions the rejections
+        let total: usize = report.rejection_summary().iter().map(|(_, n)| n).sum();
+        assert_eq!(total, report.rejections.len());
+    }
+
+    #[test]
+    fn divisible_world_searches_hierarchical_transports() {
+        // ThetaGPU (8/node) divides 128: the hierarchical transports are
+        // in the space, carry the node size, and validate
+        let req = PlanRequest::new(
+            table1_by_name("6.7B").unwrap(),
+            16,
+            128,
+            ClusterConfig::thetagpu(),
+            1024,
+        );
+        let report = plan(&req);
+        let mut seen = [false; 3];
+        for p in &report.plans {
+            let idx = ALL_STRATEGIES.iter().position(|s| *s == p.knobs.strategy).unwrap();
+            seen[idx] = true;
+            if p.knobs.strategy.is_hierarchical() {
+                assert_eq!(p.knobs.gpus_per_node, 8);
+            }
+            p.knobs.engine_options().validate_topology(128).unwrap();
+        }
+        assert!(seen.iter().all(|s| *s), "all transports searched: {seen:?}");
+        // a topology-aware transport prices at or below flat for the same
+        // knobs, so the winner is never strictly worse than flat
+        let best = report.best().unwrap();
+        let flat_best = report
+            .plans
+            .iter()
+            .find(|p| p.knobs.strategy == CollectiveStrategy::Flat)
+            .unwrap();
+        assert!(best.total_s() <= flat_best.total_s() + 1e-15);
+    }
+
+    #[test]
+    fn overlap_efficiency_orders_overlap_plans() {
+        let mut req = summit_req();
+        req.overlap_efficiency = 0.6;
+        let report = plan(&req);
+        let best = report.best().unwrap();
+        assert!(best.knobs.overlap, "at eff > 0 the winner overlaps");
+        assert!(best.hidden_comm_s() > 0.0);
+        // the same knobs with overlap off exist and price strictly slower
+        let twin = report
+            .plans
+            .iter()
+            .find(|p| {
+                !p.knobs.overlap
+                    && p.knobs.par == best.knobs.par
+                    && p.knobs.strategy == best.knobs.strategy
+                    && p.knobs.cac == best.knobs.cac
+                    && p.knobs.tile == best.knobs.tile
+            })
+            .expect("overlap-off twin in the space");
+        assert!(twin.total_s() > best.total_s());
+    }
+
+    #[test]
+    fn memory_rejections_carry_reasons_and_numbers() {
+        // 13B on 8 GPUs: nothing fits; every rejection is a memory one
+        // with need > budget
+        let req = PlanRequest::new(
+            table1_by_name("13.0B").unwrap(),
+            16,
+            8,
+            ClusterConfig::summit(),
+            512,
+        );
+        let report = plan(&req);
+        assert!(report.plans.is_empty());
+        assert!(!report.rejections.is_empty());
+        for r in &report.rejections {
+            match &r.reason {
+                RejectReason::Topology(_) => {}
+                RejectReason::ModelState { need_bytes, budget_bytes }
+                | RejectReason::Activation { need_bytes, budget_bytes }
+                | RejectReason::OptimizerSpike { need_bytes, budget_bytes } => {
+                    assert!(need_bytes > budget_bytes, "{}", r.reason.describe());
+                }
+            }
+            assert!(!r.reason.describe().is_empty());
+        }
+    }
+
+    #[test]
+    fn verdict_matches_fits() {
+        // the planner's pruning and the memory model's boolean agree
+        let cluster = ClusterConfig::summit();
+        for tp in [1usize, 2, 4, 8] {
+            for tile in [Some(DEFAULT_TILE), None] {
+                let par = ParallelConfig::derive(128, tp, 16).unwrap();
+                let mm = MemoryModel::new(table1_by_name("6.7B").unwrap(), 16, par);
+                let verdict = memory_verdict(&mm, &cluster, tile, true);
+                assert_eq!(
+                    verdict.is_ok(),
+                    mm.fits(&cluster, tile.is_some(), tile.unwrap_or(0), true),
+                    "tp={tp} tile={tile:?}"
+                );
+            }
+        }
+    }
+}

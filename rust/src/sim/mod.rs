@@ -24,6 +24,10 @@
 //! calibration loop `ted train --cluster …` → fitted efficiency →
 //! `paper_figures -- --overlap-eff …`.
 
+pub mod replay;
+
+pub use replay::{replay_scenario, MeasuredPlanTime};
+
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
 use std::time::Instant;

@@ -1,0 +1,231 @@
+//! Measured replay of a priced scenario's collective schedule on the
+//! simulated cluster — the planner's validation loop.
+//!
+//! [`replay_scenario`] takes the same per-iteration op list the analytic
+//! model prices (`perfmodel::comm_ops` — the single source of truth for
+//! what the engine issues) and *executes* it: every rank runs as a
+//! thread, every collective moves real payload bytes through the
+//! transport backends, and the attached α-β cost model schedules each op
+//! on the per-rank three-lane [`TimelineBoard`] — exactly the machinery
+//! `sim::TrainLog` snapshots during a real training run, minus the
+//! engine's numerics. The result is a *measured* timeline
+//! ([`MeasuredPlanTime`], rank 0's lanes like `TrainLog`): with
+//! `overlap = false` every op is blocking and the critical path is the
+//! serialized sum; with `overlap = true` each pass phase issues its ops
+//! nonblocking and waits in issue order, so comm hides behind the phase's
+//! compute slice and the other lane.
+//!
+//! `rust/tests/planner_validation.rs` ranks toy-grid candidate plans by
+//! this measured critical path and requires the planner's analytic
+//! ranking to agree — the plan-vs-measured closing of the loop.
+//! (Payloads are rounded to whole f32 elements, so measured and analytic
+//! totals can differ by a few bytes per op; the toy grids keep payloads
+//! large enough that this never reorders plans.)
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::collectives::{
+    CommKind, Communicator, PendingAllGather, PendingAllReduce, PendingAllToAll, Rendezvous,
+};
+use crate::perfmodel::batch_time::{
+    comm_ops, compute_budget_s, CommOp, Scenario, PHASE_COMPUTE_SPLIT,
+};
+use crate::topology::{RankGroups, Topology};
+use crate::util::tensor::Tensor;
+
+/// Rank 0's measured three-lane timeline for one replayed iteration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MeasuredPlanTime {
+    pub compute_s: f64,
+    pub comm_intra_s: f64,
+    pub comm_inter_s: f64,
+    /// Serialized comm sum (`comm_intra_s + comm_inter_s`).
+    pub serialized_s: f64,
+    /// The measured makespan, compute included (the ranking objective).
+    pub critical_s: f64,
+}
+
+enum PendingOp {
+    Ar(PendingAllReduce, Tensor),
+    Ag(PendingAllGather),
+    A2a(PendingAllToAll),
+}
+
+/// Replay one iteration of `s`'s collective schedule and return the
+/// measured timeline. `gpus_per_node` is the transport's node boundary
+/// (the plan's engine node size; must divide the world when nonzero —
+/// same contract as `EngineOptions::validate_topology`); pricing uses
+/// `s.cluster` with that boundary, matching the analytic model when it
+/// equals `s.cluster.gpus_per_node`.
+pub fn replay_scenario(
+    s: &Scenario,
+    gpus_per_node: usize,
+    overlap: bool,
+) -> Result<MeasuredPlanTime> {
+    let topo = Topology::new(s.par)?;
+    let world = s.par.world;
+    let ops = comm_ops(s);
+    // the same compute budget and fwd/bwd/recompute split the analytic
+    // model prices — shared so the two halves cannot diverge
+    let compute_s = compute_budget_s(s);
+    let phase_compute = [
+        PHASE_COMPUTE_SPLIT[0] * compute_s,
+        PHASE_COMPUTE_SPLIT[1] * compute_s,
+        PHASE_COMPUTE_SPLIT[2] * compute_s,
+    ];
+
+    let rez = Rendezvous::new(world);
+    std::thread::scope(|scope| {
+        for rank in 0..world {
+            let rez = Arc::clone(&rez);
+            let topo = topo.clone();
+            let ops = ops.clone();
+            let cluster = s.cluster.clone();
+            let strategy = s.opts.strategy;
+            scope.spawn(move || {
+                let mut c = Communicator::with_transport(rez, rank, strategy, gpus_per_node);
+                c.set_cost_model(cluster);
+                let groups = topo.groups(rank);
+                for phase in 0..3 {
+                    run_phase(&mut c, &groups, &ops, phase, phase_compute[phase], overlap);
+                }
+            });
+        }
+    });
+
+    let tl = rez.timeline.get(0);
+    Ok(MeasuredPlanTime {
+        compute_s: tl.compute_s,
+        comm_intra_s: tl.intra_serialized_s,
+        comm_inter_s: tl.inter_serialized_s,
+        serialized_s: tl.serialized_s,
+        critical_s: tl.clock_s,
+    })
+}
+
+/// Payload element count for one op instance (f32 tensors; byte semantics
+/// per kind match `collective_cost`).
+fn op_floats(bytes: f64) -> usize {
+    (bytes / 4.0).round().max(1.0) as usize
+}
+
+fn run_phase(
+    c: &mut Communicator,
+    groups: &RankGroups,
+    ops: &[CommOp],
+    phase: usize,
+    compute_s: f64,
+    overlap: bool,
+) {
+    if overlap {
+        // issue every op of the phase, let the phase's compute slice
+        // occupy the compute lane while they are in flight, then wait in
+        // issue order (the rendezvous contract)
+        let mut pending: Vec<PendingOp> = Vec::new();
+        for op in ops {
+            let reps = op.count[phase].round() as usize;
+            for _ in 0..reps {
+                pending.push(issue_op(c, groups, op));
+            }
+        }
+        c.advance_compute(compute_s);
+        for p in pending {
+            match p {
+                PendingOp::Ar(h, mut t) => c.wait_all_reduce(h, &mut t),
+                PendingOp::Ag(h) => {
+                    let _ = c.wait_all_gather(h);
+                }
+                PendingOp::A2a(h) => {
+                    let _ = c.wait_all_to_all(h);
+                }
+            }
+        }
+    } else {
+        for op in ops {
+            let reps = op.count[phase].round() as usize;
+            for _ in 0..reps {
+                blocking_op(c, groups, op);
+            }
+        }
+        c.advance_compute(compute_s);
+    }
+}
+
+fn issue_op(c: &mut Communicator, groups: &RankGroups, op: &CommOp) -> PendingOp {
+    let (gid, members) = resolve(groups, op);
+    match op.kind {
+        CommKind::AllReduce => {
+            let len = op_floats(op.bytes);
+            let t = Tensor::from_vec(&[len], vec![1.0; len]);
+            let h = c.issue_all_reduce(gid, members, &t);
+            PendingOp::Ar(h, t)
+        }
+        CommKind::AllGather => {
+            let len = op_floats(op.bytes);
+            let t = Tensor::from_vec(&[len], vec![1.0; len]);
+            PendingOp::Ag(c.issue_all_gather(gid, members, &t))
+        }
+        CommKind::AllToAll => {
+            PendingOp::A2a(c.issue_all_to_all(gid, members, a2a_rows(groups, op)))
+        }
+        other => panic!("replay does not schedule {other:?}"),
+    }
+}
+
+fn blocking_op(c: &mut Communicator, groups: &RankGroups, op: &CommOp) {
+    let (gid, members) = resolve(groups, op);
+    match op.kind {
+        CommKind::AllReduce => {
+            let len = op_floats(op.bytes);
+            let mut t = Tensor::from_vec(&[len], vec![1.0; len]);
+            c.all_reduce(gid, members, &mut t);
+        }
+        CommKind::AllGather => {
+            let len = op_floats(op.bytes);
+            let t = Tensor::from_vec(&[len], vec![1.0; len]);
+            let _ = c.all_gather(gid, members, &t);
+        }
+        CommKind::AllToAll => {
+            let _ = c.all_to_all(gid, members, a2a_rows(groups, op));
+        }
+        other => panic!("replay does not schedule {other:?}"),
+    }
+}
+
+/// The rendezvous group id + member list an op runs over (the members
+/// come from `OpGroup::members`, the same mapping the analytic pricing
+/// resolves against).
+fn resolve<'g>(
+    groups: &'g RankGroups,
+    op: &CommOp,
+) -> (crate::topology::GroupId, &'g [usize]) {
+    use crate::perfmodel::batch_time::OpGroup;
+    let gid = match op.group {
+        OpGroup::Tensor => groups.tp_group_id,
+        OpGroup::Expert => groups.ep_group_id,
+        OpGroup::DataExpert => groups.dp_exp_group_id,
+        OpGroup::DataNonExpert => groups.dp_nonexp_group_id,
+    };
+    (gid, op.group.members(groups))
+}
+
+/// Per-destination all-to-all rows: `op.bytes` is one rank's total
+/// payload, split evenly over the non-self destinations (the self row is
+/// empty) so the measured priced bytes equal the analytic `local_bytes`.
+fn a2a_rows(groups: &RankGroups, op: &CommOp) -> Vec<Vec<f32>> {
+    let members = op.group.members(groups);
+    let n = members.len();
+    if n <= 1 {
+        return vec![Vec::new(); n];
+    }
+    let me = members
+        .iter()
+        .position(|&m| m == groups.coords.rank)
+        .expect("rank in its own group");
+    let per_dest = (op.bytes / (4.0 * (n as f64 - 1.0))).round().max(1.0) as usize;
+    (0..n)
+        .map(|j| if j == me { Vec::new() } else { vec![0.5; per_dest] })
+        .collect()
+}

@@ -1,10 +1,13 @@
-//! Minimal JSON parser for the artifact manifests.
+//! Minimal JSON parser + writer.
 //!
 //! The vendored crate set has no `serde`/`serde_json`, so this is a small,
 //! strict, allocation-friendly recursive-descent parser covering exactly the
 //! JSON subset `python/compile/aot.py` emits (objects, arrays, strings with
 //! escapes, numbers, booleans, null). It rejects trailing garbage and deep
-//! nesting (manifests are shallow).
+//! nesting (manifests are shallow). [`Json::render`] is the inverse: a
+//! compact single-line serializer (object keys in `BTreeMap` order, so
+//! output is stable across runs — `ted plan --json` and the
+//! `paper_figures --json` sweep rows rely on that for diffing).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -114,6 +117,81 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Build an object from key/value pairs (later duplicates win).
+    pub fn obj<K: Into<String>>(pairs: impl IntoIterator<Item = (K, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
+    /// Build a string value.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Compact single-line serialization. Round-trips through
+    /// [`Json::parse`] (non-finite numbers render as `null`, the only
+    /// lossy case — JSON has no NaN/inf).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    // shortest f64 repr; always parses back to the same value
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 impl<'a> Parser<'a> {
@@ -392,5 +470,25 @@ mod tests {
     fn depth_limit() {
         let deep = "[".repeat(100) + &"]".repeat(100);
         assert!(Json::parse(&deep).is_err());
+    }
+
+    #[test]
+    fn render_round_trips() {
+        let doc = Json::obj([
+            ("plans", Json::Arr(vec![Json::Num(1.5), Json::Num(3.0), Json::Null])),
+            ("name", Json::str("tp4 \"best\"\n")),
+            ("ok", Json::Bool(true)),
+            ("nested", Json::obj([("k", Json::Num(-0.25))])),
+        ]);
+        let text = doc.render();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+        // stable key order (BTreeMap) and compact single-line output
+        assert!(!text.contains('\n') || text.contains("\\n"));
+        assert!(text.find("\"name\"").unwrap() < text.find("\"nested\"").unwrap());
+        // integral floats render as integers, non-finite as null
+        assert_eq!(Json::Num(3.0).render(), "3");
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Num(0.125).render(), "0.125");
+        assert_eq!(Json::str("a\tb").render(), "\"a\\tb\"");
     }
 }

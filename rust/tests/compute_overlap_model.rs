@@ -11,13 +11,15 @@
 //!   layer in `integration_accounting.rs`);
 //! * total time is strictly monotone decreasing in the calibrated
 //!   efficiency, for every strategy;
-//! * `fit_overlap_efficiency` inverts the model.
+//! * the hideable bound is the per-phase (fwd/bwd/recompute, compute
+//!   1:2:1) sum, never looser than the whole-iteration aggregate bound;
+//! * `fit_overlap_efficiency_phased` inverts the model exactly.
 
 use ted::collectives::{ALL_STRATEGIES, CollectiveStrategy};
 use ted::config::{model, ClusterConfig, ParallelConfig};
 use ted::perfmodel::{
-    batch_time, batch_time_overlapped, fit_overlap_efficiency, hideable_comm_s, CommOpts,
-    Scenario,
+    batch_time, batch_time_overlapped, fit_overlap_efficiency_phased, hideable_comm_phased_s,
+    hideable_comm_s, CommOpts, Scenario,
 };
 
 /// The scenario grid: two models, two clusters, two topologies, all three
@@ -68,11 +70,13 @@ fn critical_path_respects_compute_budget_and_lane_bounds() {
                 assert!(o.total() >= bound - tol, "{strategy:?} eff={eff}");
                 // bracketed by the serialized model
                 assert!(o.critical_comm_s <= o.serialized_comm_s + tol);
+                // the hideable bound is the per-phase one, never looser
+                // than the whole-iteration three-lane bound
+                assert!((o.hideable_comm_s - hideable_comm_phased_s(b)).abs() < tol);
                 assert!(
-                    (o.hideable_comm_s
-                        - hideable_comm_s(b.compute_s, b.comm_intra_s, b.comm_inter_s))
-                    .abs()
-                        < tol
+                    o.hideable_comm_s
+                        <= hideable_comm_s(b.compute_s, b.comm_intra_s, b.comm_inter_s) + tol,
+                    "{strategy:?} eff={eff}: per-phase bound looser than aggregate"
                 );
             }
         }
@@ -118,13 +122,7 @@ fn fit_inverts_the_model_across_strategies() {
         for s in scenarios(strategy).into_iter().take(3) {
             for eff in [0.0, 0.33, 0.77, 1.0] {
                 let o = batch_time_overlapped(&s, eff);
-                let b = &o.base;
-                let fitted = fit_overlap_efficiency(
-                    b.compute_s,
-                    b.comm_intra_s,
-                    b.comm_inter_s,
-                    o.total(),
-                );
+                let fitted = fit_overlap_efficiency_phased(&o.base, o.total());
                 assert!(
                     (fitted - eff).abs() < 1e-9,
                     "{strategy:?}: fitted {fitted} != {eff}"

@@ -1,0 +1,337 @@
+//! Planner acceptance suite.
+//!
+//! * Every emitted `Plan` is topology-valid (its `EngineOptions` pass
+//!   `validate_topology`) and memory-feasible (`MemoryModel::fits`) **by
+//!   construction**, across a grid of requests.
+//! * Plan-vs-measured: on toy grids small enough to simulate, the
+//!   planner's analytic ranking must agree with the *measured* timeline
+//!   ranking produced by `sim::replay` — the same per-op α-β pricing and
+//!   `TimelineBoard` machinery a `TrainLog` records, driven by real
+//!   collectives over real threads. Blocking schedules must also match
+//!   the analytic totals outright (the pricing contract).
+//! * A Table-2 regression pins the planner's picks for the paper's
+//!   weak-scaling ladder (incl. the 128-GPU 6.7B config).
+//! * Infeasible points carry the right reason (the section-4 optimizer
+//!   spike shows up as `optimizer-spike`, fixed by tiling).
+
+use ted::collectives::CollectiveStrategy;
+use ted::config::{model, ClusterConfig, ModelConfig};
+use ted::memory::MemoryModel;
+use ted::perfmodel::{batch_time, fit_overlap_efficiency_phased};
+use ted::planner::{plan, DEFAULT_TILE, PlanRequest, RejectReason};
+use ted::sim::replay_scenario;
+
+// ---------------------------------------------------------------------
+// feasibility-by-construction + ranking determinism
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_emitted_plan_is_valid_and_feasible() {
+    let grid = [
+        ("1.3B", 32usize, 32usize, ClusterConfig::summit(), 512usize),
+        ("6.7B", 16, 128, ClusterConfig::summit(), 1024),
+        ("6.7B", 16, 128, ClusterConfig::thetagpu(), 1024),
+        ("2.7B", 16, 64, ClusterConfig::perlmutter(), 512),
+    ];
+    for (name, experts, gpus, cluster, batch) in grid {
+        let mut req = PlanRequest::new(
+            model::table1_by_name(name).unwrap(),
+            experts,
+            gpus,
+            cluster,
+            batch,
+        );
+        req.micro_batch_choices = vec![1, 2];
+        let report = plan(&req);
+        assert!(!report.plans.is_empty(), "{name}@{gpus}: nothing feasible?");
+        for p in &report.plans {
+            let ctx = format!("{name}@{gpus} {}", p.knobs.describe());
+            p.knobs.par.validate().unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            assert_eq!(p.knobs.par.world, gpus, "{ctx}");
+            p.knobs
+                .engine_options()
+                .validate_topology(gpus)
+                .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            let mut mm = MemoryModel::new(req.model.clone(), req.n_experts, p.knobs.par);
+            mm.micro_batch = p.knobs.micro_batch;
+            assert!(
+                mm.fits(
+                    &req.cluster,
+                    p.knobs.tile.is_some(),
+                    p.knobs.tile.unwrap_or(0),
+                    p.knobs.cac
+                ),
+                "{ctx}: emitted plan does not fit"
+            );
+            assert_eq!(p.mem_budget_bytes, MemoryModel::budget_bytes(&req.cluster), "{ctx}");
+            assert!(p.mem_peak_bytes <= p.mem_budget_bytes, "{ctx}");
+            assert!(p.total_s().is_finite() && p.total_s() > 0.0, "{ctx}");
+        }
+        // ranked ascending with deterministic tie-break
+        for w in report.plans.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            assert!(
+                a.total_s() < b.total_s()
+                    || (a.total_s() == b.total_s()
+                        && a.knobs.rank_key() <= b.knobs.rank_key()),
+                "{name}@{gpus}: ranking not canonical"
+            );
+        }
+        // determinism: a second run returns the identical ranking
+        let again = plan(&req);
+        assert_eq!(again.plans.len(), report.plans.len());
+        for (a, b) in report.plans.iter().zip(&again.plans) {
+            assert_eq!(a.knobs, b.knobs, "{name}@{gpus}: ranking not deterministic");
+        }
+    }
+}
+
+#[test]
+fn optimizer_spike_named_as_the_binding_reason() {
+    // section 4's boundary: configs that fit tiled but OOM untiled must
+    // be rejected with the optimizer-spike reason when tiling is off the
+    // table. This sweeps the same grid the memory suite
+    // (`tiling_changes_feasibility_at_the_boundary`) proves contains
+    // such boundary configs, so at least one spike rejection must
+    // appear: baseline and activation bytes are tile-independent, hence
+    // a tiled-feasible/untiled-infeasible point *must* classify as
+    // `OptimizerSpike`.
+    let mut found = 0;
+    for cluster in [ClusterConfig::summit(), ClusterConfig::thetagpu()] {
+        for gpus in [32usize, 64, 128] {
+            for name in ["1.3B", "2.7B", "6.7B"] {
+                for experts in [8usize, 16, 32, 64, 128] {
+                    let mut req = PlanRequest::new(
+                        model::table1_by_name(name).unwrap(),
+                        experts,
+                        gpus,
+                        cluster.clone(),
+                        512,
+                    );
+                    req.tile_choices = vec![None];
+                    req.cac_choices = vec![false];
+                    req.strategies = vec![CollectiveStrategy::Flat];
+                    req.overlap_choices = vec![false];
+                    let report = plan(&req);
+                    found += report
+                        .rejections
+                        .iter()
+                        .filter(|r| matches!(r.reason, RejectReason::OptimizerSpike { .. }))
+                        .count();
+                }
+            }
+        }
+    }
+    assert!(found > 0, "no untiled config was rejected for its optimizer spike");
+}
+
+// ---------------------------------------------------------------------
+// Table-2 regression: the planner reproduces the paper's picks
+// ---------------------------------------------------------------------
+
+#[test]
+fn planner_pins_the_paper_weak_scaling_ladder() {
+    // the serialized-flat restriction fig11_table2 uses; the planner must
+    // land on the paper's ladder — tp = 1/2/4/8 with ep = 16 — including
+    // the 128-GPU 6.7B rung (Fig. 5/Table 2's headline config)
+    let cluster = ClusterConfig::summit();
+    for (gpus, name, want_tp) in
+        [(32usize, "1.3B", 1usize), (64, "2.7B", 2), (128, "6.7B", 4), (256, "13.0B", 8)]
+    {
+        let m = model::table1_by_name(name).unwrap();
+        let batch = m.batch_size;
+        let mut req = PlanRequest::new(m, 16, gpus, cluster.clone(), batch);
+        req.cac_choices = vec![true];
+        req.tile_choices = vec![Some(DEFAULT_TILE)];
+        req.strategies = vec![CollectiveStrategy::Flat];
+        req.overlap_choices = vec![false];
+        let report = plan(&req);
+        let best = report.best().unwrap_or_else(|| panic!("{name}@{gpus}: infeasible"));
+        assert_eq!(best.knobs.par.tp, want_tp, "{name}@{gpus}: tp pick");
+        assert_eq!(best.knobs.par.ep, 16, "{name}@{gpus}: ep pick");
+        assert!(best.knobs.cac && best.knobs.dtd);
+        assert_eq!(best.knobs.tile, Some(DEFAULT_TILE));
+    }
+    // full default space at the 128-GPU config: Summit's 6-GPU nodes do
+    // not divide 128, so the recommendation stays flat — same topology,
+    // overlap on (free at eff 0, strictly better at eff > 0), CAC on
+    let m = model::table1_by_name("6.7B").unwrap();
+    let mut req = PlanRequest::new(m, 16, 128, cluster, 1024);
+    req.overlap_efficiency = 0.5;
+    let report = plan(&req);
+    let best = report.best().unwrap();
+    assert_eq!(best.knobs.par.tp, 4);
+    assert_eq!(best.knobs.par.ep, 16);
+    assert_eq!(best.knobs.strategy, CollectiveStrategy::Flat);
+    assert!(best.knobs.overlap && best.knobs.cac);
+    assert_eq!(best.knobs.tile, Some(DEFAULT_TILE));
+}
+
+// ---------------------------------------------------------------------
+// plan vs measured: the analytic ranking agrees with the replayed
+// timeline on toy grids (two grids x two cluster presets)
+// ---------------------------------------------------------------------
+
+/// A toy request small enough to execute: every candidate's collective
+/// schedule is replayed through the real transports.
+fn toy_request(
+    model_name: &str,
+    experts: usize,
+    gpus: usize,
+    cluster: ClusterConfig,
+    batch: usize,
+) -> PlanRequest {
+    let m: ModelConfig = model::executable(model_name).unwrap();
+    let mut req = PlanRequest::new(m, experts, gpus, cluster, batch);
+    req.cac_choices = vec![true];
+    req.tile_choices = vec![Some(DEFAULT_TILE)];
+    req.overlap_choices = vec![false];
+    req
+}
+
+/// Index of the measured-best plan, iterating in planner rank order so
+/// measured ties — exact ones, and differences inside the
+/// payload-rounding noise floor (well under 0.1%) — resolve to the
+/// planner's canonical tie-break: "ties broken consistently".
+fn measured_best(measured: &[f64]) -> usize {
+    let mut best = 0usize;
+    for (i, &m) in measured.iter().enumerate().skip(1) {
+        if m < measured[best] * (1.0 - 1e-3) {
+            best = i;
+        }
+    }
+    best
+}
+
+#[test]
+fn blocking_plan_ranking_matches_measured_timelines() {
+    // two grids x two presets; worlds divide the preset node size so the
+    // hierarchical transports are in the space and the replay prices with
+    // the same node boundary as the analytic model
+    let grids = [
+        ("tiny", 4usize, 8usize, ClusterConfig::perlmutter(), 64usize),
+        ("mini", 4, 12, ClusterConfig::summit(), 48),
+    ];
+    for (name, experts, gpus, cluster, batch) in grids {
+        let req = toy_request(name, experts, gpus, cluster, batch);
+        let report = plan(&req);
+        assert!(
+            report.plans.len() >= 9,
+            "{name}@{gpus}: want a real grid, got {}",
+            report.plans.len()
+        );
+        let mut measured = Vec::with_capacity(report.plans.len());
+        for p in &report.plans {
+            let s = p.scenario(&req);
+            let m = replay_scenario(&s, p.knobs.gpus_per_node, false)
+                .unwrap_or_else(|e| panic!("{name}: replay {}: {e}", p.knobs.describe()));
+            // the pricing contract: a blocking schedule's measured
+            // makespan is the analytic serialized total (payloads are
+            // rounded to whole floats, hence the small tolerance)
+            let analytic = p.total_s();
+            assert!(
+                (m.critical_s - analytic).abs() <= 2e-3 * analytic,
+                "{name}@{gpus} {}: measured {} vs analytic {analytic}",
+                p.knobs.describe(),
+                m.critical_s
+            );
+            assert!(
+                (m.critical_s - m.serialized_s - m.compute_s).abs()
+                    <= 1e-9 * m.critical_s.max(1e-12),
+                "blocking replay must serialize exactly"
+            );
+            measured.push(m.critical_s);
+        }
+        // top choice: the planner's pick is the measured best
+        let best = measured_best(&measured);
+        assert_eq!(
+            report.plans[best].knobs,
+            report.plans[0].knobs,
+            "{name}@{gpus}: planner top {} but measured best {} ({:.3e} vs {:.3e})",
+            report.plans[0].knobs.describe(),
+            report.plans[best].knobs.describe(),
+            measured[0],
+            measured[best]
+        );
+        // full-order agreement wherever the analytic gap is decisive
+        for i in 0..report.plans.len() {
+            for j in (i + 1)..report.plans.len() {
+                if report.plans[j].total_s() > report.plans[i].total_s() * 1.01 {
+                    assert!(
+                        measured[j] > measured[i],
+                        "{name}@{gpus}: measured order flips a decisive analytic gap \
+                         ({} vs {})",
+                        report.plans[i].knobs.describe(),
+                        report.plans[j].knobs.describe()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn overlapped_top_choice_agrees_with_measured_best() {
+    // calibration-flow validation: fit the efficiency knob from one
+    // measured overlapped replay (the serialized winner's schedule), feed
+    // it to the planner, and check the planner's overlap-on top choice
+    // against the measured overlapped timelines
+    let grids = [
+        ("tiny", 4usize, 8usize, ClusterConfig::perlmutter(), 64usize),
+        ("mini", 4, 12, ClusterConfig::summit(), 48),
+    ];
+    for (name, experts, gpus, cluster, batch) in grids {
+        let mut req = toy_request(name, experts, gpus, cluster, batch);
+        let serialized = plan(&req);
+        let reference = serialized.best().unwrap().clone();
+        let rs = reference.scenario(&req);
+        let measured_ref = replay_scenario(&rs, reference.knobs.gpus_per_node, true).unwrap();
+        let eff = fit_overlap_efficiency_phased(&batch_time(&rs), measured_ref.critical_s);
+        assert!((0.0..=1.0).contains(&eff), "{name}: fitted eff {eff}");
+
+        req.overlap_choices = vec![true];
+        req.overlap_efficiency = eff;
+        let report = plan(&req);
+        let mut measured = Vec::with_capacity(report.plans.len());
+        for p in &report.plans {
+            let s = p.scenario(&req);
+            let m = replay_scenario(&s, p.knobs.gpus_per_node, true).unwrap();
+            // overlap never beats the three-lane bound or loses to the
+            // serialized sum
+            assert!(
+                m.critical_s <= m.serialized_s + m.compute_s + 1e-9,
+                "{name}: overlap worse than serialized?"
+            );
+            measured.push(m.critical_s);
+        }
+        let best = measured_best(&measured);
+        // the planner's top choice tracks the measured best: the analytic
+        // model prices every plan at ONE calibrated efficiency while each
+        // schedule achieves its own, so allow that modeling slack — but
+        // the pick must stay in the measured front, never a mid-pack plan
+        assert!(
+            measured[0] <= measured[best] * 1.15,
+            "{name}@{gpus}: planner top {} measures {:.3e}, best {} measures {:.3e}",
+            report.plans[0].knobs.describe(),
+            measured[0],
+            report.plans[best].knobs.describe(),
+            measured[best]
+        );
+        // and decisively-separated analytic pairs keep their measured
+        // order (a 25% analytic gap cannot be inverted by per-schedule
+        // efficiency variation)
+        for i in 0..report.plans.len() {
+            for j in (i + 1)..report.plans.len() {
+                if report.plans[j].total_s() > report.plans[i].total_s() * 1.25 {
+                    assert!(
+                        measured[j] > measured[i],
+                        "{name}@{gpus}: overlapped measured order flips a decisive gap \
+                         ({} vs {})",
+                        report.plans[i].knobs.describe(),
+                        report.plans[j].knobs.describe()
+                    );
+                }
+            }
+        }
+    }
+}
