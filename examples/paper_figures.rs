@@ -5,6 +5,7 @@
 //!     cargo run --release --example paper_figures -- --only fig5
 //!     cargo run --release --example paper_figures -- --overlap-eff 0.42
 //!     cargo run --release --example paper_figures -- --json
+//!     cargo run --release --example paper_figures -- --only fig5 --traffic zipf:1.2
 //!
 //! `--overlap-eff E` additionally prints the Fig. 5/8/10/11 sweeps under
 //! the compute-aware overlap model (comm priced on the critical path
@@ -16,6 +17,12 @@
 //! `--json` appends one machine-readable line per sweep
 //! (`{"id":"fig10","rows":[...]}`, stable key order) so bench trajectory
 //! tooling can diff sweeps across PRs without scraping the text tables.
+//! Every line carries the active `traffic` scenario name.
+//!
+//! `--traffic uniform|zipf:<s>|bursty:<p>` additionally re-prices the
+//! Fig. 5 breakdown under a skewed expert all-to-all (the synchronous
+//! collective drains at the hot rank's payload), so the cost of load
+//! imbalance is visible next to the paper's uniform bars.
 //!
 //! Fig. 7 (loss parity) is a *measured* experiment — run
 //! `cargo run --release --example convergence_parity` for it.
@@ -23,7 +30,7 @@
 use ted::config::ClusterConfig;
 use ted::memory::PHASES;
 use ted::perfmodel::figures as F;
-use ted::util::cli::Args;
+use ted::util::cli::{Args, TrafficSpec};
 use ted::util::json::Json;
 
 fn want(only: &Option<String>, id: &str) -> bool {
@@ -31,10 +38,11 @@ fn want(only: &Option<String>, id: &str) -> bool {
 }
 
 /// One `{"id": ..., "rows": [...]}` sweep line for `--json` mode.
-fn emit_json(id: &str, cluster: &ClusterConfig, rows: Vec<Json>) {
+fn emit_json(id: &str, cluster: &ClusterConfig, traffic: TrafficSpec, rows: Vec<Json>) {
     let doc = Json::obj([
         ("id", Json::str(id)),
         ("cluster", Json::str(cluster.name.clone())),
+        ("traffic", Json::str(traffic.name())),
         ("rows", Json::Arr(rows)),
     ]);
     println!("{}", doc.render());
@@ -64,9 +72,10 @@ fn weak_row(r: &F::WeakScalingRow) -> Json {
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env(&["json"])?;
-    args.reject_unknown(&["only", "cluster", "overlap-eff", "json"])?;
+    args.reject_unknown(&["only", "cluster", "overlap-eff", "json", "traffic"])?;
     let json = args.flag("json");
     let only = args.get("only").map(|s| s.to_string());
+    let traffic = TrafficSpec::from_args(&args)?;
     let cluster = ClusterConfig::by_name(args.get_or("cluster", "summit"))
         .ok_or_else(|| anyhow::anyhow!("unknown cluster (summit|thetagpu|perlmutter)"))?;
     let overlap_eff = match args.get("overlap-eff") {
@@ -121,6 +130,7 @@ fn main() -> anyhow::Result<()> {
             emit_json(
                 "fig5",
                 &cluster,
+                traffic,
                 rows.iter()
                     .map(|r| {
                         Json::obj([
@@ -134,6 +144,37 @@ fn main() -> anyhow::Result<()> {
                     })
                     .collect(),
             );
+        }
+        if traffic != TrafficSpec::Uniform {
+            println!("-- skewed expert traffic ({traffic}) --");
+            println!("{:<10} {:>9} {:>9} {:>9} {:>11}", "config", "compute", "a2a", "total", "vs uniform");
+            let srows = F::fig5_traffic(&cluster, 128, 1024, traffic);
+            for (r, u) in srows.iter().zip(&rows) {
+                println!(
+                    "{:<10} {:>8.2}s {:>8.2}s {:>8.2}s {:>+10.1}%",
+                    r.label, r.t.compute_s, r.t.alltoall_s, r.t.total(),
+                    100.0 * (r.t.total() / u.t.total() - 1.0)
+                );
+            }
+            println!();
+            if json {
+                emit_json(
+                    "fig5-traffic",
+                    &cluster,
+                    traffic,
+                    srows
+                        .iter()
+                        .map(|r| {
+                            Json::obj([
+                                ("config", Json::str(r.label)),
+                                ("compute_s", Json::Num(r.t.compute_s)),
+                                ("alltoall_s", Json::Num(r.t.alltoall_s)),
+                                ("total_s", Json::Num(r.t.total())),
+                            ])
+                        })
+                        .collect(),
+                );
+            }
         }
         if let Some(eff) = overlap_eff {
             println!("-- overlapped (hierarchical transport, overlap_efficiency {eff:.2}) --");
@@ -154,6 +195,7 @@ fn main() -> anyhow::Result<()> {
                 emit_json(
                     "fig5-overlapped",
                     &cluster,
+                    traffic,
                     orows
                         .iter()
                         .map(|r| {
@@ -186,7 +228,12 @@ fn main() -> anyhow::Result<()> {
                 );
             }
             if json {
-                emit_json(&format!("fig8-{name}"), &cluster, pts.iter().map(scaling_row).collect());
+                emit_json(
+                    &format!("fig8-{name}"),
+                    &cluster,
+                    traffic,
+                    pts.iter().map(scaling_row).collect(),
+                );
             }
             if let Some(eff) = overlap_eff {
                 println!("   overlapped (hierarchical, eff {eff:.2}):");
@@ -201,6 +248,7 @@ fn main() -> anyhow::Result<()> {
                     emit_json(
                         &format!("fig8-{name}-overlapped"),
                         &cluster,
+                        traffic,
                         opts.iter().map(scaling_row).collect(),
                     );
                 }
@@ -232,6 +280,7 @@ fn main() -> anyhow::Result<()> {
             emit_json(
                 "fig9",
                 &cluster,
+                traffic,
                 rows.iter()
                     .map(|r| {
                         Json::obj([
@@ -259,7 +308,7 @@ fn main() -> anyhow::Result<()> {
             );
         }
         if json {
-            emit_json("fig10", &cluster, pts.iter().map(scaling_row).collect());
+            emit_json("fig10", &cluster, traffic, pts.iter().map(scaling_row).collect());
         }
         if let Some(eff) = overlap_eff {
             println!("   overlapped (hierarchical, eff {eff:.2}):");
@@ -271,7 +320,12 @@ fn main() -> anyhow::Result<()> {
                 );
             }
             if json {
-                emit_json("fig10-overlapped", &cluster, opts.iter().map(scaling_row).collect());
+                emit_json(
+                    "fig10-overlapped",
+                    &cluster,
+                    traffic,
+                    opts.iter().map(scaling_row).collect(),
+                );
             }
         }
         println!();
@@ -297,7 +351,7 @@ fn main() -> anyhow::Result<()> {
             );
         }
         if json {
-            emit_json("fig11", &cluster, rows.iter().map(weak_row).collect());
+            emit_json("fig11", &cluster, traffic, rows.iter().map(weak_row).collect());
         }
         if let Some(eff) = overlap_eff {
             println!("   overlapped (planner-selected transport, eff {eff:.2}):");
@@ -315,7 +369,12 @@ fn main() -> anyhow::Result<()> {
                 );
             }
             if json {
-                emit_json("fig11-overlapped", &cluster, orows.iter().map(weak_row).collect());
+                emit_json(
+                    "fig11-overlapped",
+                    &cluster,
+                    traffic,
+                    orows.iter().map(weak_row).collect(),
+                );
             }
         }
         println!("(paper Table 2: 36.7 / 30.0 / 26.2 / 11.7 % of peak)\n");

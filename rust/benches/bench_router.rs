@@ -7,7 +7,7 @@ use std::sync::Arc;
 use ted::collectives::{Communicator, Rendezvous};
 use ted::config::ParallelConfig;
 use ted::metrics::bench;
-use ted::moe::{dispatch, return_to_origin, route_top1, MoeComm};
+use ted::moe::{dispatch, return_to_origin, MoeComm, Router, RouterConfig};
 use ted::topology::Topology;
 use ted::util::rng::Rng;
 use ted::util::tensor::Tensor;
@@ -36,8 +36,9 @@ fn bench_route(n: usize, e: usize, iters: u32) {
     let g = topo.groups(0);
     let probs = probs_for(n, e, 3);
     let cap = (n * 2 / e).max(8);
+    let router = Router::new(RouterConfig::top1(cap));
     bench::run(&format!("route_top1/{n}tok/{e}exp"), 3, iters, || {
-        let _ = route_top1(&mut comm, g.ep_group_id, &g.ep_group, 0, &probs, e, cap);
+        let _ = router.route(&mut comm, g.ep_group_id, &g.ep_group, 0, &probs, e);
     });
 }
 
@@ -106,7 +107,8 @@ fn one_pass(
 ) {
     let ep_pos = g.ep_group.iter().position(|&m| m == comm.rank()).unwrap();
     let tp_pos = g.tp_group.iter().position(|&m| m == comm.rank()).unwrap();
-    let dec = route_top1(comm, g.ep_group_id, &g.ep_group, ep_pos, probs, e, cap);
+    let dec = Router::new(RouterConfig::top1(cap))
+        .route(comm, g.ep_group_id, &g.ep_group, ep_pos, probs, e);
     let local_experts = e / g.ep_group.len();
     let mut ctx = MoeComm {
         comm,
@@ -119,8 +121,8 @@ fn one_pass(
         dtd,
         overlap: false,
     };
-    let disp = dispatch(&mut ctx, rows, &dec, local_experts, cap);
-    let _ = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, local_experts, cap);
+    let disp = dispatch(&mut ctx, rows, &dec, local_experts);
+    let _ = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, local_experts);
 }
 
 fn main() {

@@ -96,6 +96,9 @@ pub struct EngineOptions {
     pub capacity_factor: f32,
     /// Aux (load-balancing) loss coefficient.
     pub aux_loss_coef: f32,
+    /// Router z (over-confidence) loss coefficient; 0 disables it (the
+    /// default, matching the paper's recipe).
+    pub z_loss_coef: f32,
     /// Run the optimizer tile update through the AOT Pallas executable
     /// instead of the native rust path (identical math; see optimizer/).
     pub optimizer_use_pjrt: bool,
@@ -130,6 +133,7 @@ impl Default for EngineOptions {
             tile_size: 1_800_000, // paper: 1.8M parameters
             capacity_factor: 1.25,
             aux_loss_coef: 0.01,
+            z_loss_coef: 0.0,
             optimizer_use_pjrt: false,
             strategy: CollectiveStrategy::Flat,
             gpus_per_node: 0,

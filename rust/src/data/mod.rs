@@ -10,8 +10,108 @@
 
 pub mod corpus;
 
+use crate::util::cli::TrafficSpec;
 use crate::util::rng::Rng;
 use crate::util::tensor::IntTensor;
+
+/// Deterministic expert-traffic scenario generator: turns a
+/// [`TrafficSpec`] into per-step expert popularity weights and
+/// coordinate-deterministic draws. Everything is a pure function of
+/// (seed, step, coordinate) — no state, no communication — so every rank
+/// (and every transport) sees the identical scenario, which is what lets
+/// the parity matrix extend over traffic and the perf model price the
+/// same skew the simulator replays.
+#[derive(Debug, Clone, Copy)]
+pub struct TrafficModel {
+    pub spec: TrafficSpec,
+    pub seed: u64,
+}
+
+impl TrafficModel {
+    pub fn new(spec: TrafficSpec, seed: u64) -> Self {
+        TrafficModel { spec, seed }
+    }
+
+    /// The rotating hot expert for `step`.
+    pub fn hot_expert(&self, step: usize, n_experts: usize) -> usize {
+        Rng::named(self.seed, &format!("traffic/hot/{step}")).below(n_experts)
+    }
+
+    /// Does `step` burst (concentrate on one hot expert)? Always false
+    /// except under `bursty:<p>`.
+    pub fn is_burst(&self, step: usize) -> bool {
+        match self.spec {
+            TrafficSpec::Bursty(p) => {
+                Rng::named(self.seed, &format!("traffic/burst/{step}")).uniform() < p
+            }
+            _ => false,
+        }
+    }
+
+    /// Per-expert routing popularity for `step`; non-negative, sums to 1.
+    pub fn expert_weights(&self, step: usize, n_experts: usize) -> Vec<f64> {
+        let n = n_experts;
+        match self.spec {
+            TrafficSpec::Uniform => vec![1.0 / n as f64; n],
+            TrafficSpec::Zipf(s) => {
+                // popularity rank rotates with the per-step hot expert so
+                // skew does not pin one physical peer forever
+                let hot = self.hot_expert(step, n);
+                let mut w: Vec<f64> = (0..n)
+                    .map(|e| {
+                        let rank = (e + n - hot) % n;
+                        1.0 / ((rank + 1) as f64).powf(s)
+                    })
+                    .collect();
+                let sum: f64 = w.iter().sum();
+                for v in w.iter_mut() {
+                    *v /= sum;
+                }
+                w
+            }
+            TrafficSpec::Bursty(_) => {
+                if self.is_burst(step) {
+                    let mut w = vec![0.0; n];
+                    w[self.hot_expert(step, n)] = 1.0;
+                    w
+                } else {
+                    vec![1.0 / n as f64; n]
+                }
+            }
+        }
+    }
+
+    /// Inverse-CDF sample from `weights` (summing to ~1) at draw `u`.
+    pub fn sample(weights: &[f64], u: f64) -> usize {
+        let mut acc = 0.0;
+        for (e, w) in weights.iter().enumerate() {
+            acc += w;
+            if u < acc {
+                return e;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Deterministically draw the preferred expert for one token
+    /// coordinate (used by toy/parity workloads to shape gate probs).
+    pub fn pick_expert(
+        &self,
+        step: usize,
+        micro: usize,
+        dp_idx: usize,
+        token: usize,
+        n_experts: usize,
+    ) -> usize {
+        let w = self.expert_weights(step, n_experts);
+        let u = Rng::named(
+            self.seed,
+            &format!("traffic/pick/{step}/{micro}/{dp_idx}/{token}"),
+        )
+        .uniform();
+        Self::sample(&w, u)
+    }
+}
 
 /// A deterministic batch source.
 pub trait DataGen: Send + Sync {
@@ -84,6 +184,68 @@ impl DataGen for SyntheticLM {
 
     fn vocab(&self) -> usize {
         self.vocab
+    }
+}
+
+/// [`SyntheticLM`] with traffic-scenario-skewed token popularity: the
+/// random draws (sequence starts and off-chain noise) follow the
+/// [`TrafficModel`]'s per-step weights over the live vocab instead of
+/// being uniform, so hot steps funnel the stream through a hot token
+/// subset — the data-side lever `ted train --traffic zipf:1.2` uses to
+/// run skewed steps. `uniform` delegates to the plain generator
+/// byte-for-byte.
+pub struct TrafficLM {
+    pub base: SyntheticLM,
+    pub traffic: TrafficModel,
+}
+
+impl TrafficLM {
+    pub fn new(vocab: usize, seed: u64, spec: TrafficSpec) -> Self {
+        TrafficLM {
+            base: SyntheticLM::new(vocab, seed),
+            traffic: TrafficModel::new(spec, seed),
+        }
+    }
+}
+
+impl DataGen for TrafficLM {
+    fn batch(
+        &self,
+        step: usize,
+        micro: usize,
+        dp_idx: usize,
+        batch: usize,
+        seq: usize,
+    ) -> (IntTensor, IntTensor) {
+        if self.traffic.spec == TrafficSpec::Uniform {
+            return self.base.batch(step, micro, dp_idx, batch, seq);
+        }
+        let w = self.traffic.expert_weights(step, self.base.live_vocab);
+        let mut ids = vec![0i32; batch * seq];
+        let mut tgt = vec![0i32; batch * seq];
+        for b in 0..batch {
+            let key = format!("traffic-synth/{step}/{micro}/{dp_idx}/{b}");
+            let mut rng = Rng::named(self.base.seed, &key);
+            let mut prev = TrafficModel::sample(&w, rng.uniform());
+            for s in 0..seq {
+                ids[b * seq + s] = prev as i32;
+                let next = if (rng.uniform() as f32) < self.base.q {
+                    self.base.next_token(prev)
+                } else {
+                    TrafficModel::sample(&w, rng.uniform())
+                };
+                tgt[b * seq + s] = next as i32;
+                prev = next;
+            }
+        }
+        (
+            IntTensor::from_vec(&[batch, seq], ids),
+            IntTensor::from_vec(&[batch, seq], tgt),
+        )
+    }
+
+    fn vocab(&self) -> usize {
+        self.base.vocab
     }
 }
 
@@ -181,6 +343,76 @@ mod tests {
         }
         let rate = hits as f64 / total as f64;
         assert!(rate > 0.75 && rate <= 1.0, "chain rate {rate}");
+    }
+
+    #[test]
+    fn traffic_weights_are_seed_stable_and_normalized() {
+        for spec in [TrafficSpec::Uniform, TrafficSpec::Zipf(1.2), TrafficSpec::Bursty(0.5)] {
+            let a = TrafficModel::new(spec, 9);
+            let b = TrafficModel::new(spec, 9);
+            for step in 0..8 {
+                let wa = a.expert_weights(step, 8);
+                assert_eq!(wa, b.expert_weights(step, 8), "same seed must reproduce");
+                let sum: f64 = wa.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-12, "weights must sum to 1: {sum}");
+                assert!(wa.iter().all(|&w| w >= 0.0));
+            }
+            assert_eq!(a.pick_expert(3, 1, 0, 5, 8), b.pick_expert(3, 1, 0, 5, 8));
+        }
+    }
+
+    #[test]
+    fn zipf_hot_expert_rotates_and_skew_is_monotone_in_s() {
+        let tm = TrafficModel::new(TrafficSpec::Zipf(1.2), 11);
+        let hots: Vec<usize> = (0..64).map(|s| tm.hot_expert(s, 4)).collect();
+        assert!(hots.iter().any(|&h| h != hots[0]), "hot expert must rotate");
+        // the hot expert's share strictly grows with the exponent
+        let share = |s: f64| {
+            let m = TrafficModel::new(TrafficSpec::Zipf(s), 11);
+            let w = m.expert_weights(0, 8);
+            w.iter().cloned().fold(0.0f64, f64::max)
+        };
+        let (lo, mid, hi) = (share(0.5), share(1.2), share(2.0));
+        assert!(lo < mid && mid < hi, "zipf skew not monotone: {lo} {mid} {hi}");
+        assert!(lo > 1.0 / 8.0, "any positive exponent skews above uniform");
+    }
+
+    #[test]
+    fn bursty_rate_tracks_p_with_bounded_variance() {
+        let steps = 200;
+        let bursts = |p: f64| {
+            let m = TrafficModel::new(TrafficSpec::Bursty(p), 13);
+            (0..steps).filter(|&s| m.is_burst(s)).count()
+        };
+        assert_eq!(bursts(0.0), 0);
+        assert_eq!(bursts(1.0), steps);
+        let half = bursts(0.5);
+        assert!(
+            (40..=160).contains(&half),
+            "bursty:0.5 rate wildly off over {steps} steps: {half}"
+        );
+        // a burst step concentrates all weight on one expert
+        let m = TrafficModel::new(TrafficSpec::Bursty(1.0), 13);
+        let w = m.expert_weights(0, 4);
+        assert_eq!(w.iter().filter(|&&v| v > 0.0).count(), 1);
+    }
+
+    #[test]
+    fn traffic_lm_is_deterministic_and_uniform_delegates() {
+        let skew = TrafficLM::new(256, 3, TrafficSpec::Zipf(1.5));
+        let (a, at) = skew.batch(2, 0, 1, 2, 16);
+        let (b, bt) = skew.batch(2, 0, 1, 2, 16);
+        assert_eq!(a.data(), b.data());
+        assert_eq!(at.data(), bt.data());
+        // uniform spec is byte-for-byte the plain synthetic stream
+        let plain = SyntheticLM::new(256, 3);
+        let uni = TrafficLM::new(256, 3, TrafficSpec::Uniform);
+        let (p, _) = plain.batch(1, 0, 0, 2, 16);
+        let (u, _) = uni.batch(1, 0, 0, 2, 16);
+        assert_eq!(p.data(), u.data());
+        // the skewed stream differs from the plain one on skewed steps
+        let (s, _) = skew.batch(1, 0, 0, 2, 16);
+        assert_ne!(s.data(), p.data());
     }
 
     #[test]

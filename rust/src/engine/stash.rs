@@ -26,7 +26,7 @@ pub struct MoeParts {
     /// dispatched capacity buffers (expert inputs) + return-path origins
     pub disp: DispatchResult,
     /// combined (post all-reduce, post return-A2A) expert output row per
-    /// local token; None = dropped token
+    /// local assignment (one per token at top-1); None = dropped
     pub rows: Vec<Option<Vec<f32>>>,
 }
 
@@ -77,18 +77,21 @@ impl LayerStash {
     }
 }
 
-/// y2 = y1 + p_t * row_t for routed tokens (identity for dropped) — the
-/// combine step; `y1` is [B, S, D] laid out as [N, D] token rows.
+/// y2 = y1 + Σ_choices p_a * row_a per token (identity for dropped
+/// assignments) — the combine step; `y1` is [B, S, D] laid out as [N, D]
+/// token rows, `rows` is assignment-major like the decision (one entry per
+/// token at top-1).
 pub fn combine(y1: &Tensor, dec: &RoutingDecision, rows: &[Option<Vec<f32>>]) -> Tensor {
     let d = *y1.shape().last().unwrap();
     let n = y1.numel() / d;
-    assert_eq!(rows.len(), n, "combine row count");
+    assert_eq!(n, dec.n_tokens, "combine token count");
+    assert_eq!(rows.len(), dec.n_assignments(), "combine row count");
     let mut y2 = y1.clone();
     let data = y2.data_mut();
-    for (t, row) in rows.iter().enumerate() {
+    for (a, row) in rows.iter().enumerate() {
         if let Some(r) = row {
-            let p = dec.prob_of_token[t];
-            let base = t * d;
+            let p = dec.prob_of_token[a];
+            let base = dec.token_of(a) * d;
             for j in 0..d {
                 data[base + j] += p * r[j];
             }
@@ -97,9 +100,9 @@ pub fn combine(y1: &Tensor, dec: &RoutingDecision, rows: &[Option<Vec<f32>>]) ->
     y2
 }
 
-/// Backward of [`combine`]: given dy2 [N*D], produce
-/// (per-token gradient rows w.r.t. expert outputs [N, D], and the combine
-/// part of dprobs [N, E]). The residual path gradient is dy2 itself.
+/// Backward of [`combine`]: given dy2 [N*D], produce (per-**assignment**
+/// gradient rows w.r.t. expert outputs [N*top_k, D], and the combine part
+/// of dprobs [N, E]). The residual path gradient is dy2 itself.
 pub fn combine_bwd(
     dy2: &Tensor,
     dec: &RoutingDecision,
@@ -108,21 +111,23 @@ pub fn combine_bwd(
 ) -> (Tensor, Tensor) {
     let d = *dy2.shape().last().unwrap();
     let n = dy2.numel() / d;
-    let mut drows = Tensor::zeros(&[n, d]);
+    assert_eq!(n, dec.n_tokens, "combine_bwd token count");
+    let mut drows = Tensor::zeros(&[dec.n_assignments(), d]);
     let mut dprobs = Tensor::zeros(&[n, n_experts]);
     let dy = dy2.data();
-    for (t, row) in rows.iter().enumerate() {
+    for (a, row) in rows.iter().enumerate() {
         let Some(r) = row else { continue };
-        let p = dec.prob_of_token[t];
-        let e = dec.expert_of_token[t];
+        let p = dec.prob_of_token[a];
+        let e = dec.expert_of_token[a];
+        let t = dec.token_of(a);
         let base = t * d;
-        let out = drows.row_mut(t);
+        let out = drows.row_mut(a);
         let mut dot = 0.0f32;
         for j in 0..d {
             out[j] = p * dy[base + j];
             dot += dy[base + j] * r[j];
         }
-        dprobs.row_mut(t)[e] = dot;
+        dprobs.row_mut(t)[e] += dot;
     }
     (drows, dprobs)
 }
@@ -133,6 +138,9 @@ mod tests {
 
     fn dec2() -> RoutingDecision {
         RoutingDecision {
+            top_k: 1,
+            n_tokens: 2,
+            capacity: 2,
             expert_of_token: vec![1, 0],
             prob_of_token: vec![0.5, 0.25],
             slot_of_token: vec![Some(0), None],
@@ -140,6 +148,7 @@ mod tests {
             p_mean: vec![0.5, 0.5],
             group_tokens: 2,
             aux_loss: 1.0,
+            z_loss: 0.0,
         }
     }
 

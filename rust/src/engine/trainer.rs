@@ -27,12 +27,11 @@
 //! collectives actually hide behind compute and which serialize. The
 //! lane prices the schedule this engine *executes*: with CAC on the
 //! stash keeps full activations and no re-forward runs (3 pass-units per
-//! layer block instead of the analytic model's uniform 4; the head is
-//! fwd + bwd in both) — so the measured compute lane is the executed
-//! budget, while `perfmodel::batch_time` prices the paper's checkpointed
-//! budget; the fitted `overlap_efficiency` is a ratio of the measured
-//! schedule and transfers to the analytic sweeps as a calibration, not
-//! an identity.
+//! layer block instead of checkpointing's 4; the head is fwd + bwd in
+//! both) — and `perfmodel::compute_budget_s` prices the *same* stashed
+//! schedule when `CommOpts::cac` is set, so on matching scenarios the
+//! fitted `overlap_efficiency` is an identity on synthetic logs rather
+//! than absorbing a constant 3/4 pass-count mismatch.
 
 use anyhow::{bail, Result};
 use std::sync::Arc;
@@ -42,7 +41,7 @@ use crate::config::{EngineOptions, TrainingConfig};
 use crate::engine::blocks;
 use crate::engine::params::{init_params, is_moe_layer, ParamStore};
 use crate::engine::stash::{combine, combine_bwd, DenseParts, LayerParts, LayerStash, MoeParts};
-use crate::moe::{dispatch, return_to_origin, route_top1, MoeComm};
+use crate::moe::{dispatch, return_to_origin, MoeComm, Router, RouterConfig, RouterMode};
 use crate::optimizer::{AdamwStep, TilingOpts, Zero1Optimizer};
 use crate::perfmodel::flops::{attn_fwd_flops, ffn_fwd_flops, head_fwd_flops};
 use crate::runtime::{Manifest, Runtime};
@@ -200,6 +199,18 @@ impl Trainer {
             .all_reduce(self.groups.tp_group_id, &self.groups.tp_group, t);
     }
 
+    /// Router for this engine's MoE layers: top-1 with the manifest's
+    /// capacity budget (the paper's scheme) and the configured loss
+    /// coefficients.
+    fn router(&self) -> Router {
+        Router::new(RouterConfig {
+            top_k: 1,
+            mode: RouterMode::Capacity { capacity: self.manifest.dims.capacity },
+            aux_coef: self.opts.aux_loss_coef,
+            z_coef: self.opts.z_loss_coef,
+        })
+    }
+
     // ---------------------------------------------------------------
     // compute pricing (the timeline's compute lane)
     // ---------------------------------------------------------------
@@ -267,16 +278,14 @@ impl Trainer {
 
         // MoE layer: LN + gate, route, dispatch (DTD), experts, return, combine
         let (xn, probs) = blocks::router_fwd(&mut self.rt, &self.store, i, &y1)?;
-        let cap = self.manifest.dims.capacity;
         let n_experts = self.manifest.dims.n_experts;
-        let dec = route_top1(
+        let dec = self.router().route(
             &mut self.comm,
             self.groups.ep_group_id,
             &self.groups.ep_group,
             self.ep_pos,
             &probs,
             n_experts,
-            cap,
         );
         let local = self.local_expert_ids.len();
         let disp = {
@@ -291,7 +300,7 @@ impl Trainer {
                 dtd: self.opts.dtd,
                 overlap: self.opts.overlap,
             };
-            dispatch(&mut ctx, &xn, &dec, local, cap)
+            dispatch(&mut ctx, &xn, &dec, local)
         };
         let mut expert_out = Vec::with_capacity(local);
         if self.opts.overlap {
@@ -341,7 +350,7 @@ impl Trainer {
                 dtd: self.opts.dtd,
                 overlap: self.opts.overlap,
             };
-            return_to_origin(&mut ctx, &expert_out, &disp, &dec, local, cap)
+            return_to_origin(&mut ctx, &expert_out, &disp, &dec, local)
         };
         let y2 = combine(&y1, &dec, &rows);
         let stash = LayerStash {
@@ -382,11 +391,13 @@ impl Trainer {
             }
             LayerParts::Moe(MoeParts { y1, dec, disp, rows }) => {
                 let n_experts = self.manifest.dims.n_experts;
-                let cap = self.manifest.dims.capacity;
                 let local = self.local_expert_ids.len();
                 // combine backward
                 let (drows, mut dprobs) = combine_bwd(dy2, &dec, &rows, n_experts);
                 dec.aux_grad_into(self.opts.aux_loss_coef * self.tcfg.loss_scale, &mut dprobs);
+                if self.opts.z_loss_coef != 0.0 {
+                    dec.z_grad_into(self.opts.z_loss_coef * self.tcfg.loss_scale, &mut dprobs);
+                }
                 // gradient rows travel the same drop -> A2A -> all-gather path
                 let disp_b = {
                     let mut ctx = MoeComm {
@@ -400,7 +411,7 @@ impl Trainer {
                         dtd: self.opts.dtd,
                         overlap: self.opts.overlap,
                     };
-                    dispatch(&mut ctx, &drows, &dec, local, cap)
+                    dispatch(&mut ctx, &drows, &dec, local)
                 };
                 let mut dxe_full = Vec::with_capacity(local);
                 if self.opts.overlap {
@@ -466,15 +477,19 @@ impl Trainer {
                         dtd: self.opts.dtd,
                         overlap: self.opts.overlap,
                     };
-                    return_to_origin(&mut ctx, &dxe_full, &disp_b, &dec, local, cap)
+                    return_to_origin(&mut ctx, &dxe_full, &disp_b, &dec, local)
                 };
-                // assemble dxn [N, D] (zero rows for dropped tokens)
+                // assemble dxn [N, D]: per-assignment gradients accumulate
+                // into their token's row (zero rows for dropped tokens)
                 let d = self.manifest.dims.d_model;
                 let n = self.manifest.dims.tokens();
                 let mut dxn = Tensor::zeros(&[n, d]);
-                for (t, row) in ret.iter().enumerate() {
+                for (a, row) in ret.iter().enumerate() {
                     if let Some(r) = row {
-                        dxn.copy_row_from(t, r);
+                        let out = dxn.row_mut(dec.token_of(a));
+                        for (j, v) in r.iter().enumerate() {
+                            out[j] += v;
+                        }
                     }
                 }
                 let (grads, dx_router) =

@@ -78,6 +78,32 @@
 //! `rust/tests/integration_accounting.rs`; the model's invariants live in
 //! `rust/tests/compute_overlap_model.rs`.
 //!
+//! ## Routing and traffic
+//!
+//! The MoE router is a small policy object ([`moe::RouterConfig`] →
+//! [`moe::Router`]): `top_k` plus a [`moe::RouterMode`] — `Capacity`
+//! (the paper's capacity-factored router; over-capacity tokens drop to
+//! the residual path) or `Dropless` (no-drop top-k: per-expert groups
+//! sized by actual demand, SNIPPETS-style dMoE). Every decision also
+//! carries the switch-style auxiliary load-balancing loss and the
+//! router z-loss (`aux_coef`, `z_coef`; `EngineOptions::z_loss_coef`
+//! feeds the z-loss gradient into training). The dispatch layer
+//! consumes the same `RoutingDecision` either way, so the transport
+//! parity matrix extends over routing modes unchanged.
+//!
+//! Traffic is a first-class scenario axis: `util::cli::TrafficSpec`
+//! (`uniform | zipf:<s> | bursty:<p>`) drives a deterministic
+//! [`data::TrafficModel`] (per-step expert popularity, rotating hot
+//! expert, coordinate-deterministic draws), which shapes both training
+//! data (`data::TrafficLM`, `ted train --traffic zipf:1.2`) and the
+//! analytic pricing: `perfmodel::traffic_skew` folds the hot peer's
+//! payload factor into the expert all-to-all of `perfmodel::comm_ops`,
+//! so `batch_time`, the measured replay, and the planner all price the
+//! same skew; `batch_time_worst_traffic` prices the worst step (a
+//! burst), which `ted plan --traffic bursty:0.3` reports next to the
+//! average. The irregular (per-peer row count) all-to-all path is
+//! pinned measured == analytic in `rust/tests/traffic_scenarios.rs`.
+//!
 //! ## The parallelism planner
 //!
 //! `planner` is the capability layer above the transports: given a

@@ -14,13 +14,13 @@
 use anyhow::{anyhow, bail, Result};
 
 use ted::config::{model, ClusterConfig, EngineOptions, ParallelConfig, TrainingConfig};
-use ted::data::{DataGen, SyntheticLM, TextCorpus};
+use ted::data::{DataGen, SyntheticLM, TextCorpus, TrafficLM};
 use ted::memory::{MemoryModel, PHASES};
 use ted::planner::{plan, report_json, PlanRequest};
 use ted::runtime::Manifest;
 use ted::sim::{train, RunConfig};
 use ted::topology::Topology;
-use ted::util::cli::Args;
+use ted::util::cli::{Args, TrafficSpec};
 
 const USAGE: &str = "\
 ted — DeepSpeed-TED reproduction (hybrid tensor-expert-data parallel MoE training)
@@ -31,10 +31,11 @@ USAGE:
              [--no-tiling] [--batch N] [--verbose]
              [--transport flat|hierarchical|hierarchical-pxn]
              [--gpus-per-node N] [--cluster summit|thetagpu|perlmutter]
-             [--no-overlap]
+             [--no-overlap] [--traffic uniform|zipf:<s>|bursty:<p>]
   ted plan   [--cluster summit|thetagpu|perlmutter] [--model NAME]
              [--experts E] [--gpus G] [--batch N] [--overlap-eff E]
              [--max-tp N] [--micro N] [--top K] [--json]
+             [--traffic uniform|zipf:<s>|bursty:<p>]
   ted info   --model {1.3B|2.7B|6.7B|13.0B} --experts E --gpus G --tp T
              [--cluster summit|thetagpu|perlmutter]
   ted figures [--only ID]    (alias of `cargo run --example paper_figures`)
@@ -47,6 +48,12 @@ compute-aware overlap model, and prints a ranked plan list.
 Calibrate --overlap-eff from a measured run: `ted train --cluster
 <preset>` reports the fitted knob. --json emits a machine-readable
 report for trajectory diffing.
+
+--traffic selects an expert-traffic scenario: `train` skews the data
+generator's routed tokens (zipf: rotating hot-expert skew; bursty:
+one-hot burst steps with probability p), `plan` prices every candidate
+under the skew and reports the worst single step next to the average —
+skew-heavy scenarios can re-rank plans toward smaller expert groups.
 
 Selecting --cluster on `train` threads the preset's gpus-per-node into
 the transport layer and prices a three-lane (compute/NVLink/IB) overlap
@@ -94,7 +101,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "config", "world", "tp", "ep", "steps", "micro", "lr", "seed", "data", "batch",
         "no-dtd", "no-cac", "no-tiling", "no-overlap", "verbose", "transport",
-        "gpus-per-node", "cluster",
+        "gpus-per-node", "cluster", "traffic",
     ])?;
     let config = args.get_or("config", "tiny").to_string();
     let tp = args.get_usize("tp", 2)?;
@@ -141,25 +148,32 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", 1234)?,
         ..Default::default()
     };
+    let traffic = TrafficSpec::from_args(args)?;
     let data_kind = args.get_or("data", "synthetic").to_string();
     let synth;
+    let skewed;
     let corpus;
-    let data: &dyn DataGen = match data_kind.as_str() {
-        "synthetic" => {
+    let data: &dyn DataGen = match (data_kind.as_str(), traffic) {
+        ("synthetic", TrafficSpec::Uniform) => {
             synth = SyntheticLM::new(manifest.dims.vocab, tcfg.seed);
             &synth
         }
-        "corpus" => {
+        ("synthetic", spec) => {
+            skewed = TrafficLM::new(manifest.dims.vocab, tcfg.seed, spec);
+            &skewed
+        }
+        ("corpus", TrafficSpec::Uniform) => {
             corpus = TextCorpus::new(tcfg.seed);
             &corpus
         }
-        other => bail!("unknown --data '{other}' (synthetic|corpus)"),
+        ("corpus", _) => bail!("--traffic skew requires --data synthetic"),
+        (other, _) => bail!("unknown --data '{other}' (synthetic|corpus)"),
     };
 
     println!(
-        "ted train: {config} on world={world} (tensor={tp} expert={ep} dp_exp={} dp_nonexp={}) dtd={} cac={} tiling={} transport={} overlap={}{}",
+        "ted train: {config} on world={world} (tensor={tp} expert={ep} dp_exp={} dp_nonexp={}) dtd={} cac={} tiling={} transport={} overlap={} traffic={}{}",
         topo.cfg.dp_exp, topo.cfg.dp_nonexp, opts.dtd, opts.cac, opts.optimizer_tiling,
-        opts.strategy.name(), opts.overlap,
+        opts.strategy.name(), opts.overlap, traffic,
         opts.cluster.map(|p| format!(" cluster={}", p.name())).unwrap_or_default()
     );
     let run = RunConfig {
@@ -209,7 +223,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_plan(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "model", "experts", "gpus", "batch", "cluster", "overlap-eff", "max-tp", "micro", "top",
-        "json",
+        "json", "traffic",
     ])?;
     let cluster = ClusterConfig::by_name(args.get_or("cluster", "summit"))
         .ok_or_else(|| anyhow!("unknown --cluster (summit|thetagpu|perlmutter)"))?;
@@ -234,6 +248,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
     if req.max_tp == 0 {
         bail!("--max-tp must be positive");
     }
+    req.traffic = TrafficSpec::from_args(args)?;
     if args.get("micro").is_some() {
         let micro = args.get_usize("micro", 1)?;
         if micro == 0 {
@@ -249,9 +264,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
     }
 
     println!(
-        "ted plan: {} x{}e on {} GPUs of {} (batch {}, overlap-eff {:.2}, max tp {})",
+        "ted plan: {} x{}e on {} GPUs of {} (batch {}, overlap-eff {:.2}, max tp {}, traffic {})",
         req.model.name, req.n_experts, req.gpus, req.cluster.name, req.global_batch,
-        req.overlap_efficiency, req.max_tp
+        req.overlap_efficiency, req.max_tp, req.traffic
     );
     if report.plans.is_empty() {
         println!("no feasible configuration — every point was pruned:");
@@ -289,6 +304,14 @@ fn cmd_plan(args: &Args) -> Result<()> {
             best.mem_peak_phase.name(),
             best.headroom_bytes() as f64 / (1u64 << 30) as f64
         );
+        if best.worst_total_s() > best.total_s() {
+            println!(
+                "burst exposure ({}): worst single step {:.2}s vs {:.2}s average",
+                req.traffic,
+                best.worst_total_s(),
+                best.total_s()
+            );
+        }
         let mut cmd = format!(
             "ted train --world {} --tp {} --ep {} --transport {}",
             best.knobs.par.world,

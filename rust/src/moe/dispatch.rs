@@ -168,41 +168,52 @@ pub struct DispatchResult {
     pub origin_of_slot: Vec<Vec<Option<usize>>>,
 }
 
-/// `key` for a kept token: unique buffer cell within the EP group.
-pub fn key_of(dec: &RoutingDecision, token: usize, capacity: usize) -> Option<usize> {
-    dec.slot_of_token[token].map(|s| dec.expert_of_token[token] * capacity + s)
+/// `key` for a kept assignment (token choice): unique buffer cell within
+/// the EP group, addressed with the decision's effective capacity.
+pub fn key_of(dec: &RoutingDecision, assignment: usize) -> Option<usize> {
+    dec.slot_of_token[assignment].map(|s| dec.expert_of_token[assignment] * dec.capacity + s)
 }
 
-/// Dispatch per-token rows (`rows`: [n, d]) to the expert capacity buffers.
-///
-/// Used twice per layer: forward (rows = normalized activations `xn`) and
-/// backward (rows = per-token gradient w.r.t. the expert outputs).
-#[allow(clippy::too_many_arguments)]
+/// Dispatch rows to the expert capacity buffers. `rows` is either
+/// token-major `[n_tokens, d]` (forward: each of a token's `top_k` choices
+/// ships the same activation row) or assignment-major
+/// `[n_tokens * top_k, d]` (backward: per-choice gradients); at the
+/// engine-default `top_k = 1` the two layouts coincide. Buffer sizing and
+/// key addressing use the decision's effective capacity — under dropless
+/// routing that value (and hence every payload) varies per pass, which is
+/// what makes the EP all-to-all genuinely irregular.
 pub fn dispatch(
     ctx: &mut MoeComm,
     rows: &Tensor,
     dec: &RoutingDecision,
     local_experts: usize,
-    capacity: usize,
 ) -> DispatchResult {
     let d = rows.row_len();
-    let n = rows.rows();
-    assert_eq!(dec.expert_of_token.len(), n);
+    let capacity = dec.capacity;
+    let na = dec.n_assignments();
+    let per_assignment = rows.rows() == na && dec.top_k > 1;
+    assert!(
+        rows.rows() == dec.n_tokens || rows.rows() == na,
+        "rows {} match neither tokens {} nor assignments {na}",
+        rows.rows(),
+        dec.n_tokens
+    );
     let n_members = ctx.ep_members.len();
 
     // build one payload per EP member
     let mut send: Vec<Vec<f32>> = vec![Vec::new(); n_members];
-    for i in 0..n {
-        let Some(slot) = dec.slot_of_token[i] else { continue };
+    for a in 0..na {
+        let Some(slot) = dec.slot_of_token[a] else { continue };
         if !ctx.owns_slot(slot) {
             continue; // DTD drop: another TP plane carries this row
         }
-        let e = dec.expert_of_token[i];
+        let e = dec.expert_of_token[a];
         let dest = e / local_experts;
         let key = (e * capacity + slot) as f32;
+        let src = if per_assignment { a } else { dec.token_of(a) };
         let payload = &mut send[dest];
         payload.push(key);
-        payload.extend_from_slice(rows.row(i));
+        payload.extend_from_slice(rows.row(src));
     }
 
     // scatter target state, created up front so the pipelined schedule
@@ -274,17 +285,19 @@ pub fn dispatch(
 /// Return expert-side per-slot rows (`buffers`: per local expert [cap, d])
 /// to their origin ranks; inverts [`dispatch`].
 ///
-/// Returns, for each local token, the row that came back (`None` for
-/// dropped tokens). Used forward (rows = combined expert outputs) and
-/// backward (rows = gradients at the expert inputs).
+/// Returns, for each local **assignment** (token choice, assignment-major
+/// like the decision; one entry per token at `top_k = 1`), the row that
+/// came back — `None` for dropped assignments. Used forward (rows =
+/// combined expert outputs) and backward (rows = gradients at the expert
+/// inputs).
 pub fn return_to_origin(
     ctx: &mut MoeComm,
     buffers: &[Tensor],
     disp: &DispatchResult,
     dec: &RoutingDecision,
     local_experts: usize,
-    capacity: usize,
 ) -> Vec<Option<Vec<f32>>> {
+    let capacity = dec.capacity;
     let n_members = ctx.ep_members.len();
     let d = buffers.first().map(|b| b.row_len()).unwrap_or(0);
     let first_expert = ctx.ep_pos * local_experts;
@@ -335,12 +348,12 @@ pub fn return_to_origin(
         }
     }
 
-    // map keys back to local tokens
-    let n = dec.expert_of_token.len();
+    // map keys back to local assignments
+    let n = dec.n_assignments();
     let mut key_to_token = std::collections::HashMap::with_capacity(n);
-    for i in 0..n {
-        if let Some(k) = key_of(dec, i, capacity) {
-            key_to_token.insert(k, i);
+    for a in 0..n {
+        if let Some(k) = key_of(dec, a) {
+            key_to_token.insert(k, a);
         }
     }
     let mut out: Vec<Option<Vec<f32>>> = vec![None; n];
@@ -364,7 +377,7 @@ mod tests {
     use super::*;
     use crate::collectives::{CollectiveStrategy, CommKind, Rendezvous};
     use crate::config::ParallelConfig;
-    use crate::moe::router::route_top1;
+    use crate::moe::router::{Router, RouterConfig};
     use crate::topology::Topology;
     use std::sync::Arc;
 
@@ -431,8 +444,8 @@ mod tests {
                         }
                         let ep_pos = g.ep_group.iter().position(|&m| m == r).unwrap();
                         let tp_pos = g.tp_group.iter().position(|&m| m == r).unwrap();
-                        let dec = route_top1(
-                            &mut comm, g.ep_group_id, &g.ep_group, ep_pos, &probs, n_experts, cap,
+                        let dec = Router::new(RouterConfig::top1(cap)).route(
+                            &mut comm, g.ep_group_id, &g.ep_group, ep_pos, &probs, n_experts,
                         );
                         let mut ctx = MoeComm {
                             comm: &mut comm,
@@ -445,7 +458,7 @@ mod tests {
                             dtd,
                             overlap,
                         };
-                        let disp = dispatch(&mut ctx, &rows, &dec, local_experts, cap);
+                        let disp = dispatch(&mut ctx, &rows, &dec, local_experts);
                         // fake expert compute: negate every filled row
                         let mut outs: Vec<Tensor> = disp
                             .buffers
@@ -459,7 +472,7 @@ mod tests {
                         // under DTD each plane computed the same thing; no
                         // TP all-reduce needed for this fake compute
                         let _ = &mut outs;
-                        let back = return_to_origin(&mut ctx, &outs, &disp, &dec, local_experts, cap);
+                        let back = return_to_origin(&mut ctx, &outs, &disp, &dec, local_experts);
                         (r, back, rows.data().to_vec())
                     })
                 })
@@ -570,8 +583,8 @@ mod tests {
                         }
                         let ep_pos = g.ep_group.iter().position(|&m| m == r).unwrap();
                         let tp_pos = g.tp_group.iter().position(|&m| m == r).unwrap();
-                        let dec = route_top1(
-                            &mut comm, g.ep_group_id, &g.ep_group, ep_pos, &probs, 2, cap,
+                        let dec = Router::new(RouterConfig::top1(cap)).route(
+                            &mut comm, g.ep_group_id, &g.ep_group, ep_pos, &probs, 2,
                         );
                         let mut ctx = MoeComm {
                             comm: &mut comm,
@@ -584,8 +597,8 @@ mod tests {
                             dtd,
                             overlap: false,
                         };
-                        let disp = dispatch(&mut ctx, &rows, &dec, 1, cap);
-                        let _ = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, 1, cap);
+                        let disp = dispatch(&mut ctx, &rows, &dec, 1);
+                        let _ = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, 1);
                     });
                 }
             });
@@ -629,8 +642,8 @@ mod tests {
                         }
                         let ep_pos = g.ep_group.iter().position(|&m| m == r).unwrap();
                         let tp_pos = g.tp_group.iter().position(|&m| m == r).unwrap();
-                        let dec = route_top1(
-                            &mut comm, g.ep_group_id, &g.ep_group, ep_pos, &probs, 2, cap,
+                        let dec = Router::new(RouterConfig::top1(cap)).route(
+                            &mut comm, g.ep_group_id, &g.ep_group, ep_pos, &probs, 2,
                         );
                         let mut ctx = MoeComm {
                             comm: &mut comm,
@@ -643,8 +656,8 @@ mod tests {
                             dtd,
                             overlap: false,
                         };
-                        let disp = dispatch(&mut ctx, &rows, &dec, 1, cap);
-                        let _ = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, 1, cap);
+                        let disp = dispatch(&mut ctx, &rows, &dec, 1);
+                        let _ = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, 1);
                     });
                 }
             });
@@ -671,7 +684,8 @@ mod tests {
         let cap = 2; // only 2 slots for 4 tokens all routed to expert 0
         let rows = Tensor::from_vec(&[n, d], (0..n * d).map(|v| v as f32).collect());
         let probs = Tensor::from_vec(&[n, 2], vec![0.9, 0.1].repeat(n));
-        let dec = route_top1(&mut comm, g.ep_group_id, &g.ep_group, 0, &probs, 2, cap);
+        let dec = Router::new(RouterConfig::top1(cap))
+            .route(&mut comm, g.ep_group_id, &g.ep_group, 0, &probs, 2);
         let mut ctx = MoeComm {
             comm: &mut comm,
             ep_gid: g.ep_group_id,
@@ -683,9 +697,58 @@ mod tests {
             dtd: false,
             overlap: false,
         };
-        let disp = dispatch(&mut ctx, &rows, &dec, 2, cap);
-        let back = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, 2, cap);
+        let disp = dispatch(&mut ctx, &rows, &dec, 2);
+        let back = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, 2);
         assert!(back[0].is_some() && back[1].is_some());
         assert!(back[2].is_none() && back[3].is_none());
+    }
+
+    #[test]
+    fn dropless_top2_round_trips_every_assignment() {
+        // single-rank EP group, 2 experts, top-2 dropless: both of every
+        // token's choices must dispatch (hot expert sizes the buffers) and
+        // come back per assignment
+        let rez = Rendezvous::new(1);
+        let mut comm = Communicator::new(Arc::clone(&rez), 0);
+        let topo = Topology::new(ParallelConfig::derive(1, 1, 1).unwrap()).unwrap();
+        let g = topo.groups(0);
+        let n = 4;
+        let d = 3;
+        let rows = Tensor::from_vec(&[n, d], (0..n * d).map(|v| v as f32).collect());
+        let probs = Tensor::from_vec(&[n, 2], vec![0.7, 0.3].repeat(n));
+        let dec = Router::new(RouterConfig::dropless(2))
+            .route(&mut comm, g.ep_group_id, &g.ep_group, 0, &probs, 2);
+        assert_eq!(dec.capacity, 4, "both experts carry all {n} tokens");
+        assert_eq!(dec.kept(), 2 * n);
+        let mut ctx = MoeComm {
+            comm: &mut comm,
+            ep_gid: g.ep_group_id,
+            ep_members: &g.ep_group,
+            ep_pos: 0,
+            tp_gid: g.tp_group_id,
+            tp_members: &g.tp_group,
+            tp_pos: 0,
+            dtd: false,
+            overlap: false,
+        };
+        let disp = dispatch(&mut ctx, &rows, &dec, 2);
+        let outs: Vec<Tensor> = disp
+            .buffers
+            .iter()
+            .map(|b| {
+                let mut t = b.clone();
+                t.scale(-1.0);
+                t
+            })
+            .collect();
+        let back = return_to_origin(&mut ctx, &outs, &disp, &dec, 2);
+        assert_eq!(back.len(), 2 * n);
+        for a in 0..2 * n {
+            let tok = dec.token_of(a);
+            let row = back[a].as_ref().unwrap_or_else(|| panic!("assignment {a} dropped"));
+            for j in 0..d {
+                assert_eq!(row[j], -rows.row(tok)[j], "assignment {a} dim {j}");
+            }
+        }
     }
 }

@@ -1,9 +1,10 @@
-//! Mixture-of-Experts coordination: top-1 routing with capacity assignment,
-//! token dispatch/combine over the expert-parallel all-to-all, and the
-//! paper's Duplicate Token Dropping (DTD) communication optimization.
+//! Mixture-of-Experts coordination: top-k routing with capacity-factored
+//! or dropless slot assignment behind the [`Router`] API, token
+//! dispatch/combine over the expert-parallel all-to-all, and the paper's
+//! Duplicate Token Dropping (DTD) communication optimization.
 
 pub mod dispatch;
 pub mod router;
 
 pub use dispatch::{dispatch, key_of, return_to_origin, DispatchResult, MoeComm};
-pub use router::{route_top1, RoutingDecision};
+pub use router::{Router, RouterConfig, RouterMode, RoutingDecision};

@@ -1,34 +1,272 @@
-//! Top-1 MoE routing: expert selection, capacity-slot assignment, and the
-//! load-balancing auxiliary loss — the integer control flow the paper's
-//! framework inherits from DeepSpeed-MoE/Switch.
+//! Top-k MoE routing behind the [`Router`] API: expert selection,
+//! capacity-slot assignment (fixed-capacity *or* dropless), and the
+//! load-balancing auxiliary / z losses — the integer control flow the
+//! paper's framework inherits from DeepSpeed-MoE/Switch, extended with
+//! Megatron-Core-style dropless ("dMoE") routing.
 //!
 //! The gate *probabilities* come from the AOT Pallas kernel
 //! (`moe_ln_router_fwd`); this module turns them into dispatch decisions.
 //!
 //! Capacity slots are assigned in **canonical EP-group order** (EP member
-//! position, then local token index). Two properties follow:
+//! position, then local token index, then choice rank). Two properties
+//! follow:
 //! * every rank computes identical decisions from identical probabilities
 //!   (bit-identical across the TP group, since HLO execution is
 //!   deterministic), and
 //! * the decision depends only on the global token order, not on the
 //!   topology — which is what makes the tp=2/ep=2 run loss-identical to the
 //!   tp=1 baseline (paper Fig. 7).
+//!
+//! **Routing modes.** [`RouterMode::Capacity`] is the paper's scheme: a
+//! fixed per-expert slot budget (derived from the capacity factor at
+//! manifest-build time); overflow tokens pass through on the residual.
+//! [`RouterMode::Dropless`] sizes the buffers per pass instead: the
+//! effective capacity is the *maximum per-expert load across the EP
+//! group*, derived from the same counts all-gather the capacity mode
+//! already performs — no extra collective, no dropped token, and a
+//! genuinely irregular all-to-all (hot experts ship more rows than cold
+//! ones).
+//!
+//! **Losses.** The auxiliary loss is Switch's `E * Σ_e f_e · P_e`. The z
+//! loss here is a probs-domain surrogate of the logit z-loss (the router
+//! sees post-softmax probabilities, so the true `logsumexp²` is not
+//! recoverable): `mean_i ln(E · p_top,i)²` — zero for a uniform gate and
+//! growing as the gate saturates, penalizing over-confident routing the
+//! same direction the logit version does. Both default to coefficient
+//! conventions set in [`RouterConfig`]; `z_coef = 0` (the default)
+//! reproduces the pre-redesign behavior bit for bit.
 
 use crate::collectives::Communicator;
 use crate::topology::GroupId;
 use crate::util::tensor::Tensor;
 
+/// How capacity slots are budgeted.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RouterMode {
+    /// Fixed per-expert slot budget (the paper's capacity-factor scheme);
+    /// assignments past the budget are dropped.
+    Capacity { capacity: usize },
+    /// No drops: the per-pass effective capacity is the EP-group-wide
+    /// maximum per-expert load (agreed via the counts all-gather every
+    /// mode already performs).
+    Dropless,
+}
+
+/// Full routing configuration consumed by [`Router::route`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RouterConfig {
+    /// Experts per token (`k >= 1`); each token yields `k` assignments.
+    pub top_k: usize,
+    pub mode: RouterMode,
+    /// Coefficient of the auxiliary (load-balancing) loss.
+    pub aux_coef: f32,
+    /// Coefficient of the z (over-confidence) loss; 0 disables it.
+    pub z_coef: f32,
+}
+
+impl RouterConfig {
+    /// The paper's default: top-1 with a fixed capacity budget.
+    pub fn top1(capacity: usize) -> Self {
+        RouterConfig { top_k: 1, mode: RouterMode::Capacity { capacity }, aux_coef: 0.01, z_coef: 0.0 }
+    }
+
+    /// Dropless top-k (Megatron-Core dMoE semantics).
+    pub fn dropless(top_k: usize) -> Self {
+        RouterConfig { top_k, mode: RouterMode::Dropless, aux_coef: 0.01, z_coef: 0.0 }
+    }
+
+    pub fn with_aux_coef(mut self, aux_coef: f32) -> Self {
+        self.aux_coef = aux_coef;
+        self
+    }
+
+    pub fn with_z_coef(mut self, z_coef: f32) -> Self {
+        self.z_coef = z_coef;
+        self
+    }
+}
+
+/// The router: owns a [`RouterConfig`] and turns gate probabilities into
+/// [`RoutingDecision`]s. Replaces the old `route_top1` free function
+/// (`Router::new(RouterConfig::top1(cap)).route(...)` is its exact
+/// equivalent).
+#[derive(Debug, Clone, Copy)]
+pub struct Router {
+    pub cfg: RouterConfig,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Self {
+        assert!(cfg.top_k >= 1, "top_k must be >= 1");
+        Router { cfg }
+    }
+
+    /// Compute the routing decision for this rank's `probs` [n, E].
+    ///
+    /// `ep_pos` is this rank's position within its EP group (capacity
+    /// slots are assigned EP-member-position-major so that every member
+    /// agrees on the slot map after the counts all-gather).
+    pub fn route(
+        &self,
+        comm: &mut Communicator,
+        ep_gid: GroupId,
+        ep_members: &[usize],
+        ep_pos: usize,
+        probs: &Tensor,
+        n_experts: usize,
+    ) -> RoutingDecision {
+        let n = probs.rows();
+        let k = self.cfg.top_k;
+        assert_eq!(probs.row_len(), n_experts, "probs shape mismatch");
+        assert!(k <= n_experts, "top_k={k} exceeds n_experts={n_experts}");
+
+        // 1. local top-k (assignment-major: token i's choices occupy
+        //    indices i*k .. i*k+k, best first; ties break to the lower
+        //    expert index)
+        let mut expert_of_token = Vec::with_capacity(n * k);
+        let mut prob_of_token = Vec::with_capacity(n * k);
+        let mut local_counts = vec![0usize; n_experts];
+        let mut local_psum = vec![0f32; n_experts];
+        // order of arrival per expert among local assignments
+        let mut order_in_expert = Vec::with_capacity(n * k);
+        let mut z_sum = 0.0f64;
+        for i in 0..n {
+            let row = probs.row(i);
+            for (e, &p) in row.iter().enumerate() {
+                local_psum[e] += p;
+            }
+            let mut taken = vec![false; n_experts];
+            for c in 0..k {
+                let (mut best, mut best_p) = (usize::MAX, f32::NEG_INFINITY);
+                for (e, &p) in row.iter().enumerate() {
+                    if !taken[e] && p > best_p {
+                        best = e;
+                        best_p = p;
+                    }
+                }
+                // all-NEG_INFINITY rows cannot occur for softmax outputs,
+                // but fall back to the first untaken expert for safety
+                if best == usize::MAX {
+                    best = taken.iter().position(|t| !t).unwrap();
+                    best_p = row[best];
+                }
+                taken[best] = true;
+                if c == 0 {
+                    let zp = (n_experts as f32 * best_p).max(f32::MIN_POSITIVE);
+                    z_sum += (zp.ln() as f64) * (zp.ln() as f64);
+                }
+                expert_of_token.push(best);
+                prob_of_token.push(best_p);
+                order_in_expert.push(local_counts[best]);
+                local_counts[best] += 1;
+            }
+        }
+        let z_loss = (z_sum / n.max(1) as f64) as f32;
+
+        // 2. exchange per-expert assignment counts + prob sums within the
+        //    EP group (one small all-gather; payload [E] counts ++ [E]
+        //    prob sums ++ local token count — identical shape in both
+        //    modes, so dropless adds no collective).
+        let mut payload = Vec::with_capacity(2 * n_experts + 1);
+        payload.extend(local_counts.iter().map(|&c| c as f32));
+        payload.extend(local_psum.iter());
+        payload.push(n as f32);
+        let gathered = comm.all_gather(
+            ep_gid,
+            ep_members,
+            &Tensor::from_vec(&[2 * n_experts + 1], payload),
+        );
+
+        // 3. slot assignment: members before us claim their counts first
+        let mut prefix = vec![0usize; n_experts];
+        let mut total_counts = vec![0usize; n_experts];
+        let mut total_psum = vec![0f32; n_experts];
+        let mut group_tokens = 0usize;
+        for (pos, contrib) in gathered.iter().enumerate() {
+            assert_eq!(contrib.len(), 2 * n_experts + 1, "counts payload mismatch");
+            for e in 0..n_experts {
+                let c = contrib[e] as usize;
+                if pos < ep_pos {
+                    prefix[e] += c;
+                }
+                total_counts[e] += c;
+                total_psum[e] += contrib[n_experts + e];
+            }
+            group_tokens += contrib[2 * n_experts] as usize;
+        }
+
+        // effective capacity: the configured budget, or (dropless) the
+        // group-agreed maximum per-expert load — every member computes it
+        // from the same gathered counts, so the slot map stays agreed
+        let capacity = match self.cfg.mode {
+            RouterMode::Capacity { capacity } => capacity,
+            RouterMode::Dropless => total_counts.iter().copied().max().unwrap_or(0).max(1),
+        };
+
+        let slot_of_token: Vec<Option<usize>> = (0..n * k)
+            .map(|a| {
+                let e = expert_of_token[a];
+                let slot = prefix[e] + order_in_expert[a];
+                if slot < capacity {
+                    Some(slot)
+                } else {
+                    None // over capacity: token passes through on the residual
+                }
+            })
+            .collect();
+
+        // 4. aux loss stats over the whole EP group (f_e normalized over
+        //    assignments so Σ f = 1 for every k)
+        let gt = (group_tokens * k).max(1) as f32;
+        let gp = group_tokens.max(1) as f32;
+        let f_frac: Vec<f32> = total_counts.iter().map(|&c| c as f32 / gt).collect();
+        let p_mean: Vec<f32> = total_psum.iter().map(|&s| s / gp).collect();
+        let aux_loss = n_experts as f32
+            * f_frac.iter().zip(&p_mean).map(|(f, p)| f * p).sum::<f32>();
+
+        RoutingDecision {
+            top_k: k,
+            n_tokens: n,
+            capacity,
+            expert_of_token,
+            prob_of_token,
+            slot_of_token,
+            f_frac,
+            p_mean,
+            group_tokens,
+            aux_loss,
+            z_loss,
+        }
+    }
+}
+
 /// Routing decision for one rank's local tokens in one MoE layer pass.
+///
+/// All per-assignment vectors are **assignment-major**: token `i`'s `k`
+/// choices occupy indices `i*k .. (i+1)*k` (best-probability first). At
+/// `top_k = 1` — the engine default — an assignment *is* a token and the
+/// layout is identical to the pre-redesign per-token one.
 #[derive(Debug, Clone)]
 pub struct RoutingDecision {
-    /// Chosen expert per local token (argmax of gate probs).
+    /// Experts per token this decision was routed with.
+    pub top_k: usize,
+    /// Local tokens routed (assignments = `n_tokens * top_k`).
+    pub n_tokens: usize,
+    /// Effective per-expert capacity this pass: the configured budget
+    /// under [`RouterMode::Capacity`], or the EP-group max per-expert
+    /// load under [`RouterMode::Dropless`]. Dispatch buffer sizing and
+    /// `key = expert * capacity + slot` addressing both use this value.
+    pub capacity: usize,
+    /// Chosen expert per assignment.
     pub expert_of_token: Vec<usize>,
     /// Gate probability of the chosen expert (the combine scale).
     pub prob_of_token: Vec<f32>,
     /// Capacity slot within the chosen expert's buffer; `None` = dropped
-    /// (buffer overflow). Slots are unique within (EP group, expert).
+    /// (buffer overflow — never under dropless). Slots are unique within
+    /// (EP group, expert).
     pub slot_of_token: Vec<Option<usize>>,
-    /// Global (EP-group-wide) token fraction per expert: f_e of the aux loss.
+    /// Global (EP-group-wide) assignment fraction per expert: f_e of the
+    /// aux loss (sums to 1 across experts).
     pub f_frac: Vec<f32>,
     /// Global mean gate probability per expert: P_e of the aux loss.
     pub p_mean: Vec<f32>,
@@ -36,6 +274,9 @@ pub struct RoutingDecision {
     pub group_tokens: usize,
     /// Auxiliary (load-balancing) loss value: E * sum_e f_e * P_e.
     pub aux_loss: f32,
+    /// Probs-domain z (over-confidence) loss: mean_i ln(E * p_top,i)^2
+    /// over this rank's local tokens.
+    pub z_loss: f32,
 }
 
 impl RoutingDecision {
@@ -43,19 +284,29 @@ impl RoutingDecision {
         self.f_frac.len()
     }
 
-    /// Local tokens actually dispatched (not dropped).
+    /// Total assignments (`n_tokens * top_k`).
+    pub fn n_assignments(&self) -> usize {
+        self.expert_of_token.len()
+    }
+
+    /// Local token an assignment belongs to.
+    pub fn token_of(&self, assignment: usize) -> usize {
+        assignment / self.top_k
+    }
+
+    /// Local assignments actually dispatched (not dropped).
     pub fn kept(&self) -> usize {
         self.slot_of_token.iter().filter(|s| s.is_some()).count()
     }
 
     /// Gradient of `aux_coef * aux_loss` w.r.t. the gate probabilities,
-    /// dense [n, E] (the f_e factor is treated as constant, as in Switch:
-    /// the discrete routing is not differentiated).
+    /// dense [n_tokens, E] (the f_e factor is treated as constant, as in
+    /// Switch: the discrete routing is not differentiated).
     ///
     ///   d l_aux / d p[i,e] = coef * E * f_e / N_group
     pub fn aux_grad_into(&self, coef: f32, dprobs: &mut Tensor) {
         let e = self.n_experts();
-        let n = self.expert_of_token.len();
+        let n = self.n_tokens;
         assert_eq!(dprobs.shape(), &[n, e]);
         let scale = coef * e as f32 / self.group_tokens as f32;
         let data = dprobs.data_mut();
@@ -65,106 +316,23 @@ impl RoutingDecision {
             }
         }
     }
-}
 
-/// Compute the routing decision for this rank's `probs` [n, E].
-///
-/// `ep_pos` is this rank's position within its EP group (`capacity` slots
-/// per expert are assigned EP-member-position-major so that every member
-/// agrees on the slot map after a counts all-gather).
-#[allow(clippy::too_many_arguments)]
-pub fn route_top1(
-    comm: &mut Communicator,
-    ep_gid: GroupId,
-    ep_members: &[usize],
-    ep_pos: usize,
-    probs: &Tensor,
-    n_experts: usize,
-    capacity: usize,
-) -> RoutingDecision {
-    let n = probs.rows();
-    assert_eq!(probs.row_len(), n_experts, "probs shape mismatch");
-
-    // 1. local top-1
-    let mut expert_of_token = Vec::with_capacity(n);
-    let mut prob_of_token = Vec::with_capacity(n);
-    let mut local_counts = vec![0usize; n_experts];
-    let mut local_psum = vec![0f32; n_experts];
-    // order of arrival per expert among local tokens
-    let mut order_in_expert = Vec::with_capacity(n);
-    for i in 0..n {
-        let row = probs.row(i);
-        let (mut best, mut best_p) = (0usize, f32::NEG_INFINITY);
-        for (e, &p) in row.iter().enumerate() {
-            if p > best_p {
-                best = e;
-                best_p = p;
-            }
-            local_psum[e] += p;
+    /// Gradient of `z_coef * z_loss` w.r.t. the gate probabilities, dense
+    /// [n_tokens, E]: the surrogate only touches each token's top choice,
+    ///
+    ///   d l_z / d p[i, top_i] = coef * 2 ln(E * p) / (p * n)
+    pub fn z_grad_into(&self, coef: f32, dprobs: &mut Tensor) {
+        let e = self.n_experts();
+        let n = self.n_tokens;
+        assert_eq!(dprobs.shape(), &[n, e]);
+        let data = dprobs.data_mut();
+        for i in 0..n {
+            let a = i * self.top_k;
+            let top = self.expert_of_token[a];
+            let p = self.prob_of_token[a].max(f32::MIN_POSITIVE);
+            let zp = (e as f32 * p).max(f32::MIN_POSITIVE);
+            data[i * e + top] += coef * 2.0 * zp.ln() / (p * n as f32);
         }
-        expert_of_token.push(best);
-        prob_of_token.push(best_p);
-        order_in_expert.push(local_counts[best]);
-        local_counts[best] += 1;
-    }
-
-    // 2. exchange per-expert counts + prob sums within the EP group
-    //    (one small all-gather; payload [E] counts ++ [E] prob sums).
-    let mut payload = Vec::with_capacity(2 * n_experts + 1);
-    payload.extend(local_counts.iter().map(|&c| c as f32));
-    payload.extend(local_psum.iter());
-    payload.push(n as f32);
-    let gathered = comm.all_gather(
-        ep_gid,
-        ep_members,
-        &Tensor::from_vec(&[2 * n_experts + 1], payload),
-    );
-
-    // 3. slot assignment: members before us claim their counts first
-    let mut prefix = vec![0usize; n_experts];
-    let mut total_counts = vec![0usize; n_experts];
-    let mut total_psum = vec![0f32; n_experts];
-    let mut group_tokens = 0usize;
-    for (pos, contrib) in gathered.iter().enumerate() {
-        assert_eq!(contrib.len(), 2 * n_experts + 1, "counts payload mismatch");
-        for e in 0..n_experts {
-            let c = contrib[e] as usize;
-            if pos < ep_pos {
-                prefix[e] += c;
-            }
-            total_counts[e] += c;
-            total_psum[e] += contrib[n_experts + e];
-        }
-        group_tokens += contrib[2 * n_experts] as usize;
-    }
-
-    let slot_of_token: Vec<Option<usize>> = (0..n)
-        .map(|i| {
-            let e = expert_of_token[i];
-            let slot = prefix[e] + order_in_expert[i];
-            if slot < capacity {
-                Some(slot)
-            } else {
-                None // over capacity: token passes through on the residual
-            }
-        })
-        .collect();
-
-    // 4. aux loss stats over the whole EP group
-    let gt = group_tokens.max(1) as f32;
-    let f_frac: Vec<f32> = total_counts.iter().map(|&c| c as f32 / gt).collect();
-    let p_mean: Vec<f32> = total_psum.iter().map(|&s| s / gt).collect();
-    let aux_loss = n_experts as f32
-        * f_frac.iter().zip(&p_mean).map(|(f, p)| f * p).sum::<f32>();
-
-    RoutingDecision {
-        expert_of_token,
-        prob_of_token,
-        slot_of_token,
-        f_frac,
-        p_mean,
-        group_tokens,
-        aux_loss,
     }
 }
 
@@ -180,10 +348,10 @@ mod tests {
     }
 
     /// single-rank EP group helper
-    fn route_local(probs: Tensor, e: usize, cap: usize) -> RoutingDecision {
+    fn route_local(probs: Tensor, e: usize, cfg: RouterConfig) -> RoutingDecision {
         let rez = Rendezvous::new(1);
         let mut comm = Communicator::new(Arc::clone(&rez), 0);
-        route_top1(&mut comm, gid(), &[0], 0, &probs, e, cap)
+        Router::new(cfg).route(&mut comm, gid(), &[0], 0, &probs, e)
     }
 
     #[test]
@@ -193,18 +361,20 @@ mod tests {
             &[4, 2],
             vec![0.1, 0.9, 0.8, 0.2, 0.3, 0.7, 0.6, 0.4],
         );
-        let d = route_local(probs, 2, 8);
+        let d = route_local(probs, 2, RouterConfig::top1(8));
         assert_eq!(d.expert_of_token, vec![1, 0, 1, 0]);
         assert_eq!(d.prob_of_token, vec![0.9, 0.8, 0.7, 0.6]);
         assert_eq!(d.slot_of_token, vec![Some(0), Some(0), Some(1), Some(1)]);
         assert_eq!(d.kept(), 4);
+        assert_eq!(d.capacity, 8);
+        assert_eq!((d.top_k, d.n_tokens, d.n_assignments()), (1, 4, 4));
     }
 
     #[test]
     fn capacity_drops_overflow_in_order() {
         // all 5 tokens to expert 0, capacity 3 -> last two dropped
         let probs = Tensor::from_vec(&[5, 2], vec![0.9, 0.1].repeat(5));
-        let d = route_local(probs, 2, 3);
+        let d = route_local(probs, 2, RouterConfig::top1(3));
         assert_eq!(
             d.slot_of_token,
             vec![Some(0), Some(1), Some(2), None, None]
@@ -213,26 +383,88 @@ mod tests {
     }
 
     #[test]
+    fn dropless_never_drops_and_sizes_to_the_hot_expert() {
+        // the same hot-expert workload that drops under capacity 3 keeps
+        // every token dropless, with capacity = the hot expert's load
+        let probs = Tensor::from_vec(&[5, 2], vec![0.9, 0.1].repeat(5));
+        let d = route_local(probs, 2, RouterConfig::dropless(1));
+        assert_eq!(d.capacity, 5);
+        assert_eq!(
+            d.slot_of_token,
+            vec![Some(0), Some(1), Some(2), Some(3), Some(4)]
+        );
+        assert_eq!(d.kept(), 5);
+    }
+
+    #[test]
+    fn top2_assigns_both_choices_in_order() {
+        // 2 tokens, 3 experts, k=2: choices ordered by prob, slots count
+        // per expert across assignments
+        let probs = Tensor::from_vec(&[2, 3], vec![0.5, 0.3, 0.2, 0.1, 0.6, 0.3]);
+        let d = route_local(probs, 3, RouterConfig::dropless(2));
+        assert_eq!(d.expert_of_token, vec![0, 1, 1, 2]);
+        assert_eq!(d.prob_of_token, vec![0.5, 0.3, 0.6, 0.3]);
+        // expert 1 receives token 0 (slot 0) then token 1 (slot 1)
+        assert_eq!(
+            d.slot_of_token,
+            vec![Some(0), Some(0), Some(1), Some(0)]
+        );
+        assert_eq!(d.capacity, 2, "expert 1 carries both tokens");
+        assert_eq!((d.top_k, d.n_tokens, d.n_assignments()), (2, 2, 4));
+        assert_eq!(d.token_of(2), 1);
+        // f over assignments sums to 1
+        let f_sum: f32 = d.f_frac.iter().sum();
+        assert!((f_sum - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
     fn aux_loss_balanced_is_minimal() {
         // perfectly balanced: f = [.5,.5], P = [.5,.5] -> aux = 2*(0.25+0.25) = 1
         let probs = Tensor::from_vec(&[4, 2], vec![0.6, 0.4, 0.4, 0.6, 0.6, 0.4, 0.4, 0.6]);
-        let d = route_local(probs, 2, 8);
+        let d = route_local(probs, 2, RouterConfig::top1(8));
         assert!((d.aux_loss - (2.0 * (0.5 * 0.5 + 0.5 * 0.5))).abs() < 1e-5);
         // imbalanced: all to expert 0
         let probs = Tensor::from_vec(&[4, 2], vec![0.9, 0.1].repeat(4));
-        let d2 = route_local(probs, 2, 8);
+        let d2 = route_local(probs, 2, RouterConfig::top1(8));
         assert!(d2.aux_loss > d.aux_loss);
+    }
+
+    #[test]
+    fn z_loss_zero_at_uniform_and_grows_with_confidence() {
+        let uniform = Tensor::from_vec(&[2, 2], vec![0.5, 0.5, 0.5, 0.5]);
+        let d = route_local(uniform, 2, RouterConfig::top1(8));
+        assert!(d.z_loss.abs() < 1e-12, "uniform gate has zero z loss: {}", d.z_loss);
+        let confident = Tensor::from_vec(&[2, 2], vec![0.9, 0.1, 0.9, 0.1]);
+        let d2 = route_local(confident, 2, RouterConfig::top1(8));
+        let saturated = Tensor::from_vec(&[2, 2], vec![0.99, 0.01, 0.99, 0.01]);
+        let d3 = route_local(saturated, 2, RouterConfig::top1(8));
+        assert!(d2.z_loss > 0.0 && d3.z_loss > d2.z_loss);
     }
 
     #[test]
     fn aux_grad_shape_and_value() {
         let probs = Tensor::from_vec(&[2, 2], vec![0.9, 0.1, 0.8, 0.2]);
-        let d = route_local(probs, 2, 8);
+        let d = route_local(probs, 2, RouterConfig::top1(8));
         let mut dp = Tensor::zeros(&[2, 2]);
         d.aux_grad_into(0.01, &mut dp);
         // f = [1, 0]; scale = 0.01 * 2 / 2 = 0.01
         assert!((dp.data()[0] - 0.01).abs() < 1e-7);
         assert!((dp.data()[1] - 0.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn z_grad_touches_only_top_choices() {
+        let probs = Tensor::from_vec(&[2, 2], vec![0.9, 0.1, 0.2, 0.8]);
+        let d = route_local(probs, 2, RouterConfig::top1(8));
+        let mut dp = Tensor::zeros(&[2, 2]);
+        d.z_grad_into(1.0, &mut dp);
+        // token 0 top = e0, token 1 top = e1; the off-choice entries stay 0
+        assert_eq!(dp.data()[1], 0.0);
+        assert_eq!(dp.data()[2], 0.0);
+        // d l_z/dp = 2 ln(2p)/(2p_token... / n): positive for p > 1/E
+        assert!(dp.data()[0] > 0.0 && dp.data()[3] > 0.0);
+        let want = 2.0 * (2.0f32 * 0.9).ln() / (0.9 * 2.0);
+        assert!((dp.data()[0] - want).abs() < 1e-6);
     }
 
     #[test]
@@ -248,7 +480,8 @@ mod tests {
                         let mut comm = Communicator::new(rez, r);
                         // both ranks route both tokens to expert 0
                         let probs = Tensor::from_vec(&[2, 2], vec![0.9, 0.1, 0.8, 0.2]);
-                        route_top1(&mut comm, gid(), &members, r, &probs, 2, 3)
+                        Router::new(RouterConfig::top1(3))
+                            .route(&mut comm, gid(), &members, r, &probs, 2)
                     })
                 })
                 .collect();
@@ -260,5 +493,32 @@ mod tests {
         // both agree on global stats
         assert_eq!(outs[0].f_frac, outs[1].f_frac);
         assert_eq!(outs[0].group_tokens, 4);
+    }
+
+    #[test]
+    fn two_rank_dropless_agrees_on_dynamic_capacity() {
+        let rez = Rendezvous::new(2);
+        let members = vec![0usize, 1];
+        let outs: Vec<RoutingDecision> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..2)
+                .map(|r| {
+                    let rez = Arc::clone(&rez);
+                    let members = members.clone();
+                    s.spawn(move || {
+                        let mut comm = Communicator::new(rez, r);
+                        let probs = Tensor::from_vec(&[2, 2], vec![0.9, 0.1, 0.8, 0.2]);
+                        Router::new(RouterConfig::dropless(1))
+                            .route(&mut comm, gid(), &members, r, &probs, 2)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // 4 assignments all on expert 0: both members agree capacity = 4,
+        // nothing drops, slots stay EP-position-major
+        assert_eq!(outs[0].capacity, 4);
+        assert_eq!(outs[1].capacity, 4);
+        assert_eq!(outs[0].slot_of_token, vec![Some(0), Some(1)]);
+        assert_eq!(outs[1].slot_of_token, vec![Some(2), Some(3)]);
     }
 }

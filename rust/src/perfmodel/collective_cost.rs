@@ -38,6 +38,7 @@
 
 use crate::collectives::{CollectiveStrategy, NodeMap, NodePlan};
 use crate::config::ClusterConfig;
+use crate::util::cli::TrafficSpec;
 
 /// Does a communicator group live entirely inside one node?
 pub fn group_intranode(members: &[usize], gpus_per_node: usize) -> bool {
@@ -543,6 +544,75 @@ pub fn lane_bytes_allreduce(
     }
 }
 
+// ---------------------------------------------------------------------
+// traffic skew (non-uniform expert popularity)
+// ---------------------------------------------------------------------
+
+/// Fraction of one rank's expert all-to-all payload addressed to each of
+/// the `n_peers` expert-parallel peers under a traffic scenario; sums
+/// to 1. Experts are laid out contiguously over peers (`E / n` per rank),
+/// so a Zipf law over *experts* chunk-sums into per-peer weights; the
+/// bursty scenario's burst step is a one-hot delivery to the hot
+/// expert's host.
+pub fn peer_weights(spec: TrafficSpec, n_peers: usize, n_experts: usize) -> Vec<f64> {
+    assert!(n_peers > 0, "peer_weights needs at least one peer");
+    match spec {
+        TrafficSpec::Uniform => vec![1.0 / n_peers as f64; n_peers],
+        TrafficSpec::Zipf(s) => {
+            let e = n_experts.max(1);
+            let raw: Vec<f64> = (0..e).map(|i| ((i + 1) as f64).powf(-s)).collect();
+            let sum: f64 = raw.iter().sum();
+            let local = (e / n_peers).max(1);
+            let mut w = vec![0.0; n_peers];
+            for (i, r) in raw.iter().enumerate() {
+                w[(i / local).min(n_peers - 1)] += r / sum;
+            }
+            w
+        }
+        TrafficSpec::Bursty(_) => {
+            let mut w = vec![0.0; n_peers];
+            w[0] = 1.0;
+            w
+        }
+    }
+}
+
+/// How much a traffic scenario inflates the expert all-to-all price over
+/// the uniform split, as a multiplier on the hot rank's payload. The
+/// collective is synchronous — it completes when the hottest rank drains
+/// — so every rank prices the hot-rank payload: `n * max_peer_weight`.
+///
+/// `avg` is the per-step expectation (what an average iteration pays);
+/// `worst` is the worst single step. Zipf skew is stationary (the hot
+/// expert rotates but the *shape* is constant), so `avg == worst`; the
+/// bursty scenario interpolates between uniform steps and full one-hot
+/// bursts, so `worst` is the burst price and `avg` mixes by the burst
+/// probability.
+#[derive(Debug, Clone, Copy)]
+pub struct TrafficSkew {
+    pub avg: f64,
+    pub worst: f64,
+}
+
+pub fn traffic_skew(spec: TrafficSpec, n_peers: usize, n_experts: usize) -> TrafficSkew {
+    if n_peers <= 1 {
+        return TrafficSkew { avg: 1.0, worst: 1.0 };
+    }
+    match spec {
+        TrafficSpec::Uniform => TrafficSkew { avg: 1.0, worst: 1.0 },
+        TrafficSpec::Zipf(_) => {
+            let w = peer_weights(spec, n_peers, n_experts);
+            let wmax = w.iter().cloned().fold(0.0, f64::max);
+            let f = (n_peers as f64 * wmax).max(1.0);
+            TrafficSkew { avg: f, worst: f }
+        }
+        TrafficSpec::Bursty(p) => {
+            let f = n_peers as f64;
+            TrafficSkew { avg: p * f + (1.0 - p), worst: f }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -731,5 +801,44 @@ mod tests {
         assert!(pxn_inter_msgs < hier_inter_msgs, "{pxn_inter_msgs} vs {hier_inter_msgs}");
         // single-node job: flat convention
         assert_eq!(lane_msgs_alltoall(CollectiveStrategy::Flat, &members, 0, 0, 4), (3, 0));
+    }
+
+    #[test]
+    fn peer_weights_are_distributions_and_zipf_sharpens_with_s() {
+        for spec in [TrafficSpec::Uniform, TrafficSpec::Zipf(1.2), TrafficSpec::Bursty(0.3)] {
+            let w = peer_weights(spec, 8, 16);
+            assert_eq!(w.len(), 8);
+            assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12, "{spec}");
+            assert!(w.iter().all(|&x| x >= 0.0), "{spec}");
+        }
+        // zipf peer weights decay off the hot peer...
+        let w = peer_weights(TrafficSpec::Zipf(1.2), 8, 8);
+        assert!(w.windows(2).all(|p| p[0] >= p[1]), "zipf peers must be hot-first");
+        // ...and the skew factor grows monotonically with the exponent
+        let mut last = 1.0;
+        for s in [0.5, 1.0, 1.5, 2.0] {
+            let f = traffic_skew(TrafficSpec::Zipf(s), 8, 8).avg;
+            assert!(f > last, "skew must grow with the exponent: {f} vs {last}");
+            last = f;
+        }
+    }
+
+    #[test]
+    fn traffic_skew_factors_match_construction() {
+        let u = traffic_skew(TrafficSpec::Uniform, 4, 4);
+        assert_eq!((u.avg, u.worst), (1.0, 1.0));
+        // zipf:1.2 over 4 experts on 4 peers: hot weight (1/zeta) = 0.5284,
+        // so the hot rank carries 4 * 0.5284 = 2.1138x the uniform share
+        let z = traffic_skew(TrafficSpec::Zipf(1.2), 4, 4);
+        assert!((z.avg - 2.1138).abs() < 1e-3, "{}", z.avg);
+        assert_eq!(z.avg, z.worst, "zipf skew is stationary");
+        // bursty:0.5 on 4 peers: burst steps pay the full 4x one-hot, the
+        // average mixes 0.5 * 4 + 0.5 * 1 = 2.5
+        let b = traffic_skew(TrafficSpec::Bursty(0.5), 4, 4);
+        assert!((b.avg - 2.5).abs() < 1e-12, "{}", b.avg);
+        assert!((b.worst - 4.0).abs() < 1e-12, "{}", b.worst);
+        // a singleton group cannot skew
+        let s1 = traffic_skew(TrafficSpec::Zipf(2.0), 1, 4);
+        assert_eq!((s1.avg, s1.worst), (1.0, 1.0));
     }
 }

@@ -36,16 +36,17 @@ pub fn flops_per_iter(m: &ModelConfig, batch: usize, checkpointing: bool) -> f64
 // costs: attention + FFN over layers at four pass units each (fwd 1,
 // bwd 2, re-forward 1) plus the head at three (fwd 1, bwd 2 — the head
 // is never checkpointed) reproduces `flops_per_iter_checkpointed`
-// exactly (unit-pinned below). The engine
-// prices each block it *actually executes* onto the timeline's compute
-// lane with these — which is fewer units than the formula's uniform
-// budget when its CAC mode stashes activations instead of re-running the
-// forward, and the fused head never re-forwards — so a measured
-// compute lane can legitimately sit below the analytic
-// `BatchTime::compute_s` (see `engine::Trainer` for the executed-pass
-// accounting). Top-1 MoE expert FFNs price like the dense FFN per
-// processed token; router gate and embedding lookups are negligible,
-// matching the iteration formula which omits them.
+// exactly (unit-pinned below). The engine prices each block it
+// *actually executes* onto the timeline's compute lane with these, and
+// `perfmodel::compute_budget_s` now prices the same executed-pass
+// budget: under CAC the engine stashes activations instead of re-running
+// the layer forwards (3 pass units per block, head always 3), so the
+// analytic budget subtracts the layers' forward flops and the measured
+// compute lane matches `BatchTime::compute_s` in both modes (see
+// `engine::Trainer` for the executed-pass accounting). Top-1 MoE expert
+// FFNs price like the dense FFN per processed token; router gate and
+// embedding lookups are negligible, matching the iteration formula which
+// omits them.
 
 /// Forward flops of one attention block over `tokens` tokens
 /// (QKV + output projections `8 t h^2`, scores + context `4 t s h`).

@@ -11,15 +11,17 @@ pub mod figures;
 pub mod flops;
 
 pub use batch_time::{
-    batch_time, batch_time_overlapped, comm_ops, compute_budget_s, fit_overlap_efficiency,
-    fit_overlap_efficiency_phased, hideable_comm_phased_s, hideable_comm_s, overlap_from_base,
-    BatchTime, CommOp, CommOpts, OpGroup, OverlappedBatchTime, PhaseBudget, Scenario,
+    batch_time, batch_time_overlapped, batch_time_worst_traffic, comm_ops, compute_budget_s,
+    fit_overlap_efficiency, fit_overlap_efficiency_phased, hideable_comm_phased_s,
+    hideable_comm_s, overlap_from_base, phase_compute_split, BatchTime, CommOp, CommOpts,
+    OpGroup, OverlappedBatchTime, PhaseBudget, Scenario,
 };
 pub use batch_time::{PHASE_BWD, PHASE_COMPUTE_SPLIT, PHASE_FWD, PHASE_RECOMPUTE};
 pub use collective_cost::{
     allgather_phased, allgather_s, allreduce_phased, allreduce_s, alltoall_phased,
     alltoall_pxn_schedule, alltoall_s, lane_bytes_allgather, lane_bytes_allreduce,
-    lane_bytes_alltoall, lane_bytes_alltoall_pxn, lane_msgs_alltoall, GroupShape, PhasedCost,
+    lane_bytes_alltoall, lane_bytes_alltoall_pxn, lane_msgs_alltoall, peer_weights,
+    traffic_skew, GroupShape, PhasedCost, TrafficSkew,
 };
 pub use flops::{
     attn_fwd_flops, ffn_fwd_flops, flops_per_iter, flops_per_iter_checkpointed, head_fwd_flops,

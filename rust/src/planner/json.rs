@@ -30,6 +30,7 @@ fn plan_json(p: &Plan) -> Json {
     let t = &p.time;
     fields.extend([
         ("total_s", Json::Num(p.total_s())),
+        ("worst_total_s", Json::Num(p.worst_total_s())),
         ("compute_s", Json::Num(t.base.compute_s)),
         ("comm_intra_s", Json::Num(t.base.comm_intra_s)),
         ("comm_inter_s", Json::Num(t.base.comm_inter_s)),
@@ -58,6 +59,7 @@ pub fn report_json(req: &PlanRequest, report: &PlanReport, top: usize) -> Json {
         ("overlap_efficiency", Json::Num(req.overlap_efficiency)),
         ("max_tp", Json::Num(req.max_tp as f64)),
         ("capacity_factor", Json::Num(req.capacity_factor)),
+        ("traffic", Json::str(req.traffic.name())),
     ]);
     let shown = if top == 0 { report.plans.len() } else { top.min(report.plans.len()) };
     let plans = Json::Arr(report.plans[..shown].iter().map(plan_json).collect());
@@ -121,10 +123,20 @@ mod tests {
             assert!(w[0] <= w[1] + 1e-15);
         }
         assert!(back.get("feasible").unwrap().as_f64().unwrap() >= 3.0);
-        // every emitted plan names its binding memory phase and headroom
+        // every emitted plan names its binding memory phase and headroom,
+        // and under the default uniform traffic the worst step is the
+        // average step
+        assert_eq!(
+            back.get("request").unwrap().get("traffic").unwrap().as_str(),
+            Some("uniform")
+        );
         for p in plans {
             assert!(p.get("mem_peak_phase").unwrap().as_str().is_some());
             assert!(p.get("mem_headroom_gib").unwrap().as_f64().unwrap() >= 0.0);
+            assert_eq!(
+                p.get("worst_total_s").unwrap().as_f64(),
+                p.get("total_s").unwrap().as_f64()
+            );
         }
     }
 }

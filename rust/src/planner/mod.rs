@@ -29,8 +29,15 @@
 //! 4. **Rank** by modeled iteration time, ties broken by a canonical knob
 //!    order ([`PlanKnobs::rank_key`]) so the choice is deterministic.
 //!
+//! Every candidate is priced under the request's traffic scenario
+//! (`PlanRequest::traffic`): skew inflates the expert all-to-all, so
+//! `ted plan --traffic zipf:1.2` can rank a different knob sequence than
+//! the uniform default, and each plan also carries its worst-single-step
+//! price ([`Plan::worst_total_s`], the burst iteration).
+//!
 //! The CLI surface is `ted plan --cluster <preset> --model <name>
-//! --experts N --gpus G [--overlap-eff E] [--top K] [--json]`;
+//! --experts N --gpus G [--overlap-eff E]
+//! [--traffic uniform|zipf:<s>|bursty:<p>] [--top K] [--json]`;
 //! `perfmodel::figures::fig11_table2*` consume the planner instead of
 //! hand-rolled configs, and `sim::replay` closes the loop by *measuring*
 //! a plan's collective schedule on the simulated cluster — the
@@ -44,7 +51,11 @@ pub use json::report_json;
 use crate::collectives::{ALL_STRATEGIES, CollectiveStrategy};
 use crate::config::{ClusterConfig, EngineOptions, ModelConfig, ParallelConfig};
 use crate::memory::{MemoryModel, Phase};
-use crate::perfmodel::{batch_time, overlap_from_base, CommOpts, OverlappedBatchTime, Scenario};
+use crate::perfmodel::{
+    batch_time, batch_time_worst_traffic, overlap_from_base, CommOpts, OverlappedBatchTime,
+    Scenario,
+};
+use crate::util::cli::TrafficSpec;
 
 /// The paper's 1.8M-parameter optimizer tile (re-exported for defaults).
 pub const DEFAULT_TILE: usize = crate::perfmodel::figures::TILE;
@@ -78,6 +89,11 @@ pub struct PlanRequest {
     /// Micro-batch (sequences per GPU between checkpoints) candidates —
     /// a memory knob: activations scale with it, priced time does not.
     pub micro_batch_choices: Vec<usize>,
+    /// Expert-traffic scenario every candidate is priced under
+    /// (`--traffic uniform|zipf:<s>|bursty:<p>`): skew inflates the
+    /// expert all-to-all, so a skew-heavy scenario can re-rank plans
+    /// toward smaller expert-parallel groups.
+    pub traffic: TrafficSpec,
 }
 
 impl PlanRequest {
@@ -105,6 +121,7 @@ impl PlanRequest {
             cac_choices: vec![true, false],
             tile_choices: vec![Some(DEFAULT_TILE), None],
             micro_batch_choices: vec![1],
+            traffic: TrafficSpec::Uniform,
         }
     }
 }
@@ -240,6 +257,10 @@ pub struct Plan {
     /// Full cost breakdown: compute, per-lane serialized comm, hidden
     /// comm, critical path (see `perfmodel::OverlappedBatchTime`).
     pub time: OverlappedBatchTime,
+    /// The same knobs priced at the traffic scenario's **worst single
+    /// step** (a burst iteration); equals `time` for uniform and zipf
+    /// traffic, strictly slower for bursty scenarios.
+    pub worst_time: OverlappedBatchTime,
     /// The binding memory phase and its per-GPU bytes.
     pub mem_peak_phase: Phase,
     pub mem_peak_bytes: u64,
@@ -247,9 +268,15 @@ pub struct Plan {
 }
 
 impl Plan {
-    /// Modeled per-iteration seconds (the ranking objective).
+    /// Modeled per-iteration seconds (the ranking objective — the
+    /// traffic scenario's average step).
     pub fn total_s(&self) -> f64 {
         self.time.total()
+    }
+
+    /// Modeled seconds of the traffic scenario's worst single step.
+    pub fn worst_total_s(&self) -> f64 {
+        self.worst_time.total()
     }
 
     /// Per-GPU memory headroom under the binding phase.
@@ -308,6 +335,7 @@ pub fn scenario_for(req: &PlanRequest, knobs: &PlanKnobs) -> Scenario {
             cac: knobs.cac,
             capacity_factor: req.capacity_factor,
             strategy: knobs.strategy,
+            traffic: req.traffic,
         },
     }
 }
@@ -443,13 +471,21 @@ pub fn plan(req: &PlanRequest) -> PlanReport {
                                 tile,
                                 micro_batch: micro,
                             };
-                            let base = batch_time(&scenario_for(req, &point));
+                            let sc = scenario_for(req, &point);
+                            let base = batch_time(&sc);
+                            // worst-step pricing only differs for bursty
+                            // traffic (zipf/uniform skew is stationary)
+                            let worst_base = match req.traffic {
+                                TrafficSpec::Bursty(_) => batch_time_worst_traffic(&sc),
+                                _ => base,
+                            };
                             for &ov in &req.overlap_choices {
                                 let knobs = PlanKnobs { overlap: ov, ..point };
                                 let eff = if ov { req.overlap_efficiency } else { 0.0 };
                                 plans.push(Plan {
                                     knobs,
                                     time: overlap_from_base(base, eff),
+                                    worst_time: overlap_from_base(worst_base, eff),
                                     mem_peak_phase: peak_phase,
                                     mem_peak_bytes: peak_bytes,
                                     mem_budget_bytes: budget,

@@ -30,7 +30,7 @@ use crate::collectives::{
     CommKind, Communicator, PendingAllGather, PendingAllReduce, PendingAllToAll, Rendezvous,
 };
 use crate::perfmodel::batch_time::{
-    comm_ops, compute_budget_s, CommOp, Scenario, PHASE_COMPUTE_SPLIT,
+    comm_ops, compute_budget_s, phase_compute_split, CommOp, Scenario,
 };
 use crate::topology::{RankGroups, Topology};
 use crate::util::tensor::Tensor;
@@ -66,14 +66,18 @@ pub fn replay_scenario(
 ) -> Result<MeasuredPlanTime> {
     let topo = Topology::new(s.par)?;
     let world = s.par.world;
+    // `comm_ops` carries the scenario's traffic skew in the expert a2a
+    // payload, so a skewed scenario replays skewed for free
     let ops = comm_ops(s);
     // the same compute budget and fwd/bwd/recompute split the analytic
-    // model prices — shared so the two halves cannot diverge
+    // model prices (CAC-aware on both axes) — shared so the two halves
+    // cannot diverge
     let compute_s = compute_budget_s(s);
+    let split = phase_compute_split(s.opts.cac);
     let phase_compute = [
-        PHASE_COMPUTE_SPLIT[0] * compute_s,
-        PHASE_COMPUTE_SPLIT[1] * compute_s,
-        PHASE_COMPUTE_SPLIT[2] * compute_s,
+        split[0] * compute_s,
+        split[1] * compute_s,
+        split[2] * compute_s,
     ];
 
     let rez = Rendezvous::new(world);

@@ -117,6 +117,78 @@ impl Args {
     }
 }
 
+/// Traffic scenario selector, shared by `ted train`, `ted plan`, and
+/// `paper_figures` (`--traffic uniform|zipf:<s>|bursty:<p>`).
+///
+/// * `uniform` — the paper's world: every expert equally popular.
+/// * `zipf:<s>` — hot-expert skew: per-step expert popularity follows a
+///   Zipf law with exponent `s > 0` (hot expert rotates deterministically).
+/// * `bursty:<p>` — per-step bursts: with probability `p in [0, 1]` a step
+///   concentrates its traffic on one hot expert, otherwise uniform.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TrafficSpec {
+    Uniform,
+    Zipf(f64),
+    Bursty(f64),
+}
+
+impl TrafficSpec {
+    /// Parse a CLI spelling: `uniform`, `zipf:1.2`, `bursty:0.3`.
+    pub fn parse(s: &str) -> Result<TrafficSpec, ArgError> {
+        if s == "uniform" {
+            return Ok(TrafficSpec::Uniform);
+        }
+        if let Some(v) = s.strip_prefix("zipf:") {
+            let exp: f64 = v.parse().map_err(|_| {
+                ArgError(format!("traffic 'zipf:{v}': '{v}' is not a number"))
+            })?;
+            if !exp.is_finite() || exp <= 0.0 {
+                return Err(ArgError(format!(
+                    "traffic 'zipf:{v}': exponent must be a finite number > 0"
+                )));
+            }
+            return Ok(TrafficSpec::Zipf(exp));
+        }
+        if let Some(v) = s.strip_prefix("bursty:") {
+            let p: f64 = v.parse().map_err(|_| {
+                ArgError(format!("traffic 'bursty:{v}': '{v}' is not a number"))
+            })?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(ArgError(format!(
+                    "traffic 'bursty:{v}': probability must be in [0, 1]"
+                )));
+            }
+            return Ok(TrafficSpec::Bursty(p));
+        }
+        Err(ArgError(format!(
+            "unknown traffic '{s}' (expected uniform, zipf:<s>, or bursty:<p>)"
+        )))
+    }
+
+    /// Parse an optional `--traffic` argument (None / absent = uniform).
+    pub fn from_args(args: &Args) -> Result<TrafficSpec, ArgError> {
+        match args.get("traffic") {
+            None => Ok(TrafficSpec::Uniform),
+            Some(s) => Self::parse(s),
+        }
+    }
+
+    /// Canonical CLI spelling (round-trips through [`TrafficSpec::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            TrafficSpec::Uniform => "uniform".to_string(),
+            TrafficSpec::Zipf(s) => format!("zipf:{s}"),
+            TrafficSpec::Bursty(p) => format!("bursty:{p}"),
+        }
+    }
+}
+
+impl std::fmt::Display for TrafficSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,5 +238,37 @@ mod tests {
     fn double_dash_terminator() {
         let a = parse(&["--tp", "1", "--", "--not-an-option"], &[]);
         assert_eq!(a.positional(), &["--not-an-option".to_string()]);
+    }
+
+    #[test]
+    fn traffic_spec_parses_and_round_trips() {
+        assert_eq!(TrafficSpec::parse("uniform").unwrap(), TrafficSpec::Uniform);
+        assert_eq!(TrafficSpec::parse("zipf:1.2").unwrap(), TrafficSpec::Zipf(1.2));
+        assert_eq!(TrafficSpec::parse("bursty:0.3").unwrap(), TrafficSpec::Bursty(0.3));
+        for s in ["uniform", "zipf:1.2", "bursty:0.3"] {
+            let t = TrafficSpec::parse(s).unwrap();
+            assert_eq!(TrafficSpec::parse(&t.name()).unwrap(), t);
+        }
+    }
+
+    #[test]
+    fn traffic_spec_rejects_bad_specs_with_clear_messages() {
+        let err = |s: &str| TrafficSpec::parse(s).unwrap_err().to_string();
+        assert!(err("zipfy").contains("unknown traffic"));
+        assert!(err("zipf:abc").contains("not a number"));
+        assert!(err("zipf:-1").contains("> 0"));
+        assert!(err("zipf:0").contains("> 0"));
+        assert!(err("bursty:1.5").contains("[0, 1]"));
+        assert!(err("bursty:x").contains("not a number"));
+    }
+
+    #[test]
+    fn traffic_spec_from_args_defaults_to_uniform() {
+        let a = parse(&[], &[]);
+        assert_eq!(TrafficSpec::from_args(&a).unwrap(), TrafficSpec::Uniform);
+        let b = parse(&["--traffic", "zipf:2"], &[]);
+        assert_eq!(TrafficSpec::from_args(&b).unwrap(), TrafficSpec::Zipf(2.0));
+        let c = parse(&["--traffic", "nope"], &[]);
+        assert!(TrafficSpec::from_args(&c).is_err());
     }
 }

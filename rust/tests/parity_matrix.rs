@@ -12,10 +12,11 @@
 //! Two layers of coverage:
 //!
 //! * a PJRT-free deterministic **toy MoE layer** driven through the real
-//!   router (`route_top1`), the real dispatch/return path (with DTD and
-//!   the pipelined overlap schedule), and the real collectives — runs on
-//!   every build, over a grid of (tp, ep, dp_exp) topologies x backend x
-//!   DTD x node size x {blocking, nonblocking};
+//!   router (the `Router` API, in capacity and dropless mode, under
+//!   uniform / Zipf / bursty traffic scenarios), the real dispatch/return
+//!   path (with DTD and the pipelined overlap schedule), and the real
+//!   collectives — runs on every build, over a grid of (tp, ep, dp_exp)
+//!   topologies x backend x DTD x node size x {blocking, nonblocking};
 //! * the full engine (`sim::train`) when `make artifacts` has produced
 //!   the tiny variant — skips gracefully otherwise, like the rest of the
 //!   artifact-dependent suite.
@@ -24,8 +25,10 @@ use std::sync::Arc;
 
 use ted::collectives::{CollectiveStrategy, CommKind, CommStats, Communicator, Rendezvous};
 use ted::config::ParallelConfig;
-use ted::moe::{dispatch, return_to_origin, route_top1, MoeComm};
+use ted::data::TrafficModel;
+use ted::moe::{dispatch, return_to_origin, MoeComm, Router, RouterConfig};
 use ted::topology::Topology;
+use ted::util::cli::TrafficSpec;
 use ted::util::tensor::Tensor;
 
 const N_TOKENS: usize = 6;
@@ -45,11 +48,33 @@ fn make_rows(dpn: usize, step: usize) -> Tensor {
     t
 }
 
-/// Deterministic gate probabilities: token i prefers expert (i+dpn+step)%E.
-fn make_probs(dpn: usize, step: usize) -> Tensor {
+/// Routing-mode x traffic workload a toy run executes under.
+#[derive(Debug, Clone, Copy)]
+struct Workload {
+    dropless: bool,
+    traffic: TrafficSpec,
+}
+
+impl Workload {
+    /// The historical default: top-1 with capacity, round-robin traffic.
+    fn top1_uniform() -> Workload {
+        Workload { dropless: false, traffic: TrafficSpec::Uniform }
+    }
+}
+
+/// Deterministic gate probabilities. Uniform traffic keeps the historical
+/// round-robin pattern (token i prefers expert (i+dpn+step)%E); skewed
+/// scenarios draw the preferred expert from the [`TrafficModel`] — still
+/// a pure function of (dpn, step, token), so TP planes and transports all
+/// see identical gates.
+fn make_probs(dpn: usize, step: usize, load: Workload) -> Tensor {
     let mut t = Tensor::zeros(&[N_TOKENS, N_EXPERTS]);
+    let tm = TrafficModel::new(load.traffic, 42);
     for i in 0..N_TOKENS {
-        let star = (i + dpn + step) % N_EXPERTS;
+        let star = match load.traffic {
+            TrafficSpec::Uniform => (i + dpn + step) % N_EXPERTS,
+            _ => tm.pick_expert(step, 0, dpn, i, N_EXPERTS),
+        };
         for e in 0..N_EXPERTS {
             t.row_mut(i)[e] =
                 if e == star { 0.8 } else { 0.2 / (N_EXPERTS - 1) as f32 };
@@ -80,11 +105,23 @@ struct Combo {
 /// transport/schedule. Returns rank traces plus the all-ranks all-to-all
 /// stats (lanes + message counts).
 fn run_toy(tp: usize, ep: usize, dp_exp: usize, combo: Combo) -> (Vec<RankTrace>, CommStats) {
+    run_toy_loaded(tp, ep, dp_exp, combo, Workload::top1_uniform())
+}
+
+fn run_toy_loaded(
+    tp: usize,
+    ep: usize,
+    dp_exp: usize,
+    combo: Combo,
+    load: Workload,
+) -> (Vec<RankTrace>, CommStats) {
     let Combo { strategy, gpn, dtd, overlap } = combo;
     let world = tp * ep * dp_exp;
     let topo = Topology::new(ParallelConfig::derive(world, tp, ep).unwrap()).unwrap();
     let rez = Rendezvous::new(world);
-    let cap = N_TOKENS * ep; // no overflow drops in this workload
+    let cap = N_TOKENS * ep; // no overflow drops under uniform traffic
+    let router_cfg =
+        if load.dropless { RouterConfig::dropless(1) } else { RouterConfig::top1(cap) };
     let local_experts = N_EXPERTS / ep;
 
     let traces: Vec<RankTrace> = std::thread::scope(|s| {
@@ -102,10 +139,10 @@ fn run_toy(tp: usize, ep: usize, dp_exp: usize, combo: Combo) -> (Vec<RankTrace>
                     let mut kept_counts = Vec::with_capacity(STEPS);
                     for step in 0..STEPS {
                         let rows = make_rows(dpn, step);
-                        let probs = make_probs(dpn, step);
-                        let dec = route_top1(
+                        let probs = make_probs(dpn, step, load);
+                        let dec = Router::new(router_cfg).route(
                             &mut comm, g.ep_group_id, &g.ep_group, ep_pos, &probs,
-                            N_EXPERTS, cap,
+                            N_EXPERTS,
                         );
                         let disp = {
                             let mut ctx = MoeComm {
@@ -119,7 +156,7 @@ fn run_toy(tp: usize, ep: usize, dp_exp: usize, combo: Combo) -> (Vec<RankTrace>
                                 dtd,
                                 overlap,
                             };
-                            dispatch(&mut ctx, &rows, &dec, local_experts, cap)
+                            dispatch(&mut ctx, &rows, &dec, local_experts)
                         };
                         // toy expert compute: expert e scales its rows by a
                         // per-expert constant (elementwise, TP-plane safe)
@@ -146,7 +183,7 @@ fn run_toy(tp: usize, ep: usize, dp_exp: usize, combo: Combo) -> (Vec<RankTrace>
                                 dtd,
                                 overlap,
                             };
-                            return_to_origin(&mut ctx, &outs, &disp, &dec, local_experts, cap)
+                            return_to_origin(&mut ctx, &outs, &disp, &dec, local_experts)
                         };
                         let y2 = ted::engine::stash::combine(&rows, &dec, &back);
                         // deterministic "loss": mean activation, averaged
@@ -235,6 +272,33 @@ fn parity_matrix_tp_degree_is_a_noop() {
                     .find(|x| x.dpn == t.dpn)
                     .expect("dp shard missing");
                 assert_eq!(t, peer, "tp=1 vs tp=2 diverged at ep={ep} dp_exp={dp_exp} {combo:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn parity_matrix_extends_over_routing_mode_and_traffic() {
+    // routing mode x traffic axis: dropless routing and skewed (Zipf /
+    // bursty) traffic are pure workload changes — every transport and
+    // schedule must still agree bitwise, even when the payloads become
+    // genuinely irregular across peers.
+    let loads = [
+        Workload { dropless: true, traffic: TrafficSpec::Uniform },
+        Workload { dropless: true, traffic: TrafficSpec::Zipf(1.2) },
+        Workload { dropless: false, traffic: TrafficSpec::Zipf(1.2) },
+        Workload { dropless: true, traffic: TrafficSpec::Bursty(0.5) },
+    ];
+    let grid = [(2, 2, 1), (1, 4, 1), (2, 2, 2)];
+    for load in loads {
+        for &(tp, ep, dp_exp) in &grid {
+            let (reference, _) = run_toy_loaded(tp, ep, dp_exp, reference_combo(), load);
+            for combo in combos() {
+                let (got, _) = run_toy_loaded(tp, ep, dp_exp, combo, load);
+                assert_eq!(
+                    reference, got,
+                    "trace diverged at tp={tp} ep={ep} dp_exp={dp_exp} {combo:?} {load:?}"
+                );
             }
         }
     }

@@ -18,8 +18,9 @@ use ted::collectives::CollectiveStrategy;
 use ted::config::{model, ClusterConfig, ModelConfig};
 use ted::memory::MemoryModel;
 use ted::perfmodel::{batch_time, fit_overlap_efficiency_phased};
-use ted::planner::{plan, DEFAULT_TILE, PlanRequest, RejectReason};
+use ted::planner::{plan, DEFAULT_TILE, PlanReport, PlanRequest, RejectReason};
 use ted::sim::replay_scenario;
+use ted::util::cli::TrafficSpec;
 
 // ---------------------------------------------------------------------
 // feasibility-by-construction + ranking determinism
@@ -266,6 +267,75 @@ fn blocking_plan_ranking_matches_measured_timelines() {
                     );
                 }
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// skewed traffic re-ranks the grid: large-EP plans pay the hot rank
+// ---------------------------------------------------------------------
+
+#[test]
+fn skewed_traffic_reranks_the_toy_grid() {
+    // documented toy grid: mini/4e on 12 Summit GPUs, batch 48 (the same
+    // grid the measured-ranking test replays). Under zipf:1.2 the expert
+    // all-to-all of a wide EP group drains at ~2.1x the uniform payload
+    // while ep=1 plans pay no skew at all, so the ranking must move —
+    // in particular the best ep=4 plan slides down the table.
+    let req_u = toy_request("mini", 4, 12, ClusterConfig::summit(), 48);
+    let mut req_z = toy_request("mini", 4, 12, ClusterConfig::summit(), 48);
+    req_z.traffic = TrafficSpec::Zipf(1.2);
+    let uni = plan(&req_u);
+    let zipf = plan(&req_z);
+
+    // feasibility is traffic-independent (skew prices time, not memory)
+    assert_eq!(uni.plans.len(), zipf.plans.len());
+    assert!(uni.plans.len() >= 9, "want a real grid, got {}", uni.plans.len());
+
+    let order = |r: &PlanReport| -> Vec<String> {
+        r.plans.iter().map(|p| p.knobs.describe()).collect()
+    };
+    assert_ne!(order(&uni), order(&zipf), "zipf:1.2 must re-rank the grid");
+
+    let first_ep = |r: &PlanReport, ep: usize| {
+        r.plans.iter().position(|p| p.knobs.par.ep == ep).unwrap()
+    };
+    assert!(
+        first_ep(&zipf, 4) > first_ep(&uni, 4),
+        "the best ep=4 plan must lose rank under skew (uniform {} vs zipf {})",
+        first_ep(&uni, 4),
+        first_ep(&zipf, 4)
+    );
+
+    // per-plan: skew never makes a plan cheaper, leaves ep=1 untouched,
+    // and (zipf is stationary) the worst step is the average step
+    for u in &uni.plans {
+        let zp = zipf
+            .plans
+            .iter()
+            .find(|p| p.knobs == u.knobs)
+            .unwrap_or_else(|| panic!("{}: missing under zipf", u.knobs.describe()));
+        assert!(zp.total_s() >= u.total_s() - 1e-15, "{}", u.knobs.describe());
+        if u.knobs.par.ep == 1 {
+            assert_eq!(zp.total_s(), u.total_s(), "{}", u.knobs.describe());
+        }
+        assert_eq!(zp.worst_total_s(), zp.total_s(), "{}", u.knobs.describe());
+    }
+
+    // bursty traffic prices a strictly worse worst step on every plan
+    // that has an expert group to burst into
+    let mut req_b = toy_request("mini", 4, 12, ClusterConfig::summit(), 48);
+    req_b.traffic = TrafficSpec::Bursty(0.5);
+    let bursty = plan(&req_b);
+    for p in &bursty.plans {
+        if p.knobs.par.ep > 1 {
+            assert!(
+                p.worst_total_s() > p.total_s(),
+                "{}: bursty worst step must exceed the average",
+                p.knobs.describe()
+            );
+        } else {
+            assert_eq!(p.worst_total_s(), p.total_s());
         }
     }
 }

@@ -1,0 +1,170 @@
+//! Skewed-traffic integration: the irregular all-to-all contract under a
+//! genuinely imbalanced routed workload.
+//!
+//! * A `zipf:1.2` [`TrafficModel`] routes tokens to experts; each rank's
+//!   per-destination row counts are therefore *unequal*. The measured
+//!   per-rank byte lanes recorded by the real transports must equal the
+//!   `collective_cost` irregular lane predictions exactly, for all three
+//!   strategies and several node sizes.
+//! * A skewed `Scenario` replayed through `sim::replay` (real threads,
+//!   real transports, α-β priced timeline) must land on the analytic
+//!   `batch_time` total — the skew folding in `comm_ops` is the single
+//!   source both sides consume.
+
+use std::sync::Arc;
+
+use ted::collectives::{ALL_STRATEGIES, CollectiveStrategy, CommKind, Communicator, Rendezvous};
+use ted::config::{model, ClusterConfig, ParallelConfig};
+use ted::data::TrafficModel;
+use ted::perfmodel::{
+    batch_time, lane_bytes_alltoall, lane_bytes_alltoall_pxn, CommOpts, Scenario,
+};
+use ted::sim::replay_scenario;
+use ted::topology::{GroupId, GroupKind};
+use ted::util::cli::TrafficSpec;
+
+const WORLD: usize = 8;
+const ROW_FLOATS: usize = 4; // routed row width (floats)
+const TOKENS: usize = 64; // tokens routed per rank
+
+fn gid(i: usize) -> GroupId {
+    GroupId { kind: GroupKind::World, index: i }
+}
+
+/// Routed per-destination row counts for `rank`: `TOKENS` tokens drawn
+/// from the traffic model at step 0, expert `e` resident on peer `e`.
+fn routed_counts(tm: &TrafficModel, rank: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; WORLD];
+    for t in 0..TOKENS {
+        counts[tm.pick_expert(0, 0, rank, t, WORLD)] += 1;
+    }
+    counts
+}
+
+/// Per-destination payload bytes for `rank` (the self row stays local).
+fn routed_bytes(tm: &TrafficModel, rank: usize) -> Vec<u64> {
+    routed_counts(tm, rank).iter().map(|&n| (n * ROW_FLOATS * 4) as u64).collect()
+}
+
+/// Every rank routes its tokens and issues one irregular all-to-all.
+fn run_workload(tm: TrafficModel, strategy: CollectiveStrategy, gpn: usize) -> Arc<Rendezvous> {
+    let rez = Rendezvous::new(WORLD);
+    let members: Vec<usize> = (0..WORLD).collect();
+    std::thread::scope(|s| {
+        for r in 0..WORLD {
+            let rez = Arc::clone(&rez);
+            let members = members.clone();
+            s.spawn(move || {
+                let mut c = Communicator::with_transport(rez, r, strategy, gpn);
+                let send: Vec<Vec<f32>> = routed_counts(&tm, r)
+                    .iter()
+                    .map(|&n| vec![0.5; n * ROW_FLOATS])
+                    .collect();
+                let _ = c.all_to_all(gid(0), &members, send);
+            });
+        }
+    });
+    rez
+}
+
+#[test]
+fn skewed_routed_payloads_price_exactly_on_every_transport() {
+    let tm = TrafficModel::new(TrafficSpec::Zipf(1.2), 7);
+    let members: Vec<usize> = (0..WORLD).collect();
+
+    // the routed workload is genuinely skewed: the hot expert draws well
+    // over the uniform share (zipf:1.2 over 8 experts puts ~43% of all
+    // tokens on it; uniform would be 64 per expert here)
+    let mut per_expert = vec![0usize; WORLD];
+    for r in 0..WORLD {
+        for (e, c) in routed_counts(&tm, r).iter().enumerate() {
+            per_expert[e] += c;
+        }
+    }
+    assert_eq!(per_expert.iter().sum::<usize>(), WORLD * TOKENS);
+    let hot = *per_expert.iter().max().unwrap();
+    assert!(hot >= 2 * TOKENS, "zipf:1.2 should concentrate tokens, hot expert got {hot}");
+    // and irregular per destination: at least two counts differ per rank
+    for r in 0..WORLD {
+        let c = routed_counts(&tm, r);
+        assert!(c.iter().any(|&x| x != c[0]), "rank {r}: counts degenerate to uniform");
+    }
+
+    for strategy in ALL_STRATEGIES {
+        for gpn in [0usize, 2, 4] {
+            let rez = run_workload(tm, strategy, gpn);
+            for r in 0..WORLD {
+                let got = rez.stats.get(r, CommKind::AllToAll);
+                let (intra, inter) = if strategy == CollectiveStrategy::HierarchicalPxn {
+                    // the PXN leader carries its node's batches + the
+                    // redistribution, so the prediction needs the full
+                    // matrix (self rows never hit a transport)
+                    let matrix: Vec<Vec<u64>> = (0..WORLD)
+                        .map(|src| {
+                            routed_bytes(&tm, src)
+                                .into_iter()
+                                .enumerate()
+                                .map(|(j, b)| if src == j { 0 } else { b })
+                                .collect()
+                        })
+                        .collect();
+                    lane_bytes_alltoall_pxn(&members, r, &matrix, gpn)
+                } else {
+                    lane_bytes_alltoall(strategy, &members, r, &routed_bytes(&tm, r), gpn, WORLD)
+                };
+                assert_eq!(
+                    (got.intra_bytes, got.inter_bytes),
+                    (intra, inter),
+                    "lane mismatch: strategy={strategy:?} gpn={gpn} rank={r}"
+                );
+                assert_eq!(got.bytes, intra + inter);
+                assert_eq!(got.calls, 1);
+            }
+        }
+    }
+}
+
+#[test]
+fn skewed_scenario_replays_at_the_analytic_price() {
+    let m = model::executable("tiny").unwrap();
+    let cluster = ClusterConfig::perlmutter();
+    let par = ParallelConfig::derive(8, 1, 4).unwrap();
+    let mk = |traffic| Scenario {
+        model: m.clone(),
+        n_experts: 4,
+        par,
+        cluster: cluster.clone(),
+        global_batch: 64,
+        opts: CommOpts::optimized()
+            .with_strategy(CollectiveStrategy::Hierarchical)
+            .with_traffic(traffic),
+    };
+    let uni = mk(TrafficSpec::Uniform);
+    let zipf = mk(TrafficSpec::Zipf(1.2));
+
+    // pricing contract, skew included: a blocking replay's measured
+    // makespan is the analytic total (payloads round to whole floats,
+    // hence the small tolerance)
+    let mut measured = Vec::new();
+    for s in [&uni, &zipf] {
+        let analytic = batch_time(s).total();
+        let t = replay_scenario(s, cluster.gpus_per_node, false).unwrap();
+        assert!(
+            (t.critical_s - analytic).abs() <= 2e-3 * analytic,
+            "traffic={}: measured {} vs analytic {analytic}",
+            s.opts.traffic,
+            t.critical_s
+        );
+        measured.push(t);
+    }
+
+    // the skew is visible in both halves the same way: comm inflates
+    // (the hot rank's expert all-to-all payload), compute does not
+    let (tu, tz) = (batch_time(&uni), batch_time(&zipf));
+    assert!(tz.alltoall_s > tu.alltoall_s, "zipf must inflate the expert a2a");
+    assert_eq!(tz.compute_s, tu.compute_s);
+    assert_eq!(tz.allreduce_s, tu.allreduce_s);
+    let (mu, mz) = (measured[0], measured[1]);
+    assert!(mz.serialized_s > mu.serialized_s, "measured comm must inflate under zipf");
+    assert!((mz.compute_s - mu.compute_s).abs() < 1e-12 * mu.compute_s.max(1.0));
+}
