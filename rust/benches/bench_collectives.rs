@@ -205,4 +205,5 @@ fn main() {
         bench_allreduce_nonblocking_pair(8, 65_536, 50, strategy, gpn);
         bench_alltoall_phase_split(8, 64, 64, 100, strategy, gpn);
     }
+    bench::write_smoke_snapshot("bench_collectives").expect("write BENCH_smoke.json");
 }

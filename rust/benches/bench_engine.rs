@@ -59,4 +59,5 @@ fn main() {
     // world=8 (heavy on one core), so bench the ep-only decomposition
     run_case("mini", 4, 1, 4, base, "mini/ep4_baseline");
     run_case("mini", 4, 1, 4, both, "mini/ep4+dtd+cac");
+    bench::write_smoke_snapshot("bench_engine").expect("write BENCH_smoke.json");
 }

@@ -108,4 +108,5 @@ fn main() {
     bench_figures();
     bench_planner();
     bench_blocks();
+    bench::write_smoke_snapshot("bench_models").expect("write BENCH_smoke.json");
 }

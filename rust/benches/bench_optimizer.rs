@@ -63,4 +63,5 @@ fn main() {
             }
         }
     }
+    bench::write_smoke_snapshot("bench_optimizer").expect("write BENCH_smoke.json");
 }

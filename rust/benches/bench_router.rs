@@ -120,6 +120,8 @@ fn one_pass(
         tp_pos,
         dtd,
         overlap: false,
+        chunked: false,
+        chunk_compute_s: 0.0,
     };
     let disp = dispatch(&mut ctx, rows, &dec, local_experts);
     let _ = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, local_experts);
@@ -134,4 +136,5 @@ fn main() {
         bench_dispatch_roundtrip(2, 2, 512, 64, dtd, 30);
         bench_dispatch_roundtrip(2, 2, 2048, 256, dtd, 10);
     }
+    bench::write_smoke_snapshot("bench_router").expect("write BENCH_smoke.json");
 }

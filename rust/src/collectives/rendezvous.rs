@@ -671,7 +671,12 @@ impl Communicator {
         let state = match self.strategy {
             CollectiveStrategy::Flat => {
                 let (intra, inter) = self.flat_lanes(own_bytes);
-                self.rez.stats.record_split(self.rank, CommKind::AllGather, intra, inter);
+                let peers = (n - 1) as u64;
+                let (im, xm) =
+                    if self.nodes.spans_nodes(self.rez.world()) { (0, peers) } else { (peers, 0) };
+                self.rez
+                    .stats
+                    .record_split_msgs(self.rank, CommKind::AllGather, intra, inter, im, xm);
                 let key = (gid, seq, 0u32);
                 self.rez.deposit_nowait(key, CommKind::AllGather, pos, n,
                     vec![t.data().to_vec()],
@@ -682,7 +687,8 @@ impl Communicator {
                 let plan = NodePlan::build(self.nodes, members, pos);
                 if plan.n_nodes() == 1 {
                     // group fits in one node: a single intra-node exchange
-                    self.rez.stats.record_split(self.rank, CommKind::AllGather, own_bytes, 0);
+                    self.rez.stats.record_split_msgs(
+                        self.rank, CommKind::AllGather, own_bytes, 0, (n - 1) as u64, 0);
                     let key = (gid, seq, ptag(1, 0));
                     self.rez.deposit_nowait(key, CommKind::AllGather, pos, n,
                         vec![t.data().to_vec()],
@@ -797,14 +803,35 @@ impl Communicator {
 
         let mut intra = if k > 1 { own_bytes } else { 0 };
         let mut inter = 0u64;
+        let (intra_msgs, inter_msgs);
         if leader {
             inter += my_block_bytes;
             if k > 1 {
                 // redistributing the remote blocks to node peers
                 intra += total_bytes - my_block_bytes;
             }
+            intra_msgs = (k - 1) as u64;
+            // the plain hierarchical leader delivers its node block to
+            // every cross-node member; the PXN leader batches one framed
+            // message per peer leader — equal bytes, fewer α-terms (the
+            // carried-over PXN treatment for the spanning DTD all-gather)
+            inter_msgs = if self.strategy == CollectiveStrategy::HierarchicalPxn {
+                (plan.n_nodes() - 1) as u64
+            } else {
+                (n - k) as u64
+            };
+        } else {
+            // one contribution forwarded to the node leader
+            (intra_msgs, inter_msgs) = (1, 0);
         }
-        self.rez.stats.record_split(self.rank, CommKind::AllGather, intra, inter);
+        self.rez.stats.record_split_msgs(
+            self.rank,
+            CommKind::AllGather,
+            intra,
+            inter,
+            intra_msgs,
+            inter_msgs,
+        );
         out
     }
 
@@ -830,6 +857,24 @@ impl Communicator {
         send: Payloads,
     ) -> PendingAllToAll {
         self.issue_all_to_all_at(gid, members, send, false)
+    }
+
+    /// Issue one nonblocking all-to-all per chunk (the MoNTA-style chunked
+    /// expert a2a): `chunks[c][i]` goes to `members[i]`. Each chunk is a
+    /// full irregular all-to-all(v) — per-peer row counts vary freely —
+    /// and the caller orders the chunks (hottest expert first under skewed
+    /// traffic). Every group member must issue the same number of chunks
+    /// in the same canonical order (program order defines rendezvous
+    /// matching), then redeem the handles with [`Self::wait_all_to_all`]
+    /// **in issue order** — waiting chunk k while k+1 is still in flight
+    /// is exactly the overlap window the dispatch layer computes into.
+    pub fn issue_all_to_all_chunked(
+        &mut self,
+        gid: GroupId,
+        members: &[usize],
+        chunks: Vec<Payloads>,
+    ) -> Vec<PendingAllToAll> {
+        chunks.into_iter().map(|send| self.issue_all_to_all(gid, members, send)).collect()
     }
 
     fn issue_all_to_all_at(
@@ -1680,6 +1725,47 @@ mod tests {
         let nl = rez.stats.get(1, CommKind::AllGather);
         assert_eq!(nl.intra_bytes, 16);
         assert_eq!(nl.inter_bytes, 0);
+    }
+
+    /// A spanning all-gather (the DTD return path at tp > gpus_per_node)
+    /// under PXN is byte-identical to plain hierarchical in every lane,
+    /// but the leaders batch one inter message per peer node instead of
+    /// delivering their block per cross-node member — the same α-term win
+    /// PR 3 established for the all-to-all. Both backends must also agree
+    /// with the analytic `lane_msgs_allgather` per rank.
+    #[test]
+    fn allgather_pxn_batches_leader_messages() {
+        use crate::perfmodel::collective_cost::lane_msgs_allgather;
+        let members: Vec<usize> = (0..4).collect();
+        let run = |strategy| {
+            run_ranks_transport(4, strategy, 2, |r, mut c| {
+                let t = Tensor::from_vec(&[4], vec![r as f32; 4]);
+                c.all_gather(gid(5), &members, &t)
+            })
+        };
+        let (hout, hier) = run(CollectiveStrategy::Hierarchical);
+        let (pout, pxn) = run(CollectiveStrategy::HierarchicalPxn);
+        assert_eq!(hout, pout);
+        let ht = hier.stats.total(CommKind::AllGather);
+        let pt = pxn.stats.total(CommKind::AllGather);
+        // equal bytes in both lanes ...
+        assert_eq!((pt.intra_bytes, pt.inter_bytes), (ht.intra_bytes, ht.inter_bytes));
+        // ... strictly fewer inter messages: 2 leaders x (m-1)=1 vs x (n-k)=2
+        assert!(pt.inter_msgs < ht.inter_msgs, "{} vs {}", pt.inter_msgs, ht.inter_msgs);
+        assert_eq!(ht.inter_msgs, 4);
+        assert_eq!(pt.inter_msgs, 2);
+        // per-rank message counts match the analytic lane model
+        let backends = [
+            (&hier, CollectiveStrategy::Hierarchical),
+            (&pxn, CollectiveStrategy::HierarchicalPxn),
+        ];
+        for (rez, strategy) in backends {
+            for r in 0..4 {
+                let s = rez.stats.get(r, CommKind::AllGather);
+                let want = lane_msgs_allgather(strategy, &members, r, 2, 4);
+                assert_eq!((s.intra_msgs, s.inter_msgs), want, "{strategy:?} rank {r}");
+            }
+        }
     }
 
     /// Mixed node sizes: one rank alone on its node still round-trips.

@@ -118,6 +118,15 @@ pub struct EngineOptions {
     /// all-gather pipelined against the expert all-to-all). Results are
     /// bitwise identical with or without; `--no-overlap` turns it off.
     pub overlap: bool,
+    /// Chunked expert all-to-all (MoNTA): split the dispatch/return a2a
+    /// into one chunk per local expert, hottest expert's rows first, so
+    /// expert k's FFN runs while chunk k+1 is still on the wire. Results
+    /// are bitwise identical (keyed scatter); only the timeline changes.
+    pub chunked_a2a: bool,
+    /// Batch-level overlap (Megatron Core v0.14 style): delay each
+    /// expert's weight-gradient pass-unit so the backward a2a hides
+    /// behind it. Pure timeline change; gradients are unaffected.
+    pub delay_wgrad: bool,
     /// Cluster preset pricing the overlap timeline (`TrainLog` reports
     /// serialized vs critical-path comm seconds when set).
     pub cluster: Option<ClusterPreset>,
@@ -138,6 +147,8 @@ impl Default for EngineOptions {
             strategy: CollectiveStrategy::Flat,
             gpus_per_node: 0,
             overlap: true,
+            chunked_a2a: false,
+            delay_wgrad: false,
             cluster: None,
         }
     }

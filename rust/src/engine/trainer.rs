@@ -243,6 +243,16 @@ impl Trainer {
         passes * ffn_fwd_flops(d.d_model, d.d_ff, d.capacity) / self.groups.tp_group.len() as f64
     }
 
+    /// Modeled seconds of one expert-FFN-shard pass (0 without a cluster
+    /// preset) — the unit the chunked dispatch/return advances on the
+    /// compute lane between consecutive chunk waits.
+    fn expert_unit_s(&self, passes: f64) -> f64 {
+        match self.flops_rate {
+            Some(rate) => self.expert_shard_flops(passes) / rate,
+            None => 0.0,
+        }
+    }
+
     /// This rank's flops for one LM-head pass (replicated, not sharded).
     fn head_flops(&self, passes: f64) -> f64 {
         let d = &self.manifest.dims;
@@ -288,6 +298,10 @@ impl Trainer {
             n_experts,
         );
         let local = self.local_expert_ids.len();
+        // chunked a2a: expert k's FFN unit is priced between chunk waits
+        // inside `dispatch` (k+1 in flight behind it); the expert loop
+        // below then prices only the one unit dispatch could not hide
+        let chunk_fwd_s = if self.opts.chunked_a2a { self.expert_unit_s(1.0) } else { 0.0 };
         let disp = {
             let mut ctx = MoeComm {
                 comm: &mut self.comm,
@@ -299,6 +313,8 @@ impl Trainer {
                 tp_pos: self.tp_pos,
                 dtd: self.opts.dtd,
                 overlap: self.opts.overlap,
+                chunked: self.opts.chunked_a2a,
+                chunk_compute_s: chunk_fwd_s,
             };
             dispatch(&mut ctx, &xn, &dec, local)
         };
@@ -313,7 +329,9 @@ impl Trainer {
             for (le, &e) in self.local_expert_ids.clone().iter().enumerate() {
                 let part =
                     blocks::expert_fwd(&mut self.rt, &self.store, i, e, &disp.buffers[le])?;
-                self.price_compute(self.expert_shard_flops(1.0));
+                if !self.opts.chunked_a2a || le == 0 {
+                    self.price_compute(self.expert_shard_flops(1.0));
+                }
                 let p = self.comm.issue_all_reduce(
                     self.groups.tp_group_id,
                     &self.groups.tp_group,
@@ -333,7 +351,9 @@ impl Trainer {
             for (le, &e) in self.local_expert_ids.clone().iter().enumerate() {
                 let mut part =
                     blocks::expert_fwd(&mut self.rt, &self.store, i, e, &disp.buffers[le])?;
-                self.price_compute(self.expert_shard_flops(1.0));
+                if !self.opts.chunked_a2a || le == 0 {
+                    self.price_compute(self.expert_shard_flops(1.0));
+                }
                 self.tp_allreduce(&mut part);
                 expert_out.push(part);
             }
@@ -349,6 +369,8 @@ impl Trainer {
                 tp_pos: self.tp_pos,
                 dtd: self.opts.dtd,
                 overlap: self.opts.overlap,
+                chunked: self.opts.chunked_a2a,
+                chunk_compute_s: 0.0,
             };
             return_to_origin(&mut ctx, &expert_out, &disp, &dec, local)
         };
@@ -410,10 +432,17 @@ impl Trainer {
                         tp_pos: self.tp_pos,
                         dtd: self.opts.dtd,
                         overlap: self.opts.overlap,
+                        chunked: self.opts.chunked_a2a,
+                        chunk_compute_s: 0.0,
                     };
                     dispatch(&mut ctx, &drows, &dec, local)
                 };
                 let mut dxe_full = Vec::with_capacity(local);
+                // batch-level overlap (MCore v0.14): with `delay_wgrad`
+                // only the dgrad unit prices here; the wgrad units are
+                // deferred past the return a2a so its chunks hide behind
+                // them (pure timeline change — grads are unaffected)
+                let bwd_passes = if self.opts.delay_wgrad { 1.0 } else { 2.0 };
                 if self.opts.overlap {
                     // same compute/comm pipeline as the forward pass: the
                     // next expert's backward shard hides the previous
@@ -428,7 +457,7 @@ impl Trainer {
                             &disp.buffers[le],
                             &disp_b.buffers[le],
                         )?;
-                        self.price_compute(self.expert_shard_flops(2.0));
+                        self.price_compute(self.expert_shard_flops(bwd_passes));
                         for (n, g) in grads {
                             self.store.accum_grad(&n, &g);
                         }
@@ -457,7 +486,7 @@ impl Trainer {
                             &disp.buffers[le],
                             &disp_b.buffers[le],
                         )?;
-                        self.price_compute(self.expert_shard_flops(2.0));
+                        self.price_compute(self.expert_shard_flops(bwd_passes));
                         for (n, g) in grads {
                             self.store.accum_grad(&n, &g);
                         }
@@ -465,6 +494,13 @@ impl Trainer {
                         dxe_full.push(dxe);
                     }
                 }
+                // chunked + delayed wgrad: one wgrad unit prices between
+                // consecutive return-chunk waits inside `return_to_origin`
+                let chunk_wgrad_s = if self.opts.chunked_a2a && self.opts.delay_wgrad {
+                    self.expert_unit_s(1.0)
+                } else {
+                    0.0
+                };
                 let ret = {
                     let mut ctx = MoeComm {
                         comm: &mut self.comm,
@@ -476,9 +512,17 @@ impl Trainer {
                         tp_pos: self.tp_pos,
                         dtd: self.opts.dtd,
                         overlap: self.opts.overlap,
+                        chunked: self.opts.chunked_a2a,
+                        chunk_compute_s: chunk_wgrad_s,
                     };
                     return_to_origin(&mut ctx, &dxe_full, &disp_b, &dec, local)
                 };
+                if self.opts.delay_wgrad {
+                    // the delayed wgrad units not already advanced between
+                    // the chunked return's waits price here, after the a2a
+                    let in_return = if self.opts.chunked_a2a { local - 1 } else { 0 };
+                    self.price_compute(self.expert_shard_flops((local - in_return) as f64));
+                }
                 // assemble dxn [N, D]: per-assignment gradients accumulate
                 // into their token's row (zero rows for dropped tokens)
                 let d = self.manifest.dims.d_model;

@@ -104,6 +104,33 @@
 //! average. The irregular (per-peer row count) all-to-all path is
 //! pinned measured == analytic in `rust/tests/traffic_scenarios.rs`.
 //!
+//! ## Chunked a2a and batch-level overlap
+//!
+//! The expert all-to-all can be split into **one chunk per local
+//! expert** (`collectives::Communicator::issue_all_to_all_chunked`;
+//! `EngineOptions::chunked_a2a`, CLI `ted train --chunked-a2a`): all
+//! chunks are issued back-to-back — hot destinations first under skewed
+//! traffic, in a canonical order every rank derives from the same
+//! routing decision — and expert *k*'s FFN runs as soon as its chunk
+//! arrives, while chunk *k+1* is still in flight. The dispatch layer
+//! keeps the scatter keyed by expert, so results stay **bitwise
+//! identical** to the monolithic schedule on every transport
+//! (`rust/tests/parity_matrix.rs`). Batch-level overlap in the MCore
+//! style rides along (`EngineOptions::delay_wgrad`, CLI
+//! `--delay-wgrad`): the backward return pass prices only the
+//! activation-grad unit inside the all-to-all and delays each expert's
+//! wgrad unit behind the chunk stream, widening the hiding window. The
+//! analytic twin is exact: `CommOpts::{a2a_chunks, delay_wgrad}`
+//! re-price the schedule (same bytes, K× α-terms, plus a
+//! `pipelined_comm_s` lane that the overlap model credits even at zero
+//! overlap efficiency), `sim::replay_scenario` executes it, and the
+//! planner searches it (`ted plan --chunked`), pruning serialized
+//! chunked points that would pay the α-surcharge for nothing. Measured
+//! == analytic for the chunked schedule under `zipf:1.2` is pinned in
+//! `rust/tests/traffic_scenarios.rs`; the planner-level win (chunked
+//! twins strictly cut critical-path comm on skewed wide-EP scenarios)
+//! in `rust/tests/planner_validation.rs`.
+//!
 //! ## The parallelism planner
 //!
 //! `planner` is the capability layer above the transports: given a

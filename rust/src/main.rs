@@ -31,10 +31,11 @@ USAGE:
              [--no-tiling] [--batch N] [--verbose]
              [--transport flat|hierarchical|hierarchical-pxn]
              [--gpus-per-node N] [--cluster summit|thetagpu|perlmutter]
-             [--no-overlap] [--traffic uniform|zipf:<s>|bursty:<p>]
+             [--no-overlap] [--chunked-a2a] [--delay-wgrad]
+             [--traffic uniform|zipf:<s>|bursty:<p>]
   ted plan   [--cluster summit|thetagpu|perlmutter] [--model NAME]
              [--experts E] [--gpus G] [--batch N] [--overlap-eff E]
-             [--max-tp N] [--micro N] [--top K] [--json]
+             [--max-tp N] [--micro N] [--top K] [--json] [--chunked]
              [--traffic uniform|zipf:<s>|bursty:<p>]
   ted info   --model {1.3B|2.7B|6.7B|13.0B} --experts E --gpus G --tp T
              [--cluster summit|thetagpu|perlmutter]
@@ -54,6 +55,13 @@ generator's routed tokens (zipf: rotating hot-expert skew; bursty:
 one-hot burst steps with probability p), `plan` prices every candidate
 under the skew and reports the worst single step next to the average —
 skew-heavy scenarios can re-rank plans toward smaller expert groups.
+
+--chunked-a2a splits the expert all-to-all into one chunk per local
+expert (hottest first) so expert k computes while chunk k+1 is on the
+wire; --delay-wgrad defers the expert weight-gradient pass so the
+backward all-to-all hides behind it. Both are pure schedule changes
+(bitwise-identical results). `ted plan --chunked` adds the pair to the
+search space.
 
 Selecting --cluster on `train` threads the preset's gpus-per-node into
 the transport layer and prices a three-lane (compute/NVLink/IB) overlap
@@ -78,7 +86,10 @@ fn run() -> Result<()> {
         println!("{USAGE}");
         return Ok(());
     };
-    let flags = ["no-dtd", "no-cac", "no-tiling", "no-overlap", "verbose", "help", "json"];
+    let flags = [
+        "no-dtd", "no-cac", "no-tiling", "no-overlap", "chunked-a2a", "delay-wgrad", "chunked",
+        "verbose", "help", "json",
+    ];
     let args = Args::parse(all.into_iter().skip(1), &flags)?;
     if args.flag("help") {
         println!("{USAGE}");
@@ -100,8 +111,8 @@ fn run() -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "config", "world", "tp", "ep", "steps", "micro", "lr", "seed", "data", "batch",
-        "no-dtd", "no-cac", "no-tiling", "no-overlap", "verbose", "transport",
-        "gpus-per-node", "cluster", "traffic",
+        "no-dtd", "no-cac", "no-tiling", "no-overlap", "chunked-a2a", "delay-wgrad", "verbose",
+        "transport", "gpus-per-node", "cluster", "traffic",
     ])?;
     let config = args.get_or("config", "tiny").to_string();
     let tp = args.get_usize("tp", 2)?;
@@ -135,6 +146,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         cac: !args.flag("no-cac"),
         optimizer_tiling: !args.flag("no-tiling"),
         overlap: !args.flag("no-overlap"),
+        chunked_a2a: args.flag("chunked-a2a"),
+        delay_wgrad: args.flag("delay-wgrad"),
         strategy,
         gpus_per_node: args.get_usize("gpus-per-node", 0)?,
         ..Default::default()
@@ -223,7 +236,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_plan(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "model", "experts", "gpus", "batch", "cluster", "overlap-eff", "max-tp", "micro", "top",
-        "json", "traffic",
+        "json", "traffic", "chunked",
     ])?;
     let cluster = ClusterConfig::by_name(args.get_or("cluster", "summit"))
         .ok_or_else(|| anyhow!("unknown --cluster (summit|thetagpu|perlmutter)"))?;
@@ -249,6 +262,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
         bail!("--max-tp must be positive");
     }
     req.traffic = TrafficSpec::from_args(args)?;
+    if args.flag("chunked") {
+        req.chunked_choices = vec![false, true];
+    }
     if args.get("micro").is_some() {
         let micro = args.get_usize("micro", 1)?;
         if micro == 0 {
@@ -331,6 +347,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
         cmd.push_str(&format!(" --micro {}", best.knobs.micro_batch));
         if !best.knobs.overlap {
             cmd.push_str(" --no-overlap");
+        }
+        if best.knobs.chunked {
+            cmd.push_str(" --chunked-a2a --delay-wgrad");
         }
         if !best.knobs.cac {
             cmd.push_str(" --no-cac");

@@ -137,6 +137,12 @@ impl CsvWriter {
 /// Micro-bench harness for the `cargo bench` targets.
 pub mod bench {
     use super::*;
+    use crate::util::json::Json;
+    use std::sync::Mutex;
+
+    /// Every [`run`] result of this process, in execution order — the
+    /// source [`write_smoke_snapshot`] serializes.
+    static RESULTS: Mutex<Vec<(String, BenchResult)>> = Mutex::new(Vec::new());
 
     /// Smoke mode: `BENCH_SMOKE=1` in the environment, or `--smoke` /
     /// `--test` on the bench binary's argv (the spelling
@@ -206,7 +212,50 @@ pub mod bench {
             fmt_d(result.stddev),
             result.iters
         );
+        RESULTS.lock().unwrap().push((name.to_string(), result));
         result
+    }
+
+    /// Serialize every result this bench binary recorded into the
+    /// repo-root `BENCH_smoke.json` under `targets.<target>` — smoke mode
+    /// only (a full measurement run is for reading, not snapshotting).
+    /// Each of the `cargo bench` binaries calls this at the end of its
+    /// `main`, merging into the sections the earlier binaries wrote, so
+    /// one `BENCH_SMOKE=1 cargo bench` sweep leaves a complete snapshot
+    /// CI can print and trajectory tooling can diff: the keys say which
+    /// benches exist and ran; the 1-iteration timings are smoke noise,
+    /// not measurements.
+    pub fn write_smoke_snapshot(target: &str) -> std::io::Result<()> {
+        if !smoke() {
+            return Ok(());
+        }
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_smoke.json");
+        let mut targets = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|t| Json::parse(&t).ok())
+            .and_then(|doc| doc.get("targets").and_then(|t| t.as_object().cloned()))
+            .unwrap_or_default();
+        let results = RESULTS.lock().unwrap();
+        let entries: Vec<(String, Json)> = results
+            .iter()
+            .map(|(name, r)| {
+                (
+                    name.clone(),
+                    Json::obj([
+                        ("iters", Json::Num(r.iters as f64)),
+                        ("mean_s", Json::Num(r.mean.as_secs_f64())),
+                        ("min_s", Json::Num(r.min.as_secs_f64())),
+                        ("max_s", Json::Num(r.max.as_secs_f64())),
+                    ]),
+                )
+            })
+            .collect();
+        targets.insert(target.to_string(), Json::obj(entries));
+        let doc = Json::obj([
+            ("generated_by", Json::str("BENCH_SMOKE=1 cargo bench")),
+            ("targets", Json::Obj(targets)),
+        ]);
+        std::fs::write(path, doc.render() + "\n")
     }
 
     pub fn fmt_d(d: Duration) -> String {

@@ -36,6 +36,16 @@
 //! buffer cell, so the pipelined schedule is bitwise identical to the
 //! blocking one — only the timeline (and the per-call accounting)
 //! changes.
+//!
+//! With `chunked` on, the expert all-to-all is instead split into **one
+//! chunk per local expert** (MoNTA's chunked overlap): each chunk is a
+//! full irregular a2a(v) issued nonblocking in a canonical
+//! hottest-expert-first order — derived from the router's group-global
+//! `f_frac`, so every EP member issues the same sequence — and expert
+//! k's arrived chunk scatters (with its FFN priced onto the compute lane
+//! via `chunk_compute_s`) while chunk k+1 is still on the wire. The
+//! keyed scatter again makes the schedule bitwise identical to blocking;
+//! the DTD all-gather runs once, after the last chunk.
 
 use crate::collectives::{Communicator, PendingAllToAll};
 use crate::moe::router::RoutingDecision;
@@ -56,6 +66,15 @@ pub struct MoeComm<'a> {
     /// nonblocking schedule: pipeline the DTD all-gather against the
     /// expert all-to-all's inter-node phase (bitwise-identical results)
     pub overlap: bool,
+    /// chunked expert a2a (MoNTA): one chunk per destination local
+    /// expert, hottest first; takes precedence over the pipelined
+    /// split-gather schedule and must be uniform across the EP/TP groups
+    pub chunked: bool,
+    /// seconds of expert compute priced between consecutive chunk waits
+    /// (expert k's FFN forward, or its delayed wgrad unit on the backward
+    /// return) — what the in-flight chunks hide behind on the measured
+    /// timeline; 0.0 leaves the compute lane untouched
+    pub chunk_compute_s: f64,
 }
 
 impl MoeComm<'_> {
@@ -74,6 +93,30 @@ impl MoeComm<'_> {
     fn pipelined(&self) -> bool {
         self.overlap && self.dtd && self.tp() > 1 && self.comm.strategy().is_hierarchical()
     }
+}
+
+/// Canonical chunk order for the chunked a2a: local-expert indices sorted
+/// hottest-first by the router's EP-group-global assignment fractions
+/// (`f_frac` is bitwise-identical on every member, so every rank issues
+/// the chunks in the same sequence — rendezvous matching requires it),
+/// ties broken by ascending index. Under skewed traffic the hot expert's
+/// rows hit the wire first, widening the window in which the remaining
+/// chunks hide behind its FFN.
+fn chunk_order(dec: &RoutingDecision, local_experts: usize, n_members: usize) -> Vec<usize> {
+    debug_assert_eq!(
+        dec.n_experts(),
+        local_experts * n_members,
+        "chunk order needs the full expert grid"
+    );
+    let mut hot = vec![0.0f32; local_experts];
+    for (k, h) in hot.iter_mut().enumerate() {
+        for p in 0..n_members {
+            *h += dec.f_frac[p * local_experts + k];
+        }
+    }
+    let mut order: Vec<usize> = (0..local_experts).collect();
+    order.sort_by(|&a, &b| hot[b].total_cmp(&hot[a]).then(a.cmp(&b)));
+    order
 }
 
 /// Run the EP all-to-all and the DTD TP all-gathers under the pipelined
@@ -200,8 +243,11 @@ pub fn dispatch(
     );
     let n_members = ctx.ep_members.len();
 
-    // build one payload per EP member
-    let mut send: Vec<Vec<f32>> = vec![Vec::new(); n_members];
+    // build one payload per EP member (chunked: one per destination
+    // local expert per member — chunk k carries every peer's rows bound
+    // for local expert k)
+    let n_chunks = if ctx.chunked { local_experts } else { 1 };
+    let mut send_chunks: Vec<Vec<Vec<f32>>> = vec![vec![Vec::new(); n_members]; n_chunks];
     for a in 0..na {
         let Some(slot) = dec.slot_of_token[a] else { continue };
         if !ctx.owns_slot(slot) {
@@ -209,9 +255,10 @@ pub fn dispatch(
         }
         let e = dec.expert_of_token[a];
         let dest = e / local_experts;
+        let c = if ctx.chunked { e % local_experts } else { 0 };
         let key = (e * capacity + slot) as f32;
         let src = if per_assignment { a } else { dec.token_of(a) };
-        let payload = &mut send[dest];
+        let payload = &mut send_chunks[c][dest];
         payload.push(key);
         payload.extend_from_slice(rows.row(src));
     }
@@ -239,16 +286,54 @@ pub fn dispatch(
         }
     };
 
-    // run the EP a2a — pipelined against the DTD gathers when overlap is
-    // on and the transport has a phase split, blocking otherwise. The
-    // scatter is keyed per buffer cell (each key arrives exactly once per
-    // a2a), so the pipelined schedule — which scatters same-node rows
-    // during the inter-node flight and cross-node rows while the gathers
+    // run the EP a2a — chunked per local expert when `chunked` is on,
+    // pipelined against the DTD gathers when overlap is on and the
+    // transport has a phase split, blocking otherwise. The scatter is
+    // keyed per buffer cell (each key arrives exactly once per a2a), so
+    // every schedule — chunks waited mid-flight, same-node rows scattered
+    // during the inter-node phase, cross-node rows while the gathers
     // drain — lands bit-identically to the blocking order. DTD's TP
     // all-gather(s) fill the slots the other planes carried; the gathered
     // rows re-use the same key format and their origins stay None (only
     // the direct receiver answers on the return path).
-    if ctx.pipelined() {
+    if ctx.chunked {
+        let order = chunk_order(dec, local_experts, n_members);
+        let sends: Vec<Vec<Vec<f32>>> =
+            order.iter().map(|&c| std::mem::take(&mut send_chunks[c])).collect();
+        let pending = ctx.comm.issue_all_to_all_chunked(ctx.ep_gid, ctx.ep_members, sends);
+        let n_pend = pending.len();
+        let mut mine: Vec<f32> = Vec::new();
+        for (ci, pend) in pending.into_iter().enumerate() {
+            let received = ctx.comm.wait_all_to_all(pend);
+            for (pos, payload) in received.iter().enumerate() {
+                scatter(payload, Some(pos), &mut buffers, &mut origin_of_slot);
+            }
+            if ctx.dtd && ctx.tp() > 1 {
+                for payload in &received {
+                    mine.extend_from_slice(payload);
+                }
+            }
+            // expert order[ci]'s FFN prices onto the compute lane here,
+            // hiding chunk ci+1's flight (the trainer passes the unit)
+            if ci + 1 < n_pend && ctx.chunk_compute_s > 0.0 {
+                ctx.comm.advance_compute(ctx.chunk_compute_s);
+            }
+        }
+        if ctx.dtd && ctx.tp() > 1 {
+            let gathered = ctx.comm.all_gather(
+                ctx.tp_gid,
+                ctx.tp_members,
+                &Tensor::from_vec(&[mine.len()], mine),
+            );
+            for (pos, payload) in gathered.into_iter().enumerate() {
+                if pos == ctx.tp_pos {
+                    continue; // already scattered our own
+                }
+                scatter(&payload, None, &mut buffers, &mut origin_of_slot);
+            }
+        }
+    } else if ctx.pipelined() {
+        let send = send_chunks.pop().expect("single unchunked payload set");
         let gathered_others = pipelined_a2a_gather(ctx, send, |pos, payload| {
             scatter(payload, Some(pos), &mut buffers, &mut origin_of_slot)
         });
@@ -256,6 +341,7 @@ pub fn dispatch(
             scatter(payload, None, &mut buffers, &mut origin_of_slot);
         }
     } else {
+        let send = send_chunks.pop().expect("single unchunked payload set");
         let received = ctx.comm.all_to_all(ctx.ep_gid, ctx.ep_members, send);
         for (pos, payload) in received.iter().enumerate() {
             scatter(payload, Some(pos), &mut buffers, &mut origin_of_slot);
@@ -303,26 +389,59 @@ pub fn return_to_origin(
     let first_expert = ctx.ep_pos * local_experts;
 
     // expert side: send each *owned* filled slot back to its origin
-    let mut send: Vec<Vec<f32>> = vec![Vec::new(); n_members];
+    // (chunked: chunk k carries local expert k's rows, so the origin can
+    // price expert k's delayed wgrad while chunk k+1 is in flight)
+    let n_chunks = if ctx.chunked { local_experts } else { 1 };
+    let mut send_chunks: Vec<Vec<Vec<f32>>> = vec![vec![Vec::new(); n_members]; n_chunks];
     for (le, buf) in buffers.iter().enumerate() {
         for slot in 0..capacity {
             let Some(origin) = disp.origin_of_slot[le][slot] else { continue };
             debug_assert!(ctx.owns_slot(slot) || !ctx.dtd);
             let key = ((first_expert + le) * capacity + slot) as f32;
-            let payload = &mut send[origin];
+            let c = if ctx.chunked { le } else { 0 };
+            let payload = &mut send_chunks[c][origin];
             payload.push(key);
             payload.extend_from_slice(buf.row(slot));
         }
     }
 
-    // return-path a2a — pipelined against the DTD gather when overlap is
-    // on (the MoNTA comm/comm overlap case), blocking otherwise. Origin
-    // side: flatten all received rows; with DTD, all-gather across the TP
-    // group so every plane sees every token's row. Rows are key-addressed,
-    // so concatenation order does not matter — the pipelined schedule
-    // collects them mid-flight.
+    // return-path a2a — chunked per local expert, pipelined against the
+    // DTD gather when overlap is on (the MoNTA comm/comm overlap case),
+    // blocking otherwise. Origin side: flatten all received rows; with
+    // DTD, all-gather across the TP group so every plane sees every
+    // token's row. Rows are key-addressed, so concatenation order does
+    // not matter — chunks and pipelined receipts collect mid-flight.
     let mut all_rows: Vec<f32> = Vec::new();
-    if ctx.pipelined() {
+    if ctx.chunked {
+        let order = chunk_order(dec, local_experts, n_members);
+        let sends: Vec<Vec<Vec<f32>>> =
+            order.iter().map(|&c| std::mem::take(&mut send_chunks[c])).collect();
+        let pending = ctx.comm.issue_all_to_all_chunked(ctx.ep_gid, ctx.ep_members, sends);
+        let n_pend = pending.len();
+        for (ci, pend) in pending.into_iter().enumerate() {
+            let received = ctx.comm.wait_all_to_all(pend);
+            for payload in &received {
+                all_rows.extend_from_slice(payload);
+            }
+            // under delayed wgrad the trainer prices one expert's
+            // weight-gradient unit here, hiding chunk ci+1's flight
+            if ci + 1 < n_pend && ctx.chunk_compute_s > 0.0 {
+                ctx.comm.advance_compute(ctx.chunk_compute_s);
+            }
+        }
+        if ctx.dtd && ctx.tp() > 1 {
+            let gathered = ctx.comm.all_gather(
+                ctx.tp_gid,
+                ctx.tp_members,
+                &Tensor::from_vec(&[all_rows.len()], all_rows.clone()),
+            );
+            all_rows.clear();
+            for payload in gathered {
+                all_rows.extend_from_slice(&payload);
+            }
+        }
+    } else if ctx.pipelined() {
+        let send = send_chunks.pop().expect("single unchunked payload set");
         let gathered_others = pipelined_a2a_gather(ctx, send, |_pos, payload| {
             all_rows.extend_from_slice(payload)
         });
@@ -331,6 +450,7 @@ pub fn return_to_origin(
             all_rows.extend_from_slice(payload);
         }
     } else {
+        let send = send_chunks.pop().expect("single unchunked payload set");
         let received = ctx.comm.all_to_all(ctx.ep_gid, ctx.ep_members, send);
         for payload in &received {
             all_rows.extend_from_slice(payload);
@@ -398,7 +518,7 @@ mod tests {
         cap: usize,
         n_experts: usize,
     ) {
-        round_trip_sched(strategy, gpn, tp, ep, dtd, false, n, d, cap, n_experts);
+        round_trip_sched(strategy, gpn, tp, ep, dtd, false, false, n, d, cap, n_experts);
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -409,6 +529,7 @@ mod tests {
         ep: usize,
         dtd: bool,
         overlap: bool,
+        chunked: bool,
         n: usize,
         d: usize,
         cap: usize,
@@ -457,6 +578,8 @@ mod tests {
                             tp_pos,
                             dtd,
                             overlap,
+                            chunked,
+                            chunk_compute_s: 0.0,
                         };
                         let disp = dispatch(&mut ctx, &rows, &dec, local_experts);
                         // fake expert compute: negate every filled row
@@ -546,11 +669,24 @@ mod tests {
         // the pipelined split-gather schedule must round-trip on both
         // hierarchical backends, spanning and node-local EP groups
         for strategy in [CollectiveStrategy::Hierarchical, CollectiveStrategy::HierarchicalPxn] {
-            round_trip_sched(strategy, 2, 2, 2, true, true, 6, 4, 16, 2);
-            round_trip_sched(strategy, 4, 4, 2, true, true, 8, 3, 24, 4);
+            round_trip_sched(strategy, 2, 2, 2, true, true, false, 6, 4, 16, 2);
+            round_trip_sched(strategy, 4, 4, 2, true, true, false, 8, 3, 24, 4);
         }
         // overlap with the flat transport falls back to the single gather
-        round_trip_sched(CollectiveStrategy::Flat, 0, 2, 2, true, true, 6, 4, 16, 2);
+        round_trip_sched(CollectiveStrategy::Flat, 0, 2, 2, true, true, false, 6, 4, 16, 2);
+    }
+
+    #[test]
+    fn round_trip_chunked_all_transports() {
+        // the chunked a2a must round-trip bitwise on every transport,
+        // with and without DTD, including multiple local experts (the
+        // multi-chunk case) and chunked-over-pipelined precedence
+        for strategy in [CollectiveStrategy::Hierarchical, CollectiveStrategy::HierarchicalPxn] {
+            round_trip_sched(strategy, 2, 2, 2, true, false, true, 6, 4, 16, 2);
+            round_trip_sched(strategy, 4, 4, 2, true, true, true, 8, 3, 24, 4);
+        }
+        round_trip_sched(CollectiveStrategy::Flat, 0, 2, 2, true, false, true, 6, 4, 16, 2);
+        round_trip_sched(CollectiveStrategy::Flat, 0, 1, 2, false, false, true, 6, 4, 16, 4);
     }
 
     #[test]
@@ -596,6 +732,8 @@ mod tests {
                             tp_pos,
                             dtd,
                             overlap: false,
+                            chunked: false,
+                            chunk_compute_s: 0.0,
                         };
                         let disp = dispatch(&mut ctx, &rows, &dec, 1);
                         let _ = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, 1);
@@ -655,6 +793,8 @@ mod tests {
                             tp_pos,
                             dtd,
                             overlap: false,
+                            chunked: false,
+                            chunk_compute_s: 0.0,
                         };
                         let disp = dispatch(&mut ctx, &rows, &dec, 1);
                         let _ = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, 1);
@@ -696,6 +836,8 @@ mod tests {
             tp_pos: 0,
             dtd: false,
             overlap: false,
+            chunked: false,
+            chunk_compute_s: 0.0,
         };
         let disp = dispatch(&mut ctx, &rows, &dec, 2);
         let back = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, 2);
@@ -730,6 +872,8 @@ mod tests {
             tp_pos: 0,
             dtd: false,
             overlap: false,
+            chunked: false,
+            chunk_compute_s: 0.0,
         };
         let disp = dispatch(&mut ctx, &rows, &dec, 2);
         let outs: Vec<Tensor> = disp

@@ -69,6 +69,22 @@ pub struct CommOpts {
     /// rank's payload (`collective_cost::traffic_skew`); uniform is the
     /// paper's setting and the identity.
     pub traffic: TrafficSpec,
+    /// Number of per-local-expert chunks the expert all-to-all is split
+    /// into (MoNTA-style). `1` is the monolithic transfer and the exact
+    /// identity; `K > 1` ships the same bytes as `K` collectives (the
+    /// α-terms multiply) and earns the structural chunk-overlap credit
+    /// [`BatchTime::pipelined_comm_s`] consumed by [`overlap_from_base`].
+    pub a2a_chunks: usize,
+    /// MCore-v0.14-style batch-level overlap: the wgrad pass-unit is
+    /// delayed past the backward return all-to-all, widening the backward
+    /// hiding window (folded into `pipelined_comm_s`). Serialized totals
+    /// never change — a blocking schedule simply executes the same ops.
+    pub delay_wgrad: bool,
+    /// Dropless (demand-sized) routing: the hot rank's DTD reassembly
+    /// all-gather carries its actual share, so the traffic skew inflates
+    /// it like the a2a. Capacity-mode buffers are fixed-size and stay
+    /// uniform regardless of traffic.
+    pub dropless: bool,
 }
 
 impl CommOpts {
@@ -79,6 +95,9 @@ impl CommOpts {
             capacity_factor: 1.25,
             strategy: CollectiveStrategy::Flat,
             traffic: TrafficSpec::Uniform,
+            a2a_chunks: 1,
+            delay_wgrad: false,
+            dropless: false,
         }
     }
 
@@ -99,6 +118,26 @@ impl CommOpts {
     /// Same switches, skewed expert traffic.
     pub fn with_traffic(mut self, traffic: TrafficSpec) -> Self {
         self.traffic = traffic;
+        self
+    }
+
+    /// Same switches, expert a2a split into `chunks` per-local-expert
+    /// chunks (1 = monolithic).
+    pub fn with_chunks(mut self, chunks: usize) -> Self {
+        self.a2a_chunks = chunks.max(1);
+        self
+    }
+
+    /// Same switches, wgrad pass-unit delayed past the backward return
+    /// a2a (batch-level overlap).
+    pub fn with_delay_wgrad(mut self, delay: bool) -> Self {
+        self.delay_wgrad = delay;
+        self
+    }
+
+    /// Same switches, dropless (demand-sized) routing.
+    pub fn with_dropless(mut self, dropless: bool) -> Self {
+        self.dropless = dropless;
         self
     }
 }
@@ -254,9 +293,12 @@ fn comm_ops_skewed(s: &Scenario, skew: f64) -> Vec<CommOp> {
     // capacity-buffered; DTD ships each TP plane's 1/tp slice of it. A
     // skewed traffic scenario inflates it by the hot rank's share — the
     // synchronous collective completes when the hot rank drains, so every
-    // rank prices the hot payload.
+    // rank prices the hot payload. Chunking splits each a2a into K
+    // per-local-expert collectives: same bytes, K× the α-terms (the
+    // replay executes exactly this — K smaller ops per a2a site).
     let a2a_bytes =
         if s.opts.dtd { cap_bytes / par.tp as f64 } else { cap_bytes } * skew;
+    let chunks = s.opts.a2a_chunks.max(1) as f64;
     let mut ops = vec![
         // tensor-parallel all-reduces: attention/FFN `g` + backward `f`
         // per block; the expert block's runs on the capacity payload
@@ -275,17 +317,21 @@ fn comm_ops_skewed(s: &Scenario, skew: f64) -> Vec<CommOp> {
         CommOp {
             kind: CommKind::AllToAll,
             group: OpGroup::Expert,
-            bytes: a2a_bytes,
-            count: per_pass(moe_layers * 2.0),
+            bytes: a2a_bytes / chunks,
+            count: per_pass(moe_layers * 2.0 * chunks),
         },
     ];
     if s.opts.dtd {
         // one TP all-gather per A2A reassembles the capacity buffers, each
-        // rank contributing the 1/tp slice it carried through the A2A
+        // rank contributing the 1/tp slice it carried through the A2A.
+        // Under dropless routing the buffers are demand-sized, so the hot
+        // rank's reassembly grows with the skew like the a2a did; capacity
+        // mode ships fixed-size buffers and stays uniform.
+        let ag_skew = if s.opts.dropless { skew } else { 1.0 };
         ops.push(CommOp {
             kind: CommKind::AllGather,
             group: OpGroup::Tensor,
-            bytes: cap_bytes / par.tp as f64,
+            bytes: cap_bytes / par.tp as f64 * ag_skew,
             count: per_pass(moe_layers * 2.0),
         });
     }
@@ -335,6 +381,15 @@ pub struct BatchTime {
     /// compute 1:2:1): the per-phase budgets the overlap model bounds
     /// hiding with. Lanes sum to the aggregates above.
     pub phases: [PhaseBudget; 3],
+    /// Structural chunk-overlap credit (MoNTA + delayed wgrad): comm
+    /// seconds the chunked expert a2a hides behind the per-expert FFN
+    /// windows *by construction* — expert k's FFN runs while chunk k+1 is
+    /// on the wire, and the delayed wgrad unit re-covers the backward
+    /// return. Zero for the monolithic schedule. The serialized totals
+    /// above never subtract it; only [`overlap_from_base`] consumes it
+    /// (so blocking pricing of a chunked schedule stays exactly the
+    /// serialized sum, which is what a blocking replay measures).
+    pub pipelined_comm_s: f64,
 }
 
 impl BatchTime {
@@ -378,6 +433,7 @@ fn batch_time_from_ops(s: &Scenario, ops: Vec<CommOp>) -> BatchTime {
     // per-backend pricing: flat charges a spanning group at the bottleneck
     // fabric, the hierarchical backends price each phase on its own fabric
     let mut t = BatchTime { compute_s, phases, ..Default::default() };
+    let mut a2a_phase = [0.0f64; 3];
     for op in ops {
         let members = op.group.members(&g0);
         let pc = match op.kind {
@@ -399,8 +455,54 @@ fn batch_time_from_ops(s: &Scenario, ops: Vec<CommOp>) -> BatchTime {
             budget.comm_intra_s += op.count[p] * pc.intra_s;
             budget.comm_inter_s += op.count[p] * pc.inter_s;
         }
+        if op.kind == CommKind::AllToAll && op.group == OpGroup::Expert {
+            for (p, acc) in a2a_phase.iter_mut().enumerate() {
+                *acc += op.count[p] * pc.total();
+            }
+        }
     }
+    t.pipelined_comm_s = pipelined_a2a_s(s, &a2a_phase);
     t
+}
+
+/// The structural chunk-overlap credit for the expert a2a
+/// ([`BatchTime::pipelined_comm_s`]): per pass phase, the `(K-1)/K` tail
+/// of a K-chunked a2a rides behind the phase's expert-FFN window (expert
+/// k computes while chunk k+1 flies), and with the wgrad pass-unit
+/// delayed the backward return additionally hides behind that unit —
+/// batch-level overlap that works even unchunked. Each phase's credit is
+/// bounded by its FFN window and by the a2a time itself.
+fn pipelined_a2a_s(s: &Scenario, a2a_phase: &[f64; 3]) -> f64 {
+    let chunks = s.opts.a2a_chunks.max(1);
+    if chunks <= 1 && !s.opts.delay_wgrad {
+        return 0.0;
+    }
+    let c = &s.cluster;
+    let m = &s.model;
+    let gpu_rate = c.peak_half_tflops * 1e12 * c.flops_efficiency;
+    let tokens_local = (s.global_batch * m.seq) as f64 / s.par.dp_nonexp as f64;
+    let moe_layers = (m.n_layers / 2) as f64;
+    // one forward pass-unit of this rank's expert FFNs: the TP-sharded
+    // FFN over the capacity-buffered tokens it hosts, every MoE layer
+    let cap_tokens = (tokens_local * s.opts.capacity_factor).round() as usize;
+    let ffn_pass_s = moe_layers * ffn_fwd_flops(m.d_model, m.d_ff, cap_tokens)
+        / (s.par.tp as f64 * gpu_rate);
+    let re = if s.opts.cac { 0.0 } else { 1.0 };
+    // FFN window per phase: 1 fwd unit, 2 bwd units (dgrad + wgrad), and
+    // the re-forward unit unless CAC stashes it
+    let window = [ffn_pass_s, 2.0 * ffn_pass_s, ffn_pass_s * re];
+    let frac = (chunks as f64 - 1.0) / chunks as f64;
+    let mut pipelined = 0.0;
+    for (p, (&a2a, &win)) in a2a_phase.iter().zip(window.iter()).enumerate() {
+        let mut hide = (frac * a2a).min(win);
+        if p == PHASE_BWD && s.opts.delay_wgrad {
+            // the delayed wgrad unit re-covers the return half of the
+            // backward a2a; never hide more than the op itself
+            hide = (hide + (0.5 * a2a).min(ffn_pass_s)).min(a2a);
+        }
+        pipelined += hide;
+    }
+    pipelined
 }
 
 /// Overlap-aware batch time: the comm critical path under a nonblocking
@@ -419,8 +521,13 @@ pub struct OverlappedBatchTime {
     /// absorbs (`eff * Σ_phase min(compute_p, max-lane_p)`); the rest
     /// hides behind the other comm lane.
     pub hidden_behind_compute_s: f64,
+    /// Comm hidden *structurally* by the chunked a2a / delayed wgrad
+    /// schedule ([`BatchTime::pipelined_comm_s`], clamped to the hideable
+    /// bound): earned at any efficiency, because the issue order itself
+    /// interleaves expert FFNs with the in-flight chunks.
+    pub pipelined_comm_s: f64,
     /// Comm critical path beyond compute:
-    /// `serialized - eff * hideable`.
+    /// `serialized - pipelined - eff * (hideable - pipelined)`.
     pub critical_comm_s: f64,
 }
 
@@ -493,11 +600,12 @@ pub fn fit_overlap_efficiency(
 /// `critical_s` for the scenario `base` was priced from.
 pub fn fit_overlap_efficiency_phased(base: &BatchTime, critical_s: f64) -> f64 {
     let hideable = hideable_comm_phased_s(base);
-    if hideable <= 0.0 {
+    let pipelined = base.pipelined_comm_s.min(hideable);
+    if hideable - pipelined <= 0.0 {
         return 0.0;
     }
     let hidden = base.compute_s + base.comm_intra_s + base.comm_inter_s - critical_s;
-    (hidden / hideable).clamp(0.0, 1.0)
+    ((hidden - pipelined) / (hideable - pipelined)).clamp(0.0, 1.0)
 }
 
 /// Price a scenario under a nonblocking three-lane schedule: comm can
@@ -526,14 +634,19 @@ pub fn overlap_from_base(base: BatchTime, overlap_efficiency: f64) -> Overlapped
     );
     let serialized = base.comm_intra_s + base.comm_inter_s;
     let hideable = hideable_comm_phased_s(&base);
+    // the chunked-a2a / delayed-wgrad schedule hides its share by
+    // construction (expert k's FFN runs while chunk k+1 flies), so that
+    // slice is earned even at efficiency 0; the knob scales the rest
+    let pipelined = base.pipelined_comm_s.min(hideable);
     let behind_compute: f64 = base.phases.iter().map(|p| p.behind_compute_bound_s()).sum();
-    let critical = serialized - overlap_efficiency * hideable;
+    let critical = serialized - pipelined - overlap_efficiency * (hideable - pipelined);
     OverlappedBatchTime {
         base,
         overlap_efficiency,
         serialized_comm_s: serialized,
         hideable_comm_s: hideable,
         hidden_behind_compute_s: overlap_efficiency * behind_compute,
+        pipelined_comm_s: pipelined,
         critical_comm_s: critical,
     }
 }
@@ -845,6 +958,77 @@ mod tests {
         assert!(avg.alltoall_s > u.alltoall_s);
         assert!(worst.alltoall_s > avg.alltoall_s);
         assert_eq!(worst.allreduce_s, avg.allreduce_s);
+    }
+
+    #[test]
+    fn chunked_a2a_prices_per_chunk_alpha_and_structural_hide() {
+        let opts = CommOpts::optimized().with_strategy(CollectiveStrategy::Hierarchical);
+        let t1 = batch_time(&scenario(opts));
+        let tc = batch_time(&scenario(opts.with_chunks(4)));
+        // chunk count 1 is the exact identity (degenerate case)
+        let t1b = batch_time(&scenario(opts.with_chunks(1)));
+        assert_eq!(t1b.total(), t1.total());
+        assert_eq!(t1b.pipelined_comm_s, 0.0);
+        // K chunks ship the same bytes as K collectives: only the expert
+        // a2a's α-terms grow, every other component is untouched
+        assert!(tc.alltoall_s > t1.alltoall_s);
+        assert_eq!(tc.allreduce_s, t1.allreduce_s);
+        assert_eq!(tc.allgather_s, t1.allgather_s);
+        assert_eq!(tc.compute_s, t1.compute_s);
+        // ...and earns a structural hide the serialized totals ignore
+        assert!(tc.pipelined_comm_s > 0.0);
+        assert!((tc.total() - tc.compute_s - tc.comm_s()).abs() < 1e-12);
+        // at eff 0 the chunked schedule already hides its structural
+        // share; at eff 1 both schedules reach serialized - hideable
+        let o0 = overlap_from_base(tc, 0.0);
+        assert!(o0.critical_comm_s < o0.serialized_comm_s);
+        assert!((o0.serialized_comm_s - o0.critical_comm_s - o0.pipelined_comm_s).abs() < 1e-12);
+        let o1 = overlap_from_base(tc, 1.0);
+        assert!((o1.critical_comm_s - (o0.serialized_comm_s - o0.hideable_comm_s)).abs() < 1e-9);
+        // the fitted knob stays an exact inverse on the chunked model
+        let half = overlap_from_base(tc, 0.5);
+        let eff = fit_overlap_efficiency_phased(&tc, half.total());
+        assert!((eff - 0.5).abs() < 1e-9, "fitted {eff}");
+        // on this comm-heavy workload the chunked critical path beats the
+        // monolithic one at the same mid efficiency (the α surcharge is
+        // far smaller than the structural hide)
+        let u = overlap_from_base(t1, 0.4);
+        let ch = overlap_from_base(tc, 0.4);
+        assert!(
+            ch.critical_comm_s < u.critical_comm_s,
+            "{} vs {}",
+            ch.critical_comm_s,
+            u.critical_comm_s
+        );
+        // delaying wgrad widens the backward window even unchunked
+        let dw = batch_time(&scenario(opts.with_delay_wgrad(true)));
+        assert!(dw.pipelined_comm_s > 0.0);
+        assert_eq!(dw.total(), t1.total(), "delay_wgrad must not change serialized totals");
+        let both = batch_time(&scenario(opts.with_chunks(4).with_delay_wgrad(true)));
+        assert!(both.pipelined_comm_s > tc.pipelined_comm_s);
+    }
+
+    #[test]
+    fn dropless_skew_inflates_the_dtd_allgather_only() {
+        let mk = |dropless: bool, tr| {
+            let mut o = CommOpts::dtd_only().with_traffic(tr).with_dropless(dropless);
+            o.capacity_factor = 1.25;
+            batch_time(&scenario(o))
+        };
+        let z = TrafficSpec::Zipf(1.2);
+        // capacity mode: fixed-size buffers, the reassembly stays uniform
+        let cap_u = mk(false, TrafficSpec::Uniform);
+        let cap_z = mk(false, z);
+        assert_eq!(cap_z.allgather_s, cap_u.allgather_s);
+        assert!(cap_z.alltoall_s > cap_u.alltoall_s);
+        // dropless: the hot rank's demand-sized buffers grow with the skew
+        let dl_u = mk(true, TrafficSpec::Uniform);
+        let dl_z = mk(true, z);
+        assert_eq!(dl_u.allgather_s, cap_u.allgather_s, "uniform dropless is the identity");
+        assert!(dl_z.allgather_s > dl_u.allgather_s);
+        assert_eq!(dl_z.alltoall_s, cap_z.alltoall_s);
+        assert_eq!(dl_z.allreduce_s, cap_z.allreduce_s);
+        assert_eq!(dl_z.compute_s, cap_z.compute_s);
     }
 
     #[test]

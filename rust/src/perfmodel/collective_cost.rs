@@ -237,8 +237,12 @@ pub fn allgather_phased(
                 PhasedCost { intra_s: 0.0, inter_s: t }
             }
         }
-        // all-gather is already leader-aggregated under Hierarchical;
-        // PXN changes nothing here
+        // both hierarchical backends gather to the node leader; they differ
+        // only in the wire's message discipline (the α-term): the plain
+        // hierarchical exchange delivers each node block to all `n-k`
+        // cross-node members individually, while PXN ships one batched
+        // message per peer-node leader (`m-1` messages) and redistributes —
+        // the same bandwidth, strictly fewer inter-node messages
         CollectiveStrategy::Hierarchical | CollectiveStrategy::HierarchicalPxn => {
             let (k, nodes) = node_profile(members, cluster.gpus_per_node);
             if nodes == 1 {
@@ -251,7 +255,13 @@ pub fn allgather_phased(
             // gather + redistribution on the node, block exchange on the wire
             let intra = allgather_s(cluster, intra_shape(k), bytes_per_rank)
                 + allgather_s(cluster, intra_shape(k), (nodes - 1) as f64 * block / k as f64);
-            let inter = allgather_s(cluster, inter_shape(nodes), block);
+            let mut inter = allgather_s(cluster, inter_shape(nodes), block);
+            if strategy == CollectiveStrategy::Hierarchical {
+                // per-member delivery: (n-k) messages instead of PXN's
+                // (m-1) leader batches; allgather_s already charged (m-1)α
+                let alpha = cluster.latency_s(nodes, false);
+                inter += ((n - k) as f64 - (nodes - 1) as f64) * alpha;
+            }
             PhasedCost { intra_s: intra, inter_s: inter }
         }
     }
@@ -468,6 +478,56 @@ pub fn lane_msgs_alltoall(
     }
 }
 
+/// Predicted (intra, inter) **message counts** recorded by rank
+/// `members[my_pos]` for one all-gather. Flat sends the local block to
+/// every peer on its single lane; the hierarchical backends gather to the
+/// node leader (one intra message per non-leader) and the leader
+/// redistributes the remote blocks to its `k-1` node peers. On the wire
+/// the plain hierarchical backend delivers its node block to each of the
+/// `n-k` cross-node members individually, while PXN ships one batched
+/// message per peer-node leader (`m-1`) — the α-term the DTD return path
+/// saves once `tp > gpus_per_node` makes the TP all-gather span nodes.
+pub fn lane_msgs_allgather(
+    strategy: CollectiveStrategy,
+    members: &[usize],
+    my_pos: usize,
+    gpus_per_node: usize,
+    world: usize,
+) -> (u64, u64) {
+    let n = members.len();
+    if n <= 1 {
+        return (0, 0);
+    }
+    let map = NodeMap::new(gpus_per_node);
+    let peers = (n - 1) as u64;
+    match strategy {
+        CollectiveStrategy::Flat => {
+            if map.spans_nodes(world) {
+                (0, peers)
+            } else {
+                (peers, 0)
+            }
+        }
+        CollectiveStrategy::Hierarchical | CollectiveStrategy::HierarchicalPxn => {
+            let plan = NodePlan::build(map, members, my_pos);
+            if plan.n_nodes() == 1 {
+                return (peers, 0);
+            }
+            let k = plan.my_subset().len() as u64;
+            if !plan.is_leader() {
+                return (1, 0);
+            }
+            let m = plan.n_nodes() as u64;
+            let inter = if strategy == CollectiveStrategy::HierarchicalPxn {
+                m - 1
+            } else {
+                n as u64 - k
+            };
+            (k - 1, inter)
+        }
+    }
+}
+
 /// Predicted (intra, inter) bytes recorded by rank `members[my_pos]` for
 /// one all-gather where member `i` contributes `contrib_bytes[i]`.
 pub fn lane_bytes_allgather(
@@ -562,10 +622,21 @@ pub fn peer_weights(spec: TrafficSpec, n_peers: usize, n_experts: usize) -> Vec<
             let e = n_experts.max(1);
             let raw: Vec<f64> = (0..e).map(|i| ((i + 1) as f64).powf(-s)).collect();
             let sum: f64 = raw.iter().sum();
-            let local = (e / n_peers).max(1);
+            // balanced contiguous blocks: peer p hosts `e/n` experts plus
+            // one of the `e % n` remainder experts (sizes differ by at most
+            // one; when e < n the tail peers host none and weigh zero) —
+            // matching data::TrafficModel's per-expert draws instead of
+            // piling every tail expert onto the last peer.
+            let base = e / n_peers;
+            let rem = e % n_peers;
             let mut w = vec![0.0; n_peers];
-            for (i, r) in raw.iter().enumerate() {
-                w[(i / local).min(n_peers - 1)] += r / sum;
+            let mut start = 0usize;
+            for (p, wp) in w.iter_mut().enumerate() {
+                let len = base + usize::from(p < rem);
+                for r in raw.iter().skip(start).take(len) {
+                    *wp += r / sum;
+                }
+                start += len;
             }
             w
         }
@@ -801,6 +872,68 @@ mod tests {
         assert!(pxn_inter_msgs < hier_inter_msgs, "{pxn_inter_msgs} vs {hier_inter_msgs}");
         // single-node job: flat convention
         assert_eq!(lane_msgs_alltoall(CollectiveStrategy::Flat, &members, 0, 0, 4), (3, 0));
+    }
+
+    #[test]
+    fn allgather_pxn_cuts_the_wire_alpha_term_only() {
+        // a TP group of 4 over 2 nodes of 2 (tp > gpus_per_node): the DTD
+        // return path's all-gather spans nodes, and PXN's leader batching
+        // drops the inter α-term from (n-k) to (m-1) messages while the
+        // bandwidth term (and the intra phase) stay identical
+        let mut c = summit();
+        c.gpus_per_node = 2;
+        let members: Vec<usize> = (0..4).collect();
+        let hier = allgather_phased(&c, CollectiveStrategy::Hierarchical, &members, 1e6);
+        let pxn = allgather_phased(&c, CollectiveStrategy::HierarchicalPxn, &members, 1e6);
+        assert_eq!(hier.intra_s, pxn.intra_s);
+        let alpha = c.latency_s(2, false);
+        // n-k = 2 deliveries vs m-1 = 1 batch: exactly one extra α
+        assert!((hier.inter_s - pxn.inter_s - alpha).abs() < 1e-15);
+        assert!(pxn.total() < hier.total());
+        // node-local group (tp <= gpus_per_node): no wire, no difference
+        let local = [0usize, 1];
+        let h2 = allgather_phased(&c, CollectiveStrategy::Hierarchical, &local, 1e6);
+        let p2 = allgather_phased(&c, CollectiveStrategy::HierarchicalPxn, &local, 1e6);
+        assert_eq!(h2.inter_s, 0.0);
+        assert_eq!(h2.intra_s, p2.intra_s);
+        // the predicted message counts mirror the α accounting: equal
+        // bytes by construction, strictly fewer inter messages under PXN
+        assert_eq!(
+            lane_msgs_allgather(CollectiveStrategy::Hierarchical, &members, 0, 2, 4),
+            (1, 2)
+        );
+        assert_eq!(
+            lane_msgs_allgather(CollectiveStrategy::HierarchicalPxn, &members, 0, 2, 4),
+            (1, 1)
+        );
+        assert_eq!(
+            lane_msgs_allgather(CollectiveStrategy::HierarchicalPxn, &members, 1, 2, 4),
+            (1, 0)
+        );
+        assert_eq!(lane_msgs_allgather(CollectiveStrategy::Flat, &members, 0, 2, 4), (0, 3));
+        assert_eq!(lane_msgs_allgather(CollectiveStrategy::Flat, &members, 0, 0, 4), (3, 0));
+    }
+
+    #[test]
+    fn zipf_peer_weights_use_balanced_blocks_on_non_divisible_shapes() {
+        // 6 experts over 4 peers: blocks of sizes [2, 2, 1, 1], so peer 0
+        // holds the two hottest experts — the old clamp piled experts
+        // {3, 4, 5} onto the last peer instead
+        let s = 1.2f64;
+        let raw: Vec<f64> = (0..6).map(|i| ((i + 1) as f64).powf(-s)).collect();
+        let sum: f64 = raw.iter().sum();
+        let w = peer_weights(TrafficSpec::Zipf(s), 4, 6);
+        assert!((w[0] - (raw[0] + raw[1]) / sum).abs() < 1e-12);
+        assert!((w[1] - (raw[2] + raw[3]) / sum).abs() < 1e-12);
+        assert!((w[2] - raw[4] / sum).abs() < 1e-12);
+        assert!((w[3] - raw[5] / sum).abs() < 1e-12);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // fewer experts than peers: one expert per leading peer, the rest
+        // host nothing (weight zero, not a share of the tail)
+        let w = peer_weights(TrafficSpec::Zipf(s), 8, 3);
+        assert!(w[0] > w[1] && w[1] > w[2]);
+        assert!(w[3..].iter().all(|&x| x == 0.0));
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -20,8 +20,8 @@ pub use batch_time::{PHASE_BWD, PHASE_COMPUTE_SPLIT, PHASE_FWD, PHASE_RECOMPUTE}
 pub use collective_cost::{
     allgather_phased, allgather_s, allreduce_phased, allreduce_s, alltoall_phased,
     alltoall_pxn_schedule, alltoall_s, lane_bytes_allgather, lane_bytes_allreduce,
-    lane_bytes_alltoall, lane_bytes_alltoall_pxn, lane_msgs_alltoall, peer_weights,
-    traffic_skew, GroupShape, PhasedCost, TrafficSkew,
+    lane_bytes_alltoall, lane_bytes_alltoall_pxn, lane_msgs_allgather, lane_msgs_alltoall,
+    peer_weights, traffic_skew, GroupShape, PhasedCost, TrafficSkew,
 };
 pub use flops::{
     attn_fwd_flops, ffn_fwd_flops, flops_per_iter, flops_per_iter_checkpointed, head_fwd_flops,

@@ -18,6 +18,7 @@ fn knob_fields(p: &Plan) -> Vec<(&'static str, Json)> {
         ("strategy", Json::str(k.strategy.name())),
         ("gpus_per_node", Json::Num(k.gpus_per_node as f64)),
         ("overlap", Json::Bool(k.overlap)),
+        ("chunked", Json::Bool(k.chunked)),
         ("dtd", Json::Bool(k.dtd)),
         ("cac", Json::Bool(k.cac)),
         ("tile", k.tile.map(|t| Json::Num(t as f64)).unwrap_or(Json::Null)),

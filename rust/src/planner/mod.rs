@@ -83,6 +83,12 @@ pub struct PlanRequest {
     pub capacity_factor: f64,
     pub strategies: Vec<CollectiveStrategy>,
     pub overlap_choices: Vec<bool>,
+    /// Chunked expert all-to-all candidates (`--chunked` adds `true`).
+    /// A chunked point splits the expert a2a into one chunk per local
+    /// expert and delays the wgrad pass-unit; it is only searched with
+    /// overlap on (chunking exists to hide latency, so a serialized
+    /// chunked schedule is strictly dominated and pruned).
+    pub chunked_choices: Vec<bool>,
     pub cac_choices: Vec<bool>,
     /// Optimizer tiling candidates: `Some(tile)` tiled, `None` untiled.
     pub tile_choices: Vec<Option<usize>>,
@@ -118,6 +124,7 @@ impl PlanRequest {
             capacity_factor: 1.25,
             strategies: ALL_STRATEGIES.to_vec(),
             overlap_choices: vec![true, false],
+            chunked_choices: vec![false],
             cac_choices: vec![true, false],
             tile_choices: vec![Some(DEFAULT_TILE), None],
             micro_batch_choices: vec![1],
@@ -137,6 +144,9 @@ pub struct PlanKnobs {
     /// cluster's physical node size.
     pub gpus_per_node: usize,
     pub overlap: bool,
+    /// Chunked expert a2a + delayed wgrad (the batch-level overlap pair);
+    /// only emitted alongside `overlap`.
+    pub chunked: bool,
     pub dtd: bool,
     pub cac: bool,
     pub tile: Option<usize>,
@@ -155,6 +165,8 @@ impl PlanKnobs {
             strategy: self.strategy,
             gpus_per_node: self.gpus_per_node,
             overlap: self.overlap,
+            chunked_a2a: self.chunked,
+            delay_wgrad: self.chunked,
             ..EngineOptions::default()
         }
     }
@@ -162,8 +174,10 @@ impl PlanKnobs {
     /// Canonical tie-break order: smaller tp first (less tensor-parallel
     /// comm at equal price), then larger ep (less expert-parameter
     /// replication), transport in CLI-listing order, overlap-on before
-    /// off, CAC-on before off, tiled before untiled, smaller micro-batch.
-    pub fn rank_key(&self) -> (usize, usize, usize, bool, bool, bool, usize) {
+    /// off, unchunked before chunked (at equal price the simpler
+    /// monolithic schedule wins), CAC-on before off, tiled before
+    /// untiled, smaller micro-batch.
+    pub fn rank_key(&self) -> (usize, usize, usize, bool, bool, bool, bool, usize) {
         let strat = ALL_STRATEGIES
             .iter()
             .position(|s| *s == self.strategy)
@@ -173,6 +187,7 @@ impl PlanKnobs {
             self.par.dp_exp, // larger ep == smaller dp_exp first
             strat,
             !self.overlap,
+            self.chunked,
             !self.cac,
             self.tile.is_none(),
             self.micro_batch,
@@ -181,12 +196,13 @@ impl PlanKnobs {
 
     pub fn describe(&self) -> String {
         format!(
-            "tp{} ep{} dp_exp{} {} overlap={} cac={} tile={} micro={}",
+            "tp{} ep{} dp_exp{} {} overlap={} chunked={} cac={} tile={} micro={}",
             self.par.tp,
             self.par.ep,
             self.par.dp_exp,
             self.strategy.name(),
             self.overlap,
+            self.chunked,
             self.cac,
             self.tile.map(|t| t.to_string()).unwrap_or_else(|| "off".into()),
             self.micro_batch
@@ -336,6 +352,10 @@ pub fn scenario_for(req: &PlanRequest, knobs: &PlanKnobs) -> Scenario {
             capacity_factor: req.capacity_factor,
             strategy: knobs.strategy,
             traffic: req.traffic,
+            // one chunk per local expert, exactly what the engine executes
+            a2a_chunks: if knobs.chunked { (req.n_experts / knobs.par.ep).max(1) } else { 1 },
+            delay_wgrad: knobs.chunked,
+            dropless: false,
         },
     }
 }
@@ -403,6 +423,7 @@ pub fn plan(req: &PlanRequest) -> PlanReport {
                     strategy: st,
                     gpus_per_node: node,
                     overlap: true,
+                    chunked: false,
                     dtd: true,
                     cac: true,
                     tile: req.tile_choices.first().copied().unwrap_or(Some(DEFAULT_TILE)),
@@ -446,6 +467,7 @@ pub fn plan(req: &PlanRequest) -> PlanReport {
                                         strategy: CollectiveStrategy::Flat,
                                         gpus_per_node: flat_gpn,
                                         overlap: true,
+                                        chunked: false,
                                         dtd: true,
                                         cac,
                                         tile,
@@ -458,38 +480,48 @@ pub fn plan(req: &PlanRequest) -> PlanReport {
                             Ok(v) => v,
                         };
                         for &(st, gpn) in &strategies {
-                            // price the serialized base once per point:
-                            // the overlap on/off twins differ only in
-                            // the efficiency knob applied to it
-                            let point = PlanKnobs {
-                                par,
-                                strategy: st,
-                                gpus_per_node: gpn,
-                                overlap: true,
-                                dtd: true,
-                                cac,
-                                tile,
-                                micro_batch: micro,
-                            };
-                            let sc = scenario_for(req, &point);
-                            let base = batch_time(&sc);
-                            // worst-step pricing only differs for bursty
-                            // traffic (zipf/uniform skew is stationary)
-                            let worst_base = match req.traffic {
-                                TrafficSpec::Bursty(_) => batch_time_worst_traffic(&sc),
-                                _ => base,
-                            };
-                            for &ov in &req.overlap_choices {
-                                let knobs = PlanKnobs { overlap: ov, ..point };
-                                let eff = if ov { req.overlap_efficiency } else { 0.0 };
-                                plans.push(Plan {
-                                    knobs,
-                                    time: overlap_from_base(base, eff),
-                                    worst_time: overlap_from_base(worst_base, eff),
-                                    mem_peak_phase: peak_phase,
-                                    mem_peak_bytes: peak_bytes,
-                                    mem_budget_bytes: budget,
-                                });
+                            for &ch in &req.chunked_choices {
+                                // price the serialized base once per
+                                // (transport, chunking) point: the
+                                // overlap on/off twins differ only in
+                                // the efficiency knob applied to it
+                                let point = PlanKnobs {
+                                    par,
+                                    strategy: st,
+                                    gpus_per_node: gpn,
+                                    overlap: true,
+                                    chunked: ch,
+                                    dtd: true,
+                                    cac,
+                                    tile,
+                                    micro_batch: micro,
+                                };
+                                let sc = scenario_for(req, &point);
+                                let base = batch_time(&sc);
+                                // worst-step pricing only differs for
+                                // bursty traffic (zipf/uniform skew is
+                                // stationary)
+                                let worst_base = match req.traffic {
+                                    TrafficSpec::Bursty(_) => batch_time_worst_traffic(&sc),
+                                    _ => base,
+                                };
+                                for &ov in &req.overlap_choices {
+                                    // a serialized chunked schedule pays
+                                    // the α-term for nothing: prune it
+                                    if ch && !ov {
+                                        continue;
+                                    }
+                                    let knobs = PlanKnobs { overlap: ov, ..point };
+                                    let eff = if ov { req.overlap_efficiency } else { 0.0 };
+                                    plans.push(Plan {
+                                        knobs,
+                                        time: overlap_from_base(base, eff),
+                                        worst_time: overlap_from_base(worst_base, eff),
+                                        mem_peak_phase: peak_phase,
+                                        mem_peak_bytes: peak_bytes,
+                                        mem_budget_bytes: budget,
+                                    });
+                                }
                             }
                         }
                     }
@@ -536,6 +568,7 @@ mod tests {
             strategy: CollectiveStrategy::Flat,
             gpus_per_node: 0,
             overlap,
+            chunked: false,
             dtd: true,
             cac,
             tile: Some(DEFAULT_TILE),
@@ -544,6 +577,9 @@ mod tests {
         assert!(mk(4, true, true).rank_key() < mk(8, true, true).rank_key());
         assert!(mk(4, true, true).rank_key() < mk(4, false, true).rank_key());
         assert!(mk(4, true, true).rank_key() < mk(4, true, false).rank_key());
+        // at equal price the monolithic schedule outranks the chunked one
+        let chunked = PlanKnobs { chunked: true, ..mk(4, true, true) };
+        assert!(mk(4, true, true).rank_key() < chunked.rank_key());
     }
 
     #[test]

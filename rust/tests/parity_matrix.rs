@@ -98,6 +98,13 @@ struct Combo {
     gpn: usize,
     dtd: bool,
     overlap: bool,
+    /// Chunked expert a2a: one chunk per local expert, hottest first.
+    chunked: bool,
+}
+
+/// Shorthand for the historical (unchunked) combos.
+fn combo(strategy: CollectiveStrategy, gpn: usize, dtd: bool, overlap: bool) -> Combo {
+    Combo { strategy, gpn, dtd, overlap, chunked: false }
 }
 
 /// Run STEPS toy MoE "training steps" (route -> dispatch -> expert
@@ -115,7 +122,7 @@ fn run_toy_loaded(
     combo: Combo,
     load: Workload,
 ) -> (Vec<RankTrace>, CommStats) {
-    let Combo { strategy, gpn, dtd, overlap } = combo;
+    let Combo { strategy, gpn, dtd, overlap, chunked } = combo;
     let world = tp * ep * dp_exp;
     let topo = Topology::new(ParallelConfig::derive(world, tp, ep).unwrap()).unwrap();
     let rez = Rendezvous::new(world);
@@ -155,6 +162,8 @@ fn run_toy_loaded(
                                 tp_pos,
                                 dtd,
                                 overlap,
+                                chunked,
+                                chunk_compute_s: 0.0,
                             };
                             dispatch(&mut ctx, &rows, &dec, local_experts)
                         };
@@ -182,6 +191,8 @@ fn run_toy_loaded(
                                 tp_pos,
                                 dtd,
                                 overlap,
+                                chunked,
+                                chunk_compute_s: 0.0,
                             };
                             return_to_origin(&mut ctx, &outs, &disp, &dec, local_experts)
                         };
@@ -222,22 +233,22 @@ fn run_toy_loaded(
 fn combos() -> Vec<Combo> {
     let mut out = Vec::new();
     for overlap in [false, true] {
-        out.push(Combo { strategy: CollectiveStrategy::Flat, gpn: 0, dtd: false, overlap });
-        out.push(Combo { strategy: CollectiveStrategy::Flat, gpn: 0, dtd: true, overlap });
-        out.push(Combo { strategy: CollectiveStrategy::Flat, gpn: 2, dtd: false, overlap });
+        out.push(combo(CollectiveStrategy::Flat, 0, false, overlap));
+        out.push(combo(CollectiveStrategy::Flat, 0, true, overlap));
+        out.push(combo(CollectiveStrategy::Flat, 2, false, overlap));
         for strategy in
             [CollectiveStrategy::Hierarchical, CollectiveStrategy::HierarchicalPxn]
         {
-            out.push(Combo { strategy, gpn: 2, dtd: false, overlap });
-            out.push(Combo { strategy, gpn: 2, dtd: true, overlap });
-            out.push(Combo { strategy, gpn: 4, dtd: true, overlap });
+            out.push(combo(strategy, 2, false, overlap));
+            out.push(combo(strategy, 2, true, overlap));
+            out.push(combo(strategy, 4, true, overlap));
         }
     }
     out
 }
 
 fn reference_combo() -> Combo {
-    Combo { strategy: CollectiveStrategy::Flat, gpn: 0, dtd: false, overlap: false }
+    combo(CollectiveStrategy::Flat, 0, false, false)
 }
 
 #[test]
@@ -304,19 +315,52 @@ fn parity_matrix_extends_over_routing_mode_and_traffic() {
     }
 }
 
+/// The chunked-a2a acceptance matrix: splitting the expert all-to-all
+/// into per-local-expert chunks (hottest expert's rows on the wire first)
+/// is a pure schedule change — every transport, with and without DTD,
+/// under uniform and Zipf-skewed traffic, must stay bitwise identical to
+/// the monolithic blocking reference. The (2, 4, 1) grid point has one
+/// local expert per EP rank, pinning the degenerate single-chunk
+/// schedule to the same invariant.
+#[test]
+fn parity_matrix_chunked_a2a_bitwise_identical() {
+    let loads = [
+        Workload::top1_uniform(),
+        Workload { dropless: false, traffic: TrafficSpec::Zipf(1.2) },
+        Workload { dropless: true, traffic: TrafficSpec::Zipf(1.2) },
+    ];
+    // (2, 2, 1): two local experts per EP rank -> genuinely chunked;
+    // (2, 4, 1): one local expert -> the degenerate one-chunk schedule
+    let grid = [(2usize, 2usize, 1usize), (2, 4, 1)];
+    for load in loads {
+        for &(tp, ep, dp_exp) in &grid {
+            let (reference, _) = run_toy_loaded(tp, ep, dp_exp, reference_combo(), load);
+            for (strategy, gpn) in [
+                (CollectiveStrategy::Flat, 0usize),
+                (CollectiveStrategy::Hierarchical, 2),
+                (CollectiveStrategy::HierarchicalPxn, 2),
+            ] {
+                for dtd in [false, true] {
+                    let c = Combo { chunked: true, ..combo(strategy, gpn, dtd, false) };
+                    let (got, _) = run_toy_loaded(tp, ep, dp_exp, c, load);
+                    assert_eq!(
+                        reference, got,
+                        "chunked diverged at tp={tp} ep={ep} dp_exp={dp_exp} {c:?} {load:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// The transport acceptance scenario: a simulated 2-node job (G=8, tp=2,
 /// ep=2, 4 GPUs per node). TED placement keeps the EP all-to-all inside a
 /// node; only the topology-aware backends can see (and report) that.
 #[test]
 fn hierarchical_reports_strictly_fewer_inter_node_a2a_bytes() {
-    let (flat_trace, f) = run_toy(
-        2, 2, 2,
-        Combo { strategy: CollectiveStrategy::Flat, gpn: 4, dtd: false, overlap: false },
-    );
-    let (hier_trace, h) = run_toy(
-        2, 2, 2,
-        Combo { strategy: CollectiveStrategy::Hierarchical, gpn: 4, dtd: false, overlap: false },
-    );
+    let (flat_trace, f) = run_toy(2, 2, 2, combo(CollectiveStrategy::Flat, 4, false, false));
+    let (hier_trace, h) =
+        run_toy(2, 2, 2, combo(CollectiveStrategy::Hierarchical, 4, false, false));
     // bitwise-identical results...
     assert_eq!(flat_trace, hier_trace);
     // ...same total volume...
@@ -336,16 +380,10 @@ fn hierarchical_reports_strictly_fewer_inter_node_a2a_bytes() {
 
     // with 2-GPU nodes the EP groups genuinely span nodes: the inter lane
     // is nonzero but still strictly below the flat attribution
-    let (_, s) = run_toy(
-        2, 2, 2,
-        Combo { strategy: CollectiveStrategy::Hierarchical, gpn: 2, dtd: true, overlap: false },
-    );
+    let (_, s) = run_toy(2, 2, 2, combo(CollectiveStrategy::Hierarchical, 2, true, false));
     assert_eq!(s.intra_bytes + s.inter_bytes, s.bytes);
     assert!(s.inter_bytes > 0);
-    let (_, flat2) = run_toy(
-        2, 2, 2,
-        Combo { strategy: CollectiveStrategy::Flat, gpn: 2, dtd: true, overlap: false },
-    );
+    let (_, flat2) = run_toy(2, 2, 2, combo(CollectiveStrategy::Flat, 2, true, false));
     assert_eq!(flat2.inter_bytes, flat2.bytes);
     assert!(s.inter_bytes <= flat2.inter_bytes);
 }
@@ -357,10 +395,8 @@ fn hierarchical_reports_strictly_fewer_inter_node_a2a_bytes() {
 /// bitwise-identical training results.
 #[test]
 fn pxn_cuts_inter_node_messages_at_equal_bytes() {
-    let hier =
-        Combo { strategy: CollectiveStrategy::Hierarchical, gpn: 4, dtd: false, overlap: false };
-    let pxn =
-        Combo { strategy: CollectiveStrategy::HierarchicalPxn, gpn: 4, dtd: false, overlap: false };
+    let hier = combo(CollectiveStrategy::Hierarchical, 4, false, false);
+    let pxn = combo(CollectiveStrategy::HierarchicalPxn, 4, false, false);
     let (h_trace, h) = run_toy(2, 4, 1, hier);
     let (p_trace, p) = run_toy(2, 4, 1, pxn);
     assert_eq!(h_trace, p_trace, "PXN must not change a single bit");

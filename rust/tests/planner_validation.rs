@@ -18,7 +18,7 @@ use ted::collectives::CollectiveStrategy;
 use ted::config::{model, ClusterConfig, ModelConfig};
 use ted::memory::MemoryModel;
 use ted::perfmodel::{batch_time, fit_overlap_efficiency_phased};
-use ted::planner::{plan, DEFAULT_TILE, PlanReport, PlanRequest, RejectReason};
+use ted::planner::{plan, DEFAULT_TILE, PlanKnobs, PlanReport, PlanRequest, RejectReason};
 use ted::sim::replay_scenario;
 use ted::util::cli::TrafficSpec;
 
@@ -338,6 +338,74 @@ fn skewed_traffic_reranks_the_toy_grid() {
             assert_eq!(p.worst_total_s(), p.total_s());
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// chunked a2a: the planner prices the chunked schedule's hidden tail and
+// re-ranks toward it under skewed multi-node traffic
+// ---------------------------------------------------------------------
+
+#[test]
+fn chunked_plans_cut_critical_comm_and_win_the_skewed_ranking() {
+    // 6.7B x 16e on 128 ThetaGPU GPUs (16 nodes): every transport is in
+    // the space. With --chunked the search adds a chunked twin for every
+    // overlap-on point; under zipf:1.2 the chunked schedule's pipelined
+    // hide dwarfs its α-surcharge, so each wide-EP twin must price its
+    // critical-path comm strictly below the monolithic plan and the
+    // ranking must move toward the chunked schedule.
+    let mut req = PlanRequest::new(
+        model::table1_by_name("6.7B").unwrap(),
+        16,
+        128,
+        ClusterConfig::thetagpu(),
+        1024,
+    );
+    req.traffic = TrafficSpec::Zipf(1.2);
+    req.overlap_choices = vec![true];
+    req.chunked_choices = vec![false, true];
+    let report = plan(&req);
+    assert!(report.plans.len() >= 9, "want a real grid, got {}", report.plans.len());
+
+    let twin_of = |u: &ted::planner::Plan| {
+        report
+            .plans
+            .iter()
+            .find(|p| p.knobs.chunked && PlanKnobs { chunked: false, ..p.knobs } == u.knobs)
+            .unwrap_or_else(|| panic!("{}: missing chunked twin", u.knobs.describe()))
+    };
+    let mut checked = 0;
+    for u in report.plans.iter().filter(|p| !p.knobs.chunked) {
+        let twin = twin_of(u);
+        if u.knobs.par.ep > 1 {
+            assert!(
+                twin.time.critical_comm_s < u.time.critical_comm_s,
+                "{}: chunked critical comm {} !< {}",
+                u.knobs.describe(),
+                twin.time.critical_comm_s,
+                u.time.critical_comm_s
+            );
+            assert!(twin.total_s() < u.total_s(), "{}", u.knobs.describe());
+            // serialized totals are never cheated: the chunked twin pays
+            // the α-surcharge up front, the win is pure hidden-tail credit
+            assert!(twin.time.serialized_comm_s >= u.time.serialized_comm_s);
+            checked += 1;
+        } else {
+            // no expert a2a to chunk: the twin prices identically and the
+            // canonical tie-break keeps the monolithic plan first
+            assert_eq!(twin.total_s(), u.total_s(), "{}", u.knobs.describe());
+        }
+    }
+    assert!(checked > 0, "no ep > 1 twin pair in the grid");
+
+    // the ranking moves: the fastest wide-EP plan is a chunked one (its
+    // monolithic twin is strictly slower, so a monolithic plan can only
+    // lead the table from the chunking-immune ep=1 column)
+    let best_wide = report.plans.iter().find(|p| p.knobs.par.ep > 1).unwrap();
+    assert!(
+        best_wide.knobs.chunked,
+        "best wide-EP plan must be chunked: {}",
+        best_wide.knobs.describe()
+    );
 }
 
 #[test]

@@ -17,7 +17,7 @@ use ted::collectives::{ALL_STRATEGIES, CollectiveStrategy, CommKind, Communicato
 use ted::config::{model, ClusterConfig, ParallelConfig};
 use ted::data::TrafficModel;
 use ted::perfmodel::{
-    batch_time, lane_bytes_alltoall, lane_bytes_alltoall_pxn, CommOpts, Scenario,
+    batch_time, lane_bytes_alltoall, lane_bytes_alltoall_pxn, peer_weights, CommOpts, Scenario,
 };
 use ted::sim::replay_scenario;
 use ted::topology::{GroupId, GroupKind};
@@ -167,4 +167,80 @@ fn skewed_scenario_replays_at_the_analytic_price() {
     let (mu, mz) = (measured[0], measured[1]);
     assert!(mz.serialized_s > mu.serialized_s, "measured comm must inflate under zipf");
     assert!((mz.compute_s - mu.compute_s).abs() < 1e-12 * mu.compute_s.max(1.0));
+}
+
+#[test]
+fn analytic_peer_weights_match_measured_routing_fractions() {
+    // non-divisible shape: 6 experts over 4 peers -> balanced contiguous
+    // blocks of sizes [2, 2, 1, 1]. The analytic `peer_weights` must match
+    // the per-peer fractions the TrafficModel actually routes (the
+    // remainder-expert bugfix: the old layout piled every tail expert
+    // onto the last peer).
+    const E: usize = 6;
+    const PEERS: usize = 4;
+    const DRAWS: usize = 20_000;
+    let tm = TrafficModel::new(TrafficSpec::Zipf(1.2), 11);
+    // peer_weights ranks popularity from expert 0; pick a step whose
+    // rotating hot expert is 0 so the two orderings coincide
+    let step = (0..256)
+        .find(|&s| tm.hot_expert(s, E) == 0)
+        .expect("a hot-expert-0 step in the first 256");
+    let mut counts = [0usize; PEERS];
+    for dp in 0..200 {
+        for t in 0..(DRAWS / 200) {
+            let e = tm.pick_expert(step, 0, dp, t, E);
+            // the same balanced blocks: [0,1] [2,3] [4] [5]
+            let peer = if e < 4 { e / 2 } else { e - 2 };
+            counts[peer] += 1;
+        }
+    }
+    let w = peer_weights(TrafficSpec::Zipf(1.2), PEERS, E);
+    assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    for p in 0..PEERS {
+        let measured = counts[p] as f64 / DRAWS as f64;
+        assert!(
+            (measured - w[p]).abs() < 0.02,
+            "peer {p}: measured {measured:.4} vs analytic {:.4}",
+            w[p]
+        );
+    }
+}
+
+#[test]
+fn chunked_scenario_replays_at_the_analytic_price() {
+    let m = model::executable("tiny").unwrap();
+    let cluster = ClusterConfig::perlmutter();
+    let par = ParallelConfig::derive(8, 1, 4).unwrap();
+    let mk = |chunks: usize| Scenario {
+        model: m.clone(),
+        n_experts: 4,
+        par,
+        cluster: cluster.clone(),
+        global_batch: 64,
+        opts: CommOpts::optimized()
+            .with_strategy(CollectiveStrategy::Hierarchical)
+            .with_traffic(TrafficSpec::Zipf(1.2))
+            .with_chunks(chunks)
+            .with_delay_wgrad(chunks > 1),
+    };
+    let mono = mk(1);
+    let chunked = mk(4);
+    // chunking never changes the serialized bytes, only the α-term: the
+    // chunked expert a2a prices strictly above the monolithic one while
+    // compute is untouched
+    let (tm_, tc) = (batch_time(&mono), batch_time(&chunked));
+    assert!(tc.alltoall_s > tm_.alltoall_s, "chunking must add α-terms");
+    assert_eq!(tc.compute_s, tm_.compute_s);
+    // ...and a blocking replay of the chunked schedule still lands on the
+    // analytic total: measured == analytic holds chunk by chunk under skew
+    for s in [&mono, &chunked] {
+        let analytic = batch_time(s).total();
+        let t = replay_scenario(s, cluster.gpus_per_node, false).unwrap();
+        assert!(
+            (t.critical_s - analytic).abs() <= 2e-3 * analytic,
+            "chunks={}: measured {} vs analytic {analytic}",
+            s.opts.a2a_chunks,
+            t.critical_s
+        );
+    }
 }
