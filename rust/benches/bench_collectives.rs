@@ -179,6 +179,39 @@ fn bench_alltoall_phase_split(
     });
 }
 
+/// Shard contention: every rank hammers all-reduces across several
+/// rotating groups at once, on a rendezvous with `shards` lock stripes.
+/// `shards = 1` is the legacy single-`Mutex<State>` substrate; the
+/// striped default spreads the slot map over independent locks so
+/// unrelated groups stop serializing on one mutex.
+fn bench_shard_contention(world: usize, iters: u32, shards: usize, tag: &str) {
+    let iters = bench::iters(iters);
+    let name = format!("rendezvous/contention/world{world}/{tag}");
+    let rez = Rendezvous::with_shards(world, shards);
+    let len = 64;
+    std::thread::scope(|s| {
+        for rank in 1..world {
+            let rez = Arc::clone(&rez);
+            s.spawn(move || {
+                let members: Vec<usize> = (0..world).collect();
+                let mut comm = Communicator::new(rez, rank);
+                let mut t = Tensor::from_vec(&[len], vec![rank as f32; len]);
+                for i in 0..(iters as usize + 3) {
+                    comm.all_reduce(gid(5 + i % 7), &members, &mut t);
+                }
+            });
+        }
+        let members: Vec<usize> = (0..world).collect();
+        let mut comm = Communicator::new(Arc::clone(&rez), 0);
+        let mut t = Tensor::from_vec(&[len], vec![0.5; len]);
+        let mut i = 0usize;
+        bench::run(&name, 3, iters, || {
+            comm.all_reduce(gid(5 + i % 7), &members, &mut t);
+            i += 1;
+        });
+    });
+}
+
 fn main() {
     println!("# bench_collectives — functional rendezvous collectives");
     println!("## flat transport");
@@ -204,6 +237,11 @@ fn main() {
         let gpn = if strategy == CollectiveStrategy::Flat { 0 } else { 4 };
         bench_allreduce_nonblocking_pair(8, 65_536, 50, strategy, gpn);
         bench_alltoall_phase_split(8, 64, 64, 100, strategy, gpn);
+    }
+    println!("## rendezvous shard contention (single lock vs striped)");
+    for world in [8, 16] {
+        bench_shard_contention(world, 100, 1, "single-lock");
+        bench_shard_contention(world, 100, 64, "sharded64");
     }
     bench::write_smoke_snapshot("bench_collectives").expect("write BENCH_smoke.json");
 }

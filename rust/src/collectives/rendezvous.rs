@@ -43,6 +43,17 @@
 //!   Results stay bitwise identical; only lane/message attribution and
 //!   modeled time change.
 //!
+//! ## Concurrency substrate
+//!
+//! The slot map is lock-striped ([`Rendezvous::with_shards`]): a slot
+//! key hashes to one of N independent `Mutex` + `Condvar` shards, so
+//! collectives on unrelated slots never contend and a deposit wakes only
+//! its own shard. Pickups are zero-copy where a payload has exactly one
+//! reader (all-to-all columns, PXN frames move out of the slot) and
+//! `Arc`-shared where every member reads the same result (all-reduce
+//! sums, assembled all-gathers). See the crate docs ("Rendezvous
+//! concurrency") for why bitwise parity is unaffected.
+//!
 //! ## Modeled time
 //!
 //! When a cost model is attached ([`Communicator::set_cost_model`]),
@@ -56,6 +67,7 @@
 //! which collectives hide behind compute.
 
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -68,8 +80,25 @@ use crate::perfmodel::collective_cost::{
 use crate::topology::GroupId;
 use crate::util::tensor::Tensor;
 
-/// How long a rank waits on peers before declaring the program deadlocked.
-const DEADLOCK_TIMEOUT: Duration = Duration::from_secs(120);
+/// How long a rank waits on peers before declaring the program
+/// deadlocked. `TED_DEADLOCK_TIMEOUT` (seconds, fractional allowed)
+/// overrides the 120 s default, so deadlock-path tests fail in
+/// milliseconds instead of burning two minutes per failure.
+fn deadlock_timeout() -> Duration {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static CACHED_MS: AtomicU64 = AtomicU64::new(0);
+    let mut ms = CACHED_MS.load(Ordering::Relaxed);
+    if ms == 0 {
+        ms = std::env::var("TED_DEADLOCK_TIMEOUT")
+            .ok()
+            .and_then(|v| v.trim().parse::<f64>().ok())
+            .filter(|s| s.is_finite() && *s > 0.0)
+            .map(|s| ((s * 1000.0).ceil() as u64).max(1))
+            .unwrap_or(120_000);
+        CACHED_MS.store(ms, Ordering::Relaxed);
+    }
+    Duration::from_millis(ms)
+}
 
 /// One member's payload in a collective.
 type Payload = Vec<f32>;
@@ -91,24 +120,62 @@ fn ptag(phase: u32, ord: usize) -> u32 {
 
 /// Per-op state. `contributions[i]` is member i's deposit: a vector of
 /// payloads (one per destination for all-to-all; a single payload for the
-/// other ops). `reduced` caches the all-reduce result.
+/// other ops). `reduced` caches the all-reduce result and `gathered` the
+/// assembled all-gather result, so every pickup after the first shares
+/// one allocation instead of re-cloning row data.
 struct Slot {
     contributions: Vec<Option<Payloads>>,
     kind: CommKind,
     arrived: usize,
     taken: usize,
     reduced: Option<Arc<Vec<f32>>>,
+    gathered: Option<Arc<Payloads>>,
 }
 
-#[derive(Default)]
-struct State {
-    slots: HashMap<SlotKey, Slot>,
+/// One lock stripe of the slot map: an independent mutex *and* condvar,
+/// so a deposit wakes only waiters whose keys hash to this stripe.
+struct Shard {
+    slots: Mutex<HashMap<SlotKey, Slot>>,
+    cv: Condvar,
+}
+
+/// Default stripe count (see [`Rendezvous::with_shards`]): enough that
+/// 64+ simulated ranks working disjoint groups rarely collide, small
+/// enough that the per-stripe overhead stays negligible.
+const DEFAULT_SHARDS: usize = 64;
+
+/// Deadlock diagnostics: the arrived count plus *which* member positions
+/// never deposited (all of them, if the slot was never created).
+fn deadlock_report(slots: &HashMap<SlotKey, Slot>, key: SlotKey, n: usize, desc: &str) -> String {
+    let (got, missing): (usize, Vec<usize>) = match slots.get(&key) {
+        Some(s) => (
+            s.arrived,
+            s.contributions
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.is_none())
+                .map(|(i, _)| i)
+                .collect(),
+        ),
+        None => (0, (0..n).collect()),
+    };
+    format!(
+        "collective deadlock: {desc} \
+         (only {got} of {n} ranks arrived; missing member positions {missing:?})"
+    )
 }
 
 /// Shared rendezvous for one simulated job.
+///
+/// The slot map is **lock-striped**: a key hashes to one of N shards,
+/// each holding its own `Mutex<HashMap>` + `Condvar`. Deposits, waits
+/// and takes on unrelated slots never contend, and a deposit's
+/// `notify_all` wakes only its own shard's waiters instead of the whole
+/// world. Matching semantics are untouched — a slot lives entirely in
+/// one shard, and per-slot operations hold that shard's lock exactly as
+/// they used to hold the global lock.
 pub struct Rendezvous {
-    state: Mutex<State>,
-    cv: Condvar,
+    shards: Box<[Shard]>,
     pub stats: StatsBoard,
     pub timeline: TimelineBoard,
     world: usize,
@@ -116,9 +183,18 @@ pub struct Rendezvous {
 
 impl Rendezvous {
     pub fn new(world: usize) -> Arc<Self> {
+        Self::with_shards(world, DEFAULT_SHARDS)
+    }
+
+    /// Build with an explicit stripe count. `with_shards(world, 1)` is
+    /// the historical single-lock substrate — kept constructible so the
+    /// contention bench can measure the striping win.
+    pub fn with_shards(world: usize, n_shards: usize) -> Arc<Self> {
+        let n = n_shards.max(1);
         Arc::new(Rendezvous {
-            state: Mutex::new(State::default()),
-            cv: Condvar::new(),
+            shards: (0..n)
+                .map(|_| Shard { slots: Mutex::new(HashMap::new()), cv: Condvar::new() })
+                .collect(),
             stats: StatsBoard::new(world),
             timeline: TimelineBoard::new(world),
             world,
@@ -127,6 +203,16 @@ impl Rendezvous {
 
     pub fn world(&self) -> usize {
         self.world
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard(&self, key: &SlotKey) -> &Shard {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
     }
 
     /// Deposit a contribution without waiting for peers (the issue side of
@@ -140,13 +226,15 @@ impl Rendezvous {
         payloads: Payloads,
         desc: &str,
     ) {
-        let mut st = self.state.lock().unwrap();
-        let slot = st.slots.entry(key).or_insert_with(|| Slot {
+        let sh = self.shard(&key);
+        let mut slots = sh.slots.lock().unwrap();
+        let slot = slots.entry(key).or_insert_with(|| Slot {
             contributions: vec![None; n],
             kind,
             arrived: 0,
             taken: 0,
             reduced: None,
+            gathered: None,
         });
         assert_eq!(
             slot.kind, kind,
@@ -157,27 +245,22 @@ impl Rendezvous {
         assert!(slot.contributions[my_pos].is_none(), "double deposit at {desc}");
         slot.contributions[my_pos] = Some(payloads);
         slot.arrived += 1;
-        self.cv.notify_all();
+        sh.cv.notify_all();
     }
 
     /// Block until `n` members have deposited into `key` (the wait side).
     fn wait_full(&self, key: SlotKey, n: usize, desc: &str) {
-        let mut st = self.state.lock().unwrap();
-        let deadline = std::time::Instant::now() + DEADLOCK_TIMEOUT;
-        while st.slots.get(&key).map(|s| s.arrived).unwrap_or(0) < n {
+        let sh = self.shard(&key);
+        let mut slots = sh.slots.lock().unwrap();
+        let deadline = std::time::Instant::now() + deadlock_timeout();
+        while slots.get(&key).map(|s| s.arrived).unwrap_or(0) < n {
             let remaining = deadline
                 .checked_duration_since(std::time::Instant::now())
-                .unwrap_or_else(|| {
-                    panic!(
-                        "collective deadlock: {desc} (only {} of {n} ranks arrived)",
-                        st.slots.get(&key).map(|s| s.arrived).unwrap_or(0)
-                    )
-                });
-            let (g, timeout) = self.cv.wait_timeout(st, remaining).unwrap();
-            st = g;
-            if timeout.timed_out() {
-                let got = st.slots.get(&key).map(|s| s.arrived).unwrap_or(0);
-                panic!("collective deadlock: {desc} (only {got} of {n} ranks arrived)");
+                .unwrap_or_else(|| panic!("{}", deadlock_report(&slots, key, n, desc)));
+            let (g, timeout) = sh.cv.wait_timeout(slots, remaining).unwrap();
+            slots = g;
+            if timeout.timed_out() && slots.get(&key).map(|s| s.arrived).unwrap_or(0) < n {
+                panic!("{}", deadlock_report(&slots, key, n, desc));
             }
         }
     }
@@ -200,12 +283,13 @@ impl Rendezvous {
     /// Read out this rank's result; the closure maps the complete slot to
     /// the local result. The slot is freed after `n_takes` reads.
     fn take<R>(&self, key: SlotKey, n_takes: usize, f: impl FnOnce(&mut Slot) -> R) -> R {
-        let mut st = self.state.lock().unwrap();
-        let slot = st.slots.get_mut(&key).expect("slot vanished before pickup");
+        let sh = self.shard(&key);
+        let mut slots = sh.slots.lock().unwrap();
+        let slot = slots.get_mut(&key).expect("slot vanished before pickup");
         let out = f(slot);
         slot.taken += 1;
         if slot.taken == n_takes {
-            st.slots.remove(&key);
+            slots.remove(&key);
         }
         out
     }
@@ -606,10 +690,11 @@ impl Communicator {
             self.rez.deposit(key, CommKind::Broadcast, pos, n, vec![],
                 &format!("broadcast g={gid:?} seq={seq}"));
         }
-        let result = self.rez.take(key, n, |slot| {
-            slot.contributions[root_pos].as_ref().expect("root missing")[0].clone()
+        // copy straight out of the slot borrow — no intermediate clone
+        self.rez.take(key, n, |slot| {
+            let root = &slot.contributions[root_pos].as_ref().expect("root missing")[0];
+            t.data_mut().copy_from_slice(root);
         });
-        t.data_mut().copy_from_slice(&result);
     }
 
     /// Barrier over the group.
@@ -632,8 +717,11 @@ impl Communicator {
     // inter-node exchange -> intra-node redistribution
     // ------------------------------------------------------------------
 
-    /// All-gather: returns each member's tensor in member order.
-    pub fn all_gather(&mut self, gid: GroupId, members: &[usize], t: &Tensor) -> Payloads {
+    /// All-gather: returns each member's tensor in member order. The
+    /// result is assembled once per group and shared via `Arc` — every
+    /// member's view of an all-gather is identical, so pickups after the
+    /// first are refcount bumps, not payload clones.
+    pub fn all_gather(&mut self, gid: GroupId, members: &[usize], t: &Tensor) -> Arc<Payloads> {
         let p = self.issue_all_gather_at(gid, members, t, true);
         self.wait_all_gather(p)
     }
@@ -710,17 +798,28 @@ impl Communicator {
     }
 
     /// Complete a pending all-gather.
-    pub fn wait_all_gather(&mut self, p: PendingAllGather) -> Payloads {
+    pub fn wait_all_gather(&mut self, p: PendingAllGather) -> Arc<Payloads> {
         let out = match p.state {
-            AgState::Ready(v) => v,
+            AgState::Ready(v) => Arc::new(v),
             AgState::Exchange { key, n } => {
                 let desc = format!("all_gather wait g={:?} seq={}", key.0, key.1);
                 self.rez.wait_full(key, n, &desc);
                 self.rez.take(key, n, |slot| {
-                    slot.contributions
-                        .iter()
-                        .map(|c| c.as_ref().expect("missing contribution")[0].clone())
-                        .collect()
+                    if slot.gathered.is_none() {
+                        // first pickup assembles the member-order result,
+                        // moving the payloads out; later pickups share it
+                        let blocks: Payloads = slot
+                            .contributions
+                            .iter_mut()
+                            .map(|c| {
+                                std::mem::take(
+                                    &mut c.as_mut().expect("missing contribution")[0],
+                                )
+                            })
+                            .collect();
+                        slot.gathered = Some(Arc::new(blocks));
+                    }
+                    Arc::clone(slot.gathered.as_ref().unwrap())
                 })
             }
             AgState::Hier { gid, seq, plan, pos, n, own } => {
@@ -742,14 +841,15 @@ impl Communicator {
         pos: usize,
         n: usize,
         own: Payload,
-    ) -> Payloads {
+    ) -> Arc<Payloads> {
         let subset = plan.my_subset().to_vec();
         let k = subset.len();
         let leader = plan.is_leader();
         let own_bytes = (own.len() * 4) as u64;
 
         // phase 1 pickup: only the leader materializes the node block (it
-        // alone forwards the block in phase 2)
+        // alone forwards the block in phase 2) — and it is the sole reader
+        // of the payloads, so they move out instead of cloning
         let node_block: Payloads = if k > 1 {
             let key = (gid, seq, ptag(1, plan.my_node));
             let desc = format!("all_gather/intra g={gid:?} seq={seq} node={}", plan.my_node);
@@ -757,8 +857,10 @@ impl Communicator {
             self.rez.take(key, k, |slot| {
                 if leader {
                     slot.contributions
-                        .iter()
-                        .map(|c| c.as_ref().expect("missing contribution")[0].clone())
+                        .iter_mut()
+                        .map(|c| {
+                            std::mem::take(&mut c.as_mut().expect("missing contribution")[0])
+                        })
                         .collect()
                 } else {
                     Vec::new()
@@ -768,33 +870,38 @@ impl Communicator {
             vec![own]
         };
 
-        // phase 2 (inter): each node's leader publishes its node block
+        // phase 2 (inter): each node's leader publishes its node block;
+        // the first pickup assembles the member-order output once (moving
+        // the node blocks out) and every member shares the `Arc`. Phase 3
+        // is the leaders' intra-node redistribution of remote blocks; in
+        // shared memory the data is already here, so it only shows up in
+        // the lane accounting below.
         let key2 = (gid, seq, ptag(2, 0));
         let desc2 = format!("all_gather/inter g={gid:?} seq={seq}");
         self.rez.deposit_nowait(key2, CommKind::AllGather, pos, n, node_block, &desc2);
         self.rez.wait_full(key2, n, &desc2);
         let leader_positions = plan.leader_positions();
-        let blocks: Vec<Payloads> = self.rez.take(key2, n, |slot| {
-            leader_positions
-                .iter()
-                .map(|&lp| slot.contributions[lp].as_ref().expect("leader block missing").clone())
-                .collect()
+        let out: Arc<Payloads> = self.rez.take(key2, n, |slot| {
+            if slot.gathered.is_none() {
+                let mut full: Payloads = vec![Vec::new(); n];
+                for (kk, &lp) in leader_positions.iter().enumerate() {
+                    let block = slot.contributions[lp].as_mut().expect("leader block missing");
+                    let subset_k = &plan.nodes[kk].1;
+                    assert_eq!(block.len(), subset_k.len(), "node block size mismatch");
+                    for (v, &p) in block.iter_mut().zip(subset_k.iter()) {
+                        full[p] = std::mem::take(v);
+                    }
+                }
+                slot.gathered = Some(Arc::new(full));
+            }
+            Arc::clone(slot.gathered.as_ref().unwrap())
         });
 
-        // reassemble member-order output (phase 3 is the leaders' intra-node
-        // redistribution of remote blocks; in shared memory the data is
-        // already here, so it only shows up in the lane accounting)
-        let mut out: Payloads = vec![Vec::new(); n];
+        // lane accounting reads byte totals off the shared result
         let mut total_bytes = 0u64;
         let mut my_block_bytes = 0u64;
-        for (kk, block) in blocks.into_iter().enumerate() {
-            let subset_k = &plan.nodes[kk].1;
-            assert_eq!(block.len(), subset_k.len(), "node block size mismatch");
-            let mut bb = 0u64;
-            for (v, &p) in block.into_iter().zip(subset_k.iter()) {
-                bb += (v.len() * 4) as u64;
-                out[p] = v;
-            }
+        for (kk, node) in plan.nodes.iter().enumerate() {
+            let bb: u64 = node.1.iter().map(|&p| (out[p].len() * 4) as u64).sum();
             total_bytes += bb;
             if kk == plan.my_node {
                 my_block_bytes = bb;
@@ -1091,10 +1198,12 @@ impl Communicator {
         let key = (gid, seq, ptag(1, plan.my_node));
         let desc = format!("all_to_all/intra g={gid:?} seq={seq} node={}", plan.my_node);
         rez.wait_full(key, k, &desc);
+        // each member reads its own column exactly once, so the rows move
+        // out instead of cloning
         let rows: Payloads = rez.take(key, k, |slot| {
             slot.contributions
-                .iter()
-                .map(|c| c.as_ref().expect("missing contribution")[my_subpos].clone())
+                .iter_mut()
+                .map(|c| std::mem::take(&mut c.as_mut().expect("missing contribution")[my_subpos]))
                 .collect()
         });
         rows.into_iter()
@@ -1112,10 +1221,13 @@ impl Communicator {
             A2aState::Exchange { key, pos, n } => {
                 let desc = format!("all_to_all wait g={:?} seq={}", key.0, key.1);
                 self.rez.wait_full(key, n, &desc);
+                // column `pos` has exactly one reader (us): move, don't clone
                 self.rez.take(key, n, |slot| {
                     slot.contributions
-                        .iter()
-                        .map(|c| c.as_ref().expect("missing contribution")[pos].clone())
+                        .iter_mut()
+                        .map(|c| {
+                            std::mem::take(&mut c.as_mut().expect("missing contribution")[pos])
+                        })
                         .collect()
                 })
             }
@@ -1131,8 +1243,10 @@ impl Communicator {
                 self.rez.wait_full(key2, n, &desc2);
                 let got: Payloads = self.rez.take(key2, n, |slot| {
                     slot.contributions
-                        .iter()
-                        .map(|c| c.as_ref().expect("missing contribution")[pos].clone())
+                        .iter_mut()
+                        .map(|c| {
+                            std::mem::take(&mut c.as_mut().expect("missing contribution")[pos])
+                        })
                         .collect()
                 });
                 for (p2, v) in got.into_iter().enumerate() {
@@ -1267,15 +1381,19 @@ impl Communicator {
             let desc2 = format!("all_to_all/pxn-inter g={gid:?} seq={seq}");
             self.rez.deposit_nowait(key2, CommKind::AllToAll, my_node, m, batches, &desc2);
             self.rez.wait_full(key2, m, &desc2);
+            // each leader reads column `my_node` of every peer batch
+            // exactly once: move the frames out instead of cloning
             let got: Payloads = self.rez.take(key2, m, |slot| {
                 (0..m)
                     .map(|kk| {
                         if kk == my_node {
                             Vec::new()
                         } else {
-                            slot.contributions[kk].as_ref().expect("missing leader batch")
-                                [my_node]
-                                .clone()
+                            std::mem::take(
+                                &mut slot.contributions[kk]
+                                    .as_mut()
+                                    .expect("missing leader batch")[my_node],
+                            )
                         }
                     })
                     .collect()
@@ -1315,8 +1433,10 @@ impl Communicator {
                 self.rez.deposit_nowait(key3, CommKind::AllToAll, 0, 1, per_member, &desc3);
                 self.rez.wait_full(key3, 1, &desc3);
                 let _own: Payload = self.rez.take(key3, k, |slot| {
-                    slot.contributions[0].as_ref().expect("leader dist missing")[my_subpos]
-                        .clone()
+                    std::mem::take(
+                        &mut slot.contributions[0].as_mut().expect("leader dist missing")
+                            [my_subpos],
+                    )
                 });
             }
             intra_msgs = 2 * (k as u64 - 1);
@@ -1327,8 +1447,11 @@ impl Communicator {
             intra_bytes += own_cross_bytes;
             let key3 = (gid, seq, ptag(5, my_node));
             self.rez.wait_full(key3, 1, &desc3);
+            // frame column `my_subpos` has exactly one reader (us)
             let frames: Payload = self.rez.take(key3, k, |slot| {
-                slot.contributions[0].as_ref().expect("leader dist missing")[my_subpos].clone()
+                std::mem::take(
+                    &mut slot.contributions[0].as_mut().expect("leader dist missing")[my_subpos],
+                )
             });
             let mut cur = 0usize;
             for &src in cross_sources.iter() {
@@ -1430,7 +1553,7 @@ mod tests {
             c.all_gather(gid(1), &members, &t)
         });
         for o in outs {
-            assert_eq!(o, vec![vec![0.0], vec![100.0], vec![200.0]]);
+            assert_eq!(*o, vec![vec![0.0], vec![100.0], vec![200.0]]);
         }
     }
 

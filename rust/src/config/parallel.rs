@@ -10,6 +10,7 @@ use anyhow::{bail, Result};
 
 use crate::collectives::CollectiveStrategy;
 use crate::config::cluster::ClusterPreset;
+use crate::perfmodel::MeasuredBlockTimes;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ParallelConfig {
@@ -130,6 +131,12 @@ pub struct EngineOptions {
     /// Cluster preset pricing the overlap timeline (`TrainLog` reports
     /// serialized vs critical-path comm seconds when set).
     pub cluster: Option<ClusterPreset>,
+    /// Measured per-block compute times (`ted train --measured-compute`):
+    /// when set alongside a `cluster` preset, the trainer's compute-lane
+    /// pricing uses the table's effective per-GPU flop rate instead of the
+    /// preset's analytic `peak_half_tflops * flops_efficiency` guess.
+    /// `None` (the default) preserves the analytic pricing bit-for-bit.
+    pub measured: Option<MeasuredBlockTimes>,
 }
 
 impl Default for EngineOptions {
@@ -150,6 +157,7 @@ impl Default for EngineOptions {
             chunked_a2a: false,
             delay_wgrad: false,
             cluster: None,
+            measured: None,
         }
     }
 }

@@ -133,9 +133,15 @@ impl Trainer {
         if let Some(preset) = opts.cluster {
             // price every collective with the preset's α-β model (and
             // every block with its flop rate) so the TrainLog can report
-            // the measured three-lane overlap timeline
+            // the measured three-lane overlap timeline; a measured block
+            // table (--measured-compute) supplies the flop rate the
+            // hardware actually achieved instead of the analytic guess
             let cluster = preset.config();
-            flops_rate = Some(cluster.peak_half_tflops * 1e12 * cluster.flops_efficiency);
+            flops_rate = Some(
+                opts.measured
+                    .and_then(|m| m.effective_flops_rate())
+                    .unwrap_or(cluster.peak_half_tflops * 1e12 * cluster.flops_efficiency),
+            );
             comm.set_cost_model(cluster);
         }
         let mut rt = Runtime::new()?;
@@ -798,7 +804,8 @@ impl Trainer {
             Some(self.opt_exp.step_native(flat_e, h).to_vec())
         };
 
-        let (gathered_ne, gathered_e): (Vec<Vec<f32>>, Option<Vec<Vec<f32>>>) =
+        type Gathered = std::sync::Arc<Vec<Vec<f32>>>;
+        let (gathered_ne, gathered_e): (Gathered, Option<Gathered>) =
             match (self.opts.overlap, shard_e) {
                 (true, Some(se)) => {
                     let tne = Tensor::from_vec(&[shard_ne.len()], shard_ne);
@@ -833,8 +840,8 @@ impl Trainer {
             };
 
         let mut full = Vec::with_capacity(self.store.nonexpert_group.total());
-        for part in gathered_ne {
-            full.extend_from_slice(&part);
+        for part in gathered_ne.iter() {
+            full.extend_from_slice(part);
         }
         self.store
             .nonexpert_group
@@ -842,8 +849,8 @@ impl Trainer {
 
         if let Some(gathered) = gathered_e {
             let mut full = Vec::with_capacity(self.store.expert_group.total());
-            for part in gathered {
-                full.extend_from_slice(&part);
+            for part in gathered.iter() {
+                full.extend_from_slice(part);
             }
             self.store
                 .expert_group

@@ -78,6 +78,43 @@
 //! `rust/tests/integration_accounting.rs`; the model's invariants live in
 //! `rust/tests/compute_overlap_model.rs`.
 //!
+//! ## Rendezvous concurrency
+//!
+//! The rendezvous (`collectives::Rendezvous`) is the in-process matching
+//! substrate every transport exchanges through. It is **lock-striped**:
+//! the slot map is spread over 64 shards (one `Mutex` + `Condvar` per
+//! shard, keyed by the slot's group/sequence/phase hash), so collectives
+//! on unrelated groups rendezvous on different locks instead of
+//! serializing on one global mutex — the contention this removes is
+//! measured by the `rendezvous/contention/*` cases in
+//! `benches/bench_collectives.rs`. `Rendezvous::with_shards(world, 1)`
+//! reproduces the legacy single-lock substrate, and
+//! `rust/tests/rendezvous_stress.rs` pins the two as bitwise-identical
+//! under a wide-world storm of concurrent uneven all-to-alls and
+//! rotating-group all-reduces. Pickup is **zero-copy** where a payload
+//! has a sole reader: all-to-all columns and PXN frames are moved out of
+//! the slot, and an all-gather is assembled once and shared as an
+//! `Arc<Payloads>`. Deadlock detection is configurable via the
+//! `TED_DEADLOCK_TIMEOUT` env var (seconds, fractional allowed; default
+//! 120), and a timeout panic names the missing members' positions.
+//!
+//! ## Measured-compute pricing
+//!
+//! The analytic compute lane prices flops at the cluster preset's
+//! `peak_half_tflops * flops_efficiency` guess. A
+//! [`perfmodel::MeasuredBlockTimes`] table replaces the guess with the
+//! **effective rate the measured blocks actually achieved**: the
+//! `pjrt/*(mini)` block timings from the repo-root `BENCH_smoke.json`
+//! (maintained by `BENCH_SMOKE=1 cargo bench`) convert to one per-GPU
+//! flop rate (`perfmodel::gpu_flops_rate`), consumed by the batch-time
+//! model, the trainer's compute lane, and the planner
+//! (`PlanRequest::measured`). Strictly opt-in: `ted train|plan
+//! --measured-compute` on the CLI, `CommOpts::measured` /
+//! `EngineOptions::measured` in code; `None` (and a table with no
+//! measured blocks) is the bit-for-bit analytic identity, pinned in
+//! `rust/tests/measured_compute.rs`. `ted benchdiff --before A.json
+//! --after B.json` diffs two snapshots bench-by-bench.
+//!
 //! ## Routing and traffic
 //!
 //! The MoE router is a small policy object ([`moe::RouterConfig`] →

@@ -1,26 +1,31 @@
 //! `ted` — the DeepSpeed-TED reproduction CLI (leader entrypoint).
 //!
 //! Subcommands:
-//!   train    run TED training on the simulated cluster
-//!   plan     rank TED configurations for a deployment (the autotuner)
-//!   info     print topology / memory breakdown for a configuration
-//!   figures  shorthand pointing at the paper-figure generators
+//!   train      run TED training on the simulated cluster
+//!   plan       rank TED configurations for a deployment (the autotuner)
+//!   info       print topology / memory breakdown for a configuration
+//!   benchdiff  compare two BENCH_smoke.json snapshots bench-by-bench
+//!   figures    shorthand pointing at the paper-figure generators
 //!
 //! Examples:
 //!   ted train --config tiny --world 4 --tp 2 --ep 2 --steps 20
 //!   ted plan  --cluster summit --model 6.7B --experts 16 --gpus 128
 //!   ted info  --model 6.7B --experts 16 --gpus 128 --tp 4 --cluster summit
 
+use std::collections::BTreeMap;
+
 use anyhow::{anyhow, bail, Result};
 
 use ted::config::{model, ClusterConfig, EngineOptions, ParallelConfig, TrainingConfig};
 use ted::data::{DataGen, SyntheticLM, TextCorpus, TrafficLM};
 use ted::memory::{MemoryModel, PHASES};
+use ted::perfmodel::MeasuredBlockTimes;
 use ted::planner::{plan, report_json, PlanRequest};
 use ted::runtime::Manifest;
 use ted::sim::{train, RunConfig};
 use ted::topology::Topology;
 use ted::util::cli::{Args, TrafficSpec};
+use ted::util::json::Json;
 
 const USAGE: &str = "\
 ted — DeepSpeed-TED reproduction (hybrid tensor-expert-data parallel MoE training)
@@ -32,13 +37,14 @@ USAGE:
              [--transport flat|hierarchical|hierarchical-pxn]
              [--gpus-per-node N] [--cluster summit|thetagpu|perlmutter]
              [--no-overlap] [--chunked-a2a] [--delay-wgrad]
-             [--traffic uniform|zipf:<s>|bursty:<p>]
+             [--traffic uniform|zipf:<s>|bursty:<p>] [--measured-compute]
   ted plan   [--cluster summit|thetagpu|perlmutter] [--model NAME]
              [--experts E] [--gpus G] [--batch N] [--overlap-eff E]
              [--max-tp N] [--micro N] [--top K] [--json] [--chunked]
-             [--traffic uniform|zipf:<s>|bursty:<p>]
+             [--traffic uniform|zipf:<s>|bursty:<p>] [--measured-compute]
   ted info   --model {1.3B|2.7B|6.7B|13.0B} --experts E --gpus G --tp T
              [--cluster summit|thetagpu|perlmutter]
+  ted benchdiff --before A.json --after B.json   (compare bench snapshots)
   ted figures [--only ID]    (alias of `cargo run --example paper_figures`)
 
 `ted plan` searches every legal (tp, ep, dp) factorization x transport x
@@ -62,6 +68,14 @@ wire; --delay-wgrad defers the expert weight-gradient pass so the
 backward all-to-all hides behind it. Both are pure schedule changes
 (bitwise-identical results). `ted plan --chunked` adds the pair to the
 search space.
+
+--measured-compute prices the compute lane from the measured per-block
+timings in the repo-root BENCH_smoke.json (the merged `BENCH_SMOKE=1
+cargo bench` snapshot) instead of the cluster's analytic
+peak * efficiency flop rate: the pjrt/*(mini) block benches convert to
+one effective per-GPU rate. Without the flag (or when the snapshot has
+no block timings) pricing is unchanged. `ted benchdiff` diffs two
+snapshots bench-by-bench for before/after comparisons.
 
 Selecting --cluster on `train` threads the preset's gpus-per-node into
 the transport layer and prices a three-lane (compute/NVLink/IB) overlap
@@ -88,7 +102,7 @@ fn run() -> Result<()> {
     };
     let flags = [
         "no-dtd", "no-cac", "no-tiling", "no-overlap", "chunked-a2a", "delay-wgrad", "chunked",
-        "verbose", "help", "json",
+        "measured-compute", "verbose", "help", "json",
     ];
     let args = Args::parse(all.into_iter().skip(1), &flags)?;
     if args.flag("help") {
@@ -99,6 +113,7 @@ fn run() -> Result<()> {
         "train" => cmd_train(&args),
         "plan" => cmd_plan(&args),
         "info" => cmd_info(&args),
+        "benchdiff" => cmd_benchdiff(&args),
         "figures" => {
             println!("run: cargo run --release --example paper_figures{}",
                 args.get("only").map(|o| format!(" -- --only {o}")).unwrap_or_default());
@@ -112,7 +127,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "config", "world", "tp", "ep", "steps", "micro", "lr", "seed", "data", "batch",
         "no-dtd", "no-cac", "no-tiling", "no-overlap", "chunked-a2a", "delay-wgrad", "verbose",
-        "transport", "gpus-per-node", "cluster", "traffic",
+        "transport", "gpus-per-node", "cluster", "traffic", "measured-compute",
     ])?;
     let config = args.get_or("config", "tiny").to_string();
     let tp = args.get_usize("tp", 2)?;
@@ -155,6 +170,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(p) = preset {
         opts = opts.with_cluster(p);
     }
+    opts.measured = load_measured(args)?;
     opts.validate_topology(world)?;
     let tcfg = TrainingConfig {
         lr: args.get_f64("lr", 1e-3)? as f32,
@@ -236,7 +252,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_plan(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "model", "experts", "gpus", "batch", "cluster", "overlap-eff", "max-tp", "micro", "top",
-        "json", "traffic", "chunked",
+        "json", "traffic", "chunked", "measured-compute",
     ])?;
     let cluster = ClusterConfig::by_name(args.get_or("cluster", "summit"))
         .ok_or_else(|| anyhow!("unknown --cluster (summit|thetagpu|perlmutter)"))?;
@@ -262,6 +278,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
         bail!("--max-tp must be positive");
     }
     req.traffic = TrafficSpec::from_args(args)?;
+    req.measured = load_measured(args)?;
     if args.flag("chunked") {
         req.chunked_choices = vec![false, true];
     }
@@ -367,6 +384,80 @@ fn cmd_plan(args: &Args) -> Result<()> {
             if let Some(r) = report.rejections.iter().find(|r| r.reason.kind() == kind) {
                 println!("  e.g. {}: {}", r.knobs.describe(), r.reason.describe());
             }
+        }
+    }
+    Ok(())
+}
+
+/// Resolve `--measured-compute`: load the repo-root `BENCH_smoke.json`
+/// block timings into a [`MeasuredBlockTimes`] table. A snapshot with no
+/// usable `pjrt/*(mini)` entries warns and falls back to the analytic
+/// flop rate (returns `None`) rather than failing the run.
+fn load_measured(args: &Args) -> Result<Option<MeasuredBlockTimes>> {
+    if !args.flag("measured-compute") {
+        return Ok(None);
+    }
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_smoke.json");
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("--measured-compute: cannot read {path}: {e}"))?;
+    match MeasuredBlockTimes::from_snapshot_json(&text) {
+        Some(m) => {
+            println!(
+                "measured compute: {} blocks from {path}; effective rate {:.3} TFLOP/s per GPU",
+                m.n_measured_blocks(),
+                m.effective_flops_rate().unwrap_or(0.0) / 1e12,
+            );
+            Ok(Some(m))
+        }
+        None => {
+            eprintln!(
+                "warning: --measured-compute: no pjrt block timings in {path} \
+                 (run `BENCH_SMOKE=1 cargo bench`); using the analytic flop rate"
+            );
+            Ok(None)
+        }
+    }
+}
+
+/// `ted benchdiff`: flatten two bench snapshots to `target :: bench`
+/// mean-seconds maps and print the per-bench delta, plus benches that
+/// appear on only one side.
+fn cmd_benchdiff(args: &Args) -> Result<()> {
+    args.reject_unknown(&["before", "after"])?;
+    let before = args.get("before").ok_or_else(|| anyhow!("benchdiff needs --before PATH"))?;
+    let after = args.get("after").ok_or_else(|| anyhow!("benchdiff needs --after PATH"))?;
+    let load = |path: &str| -> Result<BTreeMap<String, f64>> {
+        let text = std::fs::read_to_string(path).map_err(|e| anyhow!("cannot read {path}: {e}"))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        let mut flat = BTreeMap::new();
+        if let Some(targets) = doc.get("targets").and_then(|t| t.as_object()) {
+            for (target, section) in targets {
+                let Some(benches) = section.as_object() else { continue };
+                for (name, entry) in benches {
+                    if let Some(mean) = entry.get("mean_s").and_then(|m| m.as_f64()) {
+                        flat.insert(format!("{target} :: {name}"), mean);
+                    }
+                }
+            }
+        }
+        Ok(flat)
+    };
+    let b = load(before)?;
+    let a = load(after)?;
+    println!("benchdiff: {before} -> {after}");
+    println!("{:<56} {:>12} {:>12} {:>9}", "bench", "before(s)", "after(s)", "delta");
+    for (name, bv) in &b {
+        match a.get(name) {
+            Some(av) => {
+                let delta = (av / bv - 1.0) * 100.0;
+                println!("{name:<56} {bv:>12.6} {av:>12.6} {delta:>+8.1}%");
+            }
+            None => println!("{name:<56} {bv:>12.6} {:>12} {:>9}", "-", "removed"),
+        }
+    }
+    for (name, av) in &a {
+        if !b.contains_key(name) {
+            println!("{name:<56} {:>12} {av:>12.6} {:>9}", "-", "added");
         }
     }
     Ok(())

@@ -236,6 +236,17 @@ pub mod bench {
             .and_then(|doc| doc.get("targets").and_then(|t| t.as_object().cloned()))
             .unwrap_or_default();
         let results = RESULTS.lock().unwrap();
+        if results.is_empty() {
+            // a bench binary that recorded nothing (e.g. every bench was
+            // skipped for missing artifacts) must not clobber a committed
+            // section with an empty map — the snapshot's purpose is to
+            // say which benches exist and ran
+            eprintln!(
+                "write_smoke_snapshot({target}): no bench results recorded, \
+                 leaving {path} untouched"
+            );
+            return Ok(());
+        }
         let entries: Vec<(String, Json)> = results
             .iter()
             .map(|(name, r)| {

@@ -193,9 +193,9 @@ fn pipelined_a2a_gather(
     let g1 = ctx.comm.wait_all_gather(pg1);
     let g2 = ctx.comm.wait_all_gather(pg2);
     let mut others: Vec<Vec<f32>> = Vec::with_capacity(2 * (ctx.tp() - 1));
-    for (pos, payload) in g1.into_iter().chain(g2.into_iter()).enumerate() {
+    for (pos, payload) in g1.iter().chain(g2.iter()).enumerate() {
         if pos % ctx.tp() != ctx.tp_pos {
-            others.push(payload);
+            others.push(payload.clone());
         }
     }
     others
@@ -325,11 +325,11 @@ pub fn dispatch(
                 ctx.tp_members,
                 &Tensor::from_vec(&[mine.len()], mine),
             );
-            for (pos, payload) in gathered.into_iter().enumerate() {
+            for (pos, payload) in gathered.iter().enumerate() {
                 if pos == ctx.tp_pos {
                     continue; // already scattered our own
                 }
-                scatter(&payload, None, &mut buffers, &mut origin_of_slot);
+                scatter(payload, None, &mut buffers, &mut origin_of_slot);
             }
         }
     } else if ctx.pipelined() {
@@ -356,11 +356,11 @@ pub fn dispatch(
                 ctx.tp_members,
                 &Tensor::from_vec(&[mine.len()], mine),
             );
-            for (pos, payload) in gathered.into_iter().enumerate() {
+            for (pos, payload) in gathered.iter().enumerate() {
                 if pos == ctx.tp_pos {
                     continue; // already scattered our own
                 }
-                scatter(&payload, None, &mut buffers, &mut origin_of_slot);
+                scatter(payload, None, &mut buffers, &mut origin_of_slot);
             }
         }
     }
@@ -436,8 +436,8 @@ pub fn return_to_origin(
                 &Tensor::from_vec(&[all_rows.len()], all_rows.clone()),
             );
             all_rows.clear();
-            for payload in gathered {
-                all_rows.extend_from_slice(&payload);
+            for payload in gathered.iter() {
+                all_rows.extend_from_slice(payload);
             }
         }
     } else if ctx.pipelined() {
@@ -462,8 +462,8 @@ pub fn return_to_origin(
                 &Tensor::from_vec(&[all_rows.len()], all_rows.clone()),
             );
             all_rows.clear();
-            for payload in gathered {
-                all_rows.extend_from_slice(&payload);
+            for payload in gathered.iter() {
+                all_rows.extend_from_slice(payload);
             }
         }
     }

@@ -52,6 +52,7 @@ use crate::perfmodel::collective_cost::{
     allgather_phased, allreduce_phased, alltoall_phased, traffic_skew, PhasedCost, TrafficSkew,
 };
 use crate::perfmodel::flops::{attn_fwd_flops, ffn_fwd_flops, flops_per_iter_checkpointed};
+use crate::perfmodel::measured::MeasuredBlockTimes;
 use crate::topology::{RankGroups, Topology};
 use crate::util::cli::TrafficSpec;
 
@@ -85,6 +86,12 @@ pub struct CommOpts {
     /// it like the a2a. Capacity-mode buffers are fixed-size and stay
     /// uniform regardless of traffic.
     pub dropless: bool,
+    /// Measured per-block compute times: when set, the compute lane is
+    /// priced at the table's effective per-GPU flop rate
+    /// ([`gpu_flops_rate`]) instead of the cluster's analytic
+    /// `peak_half_tflops * flops_efficiency` guess. `None` (the default)
+    /// preserves the analytic pricing bit-for-bit.
+    pub measured: Option<MeasuredBlockTimes>,
 }
 
 impl CommOpts {
@@ -98,6 +105,7 @@ impl CommOpts {
             a2a_chunks: 1,
             delay_wgrad: false,
             dropless: false,
+            measured: None,
         }
     }
 
@@ -140,6 +148,12 @@ impl CommOpts {
         self.dropless = dropless;
         self
     }
+
+    /// Same switches, compute priced from a measured block-time table.
+    pub fn with_measured(mut self, measured: Option<MeasuredBlockTimes>) -> Self {
+        self.measured = measured;
+        self
+    }
 }
 
 /// One evaluated scenario.
@@ -180,6 +194,19 @@ pub fn phase_compute_split(cac: bool) -> [f64; 3] {
     }
 }
 
+/// The per-GPU flop rate a scenario's compute is priced with: the
+/// measured block-time rate when the scenario carries a table
+/// (`CommOpts::measured` with at least one measured block), else the
+/// cluster's analytic `peak_half_tflops * flops_efficiency` guess. Every
+/// compute consumer — [`compute_budget_s`], the chunked-a2a FFN windows,
+/// the trainer's compute lane — prices through this one function so the
+/// measured and analytic paths cannot diverge structurally.
+pub fn gpu_flops_rate(c: &ClusterConfig, opts: &CommOpts) -> f64 {
+    opts.measured
+        .and_then(|m| m.effective_flops_rate())
+        .unwrap_or(c.peak_half_tflops * 1e12 * c.flops_efficiency)
+}
+
 /// The whole-iteration compute budget for a scenario: checkpointed flops
 /// over the job's achievable rate — the number [`batch_time`] splits by
 /// [`phase_compute_split`]. Under CAC the engine skips every layer
@@ -196,7 +223,7 @@ pub fn compute_budget_s(s: &Scenario) -> f64 {
             + ffn_fwd_flops(s.model.d_model, s.model.d_ff, tokens);
         flops -= s.model.n_layers as f64 * layer_fwd;
     }
-    flops / (s.par.world as f64 * c.peak_half_tflops * 1e12 * c.flops_efficiency)
+    flops / (s.par.world as f64 * gpu_flops_rate(c, &s.opts))
 }
 
 /// One pass phase's slice of the iteration: its compute budget and the
@@ -479,7 +506,7 @@ fn pipelined_a2a_s(s: &Scenario, a2a_phase: &[f64; 3]) -> f64 {
     }
     let c = &s.cluster;
     let m = &s.model;
-    let gpu_rate = c.peak_half_tflops * 1e12 * c.flops_efficiency;
+    let gpu_rate = gpu_flops_rate(c, &s.opts);
     let tokens_local = (s.global_batch * m.seq) as f64 / s.par.dp_nonexp as f64;
     let moe_layers = (m.n_layers / 2) as f64;
     // one forward pass-unit of this rank's expert FFNs: the TP-sharded

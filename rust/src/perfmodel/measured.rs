@@ -1,0 +1,247 @@
+//! Measured per-block compute times (ROADMAP item 5, the measured
+//! compute lane): feed the `bench_models` PJRT block timings into the
+//! pricing in place of the `peak_half_tflops * flops_efficiency` guess.
+//!
+//! The table carries mean seconds per executed block at a known reference
+//! shape (the `mini` tp2/b2 artifact the `pjrt/*(mini)` benches run) and
+//! converts them into one **effective per-GPU flop rate**: the flops the
+//! measured blocks perform divided by the seconds they took. One rank
+//! executes a `1/tp` shard of each block, so the per-sample flops divide
+//! by the table's `tp` — the resulting rate is what a single GPU actually
+//! achieved, directly comparable to the analytic
+//! `peak_half_tflops * 1e12 * flops_efficiency`.
+//!
+//! Consumers: `perfmodel::batch_time::gpu_flops_rate` (the compute budget
+//! and the chunked-a2a FFN windows), `engine::Trainer` (the measured
+//! compute lane), and the planner via `PlanRequest::measured` — all
+//! strictly opt-in (`Option`; `None` preserves the analytic pricing
+//! bit-for-bit). The CLI loads the table from the repo-root
+//! `BENCH_smoke.json` with `ted train|plan --measured-compute`.
+
+use crate::perfmodel::flops::{attn_fwd_flops, ffn_fwd_flops};
+use crate::util::json::Json;
+
+/// Mean measured seconds per executed block at a fixed reference shape.
+/// Missing blocks (`None`) simply contribute nothing to the rate; a table
+/// with no measured blocks yields no rate and every consumer falls back
+/// to the analytic guess.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MeasuredBlockTimes {
+    /// Reference dims the blocks were measured at.
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    /// Tokens per attention sample (`batch * seq` of the measured block).
+    pub attn_tokens: usize,
+    /// Rows per expert-FFN sample (the capacity buffer the block ran on).
+    pub ffn_tokens: usize,
+    /// Tensor-parallel degree the blocks were compiled for: one sample
+    /// executes `1/tp` of the full-block flops.
+    pub tp: usize,
+    pub attn_fwd_s: Option<f64>,
+    pub attn_bwd_s: Option<f64>,
+    pub expert_ffn_fwd_s: Option<f64>,
+    pub expert_ffn_bwd_s: Option<f64>,
+    /// Router gate time, recorded for completeness but **excluded** from
+    /// the rate: the gate's flops are negligible (`t*h*E`), so folding
+    /// its seconds in would bias the rate toward zero.
+    pub router_fwd_s: Option<f64>,
+}
+
+/// The bench keys `bench_models` records (see `rust/benches/bench_models.rs`).
+const KEY_ATTN_FWD: &str = "pjrt/attn_fwd(mini)";
+const KEY_ATTN_BWD: &str = "pjrt/attn_bwd(mini)";
+const KEY_FFN_FWD: &str = "pjrt/expert_ffn_fwd(mini)";
+const KEY_FFN_BWD: &str = "pjrt/expert_ffn_bwd(mini)";
+const KEY_ROUTER_FWD: &str = "pjrt/router_fwd(mini)";
+
+impl MeasuredBlockTimes {
+    /// The reference shape of the `pjrt/*(mini)` benches: the `mini`
+    /// tp2/b2 artifact variant (`python/compile/aot.py::DEFAULT_SET`) —
+    /// d_model 128, d_ff 256, seq 32, 2x32 tokens per attention sample,
+    /// an 80-row capacity buffer per expert-FFN sample, tp 2. No seconds
+    /// filled in.
+    pub fn mini_reference() -> Self {
+        MeasuredBlockTimes {
+            d_model: 128,
+            d_ff: 256,
+            seq: 32,
+            attn_tokens: 64,
+            ffn_tokens: 80,
+            tp: 2,
+            attn_fwd_s: None,
+            attn_bwd_s: None,
+            expert_ffn_fwd_s: None,
+            expert_ffn_bwd_s: None,
+            router_fwd_s: None,
+        }
+    }
+
+    /// Per-sample flops of one rank's attention shard (fwd pass-unit).
+    fn attn_shard_flops(&self) -> f64 {
+        attn_fwd_flops(self.d_model, self.seq, self.attn_tokens) / self.tp as f64
+    }
+
+    /// Per-sample flops of one rank's expert-FFN shard (fwd pass-unit).
+    fn ffn_shard_flops(&self) -> f64 {
+        ffn_fwd_flops(self.d_model, self.d_ff, self.ffn_tokens) / self.tp as f64
+    }
+
+    /// The effective per-GPU flop rate the measured blocks imply: summed
+    /// known-block flops over summed measured seconds (backward pass-units
+    /// count 2x their forward twin, the standard dgrad+wgrad ratio the
+    /// flop model already prices). `None` when nothing was measured —
+    /// consumers then keep the analytic `peak * efficiency` rate.
+    pub fn effective_flops_rate(&self) -> Option<f64> {
+        let attn = self.attn_shard_flops();
+        let ffn = self.ffn_shard_flops();
+        let mut flops = 0.0f64;
+        let mut secs = 0.0f64;
+        for (f, s) in [
+            (attn, self.attn_fwd_s),
+            (2.0 * attn, self.attn_bwd_s),
+            (ffn, self.expert_ffn_fwd_s),
+            (2.0 * ffn, self.expert_ffn_bwd_s),
+        ] {
+            if let Some(s) = s {
+                flops += f;
+                secs += s;
+            }
+        }
+        if flops > 0.0 && secs > 0.0 {
+            Some(flops / secs)
+        } else {
+            None
+        }
+    }
+
+    /// Number of blocks contributing to the rate.
+    pub fn n_measured_blocks(&self) -> usize {
+        [self.attn_fwd_s, self.attn_bwd_s, self.expert_ffn_fwd_s, self.expert_ffn_bwd_s]
+            .iter()
+            .filter(|s| s.is_some())
+            .count()
+    }
+
+    /// Parse a `BENCH_smoke.json` snapshot (the merged document
+    /// `metrics::bench::write_smoke_snapshot` maintains): scan every
+    /// target section for the `pjrt/*(mini)` keys and take their
+    /// `mean_s`. Returns `None` when the text does not parse or no
+    /// rate-contributing block timing is present — callers fall back to
+    /// the analytic flop rate.
+    pub fn from_snapshot_json(text: &str) -> Option<Self> {
+        let doc = Json::parse(text).ok()?;
+        let targets = doc.get("targets")?.as_object()?;
+        let mut m = Self::mini_reference();
+        for section in targets.values() {
+            let Some(benches) = section.as_object() else { continue };
+            let mean = |key: &str| -> Option<f64> {
+                benches.get(key)?.get("mean_s")?.as_f64().filter(|s| *s > 0.0)
+            };
+            m.attn_fwd_s = m.attn_fwd_s.or_else(|| mean(KEY_ATTN_FWD));
+            m.attn_bwd_s = m.attn_bwd_s.or_else(|| mean(KEY_ATTN_BWD));
+            m.expert_ffn_fwd_s = m.expert_ffn_fwd_s.or_else(|| mean(KEY_FFN_FWD));
+            m.expert_ffn_bwd_s = m.expert_ffn_bwd_s.or_else(|| mean(KEY_FFN_BWD));
+            m.router_fwd_s = m.router_fwd_s.or_else(|| mean(KEY_ROUTER_FWD));
+        }
+        if m.effective_flops_rate().is_some() {
+            Some(m)
+        } else {
+            None
+        }
+    }
+
+    /// Synthesize a table whose [`effective_flops_rate`] is (numerically)
+    /// `rate`: every block's seconds are derived from its own flops at
+    /// that rate. Used by tests and examples to build self-consistent
+    /// tables without a bench run.
+    ///
+    /// [`effective_flops_rate`]: MeasuredBlockTimes::effective_flops_rate
+    pub fn synthetic(rate: f64) -> Self {
+        let mut m = Self::mini_reference();
+        assert!(rate > 0.0, "synthetic rate must be positive, got {rate}");
+        let attn = m.attn_shard_flops();
+        let ffn = m.ffn_shard_flops();
+        m.attn_fwd_s = Some(attn / rate);
+        m.attn_bwd_s = Some(2.0 * attn / rate);
+        m.expert_ffn_fwd_s = Some(ffn / rate);
+        m.expert_ffn_bwd_s = Some(2.0 * ffn / rate);
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_table_has_no_rate() {
+        let m = MeasuredBlockTimes::mini_reference();
+        assert_eq!(m.effective_flops_rate(), None);
+        assert_eq!(m.n_measured_blocks(), 0);
+    }
+
+    #[test]
+    fn synthetic_table_inverts_to_its_rate() {
+        for rate in [1e9, 3.7e10, 1.25e14] {
+            let m = MeasuredBlockTimes::synthetic(rate);
+            let got = m.effective_flops_rate().unwrap();
+            assert!((got / rate - 1.0).abs() < 1e-12, "rate {rate}: got {got}");
+            assert_eq!(m.n_measured_blocks(), 4);
+        }
+    }
+
+    #[test]
+    fn router_seconds_never_enter_the_rate() {
+        let mut m = MeasuredBlockTimes::synthetic(1e10);
+        let base = m.effective_flops_rate().unwrap();
+        m.router_fwd_s = Some(1000.0); // absurdly slow gate
+        assert_eq!(m.effective_flops_rate().unwrap(), base);
+    }
+
+    #[test]
+    fn partial_tables_still_rate() {
+        let mut m = MeasuredBlockTimes::mini_reference();
+        m.attn_fwd_s = Some(m.attn_shard_flops() / 2e9);
+        let got = m.effective_flops_rate().unwrap();
+        assert!((got / 2e9 - 1.0).abs() < 1e-12);
+        assert_eq!(m.n_measured_blocks(), 1);
+    }
+
+    #[test]
+    fn snapshot_parse_roundtrip_and_fallbacks() {
+        // a hand-built snapshot with the bench_models section
+        let text = r#"{
+            "generated_by": "BENCH_SMOKE=1 cargo bench",
+            "targets": {
+                "bench_models": {
+                    "pjrt/attn_fwd(mini)": {"iters": 1, "mean_s": 0.002},
+                    "pjrt/attn_bwd(mini)": {"iters": 1, "mean_s": 0.004},
+                    "pjrt/expert_ffn_fwd(mini)": {"iters": 1, "mean_s": 0.001},
+                    "pjrt/expert_ffn_bwd(mini)": {"iters": 1, "mean_s": 0.002},
+                    "pjrt/router_fwd(mini)": {"iters": 1, "mean_s": 0.0005}
+                },
+                "bench_collectives": {
+                    "all_reduce/world2/1f32/flat": {"iters": 1, "mean_s": 1e-6}
+                }
+            }
+        }"#;
+        let m = MeasuredBlockTimes::from_snapshot_json(text).unwrap();
+        assert_eq!(m.attn_fwd_s, Some(0.002));
+        assert_eq!(m.expert_ffn_bwd_s, Some(0.002));
+        assert_eq!(m.router_fwd_s, Some(0.0005));
+        assert_eq!(m.n_measured_blocks(), 4);
+        let rate = m.effective_flops_rate().unwrap();
+        let want = (3.0 * m.attn_shard_flops() + 3.0 * m.ffn_shard_flops()) / 0.009;
+        assert!((rate / want - 1.0).abs() < 1e-12, "{rate} vs {want}");
+
+        // no pjrt entries at all -> None (graceful CLI fallback)
+        let empty = r#"{"generated_by": "x", "targets": {"bench_models": {}}}"#;
+        assert!(MeasuredBlockTimes::from_snapshot_json(empty).is_none());
+        // unparseable text -> None, never a panic
+        assert!(MeasuredBlockTimes::from_snapshot_json("not json").is_none());
+        // zero/negative timings are rejected, not divided by
+        let zero = r#"{"targets": {"t": {"pjrt/attn_fwd(mini)": {"mean_s": 0.0}}}}"#;
+        assert!(MeasuredBlockTimes::from_snapshot_json(zero).is_none());
+    }
+}

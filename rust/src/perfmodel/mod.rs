@@ -9,12 +9,13 @@ pub mod batch_time;
 pub mod collective_cost;
 pub mod figures;
 pub mod flops;
+pub mod measured;
 
 pub use batch_time::{
     batch_time, batch_time_overlapped, batch_time_worst_traffic, comm_ops, compute_budget_s,
-    fit_overlap_efficiency, fit_overlap_efficiency_phased, hideable_comm_phased_s,
-    hideable_comm_s, overlap_from_base, phase_compute_split, BatchTime, CommOp, CommOpts,
-    OpGroup, OverlappedBatchTime, PhaseBudget, Scenario,
+    fit_overlap_efficiency, fit_overlap_efficiency_phased, gpu_flops_rate,
+    hideable_comm_phased_s, hideable_comm_s, overlap_from_base, phase_compute_split, BatchTime,
+    CommOp, CommOpts, OpGroup, OverlappedBatchTime, PhaseBudget, Scenario,
 };
 pub use batch_time::{PHASE_BWD, PHASE_COMPUTE_SPLIT, PHASE_FWD, PHASE_RECOMPUTE};
 pub use collective_cost::{
@@ -27,3 +28,4 @@ pub use flops::{
     attn_fwd_flops, ffn_fwd_flops, flops_per_iter, flops_per_iter_checkpointed, head_fwd_flops,
     percent_of_peak,
 };
+pub use measured::MeasuredBlockTimes;

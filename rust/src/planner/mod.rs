@@ -52,8 +52,8 @@ use crate::collectives::{ALL_STRATEGIES, CollectiveStrategy};
 use crate::config::{ClusterConfig, EngineOptions, ModelConfig, ParallelConfig};
 use crate::memory::{MemoryModel, Phase};
 use crate::perfmodel::{
-    batch_time, batch_time_worst_traffic, overlap_from_base, CommOpts, OverlappedBatchTime,
-    Scenario,
+    batch_time, batch_time_worst_traffic, overlap_from_base, CommOpts, MeasuredBlockTimes,
+    OverlappedBatchTime, Scenario,
 };
 use crate::util::cli::TrafficSpec;
 
@@ -100,6 +100,12 @@ pub struct PlanRequest {
     /// expert all-to-all, so a skew-heavy scenario can re-rank plans
     /// toward smaller expert-parallel groups.
     pub traffic: TrafficSpec,
+    /// Measured per-block compute times (`ted plan --measured-compute`):
+    /// when set, every candidate's compute lane is priced at the table's
+    /// effective per-GPU flop rate instead of the cluster's analytic
+    /// `peak_half_tflops * flops_efficiency` guess. `None` (the default)
+    /// keeps the analytic pricing bit-for-bit.
+    pub measured: Option<MeasuredBlockTimes>,
 }
 
 impl PlanRequest {
@@ -129,6 +135,7 @@ impl PlanRequest {
             tile_choices: vec![Some(DEFAULT_TILE), None],
             micro_batch_choices: vec![1],
             traffic: TrafficSpec::Uniform,
+            measured: None,
         }
     }
 }
@@ -356,6 +363,7 @@ pub fn scenario_for(req: &PlanRequest, knobs: &PlanKnobs) -> Scenario {
             a2a_chunks: if knobs.chunked { (req.n_experts / knobs.par.ep).max(1) } else { 1 },
             delay_wgrad: knobs.chunked,
             dropless: false,
+            measured: req.measured,
         },
     }
 }

@@ -229,7 +229,7 @@ fn reduce_scatter_allgather_equals_allreduce() {
                         &members,
                         &Tensor::from_vec(&[shard.len()], shard),
                     );
-                    let a: Vec<f32> = gathered.into_iter().flatten().collect();
+                    let a: Vec<f32> = gathered.iter().flatten().copied().collect();
                     // path B: all_reduce
                     let mut t2 = Tensor::from_vec(&[len], data);
                     comm.all_reduce(gid(6), &members, &mut t2);

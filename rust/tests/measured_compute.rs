@@ -1,0 +1,125 @@
+//! Measured-compute pricing: `CommOpts::measured` swaps the analytic
+//! `peak_half_tflops * flops_efficiency` flop rate for the effective rate
+//! a measured block-time table implies — and ONLY that. Comm pricing is
+//! untouched, an empty table is the exact analytic identity, and the
+//! planner stays deterministic with a table attached.
+
+use ted::config::{model, ClusterConfig, ParallelConfig};
+use ted::perfmodel::{
+    batch_time, compute_budget_s, gpu_flops_rate, CommOpts, MeasuredBlockTimes, Scenario,
+};
+use ted::planner::{plan, scenario_for, PlanRequest};
+
+/// The paper's 6.7B x 16-expert rung on 128 summit GPUs.
+fn scenario() -> Scenario {
+    Scenario {
+        model: model::table1_by_name("6.7B").unwrap(),
+        n_experts: 16,
+        par: ParallelConfig::derive(128, 4, 16).unwrap(),
+        cluster: ClusterConfig::by_name("summit").unwrap(),
+        global_batch: 1024,
+        opts: CommOpts::optimized(),
+    }
+}
+
+fn analytic_rate(s: &Scenario) -> f64 {
+    s.cluster.peak_half_tflops * 1e12 * s.cluster.flops_efficiency
+}
+
+/// A table at 2x the analytic rate exactly halves the compute lane and
+/// leaves every comm component bitwise unchanged.
+#[test]
+fn doubled_rate_halves_compute_and_only_compute() {
+    let base = scenario();
+    let mut fast = scenario();
+    fast.opts.measured = Some(MeasuredBlockTimes::synthetic(2.0 * analytic_rate(&base)));
+
+    let rf = gpu_flops_rate(&fast.cluster, &fast.opts);
+    let rb = gpu_flops_rate(&base.cluster, &base.opts);
+    assert!((rf / rb - 2.0).abs() < 1e-12, "rate ratio {}", rf / rb);
+
+    let cb = compute_budget_s(&base);
+    let cf = compute_budget_s(&fast);
+    assert!((cf / cb - 0.5).abs() < 1e-12, "compute {cf} vs {cb}");
+
+    let tb = batch_time(&base);
+    let tf = batch_time(&fast);
+    assert!((tf.compute_s / tb.compute_s - 0.5).abs() < 1e-12);
+    // comm is priced from bytes and fabrics only — bitwise identical
+    assert_eq!(tf.allreduce_s, tb.allreduce_s);
+    assert_eq!(tf.alltoall_s, tb.alltoall_s);
+    assert_eq!(tf.allgather_s, tb.allgather_s);
+    assert_eq!(tf.comm_intra_s, tb.comm_intra_s);
+    assert_eq!(tf.comm_inter_s, tb.comm_inter_s);
+}
+
+/// A table with no measured blocks is the exact analytic identity: every
+/// `BatchTime` field is bitwise equal to the `measured: None` pricing.
+#[test]
+fn empty_table_is_the_analytic_identity() {
+    let base = scenario();
+    let mut tabled = scenario();
+    tabled.opts.measured = Some(MeasuredBlockTimes::mini_reference());
+
+    assert_eq!(gpu_flops_rate(&tabled.cluster, &tabled.opts), analytic_rate(&base));
+    let a = batch_time(&base);
+    let b = batch_time(&tabled);
+    assert_eq!(a.compute_s, b.compute_s);
+    assert_eq!(a.allreduce_s, b.allreduce_s);
+    assert_eq!(a.alltoall_s, b.alltoall_s);
+    assert_eq!(a.allgather_s, b.allgather_s);
+    assert_eq!(a.pipelined_comm_s, b.pipelined_comm_s);
+    for p in 0..3 {
+        assert_eq!(a.phases[p].compute_s, b.phases[p].compute_s);
+        assert_eq!(a.phases[p].comm_intra_s, b.phases[p].comm_intra_s);
+        assert_eq!(a.phases[p].comm_inter_s, b.phases[p].comm_inter_s);
+    }
+}
+
+/// A synthetic table at exactly the analytic rate reproduces the analytic
+/// compute within floating-point noise.
+#[test]
+fn table_at_analytic_rate_matches_analytic_compute() {
+    let base = scenario();
+    let mut same = scenario();
+    same.opts.measured = Some(MeasuredBlockTimes::synthetic(analytic_rate(&base)));
+    let cb = compute_budget_s(&base);
+    let cs = compute_budget_s(&same);
+    assert!((cs / cb - 1.0).abs() < 1e-12, "{cs} vs {cb}");
+}
+
+/// The planner with a measured table is deterministic and reprices every
+/// candidate's compute lane at the table's rate.
+#[test]
+fn planner_with_table_is_deterministic_and_repriced() {
+    let m = model::table1_by_name("6.7B").unwrap();
+    let cluster = ClusterConfig::by_name("summit").unwrap();
+    let mut req = PlanRequest::new(m, 16, 128, cluster, 1024);
+    let analytic = req.cluster.peak_half_tflops * 1e12 * req.cluster.flops_efficiency;
+    req.measured = Some(MeasuredBlockTimes::synthetic(2.0 * analytic));
+
+    let a = plan(&req);
+    let b = plan(&req);
+    assert!(!a.plans.is_empty());
+    let order = |r: &ted::planner::PlanReport| -> Vec<String> {
+        r.plans.iter().map(|p| p.knobs.describe()).collect()
+    };
+    assert_eq!(order(&a), order(&b), "planner became schedule-dependent");
+    for (pa, pb) in a.plans.iter().zip(&b.plans) {
+        assert_eq!(pa.total_s(), pb.total_s());
+    }
+
+    // every ranked candidate's compute halves against the unmeasured
+    // pricing of the same knob assignment
+    let mut unmeasured = req.clone();
+    unmeasured.measured = None;
+    for p in a.plans.iter().take(5) {
+        let with = compute_budget_s(&scenario_for(&req, &p.knobs));
+        let without = compute_budget_s(&scenario_for(&unmeasured, &p.knobs));
+        assert!(
+            (with / without - 0.5).abs() < 1e-12,
+            "{}: {with} vs {without}",
+            p.knobs.describe()
+        );
+    }
+}

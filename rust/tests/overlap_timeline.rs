@@ -109,8 +109,8 @@ fn run_rank(
                         push(&mut digest, t.data());
                     }
                     1 => {
-                        for part in comm.wait_all_gather(ag.unwrap()) {
-                            push(&mut digest, &part);
+                        for part in comm.wait_all_gather(ag.unwrap()).iter() {
+                            push(&mut digest, part);
                         }
                     }
                     _ => {
@@ -131,8 +131,8 @@ fn run_rank(
                     }
                     Op::PairGather(len) => {
                         let t = Tensor::from_vec(&[len], vec![rank as f32; len]);
-                        for part in comm.all_gather(pair_gid, &pair, &t) {
-                            push(&mut digest, &part);
+                        for part in comm.all_gather(pair_gid, &pair, &t).iter() {
+                            push(&mut digest, part);
                         }
                     }
                     Op::AllToAll(len) => {
