@@ -9,7 +9,7 @@
 
 use std::sync::Arc;
 
-use ted::collectives::{ALL_STRATEGIES, CollectiveStrategy, Communicator, Rendezvous};
+use ted::collectives::{ALL_STRATEGIES, CollectiveStrategy, Communicator, NodeMap, Rendezvous};
 use ted::metrics::bench;
 use ted::topology::{GroupId, GroupKind};
 use ted::util::tensor::Tensor;
@@ -179,6 +179,49 @@ fn bench_alltoall_phase_split(
     });
 }
 
+/// Three-tier fabric: the same all-to-all with a datacenter boundary on
+/// top of the node boundary (`NodeMap::with_dc`) — the WAN-staged path
+/// the `cross-dc` cluster preset prices.
+fn bench_alltoall_three_tier(
+    world: usize,
+    rows: usize,
+    d: usize,
+    iters: u32,
+    strategy: CollectiveStrategy,
+    gpn: usize,
+    dc: usize,
+) {
+    let iters = bench::iters(iters);
+    let tag = match strategy {
+        CollectiveStrategy::Flat => "flat".to_string(),
+        CollectiveStrategy::Hierarchical => format!("hier-gpn{gpn}"),
+        CollectiveStrategy::HierarchicalPxn => format!("pxn-gpn{gpn}"),
+    };
+    let name = format!("all_to_all/world{world}/{rows}x{d}/{tag}-dc{dc}");
+    let rez = Rendezvous::new(world);
+    std::thread::scope(|s| {
+        for rank in 1..world {
+            let rez = Arc::clone(&rez);
+            s.spawn(move || {
+                let members: Vec<usize> = (0..world).collect();
+                let mut comm =
+                    Communicator::with_fabric(rez, rank, strategy, NodeMap::with_dc(gpn, dc));
+                for _ in 0..(iters + 3) {
+                    let send: Vec<Vec<f32>> = (0..world).map(|_| vec![1.0; rows * d]).collect();
+                    let _ = comm.all_to_all(gid(6), &members, send);
+                }
+            });
+        }
+        let members: Vec<usize> = (0..world).collect();
+        let mut comm =
+            Communicator::with_fabric(Arc::clone(&rez), 0, strategy, NodeMap::with_dc(gpn, dc));
+        bench::run(&name, 3, iters, || {
+            let send: Vec<Vec<f32>> = (0..world).map(|_| vec![1.0; rows * d]).collect();
+            let _ = comm.all_to_all(gid(6), &members, send);
+        });
+    });
+}
+
 /// Shard contention: every rank hammers all-reduces across several
 /// rotating groups at once, on a rendezvous with `shards` lock stripes.
 /// `shards = 1` is the legacy single-`Mutex<State>` substrate; the
@@ -232,6 +275,12 @@ fn main() {
             bench_alltoall(world, 512, 512, 15, strategy, world / 2);
         }
     }
+    println!("## three-tier fabric (2 DCs x 2 nodes each: gpn 2, dc 4)");
+    for strategy in [CollectiveStrategy::Hierarchical, CollectiveStrategy::HierarchicalPxn] {
+        bench_alltoall_three_tier(8, 64, 64, 100, strategy, 2, 4);
+        bench_alltoall_three_tier(8, 512, 512, 15, strategy, 2, 4);
+    }
+    bench_alltoall_three_tier(8, 64, 64, 100, CollectiveStrategy::Flat, 2, 4);
     println!("## nonblocking issue/wait (every strategy)");
     for strategy in ALL_STRATEGIES {
         let gpn = if strategy == CollectiveStrategy::Flat { 0 } else { 4 };

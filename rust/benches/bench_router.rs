@@ -122,6 +122,7 @@ fn one_pass(
         overlap: false,
         chunked: false,
         chunk_compute_s: 0.0,
+        dc_split: None,
     };
     let disp = dispatch(&mut ctx, rows, &dec, local_experts);
     let _ = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, local_experts);

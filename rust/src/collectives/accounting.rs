@@ -1,5 +1,6 @@
 //! Per-rank, per-kind communication volume accounting, split into
-//! **intra-node** and **inter-node** lanes, plus the modeled **overlap
+//! **per-tier fabric lanes** (tier 0 intra-node / NVLink, tier 1
+//! inter-node / InfiniBand, tier 2 WAN), plus the modeled **overlap
 //! timeline** the nonblocking issue/wait API feeds.
 //!
 //! Counts *logical payload bytes leaving each rank* (self-destined traffic
@@ -7,42 +8,46 @@
 //! Figure 5 decomposes. Algorithmic inflation (ring all-reduce moving
 //! 2(n-1)/n of the buffer, etc.) is applied by the perf model, not here.
 //!
-//! The two lanes mirror the transport backends (see
-//! `collectives::transport`):
+//! The lanes mirror the transport backends (see `collectives::transport`):
 //!
 //! * the **flat** backend is topology-oblivious — it cannot attribute a
 //!   byte to a fabric, so its entire volume lands in one undifferentiated
-//!   lane: the *inter-node* (bottleneck) lane whenever the **job** spans
-//!   nodes, the intra-node lane on a single-node job. This is deliberately
+//!   lane: the *bottleneck* lane of the job (the widest tier the job
+//!   spans — inter-node on a multi-node job, WAN on a multi-datacenter
+//!   job, intra-node on a single-node job). This is deliberately
 //!   coarser than the α-β *time* model, which still prices a provably
 //!   node-local group at NVLink even under the flat backend: measured
 //!   lanes answer "what can this transport claim about its traffic?",
 //!   pricing answers "how long does the op take?" — only the hierarchical
 //!   backends make the two attributions coincide;
 //! * the **hierarchical** backends decompose each collective into an
-//!   intra-node phase and an inter-node phase and record each phase in
-//!   its own lane — only bytes that genuinely cross a node boundary are
-//!   charged to the inter-node fabric. The **leader-aggregated (PXN)**
-//!   all-to-all additionally charges the gather-to-leader and
-//!   redistribute hops to the intra lane, which is that schedule's real
-//!   extra NVLink volume.
+//!   intra-node phase and a spanning phase and record each byte in the
+//!   lane of the tier it actually crosses — only bytes that genuinely
+//!   cross a node boundary leave tier 0, and of those only bytes whose
+//!   destination sits in another datacenter land in the WAN lane. The
+//!   **leader-aggregated (PXN)** all-to-all additionally charges the
+//!   gather-to-leader and redistribute hops to the tier-0 lane, which is
+//!   that schedule's real extra NVLink volume.
 //!
 //! Besides bytes, each lane counts **messages** — the α-term driver. For
 //! all-to-all the transports record the real per-peer message count
-//! (flat: `n-1`; hierarchical: `k-1` intra + `n-k` inter; PXN leader:
-//! `m-1` inter, one batch per peer node); for the other kinds a lane
+//! (flat: `n-1`; hierarchical: `k-1` intra + `n-k` spanning; PXN leader:
+//! `m-1` spanning, one batch per peer node); for the other kinds a lane
 //! counts one message event per call that touches it.
 //!
-//! `bytes` is always `intra_bytes + inter_bytes`. All-to-all totals are
-//! invariant between flat and hierarchical (each row leaves its rank
-//! exactly once either way), so assertions like DTD's exact payload
-//! halving hold on any backend; PXN adds the leader forwarding hops to
-//! the intra lane while keeping the inter lane byte total unchanged.
+//! `bytes` is always `Σ lane_bytes[t]` — the invariant
+//! [`CommStats::assert_lane_invariant`] pins, and which
+//! [`StatsBoard::record_lanes`] maintains by construction so a future
+//! tier can never silently drop a lane. All-to-all totals are invariant
+//! between flat and hierarchical (each row leaves its rank exactly once
+//! either way), so assertions like DTD's exact payload halving hold on
+//! any backend; PXN adds the leader forwarding hops to the tier-0 lane
+//! while keeping the spanning byte total unchanged.
 //!
-//! The [`TimelineBoard`] models a per-rank **three-lane** (compute /
-//! NVLink / IB) virtual clock: every priced collective schedules its
-//! intra and inter phases on the comm lanes, blocking ops advance the
-//! clock to their finish, nonblocking ops advance it only at `wait`, and
+//! The [`TimelineBoard`] models a per-rank **multi-lane** (compute + one
+//! lane per fabric tier) virtual clock: every priced collective schedules
+//! its phases on the comm lanes, blocking ops advance the clock to their
+//! finish, nonblocking ops advance it only at `wait`, and
 //! [`TimelineBoard::advance_compute`] occupies the compute lane — the
 //! rank's own execution stream — for a priced block duration. Compute is
 //! synchronous on its rank (it starts at the current clock and blocks the
@@ -50,13 +55,15 @@
 //! progressing on their lanes meanwhile, so an issue → compute → wait
 //! window measures exactly how much of a collective hides behind compute
 //! (the MoNTA-style expert-FFN / all-to-all overlap). `serialized_s` sums
-//! every comm phase (split per lane into `intra_serialized_s` /
-//! `inter_serialized_s`), `compute_s` sums the compute lane, and
-//! `clock_s` is the critical path the schedule actually exposes —
-//! `clock_s <= serialized_s + compute_s` always, with equality exactly
-//! when every op is blocking (`--no-overlap`).
+//! every comm phase (split per tier into `lane_serialized_s[t]`),
+//! `compute_s` sums the compute lane, and `clock_s` is the critical path
+//! the schedule actually exposes — `clock_s <= serialized_s + compute_s`
+//! always, with equality exactly when every op is blocking
+//! (`--no-overlap`).
 
 use std::sync::Mutex;
+
+pub use super::transport::MAX_TIERS;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CommKind {
@@ -104,17 +111,62 @@ impl CommKind {
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CommStats {
     pub calls: u64,
-    /// Total payload bytes (always `intra_bytes + inter_bytes`).
+    /// Total payload bytes (always `Σ lane_bytes[t]`).
     pub bytes: u64,
-    /// Bytes that stay on the intra-node fabric (NVLink lane).
-    pub intra_bytes: u64,
-    /// Bytes that cross a node boundary (InfiniBand lane).
-    pub inter_bytes: u64,
-    /// Messages sent on the intra-node lane (per-peer for all-to-all).
-    pub intra_msgs: u64,
-    /// Messages sent on the inter-node lane (per-peer for all-to-all;
-    /// one batch per peer node under the PXN schedule — the α-term).
-    pub inter_msgs: u64,
+    /// Bytes per fabric tier: `[0]` intra-node (NVLink), `[1]` inter-node
+    /// (InfiniBand), `[2]` WAN.
+    pub lane_bytes: [u64; MAX_TIERS],
+    /// Messages per fabric tier (per-peer for all-to-all; one batch per
+    /// peer node under the PXN schedule — the α-term).
+    pub lane_msgs: [u64; MAX_TIERS],
+}
+
+impl CommStats {
+    /// Tier-0 (intra-node / NVLink) bytes.
+    pub fn intra_bytes(&self) -> u64 {
+        self.lane_bytes[0]
+    }
+
+    /// Tier-1 (inter-node / InfiniBand) bytes.
+    pub fn inter_bytes(&self) -> u64 {
+        self.lane_bytes[1]
+    }
+
+    /// Tier-2 (WAN) bytes.
+    pub fn wan_bytes(&self) -> u64 {
+        self.lane_bytes[2]
+    }
+
+    pub fn intra_msgs(&self) -> u64 {
+        self.lane_msgs[0]
+    }
+
+    pub fn inter_msgs(&self) -> u64 {
+        self.lane_msgs[1]
+    }
+
+    pub fn wan_msgs(&self) -> u64 {
+        self.lane_msgs[2]
+    }
+
+    pub fn lane_sum_bytes(&self) -> u64 {
+        self.lane_bytes.iter().sum()
+    }
+
+    /// The lane-completeness invariant: every counted byte is attributed
+    /// to exactly one fabric tier. Use this instead of hand-written
+    /// `bytes == intra + inter` checks, which silently pass while
+    /// dropping a third tier.
+    #[track_caller]
+    pub fn assert_lane_invariant(&self) {
+        assert_eq!(
+            self.bytes,
+            self.lane_sum_bytes(),
+            "lane bytes {:?} do not sum to total {}",
+            self.lane_bytes,
+            self.bytes
+        );
+    }
 }
 
 /// One row per rank, one column per kind.
@@ -134,15 +186,25 @@ impl StatsBoard {
         self.record_split(rank, kind, bytes, 0);
     }
 
-    /// Record one logical collective call with lane-attributed volume and
-    /// one message event per lane the call touches.
+    /// Record one logical collective call with two-tier lane-attributed
+    /// volume and one message event per lane the call touches.
     pub fn record_split(&self, rank: usize, kind: CommKind, intra_bytes: u64, inter_bytes: u64) {
         let im = u64::from(intra_bytes > 0);
         let xm = u64::from(inter_bytes > 0);
         self.record_split_msgs(rank, kind, intra_bytes, inter_bytes, im, xm);
     }
 
-    /// Record one logical collective call with explicit per-lane message
+    /// Record one logical collective call with per-tier lane bytes and
+    /// one message event per lane the call touches.
+    pub fn record_bytes_lanes(&self, rank: usize, kind: CommKind, lane_bytes: [u64; MAX_TIERS]) {
+        let mut msgs = [0u64; MAX_TIERS];
+        for t in 0..MAX_TIERS {
+            msgs[t] = u64::from(lane_bytes[t] > 0);
+        }
+        self.record_lanes(rank, kind, lane_bytes, msgs);
+    }
+
+    /// Record one logical collective call with explicit two-tier message
     /// counts (the all-to-all transports count real per-peer messages).
     pub fn record_split_msgs(
         &self,
@@ -153,14 +215,33 @@ impl StatsBoard {
         intra_msgs: u64,
         inter_msgs: u64,
     ) {
+        let mut bytes = [0u64; MAX_TIERS];
+        let mut msgs = [0u64; MAX_TIERS];
+        bytes[0] = intra_bytes;
+        bytes[1] = inter_bytes;
+        msgs[0] = intra_msgs;
+        msgs[1] = inter_msgs;
+        self.record_lanes(rank, kind, bytes, msgs);
+    }
+
+    /// Record one logical collective call with per-tier lane bytes and
+    /// message counts. `bytes` is maintained as the lane sum by
+    /// construction, so the lane-completeness invariant cannot drift.
+    pub fn record_lanes(
+        &self,
+        rank: usize,
+        kind: CommKind,
+        lane_bytes: [u64; MAX_TIERS],
+        lane_msgs: [u64; MAX_TIERS],
+    ) {
         let mut g = self.inner.lock().unwrap();
         let cell = &mut g[rank][kind.index()];
         cell.calls += 1;
-        cell.intra_bytes += intra_bytes;
-        cell.inter_bytes += inter_bytes;
-        cell.bytes += intra_bytes + inter_bytes;
-        cell.intra_msgs += intra_msgs;
-        cell.inter_msgs += inter_msgs;
+        for t in 0..MAX_TIERS {
+            cell.lane_bytes[t] += lane_bytes[t];
+            cell.lane_msgs[t] += lane_msgs[t];
+            cell.bytes += lane_bytes[t];
+        }
     }
 
     pub fn rank_stats(&self, rank: usize) -> [CommStats; 6] {
@@ -179,10 +260,10 @@ impl StatsBoard {
             let c = row[kind.index()];
             acc.calls += c.calls;
             acc.bytes += c.bytes;
-            acc.intra_bytes += c.intra_bytes;
-            acc.inter_bytes += c.inter_bytes;
-            acc.intra_msgs += c.intra_msgs;
-            acc.inter_msgs += c.inter_msgs;
+            for t in 0..MAX_TIERS {
+                acc.lane_bytes[t] += c.lane_bytes[t];
+                acc.lane_msgs[t] += c.lane_msgs[t];
+            }
         }
         acc
     }
@@ -197,20 +278,21 @@ impl StatsBoard {
     /// Pretty table for logs/benches.
     pub fn render(&self) -> String {
         let mut out = String::from(
-            "kind            calls        bytes        intra        inter   intra-msgs   inter-msgs\n",
+            "kind            calls        bytes        intra        inter          wan   intra-msgs   inter-msgs\n",
         );
         for kind in ALL_KINDS {
             let t = self.total(kind);
             if t.calls > 0 {
                 out.push_str(&format!(
-                    "{:<14} {:>7} {:>12} {:>12} {:>12} {:>12} {:>12}\n",
+                    "{:<14} {:>7} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12}\n",
                     kind.name(),
                     t.calls,
                     t.bytes,
-                    t.intra_bytes,
-                    t.inter_bytes,
-                    t.intra_msgs,
-                    t.inter_msgs
+                    t.intra_bytes(),
+                    t.inter_bytes(),
+                    t.wan_bytes(),
+                    t.intra_msgs(),
+                    t.inter_msgs()
                 ));
             }
         }
@@ -228,25 +310,46 @@ pub struct RankTimeline {
     /// Virtual clock: completion time of the last awaited/blocking op or
     /// compute block.
     pub clock_s: f64,
-    /// NVLink lane occupied until this virtual time.
-    pub intra_busy_s: f64,
-    /// InfiniBand lane occupied until this virtual time.
-    pub inter_busy_s: f64,
+    /// Per-tier comm lane occupied until this virtual time.
+    pub lane_busy_s: [f64; MAX_TIERS],
     /// Sum of every comm phase duration — the no-overlap (serialized)
-    /// comm cost (always `intra_serialized_s + inter_serialized_s`).
+    /// comm cost (always `Σ lane_serialized_s[t]`).
     pub serialized_s: f64,
-    /// NVLink-lane share of `serialized_s`.
-    pub intra_serialized_s: f64,
-    /// InfiniBand-lane share of `serialized_s`.
-    pub inter_serialized_s: f64,
+    /// Per-tier share of `serialized_s`.
+    pub lane_serialized_s: [f64; MAX_TIERS],
     /// Total priced compute seconds on the compute lane.
     pub compute_s: f64,
 }
 
-/// Per-rank three-lane (compute / NVLink / IB) virtual scheduler. Ops are
-/// priced by the communicator (α-β model for comm, flop pricing for
-/// compute) and scheduled here; the board never blocks a real thread —
-/// it only accounts virtual time.
+impl RankTimeline {
+    /// Tier-0 (NVLink) share of `serialized_s`.
+    pub fn intra_serialized_s(&self) -> f64 {
+        self.lane_serialized_s[0]
+    }
+
+    /// Tier-1 (InfiniBand) share of `serialized_s`.
+    pub fn inter_serialized_s(&self) -> f64 {
+        self.lane_serialized_s[1]
+    }
+
+    /// Tier-2 (WAN) share of `serialized_s`.
+    pub fn wan_serialized_s(&self) -> f64 {
+        self.lane_serialized_s[2]
+    }
+
+    pub fn intra_busy_s(&self) -> f64 {
+        self.lane_busy_s[0]
+    }
+
+    pub fn inter_busy_s(&self) -> f64 {
+        self.lane_busy_s[1]
+    }
+}
+
+/// Per-rank multi-lane (compute + one lane per fabric tier) virtual
+/// scheduler. Ops are priced by the communicator (α-β model for comm,
+/// flop pricing for compute) and scheduled here; the board never blocks a
+/// real thread — it only accounts virtual time.
 #[derive(Debug)]
 pub struct TimelineBoard {
     inner: Mutex<Vec<RankTimeline>>,
@@ -264,7 +367,8 @@ impl TimelineBoard {
     /// finish_s)`; `intra_finish_s` is when the *pre-wire* intra phase
     /// completes (the early same-node pickup time). A blocking op advances
     /// the clock to its finish; a nonblocking op leaves the clock for
-    /// [`Self::complete`].
+    /// [`Self::complete`]. Two-tier convenience over
+    /// [`Self::schedule_lanes`].
     pub fn schedule(
         &self,
         rank: usize,
@@ -273,39 +377,44 @@ impl TimelineBoard {
         intra_post_s: f64,
         blocking: bool,
     ) -> (f64, f64) {
+        self.schedule_lanes(rank, &[(0, intra_s), (1, inter_s), (0, intra_post_s)], blocking)
+    }
+
+    /// Schedule one op as an ordered sequence of `(tier, duration)`
+    /// phases on the rank's per-tier lanes, each phase starting no
+    /// earlier than the previous phase's finish and no earlier than its
+    /// lane is free. Returns `(first_phase_finish_s, finish_s)` — the
+    /// first phase is the pre-wire intra hop hierarchical schedules
+    /// expose for early same-node pickup. Serialized sums accumulate
+    /// phase by phase, mirroring the clock's additions, so a purely
+    /// blocking comm schedule keeps `clock_s == serialized_s` *bitwise*;
+    /// the per-lane sums split the same additions by fabric.
+    pub fn schedule_lanes(
+        &self,
+        rank: usize,
+        phases: &[(usize, f64)],
+        blocking: bool,
+    ) -> (f64, f64) {
         let mut g = self.inner.lock().unwrap();
         let tl = &mut g[rank];
         let mut t = tl.clock_s;
-        let mut intra_finish = t;
-        if intra_s > 0.0 {
-            let start = t.max(tl.intra_busy_s);
-            t = start + intra_s;
-            tl.intra_busy_s = t;
-            intra_finish = t;
+        let mut first_finish = t;
+        for (i, &(tier, d)) in phases.iter().enumerate() {
+            if d > 0.0 {
+                let start = t.max(tl.lane_busy_s[tier]);
+                t = start + d;
+                tl.lane_busy_s[tier] = t;
+            }
+            if i == 0 {
+                first_finish = t;
+            }
+            tl.serialized_s += d;
+            tl.lane_serialized_s[tier] += d;
         }
-        if inter_s > 0.0 {
-            let start = t.max(tl.inter_busy_s);
-            t = start + inter_s;
-            tl.inter_busy_s = t;
-        }
-        if intra_post_s > 0.0 {
-            let start = t.max(tl.intra_busy_s);
-            t = start + intra_post_s;
-            tl.intra_busy_s = t;
-        }
-        // accumulate phase by phase, mirroring the clock's additions, so a
-        // purely blocking comm schedule keeps clock_s == serialized_s
-        // *bitwise*; the per-lane sums split the same additions by fabric
-        tl.serialized_s += intra_s;
-        tl.serialized_s += inter_s;
-        tl.serialized_s += intra_post_s;
-        tl.intra_serialized_s += intra_s;
-        tl.inter_serialized_s += inter_s;
-        tl.intra_serialized_s += intra_post_s;
         if blocking {
             tl.clock_s = t;
         }
-        (intra_finish, t)
+        (first_finish, t)
     }
 
     /// Occupy the rank's compute lane for `seconds` of priced block time.
@@ -348,6 +457,13 @@ impl TimelineBoard {
 mod tests {
     use super::*;
 
+    fn lanes2(intra: u64, inter: u64) -> [u64; MAX_TIERS] {
+        let mut l = [0u64; MAX_TIERS];
+        l[0] = intra;
+        l[1] = inter;
+        l
+    }
+
     #[test]
     fn records_and_totals() {
         let b = StatsBoard::new(2);
@@ -359,10 +475,8 @@ mod tests {
             CommStats {
                 calls: 1,
                 bytes: 100,
-                intra_bytes: 100,
-                inter_bytes: 0,
-                intra_msgs: 1,
-                inter_msgs: 0
+                lane_bytes: lanes2(100, 0),
+                lane_msgs: lanes2(1, 0),
             }
         );
         assert_eq!(b.total(CommKind::AllToAll).bytes, 150);
@@ -379,11 +493,11 @@ mod tests {
         b.record_split(0, CommKind::AllGather, 5, 0);
         let s = b.get(0, CommKind::AllGather);
         assert_eq!(s.calls, 2);
-        assert_eq!(s.intra_bytes, 35);
-        assert_eq!(s.inter_bytes, 12);
-        assert_eq!(s.bytes, s.intra_bytes + s.inter_bytes);
-        assert_eq!(s.intra_msgs, 2);
-        assert_eq!(s.inter_msgs, 1);
+        assert_eq!(s.intra_bytes(), 35);
+        assert_eq!(s.inter_bytes(), 12);
+        s.assert_lane_invariant();
+        assert_eq!(s.intra_msgs(), 2);
+        assert_eq!(s.inter_msgs(), 1);
     }
 
     #[test]
@@ -391,8 +505,37 @@ mod tests {
         let b = StatsBoard::new(1);
         b.record_split_msgs(0, CommKind::AllToAll, 64, 128, 3, 4);
         let s = b.get(0, CommKind::AllToAll);
-        assert_eq!((s.intra_msgs, s.inter_msgs), (3, 4));
-        assert_eq!(b.total(CommKind::AllToAll).inter_msgs, 4);
+        assert_eq!((s.intra_msgs(), s.inter_msgs()), (3, 4));
+        assert_eq!(b.total(CommKind::AllToAll).inter_msgs(), 4);
+    }
+
+    #[test]
+    fn wan_lane_records_and_totals() {
+        let b = StatsBoard::new(2);
+        let mut bytes = lanes2(10, 20);
+        bytes[2] = 30;
+        let mut msgs = lanes2(1, 2);
+        msgs[2] = 3;
+        b.record_lanes(0, CommKind::AllToAll, bytes, msgs);
+        b.record_lanes(1, CommKind::AllToAll, bytes, msgs);
+        let s = b.get(0, CommKind::AllToAll);
+        assert_eq!(s.bytes, 60);
+        assert_eq!(s.wan_bytes(), 30);
+        assert_eq!(s.wan_msgs(), 3);
+        s.assert_lane_invariant();
+        let t = b.total(CommKind::AllToAll);
+        assert_eq!(t.lane_bytes[2], 60);
+        t.assert_lane_invariant();
+    }
+
+    #[test]
+    #[should_panic(expected = "lane bytes")]
+    fn lane_invariant_catches_dropped_lane() {
+        let mut s = CommStats { calls: 1, bytes: 100, ..CommStats::default() };
+        s.lane_bytes[0] = 40;
+        s.lane_bytes[1] = 30;
+        // 30 WAN bytes went missing: the old intra+inter check can't see it
+        s.assert_lane_invariant();
     }
 
     #[test]
@@ -402,6 +545,7 @@ mod tests {
         let r = b.render();
         assert!(r.contains("all_to_all"));
         assert!(r.contains("intra"));
+        assert!(r.contains("wan"));
         assert!(r.contains("16"));
     }
 
@@ -442,9 +586,34 @@ mod tests {
         t.schedule(0, 2.0, 3.0, 1.5, true);
         t.schedule(0, 0.5, 0.0, 0.0, true);
         let tl = t.get(0);
-        assert_eq!(tl.intra_serialized_s, 2.0 + 1.5 + 0.5);
-        assert_eq!(tl.inter_serialized_s, 3.0);
-        assert_eq!(tl.serialized_s, tl.intra_serialized_s + tl.inter_serialized_s);
+        assert_eq!(tl.intra_serialized_s(), 2.0 + 1.5 + 0.5);
+        assert_eq!(tl.inter_serialized_s(), 3.0);
+        assert_eq!(tl.serialized_s, tl.intra_serialized_s() + tl.inter_serialized_s());
+    }
+
+    #[test]
+    fn timeline_three_tier_phases_occupy_three_lanes() {
+        let t = TimelineBoard::new(1);
+        // node hop, DC hop, WAN hop in sequence — each on its own lane
+        let (first, fin) = t.schedule_lanes(0, &[(0, 1.0), (1, 2.0), (2, 4.0)], true);
+        assert_eq!(first, 1.0);
+        assert_eq!(fin, 7.0);
+        let tl = t.get(0);
+        assert_eq!(tl.lane_serialized_s[0], 1.0);
+        assert_eq!(tl.lane_serialized_s[1], 2.0);
+        assert_eq!(tl.wan_serialized_s(), 4.0);
+        assert_eq!(tl.serialized_s, 7.0);
+        assert_eq!(tl.clock_s, 7.0);
+        // a second op's WAN phase queues behind the first's WAN lane
+        let t2 = TimelineBoard::new(1);
+        let (_, fa) = t2.schedule_lanes(0, &[(2, 4.0)], false);
+        let (_, fb) = t2.schedule_lanes(0, &[(0, 1.0), (2, 4.0)], false);
+        assert_eq!(fa, 4.0);
+        // b: intra [0,1], wan starts max(1, 4) = 4 -> 8
+        assert_eq!(fb, 8.0);
+        t2.complete(0, fa);
+        t2.complete(0, fb);
+        assert_eq!(t2.get(0).clock_s, 8.0);
     }
 
     #[test]

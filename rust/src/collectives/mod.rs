@@ -11,8 +11,9 @@
 //! * per-rank, per-kind **byte and message accounting** — the functional
 //!   analog of the paper's Figure 5 communication breakdown (DTD must show
 //!   up here as an exact `G_tensor x` reduction in all-to-all payload) —
-//!   split into intra-node and inter-node lanes, with per-peer message
-//!   counts (the α-term) on the all-to-all,
+//!   split into one lane per fabric tier (intra-node / inter-node, plus
+//!   WAN on a cross-DC fabric: `CommStats::lane_bytes`/`lane_msgs`),
+//!   with per-peer message counts (the α-term) on the all-to-all,
 //! * deadlock detection via timeout (a mismatched op sequence in the engine
 //!   is a bug; we panic with the op descriptor instead of hanging).
 //!
@@ -45,8 +46,9 @@
 //! all-to-all's same-node receipts while its inter-node phase is still in
 //! flight. When a cost model is attached
 //! ([`Communicator::set_cost_model`]) each op is priced with the α-β
-//! model and scheduled on a per-rank two-lane [`TimelineBoard`], yielding
-//! a measured serialized-vs-critical-path overlap timeline.
+//! model and scheduled on a per-rank [`TimelineBoard`] with one comm
+//! lane per fabric tier, yielding a measured
+//! serialized-vs-critical-path overlap timeline.
 //!
 //! The α-β *cost* model for paper-scale figures lives in `perfmodel`, not
 //! here; this module is about correctness, measured volume, and the
@@ -60,4 +62,4 @@ pub use accounting::{CommKind, CommStats, RankTimeline, StatsBoard, TimelineBoar
 pub use rendezvous::{
     Communicator, PendingAllGather, PendingAllReduce, PendingAllToAll, Rendezvous,
 };
-pub use transport::{ALL_STRATEGIES, CollectiveStrategy, NodeMap, NodePlan};
+pub use transport::{ALL_STRATEGIES, CollectiveStrategy, NodeMap, NodePlan, MAX_TIERS};

@@ -58,7 +58,8 @@
 //!
 //! When a cost model is attached ([`Communicator::set_cost_model`]),
 //! every op is priced with the α-β `perfmodel` phased costs and scheduled
-//! on the rank's three-lane (compute / NVLink / IB) [`TimelineBoard`]:
+//! on the rank's [`TimelineBoard`] — a compute lane plus one comm lane
+//! per fabric tier (NVLink / IB on the two-tier presets):
 //! blocking ops advance the rank's virtual clock to their finish, issued
 //! ops advance it only at `wait`, and the engine prices its block compute
 //! onto the compute lane via [`Communicator::advance_compute`] — so the
@@ -72,10 +73,10 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::collectives::accounting::{CommKind, StatsBoard, TimelineBoard};
-use crate::collectives::transport::{CollectiveStrategy, NodeMap, NodePlan};
+use crate::collectives::transport::{CollectiveStrategy, NodeMap, NodePlan, MAX_TIERS};
 use crate::config::ClusterConfig;
 use crate::perfmodel::collective_cost::{
-    allgather_phased, allreduce_phased, alltoall_phased, alltoall_pxn_schedule, PhasedCost,
+    allgather_phased, allreduce_phased, alltoall_phased, alltoall_pxn_schedule_tiers, PhasedCost,
 };
 use crate::topology::GroupId;
 use crate::util::tensor::Tensor;
@@ -400,14 +401,19 @@ impl Communicator {
         strategy: CollectiveStrategy,
         gpus_per_node: usize,
     ) -> Self {
-        Communicator {
-            rez,
-            rank,
-            seqs: HashMap::new(),
-            strategy,
-            nodes: NodeMap::new(gpus_per_node),
-            cost: None,
-        }
+        Self::with_fabric(rez, rank, strategy, NodeMap::new(gpus_per_node))
+    }
+
+    /// Select a transport backend and a full fabric-boundary map (node and
+    /// datacenter boundaries — the N-tier generalization of
+    /// [`Self::with_transport`]).
+    pub fn with_fabric(
+        rez: Arc<Rendezvous>,
+        rank: usize,
+        strategy: CollectiveStrategy,
+        nodes: NodeMap,
+    ) -> Self {
+        Communicator { rez, rank, seqs: HashMap::new(), strategy, nodes, cost: None }
     }
 
     pub fn rank(&self) -> usize {
@@ -428,11 +434,13 @@ impl Communicator {
 
     /// Attach an α-β cost model: every subsequent collective is priced
     /// with the `perfmodel` phased costs and scheduled on this rank's
-    /// overlap timeline. The cluster's `gpus_per_node` is overridden by
-    /// the communicator's own node map so pricing and transport agree.
+    /// overlap timeline. The cluster's fabric boundaries (`gpus_per_node`
+    /// and `gpus_per_dc`) are overridden by the communicator's own node
+    /// map so pricing and transport agree.
     pub fn set_cost_model(&mut self, mut cluster: ClusterConfig) {
         cluster.gpus_per_node =
             if self.nodes.node_size == 0 { usize::MAX } else { self.nodes.node_size };
+        cluster.gpus_per_dc = if self.nodes.node_size == 0 { 0 } else { self.nodes.dc_size };
         self.cost = Some(cluster);
     }
 
@@ -465,10 +473,12 @@ impl Communicator {
     }
 
     /// Price one op (zero without a cost model) and schedule its phases on
-    /// the rank's two-lane timeline. The PXN all-to-all schedules three
-    /// phases (pre-wire intra, wire, post-wire redistribute) so the early
-    /// same-node pickup time excludes the redistribute hop, which
-    /// physically follows the leaders' wire exchange.
+    /// the rank's per-tier timeline lanes. The PXN all-to-all schedules
+    /// four phases (pre-wire intra, same-DC wire, WAN wire, post-wire
+    /// redistribute) so the early same-node pickup time excludes the
+    /// redistribute hop, which physically follows the leaders' wire
+    /// exchange; every other op schedules one phase per fabric tier in
+    /// ascending tier order.
     fn schedule_op(
         &self,
         kind: CommKind,
@@ -476,20 +486,21 @@ impl Communicator {
         bytes: f64,
         blocking: bool,
     ) -> OpTimes {
-        let (intra_s, inter_s, post_s) = match &self.cost {
-            None => (0.0, 0.0, 0.0),
+        let phases: Vec<(usize, f64)> = match &self.cost {
+            None => Vec::new(),
             Some(c) => {
                 if kind == CommKind::AllToAll
                     && self.strategy == CollectiveStrategy::HierarchicalPxn
                 {
-                    alltoall_pxn_schedule(c, members, bytes)
+                    let (pre, wire_dc, wire_wan, post) =
+                        alltoall_pxn_schedule_tiers(c, members, bytes);
+                    vec![(0, pre), (1, wire_dc), (2, wire_wan), (0, post)]
                 } else {
                     let pc = match kind {
                         CommKind::AllReduce => allreduce_phased(c, self.strategy, members, bytes),
                         CommKind::ReduceScatter => {
                             // one of the two stages of a ring all-reduce
-                            let p = allreduce_phased(c, self.strategy, members, bytes);
-                            PhasedCost { intra_s: 0.5 * p.intra_s, inter_s: 0.5 * p.inter_s }
+                            allreduce_phased(c, self.strategy, members, bytes).scaled(0.5)
                         }
                         CommKind::AllGather => allgather_phased(c, self.strategy, members, bytes),
                         CommKind::AllToAll => alltoall_phased(c, self.strategy, members, bytes),
@@ -497,12 +508,12 @@ impl Communicator {
                         CommKind::Broadcast => allgather_phased(c, self.strategy, members, bytes),
                         CommKind::Barrier => PhasedCost::default(),
                     };
-                    (pc.intra_s, pc.inter_s, 0.0)
+                    pc.lanes.iter().copied().enumerate().collect()
                 }
             }
         };
         let (intra_finish_s, finish_s) =
-            self.rez.timeline.schedule(self.rank, intra_s, inter_s, post_s, blocking);
+            self.rez.timeline.schedule_lanes(self.rank, &phases, blocking);
         OpTimes { intra_finish_s, finish_s }
     }
 
@@ -512,26 +523,50 @@ impl Communicator {
     }
 
     /// Lane attribution for the flat transport: one undifferentiated lane,
-    /// charged to the bottleneck (inter-node) fabric when the job spans
-    /// nodes — the flat backend cannot distinguish, which is exactly the
+    /// charged to the bottleneck fabric — the widest tier the job spans —
+    /// because the flat backend cannot distinguish, which is exactly the
     /// limitation the hierarchical backends remove.
-    fn flat_lanes(&self, bytes: u64) -> (u64, u64) {
-        if self.nodes.spans_nodes(self.rez.world()) {
-            (0, bytes)
-        } else {
-            (bytes, 0)
-        }
+    fn flat_lanes(&self, bytes: u64) -> [u64; MAX_TIERS] {
+        let mut lanes = [0u64; MAX_TIERS];
+        lanes[self.nodes.job_tier(self.rez.world())] = bytes;
+        lanes
     }
 
     /// Lane attribution for hierarchical reducing ops (all-reduce /
     /// reduce-scatter): each member combines into its node's partial over
-    /// the intra-node fabric (when it has node peers), and each node
-    /// leader exchanges one partial-sized message over the wire.
-    fn hier_reduce_lanes(&self, members: &[usize], pos: usize, bytes: u64) -> (u64, u64) {
-        let plan = NodePlan::build(self.nodes, members, pos);
-        let intra = if plan.my_subset().len() > 1 { bytes } else { 0 };
-        let inter = if plan.n_nodes() > 1 && plan.is_leader() { bytes } else { 0 };
-        (intra, inter)
+    /// the intra-node fabric (when it has node peers); each node leader
+    /// exchanges one partial-sized message across its datacenter's nodes
+    /// (when the DC holds more than one group node); and each
+    /// datacenter's leader — the leader of the DC's first group node —
+    /// bridges one DC partial over the WAN when the group spans DCs.
+    fn hier_reduce_lanes(&self, members: &[usize], pos: usize, bytes: u64) -> [u64; MAX_TIERS] {
+        let map = self.nodes;
+        let plan = NodePlan::build(map, members, pos);
+        let mut lanes = [0u64; MAX_TIERS];
+        if plan.my_subset().len() > 1 {
+            lanes[0] = bytes;
+        }
+        if plan.n_nodes() > 1 && plan.is_leader() {
+            let my_node = plan.nodes[plan.my_node].0;
+            let my_dc = map.dc_of_node(my_node);
+            let dc_nodes =
+                plan.nodes.iter().filter(|(node, _)| map.dc_of_node(*node) == my_dc).count();
+            if dc_nodes > 1 {
+                lanes[1] = bytes;
+            }
+            let first_dc_node = plan
+                .nodes
+                .iter()
+                .map(|(node, _)| *node)
+                .find(|&node| map.dc_of_node(node) == my_dc);
+            let mut dcs: Vec<usize> =
+                plan.nodes.iter().map(|(node, _)| map.dc_of_node(*node)).collect();
+            dcs.dedup();
+            if dcs.len() > 1 && first_dc_node == Some(my_node) {
+                lanes[2] = bytes;
+            }
+        }
+        lanes
     }
 
     // ------------------------------------------------------------------
@@ -573,13 +608,13 @@ impl Communicator {
         let key = (gid, seq, 0u32);
         let bytes = (t.numel() * 4) as u64;
         let times = self.schedule_op(CommKind::AllReduce, members, bytes as f64, blocking);
-        let (intra, inter) = match self.strategy {
+        let lanes = match self.strategy {
             CollectiveStrategy::Flat => self.flat_lanes(bytes),
             CollectiveStrategy::Hierarchical | CollectiveStrategy::HierarchicalPxn => {
                 self.hier_reduce_lanes(members, pos, bytes)
             }
         };
-        self.rez.stats.record_split(self.rank, CommKind::AllReduce, intra, inter);
+        self.rez.stats.record_bytes_lanes(self.rank, CommKind::AllReduce, lanes);
         self.rez.deposit_nowait(
             key,
             CommKind::AllReduce,
@@ -631,13 +666,13 @@ impl Communicator {
         let key = (gid, seq, 0u32);
         let bytes = (t.numel() * 4) as u64;
         self.schedule_op(CommKind::ReduceScatter, members, bytes as f64, true);
-        let (intra, inter) = match self.strategy {
+        let lanes = match self.strategy {
             CollectiveStrategy::Flat => self.flat_lanes(bytes),
             CollectiveStrategy::Hierarchical | CollectiveStrategy::HierarchicalPxn => {
                 self.hier_reduce_lanes(members, pos, bytes)
             }
         };
-        self.rez.stats.record_split(self.rank, CommKind::ReduceScatter, intra, inter);
+        self.rez.stats.record_bytes_lanes(self.rank, CommKind::ReduceScatter, lanes);
         self.rez.deposit(
             key,
             CommKind::ReduceScatter,
@@ -674,16 +709,33 @@ impl Communicator {
         self.schedule_op(CommKind::Broadcast, members, (t.numel() * 4) as f64, true);
         if pos == root_pos {
             let bytes = (t.numel() * 4) as u64;
-            let (intra, inter) = match self.strategy {
+            let lanes = match self.strategy {
                 CollectiveStrategy::Flat => self.flat_lanes(bytes),
                 CollectiveStrategy::Hierarchical | CollectiveStrategy::HierarchicalPxn => {
-                    let plan = NodePlan::build(self.nodes, members, pos);
-                    let intra = if plan.my_subset().len() > 1 { bytes } else { 0 };
-                    let inter = if plan.n_nodes() > 1 { bytes } else { 0 };
-                    (intra, inter)
+                    let map = self.nodes;
+                    let plan = NodePlan::build(map, members, pos);
+                    let mut lanes = [0u64; MAX_TIERS];
+                    if plan.my_subset().len() > 1 {
+                        lanes[0] = bytes;
+                    }
+                    // the root's block is counted once per spanning tier
+                    // it must cross to reach every member
+                    let my_node = plan.nodes[plan.my_node].0;
+                    let my_dc = map.dc_of_node(my_node);
+                    for (node, _) in &plan.nodes {
+                        if *node == my_node {
+                            continue;
+                        }
+                        if map.dc_of_node(*node) == my_dc {
+                            lanes[1] = bytes;
+                        } else {
+                            lanes[2] = bytes;
+                        }
+                    }
+                    lanes
                 }
             };
-            self.rez.stats.record_split(self.rank, CommKind::Broadcast, intra, inter);
+            self.rez.stats.record_bytes_lanes(self.rank, CommKind::Broadcast, lanes);
             self.rez.deposit(key, CommKind::Broadcast, pos, n, vec![t.data().to_vec()],
                 &format!("broadcast g={gid:?} seq={seq}"));
         } else {
@@ -706,7 +758,7 @@ impl Communicator {
         let pos = self.my_pos(members);
         let seq = self.next_seq(gid);
         let key = (gid, seq, 0u32);
-        self.rez.stats.record_split(self.rank, CommKind::Barrier, 0, 0);
+        self.rez.stats.record_bytes_lanes(self.rank, CommKind::Barrier, [0; MAX_TIERS]);
         self.rez.deposit(key, CommKind::Barrier, pos, n, vec![],
             &format!("barrier g={gid:?} seq={seq}"));
         self.rez.take(key, n, |_| ());
@@ -758,13 +810,10 @@ impl Communicator {
         let times = self.schedule_op(CommKind::AllGather, members, own_bytes as f64, blocking);
         let state = match self.strategy {
             CollectiveStrategy::Flat => {
-                let (intra, inter) = self.flat_lanes(own_bytes);
-                let peers = (n - 1) as u64;
-                let (im, xm) =
-                    if self.nodes.spans_nodes(self.rez.world()) { (0, peers) } else { (peers, 0) };
-                self.rez
-                    .stats
-                    .record_split_msgs(self.rank, CommKind::AllGather, intra, inter, im, xm);
+                let lanes = self.flat_lanes(own_bytes);
+                let mut msgs = [0u64; MAX_TIERS];
+                msgs[self.nodes.job_tier(self.rez.world())] = (n - 1) as u64;
+                self.rez.stats.record_lanes(self.rank, CommKind::AllGather, lanes, msgs);
                 let key = (gid, seq, 0u32);
                 self.rez.deposit_nowait(key, CommKind::AllGather, pos, n,
                     vec![t.data().to_vec()],
@@ -908,37 +957,54 @@ impl Communicator {
             }
         }
 
-        let mut intra = if k > 1 { own_bytes } else { 0 };
-        let mut inter = 0u64;
-        let (intra_msgs, inter_msgs);
+        let map = self.nodes;
+        let mut lanes = [0u64; MAX_TIERS];
+        let mut msgs = [0u64; MAX_TIERS];
+        if k > 1 {
+            lanes[0] = own_bytes;
+        }
         if leader {
-            inter += my_block_bytes;
+            // the node block leaves the leader once, counted on the widest
+            // tier any peer node sits behind; the per-destination α-cost
+            // lives in the message counts
+            let my_node = plan.nodes[plan.my_node].0;
+            let my_dc = map.dc_of_node(my_node);
+            let peer_tier = |node: usize| if map.dc_of_node(node) == my_dc { 1 } else { 2 };
+            let wire_tier = plan
+                .nodes
+                .iter()
+                .filter(|(node, _)| *node != my_node)
+                .map(|(node, _)| peer_tier(*node))
+                .max()
+                .unwrap_or(1);
+            lanes[wire_tier] += my_block_bytes;
             if k > 1 {
                 // redistributing the remote blocks to node peers
-                intra += total_bytes - my_block_bytes;
+                lanes[0] += total_bytes - my_block_bytes;
             }
-            intra_msgs = (k - 1) as u64;
+            msgs[0] = (k - 1) as u64;
             // the plain hierarchical leader delivers its node block to
             // every cross-node member; the PXN leader batches one framed
             // message per peer leader — equal bytes, fewer α-terms (the
             // carried-over PXN treatment for the spanning DTD all-gather)
-            inter_msgs = if self.strategy == CollectiveStrategy::HierarchicalPxn {
-                (plan.n_nodes() - 1) as u64
+            if self.strategy == CollectiveStrategy::HierarchicalPxn {
+                for (node, _) in &plan.nodes {
+                    if *node != my_node {
+                        msgs[peer_tier(*node)] += 1;
+                    }
+                }
             } else {
-                (n - k) as u64
-            };
+                for (node, subset_k) in &plan.nodes {
+                    if *node != my_node {
+                        msgs[peer_tier(*node)] += subset_k.len() as u64;
+                    }
+                }
+            }
         } else {
             // one contribution forwarded to the node leader
-            (intra_msgs, inter_msgs) = (1, 0);
+            msgs[0] = 1;
         }
-        self.rez.stats.record_split_msgs(
-            self.rank,
-            CommKind::AllGather,
-            intra,
-            inter,
-            intra_msgs,
-            inter_msgs,
-        );
+        self.rez.stats.record_lanes(self.rank, CommKind::AllGather, lanes, msgs);
         out
     }
 
@@ -1011,15 +1077,10 @@ impl Communicator {
 
         let state = match self.strategy {
             CollectiveStrategy::Flat => {
-                let (intra, inter) = self.flat_lanes(local_bytes);
-                let (im, xm) = if self.nodes.spans_nodes(self.rez.world()) {
-                    (0, peer_msgs)
-                } else {
-                    (peer_msgs, 0)
-                };
-                self.rez
-                    .stats
-                    .record_split_msgs(self.rank, CommKind::AllToAll, intra, inter, im, xm);
+                let lanes = self.flat_lanes(local_bytes);
+                let mut msgs = [0u64; MAX_TIERS];
+                msgs[self.nodes.job_tier(self.rez.world())] = peer_msgs;
+                self.rez.stats.record_lanes(self.rank, CommKind::AllToAll, lanes, msgs);
                 let key = (gid, seq, 0u32);
                 self.rez.deposit_nowait(key, CommKind::AllToAll, pos, n, send,
                     &format!("all_to_all g={gid:?} seq={seq}"));
@@ -1042,15 +1103,25 @@ impl Communicator {
                         same_node[p] = true;
                     }
                     let mine = std::mem::take(&mut send[pos]);
-                    let intra_bytes: u64 = subset
-                        .iter()
-                        .filter(|&&p| p != pos)
-                        .map(|&p| (send[p].len() * 4) as u64)
-                        .sum();
-                    let inter_bytes: u64 = (0..n)
-                        .filter(|&p| !same_node[p])
-                        .map(|p| (send[p].len() * 4) as u64)
-                        .sum();
+                    // per-destination lane attribution: same-node rows ride
+                    // tier 0, spanning rows the tier their destination sits
+                    // behind (inter-node or WAN)
+                    let mut lane_bytes = [0u64; MAX_TIERS];
+                    let mut lane_msgs = [0u64; MAX_TIERS];
+                    lane_msgs[0] = (k - 1) as u64;
+                    for p in 0..n {
+                        if p == pos {
+                            continue;
+                        }
+                        let b = (send[p].len() * 4) as u64;
+                        if same_node[p] {
+                            lane_bytes[0] += b;
+                        } else {
+                            let tier = self.nodes.tier_of(self.rank, members[p]);
+                            lane_bytes[tier] += b;
+                            lane_msgs[tier] += 1;
+                        }
+                    }
 
                     // phase 1 (intra): payloads between same-node members
                     if k > 1 {
@@ -1071,14 +1142,9 @@ impl Communicator {
                     let key2 = (gid, seq, ptag(2, 0));
                     self.rez.deposit_nowait(key2, CommKind::AllToAll, pos, n, remote_send,
                         &format!("all_to_all/inter g={gid:?} seq={seq}"));
-                    self.rez.stats.record_split_msgs(
-                        self.rank,
-                        CommKind::AllToAll,
-                        intra_bytes,
-                        inter_bytes,
-                        (k - 1) as u64,
-                        (n - k) as u64,
-                    );
+                    self.rez
+                        .stats
+                        .record_lanes(self.rank, CommKind::AllToAll, lane_bytes, lane_msgs);
                     A2aState::Hier { gid, seq, plan, pos, n, same_node, mine, early: None }
                 }
             }
@@ -1329,9 +1395,15 @@ impl Communicator {
             .collect();
 
         let desc3 = format!("all_to_all/pxn-dist g={gid:?} seq={seq} node={my_node}");
-        let mut intra_bytes = own_same_bytes;
-        let mut inter_bytes = 0u64;
-        let (intra_msgs, inter_msgs);
+        // per-tier lane attribution: a leader's batch to node kk crosses
+        // the inter-node fabric when kk shares our datacenter, the WAN
+        // otherwise
+        let map = self.nodes;
+        let my_dc = map.dc_of_node(plan.nodes[my_node].0);
+        let peer_tier = |kk: usize| if map.dc_of_node(plan.nodes[kk].0) == my_dc { 1 } else { 2 };
+        let mut lane_bytes = [0u64; MAX_TIERS];
+        let mut lane_msgs = [0u64; MAX_TIERS];
+        lane_bytes[0] = own_same_bytes;
 
         if leader {
             // phase 1b pickup: the node's cross-node send vectors, in
@@ -1371,7 +1443,7 @@ impl Communicator {
                         );
                         batch.push(rows.len() as f32);
                         batch.extend_from_slice(rows);
-                        inter_bytes += (rows.len() * 4) as u64;
+                        lane_bytes[peer_tier(kk)] += (rows.len() * 4) as u64;
                     }
                 }
             }
@@ -1418,7 +1490,7 @@ impl Communicator {
                         } else {
                             per_member[i].push(len as f32);
                             per_member[i].extend_from_slice(data);
-                            intra_bytes += (len * 4) as u64;
+                            lane_bytes[0] += (len * 4) as u64;
                         }
                     }
                 }
@@ -1439,12 +1511,16 @@ impl Communicator {
                     )
                 });
             }
-            intra_msgs = 2 * (k as u64 - 1);
-            inter_msgs = m as u64 - 1;
+            lane_msgs[0] = 2 * (k as u64 - 1);
+            for kk in 0..m {
+                if kk != my_node {
+                    lane_msgs[peer_tier(kk)] += 1;
+                }
+            }
         } else {
             // non-leader: the cross rows were forwarded to the leader over
             // NVLink at issue; pick up our remote rows from phase 3
-            intra_bytes += own_cross_bytes;
+            lane_bytes[0] += own_cross_bytes;
             let key3 = (gid, seq, ptag(5, my_node));
             self.rez.wait_full(key3, 1, &desc3);
             // frame column `my_subpos` has exactly one reader (us)
@@ -1461,19 +1537,11 @@ impl Communicator {
                 cur += len;
             }
             assert_eq!(cur, frames.len(), "pxn redistribution framing mismatch");
-            intra_msgs = k as u64; // (k-1) same-node peers + 1 leader forward
-            inter_msgs = 0;
+            lane_msgs[0] = k as u64; // (k-1) same-node peers + 1 leader forward
         }
 
         out[pos] = mine;
-        self.rez.stats.record_split_msgs(
-            self.rank,
-            CommKind::AllToAll,
-            intra_bytes,
-            inter_bytes,
-            intra_msgs,
-            inter_msgs,
-        );
+        self.rez.stats.record_lanes(self.rank, CommKind::AllToAll, lane_bytes, lane_msgs);
         out
     }
 }
@@ -1681,7 +1749,7 @@ mod tests {
                 assert_eq!(flat, hier, "strategy={strategy:?} gpn={gpn}");
                 let t = rez.stats.total(CommKind::AllToAll);
                 assert_eq!(t.calls, 6);
-                assert_eq!(t.bytes, t.intra_bytes + t.inter_bytes);
+                t.assert_lane_invariant();
             }
         }
     }
@@ -1757,8 +1825,8 @@ mod tests {
             |r, mut c| c.all_to_all(gid(1), &members, send(r)),
         );
         let h = hier.stats.get(0, CommKind::AllToAll);
-        assert_eq!(h.intra_bytes, 32);
-        assert_eq!(h.inter_bytes, 64);
+        assert_eq!(h.intra_bytes(), 32);
+        assert_eq!(h.inter_bytes(), 64);
         // flat on the same 2-node job: everything in the inter lane
         let (_, flat) = run_ranks_transport(
             4,
@@ -1767,11 +1835,11 @@ mod tests {
             |r, mut c| c.all_to_all(gid(1), &members, send(r)),
         );
         let f = flat.stats.get(0, CommKind::AllToAll);
-        assert_eq!(f.intra_bytes, 0);
-        assert_eq!(f.inter_bytes, 96);
+        assert_eq!(f.intra_bytes(), 0);
+        assert_eq!(f.inter_bytes(), 96);
         // totals agree; hierarchical strictly reduces the inter lane
         assert_eq!(f.bytes, h.bytes);
-        assert!(h.inter_bytes < f.inter_bytes);
+        assert!(h.inter_bytes() < f.inter_bytes());
         // single-node job: flat stays in the intra lane
         let (_, single) = run_ranks_transport(
             4,
@@ -1780,8 +1848,8 @@ mod tests {
             |r, mut c| c.all_to_all(gid(1), &members, send(r)),
         );
         let s = single.stats.get(0, CommKind::AllToAll);
-        assert_eq!(s.inter_bytes, 0);
-        assert_eq!(s.intra_bytes, 96);
+        assert_eq!(s.inter_bytes(), 0);
+        assert_eq!(s.intra_bytes(), 96);
     }
 
     /// PXN lane + message accounting on a uniform workload: the leader
@@ -1807,22 +1875,22 @@ mod tests {
         let ht = hier.stats.total(CommKind::AllToAll);
         let pt = pxn.stats.total(CommKind::AllToAll);
         // inter bytes identical, inter messages strictly fewer
-        assert_eq!(pt.inter_bytes, ht.inter_bytes);
-        assert!(pt.inter_msgs < ht.inter_msgs, "{} vs {}", pt.inter_msgs, ht.inter_msgs);
+        assert_eq!(pt.inter_bytes(), ht.inter_bytes());
+        assert!(pt.inter_msgs() < ht.inter_msgs(), "{} vs {}", pt.inter_msgs(), ht.inter_msgs());
         // hier: 2 inter msgs per rank; pxn: 1 per leader (2 leaders)
-        assert_eq!(ht.inter_msgs, 8);
-        assert_eq!(pt.inter_msgs, 2);
+        assert_eq!(ht.inter_msgs(), 8);
+        assert_eq!(pt.inter_msgs(), 2);
         // leader (rank 0): same-node 32B + redistribution of rank 1's
         // inbound cross rows (2 rows x 32B = 64B) intra; node cross 128B inter
         let l = pxn.stats.get(0, CommKind::AllToAll);
-        assert_eq!(l.intra_bytes, 32 + 64);
-        assert_eq!(l.inter_bytes, 128);
-        assert_eq!((l.intra_msgs, l.inter_msgs), (2, 1));
+        assert_eq!(l.intra_bytes(), 32 + 64);
+        assert_eq!(l.inter_bytes(), 128);
+        assert_eq!((l.intra_msgs(), l.inter_msgs()), (2, 1));
         // non-leader (rank 1): same-node 32B + forwarded cross 64B, no inter
         let nl = pxn.stats.get(1, CommKind::AllToAll);
-        assert_eq!(nl.intra_bytes, 32 + 64);
-        assert_eq!(nl.inter_bytes, 0);
-        assert_eq!((nl.intra_msgs, nl.inter_msgs), (2, 0));
+        assert_eq!(nl.intra_bytes(), 32 + 64);
+        assert_eq!(nl.inter_bytes(), 0);
+        assert_eq!((nl.intra_msgs(), nl.inter_msgs()), (2, 0));
     }
 
     /// All-gather lanes: per-node blocks cross the wire once (leaders),
@@ -1842,12 +1910,12 @@ mod tests {
         // leader (rank 0): own 16B intra + remote block 32B intra redist,
         // ships its node block (32B) inter
         let l = rez.stats.get(0, CommKind::AllGather);
-        assert_eq!(l.intra_bytes, 16 + 32);
-        assert_eq!(l.inter_bytes, 32);
+        assert_eq!(l.intra_bytes(), 16 + 32);
+        assert_eq!(l.inter_bytes(), 32);
         // non-leader (rank 1): own contribution only
         let nl = rez.stats.get(1, CommKind::AllGather);
-        assert_eq!(nl.intra_bytes, 16);
-        assert_eq!(nl.inter_bytes, 0);
+        assert_eq!(nl.intra_bytes(), 16);
+        assert_eq!(nl.inter_bytes(), 0);
     }
 
     /// A spanning all-gather (the DTD return path at tp > gpus_per_node)
@@ -1872,11 +1940,11 @@ mod tests {
         let ht = hier.stats.total(CommKind::AllGather);
         let pt = pxn.stats.total(CommKind::AllGather);
         // equal bytes in both lanes ...
-        assert_eq!((pt.intra_bytes, pt.inter_bytes), (ht.intra_bytes, ht.inter_bytes));
+        assert_eq!((pt.intra_bytes(), pt.inter_bytes()), (ht.intra_bytes(), ht.inter_bytes()));
         // ... strictly fewer inter messages: 2 leaders x (m-1)=1 vs x (n-k)=2
-        assert!(pt.inter_msgs < ht.inter_msgs, "{} vs {}", pt.inter_msgs, ht.inter_msgs);
-        assert_eq!(ht.inter_msgs, 4);
-        assert_eq!(pt.inter_msgs, 2);
+        assert!(pt.inter_msgs() < ht.inter_msgs(), "{} vs {}", pt.inter_msgs(), ht.inter_msgs());
+        assert_eq!(ht.inter_msgs(), 4);
+        assert_eq!(pt.inter_msgs(), 2);
         // per-rank message counts match the analytic lane model
         let backends = [
             (&hier, CollectiveStrategy::Hierarchical),
@@ -1886,7 +1954,7 @@ mod tests {
             for r in 0..4 {
                 let s = rez.stats.get(r, CommKind::AllGather);
                 let want = lane_msgs_allgather(strategy, &members, r, 2, 4);
-                assert_eq!((s.intra_msgs, s.inter_msgs), want, "{strategy:?} rank {r}");
+                assert_eq!((s.intra_msgs(), s.inter_msgs()), want, "{strategy:?} rank {r}");
             }
         }
     }

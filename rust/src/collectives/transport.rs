@@ -79,21 +79,42 @@ impl CollectiveStrategy {
     }
 }
 
-/// Node-boundary map for a job: rank `r` lives on node `r / node_size`.
-/// `node_size == 0` means "one big node" (no inter-node fabric).
+/// Upper bound on fabric tiers any map/accounting structure carries.
+/// Fixed so per-tier lane vectors stay `Copy` arrays: tier 0 intra-node,
+/// tier 1 inter-node, tier 2 WAN, one spare.
+pub const MAX_TIERS: usize = 4;
+
+/// Fabric-boundary map for a job: rank `r` lives on node `r / node_size`
+/// and in datacenter `r / dc_size`. `node_size == 0` means "one big
+/// node" (no inter-node fabric); `dc_size == 0` means a single
+/// datacenter (no WAN tier — the paper's two-tier world).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct NodeMap {
     pub node_size: usize,
+    pub dc_size: usize,
 }
 
 impl NodeMap {
     pub fn new(node_size: usize) -> Self {
-        NodeMap { node_size }
+        NodeMap { node_size, dc_size: 0 }
+    }
+
+    /// Map with a datacenter boundary every `dc_size` ranks (the WAN
+    /// tier). `dc_size` must be a multiple of `node_size` when both are
+    /// set, so nodes never straddle a datacenter.
+    pub fn with_dc(node_size: usize, dc_size: usize) -> Self {
+        if node_size > 0 && dc_size > 0 {
+            assert!(
+                dc_size % node_size == 0,
+                "dc_size {dc_size} must be a multiple of node_size {node_size}"
+            );
+        }
+        NodeMap { node_size, dc_size }
     }
 
     /// Single-node convenience (everything intra).
     pub fn single_node() -> Self {
-        NodeMap { node_size: 0 }
+        NodeMap { node_size: 0, dc_size: 0 }
     }
 
     pub fn node_of(&self, rank: usize) -> usize {
@@ -104,13 +125,72 @@ impl NodeMap {
         }
     }
 
+    pub fn dc_of(&self, rank: usize) -> usize {
+        if self.dc_size == 0 {
+            0
+        } else {
+            rank / self.dc_size
+        }
+    }
+
     /// Does a world of `world` ranks span more than one node?
     pub fn spans_nodes(&self, world: usize) -> bool {
         self.node_size > 0 && world > self.node_size
     }
 
+    /// Does a world of `world` ranks span more than one datacenter?
+    pub fn spans_dcs(&self, world: usize) -> bool {
+        self.dc_size > 0 && world > self.dc_size
+    }
+
     pub fn same_node(&self, a: usize, b: usize) -> bool {
         self.node_of(a) == self.node_of(b)
+    }
+
+    pub fn same_dc(&self, a: usize, b: usize) -> bool {
+        self.dc_of(a) == self.dc_of(b)
+    }
+
+    /// The fabric tier a message between ranks `a` and `b` crosses:
+    /// 0 same node, 1 same datacenter (or no DC boundary), 2 WAN.
+    pub fn tier_of(&self, a: usize, b: usize) -> usize {
+        if self.same_node(a, b) {
+            0
+        } else if self.same_dc(a, b) {
+            1
+        } else {
+            2
+        }
+    }
+
+    /// Number of fabric tiers this map distinguishes (2 or 3).
+    pub fn n_tiers(&self) -> usize {
+        if self.dc_size > 0 {
+            3
+        } else {
+            2
+        }
+    }
+
+    /// The bottleneck tier a topology-oblivious (flat) exchange over
+    /// `world` ranks is charged to: the widest boundary the job spans.
+    pub fn job_tier(&self, world: usize) -> usize {
+        if self.spans_dcs(world) {
+            2
+        } else if self.spans_nodes(world) {
+            1
+        } else {
+            0
+        }
+    }
+
+    /// Datacenter of a node id (nodes never straddle datacenters).
+    pub fn dc_of_node(&self, node: usize) -> usize {
+        if self.dc_size == 0 || self.node_size == 0 {
+            0
+        } else {
+            node * self.node_size / self.dc_size
+        }
     }
 }
 
@@ -211,6 +291,38 @@ mod tests {
         let one = NodeMap::single_node();
         assert_eq!(one.node_of(17), 0);
         assert!(!one.spans_nodes(1000));
+    }
+
+    #[test]
+    fn dc_boundaries_and_tiers() {
+        // 2 DCs of 2 nodes of 4 GPUs: ranks 0..8 in DC 0, 8..16 in DC 1
+        let m = NodeMap::with_dc(4, 8);
+        assert_eq!(m.n_tiers(), 3);
+        assert_eq!(m.dc_of(7), 0);
+        assert_eq!(m.dc_of(8), 1);
+        assert_eq!(m.tier_of(0, 3), 0);
+        assert_eq!(m.tier_of(0, 4), 1);
+        assert_eq!(m.tier_of(0, 8), 2);
+        assert!(m.spans_dcs(16));
+        assert!(!m.spans_dcs(8));
+        assert_eq!(m.job_tier(4), 0);
+        assert_eq!(m.job_tier(8), 1);
+        assert_eq!(m.job_tier(16), 2);
+        assert_eq!(m.dc_of_node(0), 0);
+        assert_eq!(m.dc_of_node(1), 0);
+        assert_eq!(m.dc_of_node(2), 1);
+        // no DC boundary: everything beyond a node is tier 1, two tiers
+        let two = NodeMap::new(4);
+        assert_eq!(two.n_tiers(), 2);
+        assert_eq!(two.tier_of(0, 100), 1);
+        assert_eq!(two.job_tier(100), 1);
+        assert!(!two.spans_dcs(100));
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of node_size")]
+    fn ragged_dc_boundary_rejected() {
+        NodeMap::with_dc(4, 6);
     }
 
     #[test]

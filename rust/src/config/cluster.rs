@@ -1,25 +1,49 @@
 //! Cluster descriptions for the analytic performance model: the paper's two
-//! testbeds (Summit, ThetaGPU) plus a generic single-node box.
+//! testbeds (Summit, ThetaGPU), a generic single-node box, and a
+//! cross-datacenter preset with a third WAN fabric tier.
 //!
 //! Bandwidths are the paper's quoted *bidirectional* peaks; the alpha-beta
 //! collective model (perfmodel/collective_cost.rs) converts to effective
 //! per-direction link bandwidth and applies an achievable-fraction factor.
+//!
+//! The fabric is an ordered list of [`FabricTier`]s, innermost first:
+//! tier 0 is the intra-node link (NVLink), tier 1 the inter-node network
+//! (InfiniBand), and any further tiers wider interconnects (tier 2 = WAN
+//! between datacenters). Two-tier presets are the degenerate case the
+//! paper assumes; every consumer indexes tiers instead of hard-coding the
+//! intra/inter pair.
+
+/// One level of the communication fabric (innermost = tier 0).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricTier {
+    /// Human name for reports ("nvlink", "infiniband", "wan").
+    pub name: String,
+    /// Bidirectional peak bandwidth in GB/s.
+    pub bw_gbs: f64,
+    /// Per-message latency in seconds (the alpha term).
+    pub latency_s: f64,
+}
+
+impl FabricTier {
+    pub fn new(name: &str, bw_gbs: f64, latency_s: f64) -> Self {
+        FabricTier { name: name.into(), bw_gbs, latency_s }
+    }
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterConfig {
     pub name: String,
     pub gpus_per_node: usize,
+    /// Ranks per datacenter (0 = single datacenter: no WAN boundary).
+    /// Only meaningful when a third fabric tier exists.
+    pub gpus_per_dc: usize,
     /// GPU memory capacity in GiB.
     pub mem_per_gpu_gib: f64,
     /// Peak half-precision throughput per GPU, in Tflop/s.
     pub peak_half_tflops: f64,
-    /// Peak intra-node bidirectional bandwidth (GB/s) — NVLink.
-    pub intra_bw_gbs: f64,
-    /// Peak inter-node bidirectional bandwidth (GB/s) — InfiniBand.
-    pub inter_bw_gbs: f64,
-    /// Per-message latency (seconds) intra / inter node (alpha terms).
-    pub intra_latency_s: f64,
-    pub inter_latency_s: f64,
+    /// Ordered fabric tiers, innermost first: `tiers[0]` intra-node
+    /// (NVLink), `tiers[1]` inter-node (InfiniBand), `tiers[2]` WAN.
+    pub tiers: Vec<FabricTier>,
     /// Fraction of peak bandwidth collectives actually achieve (NCCL-style
     /// efficiency; calibrated so Fig. 5's baseline comm share ~50% holds).
     pub bw_efficiency: f64,
@@ -28,53 +52,59 @@ pub struct ClusterConfig {
 }
 
 impl ClusterConfig {
+    /// Build a classic two-tier (NVLink + InfiniBand) cluster — the
+    /// paper's fabric shape. All presets below route through here so the
+    /// intra/inter pair is spelled exactly once.
+    #[allow(clippy::too_many_arguments)]
+    fn two_tier(
+        name: &str,
+        gpus_per_node: usize,
+        mem_per_gpu_gib: f64,
+        peak_half_tflops: f64,
+        intra_bw_gbs: f64,
+        inter_bw_gbs: f64,
+        flops_efficiency: f64,
+    ) -> Self {
+        ClusterConfig {
+            name: name.into(),
+            gpus_per_node,
+            gpus_per_dc: 0,
+            mem_per_gpu_gib,
+            peak_half_tflops,
+            tiers: vec![
+                FabricTier::new("nvlink", intra_bw_gbs, 5e-6),
+                FabricTier::new("infiniband", inter_bw_gbs, 10e-6),
+            ],
+            bw_efficiency: 0.7,
+            flops_efficiency,
+        }
+    }
+
     /// Summit: 6x V100-16GB per node, NVLink 50 GB/s, IB 25 GB/s (section 6).
     pub fn summit() -> Self {
-        ClusterConfig {
-            name: "summit".into(),
-            gpus_per_node: 6,
-            mem_per_gpu_gib: 16.0,
-            peak_half_tflops: 125.0,
-            intra_bw_gbs: 50.0,
-            inter_bw_gbs: 25.0,
-            intra_latency_s: 5e-6,
-            inter_latency_s: 10e-6,
-            bw_efficiency: 0.7,
-            flops_efficiency: 0.45,
-        }
+        Self::two_tier("summit", 6, 16.0, 125.0, 50.0, 25.0, 0.45)
     }
 
     /// ThetaGPU: 8x A100-40GB per node, NVLink 600 GB/s, IB 200 GB/s.
     pub fn thetagpu() -> Self {
-        ClusterConfig {
-            name: "thetagpu".into(),
-            gpus_per_node: 8,
-            mem_per_gpu_gib: 40.0,
-            peak_half_tflops: 312.0,
-            intra_bw_gbs: 600.0,
-            inter_bw_gbs: 200.0,
-            intra_latency_s: 5e-6,
-            inter_latency_s: 10e-6,
-            bw_efficiency: 0.7,
-            flops_efficiency: 0.5,
-        }
+        Self::two_tier("thetagpu", 8, 40.0, 312.0, 600.0, 200.0, 0.5)
     }
 
     /// Perlmutter (used by the paper's section-3 "4x larger" headline):
     /// 4x A100-40GB per node.
     pub fn perlmutter() -> Self {
-        ClusterConfig {
-            name: "perlmutter".into(),
-            gpus_per_node: 4,
-            mem_per_gpu_gib: 40.0,
-            peak_half_tflops: 312.0,
-            intra_bw_gbs: 600.0,
-            inter_bw_gbs: 200.0,
-            intra_latency_s: 5e-6,
-            inter_latency_s: 10e-6,
-            bw_efficiency: 0.7,
-            flops_efficiency: 0.5,
-        }
+        Self::two_tier("perlmutter", 4, 40.0, 312.0, 600.0, 200.0, 0.5)
+    }
+
+    /// Cross-datacenter testbed for HybridEP: two-node datacenters of
+    /// A100 boxes bridged by a 10 GB/s WAN with millisecond latency —
+    /// three fabric tiers, so an 8-rank-per-DC job spans the WAN as soon
+    /// as a group crosses rank 8.
+    pub fn cross_dc() -> Self {
+        let mut c = Self::two_tier("cross-dc", 4, 40.0, 312.0, 600.0, 200.0, 0.5);
+        c.gpus_per_dc = 8;
+        c.tiers.push(FabricTier::new("wan", 10.0, 5e-3));
+        c
     }
 
     /// Look up a built-in preset by name. Routed through
@@ -89,24 +119,38 @@ impl ClusterConfig {
         (self.mem_per_gpu_gib * (1u64 << 30) as f64) as u64
     }
 
+    pub fn n_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// Whether a WAN tier exists *and* a datacenter boundary is set — the
+    /// precondition for the HybridEP placement decision.
+    pub fn has_wan(&self) -> bool {
+        self.tiers.len() > 2 && self.gpus_per_dc > 0
+    }
+
+    /// Effective per-direction bandwidth of fabric tier `t`, in bytes/s.
+    pub fn tier_bw_bytes(&self, t: usize) -> f64 {
+        // half of bidirectional, in bytes/s, derated by efficiency
+        self.tiers[t].bw_gbs / 2.0 * 1e9 * self.bw_efficiency
+    }
+
+    /// Alpha term of fabric tier `t`.
+    pub fn tier_latency_s(&self, t: usize) -> f64 {
+        self.tiers[t].latency_s
+    }
+
     /// Effective per-direction bandwidth in bytes/s for a group of ranks:
     /// if the group fits within a node use NVLink, else the IB bottleneck.
+    /// (Two-tier view — tier-indexed pricing uses [`Self::tier_bw_bytes`].)
     pub fn effective_bw_bytes(&self, group_size: usize, all_intra: bool) -> f64 {
-        let bidi = if all_intra && group_size <= self.gpus_per_node {
-            self.intra_bw_gbs
-        } else {
-            self.inter_bw_gbs
-        };
-        // half of bidirectional, in bytes/s, derated by efficiency
-        bidi / 2.0 * 1e9 * self.bw_efficiency
+        let t = if all_intra && group_size <= self.gpus_per_node { 0 } else { 1 };
+        self.tier_bw_bytes(t)
     }
 
     pub fn latency_s(&self, group_size: usize, all_intra: bool) -> f64 {
-        if all_intra && group_size <= self.gpus_per_node {
-            self.intra_latency_s
-        } else {
-            self.inter_latency_s
-        }
+        let t = if all_intra && group_size <= self.gpus_per_node { 0 } else { 1 };
+        self.tier_latency_s(t)
     }
 }
 
@@ -119,6 +163,7 @@ pub enum ClusterPreset {
     Summit,
     ThetaGpu,
     Perlmutter,
+    CrossDc,
 }
 
 impl ClusterPreset {
@@ -126,8 +171,12 @@ impl ClusterPreset {
     /// `ClusterConfig::by_name` all derive from this list + [`Self::name`],
     /// so a new preset only needs a variant, a `name` arm, and a `config`
     /// arm — there is no second string table to forget.
-    pub const ALL: [ClusterPreset; 3] =
-        [ClusterPreset::Summit, ClusterPreset::ThetaGpu, ClusterPreset::Perlmutter];
+    pub const ALL: [ClusterPreset; 4] = [
+        ClusterPreset::Summit,
+        ClusterPreset::ThetaGpu,
+        ClusterPreset::Perlmutter,
+        ClusterPreset::CrossDc,
+    ];
 
     pub fn parse(s: &str) -> Option<Self> {
         Self::ALL.into_iter().find(|p| p.name() == s)
@@ -138,6 +187,7 @@ impl ClusterPreset {
             ClusterPreset::Summit => "summit",
             ClusterPreset::ThetaGpu => "thetagpu",
             ClusterPreset::Perlmutter => "perlmutter",
+            ClusterPreset::CrossDc => "cross-dc",
         }
     }
 
@@ -146,6 +196,7 @@ impl ClusterPreset {
             ClusterPreset::Summit => ClusterConfig::summit(),
             ClusterPreset::ThetaGpu => ClusterConfig::thetagpu(),
             ClusterPreset::Perlmutter => ClusterConfig::perlmutter(),
+            ClusterPreset::CrossDc => ClusterConfig::cross_dc(),
         }
     }
 }
@@ -159,8 +210,12 @@ mod tests {
         let s = ClusterConfig::summit();
         assert_eq!(s.gpus_per_node, 6);
         assert_eq!(s.peak_half_tflops, 125.0);
-        assert_eq!(s.intra_bw_gbs, 50.0);
-        assert_eq!(s.inter_bw_gbs, 25.0);
+        assert_eq!(s.tiers[0].bw_gbs, 50.0);
+        assert_eq!(s.tiers[1].bw_gbs, 25.0);
+        assert_eq!(s.tiers[0].latency_s, 5e-6);
+        assert_eq!(s.tiers[1].latency_s, 10e-6);
+        assert_eq!(s.n_tiers(), 2);
+        assert!(!s.has_wan());
         let t = ClusterConfig::thetagpu();
         assert_eq!(t.gpus_per_node, 8);
         assert_eq!(t.mem_per_gpu_gib, 40.0);
@@ -172,12 +227,33 @@ mod tests {
         let intra = s.effective_bw_bytes(6, true);
         let inter = s.effective_bw_bytes(12, false);
         assert!(intra > inter);
+        // tier-indexed view agrees with the two-tier helpers
+        assert_eq!(intra, s.tier_bw_bytes(0));
+        assert_eq!(inter, s.tier_bw_bytes(1));
+        assert_eq!(s.latency_s(6, true), s.tier_latency_s(0));
+        assert_eq!(s.latency_s(12, false), s.tier_latency_s(1));
     }
 
     #[test]
     fn lookup() {
         assert!(ClusterConfig::by_name("summit").is_some());
+        assert!(ClusterConfig::by_name("cross-dc").is_some());
         assert!(ClusterConfig::by_name("frontier").is_none());
+    }
+
+    #[test]
+    fn cross_dc_has_three_ordered_tiers() {
+        let c = ClusterConfig::cross_dc();
+        assert_eq!(c.n_tiers(), 3);
+        assert!(c.has_wan());
+        assert_eq!(c.gpus_per_node, 4);
+        assert_eq!(c.gpus_per_dc, 8);
+        assert_eq!(c.tiers[2].name, "wan");
+        // tiers are ordered: innermost fastest, outermost slowest/highest-alpha
+        for w in c.tiers.windows(2) {
+            assert!(w[0].bw_gbs > w[1].bw_gbs);
+            assert!(w[0].latency_s < w[1].latency_s);
+        }
     }
 
     #[test]

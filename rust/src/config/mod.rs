@@ -7,7 +7,7 @@ pub mod model;
 pub mod parallel;
 pub mod training;
 
-pub use cluster::{ClusterConfig, ClusterPreset};
+pub use cluster::{ClusterConfig, ClusterPreset, FabricTier};
 pub use model::ModelConfig;
 pub use crate::collectives::CollectiveStrategy;
 pub use parallel::{EngineOptions, ParallelConfig};

@@ -128,6 +128,13 @@ pub struct EngineOptions {
     /// expert's weight-gradient pass-unit so the backward a2a hides
     /// behind it. Pure timeline change; gradients are unaffected.
     pub delay_wgrad: bool,
+    /// HybridEP routing placement (`--ep-placement`): `Migrate` splits
+    /// each expert all-to-all into a datacenter-confined collective plus
+    /// a spanning one carrying only the cross-DC rows, so the WAN lane
+    /// sees only the traffic that truly leaves the datacenter. The keyed
+    /// scatter makes results bitwise identical to `Ship`; a no-op unless
+    /// the cluster preset has a DC boundary the EP group actually spans.
+    pub ep_placement: crate::perfmodel::EpPlacement,
     /// Cluster preset pricing the overlap timeline (`TrainLog` reports
     /// serialized vs critical-path comm seconds when set).
     pub cluster: Option<ClusterPreset>,
@@ -156,6 +163,7 @@ impl Default for EngineOptions {
             overlap: true,
             chunked_a2a: false,
             delay_wgrad: false,
+            ep_placement: crate::perfmodel::EpPlacement::Ship,
             cluster: None,
             measured: None,
         }

@@ -36,7 +36,7 @@
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
-use crate::collectives::{Communicator, PendingAllReduce, Rendezvous};
+use crate::collectives::{Communicator, NodeMap, PendingAllReduce, Rendezvous};
 use crate::config::{EngineOptions, TrainingConfig};
 use crate::engine::blocks;
 use crate::engine::params::{init_params, is_moe_layer, ParamStore};
@@ -44,8 +44,9 @@ use crate::engine::stash::{combine, combine_bwd, DenseParts, LayerParts, LayerSt
 use crate::moe::{dispatch, return_to_origin, MoeComm, Router, RouterConfig, RouterMode};
 use crate::optimizer::{AdamwStep, TilingOpts, Zero1Optimizer};
 use crate::perfmodel::flops::{attn_fwd_flops, ffn_fwd_flops, head_fwd_flops};
+use crate::perfmodel::EpPlacement;
 use crate::runtime::{Manifest, Runtime};
-use crate::topology::{RankGroups, Topology};
+use crate::topology::{GroupId, GroupKind, RankGroups, Topology};
 use crate::util::tensor::{IntTensor, Tensor};
 
 /// Result of one optimizer step across all microbatches.
@@ -94,6 +95,12 @@ pub struct Trainer {
     local_expert_ids: Vec<usize>,
     ep_pos: usize,
     tp_pos: usize,
+    /// HybridEP migrate mode: this rank's DC-confined EP subgroup (the EP
+    /// members in the same datacenter) and its synthesized group id.
+    /// Empty members = locality split off (the two-tier default); the
+    /// expert a2a then runs exactly as before.
+    dc_gid: GroupId,
+    dc_members: Vec<usize>,
     step_count: usize,
     /// Achievable flops/s of one GPU under the pricing cluster preset
     /// (None without a preset: the compute lane stays unpriced, like the
@@ -128,7 +135,24 @@ impl Trainer {
             bail!("{} experts not divisible by ep={}", manifest.dims.n_experts, cfg.ep);
         }
         let groups = topo.groups(rank);
-        let mut comm = Communicator::with_transport(rez, rank, opts.strategy, opts.gpus_per_node);
+        // A cluster preset with a datacenter tier makes the communicator
+        // fabric-aware: the NodeMap carries the DC boundary so spanning
+        // traffic prices (and counts) on the WAN lane. Two-tier presets
+        // have gpus_per_dc == 0 and keep the exact historical transport.
+        let gpus_per_dc = opts.cluster.map(|p| p.config().gpus_per_dc).unwrap_or(0);
+        let mut comm = if gpus_per_dc > 0
+            && opts.gpus_per_node > 0
+            && gpus_per_dc % opts.gpus_per_node == 0
+        {
+            Communicator::with_fabric(
+                rez,
+                rank,
+                opts.strategy,
+                NodeMap::with_dc(opts.gpus_per_node, gpus_per_dc),
+            )
+        } else {
+            Communicator::with_transport(rez, rank, opts.strategy, opts.gpus_per_node)
+        };
         let mut flops_rate = None;
         if let Some(preset) = opts.cluster {
             // price every collective with the preset's α-β model (and
@@ -150,6 +174,36 @@ impl Trainer {
         let local_expert_ids = topo.local_expert_ids(rank, manifest.dims.n_experts);
         let tp_pos = groups.coords.tp_idx;
         let ep_pos = groups.ep_group.iter().position(|&m| m == rank).unwrap();
+
+        // HybridEP migrate mode: replicate the hot experts into the remote
+        // DC and split each expert a2a into a DC-confined collective plus
+        // a spanning one (see `MoeComm::dc_split`). Activation must be
+        // uniform across the job — a mixed job would desync the TP groups'
+        // gather sequences — so it requires *every* EP group to span the
+        // DC boundary, not just this rank's.
+        let migrate = opts.ep_placement == EpPlacement::Migrate && gpus_per_dc > 0;
+        let all_span = migrate
+            && (0..cfg.world).all(|r| {
+                let g = topo.groups(r).ep_group;
+                g.iter().any(|&m| m / gpus_per_dc != g[0] / gpus_per_dc)
+            });
+        let dc_members: Vec<usize> = if all_span {
+            groups
+                .ep_group
+                .iter()
+                .copied()
+                .filter(|&m| m / gpus_per_dc == rank / gpus_per_dc)
+                .collect()
+        } else {
+            Vec::new()
+        };
+        // id synthesized per (EP group, DC) — the same scheme the replay
+        // uses, so measured and analytic op streams line up by group
+        let dc_gid = GroupId {
+            kind: GroupKind::ExpertDc,
+            index: groups.ep_group_id.index * cfg.world
+                + if gpus_per_dc > 0 { rank / gpus_per_dc } else { 0 },
+        };
         let store = init_params(&manifest.dims, tp_pos, &local_expert_ids, tcfg.seed);
 
         let tiling = TilingOpts { tiled: opts.optimizer_tiling, tile_size: opts.tile_size };
@@ -186,6 +240,8 @@ impl Trainer {
             local_expert_ids,
             ep_pos,
             tp_pos,
+            dc_gid,
+            dc_members,
             step_count: 0,
             flops_rate,
             peak_stash_bytes: 0,
@@ -321,6 +377,11 @@ impl Trainer {
                 overlap: self.opts.overlap,
                 chunked: self.opts.chunked_a2a,
                 chunk_compute_s: chunk_fwd_s,
+                dc_split: if self.dc_members.is_empty() {
+                    None
+                } else {
+                    Some((self.dc_gid, self.dc_members.as_slice()))
+                },
             };
             dispatch(&mut ctx, &xn, &dec, local)
         };
@@ -377,6 +438,11 @@ impl Trainer {
                 overlap: self.opts.overlap,
                 chunked: self.opts.chunked_a2a,
                 chunk_compute_s: 0.0,
+                dc_split: if self.dc_members.is_empty() {
+                    None
+                } else {
+                    Some((self.dc_gid, self.dc_members.as_slice()))
+                },
             };
             return_to_origin(&mut ctx, &expert_out, &disp, &dec, local)
         };
@@ -440,6 +506,11 @@ impl Trainer {
                         overlap: self.opts.overlap,
                         chunked: self.opts.chunked_a2a,
                         chunk_compute_s: 0.0,
+                        dc_split: if self.dc_members.is_empty() {
+                            None
+                        } else {
+                            Some((self.dc_gid, self.dc_members.as_slice()))
+                        },
                     };
                     dispatch(&mut ctx, &drows, &dec, local)
                 };
@@ -520,6 +591,11 @@ impl Trainer {
                         overlap: self.opts.overlap,
                         chunked: self.opts.chunked_a2a,
                         chunk_compute_s: chunk_wgrad_s,
+                        dc_split: if self.dc_members.is_empty() {
+                            None
+                        } else {
+                            Some((self.dc_gid, self.dc_members.as_slice()))
+                        },
                     };
                     return_to_origin(&mut ctx, &dxe_full, &disp_b, &dec, local)
                 };

@@ -62,8 +62,9 @@
 //! With a cluster preset selected, each op is priced by the α-β model,
 //! each executed block by the preset's flop rate
 //! (`perfmodel::flops::{attn,ffn,head}_fwd_flops`), and both are
-//! scheduled on a per-rank **three-lane** (compute / NVLink / IB) virtual
-//! timeline; `sim::TrainLog::overlap_timeline` reports serialized comm +
+//! scheduled on a per-rank virtual timeline with one compute lane plus
+//! **one comm lane per fabric tier** (NVLink / IB on the two-tier
+//! presets); `sim::TrainLog::overlap_timeline` reports serialized comm +
 //! compute vs critical-path seconds per step, so the measured schedule
 //! shows which collectives hide behind compute and which serialize.
 //! `perfmodel::batch_time_overlapped` is the analytic counterpart: comm
@@ -161,12 +162,50 @@
 //! re-price the schedule (same bytes, K× α-terms, plus a
 //! `pipelined_comm_s` lane that the overlap model credits even at zero
 //! overlap efficiency), `sim::replay_scenario` executes it, and the
-//! planner searches it (`ted plan --chunked`), pruning serialized
+//! planner searches it (`ted plan --chunked`) over several chunk
+//! **granularities** — `PlanKnobs::chunked` = experts per chunk, so 1
+//! is the engine's one-chunk-per-expert schedule and coarser values
+//! trade α-surcharge against hiding window — pruning serialized
 //! chunked points that would pay the α-surcharge for nothing. Measured
 //! == analytic for the chunked schedule under `zipf:1.2` is pinned in
 //! `rust/tests/traffic_scenarios.rs`; the planner-level win (chunked
 //! twins strictly cut critical-path comm on skewed wide-EP scenarios)
 //! in `rust/tests/planner_validation.rs`.
+//!
+//! ## Fabric tiers and cross-DC expert parallelism
+//!
+//! The cluster fabric is an ordered tier list ([`config::FabricTier`];
+//! tier 0 = intra-node, tier 1 = inter-node, and the
+//! `ClusterConfig::cross_dc` preset adds a tier-2 WAN with `gpus_per_dc`
+//! datacenter boundaries), and the whole stack is **per-tier** instead
+//! of intra/inter special-cased: `CommStats::lane_bytes`/`lane_msgs`,
+//! the `TimelineBoard` comm lanes, `BatchTime::comm_lane_s`, the
+//! measured lanes of `sim::replay_scenario`, and the planner JSON all
+//! carry `[_; MAX_TIERS]` arrays indexed by the tier a byte actually
+//! crosses. Two-tier presets are the exact degenerate case —
+//! bitwise-identical to the old intra/inter pair.
+//!
+//! On the WAN tier sits **HybridEP**: when the expert-parallel group
+//! spans datacenters (`perfmodel::ep_spans_dcs`), the planner prices
+//! both [`perfmodel::EpPlacement`]s per candidate — `Ship` (the classic
+//! expert all-to-all, WAN hops included) vs `Migrate` (the hottest
+//! expert block is replicated into each DC, so the hot traffic share
+//! (`perfmodel::migrate_local_frac`, from the traffic model's peer
+//! weights) rides a DC-confined all-to-all while the cold share still
+//! ships, paid for by an amortized replica re-sync every
+//! `perfmodel::MIGRATE_SYNC_STEPS` steps). `ted plan --cluster cross-dc
+//! --traffic zipf:1.2` ranks the ship/migrate twins (skewed traffic
+//! flips the decision; uniform keeps shipping ahead), and `ted train
+//! --ep-placement migrate` executes the DC-confined schedule through
+//! the real transports (`MoeComm::dc_split`; the keyed scatter keeps
+//! results bitwise-identical to shipping). Sampled skew pricing rides
+//! along: `--traffic-samples N` prices N actual `TrafficModel` steps
+//! (`perfmodel::batch_time_sampled`) and reports p50/p95 step times
+//! (`planner::StepDist`) next to the stationary average. Measured ==
+//! analytic per lane (WAN included) for both placements, the
+//! migrate-beats-ship zipf pin, the uniform counter-pin, and the
+//! two-tier degeneracy identities live in
+//! `rust/tests/three_tier_accounting.rs`.
 //!
 //! ## The parallelism planner
 //!

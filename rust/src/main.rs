@@ -35,15 +35,18 @@ USAGE:
              [--data synthetic|corpus] [--lr X] [--no-dtd] [--no-cac]
              [--no-tiling] [--batch N] [--verbose]
              [--transport flat|hierarchical|hierarchical-pxn]
-             [--gpus-per-node N] [--cluster summit|thetagpu|perlmutter]
+             [--gpus-per-node N]
+             [--cluster summit|thetagpu|perlmutter|cross-dc]
              [--no-overlap] [--chunked-a2a] [--delay-wgrad]
+             [--ep-placement ship|migrate]
              [--traffic uniform|zipf:<s>|bursty:<p>] [--measured-compute]
-  ted plan   [--cluster summit|thetagpu|perlmutter] [--model NAME]
+  ted plan   [--cluster summit|thetagpu|perlmutter|cross-dc] [--model NAME]
              [--experts E] [--gpus G] [--batch N] [--overlap-eff E]
              [--max-tp N] [--micro N] [--top K] [--json] [--chunked]
-             [--traffic uniform|zipf:<s>|bursty:<p>] [--measured-compute]
+             [--traffic uniform|zipf:<s>|bursty:<p>] [--traffic-samples N]
+             [--measured-compute]
   ted info   --model {1.3B|2.7B|6.7B|13.0B} --experts E --gpus G --tp T
-             [--cluster summit|thetagpu|perlmutter]
+             [--cluster summit|thetagpu|perlmutter|cross-dc]
   ted benchdiff --before A.json --after B.json   (compare bench snapshots)
   ted figures [--only ID]    (alias of `cargo run --example paper_figures`)
 
@@ -66,8 +69,20 @@ skew-heavy scenarios can re-rank plans toward smaller expert groups.
 expert (hottest first) so expert k computes while chunk k+1 is on the
 wire; --delay-wgrad defers the expert weight-gradient pass so the
 backward all-to-all hides behind it. Both are pure schedule changes
-(bitwise-identical results). `ted plan --chunked` adds the pair to the
-search space.
+(bitwise-identical results). `ted plan --chunked` searches chunk
+granularities (monolithic, per-expert, and coarser 2- and 4-expert
+chunks that pay fewer latency surcharges).
+
+The cross-dc preset adds a third fabric tier (a 10 GB/s WAN bridging
+8-rank datacenters). When an expert-parallel group spans the WAN the
+planner prices both HybridEP placements — ship (route tokens over the
+WAN) and migrate (replicate the hot expert block into each datacenter,
+paying an amortized weight refresh) — and `ted train --ep-placement
+migrate` executes the migration schedule: the expert all-to-all splits
+into a DC-confined collective plus a spanning one carrying only the
+cross-DC rows, bitwise-identical numerics. --traffic-samples N prices N
+actual sampled steps of the traffic model per candidate and reports the
+p50/p95 step-time spread.
 
 --measured-compute prices the compute lane from the measured per-block
 timings in the repo-root BENCH_smoke.json (the merged `BENCH_SMOKE=1
@@ -127,7 +142,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "config", "world", "tp", "ep", "steps", "micro", "lr", "seed", "data", "batch",
         "no-dtd", "no-cac", "no-tiling", "no-overlap", "chunked-a2a", "delay-wgrad", "verbose",
-        "transport", "gpus-per-node", "cluster", "traffic", "measured-compute",
+        "transport", "gpus-per-node", "cluster", "traffic", "measured-compute", "ep-placement",
     ])?;
     let config = args.get_or("config", "tiny").to_string();
     let tp = args.get_usize("tp", 2)?;
@@ -151,10 +166,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     // size when --gpus-per-node was not given explicitly (ROADMAP follow-up)
     let preset = match args.get("cluster") {
         None => None,
-        Some(c) => Some(
-            ted::config::ClusterPreset::parse(c)
-                .ok_or_else(|| anyhow!("unknown --cluster '{c}' (summit|thetagpu|perlmutter)"))?,
-        ),
+        Some(c) => Some(ted::config::ClusterPreset::parse(c).ok_or_else(|| {
+            anyhow!("unknown --cluster '{c}' (summit|thetagpu|perlmutter|cross-dc)")
+        })?),
+    };
+    let ep_placement = match args.get("ep-placement") {
+        None => ted::perfmodel::EpPlacement::Ship,
+        Some(p) => ted::perfmodel::EpPlacement::parse(p)
+            .ok_or_else(|| anyhow!("unknown --ep-placement '{p}' (ship|migrate)"))?,
     };
     let mut opts = EngineOptions {
         dtd: !args.flag("no-dtd"),
@@ -165,6 +184,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         delay_wgrad: args.flag("delay-wgrad"),
         strategy,
         gpus_per_node: args.get_usize("gpus-per-node", 0)?,
+        ep_placement,
         ..Default::default()
     };
     if let Some(p) = preset {
@@ -214,26 +234,28 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let log = train(&topo, &manifest, opts, tcfg, run, data)?;
     println!("\ndone in {:.1}s; final loss {:.4}", log.wall_s, log.steps.last().unwrap().loss);
-    println!("comm volumes (total / intra-node / inter-node / inter-msgs):");
+    println!("comm volumes (total / intra-node / inter-node / wan / inter-msgs):");
     for (i, (kind, bytes)) in log.comm_bytes.into_iter().enumerate() {
         if bytes > 0 {
             println!(
-                "  {:<14} {bytes:>14} {:>14} {:>14} bytes {:>10} msgs",
+                "  {:<14} {bytes:>14} {:>14} {:>14} {:>12} bytes {:>10} msgs",
                 kind.name(),
                 log.comm_intra_bytes[i].1,
                 log.comm_inter_bytes[i].1,
+                log.comm_wan_bytes[i].1,
                 log.comm_inter_msgs[i].1
             );
         }
     }
     if opts.cluster.is_some() && log.comm_serialized_s > 0.0 {
-        println!("modeled three-lane timeline:");
+        println!("modeled per-lane timeline:");
         print!(
             "{}",
             ted::metrics::render_timeline(
                 log.compute_s,
                 log.comm_intra_s,
                 log.comm_inter_s,
+                log.comm_wan_s,
                 log.critical_s,
                 log.overlap_efficiency,
             )
@@ -252,10 +274,10 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_plan(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "model", "experts", "gpus", "batch", "cluster", "overlap-eff", "max-tp", "micro", "top",
-        "json", "traffic", "chunked", "measured-compute",
+        "json", "traffic", "traffic-samples", "chunked", "measured-compute",
     ])?;
     let cluster = ClusterConfig::by_name(args.get_or("cluster", "summit"))
-        .ok_or_else(|| anyhow!("unknown --cluster (summit|thetagpu|perlmutter)"))?;
+        .ok_or_else(|| anyhow!("unknown --cluster (summit|thetagpu|perlmutter|cross-dc)"))?;
     let name = args.get_or("model", "6.7B");
     let m = model::table1_by_name(name)
         .or_else(|| model::executable(name))
@@ -278,9 +300,12 @@ fn cmd_plan(args: &Args) -> Result<()> {
         bail!("--max-tp must be positive");
     }
     req.traffic = TrafficSpec::from_args(args)?;
+    req.traffic_samples = args.get_usize("traffic-samples", 0)?;
     req.measured = load_measured(args)?;
     if args.flag("chunked") {
-        req.chunked_choices = vec![false, true];
+        // granularities: monolithic, per-expert, and coarser 2- and
+        // 4-expert chunks (fewer α-surcharges, less hiding)
+        req.chunked_choices = vec![0, 1, 2, 4];
     }
     if args.get("micro").is_some() {
         let micro = args.get_usize("micro", 1)?;
@@ -307,14 +332,14 @@ fn cmd_plan(args: &Args) -> Result<()> {
         let shown = if top == 0 { report.plans.len() } else { top.min(report.plans.len()) };
         println!("{} feasible plans; top {}:", report.plans.len(), shown);
         println!(
-            "{:>4} {:>4} {:>4} {:>7} {:<16} {:>7} {:>5} {:>6} {:>9} {:>9} {:>9} {:>9} {:>9}",
-            "rank", "tp", "ep", "dp_exp", "transport", "overlap", "cac", "tile",
+            "{:>4} {:>4} {:>4} {:>7} {:<16} {:>7} {:>5} {:>6} {:>8} {:>9} {:>9} {:>9} {:>9} {:>9}",
+            "rank", "tp", "ep", "dp_exp", "transport", "overlap", "cac", "tile", "place",
             "total(s)", "compute", "comm", "hidden", "headroom"
         );
         for (i, p) in report.plans.iter().take(shown).enumerate() {
             let k = &p.knobs;
             println!(
-                "{:>4} {:>4} {:>4} {:>7} {:<16} {:>7} {:>5} {:>6} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>8.1}G",
+                "{:>4} {:>4} {:>4} {:>7} {:<16} {:>7} {:>5} {:>6} {:>8} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>8.1}G",
                 i + 1,
                 k.par.tp,
                 k.par.ep,
@@ -323,6 +348,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
                 k.overlap,
                 k.cac,
                 k.tile.map(|t| format!("{}M", t / 1_000_000)).unwrap_or_else(|| "off".into()),
+                k.ep_placement.name(),
                 p.total_s(),
                 p.time.base.compute_s,
                 p.time.critical_comm_s,
@@ -345,6 +371,12 @@ fn cmd_plan(args: &Args) -> Result<()> {
                 best.total_s()
             );
         }
+        if let Some(d) = best.step_dist {
+            println!(
+                "sampled step-time distribution ({} steps of {}): p50 {:.2}s p95 {:.2}s",
+                d.samples, req.traffic, d.p50_s, d.p95_s
+            );
+        }
         let mut cmd = format!(
             "ted train --world {} --tp {} --ep {} --transport {}",
             best.knobs.par.world,
@@ -365,8 +397,11 @@ fn cmd_plan(args: &Args) -> Result<()> {
         if !best.knobs.overlap {
             cmd.push_str(" --no-overlap");
         }
-        if best.knobs.chunked {
+        if best.knobs.chunked > 0 {
             cmd.push_str(" --chunked-a2a --delay-wgrad");
+        }
+        if best.knobs.ep_placement == ted::perfmodel::EpPlacement::Migrate {
+            cmd.push_str(" --ep-placement migrate");
         }
         if !best.knobs.cac {
             cmd.push_str(" --no-cac");

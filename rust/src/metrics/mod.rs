@@ -56,18 +56,22 @@ impl PhaseTimer {
     }
 }
 
-/// Render a modeled three-lane (compute / NVLink / IB) timeline summary:
-/// one line per lane with its serialized seconds and share of the
-/// critical path, plus the hidden-comm total and the fitted overlap
-/// efficiency. Used by the CLI after a priced `ted train` run.
+/// Render a modeled per-lane (compute + one lane per fabric tier)
+/// timeline summary: one line per lane with its serialized seconds and
+/// share of the critical path, plus the hidden-comm total and the fitted
+/// overlap efficiency. The WAN row only prints when the run actually put
+/// time on the third tier, so two-tier clusters render exactly the
+/// classic three-lane table. Used by the CLI after a priced `ted train`
+/// run.
 pub fn render_timeline(
     compute_s: f64,
     comm_intra_s: f64,
     comm_inter_s: f64,
+    comm_wan_s: f64,
     critical_s: f64,
     overlap_efficiency: f64,
 ) -> String {
-    let serialized = comm_intra_s + comm_inter_s;
+    let serialized = comm_intra_s + comm_inter_s + comm_wan_s;
     let hidden = compute_s + serialized - critical_s;
     let pct = |x: f64| if critical_s > 0.0 { 100.0 * x / critical_s } else { 0.0 };
     let mut out = String::new();
@@ -75,6 +79,9 @@ pub fn render_timeline(
     let _ = writeln!(out, "compute     {compute_s:>9.4}s  {:>9.1}%", pct(compute_s));
     let _ = writeln!(out, "nvlink      {comm_intra_s:>9.4}s  {:>9.1}%", pct(comm_intra_s));
     let _ = writeln!(out, "infiniband  {comm_inter_s:>9.4}s  {:>9.1}%", pct(comm_inter_s));
+    if comm_wan_s > 0.0 {
+        let _ = writeln!(out, "wan         {comm_wan_s:>9.4}s  {:>9.1}%", pct(comm_wan_s));
+    }
     let _ = writeln!(
         out,
         "critical path {critical_s:.4}s ({hidden:.4}s of comm hidden; fitted overlap \
@@ -298,15 +305,22 @@ mod tests {
 
     #[test]
     fn timeline_render_reports_lanes_and_fit() {
-        let s = render_timeline(2.0, 1.0, 0.5, 2.5, 0.667);
+        let s = render_timeline(2.0, 1.0, 0.5, 0.0, 2.5, 0.667);
         assert!(s.contains("compute"));
         assert!(s.contains("nvlink"));
         assert!(s.contains("infiniband"));
+        // a two-tier run renders no WAN row
+        assert!(!s.contains("wan"));
         // hidden = 2.0 + 1.5 - 2.5 = 1.0
         assert!(s.contains("1.0000s of comm hidden"));
         assert!(s.contains("0.667"));
+        // a cross-DC run with WAN time grows the fourth lane row and the
+        // hidden total counts it: 2.0 + 1.9 - 2.5 = 1.4
+        let w = render_timeline(2.0, 1.0, 0.5, 0.4, 2.5, 0.667);
+        assert!(w.contains("wan"));
+        assert!(w.contains("1.4000s of comm hidden"));
         // zero critical path: the percent guard must keep NaN/inf out
-        let z = render_timeline(0.0, 0.0, 0.0, 0.0, 0.0);
+        let z = render_timeline(0.0, 0.0, 0.0, 0.0, 0.0, 0.0);
         assert!(!z.contains("NaN") && !z.contains("inf"), "{z}");
         assert!(z.contains("0.0%"));
     }

@@ -75,6 +75,18 @@ pub struct MoeComm<'a> {
     /// return) — what the in-flight chunks hide behind on the measured
     /// timeline; 0.0 leaves the compute lane untouched
     pub chunk_compute_s: f64,
+    /// HybridEP migrate-mode locality split: `(dc_group_id, dc_members)`
+    /// names this rank's datacenter-confined EP subgroup. When set (and
+    /// `chunked` is off), the expert a2a splits into a DC-confined
+    /// collective over the subgroup plus a spanning collective over the
+    /// full EP group carrying only the cross-DC rows, issued back-to-back
+    /// so the WAN flight overlaps the local exchange. The keyed scatter
+    /// makes the union bitwise identical to the single a2a. Activation
+    /// must be uniform across the whole job (the trainer enables it only
+    /// when *every* EP group spans DCs) — a mixed job would desync the
+    /// TP group's gather sequence. None = single a2a, the two-tier
+    /// default and bitwise-identical baseline.
+    pub dc_split: Option<(GroupId, &'a [usize])>,
 }
 
 impl MoeComm<'_> {
@@ -332,6 +344,55 @@ pub fn dispatch(
                 scatter(payload, None, &mut buffers, &mut origin_of_slot);
             }
         }
+    } else if let Some((dc_gid, dc_members)) = ctx.dc_split {
+        // HybridEP locality split: same-DC rows ride a DC-confined a2a
+        // over the subgroup while cross-DC rows take the spanning a2a
+        // over the full EP group, issued back-to-back so the two
+        // exchanges overlap on the measured timeline. Every EP member
+        // issues both collectives (activation is job-uniform), and the
+        // keyed scatter makes the union bitwise identical to the single
+        // a2a above.
+        let send = send_chunks.pop().expect("single unchunked payload set");
+        let mut local_send: Vec<Vec<f32>> = vec![Vec::new(); dc_members.len()];
+        let mut span_send: Vec<Vec<f32>> = vec![Vec::new(); n_members];
+        for (p, payload) in send.into_iter().enumerate() {
+            match dc_members.iter().position(|&m| m == ctx.ep_members[p]) {
+                Some(q) => local_send[q] = payload,
+                None => span_send[p] = payload,
+            }
+        }
+        let pend_dc = ctx.comm.issue_all_to_all(dc_gid, dc_members, local_send);
+        let pend_span = ctx.comm.issue_all_to_all(ctx.ep_gid, ctx.ep_members, span_send);
+        let local_recv = ctx.comm.wait_all_to_all(pend_dc);
+        let span_recv = ctx.comm.wait_all_to_all(pend_span);
+        let need_mine = ctx.dtd && ctx.tp() > 1;
+        let mut mine: Vec<f32> = Vec::new();
+        for (q, payload) in local_recv.iter().enumerate() {
+            let p = ctx.ep_members.iter().position(|&m| m == dc_members[q]).unwrap();
+            scatter(payload, Some(p), &mut buffers, &mut origin_of_slot);
+            if need_mine {
+                mine.extend_from_slice(payload);
+            }
+        }
+        for (p, payload) in span_recv.iter().enumerate() {
+            scatter(payload, Some(p), &mut buffers, &mut origin_of_slot);
+            if need_mine {
+                mine.extend_from_slice(payload);
+            }
+        }
+        if need_mine {
+            let gathered = ctx.comm.all_gather(
+                ctx.tp_gid,
+                ctx.tp_members,
+                &Tensor::from_vec(&[mine.len()], mine),
+            );
+            for (pos, payload) in gathered.iter().enumerate() {
+                if pos == ctx.tp_pos {
+                    continue; // already scattered our own
+                }
+                scatter(payload, None, &mut buffers, &mut origin_of_slot);
+            }
+        }
     } else if ctx.pipelined() {
         let send = send_chunks.pop().expect("single unchunked payload set");
         let gathered_others = pipelined_a2a_gather(ctx, send, |pos, payload| {
@@ -440,6 +501,39 @@ pub fn return_to_origin(
                 all_rows.extend_from_slice(payload);
             }
         }
+    } else if let Some((dc_gid, dc_members)) = ctx.dc_split {
+        // HybridEP locality split on the return path: each expert sends
+        // same-DC rows back over the DC-confined a2a and cross-DC rows
+        // over the spanning one; key-addressed reassembly makes the
+        // concatenation order irrelevant.
+        let send = send_chunks.pop().expect("single unchunked payload set");
+        let mut local_send: Vec<Vec<f32>> = vec![Vec::new(); dc_members.len()];
+        let mut span_send: Vec<Vec<f32>> = vec![Vec::new(); n_members];
+        for (p, payload) in send.into_iter().enumerate() {
+            match dc_members.iter().position(|&m| m == ctx.ep_members[p]) {
+                Some(q) => local_send[q] = payload,
+                None => span_send[p] = payload,
+            }
+        }
+        let pend_dc = ctx.comm.issue_all_to_all(dc_gid, dc_members, local_send);
+        let pend_span = ctx.comm.issue_all_to_all(ctx.ep_gid, ctx.ep_members, span_send);
+        for payload in ctx.comm.wait_all_to_all(pend_dc).iter() {
+            all_rows.extend_from_slice(payload);
+        }
+        for payload in ctx.comm.wait_all_to_all(pend_span).iter() {
+            all_rows.extend_from_slice(payload);
+        }
+        if ctx.dtd && ctx.tp() > 1 {
+            let gathered = ctx.comm.all_gather(
+                ctx.tp_gid,
+                ctx.tp_members,
+                &Tensor::from_vec(&[all_rows.len()], all_rows.clone()),
+            );
+            all_rows.clear();
+            for payload in gathered.iter() {
+                all_rows.extend_from_slice(payload);
+            }
+        }
     } else if ctx.pipelined() {
         let send = send_chunks.pop().expect("single unchunked payload set");
         let gathered_others = pipelined_a2a_gather(ctx, send, |_pos, payload| {
@@ -495,10 +589,10 @@ pub fn return_to_origin(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::collectives::{CollectiveStrategy, CommKind, Rendezvous};
+    use crate::collectives::{CollectiveStrategy, CommKind, NodeMap, Rendezvous};
     use crate::config::ParallelConfig;
     use crate::moe::router::{Router, RouterConfig};
-    use crate::topology::Topology;
+    use crate::topology::{GroupKind, Topology};
     use std::sync::Arc;
 
     /// Full dispatch->return round trip on a (tp, ep) grid; every rank
@@ -518,13 +612,17 @@ mod tests {
         cap: usize,
         n_experts: usize,
     ) {
-        round_trip_sched(strategy, gpn, tp, ep, dtd, false, false, n, d, cap, n_experts);
+        round_trip_sched(strategy, gpn, 0, tp, ep, dtd, false, false, n, d, cap, n_experts);
     }
 
+    /// `gpus_per_dc` > 0 activates the HybridEP dc_split schedule (the
+    /// chosen grids must make every EP group span the DC boundary, like
+    /// the trainer's uniformity gate guarantees).
     #[allow(clippy::too_many_arguments)]
     fn round_trip_sched(
         strategy: CollectiveStrategy,
         gpn: usize,
+        gpus_per_dc: usize,
         tp: usize,
         ep: usize,
         dtd: bool,
@@ -547,7 +645,12 @@ mod tests {
                     let topo = topo.clone();
                     s.spawn(move || {
                         let g = topo.groups(r);
-                        let mut comm = Communicator::with_transport(rez, r, strategy, gpn);
+                        let mut comm = if gpus_per_dc > 0 && gpn > 0 && gpus_per_dc % gpn == 0 {
+                            Communicator::with_fabric(
+                                rez, r, strategy, NodeMap::with_dc(gpn, gpus_per_dc))
+                        } else {
+                            Communicator::with_transport(rez, r, strategy, gpn)
+                        };
                         // tokens identical across the TP group: value encodes
                         // (dp_nonexp_idx, token) so EP peers differ.
                         let dpi = g.coords.dp_nonexp_idx;
@@ -568,6 +671,23 @@ mod tests {
                         let dec = Router::new(RouterConfig::top1(cap)).route(
                             &mut comm, g.ep_group_id, &g.ep_group, ep_pos, &probs, n_experts,
                         );
+                        // HybridEP subgroup: EP members sharing this rank's
+                        // DC, id synthesized per (EP group, DC) — the same
+                        // scheme the trainer and the replay use
+                        let dc_members: Vec<usize> = if gpus_per_dc > 0 {
+                            g.ep_group
+                                .iter()
+                                .copied()
+                                .filter(|&m| m / gpus_per_dc == r / gpus_per_dc)
+                                .collect()
+                        } else {
+                            Vec::new()
+                        };
+                        let dc_gid = GroupId {
+                            kind: GroupKind::ExpertDc,
+                            index: g.ep_group_id.index * world
+                                + if gpus_per_dc > 0 { r / gpus_per_dc } else { 0 },
+                        };
                         let mut ctx = MoeComm {
                             comm: &mut comm,
                             ep_gid: g.ep_group_id,
@@ -580,6 +700,11 @@ mod tests {
                             overlap,
                             chunked,
                             chunk_compute_s: 0.0,
+                            dc_split: if gpus_per_dc > 0 {
+                                Some((dc_gid, &dc_members))
+                            } else {
+                                None
+                            },
                         };
                         let disp = dispatch(&mut ctx, &rows, &dec, local_experts);
                         // fake expert compute: negate every filled row
@@ -669,11 +794,11 @@ mod tests {
         // the pipelined split-gather schedule must round-trip on both
         // hierarchical backends, spanning and node-local EP groups
         for strategy in [CollectiveStrategy::Hierarchical, CollectiveStrategy::HierarchicalPxn] {
-            round_trip_sched(strategy, 2, 2, 2, true, true, false, 6, 4, 16, 2);
-            round_trip_sched(strategy, 4, 4, 2, true, true, false, 8, 3, 24, 4);
+            round_trip_sched(strategy, 2, 0, 2, 2, true, true, false, 6, 4, 16, 2);
+            round_trip_sched(strategy, 4, 0, 4, 2, true, true, false, 8, 3, 24, 4);
         }
         // overlap with the flat transport falls back to the single gather
-        round_trip_sched(CollectiveStrategy::Flat, 0, 2, 2, true, true, false, 6, 4, 16, 2);
+        round_trip_sched(CollectiveStrategy::Flat, 0, 0, 2, 2, true, true, false, 6, 4, 16, 2);
     }
 
     #[test]
@@ -682,11 +807,30 @@ mod tests {
         // with and without DTD, including multiple local experts (the
         // multi-chunk case) and chunked-over-pipelined precedence
         for strategy in [CollectiveStrategy::Hierarchical, CollectiveStrategy::HierarchicalPxn] {
-            round_trip_sched(strategy, 2, 2, 2, true, false, true, 6, 4, 16, 2);
-            round_trip_sched(strategy, 4, 4, 2, true, true, true, 8, 3, 24, 4);
+            round_trip_sched(strategy, 2, 0, 2, 2, true, false, true, 6, 4, 16, 2);
+            round_trip_sched(strategy, 4, 0, 4, 2, true, true, true, 8, 3, 24, 4);
         }
-        round_trip_sched(CollectiveStrategy::Flat, 0, 2, 2, true, false, true, 6, 4, 16, 2);
-        round_trip_sched(CollectiveStrategy::Flat, 0, 1, 2, false, false, true, 6, 4, 16, 4);
+        round_trip_sched(CollectiveStrategy::Flat, 0, 0, 2, 2, true, false, true, 6, 4, 16, 2);
+        round_trip_sched(CollectiveStrategy::Flat, 0, 0, 1, 2, false, false, true, 6, 4, 16, 4);
+    }
+
+    #[test]
+    fn round_trip_dc_split_all_transports() {
+        // HybridEP locality split: nodes of 2, DCs of 2 — at tp=2, ep=2
+        // every EP group ({0,2}/{1,3}) spans the DC boundary, so half of
+        // each rank's rows ride the DC-confined a2a and half the spanning
+        // one. Must round-trip bitwise with and without DTD, with the
+        // overlap flag on (dc_split takes precedence over the pipelined
+        // schedule), and on every transport.
+        for strategy in [CollectiveStrategy::Hierarchical, CollectiveStrategy::HierarchicalPxn] {
+            for dtd in [false, true] {
+                round_trip_sched(strategy, 2, 2, 2, 2, dtd, false, false, 6, 4, 16, 2);
+            }
+            round_trip_sched(strategy, 2, 2, 2, 2, true, true, false, 6, 4, 16, 2);
+            // multiple local experts, DCs of 4 on an 8-rank grid
+            round_trip_sched(strategy, 4, 4, 4, 2, true, false, false, 8, 3, 24, 4);
+        }
+        round_trip_sched(CollectiveStrategy::Flat, 0, 2, 2, 2, true, false, false, 6, 4, 16, 2);
     }
 
     #[test]
@@ -734,6 +878,7 @@ mod tests {
                             overlap: false,
                             chunked: false,
                             chunk_compute_s: 0.0,
+                            dc_split: None,
                         };
                         let disp = dispatch(&mut ctx, &rows, &dec, 1);
                         let _ = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, 1);
@@ -795,6 +940,7 @@ mod tests {
                             overlap: false,
                             chunked: false,
                             chunk_compute_s: 0.0,
+                            dc_split: None,
                         };
                         let disp = dispatch(&mut ctx, &rows, &dec, 1);
                         let _ = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, 1);
@@ -802,7 +948,7 @@ mod tests {
                 }
             });
             let a2a = rez.stats.total(CommKind::AllToAll);
-            (a2a.intra_bytes, a2a.inter_bytes)
+            (a2a.intra_bytes(), a2a.inter_bytes())
         };
         let (intra_off, inter_off) = lanes(false);
         let (intra_on, inter_on) = lanes(true);
@@ -838,6 +984,7 @@ mod tests {
             overlap: false,
             chunked: false,
             chunk_compute_s: 0.0,
+            dc_split: None,
         };
         let disp = dispatch(&mut ctx, &rows, &dec, 2);
         let back = return_to_origin(&mut ctx, &disp.buffers.clone(), &disp, &dec, 2);
@@ -874,6 +1021,7 @@ mod tests {
             overlap: false,
             chunked: false,
             chunk_compute_s: 0.0,
+            dc_split: None,
         };
         let disp = dispatch(&mut ctx, &rows, &dec, 2);
         let outs: Vec<Tensor> = disp

@@ -22,20 +22,23 @@
 //! single step (a burst) instead of the average one.
 //!
 //! [`batch_time_overlapped`] layers the compute-aware overlap model on
-//! top: the serialized comm time splits into an NVLink lane and an IB
-//! lane (accumulated per fabric phase by [`batch_time`]), and a
-//! nonblocking schedule can hide comm both behind the *other comm lane*
-//! (up to `min(intra, inter)`) and behind the *compute lane*. Hiding is
-//! bounded **per pass phase**: the iteration's compute budget splits
+//! top: the serialized comm time splits into one lane per fabric tier —
+//! NVLink, inter-node, and (on a cross-datacenter cluster) WAN —
+//! accumulated per fabric phase by [`batch_time`], and a nonblocking
+//! schedule can hide comm both behind the *other comm lanes* and behind
+//! the *compute lane*. Hiding is bounded **per pass phase**: the
+//! iteration's compute budget splits
 //! fwd : bwd : recompute = 1 : 2 : 1, or 1 : 2 : 0 under CAC
 //! ([`phase_compute_split`], [`BatchTime::phases`]) and comm
 //! issued inside one pass (the per-block collectives run once per pass;
 //! the gradient/ZeRO ops in the backward window) only hides behind that
 //! pass's compute slice — so the hideable bound is
 //! [`hideable_comm_phased_s`], a tightening of the whole-iteration bound
-//! [`hideable_comm_s`]. The `overlap_efficiency` knob scales how much of
-//! that bound the schedule actually achieves (0 = fully serialized =
-//! `--no-overlap`, 1 = perfect per-phase three-lane pipelining). The
+//! [`hideable_comm_lanes_s`] (`compute + Σ lanes − max`, the serialized
+//! total minus the makespan lower bound). The `overlap_efficiency` knob
+//! scales how much of that bound the schedule actually achieves (0 =
+//! fully serialized = `--no-overlap`, 1 = perfect per-phase
+//! multi-lane pipelining). The
 //! functional engine's measured per-step timeline
 //! (`sim::TrainLog::overlap_timeline`) is the measured counterpart;
 //! [`fit_overlap_efficiency`] calibrates the knob from a measured
@@ -46,15 +49,52 @@
 //! the analytic pricing sums it and `sim::replay` executes it through the
 //! real transports.
 
-use crate::collectives::{CollectiveStrategy, CommKind};
+use crate::collectives::{CollectiveStrategy, CommKind, MAX_TIERS};
 use crate::config::{ClusterConfig, ModelConfig, ParallelConfig};
 use crate::perfmodel::collective_cost::{
-    allgather_phased, allreduce_phased, alltoall_phased, traffic_skew, PhasedCost, TrafficSkew,
+    allgather_phased, allreduce_phased, alltoall_phased, peer_weights, traffic_skew, PhasedCost,
+    TrafficSkew,
 };
 use crate::perfmodel::flops::{attn_fwd_flops, ffn_fwd_flops, flops_per_iter_checkpointed};
 use crate::perfmodel::measured::MeasuredBlockTimes;
 use crate::topology::{RankGroups, Topology};
 use crate::util::cli::TrafficSpec;
+
+/// Where a cross-datacenter expert-parallel group keeps its hot experts
+/// (the HybridEP decision). On a cluster without a WAN tier — or when the
+/// EP group never leaves its datacenter — both settings execute the
+/// identical schedule, so `Ship` is always the safe default.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EpPlacement {
+    /// Route every token to its expert's home rank: the classic expert
+    /// all-to-all over the full EP group, WAN hops included.
+    Ship,
+    /// Replicate the hottest expert block into every datacenter: the hot
+    /// share of the routed tokens ([`migrate_local_frac`]) turns into a
+    /// DC-confined all-to-all, the cold share still crosses the spanning
+    /// group, and the replicas pay an amortized weight refresh
+    /// ([`MIGRATE_SYNC_STEPS`]) in the backward window.
+    Migrate,
+}
+
+impl EpPlacement {
+    /// CLI / report spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            EpPlacement::Ship => "ship",
+            EpPlacement::Migrate => "migrate",
+        }
+    }
+
+    /// Inverse of [`Self::name`].
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "ship" => Some(EpPlacement::Ship),
+            "migrate" => Some(EpPlacement::Migrate),
+            _ => None,
+        }
+    }
+}
 
 #[derive(Debug, Clone, Copy)]
 pub struct CommOpts {
@@ -92,6 +132,10 @@ pub struct CommOpts {
     /// `peak_half_tflops * flops_efficiency` guess. `None` (the default)
     /// preserves the analytic pricing bit-for-bit.
     pub measured: Option<MeasuredBlockTimes>,
+    /// HybridEP: ship routed tokens over the WAN (the default) or
+    /// migrate/replicate the hot experts into every datacenter. A no-op
+    /// unless the cluster has a WAN tier the EP group actually spans.
+    pub ep_placement: EpPlacement,
 }
 
 impl CommOpts {
@@ -106,6 +150,7 @@ impl CommOpts {
             delay_wgrad: false,
             dropless: false,
             measured: None,
+            ep_placement: EpPlacement::Ship,
         }
     }
 
@@ -152,6 +197,12 @@ impl CommOpts {
     /// Same switches, compute priced from a measured block-time table.
     pub fn with_measured(mut self, measured: Option<MeasuredBlockTimes>) -> Self {
         self.measured = measured;
+        self
+    }
+
+    /// Same switches, hot experts shipped to or migrated across the WAN.
+    pub fn with_ep_placement(mut self, placement: EpPlacement) -> Self {
+        self.ep_placement = placement;
         self
     }
 }
@@ -232,19 +283,36 @@ pub fn compute_budget_s(s: &Scenario) -> f64 {
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PhaseBudget {
     pub compute_s: f64,
-    pub comm_intra_s: f64,
-    pub comm_inter_s: f64,
+    /// Comm the phase issues, split per fabric tier (`[0]` intra-node,
+    /// `[1]` inter-node, `[2]` WAN).
+    pub comm_lane_s: [f64; MAX_TIERS],
 }
 
 impl PhaseBudget {
-    /// Comm a perfect schedule hides within this phase (three-lane bound).
+    /// Tier-0 (NVLink) share of the phase's comm.
+    pub fn comm_intra_s(&self) -> f64 {
+        self.comm_lane_s[0]
+    }
+
+    /// Tier-1 (inter-node) share of the phase's comm.
+    pub fn comm_inter_s(&self) -> f64 {
+        self.comm_lane_s[1]
+    }
+
+    /// Tier-2 (WAN) share of the phase's comm.
+    pub fn comm_wan_s(&self) -> f64 {
+        self.comm_lane_s[2]
+    }
+
+    /// Comm a perfect schedule hides within this phase (N-lane bound).
     pub fn hideable_s(&self) -> f64 {
-        hideable_comm_s(self.compute_s, self.comm_intra_s, self.comm_inter_s)
+        hideable_comm_lanes_s(self.compute_s, &self.comm_lane_s)
     }
 
     /// Of that, the share the phase's compute slice can absorb.
     pub fn behind_compute_bound_s(&self) -> f64 {
-        self.compute_s.min(self.comm_intra_s.max(self.comm_inter_s))
+        let max_lane = self.comm_lane_s.iter().copied().fold(0.0, f64::max);
+        self.compute_s.min(max_lane)
     }
 }
 
@@ -254,17 +322,33 @@ impl PhaseBudget {
 pub enum OpGroup {
     Tensor,
     Expert,
+    /// The EP-group members inside the caller's datacenter — the group
+    /// HybridEP's migrated hot experts confine their all-to-all to. Equal
+    /// to the full EP group on a cluster without a DC boundary.
+    ExpertDc,
     DataExpert,
     DataNonExpert,
 }
 
 impl OpGroup {
-    pub fn members<'g>(&self, g: &'g RankGroups) -> &'g [usize] {
+    /// The member list an op runs over. `gpus_per_dc` is the cluster's
+    /// datacenter boundary in rank space (0 = none); only [`ExpertDc`]
+    /// depends on it.
+    ///
+    /// [`ExpertDc`]: OpGroup::ExpertDc
+    pub fn members(&self, g: &RankGroups, gpus_per_dc: usize) -> Vec<usize> {
         match self {
-            OpGroup::Tensor => &g.tp_group,
-            OpGroup::Expert => &g.ep_group,
-            OpGroup::DataExpert => &g.dp_exp_group,
-            OpGroup::DataNonExpert => &g.dp_nonexp_group,
+            OpGroup::Tensor => g.tp_group.clone(),
+            OpGroup::Expert => g.ep_group.clone(),
+            OpGroup::DataExpert => g.dp_exp_group.clone(),
+            OpGroup::DataNonExpert => g.dp_nonexp_group.clone(),
+            OpGroup::ExpertDc => {
+                if gpus_per_dc == 0 {
+                    return g.ep_group.clone();
+                }
+                let dc = g.coords.rank / gpus_per_dc;
+                g.ep_group.iter().copied().filter(|&m| m / gpus_per_dc == dc).collect()
+            }
         }
     }
 }
@@ -287,6 +371,40 @@ pub struct CommOp {
 /// all-to-all (over the EP group's `ep` peers hosting `n_experts`).
 fn expert_skew(s: &Scenario) -> TrafficSkew {
     traffic_skew(s.opts.traffic, s.par.ep, s.n_experts)
+}
+
+/// Steps a migrated expert replica's weight refresh is amortized over:
+/// HybridEP re-syncs the replicated hot block every `MIGRATE_SYNC_STEPS`
+/// iterations, so each iteration carries `1/MIGRATE_SYNC_STEPS` of the
+/// block through the spanning EP group.
+pub const MIGRATE_SYNC_STEPS: f64 = 16.0;
+
+/// Does the scenario's EP group leave its datacenter? Rank 0's EP group
+/// is `{e * tp | e < ep}` (the mapping every other consumer of the
+/// analytic model prices with), so it spans DCs exactly when its last
+/// member crosses the first boundary.
+pub fn ep_spans_dcs(s: &Scenario) -> bool {
+    let d = s.cluster.gpus_per_dc;
+    d > 0 && (s.par.ep - 1) * s.par.tp >= d
+}
+
+/// The fraction of each rank's routed-token payload HybridEP's migration
+/// keeps inside the datacenter: the hottest EP peer's traffic share
+/// (its expert block is the one replicated everywhere). `1/ep` under
+/// uniform traffic — migration only pays off under skew.
+pub fn migrate_local_frac(s: &Scenario) -> f64 {
+    peer_weights(s.opts.traffic, s.par.ep, s.n_experts)
+        .into_iter()
+        .fold(0.0, f64::max)
+}
+
+/// Per-rank contribution of the amortized replica weight refresh, priced
+/// as an all-gather over the spanning EP group whose aggregate volume is
+/// one hot expert block (fp16) every [`MIGRATE_SYNC_STEPS`] steps.
+fn migrate_sync_bytes(s: &Scenario) -> f64 {
+    let block_bytes =
+        2.0 * s.model.n_params_expert(s.n_experts) as f64 / (s.par.tp * s.par.ep) as f64;
+    block_bytes / s.par.ep as f64 / MIGRATE_SYNC_STEPS
 }
 
 /// The collectives the engine issues per iteration for a scenario,
@@ -341,13 +459,39 @@ fn comm_ops_skewed(s: &Scenario, skew: f64) -> Vec<CommOp> {
             bytes: cap_bytes,
             count: per_pass(moe_layers),
         },
-        CommOp {
+    ];
+    // the expert all-to-all; under HybridEP migration (cross-DC EP group
+    // + migrated hot experts) it splits into a DC-confined hot share and
+    // a spanning cold share, plus the amortized replica weight refresh —
+    // one op list both the analytic pricing and the measured replay run
+    if s.opts.ep_placement == EpPlacement::Migrate && ep_spans_dcs(s) {
+        let local = migrate_local_frac(s);
+        ops.push(CommOp {
+            kind: CommKind::AllToAll,
+            group: OpGroup::ExpertDc,
+            bytes: a2a_bytes * local / chunks,
+            count: per_pass(moe_layers * 2.0 * chunks),
+        });
+        ops.push(CommOp {
+            kind: CommKind::AllToAll,
+            group: OpGroup::Expert,
+            bytes: a2a_bytes * (1.0 - local) / chunks,
+            count: per_pass(moe_layers * 2.0 * chunks),
+        });
+        ops.push(CommOp {
+            kind: CommKind::AllGather,
+            group: OpGroup::Expert,
+            bytes: migrate_sync_bytes(s),
+            count: bwd_only(1.0),
+        });
+    } else {
+        ops.push(CommOp {
             kind: CommKind::AllToAll,
             group: OpGroup::Expert,
             bytes: a2a_bytes / chunks,
             count: per_pass(moe_layers * 2.0 * chunks),
-        },
-    ];
+        });
+    }
     if s.opts.dtd {
         // one TP all-gather per A2A reassembles the capacity buffers, each
         // rank contributing the 1/tp slice it carried through the A2A.
@@ -400,10 +544,9 @@ pub struct BatchTime {
     pub allreduce_s: f64,
     pub alltoall_s: f64,
     pub allgather_s: f64,
-    /// NVLink-lane share of the comm time (sum of all intra phases).
-    pub comm_intra_s: f64,
-    /// InfiniBand-lane share of the comm time (sum of all inter phases).
-    pub comm_inter_s: f64,
+    /// Serialized comm split per fabric tier: `[0]` NVLink, `[1]`
+    /// inter-node, `[2]` WAN (zero on a two-tier cluster).
+    pub comm_lane_s: [f64; MAX_TIERS],
     /// The same quantities split per pass phase (fwd / bwd / recompute,
     /// compute 1:2:1): the per-phase budgets the overlap model bounds
     /// hiding with. Lanes sum to the aggregates above.
@@ -427,6 +570,21 @@ impl BatchTime {
     pub fn comm_s(&self) -> f64 {
         self.allreduce_s + self.alltoall_s + self.allgather_s
     }
+
+    /// Tier-0 (NVLink) share of the comm time.
+    pub fn comm_intra_s(&self) -> f64 {
+        self.comm_lane_s[0]
+    }
+
+    /// Tier-1 (inter-node) share of the comm time.
+    pub fn comm_inter_s(&self) -> f64 {
+        self.comm_lane_s[1]
+    }
+
+    /// Tier-2 (WAN) share of the comm time.
+    pub fn comm_wan_s(&self) -> f64 {
+        self.comm_lane_s[2]
+    }
 }
 
 pub fn batch_time(s: &Scenario) -> BatchTime {
@@ -440,6 +598,28 @@ pub fn batch_time(s: &Scenario) -> BatchTime {
 /// scenarios with `p < 1`.
 pub fn batch_time_worst_traffic(s: &Scenario) -> BatchTime {
     batch_time_from_ops(s, comm_ops_skewed(s, expert_skew(s).worst))
+}
+
+/// [`batch_time`] repriced at one **sampled step** of the traffic
+/// scenario: the expert all-to-all is inflated by the skew the seeded
+/// [`crate::data::TrafficModel`] actually draws at `step` — the same
+/// per-step expert weights the simulator's skewed data generator routes
+/// with — instead of the stationary average multiplier. The expert
+/// weights aggregate into contiguous EP-peer blocks (peer `p` hosts
+/// experts `[p*e/ep, (p+1)*e/ep)`, the engine's layout); the hot block's
+/// share times `ep` is the step's a2a multiplier, 1 under uniform traffic
+/// (sampling is then the identity). `ted plan --traffic-samples N` prices
+/// N consecutive steps of this per candidate and reports the p50/p95 of
+/// the step-time distribution next to the stationary average.
+pub fn batch_time_sampled(s: &Scenario, seed: u64, step: usize) -> BatchTime {
+    let weights =
+        crate::data::TrafficModel::new(s.opts.traffic, seed).expert_weights(step, s.n_experts);
+    let per = (s.n_experts / s.par.ep.max(1)).max(1);
+    let mut hot = 0.0f64;
+    for block in weights.chunks(per) {
+        hot = hot.max(block.iter().sum::<f64>());
+    }
+    batch_time_from_ops(s, comm_ops_skewed(s, (s.par.ep as f64 * hot).max(1.0)))
 }
 
 fn batch_time_from_ops(s: &Scenario, ops: Vec<CommOp>) -> BatchTime {
@@ -462,11 +642,11 @@ fn batch_time_from_ops(s: &Scenario, ops: Vec<CommOp>) -> BatchTime {
     let mut t = BatchTime { compute_s, phases, ..Default::default() };
     let mut a2a_phase = [0.0f64; 3];
     for op in ops {
-        let members = op.group.members(&g0);
+        let members = op.group.members(&g0, c.gpus_per_dc);
         let pc = match op.kind {
-            CommKind::AllReduce => allreduce_phased(c, strat, members, op.bytes),
-            CommKind::AllGather => allgather_phased(c, strat, members, op.bytes),
-            CommKind::AllToAll => alltoall_phased(c, strat, members, op.bytes),
+            CommKind::AllReduce => allreduce_phased(c, strat, &members, op.bytes),
+            CommKind::AllGather => allgather_phased(c, strat, &members, op.bytes),
+            CommKind::AllToAll => alltoall_phased(c, strat, &members, op.bytes),
             _ => PhasedCost::default(),
         };
         let count: f64 = op.count.iter().sum();
@@ -476,13 +656,17 @@ fn batch_time_from_ops(s: &Scenario, ops: Vec<CommOp>) -> BatchTime {
             CommKind::AllToAll => t.alltoall_s += count * pc.total(),
             _ => {}
         }
-        t.comm_intra_s += count * pc.intra_s;
-        t.comm_inter_s += count * pc.inter_s;
-        for (p, budget) in t.phases.iter_mut().enumerate() {
-            budget.comm_intra_s += op.count[p] * pc.intra_s;
-            budget.comm_inter_s += op.count[p] * pc.inter_s;
+        for (tier, lane) in t.comm_lane_s.iter_mut().enumerate() {
+            *lane += count * pc.lanes[tier];
         }
-        if op.kind == CommKind::AllToAll && op.group == OpGroup::Expert {
+        for (p, budget) in t.phases.iter_mut().enumerate() {
+            for (tier, lane) in budget.comm_lane_s.iter_mut().enumerate() {
+                *lane += op.count[p] * pc.lanes[tier];
+            }
+        }
+        if op.kind == CommKind::AllToAll
+            && matches!(op.group, OpGroup::Expert | OpGroup::ExpertDc)
+        {
             for (p, acc) in a2a_phase.iter_mut().enumerate() {
                 *acc += op.count[p] * pc.total();
             }
@@ -573,15 +757,29 @@ impl OverlappedBatchTime {
     }
 }
 
-/// Comm seconds a perfect three-lane schedule can hide: the shorter comm
-/// lane behind the longer one (`min(intra, inter)`), plus comm behind the
-/// compute lane up to the compute budget (`min(compute, max(intra,
-/// inter))` — compute can only hide the lane that is still exposed).
-/// Equivalently `compute + intra + inter - max(compute, intra, inter)`:
-/// the serialized total minus the three-lane makespan lower bound.
+/// Comm seconds a perfect multi-lane schedule can hide: every lane but
+/// the longest rides behind the longest (compute included), so the bound
+/// is `compute + Σ lanes - max(compute, lanes...)` — the serialized total
+/// minus the makespan lower bound. With only the first two lanes
+/// populated this is exactly the classic three-lane
+/// `compute + intra + inter - max(compute, intra, inter)`.
+pub fn hideable_comm_lanes_s(compute_s: f64, lanes: &[f64; MAX_TIERS]) -> f64 {
+    let mut total = compute_s;
+    let mut longest = compute_s;
+    for &l in lanes {
+        total += l;
+        longest = longest.max(l);
+    }
+    total - longest
+}
+
+/// [`hideable_comm_lanes_s`] for the classic two-comm-lane decomposition
+/// (a measured timeline that only exposes intra/inter aggregates).
 pub fn hideable_comm_s(compute_s: f64, comm_intra_s: f64, comm_inter_s: f64) -> f64 {
-    compute_s + comm_intra_s + comm_inter_s
-        - compute_s.max(comm_intra_s).max(comm_inter_s)
+    let mut lanes = [0.0; MAX_TIERS];
+    lanes[0] = comm_intra_s;
+    lanes[1] = comm_inter_s;
+    hideable_comm_lanes_s(compute_s, &lanes)
 }
 
 /// The per-phase hideable bound: each pass phase's comm hides behind the
@@ -611,11 +809,28 @@ pub fn fit_overlap_efficiency(
     comm_inter_s: f64,
     critical_s: f64,
 ) -> f64 {
-    let hideable = hideable_comm_s(compute_s, comm_intra_s, comm_inter_s);
+    let mut lanes = [0.0; MAX_TIERS];
+    lanes[0] = comm_intra_s;
+    lanes[1] = comm_inter_s;
+    fit_overlap_efficiency_lanes(compute_s, &lanes, critical_s)
+}
+
+/// [`fit_overlap_efficiency`] for a full per-tier measured timeline
+/// (e.g. `RankTimeline::lane_serialized_s` on a cross-DC run).
+pub fn fit_overlap_efficiency_lanes(
+    compute_s: f64,
+    lanes: &[f64; MAX_TIERS],
+    critical_s: f64,
+) -> f64 {
+    let hideable = hideable_comm_lanes_s(compute_s, lanes);
     if hideable <= 0.0 {
         return 0.0;
     }
-    let hidden = compute_s + comm_intra_s + comm_inter_s - critical_s;
+    let mut hidden = compute_s;
+    for &l in lanes {
+        hidden += l;
+    }
+    hidden -= critical_s;
     (hidden / hideable).clamp(0.0, 1.0)
 }
 
@@ -631,7 +846,11 @@ pub fn fit_overlap_efficiency_phased(base: &BatchTime, critical_s: f64) -> f64 {
     if hideable - pipelined <= 0.0 {
         return 0.0;
     }
-    let hidden = base.compute_s + base.comm_intra_s + base.comm_inter_s - critical_s;
+    let mut hidden = base.compute_s;
+    for &l in &base.comm_lane_s {
+        hidden += l;
+    }
+    hidden -= critical_s;
     ((hidden - pipelined) / (hideable - pipelined)).clamp(0.0, 1.0)
 }
 
@@ -659,7 +878,10 @@ pub fn overlap_from_base(base: BatchTime, overlap_efficiency: f64) -> Overlapped
         (0.0..=1.0).contains(&overlap_efficiency),
         "overlap_efficiency must be in [0, 1], got {overlap_efficiency}"
     );
-    let serialized = base.comm_intra_s + base.comm_inter_s;
+    let mut serialized = 0.0;
+    for &l in &base.comm_lane_s {
+        serialized += l;
+    }
     let hideable = hideable_comm_phased_s(&base);
     // the chunked-a2a / delayed-wgrad schedule hides its share by
     // construction (expert k's FFN runs while chunk k+1 flies), so that
@@ -785,7 +1007,7 @@ mod tests {
     fn lanes_sum_to_comm_time() {
         for strat in crate::collectives::ALL_STRATEGIES {
             let t = batch_time(&scenario(CommOpts::optimized().with_strategy(strat)));
-            let lanes = t.comm_intra_s + t.comm_inter_s;
+            let lanes = t.comm_intra_s() + t.comm_inter_s();
             assert!(
                 (lanes - t.comm_s()).abs() < 1e-9 * t.comm_s().max(1.0),
                 "{strat:?}: lanes {lanes} vs comm {}",
@@ -794,7 +1016,7 @@ mod tests {
             // every backend prices node-local groups (the tp=4 groups on
             // 6-GPU Summit nodes) at NVLink and the spanning EP/DP groups'
             // cross-node phases at IB, so both lanes are populated
-            assert!(t.comm_intra_s > 0.0 && t.comm_inter_s > 0.0, "{strat:?}");
+            assert!(t.comm_intra_s() > 0.0 && t.comm_inter_s() > 0.0, "{strat:?}");
         }
     }
 
@@ -814,11 +1036,11 @@ mod tests {
         assert!(full.total() < none.total());
         // never below the three-lane makespan bound: total >= max lane
         let b = &none.base;
-        let bound = b.compute_s.max(b.comm_intra_s).max(b.comm_inter_s);
+        let bound = b.compute_s.max(b.comm_intra_s()).max(b.comm_inter_s());
         assert!(full.total() >= bound - 1e-12, "{} vs {bound}", full.total());
         // compute can hide comm beyond the two-lane bound, but only up to
         // the compute budget
-        let two_lane = b.comm_intra_s.max(b.comm_inter_s);
+        let two_lane = b.comm_intra_s().max(b.comm_inter_s());
         assert!(full.critical_comm_s < two_lane);
         assert!(full.critical_comm_s >= two_lane - full.hidden_behind_compute_s - 1e-12);
         // the hidden time is exactly eff * hideable
@@ -834,8 +1056,8 @@ mod tests {
         // it reads the same schedule as a lower-or-equal efficiency
         let agg = fit_overlap_efficiency(
             b.compute_s,
-            b.comm_intra_s,
-            b.comm_inter_s,
+            b.comm_intra_s(),
+            b.comm_inter_s(),
             half.total(),
         );
         assert!(agg <= eff + 1e-12, "aggregate fit {agg} vs phased {eff}");
@@ -851,16 +1073,16 @@ mod tests {
             let (mut c, mut a, mut b) = (0.0, 0.0, 0.0);
             for p in &t.phases {
                 c += p.compute_s;
-                a += p.comm_intra_s;
-                b += p.comm_inter_s;
+                a += p.comm_intra_s();
+                b += p.comm_inter_s();
             }
             let tol = 1e-9 * t.total().max(1.0);
             assert!((c - t.compute_s).abs() < tol, "compute split must sum back");
-            assert!((a - t.comm_intra_s).abs() < tol, "intra lanes must sum back");
-            assert!((b - t.comm_inter_s).abs() < tol, "inter lanes must sum back");
+            assert!((a - t.comm_intra_s()).abs() < tol, "intra lanes must sum back");
+            assert!((b - t.comm_inter_s()).abs() < tol, "inter lanes must sum back");
             // ...and the per-phase bound never exceeds the aggregate bound
             let phased = hideable_comm_phased_s(&t);
-            let agg = hideable_comm_s(t.compute_s, t.comm_intra_s, t.comm_inter_s);
+            let agg = hideable_comm_s(t.compute_s, t.comm_intra_s(), t.comm_inter_s());
             assert!(phased <= agg + tol, "{phased} vs {agg}");
         }
         // with CAC the recompute phase is empty on both axes: no re-issued
@@ -870,8 +1092,8 @@ mod tests {
         ));
         let rec = &t.phases[PHASE_RECOMPUTE];
         assert_eq!(rec.compute_s, 0.0);
-        assert_eq!(rec.comm_intra_s, 0.0);
-        assert_eq!(rec.comm_inter_s, 0.0);
+        assert_eq!(rec.comm_intra_s(), 0.0);
+        assert_eq!(rec.comm_inter_s(), 0.0);
         assert_eq!(rec.hideable_s(), 0.0);
         // comm-dominated phases make the tightening strict: when one phase
         // is inter-bound and another compute-bound, the aggregate bound
@@ -879,28 +1101,27 @@ mod tests {
         // phase's comm — the per-phase bound cannot
         let t = BatchTime {
             compute_s: 5.0,
-            comm_intra_s: 0.7,
-            comm_inter_s: 3.5,
+            comm_lane_s: [0.7, 3.5, 0.0, 0.0],
             phases: [
-                PhaseBudget { compute_s: 1.0, comm_intra_s: 0.2, comm_inter_s: 3.0 },
-                PhaseBudget { compute_s: 4.0, comm_intra_s: 0.5, comm_inter_s: 0.5 },
+                PhaseBudget { compute_s: 1.0, comm_lane_s: [0.2, 3.0, 0.0, 0.0] },
+                PhaseBudget { compute_s: 4.0, comm_lane_s: [0.5, 0.5, 0.0, 0.0] },
                 PhaseBudget::default(),
             ],
             ..Default::default()
         };
         let phased = hideable_comm_phased_s(&t); // (1.2 fwd) + (1.0 bwd)
-        let agg = hideable_comm_s(t.compute_s, t.comm_intra_s, t.comm_inter_s);
+        let agg = hideable_comm_s(t.compute_s, t.comm_intra_s(), t.comm_inter_s());
         assert!((phased - 2.2).abs() < 1e-12, "{phased}");
         assert!((agg - 4.2).abs() < 1e-12, "{agg}");
         assert!(phased < agg, "comm-bound phases must tighten strictly");
         // without CAC the recompute phase re-issues the forward set
         let t3 = batch_time(&scenario(CommOpts::baseline()));
         let rec3 = &t3.phases[PHASE_RECOMPUTE];
-        assert!(rec3.comm_intra_s + rec3.comm_inter_s > 0.0);
+        assert!(rec3.comm_intra_s() + rec3.comm_inter_s() > 0.0);
         assert!(rec3.compute_s > 0.0);
         let fwd3 = &t3.phases[PHASE_FWD];
-        assert!((rec3.comm_intra_s - fwd3.comm_intra_s).abs() < 1e-12);
-        assert!((rec3.comm_inter_s - fwd3.comm_inter_s).abs() < 1e-12);
+        assert!((rec3.comm_intra_s() - fwd3.comm_intra_s()).abs() < 1e-12);
+        assert!((rec3.comm_inter_s() - fwd3.comm_inter_s()).abs() < 1e-12);
     }
 
     #[test]

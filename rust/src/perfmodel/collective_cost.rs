@@ -36,7 +36,7 @@
 //! `lane_bytes_*` functions mirror the accounting convention, not the
 //! pricing one; under the hierarchical backend the two coincide.
 
-use crate::collectives::{CollectiveStrategy, NodeMap, NodePlan};
+use crate::collectives::{CollectiveStrategy, NodeMap, NodePlan, MAX_TIERS};
 use crate::config::ClusterConfig;
 use crate::util::cli::TrafficSpec;
 
@@ -45,6 +45,67 @@ pub fn group_intranode(members: &[usize], gpus_per_node: usize) -> bool {
     let Some(first) = members.first() else { return true };
     let node = first / gpus_per_node;
     members.iter().all(|&m| m / gpus_per_node == node)
+}
+
+/// The fabric-boundary map a cluster's pricing uses: node boundaries from
+/// `gpus_per_node`, datacenter boundaries from `gpus_per_dc` (0 = none).
+pub fn cluster_map(cluster: &ClusterConfig) -> NodeMap {
+    NodeMap::with_dc(cluster.gpus_per_node, cluster.gpus_per_dc)
+}
+
+/// Does a communicator group live entirely inside one datacenter? Always
+/// true on a cluster without a DC boundary — which is exactly what keeps
+/// every two-tier price on the pre-tier code path, bit for bit.
+pub fn group_intradc(members: &[usize], cluster: &ClusterConfig) -> bool {
+    if cluster.gpus_per_dc == 0 {
+        return true;
+    }
+    let Some(first) = members.first() else { return true };
+    let dc = first / cluster.gpus_per_dc;
+    members.iter().all(|&m| m / cluster.gpus_per_dc == dc)
+}
+
+/// α-β primitives priced on an explicit fabric tier (the N-tier analogs
+/// of [`allreduce_s`]/[`allgather_s`]/[`alltoall_s`], which keep the
+/// two-tier intranode/spanning selection for the degenerate presets).
+fn tier_bw_alpha(cluster: &ClusterConfig, tier: usize) -> (f64, f64) {
+    (cluster.tier_bw_bytes(tier), cluster.tier_latency_s(tier))
+}
+
+/// Ring all-reduce over `bytes` payload per rank, on fabric tier `tier`
+/// with `n` endpoints.
+pub fn allreduce_tier_s(cluster: &ClusterConfig, tier: usize, n: usize, bytes: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let (bw, alpha) = tier_bw_alpha(cluster, tier);
+    let nf = n as f64;
+    2.0 * (nf - 1.0) / nf * bytes / bw + 2.0 * (nf - 1.0) * alpha
+}
+
+/// All-gather of `bytes_per_rank` per endpoint on fabric tier `tier`.
+pub fn allgather_tier_s(
+    cluster: &ClusterConfig,
+    tier: usize,
+    n: usize,
+    bytes_per_rank: f64,
+) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let (bw, alpha) = tier_bw_alpha(cluster, tier);
+    let nf = n as f64;
+    (nf - 1.0) * bytes_per_rank / bw + (nf - 1.0) * alpha
+}
+
+/// All-to-all of `local_bytes` per endpoint on fabric tier `tier`.
+pub fn alltoall_tier_s(cluster: &ClusterConfig, tier: usize, n: usize, local_bytes: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let (bw, alpha) = tier_bw_alpha(cluster, tier);
+    let nf = n as f64;
+    (nf - 1.0) / nf * local_bytes / bw + (nf - 1.0) * alpha
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -104,16 +165,52 @@ pub fn alltoall_s(cluster: &ClusterConfig, g: GroupShape, local_bytes: f64) -> f
 // phased (hierarchical) pricing
 // ---------------------------------------------------------------------
 
-/// Cost of one collective split by fabric; flat ops fill a single field.
+/// Cost of one collective split by fabric tier: `lanes[0]` intra-node,
+/// `lanes[1]` inter-node, `lanes[2]` WAN. Flat ops fill a single lane.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PhasedCost {
-    pub intra_s: f64,
-    pub inter_s: f64,
+    pub lanes: [f64; MAX_TIERS],
 }
 
 impl PhasedCost {
+    /// Whole cost on one tier (the flat-transport shape).
+    pub fn on(tier: usize, s: f64) -> Self {
+        let mut pc = PhasedCost::default();
+        pc.lanes[tier] = s;
+        pc
+    }
+
+    /// The classic two-tier split (intra-node, inter-node).
+    pub fn two(intra_s: f64, inter_s: f64) -> Self {
+        let mut pc = PhasedCost::default();
+        pc.lanes[0] = intra_s;
+        pc.lanes[1] = inter_s;
+        pc
+    }
+
+    pub fn intra_s(&self) -> f64 {
+        self.lanes[0]
+    }
+
+    pub fn inter_s(&self) -> f64 {
+        self.lanes[1]
+    }
+
+    pub fn wan_s(&self) -> f64 {
+        self.lanes[2]
+    }
+
+    /// Every lane scaled by `f` (reduce-scatter is half an all-reduce).
+    pub fn scaled(&self, f: f64) -> Self {
+        let mut pc = *self;
+        for l in pc.lanes.iter_mut() {
+            *l *= f;
+        }
+        pc
+    }
+
     pub fn total(&self) -> f64 {
-        self.intra_s + self.inter_s
+        self.lanes.iter().sum()
     }
 }
 
@@ -125,6 +222,46 @@ fn node_profile(members: &[usize], gpus_per_node: usize) -> (usize, usize) {
     // non-empty groups and the node decomposition is caller-independent.
     let max_subset = plan.nodes.iter().map(|(_, s)| s.len()).max().unwrap_or(1);
     (max_subset, plan.n_nodes())
+}
+
+/// Largest per-datacenter member count and datacenter count for a group
+/// (member lists are ascending, so DC runs are contiguous).
+fn dc_profile(members: &[usize], gpus_per_dc: usize) -> (usize, usize) {
+    if gpus_per_dc == 0 {
+        return (members.len(), 1);
+    }
+    let mut counts: Vec<(usize, usize)> = Vec::new();
+    for &m in members {
+        let dc = m / gpus_per_dc;
+        match counts.last_mut() {
+            Some((d, c)) if *d == dc => *c += 1,
+            _ => counts.push((dc, 1)),
+        }
+    }
+    let kd = counts.iter().map(|&(_, c)| c).max().unwrap_or(1);
+    (kd, counts.len().max(1))
+}
+
+/// Largest number of distinct group nodes inside one datacenter — the
+/// endpoint count of the leaders' intra-DC wire phase.
+fn nodes_per_dc_profile(members: &[usize], cluster: &ClusterConfig) -> usize {
+    let map = cluster_map(cluster);
+    let mut nodes: Vec<usize> = members.iter().map(|&m| map.node_of(m)).collect();
+    nodes.dedup();
+    let mut best = 1usize;
+    let mut cur = 0usize;
+    let mut last_dc = None;
+    for &nd in &nodes {
+        let dc = map.dc_of_node(nd);
+        if Some(dc) == last_dc {
+            cur += 1;
+        } else {
+            last_dc = Some(dc);
+            cur = 1;
+        }
+        best = best.max(cur);
+    }
+    best
 }
 
 fn intra_shape(size: usize) -> GroupShape {
@@ -152,32 +289,49 @@ pub fn alltoall_phased(
     match strategy {
         CollectiveStrategy::Flat => {
             let g = GroupShape::of(members, cluster);
-            let t = alltoall_s(cluster, g, local_bytes);
             if g.intranode {
-                PhasedCost { intra_s: t, inter_s: 0.0 }
+                PhasedCost::on(0, alltoall_s(cluster, g, local_bytes))
+            } else if group_intradc(members, cluster) {
+                PhasedCost::on(1, alltoall_s(cluster, g, local_bytes))
             } else {
-                PhasedCost { intra_s: 0.0, inter_s: t }
+                // the flat exchange serializes on the widest fabric it spans
+                PhasedCost::on(2, alltoall_tier_s(cluster, 2, n, local_bytes))
             }
         }
         CollectiveStrategy::Hierarchical => {
             let (k, nodes) = node_profile(members, cluster.gpus_per_node);
             if nodes == 1 {
-                return PhasedCost {
-                    intra_s: alltoall_s(cluster, intra_shape(n), local_bytes),
-                    inter_s: 0.0,
-                };
+                return PhasedCost::on(0, alltoall_s(cluster, intra_shape(n), local_bytes));
             }
             let same_frac = (k.saturating_sub(1)) as f64 / (n - 1) as f64;
             let intra_bytes = local_bytes * same_frac;
             let inter_bytes = local_bytes - intra_bytes;
-            PhasedCost {
-                intra_s: alltoall_s(cluster, intra_shape(k), intra_bytes),
-                inter_s: alltoall_s(cluster, inter_shape(n), inter_bytes),
+            if group_intradc(members, cluster) {
+                PhasedCost::two(
+                    alltoall_s(cluster, intra_shape(k), intra_bytes),
+                    alltoall_s(cluster, inter_shape(n), inter_bytes),
+                )
+            } else {
+                // three-tier split: same-node rows ride NVLink, same-DC
+                // cross-node rows the DC fabric, the rest crosses the WAN
+                let (kd, _) = dc_profile(members, cluster.gpus_per_dc);
+                let dc_frac = (kd.saturating_sub(k)) as f64 / (n - 1) as f64;
+                let dc_bytes = local_bytes * dc_frac;
+                let wan_bytes = local_bytes - intra_bytes - dc_bytes;
+                let mut pc = PhasedCost::two(
+                    alltoall_s(cluster, intra_shape(k), intra_bytes),
+                    alltoall_tier_s(cluster, 1, n, dc_bytes),
+                );
+                pc.lanes[2] = alltoall_tier_s(cluster, 2, n, wan_bytes);
+                pc
             }
         }
         CollectiveStrategy::HierarchicalPxn => {
-            let (pre, wire, post) = alltoall_pxn_schedule(cluster, members, local_bytes);
-            PhasedCost { intra_s: pre + post, inter_s: wire }
+            let (pre, wire_dc, wire_wan, post) =
+                alltoall_pxn_schedule_tiers(cluster, members, local_bytes);
+            let mut pc = PhasedCost::two(pre + post, wire_dc);
+            pc.lanes[2] = wire_wan;
+            pc
         }
     }
 }
@@ -196,22 +350,46 @@ pub fn alltoall_pxn_schedule(
     members: &[usize],
     local_bytes: f64,
 ) -> (f64, f64, f64) {
+    let (pre, wire_dc, wire_wan, post) = alltoall_pxn_schedule_tiers(cluster, members, local_bytes);
+    (pre, wire_dc + wire_wan, post)
+}
+
+/// [`alltoall_pxn_schedule`] with the wire phase split by fabric tier:
+/// `(pre-wire intra, same-DC wire, WAN wire, post-wire intra)`. Leaders
+/// batch one message per peer node either way; batches addressed to a
+/// node in another datacenter are priced on the WAN tier. On a cluster
+/// without a DC boundary the WAN component is exactly zero.
+pub fn alltoall_pxn_schedule_tiers(
+    cluster: &ClusterConfig,
+    members: &[usize],
+    local_bytes: f64,
+) -> (f64, f64, f64, f64) {
     let n = members.len();
     if n <= 1 {
-        return (0.0, 0.0, 0.0);
+        return (0.0, 0.0, 0.0, 0.0);
     }
     let (k, nodes) = node_profile(members, cluster.gpus_per_node);
     if nodes == 1 {
-        return (alltoall_s(cluster, intra_shape(n), local_bytes), 0.0, 0.0);
+        return (alltoall_s(cluster, intra_shape(n), local_bytes), 0.0, 0.0, 0.0);
     }
     let same_frac = (k.saturating_sub(1)) as f64 / (n - 1) as f64;
     let intra_bytes = local_bytes * same_frac;
     let inter_bytes = local_bytes - intra_bytes;
     let pre = alltoall_s(cluster, intra_shape(k), intra_bytes)
         + alltoall_s(cluster, intra_shape(k), inter_bytes);
-    let wire = alltoall_s(cluster, inter_shape(nodes), k as f64 * inter_bytes);
     let post = alltoall_s(cluster, intra_shape(k), inter_bytes);
-    (pre, wire, post)
+    if group_intradc(members, cluster) {
+        let wire = alltoall_s(cluster, inter_shape(nodes), k as f64 * inter_bytes);
+        (pre, wire, 0.0, post)
+    } else {
+        let (kd, _) = dc_profile(members, cluster.gpus_per_dc);
+        let dc_frac = (kd.saturating_sub(k)) as f64 / (n - 1) as f64;
+        let dc_bytes = local_bytes * dc_frac;
+        let wan_bytes = local_bytes - intra_bytes - dc_bytes;
+        let wire_dc = alltoall_tier_s(cluster, 1, nodes, k as f64 * dc_bytes);
+        let wire_wan = alltoall_tier_s(cluster, 2, nodes, k as f64 * wan_bytes);
+        (pre, wire_dc, wire_wan, post)
+    }
 }
 
 /// All-gather priced per backend: intra-node gather of `bytes_per_rank`,
@@ -230,11 +408,12 @@ pub fn allgather_phased(
     match strategy {
         CollectiveStrategy::Flat => {
             let g = GroupShape::of(members, cluster);
-            let t = allgather_s(cluster, g, bytes_per_rank);
             if g.intranode {
-                PhasedCost { intra_s: t, inter_s: 0.0 }
+                PhasedCost::on(0, allgather_s(cluster, g, bytes_per_rank))
+            } else if group_intradc(members, cluster) {
+                PhasedCost::on(1, allgather_s(cluster, g, bytes_per_rank))
             } else {
-                PhasedCost { intra_s: 0.0, inter_s: t }
+                PhasedCost::on(2, allgather_tier_s(cluster, 2, n, bytes_per_rank))
             }
         }
         // both hierarchical backends gather to the node leader; they differ
@@ -246,23 +425,41 @@ pub fn allgather_phased(
         CollectiveStrategy::Hierarchical | CollectiveStrategy::HierarchicalPxn => {
             let (k, nodes) = node_profile(members, cluster.gpus_per_node);
             if nodes == 1 {
-                return PhasedCost {
-                    intra_s: allgather_s(cluster, intra_shape(n), bytes_per_rank),
-                    inter_s: 0.0,
-                };
+                return PhasedCost::on(0, allgather_s(cluster, intra_shape(n), bytes_per_rank));
             }
             let block = k as f64 * bytes_per_rank;
             // gather + redistribution on the node, block exchange on the wire
             let intra = allgather_s(cluster, intra_shape(k), bytes_per_rank)
                 + allgather_s(cluster, intra_shape(k), (nodes - 1) as f64 * block / k as f64);
-            let mut inter = allgather_s(cluster, inter_shape(nodes), block);
-            if strategy == CollectiveStrategy::Hierarchical {
-                // per-member delivery: (n-k) messages instead of PXN's
-                // (m-1) leader batches; allgather_s already charged (m-1)α
-                let alpha = cluster.latency_s(nodes, false);
-                inter += ((n - k) as f64 - (nodes - 1) as f64) * alpha;
+            if group_intradc(members, cluster) {
+                let mut inter = allgather_s(cluster, inter_shape(nodes), block);
+                if strategy == CollectiveStrategy::Hierarchical {
+                    // per-member delivery: (n-k) messages instead of PXN's
+                    // (m-1) leader batches; allgather_s already charged (m-1)α
+                    let alpha = cluster.latency_s(nodes, false);
+                    inter += ((n - k) as f64 - (nodes - 1) as f64) * alpha;
+                }
+                PhasedCost::two(intra, inter)
+            } else {
+                // leaders exchange node blocks with the nd-1 same-DC peer
+                // nodes over the DC fabric and the rest over the WAN
+                let nd = nodes_per_dc_profile(members, cluster);
+                let (kd, _) = dc_profile(members, cluster.gpus_per_dc);
+                let (bw1, a1) = tier_bw_alpha(cluster, 1);
+                let (bw2, a2) = tier_bw_alpha(cluster, 2);
+                let dc_peers = (nd.saturating_sub(1)) as f64;
+                let wan_peers = (nodes.saturating_sub(nd)) as f64;
+                let mut lane1 = dc_peers * (block / bw1 + a1);
+                let mut lane2 = wan_peers * (block / bw2 + a2);
+                if strategy == CollectiveStrategy::Hierarchical {
+                    // per-member delivery instead of per-leader batches
+                    lane1 += ((kd.saturating_sub(k)) as f64 - dc_peers) * a1;
+                    lane2 += ((n - kd) as f64 - wan_peers) * a2;
+                }
+                let mut pc = PhasedCost::two(intra, lane1);
+                pc.lanes[2] = lane2;
+                pc
             }
-            PhasedCost { intra_s: intra, inter_s: inter }
         }
     }
 }
@@ -282,25 +479,36 @@ pub fn allreduce_phased(
     match strategy {
         CollectiveStrategy::Flat => {
             let g = GroupShape::of(members, cluster);
-            let t = allreduce_s(cluster, g, bytes);
             if g.intranode {
-                PhasedCost { intra_s: t, inter_s: 0.0 }
+                PhasedCost::on(0, allreduce_s(cluster, g, bytes))
+            } else if group_intradc(members, cluster) {
+                PhasedCost::on(1, allreduce_s(cluster, g, bytes))
             } else {
-                PhasedCost { intra_s: 0.0, inter_s: t }
+                PhasedCost::on(2, allreduce_tier_s(cluster, 2, n, bytes))
             }
         }
         // reductions are identical across the hierarchical backends
         CollectiveStrategy::Hierarchical | CollectiveStrategy::HierarchicalPxn => {
             let (k, nodes) = node_profile(members, cluster.gpus_per_node);
             if nodes == 1 {
-                return PhasedCost {
-                    intra_s: allreduce_s(cluster, intra_shape(n), bytes),
-                    inter_s: 0.0,
-                };
+                return PhasedCost::on(0, allreduce_s(cluster, intra_shape(n), bytes));
             }
-            PhasedCost {
-                intra_s: allreduce_s(cluster, intra_shape(k), bytes),
-                inter_s: allreduce_s(cluster, inter_shape(nodes), bytes),
+            if group_intradc(members, cluster) {
+                PhasedCost::two(
+                    allreduce_s(cluster, intra_shape(k), bytes),
+                    allreduce_s(cluster, inter_shape(nodes), bytes),
+                )
+            } else {
+                // node partials reduce across the DC's nodes, then one
+                // DC partial per DC leader crosses the WAN
+                let (_, n_dcs) = dc_profile(members, cluster.gpus_per_dc);
+                let nd = nodes_per_dc_profile(members, cluster);
+                let mut pc = PhasedCost::two(
+                    allreduce_s(cluster, intra_shape(k), bytes),
+                    allreduce_tier_s(cluster, 1, nd, bytes),
+                );
+                pc.lanes[2] = allreduce_tier_s(cluster, 2, n_dcs, bytes);
+                pc
             }
         }
     }
@@ -320,11 +528,33 @@ pub fn lane_bytes_alltoall(
     gpus_per_node: usize,
     world: usize,
 ) -> (u64, u64) {
+    let l = lane_bytes_alltoall_tiers(
+        strategy,
+        members,
+        my_pos,
+        send_bytes,
+        NodeMap::new(gpus_per_node),
+        world,
+    );
+    (l[0], l[1])
+}
+
+/// [`lane_bytes_alltoall`] on an explicit [`NodeMap`], attributing each
+/// destination row to the fabric tier it crosses (`[0]` intra-node,
+/// `[1]` inter-node, `[2]` WAN).
+pub fn lane_bytes_alltoall_tiers(
+    strategy: CollectiveStrategy,
+    members: &[usize],
+    my_pos: usize,
+    send_bytes: &[u64],
+    map: NodeMap,
+    world: usize,
+) -> [u64; MAX_TIERS] {
     assert_eq!(send_bytes.len(), members.len());
+    let mut lanes = [0u64; MAX_TIERS];
     if members.len() <= 1 {
-        return (0, 0);
+        return lanes;
     }
-    let map = NodeMap::new(gpus_per_node);
     let nonself: u64 = send_bytes
         .iter()
         .enumerate()
@@ -333,27 +563,18 @@ pub fn lane_bytes_alltoall(
         .sum();
     match strategy {
         CollectiveStrategy::Flat => {
-            if map.spans_nodes(world) {
-                (0, nonself)
-            } else {
-                (nonself, 0)
-            }
+            lanes[map.job_tier(world)] = nonself;
+            lanes
         }
         CollectiveStrategy::Hierarchical => {
             let me = members[my_pos];
-            let mut intra = 0;
-            let mut inter = 0;
             for (i, &b) in send_bytes.iter().enumerate() {
                 if i == my_pos {
                     continue;
                 }
-                if map.same_node(me, members[i]) {
-                    intra += b;
-                } else {
-                    inter += b;
-                }
+                lanes[map.tier_of(me, members[i])] += b;
             }
-            (intra, inter)
+            lanes
         }
         CollectiveStrategy::HierarchicalPxn => panic!(
             "PXN lane bytes depend on the whole node's send matrix; \
@@ -374,12 +595,27 @@ pub fn lane_bytes_alltoall_pxn(
     send_bytes: &[Vec<u64>],
     gpus_per_node: usize,
 ) -> (u64, u64) {
+    let l =
+        lane_bytes_alltoall_pxn_tiers(members, my_pos, send_bytes, NodeMap::new(gpus_per_node));
+    (l[0], l[1])
+}
+
+/// [`lane_bytes_alltoall_pxn`] on an explicit [`NodeMap`]: a leader's
+/// batched wire volume is attributed per destination member's tier (all
+/// members of a node share a datacenter, so this equals per-batch
+/// attribution).
+pub fn lane_bytes_alltoall_pxn_tiers(
+    members: &[usize],
+    my_pos: usize,
+    send_bytes: &[Vec<u64>],
+    map: NodeMap,
+) -> [u64; MAX_TIERS] {
     let n = members.len();
     assert_eq!(send_bytes.len(), n);
+    let mut lanes = [0u64; MAX_TIERS];
     if n <= 1 {
-        return (0, 0);
+        return lanes;
     }
-    let map = NodeMap::new(gpus_per_node);
     let plan = NodePlan::build(map, members, my_pos);
     let nonself_row = |src: usize| -> u64 {
         send_bytes[src]
@@ -390,8 +626,10 @@ pub fn lane_bytes_alltoall_pxn(
             .sum()
     };
     if plan.n_nodes() == 1 {
-        return (nonself_row(my_pos), 0);
+        lanes[0] = nonself_row(my_pos);
+        return lanes;
     }
+    let me = members[my_pos];
     let subset = plan.my_subset();
     let on_node = |p: usize| subset.contains(&p);
     let own_same: u64 = subset
@@ -403,15 +641,19 @@ pub fn lane_bytes_alltoall_pxn(
         (0..n).filter(|&p| !on_node(p)).map(|p| send_bytes[my_pos][p]).sum();
     if !plan.is_leader() {
         // same-node exchange + forwarding the cross-node rows to the leader
-        return (own_same + own_cross, 0);
+        lanes[0] = own_same + own_cross;
+        return lanes;
     }
     // leader: its own cross rows never cross NVLink (it holds them); it
-    // ships the node's aggregated cross-node volume over the wire and
+    // ships the node's aggregated cross-node volume over the wire — each
+    // row charged to the tier its destination node sits behind — and
     // redistributes the rows received for its node peers over NVLink.
-    let node_cross: u64 = subset
-        .iter()
-        .map(|&s| (0..n).filter(|&p| !on_node(p)).map(|p| send_bytes[s][p]).sum::<u64>())
-        .sum();
+    lanes[0] = own_same;
+    for &s in subset {
+        for p in (0..n).filter(|&p| !on_node(p)) {
+            lanes[map.tier_of(me, members[p])] += send_bytes[s][p];
+        }
+    }
     let dist: u64 = (0..n)
         .filter(|&src| !on_node(src))
         .map(|src| {
@@ -422,7 +664,8 @@ pub fn lane_bytes_alltoall_pxn(
                 .sum::<u64>()
         })
         .sum();
-    (own_same + dist, node_cross)
+    lanes[0] += dist;
+    lanes
 }
 
 /// Predicted (intra, inter) **message counts** recorded by rank
@@ -440,40 +683,66 @@ pub fn lane_msgs_alltoall(
     gpus_per_node: usize,
     world: usize,
 ) -> (u64, u64) {
+    let l = lane_msgs_alltoall_tiers(strategy, members, my_pos, NodeMap::new(gpus_per_node), world);
+    (l[0], l[1])
+}
+
+/// [`lane_msgs_alltoall`] on an explicit [`NodeMap`]: spanning messages
+/// (per-peer rows under the plain hierarchy, per-peer-node batches under
+/// PXN) are counted on the tier each destination sits behind.
+pub fn lane_msgs_alltoall_tiers(
+    strategy: CollectiveStrategy,
+    members: &[usize],
+    my_pos: usize,
+    map: NodeMap,
+    world: usize,
+) -> [u64; MAX_TIERS] {
     let n = members.len();
+    let mut lanes = [0u64; MAX_TIERS];
     if n <= 1 {
-        return (0, 0);
+        return lanes;
     }
-    let map = NodeMap::new(gpus_per_node);
     let peers = (n - 1) as u64;
     match strategy {
         CollectiveStrategy::Flat => {
-            if map.spans_nodes(world) {
-                (0, peers)
-            } else {
-                (peers, 0)
-            }
+            lanes[map.job_tier(world)] = peers;
+            lanes
         }
         CollectiveStrategy::Hierarchical => {
             let plan = NodePlan::build(map, members, my_pos);
             if plan.n_nodes() == 1 {
-                return (peers, 0);
+                lanes[0] = peers;
+                return lanes;
             }
-            let k = plan.my_subset().len() as u64;
-            (k - 1, n as u64 - k)
+            let me = members[my_pos];
+            let subset = plan.my_subset();
+            lanes[0] = (subset.len() - 1) as u64;
+            for (i, &r) in members.iter().enumerate() {
+                if i != my_pos && !map.same_node(me, r) {
+                    lanes[map.tier_of(me, r)] += 1;
+                }
+            }
+            lanes
         }
         CollectiveStrategy::HierarchicalPxn => {
             let plan = NodePlan::build(map, members, my_pos);
             if plan.n_nodes() == 1 {
-                return (peers, 0);
+                lanes[0] = peers;
+                return lanes;
             }
             let k = plan.my_subset().len() as u64;
-            let m = plan.n_nodes() as u64;
             if plan.is_leader() {
-                (2 * (k - 1), m - 1)
+                lanes[0] = 2 * (k - 1);
+                let me = members[my_pos];
+                for (node, subset) in &plan.nodes {
+                    if *node != plan.nodes[plan.my_node].0 {
+                        lanes[map.tier_of(me, members[subset[0]])] += 1;
+                    }
+                }
             } else {
-                (k, 0)
+                lanes[0] = k;
             }
+            lanes
         }
     }
 }
@@ -494,36 +763,59 @@ pub fn lane_msgs_allgather(
     gpus_per_node: usize,
     world: usize,
 ) -> (u64, u64) {
+    let l =
+        lane_msgs_allgather_tiers(strategy, members, my_pos, NodeMap::new(gpus_per_node), world);
+    (l[0], l[1])
+}
+
+/// [`lane_msgs_allgather`] on an explicit [`NodeMap`]: a leader's block
+/// deliveries (per cross-node member under the plain hierarchy, per peer
+/// node under PXN) are counted on the destination's tier.
+pub fn lane_msgs_allgather_tiers(
+    strategy: CollectiveStrategy,
+    members: &[usize],
+    my_pos: usize,
+    map: NodeMap,
+    world: usize,
+) -> [u64; MAX_TIERS] {
     let n = members.len();
+    let mut lanes = [0u64; MAX_TIERS];
     if n <= 1 {
-        return (0, 0);
+        return lanes;
     }
-    let map = NodeMap::new(gpus_per_node);
     let peers = (n - 1) as u64;
     match strategy {
         CollectiveStrategy::Flat => {
-            if map.spans_nodes(world) {
-                (0, peers)
-            } else {
-                (peers, 0)
-            }
+            lanes[map.job_tier(world)] = peers;
+            lanes
         }
         CollectiveStrategy::Hierarchical | CollectiveStrategy::HierarchicalPxn => {
             let plan = NodePlan::build(map, members, my_pos);
             if plan.n_nodes() == 1 {
-                return (peers, 0);
+                lanes[0] = peers;
+                return lanes;
             }
             let k = plan.my_subset().len() as u64;
             if !plan.is_leader() {
-                return (1, 0);
+                lanes[0] = 1;
+                return lanes;
             }
-            let m = plan.n_nodes() as u64;
-            let inter = if strategy == CollectiveStrategy::HierarchicalPxn {
-                m - 1
+            lanes[0] = k - 1;
+            let me = members[my_pos];
+            if strategy == CollectiveStrategy::HierarchicalPxn {
+                for (node, subset) in &plan.nodes {
+                    if *node != plan.nodes[plan.my_node].0 {
+                        lanes[map.tier_of(me, members[subset[0]])] += 1;
+                    }
+                }
             } else {
-                n as u64 - k
-            };
-            (k - 1, inter)
+                for (i, &r) in members.iter().enumerate() {
+                    if i != my_pos && !map.same_node(me, r) {
+                        lanes[map.tier_of(me, r)] += 1;
+                    }
+                }
+            }
+            lanes
         }
     }
 }
@@ -538,37 +830,67 @@ pub fn lane_bytes_allgather(
     gpus_per_node: usize,
     world: usize,
 ) -> (u64, u64) {
+    let l = lane_bytes_allgather_tiers(
+        strategy,
+        members,
+        my_pos,
+        contrib_bytes,
+        NodeMap::new(gpus_per_node),
+        world,
+    );
+    (l[0], l[1])
+}
+
+/// [`lane_bytes_allgather`] on an explicit [`NodeMap`]. The leader's node
+/// block is counted once, on the **widest** tier any peer node sits
+/// behind (it leaves the rank once; the per-destination α-cost lives in
+/// the message counts instead).
+pub fn lane_bytes_allgather_tiers(
+    strategy: CollectiveStrategy,
+    members: &[usize],
+    my_pos: usize,
+    contrib_bytes: &[u64],
+    map: NodeMap,
+    world: usize,
+) -> [u64; MAX_TIERS] {
     assert_eq!(contrib_bytes.len(), members.len());
+    let mut lanes = [0u64; MAX_TIERS];
     if members.len() <= 1 {
-        return (0, 0);
+        return lanes;
     }
-    let map = NodeMap::new(gpus_per_node);
     let own = contrib_bytes[my_pos];
     match strategy {
         CollectiveStrategy::Flat => {
-            if map.spans_nodes(world) {
-                (0, own)
-            } else {
-                (own, 0)
-            }
+            lanes[map.job_tier(world)] = own;
+            lanes
         }
         CollectiveStrategy::Hierarchical | CollectiveStrategy::HierarchicalPxn => {
             let plan = NodePlan::build(map, members, my_pos);
             if plan.n_nodes() == 1 {
-                return (own, 0);
+                lanes[0] = own;
+                return lanes;
             }
             let subset = plan.my_subset();
             let my_block: u64 = subset.iter().map(|&p| contrib_bytes[p]).sum();
             let total: u64 = contrib_bytes.iter().sum();
-            let mut intra = if subset.len() > 1 { own } else { 0 };
-            let mut inter = 0;
+            if subset.len() > 1 {
+                lanes[0] = own;
+            }
             if plan.is_leader() {
-                inter += my_block;
+                let me = members[my_pos];
+                let wire_tier = plan
+                    .nodes
+                    .iter()
+                    .filter(|(node, _)| *node != plan.nodes[plan.my_node].0)
+                    .map(|(_, s)| map.tier_of(me, members[s[0]]))
+                    .max()
+                    .unwrap_or(1);
+                lanes[wire_tier] += my_block;
                 if subset.len() > 1 {
-                    intra += total - my_block;
+                    lanes[0] += total - my_block;
                 }
             }
-            (intra, inter)
+            lanes
         }
     }
 }
@@ -583,23 +905,69 @@ pub fn lane_bytes_allreduce(
     gpus_per_node: usize,
     world: usize,
 ) -> (u64, u64) {
+    let l = lane_bytes_allreduce_tiers(
+        strategy,
+        members,
+        my_pos,
+        bytes,
+        NodeMap::new(gpus_per_node),
+        world,
+    );
+    (l[0], l[1])
+}
+
+/// [`lane_bytes_allreduce`] on an explicit [`NodeMap`]: node leaders
+/// exchange node partials across their datacenter's nodes (tier 1), and
+/// each datacenter's leader — the leader of the DC's first group node —
+/// additionally bridges one DC partial over the WAN (tier 2).
+pub fn lane_bytes_allreduce_tiers(
+    strategy: CollectiveStrategy,
+    members: &[usize],
+    my_pos: usize,
+    bytes: u64,
+    map: NodeMap,
+    world: usize,
+) -> [u64; MAX_TIERS] {
+    let mut lanes = [0u64; MAX_TIERS];
     if members.len() <= 1 {
-        return (0, 0);
+        return lanes;
     }
-    let map = NodeMap::new(gpus_per_node);
     match strategy {
         CollectiveStrategy::Flat => {
-            if map.spans_nodes(world) {
-                (0, bytes)
-            } else {
-                (bytes, 0)
-            }
+            lanes[map.job_tier(world)] = bytes;
+            lanes
         }
         CollectiveStrategy::Hierarchical | CollectiveStrategy::HierarchicalPxn => {
             let plan = NodePlan::build(map, members, my_pos);
-            let intra = if plan.my_subset().len() > 1 { bytes } else { 0 };
-            let inter = if plan.n_nodes() > 1 && plan.is_leader() { bytes } else { 0 };
-            (intra, inter)
+            if plan.my_subset().len() > 1 {
+                lanes[0] = bytes;
+            }
+            if plan.n_nodes() > 1 && plan.is_leader() {
+                let my_dc = map.dc_of_node(plan.nodes[plan.my_node].0);
+                let dc_nodes = plan
+                    .nodes
+                    .iter()
+                    .filter(|(node, _)| map.dc_of_node(*node) == my_dc)
+                    .count();
+                if dc_nodes > 1 {
+                    lanes[1] = bytes;
+                }
+                let first_dc_node = plan
+                    .nodes
+                    .iter()
+                    .map(|(node, _)| *node)
+                    .find(|&node| map.dc_of_node(node) == my_dc);
+                let n_dcs = {
+                    let mut dcs: Vec<usize> =
+                        plan.nodes.iter().map(|(node, _)| map.dc_of_node(*node)).collect();
+                    dcs.dedup();
+                    dcs.len()
+                };
+                if n_dcs > 1 && first_dc_node == Some(plan.nodes[plan.my_node].0) {
+                    lanes[2] = bytes;
+                }
+            }
+            lanes
         }
     }
 }
@@ -741,17 +1109,17 @@ mod tests {
         let members: Vec<usize> = (0..12).collect();
         let flat = alltoall_phased(&c, CollectiveStrategy::Flat, &members, 1e9);
         let hier = alltoall_phased(&c, CollectiveStrategy::Hierarchical, &members, 1e9);
-        assert_eq!(flat.intra_s, 0.0);
-        assert!(flat.inter_s > 0.0);
-        assert!(hier.inter_s < flat.inter_s, "{} vs {}", hier.inter_s, flat.inter_s);
+        assert_eq!(flat.intra_s(), 0.0);
+        assert!(flat.inter_s() > 0.0);
+        assert!(hier.inter_s() < flat.inter_s(), "{} vs {}", hier.inter_s(), flat.inter_s());
         assert!(hier.total() < flat.total());
         // node-local group: both price at NVLink, no inter phase
         let local: Vec<usize> = (0..6).collect();
         let f2 = alltoall_phased(&c, CollectiveStrategy::Flat, &local, 1e9);
         let h2 = alltoall_phased(&c, CollectiveStrategy::Hierarchical, &local, 1e9);
-        assert_eq!(f2.inter_s, 0.0);
-        assert_eq!(h2.inter_s, 0.0);
-        assert!((f2.intra_s - h2.intra_s).abs() < 1e-12);
+        assert_eq!(f2.inter_s(), 0.0);
+        assert_eq!(h2.inter_s(), 0.0);
+        assert!((f2.intra_s() - h2.intra_s()).abs() < 1e-12);
     }
 
     #[test]
@@ -759,9 +1127,9 @@ mod tests {
         let c = summit();
         let members: Vec<usize> = (0..12).collect();
         let ag = allgather_phased(&c, CollectiveStrategy::Hierarchical, &members, 1e8);
-        assert!(ag.intra_s > 0.0 && ag.inter_s > 0.0);
+        assert!(ag.intra_s() > 0.0 && ag.inter_s() > 0.0);
         let ar = allreduce_phased(&c, CollectiveStrategy::Hierarchical, &members, 1e8);
-        assert!(ar.intra_s > 0.0 && ar.inter_s > 0.0);
+        assert!(ar.intra_s() > 0.0 && ar.inter_s() > 0.0);
         // hierarchical all-reduce of a spanning group beats the flat price
         // (the big volume rides NVLink; only node partials cross the wire)
         let flat = allreduce_phased(&c, CollectiveStrategy::Flat, &members, 1e8);
@@ -811,7 +1179,7 @@ mod tests {
         let small = 4096.0;
         let hier = alltoall_phased(&c8, CollectiveStrategy::Hierarchical, &members, small);
         let pxn = alltoall_phased(&c8, CollectiveStrategy::HierarchicalPxn, &members, small);
-        assert!(pxn.inter_s < hier.inter_s, "{} vs {}", pxn.inter_s, hier.inter_s);
+        assert!(pxn.inter_s() < hier.inter_s(), "{} vs {}", pxn.inter_s(), hier.inter_s());
         assert!(pxn.total() < hier.total(), "{} vs {}", pxn.total(), hier.total());
         // huge payload: bandwidth-bound, the leader serialization loses
         let big = 1e9;
@@ -822,8 +1190,8 @@ mod tests {
         let local: Vec<usize> = (0..8).collect();
         let h2 = alltoall_phased(&c8, CollectiveStrategy::Hierarchical, &local, 1e6);
         let p2 = alltoall_phased(&c8, CollectiveStrategy::HierarchicalPxn, &local, 1e6);
-        assert_eq!(p2.inter_s, 0.0);
-        assert!((h2.intra_s - p2.intra_s).abs() < 1e-15);
+        assert_eq!(p2.inter_s(), 0.0);
+        assert!((h2.intra_s() - p2.intra_s()).abs() < 1e-15);
     }
 
     #[test]
@@ -885,17 +1253,17 @@ mod tests {
         let members: Vec<usize> = (0..4).collect();
         let hier = allgather_phased(&c, CollectiveStrategy::Hierarchical, &members, 1e6);
         let pxn = allgather_phased(&c, CollectiveStrategy::HierarchicalPxn, &members, 1e6);
-        assert_eq!(hier.intra_s, pxn.intra_s);
+        assert_eq!(hier.intra_s(), pxn.intra_s());
         let alpha = c.latency_s(2, false);
         // n-k = 2 deliveries vs m-1 = 1 batch: exactly one extra α
-        assert!((hier.inter_s - pxn.inter_s - alpha).abs() < 1e-15);
+        assert!((hier.inter_s() - pxn.inter_s() - alpha).abs() < 1e-15);
         assert!(pxn.total() < hier.total());
         // node-local group (tp <= gpus_per_node): no wire, no difference
         let local = [0usize, 1];
         let h2 = allgather_phased(&c, CollectiveStrategy::Hierarchical, &local, 1e6);
         let p2 = allgather_phased(&c, CollectiveStrategy::HierarchicalPxn, &local, 1e6);
-        assert_eq!(h2.inter_s, 0.0);
-        assert_eq!(h2.intra_s, p2.intra_s);
+        assert_eq!(h2.inter_s(), 0.0);
+        assert_eq!(h2.intra_s(), p2.intra_s());
         // the predicted message counts mirror the α accounting: equal
         // bytes by construction, strictly fewer inter messages under PXN
         assert_eq!(

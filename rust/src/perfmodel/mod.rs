@@ -12,17 +12,23 @@ pub mod flops;
 pub mod measured;
 
 pub use batch_time::{
-    batch_time, batch_time_overlapped, batch_time_worst_traffic, comm_ops, compute_budget_s,
-    fit_overlap_efficiency, fit_overlap_efficiency_phased, gpu_flops_rate,
-    hideable_comm_phased_s, hideable_comm_s, overlap_from_base, phase_compute_split, BatchTime,
-    CommOp, CommOpts, OpGroup, OverlappedBatchTime, PhaseBudget, Scenario,
+    batch_time, batch_time_overlapped, batch_time_sampled, batch_time_worst_traffic, comm_ops,
+    compute_budget_s,
+    ep_spans_dcs, fit_overlap_efficiency, fit_overlap_efficiency_lanes,
+    fit_overlap_efficiency_phased, gpu_flops_rate, hideable_comm_lanes_s, hideable_comm_phased_s,
+    hideable_comm_s, migrate_local_frac, overlap_from_base, phase_compute_split, BatchTime,
+    CommOp, CommOpts, EpPlacement, OpGroup, OverlappedBatchTime, PhaseBudget, Scenario,
+    MIGRATE_SYNC_STEPS,
 };
 pub use batch_time::{PHASE_BWD, PHASE_COMPUTE_SPLIT, PHASE_FWD, PHASE_RECOMPUTE};
 pub use collective_cost::{
-    allgather_phased, allgather_s, allreduce_phased, allreduce_s, alltoall_phased,
-    alltoall_pxn_schedule, alltoall_s, lane_bytes_allgather, lane_bytes_allreduce,
-    lane_bytes_alltoall, lane_bytes_alltoall_pxn, lane_msgs_allgather, lane_msgs_alltoall,
-    peer_weights, traffic_skew, GroupShape, PhasedCost, TrafficSkew,
+    allgather_phased, allgather_s, allgather_tier_s, allreduce_phased, allreduce_s,
+    allreduce_tier_s, alltoall_phased, alltoall_pxn_schedule, alltoall_pxn_schedule_tiers,
+    alltoall_s, alltoall_tier_s, cluster_map, group_intradc, lane_bytes_allgather,
+    lane_bytes_allgather_tiers, lane_bytes_allreduce, lane_bytes_allreduce_tiers,
+    lane_bytes_alltoall, lane_bytes_alltoall_pxn, lane_bytes_alltoall_pxn_tiers,
+    lane_bytes_alltoall_tiers, lane_msgs_allgather, lane_msgs_allgather_tiers, lane_msgs_alltoall,
+    lane_msgs_alltoall_tiers, peer_weights, traffic_skew, GroupShape, PhasedCost, TrafficSkew,
 };
 pub use flops::{
     attn_fwd_flops, ffn_fwd_flops, flops_per_iter, flops_per_iter_checkpointed, head_fwd_flops,

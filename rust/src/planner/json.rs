@@ -18,7 +18,8 @@ fn knob_fields(p: &Plan) -> Vec<(&'static str, Json)> {
         ("strategy", Json::str(k.strategy.name())),
         ("gpus_per_node", Json::Num(k.gpus_per_node as f64)),
         ("overlap", Json::Bool(k.overlap)),
-        ("chunked", Json::Bool(k.chunked)),
+        ("chunked", Json::Num(k.chunked as f64)),
+        ("ep_placement", Json::str(k.ep_placement.name())),
         ("dtd", Json::Bool(k.dtd)),
         ("cac", Json::Bool(k.cac)),
         ("tile", k.tile.map(|t| Json::Num(t as f64)).unwrap_or(Json::Null)),
@@ -33,8 +34,9 @@ fn plan_json(p: &Plan) -> Json {
         ("total_s", Json::Num(p.total_s())),
         ("worst_total_s", Json::Num(p.worst_total_s())),
         ("compute_s", Json::Num(t.base.compute_s)),
-        ("comm_intra_s", Json::Num(t.base.comm_intra_s)),
-        ("comm_inter_s", Json::Num(t.base.comm_inter_s)),
+        ("comm_intra_s", Json::Num(t.base.comm_intra_s())),
+        ("comm_inter_s", Json::Num(t.base.comm_inter_s())),
+        ("comm_wan_s", Json::Num(t.base.comm_wan_s())),
         ("serialized_comm_s", Json::Num(t.serialized_comm_s)),
         ("critical_comm_s", Json::Num(t.critical_comm_s)),
         ("hidden_comm_s", Json::Num(p.hidden_comm_s())),
@@ -44,6 +46,13 @@ fn plan_json(p: &Plan) -> Json {
         ("mem_budget_gib", Json::Num(p.mem_budget_bytes as f64 / GIB)),
         ("mem_headroom_gib", Json::Num(p.headroom_bytes() as f64 / GIB)),
     ]);
+    if let Some(d) = p.step_dist {
+        fields.extend([
+            ("step_samples", Json::Num(d.samples as f64)),
+            ("step_p50_s", Json::Num(d.p50_s)),
+            ("step_p95_s", Json::Num(d.p95_s)),
+        ]);
+    }
     Json::obj(fields)
 }
 
@@ -51,16 +60,32 @@ fn plan_json(p: &Plan) -> Json {
 /// (0 = all). Rejections are summarized per reason kind with one example
 /// each — the full list is usually dominated by repeats of one cause.
 pub fn report_json(req: &PlanRequest, report: &PlanReport, top: usize) -> Json {
+    let tiers = Json::Arr(
+        req.cluster
+            .tiers
+            .iter()
+            .map(|t| {
+                Json::obj([
+                    ("name", Json::str(t.name.clone())),
+                    ("bw_gbs", Json::Num(t.bw_gbs)),
+                    ("latency_s", Json::Num(t.latency_s)),
+                ])
+            })
+            .collect(),
+    );
     let request = Json::obj([
         ("model", Json::str(req.model.name.clone())),
         ("experts", Json::Num(req.n_experts as f64)),
         ("gpus", Json::Num(req.gpus as f64)),
         ("cluster", Json::str(req.cluster.name.clone())),
+        ("gpus_per_dc", Json::Num(req.cluster.gpus_per_dc as f64)),
+        ("tiers", tiers),
         ("global_batch", Json::Num(req.global_batch as f64)),
         ("overlap_efficiency", Json::Num(req.overlap_efficiency)),
         ("max_tp", Json::Num(req.max_tp as f64)),
         ("capacity_factor", Json::Num(req.capacity_factor)),
         ("traffic", Json::str(req.traffic.name())),
+        ("traffic_samples", Json::Num(req.traffic_samples as f64)),
     ]);
     let shown = if top == 0 { report.plans.len() } else { top.min(report.plans.len()) };
     let plans = Json::Arr(report.plans[..shown].iter().map(plan_json).collect());
@@ -131,6 +156,10 @@ mod tests {
             back.get("request").unwrap().get("traffic").unwrap().as_str(),
             Some("uniform")
         );
+        // the request carries the cluster's ordered fabric-tier vector
+        let tiers = back.get("request").unwrap().get("tiers").unwrap().as_array().unwrap();
+        assert!(tiers.len() >= 2, "two-tier preset emits both tiers");
+        assert_eq!(tiers[0].get("name").unwrap().as_str(), Some("nvlink"));
         for p in plans {
             assert!(p.get("mem_peak_phase").unwrap().as_str().is_some());
             assert!(p.get("mem_headroom_gib").unwrap().as_f64().unwrap() >= 0.0);

@@ -52,8 +52,8 @@ use crate::collectives::{ALL_STRATEGIES, CollectiveStrategy};
 use crate::config::{ClusterConfig, EngineOptions, ModelConfig, ParallelConfig};
 use crate::memory::{MemoryModel, Phase};
 use crate::perfmodel::{
-    batch_time, batch_time_worst_traffic, overlap_from_base, CommOpts, MeasuredBlockTimes,
-    OverlappedBatchTime, Scenario,
+    batch_time, batch_time_sampled, batch_time_worst_traffic, overlap_from_base, BatchTime,
+    CommOpts, EpPlacement, MeasuredBlockTimes, OverlappedBatchTime, Scenario,
 };
 use crate::util::cli::TrafficSpec;
 
@@ -83,12 +83,15 @@ pub struct PlanRequest {
     pub capacity_factor: f64,
     pub strategies: Vec<CollectiveStrategy>,
     pub overlap_choices: Vec<bool>,
-    /// Chunked expert all-to-all candidates (`--chunked` adds `true`).
-    /// A chunked point splits the expert a2a into one chunk per local
-    /// expert and delays the wgrad pass-unit; it is only searched with
-    /// overlap on (chunking exists to hide latency, so a serialized
+    /// Chunked expert all-to-all granularities to search (`--chunked`
+    /// widens the default `[0]` to `[0, 1, 2, 4]`). Granularity `0` is
+    /// the monolithic transfer; `g >= 1` splits the a2a into one chunk
+    /// per `g` local experts (1 = the per-expert schedule the engine
+    /// executes, larger g = coarser chunks paying fewer α-surcharges)
+    /// and delays the wgrad pass-unit. Chunked points are only searched
+    /// with overlap on (chunking exists to hide latency, so a serialized
     /// chunked schedule is strictly dominated and pruned).
-    pub chunked_choices: Vec<bool>,
+    pub chunked_choices: Vec<usize>,
     pub cac_choices: Vec<bool>,
     /// Optimizer tiling candidates: `Some(tile)` tiled, `None` untiled.
     pub tile_choices: Vec<Option<usize>>,
@@ -100,6 +103,13 @@ pub struct PlanRequest {
     /// expert all-to-all, so a skew-heavy scenario can re-rank plans
     /// toward smaller expert-parallel groups.
     pub traffic: TrafficSpec,
+    /// Number of consecutive traffic-model steps to sample per candidate
+    /// (`--traffic-samples N`): each plan additionally carries the
+    /// p50/p95 of its sampled step-time distribution
+    /// ([`Plan::step_dist`]), priced at the seeded [`crate::data::TrafficModel`]'s
+    /// actual per-step expert-weight draws ([`batch_time_sampled`]).
+    /// `0` (the default) skips sampling.
+    pub traffic_samples: usize,
     /// Measured per-block compute times (`ted plan --measured-compute`):
     /// when set, every candidate's compute lane is priced at the table's
     /// effective per-GPU flop rate instead of the cluster's analytic
@@ -130,11 +140,12 @@ impl PlanRequest {
             capacity_factor: 1.25,
             strategies: ALL_STRATEGIES.to_vec(),
             overlap_choices: vec![true, false],
-            chunked_choices: vec![false],
+            chunked_choices: vec![0],
             cac_choices: vec![true, false],
             tile_choices: vec![Some(DEFAULT_TILE), None],
             micro_batch_choices: vec![1],
             traffic: TrafficSpec::Uniform,
+            traffic_samples: 0,
             measured: None,
         }
     }
@@ -151,9 +162,14 @@ pub struct PlanKnobs {
     /// cluster's physical node size.
     pub gpus_per_node: usize,
     pub overlap: bool,
-    /// Chunked expert a2a + delayed wgrad (the batch-level overlap pair);
-    /// only emitted alongside `overlap`.
-    pub chunked: bool,
+    /// Chunked expert a2a granularity + delayed wgrad (the batch-level
+    /// overlap pair): 0 = monolithic, `g >= 1` = one chunk per `g` local
+    /// experts; only emitted alongside `overlap`.
+    pub chunked: usize,
+    /// HybridEP routing placement: [`EpPlacement::Migrate`] is only
+    /// emitted when the EP group actually crosses the cluster's
+    /// datacenter boundary; otherwise every plan ships.
+    pub ep_placement: EpPlacement,
     pub dtd: bool,
     pub cac: bool,
     pub tile: Option<usize>,
@@ -172,8 +188,12 @@ impl PlanKnobs {
             strategy: self.strategy,
             gpus_per_node: self.gpus_per_node,
             overlap: self.overlap,
-            chunked_a2a: self.chunked,
-            delay_wgrad: self.chunked,
+            // the engine executes the per-expert (granularity-1) chunk
+            // schedule for any chunked plan; coarser granularities are a
+            // pricing refinement of the same hiding structure
+            chunked_a2a: self.chunked > 0,
+            delay_wgrad: self.chunked > 0,
+            ep_placement: self.ep_placement,
             ..EngineOptions::default()
         }
     }
@@ -181,10 +201,12 @@ impl PlanKnobs {
     /// Canonical tie-break order: smaller tp first (less tensor-parallel
     /// comm at equal price), then larger ep (less expert-parameter
     /// replication), transport in CLI-listing order, overlap-on before
-    /// off, unchunked before chunked (at equal price the simpler
-    /// monolithic schedule wins), CAC-on before off, tiled before
-    /// untiled, smaller micro-batch.
-    pub fn rank_key(&self) -> (usize, usize, usize, bool, bool, bool, bool, usize) {
+    /// off, unchunked before chunked and finer chunking before coarser
+    /// (at equal price the simpler monolithic schedule wins), ship
+    /// before migrate (at equal price the placement without replicas
+    /// wins), CAC-on before off, tiled before untiled, smaller
+    /// micro-batch.
+    pub fn rank_key(&self) -> (usize, usize, usize, bool, usize, bool, bool, bool, usize) {
         let strat = ALL_STRATEGIES
             .iter()
             .position(|s| *s == self.strategy)
@@ -195,6 +217,7 @@ impl PlanKnobs {
             strat,
             !self.overlap,
             self.chunked,
+            self.ep_placement == EpPlacement::Migrate,
             !self.cac,
             self.tile.is_none(),
             self.micro_batch,
@@ -203,13 +226,14 @@ impl PlanKnobs {
 
     pub fn describe(&self) -> String {
         format!(
-            "tp{} ep{} dp_exp{} {} overlap={} chunked={} cac={} tile={} micro={}",
+            "tp{} ep{} dp_exp{} {} overlap={} chunked={} place={} cac={} tile={} micro={}",
             self.par.tp,
             self.par.ep,
             self.par.dp_exp,
             self.strategy.name(),
             self.overlap,
             self.chunked,
+            self.ep_placement.name(),
             self.cac,
             self.tile.map(|t| t.to_string()).unwrap_or_else(|| "off".into()),
             self.micro_batch
@@ -273,6 +297,22 @@ pub struct Rejection {
     pub reason: RejectReason,
 }
 
+/// Percentiles of a plan's sampled step-time distribution
+/// (`--traffic-samples N`): `N` consecutive steps priced at the seeded
+/// traffic model's actual per-step expert-weight draws
+/// ([`batch_time_sampled`]), nearest-rank percentiles.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepDist {
+    pub samples: usize,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+/// Seed for the sampled-traffic pricing draws (the tests' conventional
+/// traffic seed, so sampled planner numbers line up with the simulator's
+/// skewed data generators when both use it).
+pub const TRAFFIC_SAMPLE_SEED: u64 = 42;
+
 /// A feasible, priced configuration.
 #[derive(Debug, Clone)]
 pub struct Plan {
@@ -284,6 +324,9 @@ pub struct Plan {
     /// step** (a burst iteration); equals `time` for uniform and zipf
     /// traffic, strictly slower for bursty scenarios.
     pub worst_time: OverlappedBatchTime,
+    /// Sampled step-time percentiles (`None` unless the request set
+    /// `traffic_samples > 0`).
+    pub step_dist: Option<StepDist>,
     /// The binding memory phase and its per-GPU bytes.
     pub mem_peak_phase: Phase,
     pub mem_peak_bytes: u64,
@@ -359,11 +402,17 @@ pub fn scenario_for(req: &PlanRequest, knobs: &PlanKnobs) -> Scenario {
             capacity_factor: req.capacity_factor,
             strategy: knobs.strategy,
             traffic: req.traffic,
-            // one chunk per local expert, exactly what the engine executes
-            a2a_chunks: if knobs.chunked { (req.n_experts / knobs.par.ep).max(1) } else { 1 },
-            delay_wgrad: knobs.chunked,
+            // granularity g: one chunk per g local experts (g = 1 is the
+            // per-expert schedule the engine executes)
+            a2a_chunks: if knobs.chunked > 0 {
+                ((req.n_experts / knobs.par.ep.max(1)) / knobs.chunked).max(1)
+            } else {
+                1
+            },
+            delay_wgrad: knobs.chunked > 0,
             dropless: false,
             measured: req.measured,
+            ep_placement: knobs.ep_placement,
         },
     }
 }
@@ -404,6 +453,15 @@ fn divisors_up_to(n: usize, cap: usize) -> Vec<usize> {
     (1..=cap.min(n)).filter(|d| n % d == 0).collect()
 }
 
+/// Nearest-rank percentile of an ascending-sorted sample vector.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
 /// Run the search. See the module docs for the pruning order.
 pub fn plan(req: &PlanRequest) -> PlanReport {
     let mut plans: Vec<Plan> = Vec::new();
@@ -431,7 +489,8 @@ pub fn plan(req: &PlanRequest) -> PlanReport {
                     strategy: st,
                     gpus_per_node: node,
                     overlap: true,
-                    chunked: false,
+                    chunked: 0,
+                    ep_placement: EpPlacement::Ship,
                     dtd: true,
                     cac: true,
                     tile: req.tile_choices.first().copied().unwrap_or(Some(DEFAULT_TILE)),
@@ -459,6 +518,17 @@ pub fn plan(req: &PlanRequest) -> PlanReport {
                 Ok(p) => p,
                 Err(_) => continue, // unreachable for divisor-enumerated (tp, ep)
             };
+            // HybridEP: when this (tp, ep) point's expert group crosses
+            // the cluster's datacenter boundary, price both routing
+            // placements; a single-DC group only ever ships (the
+            // two-tier degenerate case searches exactly the old space)
+            let spans_dcs = req.cluster.gpus_per_dc > 0
+                && (par.ep - 1) * par.tp >= req.cluster.gpus_per_dc;
+            let placements: &[EpPlacement] = if spans_dcs {
+                &[EpPlacement::Ship, EpPlacement::Migrate]
+            } else {
+                &[EpPlacement::Ship]
+            };
             for &cac in &req.cac_choices {
                 for &tile in &req.tile_choices {
                     for &micro in &req.micro_batch_choices {
@@ -475,7 +545,8 @@ pub fn plan(req: &PlanRequest) -> PlanReport {
                                         strategy: CollectiveStrategy::Flat,
                                         gpus_per_node: flat_gpn,
                                         overlap: true,
-                                        chunked: false,
+                                        chunked: 0,
+                                        ep_placement: EpPlacement::Ship,
                                         dtd: true,
                                         cac,
                                         tile,
@@ -489,46 +560,75 @@ pub fn plan(req: &PlanRequest) -> PlanReport {
                         };
                         for &(st, gpn) in &strategies {
                             for &ch in &req.chunked_choices {
-                                // price the serialized base once per
-                                // (transport, chunking) point: the
-                                // overlap on/off twins differ only in
-                                // the efficiency knob applied to it
-                                let point = PlanKnobs {
-                                    par,
-                                    strategy: st,
-                                    gpus_per_node: gpn,
-                                    overlap: true,
-                                    chunked: ch,
-                                    dtd: true,
-                                    cac,
-                                    tile,
-                                    micro_batch: micro,
-                                };
-                                let sc = scenario_for(req, &point);
-                                let base = batch_time(&sc);
-                                // worst-step pricing only differs for
-                                // bursty traffic (zipf/uniform skew is
-                                // stationary)
-                                let worst_base = match req.traffic {
-                                    TrafficSpec::Bursty(_) => batch_time_worst_traffic(&sc),
-                                    _ => base,
-                                };
-                                for &ov in &req.overlap_choices {
-                                    // a serialized chunked schedule pays
-                                    // the α-term for nothing: prune it
-                                    if ch && !ov {
-                                        continue;
+                                for &pl in placements {
+                                    // price the serialized base once per
+                                    // (transport, chunking, placement)
+                                    // point: the overlap on/off twins
+                                    // differ only in the efficiency knob
+                                    // applied to it
+                                    let point = PlanKnobs {
+                                        par,
+                                        strategy: st,
+                                        gpus_per_node: gpn,
+                                        overlap: true,
+                                        chunked: ch,
+                                        ep_placement: pl,
+                                        dtd: true,
+                                        cac,
+                                        tile,
+                                        micro_batch: micro,
+                                    };
+                                    let sc = scenario_for(req, &point);
+                                    let base = batch_time(&sc);
+                                    // worst-step pricing only differs for
+                                    // bursty traffic (zipf/uniform skew
+                                    // is stationary)
+                                    let worst_base = match req.traffic {
+                                        TrafficSpec::Bursty(_) => batch_time_worst_traffic(&sc),
+                                        _ => base,
+                                    };
+                                    // sampled step-time draws, shared by
+                                    // the overlap twins (the efficiency
+                                    // knob is applied per twin below)
+                                    let sampled: Vec<BatchTime> = (0..req.traffic_samples)
+                                        .map(|step| {
+                                            batch_time_sampled(&sc, TRAFFIC_SAMPLE_SEED, step)
+                                        })
+                                        .collect();
+                                    for &ov in &req.overlap_choices {
+                                        // a serialized chunked schedule
+                                        // pays the α-term for nothing:
+                                        // prune it
+                                        if ch > 0 && !ov {
+                                            continue;
+                                        }
+                                        let knobs = PlanKnobs { overlap: ov, ..point };
+                                        let eff = if ov { req.overlap_efficiency } else { 0.0 };
+                                        let step_dist = (!sampled.is_empty()).then(|| {
+                                            let mut totals: Vec<f64> = sampled
+                                                .iter()
+                                                .map(|b| overlap_from_base(*b, eff).total())
+                                                .collect();
+                                            totals.sort_by(|a, b| {
+                                                a.partial_cmp(b)
+                                                    .unwrap_or(std::cmp::Ordering::Equal)
+                                            });
+                                            StepDist {
+                                                samples: totals.len(),
+                                                p50_s: percentile(&totals, 0.50),
+                                                p95_s: percentile(&totals, 0.95),
+                                            }
+                                        });
+                                        plans.push(Plan {
+                                            knobs,
+                                            time: overlap_from_base(base, eff),
+                                            worst_time: overlap_from_base(worst_base, eff),
+                                            step_dist,
+                                            mem_peak_phase: peak_phase,
+                                            mem_peak_bytes: peak_bytes,
+                                            mem_budget_bytes: budget,
+                                        });
                                     }
-                                    let knobs = PlanKnobs { overlap: ov, ..point };
-                                    let eff = if ov { req.overlap_efficiency } else { 0.0 };
-                                    plans.push(Plan {
-                                        knobs,
-                                        time: overlap_from_base(base, eff),
-                                        worst_time: overlap_from_base(worst_base, eff),
-                                        mem_peak_phase: peak_phase,
-                                        mem_peak_bytes: peak_bytes,
-                                        mem_budget_bytes: budget,
-                                    });
                                 }
                             }
                         }
@@ -576,7 +676,8 @@ mod tests {
             strategy: CollectiveStrategy::Flat,
             gpus_per_node: 0,
             overlap,
-            chunked: false,
+            chunked: 0,
+            ep_placement: EpPlacement::Ship,
             dtd: true,
             cac,
             tile: Some(DEFAULT_TILE),
@@ -585,9 +686,15 @@ mod tests {
         assert!(mk(4, true, true).rank_key() < mk(8, true, true).rank_key());
         assert!(mk(4, true, true).rank_key() < mk(4, false, true).rank_key());
         assert!(mk(4, true, true).rank_key() < mk(4, true, false).rank_key());
-        // at equal price the monolithic schedule outranks the chunked one
-        let chunked = PlanKnobs { chunked: true, ..mk(4, true, true) };
+        // at equal price the monolithic schedule outranks the chunked one,
+        // finer chunking outranks coarser
+        let chunked = PlanKnobs { chunked: 1, ..mk(4, true, true) };
         assert!(mk(4, true, true).rank_key() < chunked.rank_key());
+        let coarse = PlanKnobs { chunked: 2, ..mk(4, true, true) };
+        assert!(chunked.rank_key() < coarse.rank_key());
+        // and token-shipping outranks migration
+        let migrate = PlanKnobs { ep_placement: EpPlacement::Migrate, ..mk(4, true, true) };
+        assert!(mk(4, true, true).rank_key() < migrate.rank_key());
     }
 
     #[test]

@@ -10,12 +10,12 @@
 //! The collective transport (`EngineOptions::strategy` +
 //! `EngineOptions::gpus_per_node`) selects among the flat, hierarchical,
 //! and leader-aggregated (PXN) backends; [`TrainLog`] reports the
-//! per-lane (intra-node / inter-node) byte and message split alongside
-//! the totals. When a cluster preset is selected
+//! per-tier (intra-node / inter-node / WAN) byte and message split
+//! alongside the totals. When a cluster preset is selected
 //! (`EngineOptions::cluster`), every collective is priced with the α-β
 //! model, every block with the preset's flop rate, and
-//! [`TrainLog::overlap_timeline`] records, per step, the three-lane
-//! (compute / NVLink / IB) schedule: serialized comm + compute seconds
+//! [`TrainLog::overlap_timeline`] records, per step, the per-lane
+//! (compute + one lane per fabric tier) schedule: serialized comm + compute seconds
 //! against the critical path the nonblocking issue/wait schedule
 //! actually achieved (equal when `overlap` is off). The whole-run
 //! timeline additionally yields [`TrainLog::overlap_efficiency`] — the
@@ -45,13 +45,15 @@ use crate::topology::Topology;
 /// cost model.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct OverlapStep {
-    /// Sum of every collective phase duration (no overlap; always
-    /// `comm_intra_s + comm_inter_s`).
+    /// Sum of every collective phase duration (no overlap; always the
+    /// sum of the per-tier lanes below).
     pub serialized_s: f64,
     /// NVLink-lane share of `serialized_s`.
     pub comm_intra_s: f64,
     /// InfiniBand-lane share of `serialized_s`.
     pub comm_inter_s: f64,
+    /// WAN-lane share of `serialized_s` (zero without a cross-DC fabric).
+    pub comm_wan_s: f64,
     /// Priced block compute on the compute lane this step.
     pub compute_s: f64,
     /// Makespan of the three-lane schedule
@@ -88,6 +90,11 @@ pub struct TrainLog {
     /// inter-node message counts per kind (the α-term the PXN transport
     /// shrinks on the all-to-all)
     pub comm_inter_msgs: [(CommKind, u64); 6],
+    /// WAN lane of `comm_bytes` (cross-datacenter traffic; all zero on a
+    /// single-DC fabric)
+    pub comm_wan_bytes: [(CommKind, u64); 6],
+    /// WAN message counts per kind
+    pub comm_wan_msgs: [(CommKind, u64); 6],
     /// per-step modeled overlap timeline (rank 0; empty-cost zeros when no
     /// `EngineOptions::cluster` preset prices the run). Eval passes are
     /// excluded — the timeline covers the training schedule only.
@@ -99,6 +106,9 @@ pub struct TrainLog {
     pub comm_intra_s: f64,
     /// InfiniBand-lane share of `comm_serialized_s`
     pub comm_inter_s: f64,
+    /// WAN-lane share of `comm_serialized_s` (zero without a cross-DC
+    /// fabric)
+    pub comm_wan_s: f64,
     /// training-step priced compute seconds (rank 0's compute lane)
     pub compute_s: f64,
     /// training-step critical path — the three-lane makespan, compute
@@ -187,13 +197,17 @@ pub fn train(
     let mut comm_intra_bytes = [(CommKind::AllReduce, 0u64); 6];
     let mut comm_inter_bytes = [(CommKind::AllReduce, 0u64); 6];
     let mut comm_inter_msgs = [(CommKind::AllReduce, 0u64); 6];
+    let mut comm_wan_bytes = [(CommKind::AllReduce, 0u64); 6];
+    let mut comm_wan_msgs = [(CommKind::AllReduce, 0u64); 6];
     for (i, kind) in crate::collectives::accounting::ALL_KINDS.iter().enumerate() {
         let t = rez.stats.total(*kind);
         comm_bytes[i] = (*kind, t.bytes);
         comm_calls[i] = (*kind, t.calls);
-        comm_intra_bytes[i] = (*kind, t.intra_bytes);
-        comm_inter_bytes[i] = (*kind, t.inter_bytes);
-        comm_inter_msgs[i] = (*kind, t.inter_msgs);
+        comm_intra_bytes[i] = (*kind, t.intra_bytes());
+        comm_inter_bytes[i] = (*kind, t.inter_bytes());
+        comm_inter_msgs[i] = (*kind, t.inter_msgs());
+        comm_wan_bytes[i] = (*kind, t.wan_bytes());
+        comm_wan_msgs[i] = (*kind, t.wan_msgs());
     }
     // whole-run training timeline: the sum of the per-step windows, so
     // eval passes (fully serialized, not part of the schedule the
@@ -201,12 +215,14 @@ pub fn train(
     let mut comm_serialized_s = 0.0;
     let mut comm_intra_s = 0.0;
     let mut comm_inter_s = 0.0;
+    let mut comm_wan_s = 0.0;
     let mut compute_s = 0.0;
     let mut critical_s = 0.0;
     for st in &out.overlap_steps {
         comm_serialized_s += st.serialized_s;
         comm_intra_s += st.comm_intra_s;
         comm_inter_s += st.comm_inter_s;
+        comm_wan_s += st.comm_wan_s;
         compute_s += st.compute_s;
         critical_s += st.critical_s;
     }
@@ -220,16 +236,18 @@ pub fn train(
         comm_intra_bytes,
         comm_inter_bytes,
         comm_inter_msgs,
+        comm_wan_bytes,
+        comm_wan_msgs,
         overlap_timeline: out.overlap_steps,
         comm_serialized_s,
         comm_intra_s,
         comm_inter_s,
+        comm_wan_s,
         compute_s,
         critical_s,
-        overlap_efficiency: crate::perfmodel::fit_overlap_efficiency(
+        overlap_efficiency: crate::perfmodel::fit_overlap_efficiency_lanes(
             compute_s,
-            comm_intra_s,
-            comm_inter_s,
+            &[comm_intra_s, comm_inter_s, comm_wan_s, 0.0],
             critical_s,
         ),
         peak_stash_bytes: peak_stash,
@@ -272,8 +290,9 @@ fn rank_main(
         let tl_now = trainer.comm.timeline();
         overlap_steps.push(OverlapStep {
             serialized_s: tl_now.serialized_s - tl_prev.serialized_s,
-            comm_intra_s: tl_now.intra_serialized_s - tl_prev.intra_serialized_s,
-            comm_inter_s: tl_now.inter_serialized_s - tl_prev.inter_serialized_s,
+            comm_intra_s: tl_now.intra_serialized_s() - tl_prev.intra_serialized_s(),
+            comm_inter_s: tl_now.inter_serialized_s() - tl_prev.inter_serialized_s(),
+            comm_wan_s: tl_now.wan_serialized_s() - tl_prev.wan_serialized_s(),
             compute_s: tl_now.compute_s - tl_prev.compute_s,
             critical_s: tl_now.clock_s - tl_prev.clock_s,
         });

@@ -27,7 +27,8 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::collectives::{
-    CommKind, Communicator, PendingAllGather, PendingAllReduce, PendingAllToAll, Rendezvous,
+    CommKind, Communicator, NodeMap, PendingAllGather, PendingAllReduce, PendingAllToAll,
+    Rendezvous,
 };
 use crate::perfmodel::batch_time::{
     comm_ops, compute_budget_s, phase_compute_split, CommOp, Scenario,
@@ -35,13 +36,16 @@ use crate::perfmodel::batch_time::{
 use crate::topology::{RankGroups, Topology};
 use crate::util::tensor::Tensor;
 
-/// Rank 0's measured three-lane timeline for one replayed iteration.
+/// Rank 0's measured per-lane timeline for one replayed iteration.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct MeasuredPlanTime {
     pub compute_s: f64,
     pub comm_intra_s: f64,
     pub comm_inter_s: f64,
-    /// Serialized comm sum (`comm_intra_s + comm_inter_s`).
+    /// WAN-lane share of the comm time (nonzero only on a cross-DC
+    /// cluster whose groups actually span datacenters).
+    pub comm_wan_s: f64,
+    /// Serialized comm sum (all lanes).
     pub serialized_s: f64,
     /// The measured makespan, compute included (the ranking objective).
     pub critical_s: f64,
@@ -80,6 +84,16 @@ pub fn replay_scenario(
         split[2] * compute_s,
     ];
 
+    // the transport's fabric map: node boundary from the plan, DC
+    // boundary from the cluster (only when it nests cleanly — a plan
+    // node size that does not divide the DC has no DC-aligned leaders)
+    let gpus_per_dc = s.cluster.gpus_per_dc;
+    let nodes = if gpus_per_dc > 0 && gpus_per_node > 0 && gpus_per_dc % gpus_per_node == 0 {
+        NodeMap::with_dc(gpus_per_node, gpus_per_dc)
+    } else {
+        NodeMap::new(gpus_per_node)
+    };
+
     let rez = Rendezvous::new(world);
     std::thread::scope(|scope| {
         for rank in 0..world {
@@ -89,11 +103,19 @@ pub fn replay_scenario(
             let cluster = s.cluster.clone();
             let strategy = s.opts.strategy;
             scope.spawn(move || {
-                let mut c = Communicator::with_transport(rez, rank, strategy, gpus_per_node);
+                let mut c = Communicator::with_fabric(rez, rank, strategy, nodes);
                 c.set_cost_model(cluster);
                 let groups = topo.groups(rank);
                 for phase in 0..3 {
-                    run_phase(&mut c, &groups, &ops, phase, phase_compute[phase], overlap);
+                    run_phase(
+                        &mut c,
+                        &groups,
+                        &ops,
+                        phase,
+                        phase_compute[phase],
+                        overlap,
+                        gpus_per_dc,
+                    );
                 }
             });
         }
@@ -102,8 +124,9 @@ pub fn replay_scenario(
     let tl = rez.timeline.get(0);
     Ok(MeasuredPlanTime {
         compute_s: tl.compute_s,
-        comm_intra_s: tl.intra_serialized_s,
-        comm_inter_s: tl.inter_serialized_s,
+        comm_intra_s: tl.intra_serialized_s(),
+        comm_inter_s: tl.inter_serialized_s(),
+        comm_wan_s: tl.wan_serialized_s(),
         serialized_s: tl.serialized_s,
         critical_s: tl.clock_s,
     })
@@ -122,6 +145,7 @@ fn run_phase(
     phase: usize,
     compute_s: f64,
     overlap: bool,
+    gpus_per_dc: usize,
 ) {
     if overlap {
         // issue every op of the phase, let the phase's compute slice
@@ -131,7 +155,7 @@ fn run_phase(
         for op in ops {
             let reps = op.count[phase].round() as usize;
             for _ in 0..reps {
-                pending.push(issue_op(c, groups, op));
+                pending.push(issue_op(c, groups, op, gpus_per_dc));
             }
         }
         c.advance_compute(compute_s);
@@ -150,49 +174,56 @@ fn run_phase(
         for op in ops {
             let reps = op.count[phase].round() as usize;
             for _ in 0..reps {
-                blocking_op(c, groups, op);
+                blocking_op(c, groups, op, gpus_per_dc);
             }
         }
         c.advance_compute(compute_s);
     }
 }
 
-fn issue_op(c: &mut Communicator, groups: &RankGroups, op: &CommOp) -> PendingOp {
-    let (gid, members) = resolve(groups, op);
+fn issue_op(
+    c: &mut Communicator,
+    groups: &RankGroups,
+    op: &CommOp,
+    gpus_per_dc: usize,
+) -> PendingOp {
+    let (gid, members) = resolve(groups, op, gpus_per_dc);
     match op.kind {
         CommKind::AllReduce => {
             let len = op_floats(op.bytes);
             let t = Tensor::from_vec(&[len], vec![1.0; len]);
-            let h = c.issue_all_reduce(gid, members, &t);
+            let h = c.issue_all_reduce(gid, &members, &t);
             PendingOp::Ar(h, t)
         }
         CommKind::AllGather => {
             let len = op_floats(op.bytes);
             let t = Tensor::from_vec(&[len], vec![1.0; len]);
-            PendingOp::Ag(c.issue_all_gather(gid, members, &t))
+            PendingOp::Ag(c.issue_all_gather(gid, &members, &t))
         }
         CommKind::AllToAll => {
-            PendingOp::A2a(c.issue_all_to_all(gid, members, a2a_rows(groups, op)))
+            let rows = a2a_rows(groups, &members, op);
+            PendingOp::A2a(c.issue_all_to_all(gid, &members, rows))
         }
         other => panic!("replay does not schedule {other:?}"),
     }
 }
 
-fn blocking_op(c: &mut Communicator, groups: &RankGroups, op: &CommOp) {
-    let (gid, members) = resolve(groups, op);
+fn blocking_op(c: &mut Communicator, groups: &RankGroups, op: &CommOp, gpus_per_dc: usize) {
+    let (gid, members) = resolve(groups, op, gpus_per_dc);
     match op.kind {
         CommKind::AllReduce => {
             let len = op_floats(op.bytes);
             let mut t = Tensor::from_vec(&[len], vec![1.0; len]);
-            c.all_reduce(gid, members, &mut t);
+            c.all_reduce(gid, &members, &mut t);
         }
         CommKind::AllGather => {
             let len = op_floats(op.bytes);
             let t = Tensor::from_vec(&[len], vec![1.0; len]);
-            let _ = c.all_gather(gid, members, &t);
+            let _ = c.all_gather(gid, &members, &t);
         }
         CommKind::AllToAll => {
-            let _ = c.all_to_all(gid, members, a2a_rows(groups, op));
+            let rows = a2a_rows(groups, &members, op);
+            let _ = c.all_to_all(gid, &members, rows);
         }
         other => panic!("replay does not schedule {other:?}"),
     }
@@ -200,26 +231,36 @@ fn blocking_op(c: &mut Communicator, groups: &RankGroups, op: &CommOp) {
 
 /// The rendezvous group id + member list an op runs over (the members
 /// come from `OpGroup::members`, the same mapping the analytic pricing
-/// resolves against).
-fn resolve<'g>(
-    groups: &'g RankGroups,
+/// resolves against). HybridEP's DC-confined expert group gets a
+/// synthesized id unique per (EP group, datacenter).
+fn resolve(
+    groups: &RankGroups,
     op: &CommOp,
-) -> (crate::topology::GroupId, &'g [usize]) {
+    gpus_per_dc: usize,
+) -> (crate::topology::GroupId, Vec<usize>) {
     use crate::perfmodel::batch_time::OpGroup;
+    use crate::topology::{GroupId, GroupKind};
     let gid = match op.group {
         OpGroup::Tensor => groups.tp_group_id,
         OpGroup::Expert => groups.ep_group_id,
+        OpGroup::ExpertDc => {
+            let world = groups.tp_group.len() * groups.dp_nonexp_group.len();
+            let dc = if gpus_per_dc == 0 { 0 } else { groups.coords.rank / gpus_per_dc };
+            GroupId {
+                kind: GroupKind::ExpertDc,
+                index: groups.ep_group_id.index * world + dc,
+            }
+        }
         OpGroup::DataExpert => groups.dp_exp_group_id,
         OpGroup::DataNonExpert => groups.dp_nonexp_group_id,
     };
-    (gid, op.group.members(groups))
+    (gid, op.group.members(groups, gpus_per_dc))
 }
 
 /// Per-destination all-to-all rows: `op.bytes` is one rank's total
 /// payload, split evenly over the non-self destinations (the self row is
 /// empty) so the measured priced bytes equal the analytic `local_bytes`.
-fn a2a_rows(groups: &RankGroups, op: &CommOp) -> Vec<Vec<f32>> {
-    let members = op.group.members(groups);
+fn a2a_rows(groups: &RankGroups, members: &[usize], op: &CommOp) -> Vec<Vec<f32>> {
     let n = members.len();
     if n <= 1 {
         return vec![Vec::new(); n];

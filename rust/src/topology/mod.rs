@@ -60,6 +60,9 @@ pub enum GroupKind {
     Tensor,
     DataNonExpert,
     Expert,
+    /// A datacenter-confined slice of an EP group (HybridEP's hot-expert
+    /// all-to-all); ids are synthesized per (EP group, DC) by the replay.
+    ExpertDc,
     DataExpert,
     World,
 }

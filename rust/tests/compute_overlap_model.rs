@@ -54,7 +54,7 @@ fn critical_path_respects_compute_budget_and_lane_bounds() {
             for eff in [0.0, 0.25, 0.5, 0.75, 1.0] {
                 let o = batch_time_overlapped(&s, eff);
                 let b = &o.base;
-                let max_lane = b.comm_intra_s.max(b.comm_inter_s);
+                let max_lane = b.comm_intra_s().max(b.comm_inter_s());
                 let tol = 1e-12 * (o.serialized_comm_s + b.compute_s).max(1.0);
                 // comm can hide behind compute only up to the budget
                 assert!(
@@ -75,7 +75,7 @@ fn critical_path_respects_compute_budget_and_lane_bounds() {
                 assert!((o.hideable_comm_s - hideable_comm_phased_s(b)).abs() < tol);
                 assert!(
                     o.hideable_comm_s
-                        <= hideable_comm_s(b.compute_s, b.comm_intra_s, b.comm_inter_s) + tol,
+                        <= hideable_comm_s(b.compute_s, b.comm_intra_s(), b.comm_inter_s()) + tol,
                     "{strategy:?} eff={eff}: per-phase bound looser than aggregate"
                 );
             }

@@ -136,10 +136,14 @@ fn measured_lanes_match_analytic_predictions_for_every_backend() {
                     let got = rez.stats.get(r, kind);
                     let (intra, inter) = predict(strategy, gpn, r, kind);
                     assert_eq!(
-                        (got.intra_bytes, got.inter_bytes),
+                        (got.intra_bytes(), got.inter_bytes()),
                         (intra, inter),
                         "lane mismatch: strategy={strategy:?} gpn={gpn} rank={r} kind={kind:?}"
                     );
+                    // with the lane invariant (bytes == Σ lane_bytes) and
+                    // the two predicted lanes pinned above, this forces
+                    // every higher fabric tier to zero on a two-tier job
+                    got.assert_lane_invariant();
                     assert_eq!(got.bytes, intra + inter);
                     assert_eq!(got.calls, 1, "one call per kind per rank");
                 }
@@ -147,7 +151,7 @@ fn measured_lanes_match_analytic_predictions_for_every_backend() {
                 let got = rez.stats.get(r, CommKind::AllToAll);
                 let (im, xm) = lane_msgs_alltoall(strategy, &world_members, r, gpn, WORLD);
                 assert_eq!(
-                    (got.intra_msgs, got.inter_msgs),
+                    (got.intra_msgs(), got.inter_msgs()),
                     (im, xm),
                     "msg mismatch: strategy={strategy:?} gpn={gpn} rank={r}"
                 );
@@ -180,7 +184,7 @@ fn backend_changes_lanes_not_a2a_totals() {
                 CommKind::ReduceScatter,
             ] {
                 let t = rez.stats.total(kind);
-                assert_eq!(t.bytes, t.intra_bytes + t.inter_bytes);
+                t.assert_lane_invariant();
             }
         }
     }
@@ -192,22 +196,22 @@ fn backend_changes_lanes_not_a2a_totals() {
     let flat = run_workload(CollectiveStrategy::Flat, 4);
     for kind in [CommKind::AllReduce, CommKind::AllToAll, CommKind::ReduceScatter] {
         assert!(
-            hier.stats.total(kind).inter_bytes < flat.stats.total(kind).inter_bytes,
+            hier.stats.total(kind).inter_bytes() < flat.stats.total(kind).inter_bytes(),
             "{kind:?}: hierarchical should shrink the inter lane"
         );
     }
     assert!(
-        hier.stats.total(CommKind::AllGather).inter_bytes
-            <= flat.stats.total(CommKind::AllGather).inter_bytes
+        hier.stats.total(CommKind::AllGather).inter_bytes()
+            <= flat.stats.total(CommKind::AllGather).inter_bytes()
     );
     // PXN vs hierarchical on the same job: equal inter bytes, strictly
     // fewer inter messages, more intra bytes (the two leader hops)
     let pxn = run_workload(CollectiveStrategy::HierarchicalPxn, 4);
     let h_a2a = hier.stats.total(CommKind::AllToAll);
     let p_a2a = pxn.stats.total(CommKind::AllToAll);
-    assert_eq!(p_a2a.inter_bytes, h_a2a.inter_bytes);
-    assert!(p_a2a.inter_msgs < h_a2a.inter_msgs);
-    assert!(p_a2a.intra_bytes > h_a2a.intra_bytes);
+    assert_eq!(p_a2a.inter_bytes(), h_a2a.inter_bytes());
+    assert!(p_a2a.inter_msgs() < h_a2a.inter_msgs());
+    assert!(p_a2a.intra_bytes() > h_a2a.intra_bytes());
 }
 
 // ---------------------------------------------------------------------
@@ -267,12 +271,12 @@ fn measured_timeline_matches_analytic_schedule() {
         &c, CollectiveStrategy::Hierarchical, &world_members, (AR_LEN * 4) as f64);
     let ag = allgather_phased(
         &c, CollectiveStrategy::Hierarchical, &[0usize, 1], (AG_FLOATS * 4) as f64);
-    assert!(ar.intra_s > 0.0 && ar.inter_s > 0.0, "world group must span nodes");
-    assert!(ag.intra_s > 0.0 && ag.inter_s == 0.0, "pair group is node-local");
+    assert!(ar.intra_s() > 0.0 && ar.inter_s() > 0.0, "world group must span nodes");
+    assert!(ag.intra_s() > 0.0 && ag.inter_s() == 0.0, "pair group is node-local");
     let serialized = ar.total() + ag.total();
     // overlapped: AR intra [0,a], AR inter [a, a+b]; AG intra queues on the
     // NVLink lane behind AR's intra phase -> [a, a+g]; makespan:
-    let critical = (ar.intra_s + ag.intra_s).max(ar.intra_s + ar.inter_s);
+    let critical = (ar.intra_s() + ag.intra_s()).max(ar.intra_s() + ar.inter_s());
 
     let blocking = run(false).timeline.get(0);
     assert!((blocking.serialized_s - serialized).abs() < 1e-15);
@@ -333,8 +337,8 @@ fn overlap_efficiency_knob_reproduces_measured_timeline() {
     // never a higher efficiency than the exact phased inversion
     let agg = fit_overlap_efficiency(
         b.compute_s,
-        b.comm_intra_s,
-        b.comm_inter_s,
+        b.comm_intra_s(),
+        b.comm_inter_s(),
         measured_critical,
     );
     assert!(agg <= eff + 1e-12, "aggregate {agg} vs phased {eff}");
@@ -452,7 +456,7 @@ fn measured_compute_aware_timeline_matches_analytic() {
                     alltoall_pxn_schedule(&cluster, &world_members, local_bytes)
                 } else {
                     let pc = alltoall_phased(&cluster, strategy, &world_members, local_bytes);
-                    (pc.intra_s, pc.inter_s, 0.0)
+                    (pc.intra_s(), pc.inter_s(), 0.0)
                 };
                 let ag =
                     allgather_phased(&cluster, strategy, &[0usize, 1], (AG_FLOATS * 4) as f64);
@@ -460,7 +464,7 @@ fn measured_compute_aware_timeline_matches_analytic() {
                 let finish = lanes.schedule(pre, wire, post, false);
                 lanes.advance_compute(compute_s);
                 lanes.complete(finish);
-                lanes.schedule(ag.intra_s, ag.inter_s, 0.0, true);
+                lanes.schedule(ag.intra_s(), ag.inter_s(), 0.0, true);
 
                 let tol = 1e-12 * (lanes.clock + lanes.serialized + 1.0);
                 for r in 0..WORLD {
@@ -480,7 +484,7 @@ fn measured_compute_aware_timeline_matches_analytic() {
                     );
                     assert!((tl.compute_s - lanes.compute).abs() < tol, "{ctx} rank={r}");
                     assert!(
-                        (tl.serialized_s - tl.intra_serialized_s - tl.inter_serialized_s).abs()
+                        (tl.serialized_s - tl.intra_serialized_s() - tl.inter_serialized_s()).abs()
                             < tol,
                         "{ctx} rank={r}: lanes must sum to the serialized total"
                     );

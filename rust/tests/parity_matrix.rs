@@ -164,6 +164,7 @@ fn run_toy_loaded(
                                 overlap,
                                 chunked,
                                 chunk_compute_s: 0.0,
+                                dc_split: None,
                             };
                             dispatch(&mut ctx, &rows, &dec, local_experts)
                         };
@@ -193,6 +194,7 @@ fn run_toy_loaded(
                                 overlap,
                                 chunked,
                                 chunk_compute_s: 0.0,
+                                dc_split: None,
                             };
                             return_to_origin(&mut ctx, &outs, &disp, &dec, local_experts)
                         };
@@ -367,25 +369,25 @@ fn hierarchical_reports_strictly_fewer_inter_node_a2a_bytes() {
     assert_eq!(f.bytes, h.bytes);
     assert!(f.bytes > 0);
     // ...but the flat backend charges everything to the bottleneck lane
-    assert_eq!(f.intra_bytes, 0);
-    assert_eq!(f.inter_bytes, f.bytes);
+    assert_eq!(f.intra_bytes(), 0);
+    assert_eq!(f.inter_bytes(), f.bytes);
     // while the hierarchical backend proves the EP a2a never leaves a node
     assert!(
-        h.inter_bytes < f.inter_bytes,
+        h.inter_bytes() < f.inter_bytes(),
         "hierarchical must report strictly fewer inter-node a2a bytes \
-         ({} vs {})", h.inter_bytes, f.inter_bytes
+         ({} vs {})", h.inter_bytes(), f.inter_bytes()
     );
-    assert_eq!(h.inter_bytes, 0);
-    assert_eq!(h.intra_bytes, f.bytes);
+    assert_eq!(h.inter_bytes(), 0);
+    assert_eq!(h.intra_bytes(), f.bytes);
 
     // with 2-GPU nodes the EP groups genuinely span nodes: the inter lane
     // is nonzero but still strictly below the flat attribution
     let (_, s) = run_toy(2, 2, 2, combo(CollectiveStrategy::Hierarchical, 2, true, false));
-    assert_eq!(s.intra_bytes + s.inter_bytes, s.bytes);
-    assert!(s.inter_bytes > 0);
+    s.assert_lane_invariant();
+    assert!(s.inter_bytes() > 0);
     let (_, flat2) = run_toy(2, 2, 2, combo(CollectiveStrategy::Flat, 2, true, false));
-    assert_eq!(flat2.inter_bytes, flat2.bytes);
-    assert!(s.inter_bytes <= flat2.inter_bytes);
+    assert_eq!(flat2.inter_bytes(), flat2.bytes);
+    assert!(s.inter_bytes() <= flat2.inter_bytes());
 }
 
 /// The PXN acceptance scenario: tp=2, ep=4 on one 8-rank job over two
@@ -400,20 +402,20 @@ fn pxn_cuts_inter_node_messages_at_equal_bytes() {
     let (h_trace, h) = run_toy(2, 4, 1, hier);
     let (p_trace, p) = run_toy(2, 4, 1, pxn);
     assert_eq!(h_trace, p_trace, "PXN must not change a single bit");
-    assert!(h.inter_bytes > 0, "EP groups must span nodes in this scenario");
-    assert_eq!(p.inter_bytes, h.inter_bytes, "leader batching moves the same bytes");
+    assert!(h.inter_bytes() > 0, "EP groups must span nodes in this scenario");
+    assert_eq!(p.inter_bytes(), h.inter_bytes(), "leader batching moves the same bytes");
     assert!(
-        p.inter_msgs < h.inter_msgs,
+        p.inter_msgs() < h.inter_msgs(),
         "PXN must send strictly fewer inter-node messages ({} vs {})",
-        p.inter_msgs, h.inter_msgs
+        p.inter_msgs(), h.inter_msgs()
     );
     // the leader hops are visible as extra intra-node volume
-    assert!(p.intra_bytes > h.intra_bytes);
+    assert!(p.intra_bytes() > h.intra_bytes());
     // and the nonblocking schedule preserves all of it
     let (p2_trace, p2) = run_toy(2, 4, 1, Combo { overlap: true, ..pxn });
     assert_eq!(h_trace, p2_trace);
-    assert_eq!(p2.inter_msgs, p.inter_msgs);
-    assert_eq!(p2.inter_bytes, p.inter_bytes);
+    assert_eq!(p2.inter_msgs(), p.inter_msgs());
+    assert_eq!(p2.inter_bytes(), p.inter_bytes());
 }
 
 // ---------------------------------------------------------------------

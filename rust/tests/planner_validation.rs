@@ -362,7 +362,7 @@ fn chunked_plans_cut_critical_comm_and_win_the_skewed_ranking() {
     );
     req.traffic = TrafficSpec::Zipf(1.2);
     req.overlap_choices = vec![true];
-    req.chunked_choices = vec![false, true];
+    req.chunked_choices = vec![0, 1];
     let report = plan(&req);
     assert!(report.plans.len() >= 9, "want a real grid, got {}", report.plans.len());
 
@@ -370,11 +370,11 @@ fn chunked_plans_cut_critical_comm_and_win_the_skewed_ranking() {
         report
             .plans
             .iter()
-            .find(|p| p.knobs.chunked && PlanKnobs { chunked: false, ..p.knobs } == u.knobs)
+            .find(|p| p.knobs.chunked > 0 && PlanKnobs { chunked: 0, ..p.knobs } == u.knobs)
             .unwrap_or_else(|| panic!("{}: missing chunked twin", u.knobs.describe()))
     };
     let mut checked = 0;
-    for u in report.plans.iter().filter(|p| !p.knobs.chunked) {
+    for u in report.plans.iter().filter(|p| p.knobs.chunked == 0) {
         let twin = twin_of(u);
         if u.knobs.par.ep > 1 {
             assert!(
@@ -402,7 +402,7 @@ fn chunked_plans_cut_critical_comm_and_win_the_skewed_ranking() {
     // lead the table from the chunking-immune ep=1 column)
     let best_wide = report.plans.iter().find(|p| p.knobs.par.ep > 1).unwrap();
     assert!(
-        best_wide.knobs.chunked,
+        best_wide.knobs.chunked > 0,
         "best wide-EP plan must be chunked: {}",
         best_wide.knobs.describe()
     );

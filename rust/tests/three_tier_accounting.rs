@@ -1,0 +1,424 @@
+//! Three-tier (cross-datacenter) accounting suite.
+//!
+//! The `cross-dc` preset adds a WAN fabric tier and a `gpus_per_dc`
+//! boundary on top of the node boundary. This suite closes the loop on
+//! the N-tier generalization:
+//!
+//! * **Measured == analytic, three tiers.** A blocking replay of a
+//!   cross-DC scenario's collective schedule must reproduce the analytic
+//!   per-lane totals — including the WAN lane — for both HybridEP
+//!   placements and every transport, exactly like the two-lane pins in
+//!   `integration_accounting.rs` / `planner_validation.rs`.
+//! * **HybridEP acceptance.** On a pinned toy grid under `zipf:1.2` the
+//!   planner must prefer migrating the hot experts over shipping their
+//!   tokens across the WAN, and must never emit a migrate plan for an
+//!   EP group that stays inside one datacenter.
+//! * **Two-tier degeneracy.** With no DC boundary (or a non-spanning EP
+//!   group) the Migrate placement prices bitwise-identically to Ship —
+//!   the refactor cannot perturb existing clusters.
+//! * **Sampled skew + chunk granularity.** `batch_time_sampled` is the
+//!   identity under uniform traffic and tracks the seeded traffic
+//!   model's draws under zipf; coarser a2a granularities price fewer
+//!   α-surcharges at the same byte volume.
+
+use ted::collectives::CollectiveStrategy;
+use ted::config::{model, ClusterConfig, ParallelConfig};
+use ted::perfmodel::{
+    batch_time, batch_time_sampled, ep_spans_dcs, migrate_local_frac, BatchTime, CommOpts,
+    EpPlacement, Scenario,
+};
+use ted::planner::{plan, PlanKnobs, PlanRequest, DEFAULT_TILE};
+use ted::sim::replay_scenario;
+use ted::util::cli::TrafficSpec;
+
+/// A toy scenario small enough to replay: the `mini` executable model
+/// with 16 experts on `world` simulated GPUs.
+fn sc(
+    cluster: ClusterConfig,
+    tp: usize,
+    ep: usize,
+    world: usize,
+    batch: usize,
+    opts: CommOpts,
+) -> Scenario {
+    Scenario {
+        model: model::executable("mini").unwrap(),
+        n_experts: 16,
+        par: ParallelConfig::derive(world, tp, ep).unwrap(),
+        cluster,
+        global_batch: batch,
+        opts,
+    }
+}
+
+/// `BatchTime` identity check (the struct carries no `PartialEq`; the
+/// Debug rendering prints every field bit-exactly, so string equality is
+/// bitwise equality of the full breakdown).
+fn assert_batch_time_identical(a: &BatchTime, b: &BatchTime, ctx: &str) {
+    assert_eq!(format!("{a:?}"), format!("{b:?}"), "{ctx}");
+}
+
+// ---------------------------------------------------------------------
+// measured == analytic on three tiers
+// ---------------------------------------------------------------------
+
+#[test]
+fn three_tier_blocking_replay_matches_analytic() {
+    // ep=16 x tp=1 on 16 cross-dc GPUs (two 8-GPU datacenters of 4-GPU
+    // nodes): the EP group spans the DC boundary, so the schedule has a
+    // live WAN lane in both placements and every transport
+    let strategies = [
+        CollectiveStrategy::Flat,
+        CollectiveStrategy::Hierarchical,
+        CollectiveStrategy::HierarchicalPxn,
+    ];
+    for strategy in strategies {
+        for placement in [EpPlacement::Ship, EpPlacement::Migrate] {
+            let opts = CommOpts::optimized()
+                .with_strategy(strategy)
+                .with_traffic(TrafficSpec::Zipf(1.2))
+                .with_ep_placement(placement);
+            let s = sc(ClusterConfig::cross_dc(), 1, 16, 16, 64, opts);
+            assert!(ep_spans_dcs(&s));
+            let ctx = format!("{} {}", strategy.name(), placement.name());
+
+            let t = batch_time(&s);
+            assert!(t.comm_wan_s() > 0.0, "{ctx}: no WAN lane on a spanning group?");
+
+            let m = replay_scenario(&s, s.cluster.gpus_per_node, false)
+                .unwrap_or_else(|e| panic!("{ctx}: replay failed: {e}"));
+            // blocking replay serializes exactly: makespan = comm + compute
+            assert!(
+                (m.critical_s - m.serialized_s - m.compute_s).abs()
+                    <= 1e-9 * m.critical_s.max(1e-12),
+                "{ctx}: blocking replay must serialize exactly"
+            );
+            // the pricing contract across all three lanes (payloads are
+            // rounded to whole f32s, hence the small relative tolerance)
+            let analytic = t.total();
+            assert!(
+                (m.critical_s - analytic).abs() <= 2e-3 * analytic,
+                "{ctx}: measured {} vs analytic {analytic}",
+                m.critical_s
+            );
+            let tol = 2e-3 * t.comm_s() + 1e-12;
+            for (lane, (got, want)) in [
+                ("intra", (m.comm_intra_s, t.comm_intra_s())),
+                ("inter", (m.comm_inter_s, t.comm_inter_s())),
+                ("wan", (m.comm_wan_s, t.comm_wan_s())),
+            ] {
+                assert!(
+                    (got - want).abs() <= tol,
+                    "{ctx}: {lane} lane measured {got} vs analytic {want}"
+                );
+            }
+            assert!(m.comm_wan_s > 0.0, "{ctx}: replay lost the WAN lane");
+
+            // the flat transport prices every spanning collective at the
+            // bottleneck fabric: a ship schedule is WAN-only, while the
+            // migrate split moves the hot share onto the DC-confined
+            // (inter-node-bottlenecked) all-to-all
+            if strategy == CollectiveStrategy::Flat {
+                assert_eq!(t.comm_intra_s(), 0.0, "{ctx}");
+                match placement {
+                    EpPlacement::Ship => assert_eq!(t.comm_inter_s(), 0.0, "{ctx}"),
+                    EpPlacement::Migrate => {
+                        assert!(t.comm_inter_s() > 0.0, "{ctx}: DC-confined a2a missing")
+                    }
+                }
+            } else {
+                // hierarchical transports stage through all three tiers
+                assert!(t.comm_intra_s() > 0.0, "{ctx}");
+                assert!(t.comm_inter_s() > 0.0, "{ctx}");
+            }
+
+            // nonblocking replay of the same schedule never beats the
+            // lane bound or loses to the serialized sum
+            let o = replay_scenario(&s, s.cluster.gpus_per_node, true).unwrap();
+            assert!(
+                o.critical_s <= o.serialized_s + o.compute_s + 1e-9,
+                "{ctx}: overlapped replay worse than serialized"
+            );
+            assert!(o.critical_s >= o.compute_s - 1e-9, "{ctx}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// HybridEP acceptance: migration wins the skewed cross-DC grid
+// ---------------------------------------------------------------------
+
+/// The pinned toy grid: mini/16e on 16 cross-dc GPUs, serialized flat
+/// search (the placement decision is a pricing fact, not an overlap
+/// artifact). The batch is large enough that the WAN a2a is
+/// β-dominated — the regime the placement trade-off is about.
+fn cross_dc_request(traffic: TrafficSpec) -> PlanRequest {
+    let mut req = PlanRequest::new(
+        model::executable("mini").unwrap(),
+        16,
+        16,
+        ClusterConfig::cross_dc(),
+        16384,
+    );
+    req.strategies = vec![CollectiveStrategy::Flat];
+    req.overlap_choices = vec![false];
+    req.cac_choices = vec![true];
+    req.tile_choices = vec![Some(DEFAULT_TILE)];
+    req.traffic = traffic;
+    req
+}
+
+/// Does this plan's EP group leave its datacenter on the cross-dc
+/// preset? Mirrors the planner's emission rule.
+fn spans(k: &PlanKnobs) -> bool {
+    (k.par.ep - 1) * k.par.tp >= 8
+}
+
+#[test]
+fn planner_prefers_migration_under_zipf_on_cross_dc() {
+    let req = cross_dc_request(TrafficSpec::Zipf(1.2));
+    let report = plan(&req);
+    assert!(!report.plans.is_empty());
+
+    // placement twins exist exactly for the DC-spanning points
+    for p in &report.plans {
+        let k = p.knobs;
+        if k.ep_placement == EpPlacement::Migrate {
+            assert!(spans(&k), "{}: migrate emitted for a single-DC group", k.describe());
+        }
+        if k.ep_placement == EpPlacement::Ship && spans(&k) {
+            assert!(
+                report
+                    .plans
+                    .iter()
+                    .any(|q| q.knobs == PlanKnobs { ep_placement: EpPlacement::Migrate, ..k }),
+                "{}: missing migrate twin",
+                k.describe()
+            );
+        }
+    }
+
+    // the acceptance pin: on the widest (fully spanning) EP group the
+    // migrate twin prices strictly below token-shipping...
+    let twin = |ep_placement: EpPlacement| {
+        report
+            .plans
+            .iter()
+            .find(|p| p.knobs.par.ep == 16 && p.knobs.ep_placement == ep_placement)
+            .unwrap_or_else(|| panic!("no ep=16 {} plan", ep_placement.name()))
+    };
+    let ship = twin(EpPlacement::Ship);
+    let migrate = twin(EpPlacement::Migrate);
+    assert_eq!(
+        PlanKnobs { ep_placement: EpPlacement::Ship, ..migrate.knobs },
+        ship.knobs,
+        "the ep=16 plans must be placement twins"
+    );
+    assert!(
+        migrate.total_s() < ship.total_s(),
+        "migration must beat shipping under zipf:1.2 ({} vs {})",
+        migrate.total_s(),
+        ship.total_s()
+    );
+    // ...because it moves the hot share off the WAN lane (the amortized
+    // replica refresh costs less than the WAN bytes it saves)
+    let (ms, mm) = (ship.scenario(&req), migrate.scenario(&req));
+    let (ts, tm) = (batch_time(&ms), batch_time(&mm));
+    assert!(tm.comm_wan_s() < ts.comm_wan_s(), "migration must shrink the WAN lane");
+    assert!(tm.total() < ts.total());
+    // and the ranking reflects it: the best fully-spanning plan migrates
+    let best_wide = report.plans.iter().find(|p| p.knobs.par.ep == 16).unwrap();
+    assert_eq!(
+        best_wide.knobs.ep_placement,
+        EpPlacement::Migrate,
+        "best ep=16 plan must migrate: {}",
+        best_wide.knobs.describe()
+    );
+
+    // the hot share the migration confines is the zipf head, not noise
+    let frac = migrate_local_frac(&mm);
+    assert!((0.3..0.5).contains(&frac), "zipf:1.2 hot-peer share {frac}");
+}
+
+#[test]
+fn uniform_traffic_keeps_token_shipping_ahead() {
+    // the same pinned grid point, traffic flipped: under uniform routing
+    // the migrated replica only localizes 1/ep of the payload, so the
+    // weight-refresh all-gather costs more than the WAN bytes it saves
+    // and shipping must keep the ep=16 twin ahead
+    let req = cross_dc_request(TrafficSpec::Uniform);
+    let report = plan(&req);
+    let twin = |placement: EpPlacement| {
+        report
+            .plans
+            .iter()
+            .find(|p| p.knobs.par.ep == 16 && p.knobs.ep_placement == placement)
+            .unwrap_or_else(|| panic!("no ep=16 {} plan", placement.name()))
+    };
+    let (ship, migrate) = (twin(EpPlacement::Ship), twin(EpPlacement::Migrate));
+    assert!(
+        ship.total_s() < migrate.total_s(),
+        "shipping must win under uniform traffic ({} vs {})",
+        ship.total_s(),
+        migrate.total_s()
+    );
+    // uniform traffic spreads the payload evenly: the hot-peer share the
+    // migration would confine is exactly 1/ep
+    let s = migrate.scenario(&req);
+    assert_eq!(migrate_local_frac(&s), 1.0 / 16.0);
+}
+
+#[test]
+fn two_tier_clusters_never_see_migrate_plans() {
+    // summit has no DC boundary: the search space must be exactly the
+    // old one — every plan ships
+    let mut req = cross_dc_request(TrafficSpec::Zipf(1.2));
+    req.cluster = ClusterConfig::summit();
+    let report = plan(&req);
+    assert!(!report.plans.is_empty());
+    for p in &report.plans {
+        assert_eq!(p.knobs.ep_placement, EpPlacement::Ship, "{}", p.knobs.describe());
+    }
+}
+
+// ---------------------------------------------------------------------
+// two-tier degeneracy: Migrate prices bitwise-identically to Ship
+// ---------------------------------------------------------------------
+
+#[test]
+fn migrate_placement_is_identity_without_a_spanned_dc_boundary() {
+    let cases = [
+        // no DC boundary at all
+        (ClusterConfig::summit(), 2, 8),
+        (ClusterConfig::thetagpu(), 1, 16),
+        // a DC boundary the EP group never crosses: (ep-1)*tp = 6 < 8
+        (ClusterConfig::cross_dc(), 2, 4),
+    ];
+    for (cluster, tp, ep) in cases {
+        for traffic in [TrafficSpec::Uniform, TrafficSpec::Zipf(1.2)] {
+            let mk = |placement| {
+                let opts = CommOpts::optimized()
+                    .with_traffic(traffic)
+                    .with_ep_placement(placement);
+                sc(cluster.clone(), tp, ep, 16, 64, opts)
+            };
+            let (ship, migrate) = (mk(EpPlacement::Ship), mk(EpPlacement::Migrate));
+            assert!(!ep_spans_dcs(&migrate));
+            assert_batch_time_identical(
+                &batch_time(&ship),
+                &batch_time(&migrate),
+                &format!("{} tp{tp} ep{ep}: migrate must degenerate to ship", cluster.name),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// sampled skew pricing
+// ---------------------------------------------------------------------
+
+#[test]
+fn sampled_pricing_is_identity_under_uniform_traffic() {
+    let s = sc(ClusterConfig::cross_dc(), 1, 16, 16, 64, CommOpts::optimized());
+    let base = batch_time(&s);
+    for step in 0..4 {
+        assert_batch_time_identical(
+            &batch_time_sampled(&s, 42, step),
+            &base,
+            &format!("uniform step {step} must price identically"),
+        );
+    }
+}
+
+#[test]
+fn sampled_zipf_steps_inflate_the_expert_a2a() {
+    let uni = sc(ClusterConfig::cross_dc(), 1, 16, 16, 64, CommOpts::optimized());
+    let zipf = sc(
+        ClusterConfig::cross_dc(),
+        1,
+        16,
+        16,
+        64,
+        CommOpts::optimized().with_traffic(TrafficSpec::Zipf(1.2)),
+    );
+    let base = batch_time(&uni);
+    let mut strictly_hot = false;
+    for step in 0..8 {
+        let t = batch_time_sampled(&zipf, 42, step);
+        // the drawn multiplier is clamped at 1: a sampled step never
+        // prices below the uniform schedule
+        assert!(
+            t.alltoall_s >= base.alltoall_s - 1e-15,
+            "step {step}: sampled a2a below uniform"
+        );
+        // everything but the expert a2a is traffic-independent here
+        // (capacity-mode DTD reassembly stays uniform)
+        assert_eq!(t.allreduce_s, base.allreduce_s, "step {step}");
+        assert_eq!(t.allgather_s, base.allgather_s, "step {step}");
+        strictly_hot |= t.alltoall_s > base.alltoall_s * 1.5;
+    }
+    assert!(strictly_hot, "zipf:1.2 draws must inflate the a2a well past uniform");
+}
+
+#[test]
+fn planner_reports_sampled_step_percentiles() {
+    let mut req = cross_dc_request(TrafficSpec::Zipf(1.2));
+    req.traffic_samples = 6;
+    let report = plan(&req);
+    for p in &report.plans {
+        let d = p.step_dist.unwrap_or_else(|| panic!("{}: no step dist", p.knobs.describe()));
+        assert_eq!(d.samples, 6, "{}", p.knobs.describe());
+        assert!(d.p50_s.is_finite() && d.p50_s > 0.0, "{}", p.knobs.describe());
+        assert!(d.p95_s >= d.p50_s, "{}", p.knobs.describe());
+        if p.knobs.par.ep == 1 {
+            // no expert group: every sampled step is the stationary step
+            assert_eq!(d.p50_s, d.p95_s, "{}", p.knobs.describe());
+            assert_eq!(d.p50_s, p.total_s(), "{}", p.knobs.describe());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// chunk granularity: coarser chunks pay fewer α-surcharges
+// ---------------------------------------------------------------------
+
+#[test]
+fn coarser_chunk_granularities_trade_alpha_for_hiding() {
+    let mut req = cross_dc_request(TrafficSpec::Zipf(1.2));
+    req.overlap_choices = vec![true];
+    req.chunked_choices = vec![0, 1, 2];
+    let report = plan(&req);
+
+    // ep=4 points host 4 local experts: granularity 1 splits the a2a
+    // into 4 per-expert chunks, granularity 2 into 2 coarser ones
+    let pick = |ch: usize| {
+        report
+            .plans
+            .iter()
+            .find(|p| p.knobs.par.ep == 4 && p.knobs.par.tp == 1 && p.knobs.chunked == ch)
+            .unwrap_or_else(|| panic!("no ep=4 tp=1 chunked={ch} plan"))
+    };
+    let (mono, fine, coarse) = (pick(0), pick(1), pick(2));
+    assert_eq!(PlanKnobs { chunked: 0, ..fine.knobs }, mono.knobs);
+    assert_eq!(PlanKnobs { chunked: 1, ..coarse.knobs }, fine.knobs);
+
+    // the granularity -> chunk-count mapping the scenario prices
+    let chunks_of = |p: &ted::planner::Plan| p.scenario(&req).opts.a2a_chunks;
+    assert_eq!(chunks_of(mono), 1);
+    assert_eq!(chunks_of(fine), 4);
+    assert_eq!(chunks_of(coarse), 2);
+
+    // same bytes, fewer collectives: the serialized α-surcharge orders
+    // monolithic <= coarse <= fine, and only chunked schedules earn the
+    // structural pipelining credit
+    assert!(mono.time.serialized_comm_s <= coarse.time.serialized_comm_s + 1e-12);
+    assert!(coarse.time.serialized_comm_s <= fine.time.serialized_comm_s + 1e-12);
+    assert_eq!(mono.time.pipelined_comm_s, 0.0);
+    assert!(fine.time.pipelined_comm_s > 0.0);
+    assert!(coarse.time.pipelined_comm_s > 0.0);
+    // the credit never exceeds what serialization charged
+    for p in [fine, coarse] {
+        assert!(p.time.critical_comm_s >= 0.0);
+        assert!(p.time.critical_comm_s <= p.time.serialized_comm_s + 1e-15);
+    }
+}

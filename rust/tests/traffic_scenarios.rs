@@ -113,10 +113,13 @@ fn skewed_routed_payloads_price_exactly_on_every_transport() {
                     lane_bytes_alltoall(strategy, &members, r, &routed_bytes(&tm, r), gpn, WORLD)
                 };
                 assert_eq!(
-                    (got.intra_bytes, got.inter_bytes),
+                    (got.intra_bytes(), got.inter_bytes()),
                     (intra, inter),
                     "lane mismatch: strategy={strategy:?} gpn={gpn} rank={r}"
                 );
+                // lane invariant + the two pinned lanes ⇒ no routed byte
+                // may land in a higher fabric tier on a two-tier job
+                got.assert_lane_invariant();
                 assert_eq!(got.bytes, intra + inter);
                 assert_eq!(got.calls, 1);
             }
