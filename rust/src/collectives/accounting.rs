@@ -61,7 +61,9 @@
 //! always, with equality exactly when every op is blocking
 //! (`--no-overlap`).
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+
+use crate::trace::Tracer;
 
 pub use super::transport::MAX_TIERS;
 
@@ -173,11 +175,23 @@ impl CommStats {
 #[derive(Debug)]
 pub struct StatsBoard {
     inner: Mutex<Vec<[CommStats; 6]>>,
+    tracer: Mutex<Option<Arc<Tracer>>>,
 }
 
 impl StatsBoard {
     pub fn new(world: usize) -> Self {
-        StatsBoard { inner: Mutex::new(vec![[CommStats::default(); 6]; world]) }
+        StatsBoard {
+            inner: Mutex::new(vec![[CommStats::default(); 6]; world]),
+            tracer: Mutex::new(None),
+        }
+    }
+
+    /// Attach (or detach, with `None`) a span tracer: every subsequent
+    /// [`StatsBoard::record_lanes`] also emits a `trace::ByteEvent`
+    /// mirroring the recorded deltas. With no tracer the hook is a single
+    /// `Option` check — the accounting math is untouched either way.
+    pub fn set_tracer(&self, tracer: Option<Arc<Tracer>>) {
+        *self.tracer.lock().unwrap() = tracer;
     }
 
     /// Record one op with all bytes in the intra-node lane (single-fabric
@@ -234,13 +248,19 @@ impl StatsBoard {
         lane_bytes: [u64; MAX_TIERS],
         lane_msgs: [u64; MAX_TIERS],
     ) {
-        let mut g = self.inner.lock().unwrap();
-        let cell = &mut g[rank][kind.index()];
-        cell.calls += 1;
-        for t in 0..MAX_TIERS {
-            cell.lane_bytes[t] += lane_bytes[t];
-            cell.lane_msgs[t] += lane_msgs[t];
-            cell.bytes += lane_bytes[t];
+        {
+            let mut g = self.inner.lock().unwrap();
+            let cell = &mut g[rank][kind.index()];
+            cell.calls += 1;
+            for t in 0..MAX_TIERS {
+                cell.lane_bytes[t] += lane_bytes[t];
+                cell.lane_msgs[t] += lane_msgs[t];
+                cell.bytes += lane_bytes[t];
+            }
+        }
+        let tracer = self.tracer.lock().unwrap().clone();
+        if let Some(tr) = tracer {
+            tr.record_bytes(rank, kind, lane_bytes, lane_msgs);
         }
     }
 
@@ -275,28 +295,35 @@ impl StatsBoard {
         }
     }
 
-    /// Pretty table for logs/benches.
+    /// Pretty table for logs/benches (shared `metrics::format` layout).
     pub fn render(&self) -> String {
-        let mut out = String::from(
-            "kind            calls        bytes        intra        inter          wan   intra-msgs   inter-msgs\n",
-        );
+        use crate::metrics::format::{Column, Table};
+        let mut table = Table::new(vec![
+            Column::left("kind", 14),
+            Column::right("calls", 7),
+            Column::right("bytes", 12),
+            Column::right("intra", 12),
+            Column::right("inter", 12),
+            Column::right("wan", 12),
+            Column::right("intra-msgs", 12),
+            Column::right("inter-msgs", 12),
+        ]);
         for kind in ALL_KINDS {
             let t = self.total(kind);
             if t.calls > 0 {
-                out.push_str(&format!(
-                    "{:<14} {:>7} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12}\n",
-                    kind.name(),
-                    t.calls,
-                    t.bytes,
-                    t.intra_bytes(),
-                    t.inter_bytes(),
-                    t.wan_bytes(),
-                    t.intra_msgs(),
-                    t.inter_msgs()
-                ));
+                table.row(vec![
+                    kind.name().to_string(),
+                    t.calls.to_string(),
+                    t.bytes.to_string(),
+                    t.intra_bytes().to_string(),
+                    t.inter_bytes().to_string(),
+                    t.wan_bytes().to_string(),
+                    t.intra_msgs().to_string(),
+                    t.inter_msgs().to_string(),
+                ]);
             }
         }
-        out
+        table.render()
     }
 }
 
@@ -353,11 +380,26 @@ impl RankTimeline {
 #[derive(Debug)]
 pub struct TimelineBoard {
     inner: Mutex<Vec<RankTimeline>>,
+    tracer: Mutex<Option<Arc<Tracer>>>,
 }
 
 impl TimelineBoard {
     pub fn new(world: usize) -> Self {
-        TimelineBoard { inner: Mutex::new(vec![RankTimeline::default(); world]) }
+        TimelineBoard {
+            inner: Mutex::new(vec![RankTimeline::default(); world]),
+            tracer: Mutex::new(None),
+        }
+    }
+
+    /// Attach (or detach, with `None`) a span tracer: every subsequently
+    /// scheduled comm phase with a positive duration and every priced
+    /// compute block emits one `trace::Span` carrying the exact start and
+    /// duration the board accounted — folding the spans back reproduces
+    /// the board's sums bitwise (`trace::Tracer::crosscheck`). With no
+    /// tracer the hooks are a single `Option` check and the schedule math
+    /// is untouched.
+    pub fn set_tracer(&self, tracer: Option<Arc<Tracer>>) {
+        *self.tracer.lock().unwrap() = tracer;
     }
 
     /// Schedule one op's phases on the rank's lanes — intra, then inter,
@@ -395,24 +437,55 @@ impl TimelineBoard {
         phases: &[(usize, f64)],
         blocking: bool,
     ) -> (f64, f64) {
-        let mut g = self.inner.lock().unwrap();
-        let tl = &mut g[rank];
-        let mut t = tl.clock_s;
-        let mut first_finish = t;
-        for (i, &(tier, d)) in phases.iter().enumerate() {
-            if d > 0.0 {
-                let start = t.max(tl.lane_busy_s[tier]);
-                t = start + d;
-                tl.lane_busy_s[tier] = t;
+        self.schedule_lanes_labeled(rank, phases, blocking, "comm", 0)
+    }
+
+    /// [`Self::schedule_lanes`] with a span label and payload byte count
+    /// for the tracer: each phase with a positive duration emits one
+    /// `trace::Span` on its tier's lane, carrying the exact `(start,
+    /// duration)` the board scheduled. Zero-duration phases still
+    /// accumulate into the serialized sums (adding exactly `0.0`) but emit
+    /// no span, which keeps the folded span sums bitwise equal to
+    /// `lane_serialized_s`.
+    pub fn schedule_lanes_labeled(
+        &self,
+        rank: usize,
+        phases: &[(usize, f64)],
+        blocking: bool,
+        label: &str,
+        bytes: u64,
+    ) -> (f64, f64) {
+        let tracer = self.tracer.lock().unwrap().clone();
+        let mut emitted: Vec<(usize, f64, f64)> = Vec::new();
+        let (first_finish, t) = {
+            let mut g = self.inner.lock().unwrap();
+            let tl = &mut g[rank];
+            let mut t = tl.clock_s;
+            let mut first_finish = t;
+            for (i, &(tier, d)) in phases.iter().enumerate() {
+                if d > 0.0 {
+                    let start = t.max(tl.lane_busy_s[tier]);
+                    t = start + d;
+                    tl.lane_busy_s[tier] = t;
+                    if tracer.is_some() {
+                        emitted.push((tier, start, d));
+                    }
+                }
+                if i == 0 {
+                    first_finish = t;
+                }
+                tl.serialized_s += d;
+                tl.lane_serialized_s[tier] += d;
             }
-            if i == 0 {
-                first_finish = t;
+            if blocking {
+                tl.clock_s = t;
             }
-            tl.serialized_s += d;
-            tl.lane_serialized_s[tier] += d;
-        }
-        if blocking {
-            tl.clock_s = t;
+            (first_finish, t)
+        };
+        if let Some(tr) = tracer {
+            for (tier, start, d) in emitted {
+                tr.record_span(rank, tier, start, d, label, bytes);
+            }
         }
         (first_finish, t)
     }
@@ -424,13 +497,28 @@ impl TimelineBoard {
     /// own lanes — a following `complete` only advances the clock to the
     /// op's finish if the compute did not already run past it.
     pub fn advance_compute(&self, rank: usize, seconds: f64) {
+        self.advance_compute_labeled(rank, seconds, "compute");
+    }
+
+    /// [`Self::advance_compute`] with a span label for the tracer: the
+    /// priced block emits one `trace::Span` on the compute lane starting
+    /// at the clock it occupied.
+    pub fn advance_compute_labeled(&self, rank: usize, seconds: f64, label: &str) {
         if seconds <= 0.0 {
             return;
         }
-        let mut g = self.inner.lock().unwrap();
-        let tl = &mut g[rank];
-        tl.clock_s += seconds;
-        tl.compute_s += seconds;
+        let tracer = self.tracer.lock().unwrap().clone();
+        let start = {
+            let mut g = self.inner.lock().unwrap();
+            let tl = &mut g[rank];
+            let start = tl.clock_s;
+            tl.clock_s += seconds;
+            tl.compute_s += seconds;
+            start
+        };
+        if let Some(tr) = tracer {
+            tr.record_span(rank, crate::trace::COMPUTE_LANE, start, seconds, label, 0);
+        }
     }
 
     /// Advance the rank's clock to a previously scheduled finish time

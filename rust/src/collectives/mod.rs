@@ -60,6 +60,7 @@ pub mod transport;
 
 pub use accounting::{CommKind, CommStats, RankTimeline, StatsBoard, TimelineBoard};
 pub use rendezvous::{
-    Communicator, PendingAllGather, PendingAllReduce, PendingAllToAll, Rendezvous,
+    parse_deadlock_timeout_ms, Communicator, PendingAllGather, PendingAllReduce, PendingAllToAll,
+    Rendezvous,
 };
 pub use transport::{ALL_STRATEGIES, CollectiveStrategy, NodeMap, NodePlan, MAX_TIERS};

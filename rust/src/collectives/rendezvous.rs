@@ -67,7 +67,7 @@
 //! actually exposes, against the serialized comm + compute sum, including
 //! which collectives hide behind compute.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::hash::{Hash, Hasher};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -79,7 +79,19 @@ use crate::perfmodel::collective_cost::{
     allgather_phased, allreduce_phased, alltoall_phased, alltoall_pxn_schedule_tiers, PhasedCost,
 };
 use crate::topology::GroupId;
+use crate::trace::Tracer;
 use crate::util::tensor::Tensor;
+
+/// Parse a `TED_DEADLOCK_TIMEOUT` value (seconds, fractional allowed)
+/// into milliseconds. Non-numeric input, non-finite values, zero, and
+/// negatives all fall back to the 120 s default; positive values are
+/// rounded up to at least 1 ms.
+pub fn parse_deadlock_timeout_ms(val: Option<&str>) -> u64 {
+    val.and_then(|v| v.trim().parse::<f64>().ok())
+        .filter(|s| s.is_finite() && *s > 0.0)
+        .map(|s| ((s * 1000.0).ceil() as u64).max(1))
+        .unwrap_or(120_000)
+}
 
 /// How long a rank waits on peers before declaring the program
 /// deadlocked. `TED_DEADLOCK_TIMEOUT` (seconds, fractional allowed)
@@ -90,12 +102,7 @@ fn deadlock_timeout() -> Duration {
     static CACHED_MS: AtomicU64 = AtomicU64::new(0);
     let mut ms = CACHED_MS.load(Ordering::Relaxed);
     if ms == 0 {
-        ms = std::env::var("TED_DEADLOCK_TIMEOUT")
-            .ok()
-            .and_then(|v| v.trim().parse::<f64>().ok())
-            .filter(|s| s.is_finite() && *s > 0.0)
-            .map(|s| ((s * 1000.0).ceil() as u64).max(1))
-            .unwrap_or(120_000);
+        ms = parse_deadlock_timeout_ms(std::env::var("TED_DEADLOCK_TIMEOUT").ok().as_deref());
         CACHED_MS.store(ms, Ordering::Relaxed);
     }
     Duration::from_millis(ms)
@@ -180,7 +187,17 @@ pub struct Rendezvous {
     pub stats: StatsBoard,
     pub timeline: TimelineBoard,
     world: usize,
+    /// Optional span tracer; installing it here also installs it into the
+    /// stats and timeline boards ([`Rendezvous::set_tracer`]).
+    tracer: Mutex<Option<Arc<Tracer>>>,
+    /// Always-on flight recorder: the last [`FLIGHT_CAPACITY`] deposits
+    /// and waits, dumped into deadlock panic reports.
+    flight: Mutex<VecDeque<String>>,
 }
+
+/// Flight-recorder depth: enough to cover every rank's last few ops on a
+/// wide world without unbounded growth.
+const FLIGHT_CAPACITY: usize = 128;
 
 impl Rendezvous {
     pub fn new(world: usize) -> Arc<Self> {
@@ -199,11 +216,48 @@ impl Rendezvous {
             stats: StatsBoard::new(world),
             timeline: TimelineBoard::new(world),
             world,
+            tracer: Mutex::new(None),
+            flight: Mutex::new(VecDeque::with_capacity(FLIGHT_CAPACITY)),
         })
     }
 
     pub fn world(&self) -> usize {
         self.world
+    }
+
+    /// Attach (or detach, with `None`) a span tracer to this rendezvous
+    /// and its accounting boards: priced comm phases and compute blocks
+    /// become timeline spans, `record_lanes` calls become byte events,
+    /// and every `wait_full` records a real-time lock-wait span on the
+    /// `rendezvous` track. `None` restores the untraced (bitwise
+    /// identical) behavior.
+    pub fn set_tracer(&self, tracer: Option<Arc<Tracer>>) {
+        self.stats.set_tracer(tracer.clone());
+        self.timeline.set_tracer(tracer.clone());
+        *self.tracer.lock().unwrap() = tracer;
+    }
+
+    fn flight_push(&self, entry: String) {
+        let mut g = self.flight.lock().unwrap();
+        if g.len() == FLIGHT_CAPACITY {
+            g.pop_front();
+        }
+        g.push_back(entry);
+    }
+
+    /// The flight-recorder tail, formatted for appending to a deadlock
+    /// panic report.
+    fn flight_tail(&self) -> String {
+        let g = self.flight.lock().unwrap();
+        let mut out = String::from("\nflight recorder (most recent last):");
+        if g.is_empty() {
+            out.push_str("\n  (empty)");
+        }
+        for entry in g.iter() {
+            out.push_str("\n  ");
+            out.push_str(entry);
+        }
+        out
     }
 
     pub fn n_shards(&self) -> usize {
@@ -245,31 +299,53 @@ impl Rendezvous {
         assert_eq!(slot.contributions.len(), n, "group size mismatch at {desc}");
         assert!(slot.contributions[my_pos].is_none(), "double deposit at {desc}");
         slot.contributions[my_pos] = Some(payloads);
-        slot.arrived += 1;
+        let arrived = slot.arrived + 1;
+        slot.arrived = arrived;
         sh.cv.notify_all();
+        drop(slots);
+        self.flight_push(format!("deposit pos {my_pos} ({arrived}/{n} arrived): {desc}"));
     }
 
     /// Block until `n` members have deposited into `key` (the wait side).
-    fn wait_full(&self, key: SlotKey, n: usize, desc: &str) {
+    /// `rank` attributes the traced lock-wait span; a timeout panics with
+    /// the missing-member positions plus the flight-recorder tail.
+    fn wait_full(&self, rank: usize, key: SlotKey, n: usize, desc: &str) {
+        self.flight_push(format!("wait rank {rank}: {desc}"));
+        let tracer = self.tracer.lock().unwrap().clone();
+        let wait_start = tracer.as_ref().map(|t| t.now_s());
         let sh = self.shard(&key);
         let mut slots = sh.slots.lock().unwrap();
         let deadline = std::time::Instant::now() + deadlock_timeout();
         while slots.get(&key).map(|s| s.arrived).unwrap_or(0) < n {
-            let remaining = deadline
-                .checked_duration_since(std::time::Instant::now())
-                .unwrap_or_else(|| panic!("{}", deadlock_report(&slots, key, n, desc)));
+            let remaining =
+                deadline.checked_duration_since(std::time::Instant::now()).unwrap_or_else(|| {
+                    panic!("{}{}", deadlock_report(&slots, key, n, desc), self.flight_tail())
+                });
             let (g, timeout) = sh.cv.wait_timeout(slots, remaining).unwrap();
             slots = g;
             if timeout.timed_out() && slots.get(&key).map(|s| s.arrived).unwrap_or(0) < n {
-                panic!("{}", deadlock_report(&slots, key, n, desc));
+                panic!("{}{}", deadlock_report(&slots, key, n, desc), self.flight_tail());
             }
+        }
+        drop(slots);
+        if let (Some(tr), Some(start)) = (tracer, wait_start) {
+            tr.record_span(
+                rank,
+                crate::trace::RENDEZVOUS_LANE,
+                start,
+                tr.now_s() - start,
+                desc,
+                0,
+            );
         }
     }
 
     /// Deposit and wait until all `n` members have arrived (the blocking
     /// path); pickup happens in `take`.
+    #[allow(clippy::too_many_arguments)]
     fn deposit(
         &self,
+        rank: usize,
         key: SlotKey,
         kind: CommKind,
         my_pos: usize,
@@ -278,7 +354,7 @@ impl Rendezvous {
         desc: &str,
     ) {
         self.deposit_nowait(key, kind, my_pos, n, payloads, desc);
-        self.wait_full(key, n, desc);
+        self.wait_full(rank, key, n, desc);
     }
 
     /// Read out this rank's result; the closure maps the complete slot to
@@ -385,6 +461,10 @@ pub struct Communicator {
     strategy: CollectiveStrategy,
     nodes: NodeMap,
     cost: Option<ClusterConfig>,
+    /// One-shot trace label consumed by the next scheduled op
+    /// ([`Self::set_op_label`]); `Cell` so `&self` schedule paths can
+    /// take it.
+    op_label: std::cell::Cell<Option<String>>,
 }
 
 impl Communicator {
@@ -413,7 +493,23 @@ impl Communicator {
         strategy: CollectiveStrategy,
         nodes: NodeMap,
     ) -> Self {
-        Communicator { rez, rank, seqs: HashMap::new(), strategy, nodes, cost: None }
+        Communicator {
+            rez,
+            rank,
+            seqs: HashMap::new(),
+            strategy,
+            nodes,
+            cost: None,
+            op_label: std::cell::Cell::new(None),
+        }
+    }
+
+    /// Set the trace-span label for the **next** collective this
+    /// communicator schedules (one-shot; the op consumes it). Without a
+    /// label, spans carry the op's kind name. No effect unless a tracer
+    /// is attached to the rendezvous.
+    pub fn set_op_label(&self, label: impl Into<String>) {
+        self.op_label.set(Some(label.into()));
     }
 
     pub fn rank(&self) -> usize {
@@ -456,6 +552,12 @@ impl Communicator {
     /// prices the seconds (e.g. block flops / achievable flop rate).
     pub fn advance_compute(&mut self, seconds: f64) {
         self.rez.timeline.advance_compute(self.rank, seconds);
+    }
+
+    /// [`Self::advance_compute`] with a trace-span label (e.g.
+    /// `"expert-ffn"`, `"attn bwd"`) for the compute lane.
+    pub fn advance_compute_labeled(&mut self, seconds: f64, label: &str) {
+        self.rez.timeline.advance_compute_labeled(self.rank, seconds, label);
     }
 
     fn next_seq(&mut self, gid: GroupId) -> u64 {
@@ -512,8 +614,14 @@ impl Communicator {
                 }
             }
         };
-        let (intra_finish_s, finish_s) =
-            self.rez.timeline.schedule_lanes(self.rank, &phases, blocking);
+        let label = self.op_label.take();
+        let (intra_finish_s, finish_s) = self.rez.timeline.schedule_lanes_labeled(
+            self.rank,
+            &phases,
+            blocking,
+            label.as_deref().unwrap_or(kind.name()),
+            bytes as u64,
+        );
         OpTimes { intra_finish_s, finish_s }
     }
 
@@ -631,7 +739,7 @@ impl Communicator {
     pub fn wait_all_reduce(&mut self, p: PendingAllReduce, t: &mut Tensor) {
         if p.n > 1 {
             let desc = format!("all_reduce wait g={:?} seq={}", p.key.0, p.key.1);
-            self.rez.wait_full(p.key, p.n, &desc);
+            self.rez.wait_full(self.rank, p.key, p.n, &desc);
             let result = self.rez.take(p.key, p.n, |slot| {
                 if slot.reduced.is_none() {
                     // reduce in member order for determinism
@@ -674,6 +782,7 @@ impl Communicator {
         };
         self.rez.stats.record_bytes_lanes(self.rank, CommKind::ReduceScatter, lanes);
         self.rez.deposit(
+            self.rank,
             key,
             CommKind::ReduceScatter,
             pos,
@@ -736,10 +845,10 @@ impl Communicator {
                 }
             };
             self.rez.stats.record_bytes_lanes(self.rank, CommKind::Broadcast, lanes);
-            self.rez.deposit(key, CommKind::Broadcast, pos, n, vec![t.data().to_vec()],
-                &format!("broadcast g={gid:?} seq={seq}"));
+            self.rez.deposit(self.rank, key, CommKind::Broadcast, pos, n,
+                vec![t.data().to_vec()], &format!("broadcast g={gid:?} seq={seq}"));
         } else {
-            self.rez.deposit(key, CommKind::Broadcast, pos, n, vec![],
+            self.rez.deposit(self.rank, key, CommKind::Broadcast, pos, n, vec![],
                 &format!("broadcast g={gid:?} seq={seq}"));
         }
         // copy straight out of the slot borrow — no intermediate clone
@@ -759,7 +868,7 @@ impl Communicator {
         let seq = self.next_seq(gid);
         let key = (gid, seq, 0u32);
         self.rez.stats.record_bytes_lanes(self.rank, CommKind::Barrier, [0; MAX_TIERS]);
-        self.rez.deposit(key, CommKind::Barrier, pos, n, vec![],
+        self.rez.deposit(self.rank, key, CommKind::Barrier, pos, n, vec![],
             &format!("barrier g={gid:?} seq={seq}"));
         self.rez.take(key, n, |_| ());
     }
@@ -852,7 +961,7 @@ impl Communicator {
             AgState::Ready(v) => Arc::new(v),
             AgState::Exchange { key, n } => {
                 let desc = format!("all_gather wait g={:?} seq={}", key.0, key.1);
-                self.rez.wait_full(key, n, &desc);
+                self.rez.wait_full(self.rank, key, n, &desc);
                 self.rez.take(key, n, |slot| {
                     if slot.gathered.is_none() {
                         // first pickup assembles the member-order result,
@@ -902,7 +1011,7 @@ impl Communicator {
         let node_block: Payloads = if k > 1 {
             let key = (gid, seq, ptag(1, plan.my_node));
             let desc = format!("all_gather/intra g={gid:?} seq={seq} node={}", plan.my_node);
-            self.rez.wait_full(key, k, &desc);
+            self.rez.wait_full(self.rank, key, k, &desc);
             self.rez.take(key, k, |slot| {
                 if leader {
                     slot.contributions
@@ -928,7 +1037,7 @@ impl Communicator {
         let key2 = (gid, seq, ptag(2, 0));
         let desc2 = format!("all_gather/inter g={gid:?} seq={seq}");
         self.rez.deposit_nowait(key2, CommKind::AllGather, pos, n, node_block, &desc2);
-        self.rez.wait_full(key2, n, &desc2);
+        self.rez.wait_full(self.rank, key2, n, &desc2);
         let leader_positions = plan.leader_positions();
         let out: Arc<Payloads> = self.rez.take(key2, n, |slot| {
             if slot.gathered.is_none() {
@@ -1047,7 +1156,19 @@ impl Communicator {
         members: &[usize],
         chunks: Vec<Payloads>,
     ) -> Vec<PendingAllToAll> {
-        chunks.into_iter().map(|send| self.issue_all_to_all(gid, members, send)).collect()
+        // chunk-index the trace label: a base label set by the caller
+        // (e.g. "moe dispatch a2a hot-first") fans out to one labeled
+        // span set per chunk
+        let base = self.op_label.take().unwrap_or_else(|| CommKind::AllToAll.name().to_string());
+        let k = chunks.len();
+        chunks
+            .into_iter()
+            .enumerate()
+            .map(|(i, send)| {
+                self.set_op_label(format!("{base} chunk {}/{k}", i + 1));
+                self.issue_all_to_all(gid, members, send)
+            })
+            .collect()
     }
 
     fn issue_all_to_all_at(
@@ -1238,7 +1359,8 @@ impl Communicator {
             A2aState::Hier { gid, seq, plan, pos, early, .. }
             | A2aState::Pxn { gid, seq, plan, pos, early, .. } => {
                 if early.is_none() {
-                    *early = Some(Self::take_a2a_intra(&self.rez, *gid, *seq, plan, *pos));
+                    *early =
+                        Some(Self::take_a2a_intra(&self.rez, self.rank, *gid, *seq, plan, *pos));
                 }
                 early.as_deref().unwrap()
             }
@@ -1250,6 +1372,7 @@ impl Communicator {
     /// rows)` for every same-node peer.
     fn take_a2a_intra(
         rez: &Rendezvous,
+        rank: usize,
         gid: GroupId,
         seq: u64,
         plan: &NodePlan,
@@ -1263,7 +1386,7 @@ impl Communicator {
         let my_subpos = plan.my_subpos;
         let key = (gid, seq, ptag(1, plan.my_node));
         let desc = format!("all_to_all/intra g={gid:?} seq={seq} node={}", plan.my_node);
-        rez.wait_full(key, k, &desc);
+        rez.wait_full(rank, key, k, &desc);
         // each member reads its own column exactly once, so the rows move
         // out instead of cloning
         let rows: Payloads = rez.take(key, k, |slot| {
@@ -1286,7 +1409,7 @@ impl Communicator {
             A2aState::Ready(v) => v,
             A2aState::Exchange { key, pos, n } => {
                 let desc = format!("all_to_all wait g={:?} seq={}", key.0, key.1);
-                self.rez.wait_full(key, n, &desc);
+                self.rez.wait_full(self.rank, key, n, &desc);
                 // column `pos` has exactly one reader (us): move, don't clone
                 self.rez.take(key, n, |slot| {
                     slot.contributions
@@ -1298,15 +1421,16 @@ impl Communicator {
                 })
             }
             A2aState::Hier { gid, seq, plan, pos, n, same_node, mine, early } => {
-                let early_rows = early
-                    .unwrap_or_else(|| Self::take_a2a_intra(&self.rez, gid, seq, &plan, pos));
+                let early_rows = early.unwrap_or_else(|| {
+                    Self::take_a2a_intra(&self.rez, self.rank, gid, seq, &plan, pos)
+                });
                 let mut out: Payloads = vec![Vec::new(); n];
                 for (p2, v) in early_rows {
                     out[p2] = v;
                 }
                 let key2 = (gid, seq, ptag(2, 0));
                 let desc2 = format!("all_to_all/inter g={gid:?} seq={seq}");
-                self.rez.wait_full(key2, n, &desc2);
+                self.rez.wait_full(self.rank, key2, n, &desc2);
                 let got: Payloads = self.rez.take(key2, n, |slot| {
                     slot.contributions
                         .iter_mut()
@@ -1380,8 +1504,8 @@ impl Communicator {
         let mut out: Payloads = vec![Vec::new(); n];
 
         // phase 1a receipts (same-node rows)
-        let early_rows =
-            early.unwrap_or_else(|| Self::take_a2a_intra(&self.rez, gid, seq, plan, pos));
+        let early_rows = early
+            .unwrap_or_else(|| Self::take_a2a_intra(&self.rez, self.rank, gid, seq, plan, pos));
         for (p2, v) in early_rows {
             out[p2] = v;
         }
@@ -1411,7 +1535,7 @@ impl Communicator {
             let node_sends: Vec<Payloads> = if k > 1 {
                 let key1b = (gid, seq, ptag(3, my_node));
                 let desc1b = format!("all_to_all/pxn-gather g={gid:?} seq={seq} node={my_node}");
-                self.rez.wait_full(key1b, k, &desc1b);
+                self.rez.wait_full(self.rank, key1b, k, &desc1b);
                 // sole reader: move the payloads out instead of cloning
                 // (the slot is freed right after this take)
                 self.rez.take(key1b, 1, |slot| {
@@ -1452,7 +1576,7 @@ impl Communicator {
             let key2 = (gid, seq, ptag(4, 0));
             let desc2 = format!("all_to_all/pxn-inter g={gid:?} seq={seq}");
             self.rez.deposit_nowait(key2, CommKind::AllToAll, my_node, m, batches, &desc2);
-            self.rez.wait_full(key2, m, &desc2);
+            self.rez.wait_full(self.rank, key2, m, &desc2);
             // each leader reads column `my_node` of every peer batch
             // exactly once: move the frames out instead of cloning
             let got: Payloads = self.rez.take(key2, m, |slot| {
@@ -1503,7 +1627,7 @@ impl Communicator {
                 per_member[my_subpos] = Vec::new();
                 let key3 = (gid, seq, ptag(5, my_node));
                 self.rez.deposit_nowait(key3, CommKind::AllToAll, 0, 1, per_member, &desc3);
-                self.rez.wait_full(key3, 1, &desc3);
+                self.rez.wait_full(self.rank, key3, 1, &desc3);
                 let _own: Payload = self.rez.take(key3, k, |slot| {
                     std::mem::take(
                         &mut slot.contributions[0].as_mut().expect("leader dist missing")
@@ -1522,7 +1646,7 @@ impl Communicator {
             // NVLink at issue; pick up our remote rows from phase 3
             lane_bytes[0] += own_cross_bytes;
             let key3 = (gid, seq, ptag(5, my_node));
-            self.rez.wait_full(key3, 1, &desc3);
+            self.rez.wait_full(self.rank, key3, 1, &desc3);
             // frame column `my_subpos` has exactly one reader (us)
             let frames: Payload = self.rez.take(key3, k, |slot| {
                 std::mem::take(

@@ -285,6 +285,14 @@ impl Trainer {
         }
     }
 
+    /// [`Self::price_compute`] with a trace-span label (`"attn fwd"`,
+    /// `"expert-ffn fwd"`, `"wgrad delayed"`, ...) for the compute lane.
+    fn price_compute_labeled(&mut self, flops: f64, label: &str) {
+        if let Some(rate) = self.flops_rate {
+            self.comm.advance_compute_labeled(flops / rate, label);
+        }
+    }
+
     /// This rank's flops for one attention-shard pass over the local
     /// batch (`passes`: 1.0 forward, 2.0 backward).
     fn attn_shard_flops(&self, passes: f64) -> f64 {
@@ -330,14 +338,14 @@ impl Trainer {
     fn layer_forward(&mut self, i: usize, x: &Tensor) -> Result<(Tensor, LayerStash)> {
         // attention shard + TP all-reduce + residual
         let mut ar = blocks::attn_fwd(&mut self.rt, &self.store, i, x)?;
-        self.price_compute(self.attn_shard_flops(1.0));
+        self.price_compute_labeled(self.attn_shard_flops(1.0), "attn fwd");
         self.tp_allreduce(&mut ar);
         let mut y1 = x.clone();
         y1.add_assign(&ar);
 
         if !is_moe_layer(i) {
             let mut ar2 = blocks::ffn_fwd(&mut self.rt, &self.store, i, &y1)?;
-            self.price_compute(self.ffn_shard_flops(1.0));
+            self.price_compute_labeled(self.ffn_shard_flops(1.0), "ffn fwd");
             self.tp_allreduce(&mut ar2);
             let mut y2 = y1.clone();
             y2.add_assign(&ar2);
@@ -397,8 +405,9 @@ impl Trainer {
                 let part =
                     blocks::expert_fwd(&mut self.rt, &self.store, i, e, &disp.buffers[le])?;
                 if !self.opts.chunked_a2a || le == 0 {
-                    self.price_compute(self.expert_shard_flops(1.0));
+                    self.price_compute_labeled(self.expert_shard_flops(1.0), "expert-ffn fwd");
                 }
+                self.comm.set_op_label(format!("expert {e} tp all_reduce"));
                 let p = self.comm.issue_all_reduce(
                     self.groups.tp_group_id,
                     &self.groups.tp_group,
@@ -419,7 +428,7 @@ impl Trainer {
                 let mut part =
                     blocks::expert_fwd(&mut self.rt, &self.store, i, e, &disp.buffers[le])?;
                 if !self.opts.chunked_a2a || le == 0 {
-                    self.price_compute(self.expert_shard_flops(1.0));
+                    self.price_compute_labeled(self.expert_shard_flops(1.0), "expert-ffn fwd");
                 }
                 self.tp_allreduce(&mut part);
                 expert_out.push(part);
@@ -474,7 +483,7 @@ impl Trainer {
         let dy1 = match parts {
             LayerParts::Dense(DenseParts { y1 }) => {
                 let (grads, mut dxp) = blocks::ffn_bwd(&mut self.rt, &self.store, i, &y1, dy2)?;
-                self.price_compute(self.ffn_shard_flops(2.0));
+                self.price_compute_labeled(self.ffn_shard_flops(2.0), "ffn bwd");
                 for (n, g) in grads {
                     self.store.accum_grad(&n, &g);
                 }
@@ -534,10 +543,14 @@ impl Trainer {
                             &disp.buffers[le],
                             &disp_b.buffers[le],
                         )?;
-                        self.price_compute(self.expert_shard_flops(bwd_passes));
+                        self.price_compute_labeled(
+                            self.expert_shard_flops(bwd_passes),
+                            "expert-ffn bwd",
+                        );
                         for (n, g) in grads {
                             self.store.accum_grad(&n, &g);
                         }
+                        self.comm.set_op_label(format!("expert {e} tp all_reduce bwd"));
                         let p = self.comm.issue_all_reduce(
                             self.groups.tp_group_id,
                             &self.groups.tp_group,
@@ -563,7 +576,10 @@ impl Trainer {
                             &disp.buffers[le],
                             &disp_b.buffers[le],
                         )?;
-                        self.price_compute(self.expert_shard_flops(bwd_passes));
+                        self.price_compute_labeled(
+                            self.expert_shard_flops(bwd_passes),
+                            "expert-ffn bwd",
+                        );
                         for (n, g) in grads {
                             self.store.accum_grad(&n, &g);
                         }
@@ -603,7 +619,10 @@ impl Trainer {
                     // the delayed wgrad units not already advanced between
                     // the chunked return's waits price here, after the a2a
                     let in_return = if self.opts.chunked_a2a { local - 1 } else { 0 };
-                    self.price_compute(self.expert_shard_flops((local - in_return) as f64));
+                    self.price_compute_labeled(
+                        self.expert_shard_flops((local - in_return) as f64),
+                        "wgrad delayed",
+                    );
                 }
                 // assemble dxn [N, D]: per-assignment gradients accumulate
                 // into their token's row (zero rows for dropped tokens)
@@ -631,7 +650,7 @@ impl Trainer {
 
         // attention backward + residual
         let (grads, mut dxp) = blocks::attn_bwd(&mut self.rt, &self.store, i, &stash.x_in, &dy1)?;
-        self.price_compute(self.attn_shard_flops(2.0));
+        self.price_compute_labeled(self.attn_shard_flops(2.0), "attn bwd");
         for (n, g) in grads {
             self.store.accum_grad(&n, &g);
         }
@@ -669,7 +688,7 @@ impl Trainer {
         self.peak_stash_bytes = self.peak_stash_bytes.max(stash_bytes);
 
         let (loss, hgrads, mut dx) = blocks::head_loss_bwd(&mut self.rt, &self.store, &x, targets)?;
-        self.price_compute(self.head_flops(3.0)); // fused head fwd + bwd
+        self.price_compute_labeled(self.head_flops(3.0), "head fwd+bwd"); // fused head
         for (n, mut g) in hgrads {
             g.scale(ls);
             self.store.accum_grad(&n, &g);
@@ -695,7 +714,7 @@ impl Trainer {
             let (x2, _st) = self.layer_forward(i, &x)?;
             x = x2;
         }
-        self.price_compute(self.head_flops(1.0));
+        self.price_compute_labeled(self.head_flops(1.0), "head eval");
         blocks::head_loss_fwd(&mut self.rt, &self.store, &x, targets)
     }
 
@@ -740,11 +759,13 @@ impl Trainer {
             // pipeline across fabrics (bitwise-identical results)
             let mut te = Tensor::from_vec(&[flat_e.len()], std::mem::take(&mut flat_e));
             let mut tne = Tensor::from_vec(&[flat_ne.len()], std::mem::take(&mut flat_ne));
+            self.comm.set_op_label("grad all_reduce expert");
             let pe = self.comm.issue_all_reduce(
                 self.groups.dp_exp_group_id,
                 &self.groups.dp_exp_group,
                 &te,
             );
+            self.comm.set_op_label("grad all_reduce nonexpert");
             let pne = self.comm.issue_all_reduce(
                 self.groups.dp_nonexp_group_id,
                 &self.groups.dp_nonexp_group,
@@ -759,6 +780,7 @@ impl Trainer {
         } else {
             {
                 let mut t = Tensor::from_vec(&[flat_ne.len()], std::mem::take(&mut flat_ne));
+                self.comm.set_op_label("grad all_reduce nonexpert");
                 self.comm.all_reduce(
                     self.groups.dp_nonexp_group_id,
                     &self.groups.dp_nonexp_group,
@@ -769,6 +791,7 @@ impl Trainer {
             }
             if has_e {
                 let mut t = Tensor::from_vec(&[flat_e.len()], std::mem::take(&mut flat_e));
+                self.comm.set_op_label("grad all_reduce expert");
                 self.comm
                     .all_reduce(self.groups.dp_exp_group_id, &self.groups.dp_exp_group, &mut t);
                 t.scale(1.0 / (n_micro * dp_e));
@@ -795,6 +818,7 @@ impl Trainer {
 
         // average loss across the non-expert DP group (TP peers identical)
         let mut lt = Tensor::from_vec(&[2], vec![loss_sum / n_micro, aux_sum / n_micro]);
+        self.comm.set_op_label("loss all_reduce");
         self.comm
             .all_reduce(self.groups.dp_nonexp_group_id, &self.groups.dp_nonexp_group, &mut lt);
         lt.scale(1.0 / dp_ne);
@@ -837,11 +861,13 @@ impl Trainer {
         }
         // sum TP-sharded parts over the TP group
         let mut t = Tensor::from_vec(&[2], vec![ne_sharded as f32, e_sharded as f32]);
+        self.comm.set_op_label("grad-norm tp all_reduce");
         self.comm
             .all_reduce(self.groups.tp_group_id, &self.groups.tp_group, &mut t);
         let ne_total = t.data()[0] as f64 + ne_repl;
         // sum the expert contribution over the EP group (distinct experts)
         let mut e = Tensor::from_vec(&[1], vec![(t.data()[1] as f64 + e_repl) as f32]);
+        self.comm.set_op_label("grad-norm ep all_reduce");
         self.comm
             .all_reduce(self.groups.ep_group_id, &self.groups.ep_group, &mut e);
         ((ne_total + e.data()[0] as f64).max(0.0)).sqrt() as f32
@@ -886,11 +912,13 @@ impl Trainer {
                 (true, Some(se)) => {
                     let tne = Tensor::from_vec(&[shard_ne.len()], shard_ne);
                     let te = Tensor::from_vec(&[se.len()], se);
+                    self.comm.set_op_label("zero1 all_gather nonexpert");
                     let pne = self.comm.issue_all_gather(
                         self.groups.dp_nonexp_group_id,
                         &self.groups.dp_nonexp_group,
                         &tne,
                     );
+                    self.comm.set_op_label("zero1 all_gather expert");
                     let pe = self.comm.issue_all_gather(
                         self.groups.dp_exp_group_id,
                         &self.groups.dp_exp_group,
@@ -899,12 +927,14 @@ impl Trainer {
                     (self.comm.wait_all_gather(pne), Some(self.comm.wait_all_gather(pe)))
                 }
                 (_, se) => {
+                    self.comm.set_op_label("zero1 all_gather nonexpert");
                     let g_ne = self.comm.all_gather(
                         self.groups.dp_nonexp_group_id,
                         &self.groups.dp_nonexp_group,
                         &Tensor::from_vec(&[shard_ne.len()], shard_ne),
                     );
                     let g_e = se.map(|se| {
+                        self.comm.set_op_label("zero1 all_gather expert");
                         self.comm.all_gather(
                             self.groups.dp_exp_group_id,
                             &self.groups.dp_exp_group,

@@ -243,6 +243,48 @@
 //! ranking to agree with the measured timelines on toy grids and pins
 //! the paper's Table-2 picks.
 //!
+//! ## Observability
+//!
+//! `trace` is the event-level witness of everything above: an optional
+//! [`trace::Tracer`] attaches to a run's `Rendezvous`
+//! (`Rendezvous::set_tracer`, CLI `ted train|plan-replay --trace
+//! out.json`) and the two accounting choke points emit events as a side
+//! effect of the sums they already maintain — every priced comm phase
+//! becomes a span on its fabric-tier lane (with the op label the
+//! communicator set: kind, chunk index, hot-first order, engine phase),
+//! every priced compute block a span on the compute lane, every
+//! `record_lanes` call a byte event, and every rendezvous `wait_full` a
+//! real-time lock-wait span on a separate `rendezvous` track. The export
+//! is Chrome Trace Format JSON, loadable in Perfetto: one process per
+//! rank, one named thread per lane (`compute` / `nvlink` / `infiniband`
+//! / `wan` / `rendezvous`), microsecond timestamps.
+//!
+//! The load-bearing hook is `trace::Tracer::crosscheck`: folding the
+//! emitted spans back per rank reproduces
+//! `RankTimeline::{lane_serialized_s, compute_s}` **bitwise** (the board
+//! adds the same f64 durations in the same order; zero-duration phases
+//! add the exact additive identity) and the byte events reproduce
+//! `CommStats::{lane_bytes, lane_msgs, calls}` exactly — tracing is a
+//! second, independent witness of the measured==analytic accounting, run
+//! automatically at the end of every traced `sim::train` /
+//! `sim::replay_scenario_traced` and pinned across all three transports
+//! × chunked on/off in `rust/tests/trace_crosscheck.rs`. With no tracer
+//! attached every hook is an `Option` check and the schedule math is
+//! untouched, so untraced runs are the bitwise identity (the parity
+//! matrix is unchanged); overhead when attached is one mutex push per
+//! priced phase.
+//!
+//! Scalar companions: a **step-metrics JSONL sink** (`--step-metrics
+//! out.jsonl`: per-step loss, per-lane seconds, critical path, hidden
+//! comm, plus a run summary with lane byte totals and the fitted overlap
+//! efficiency) consumed by `ted trace summarize|diff`; a shared
+//! reservoir (`metrics::Reservoir`, nearest-rank p50/p95 — also the
+//! engine behind `planner::StepDist`); and an always-on bounded **flight
+//! recorder** in the rendezvous whose tail (the last deposits/waits) is
+//! appended to every deadlock panic next to the missing-member
+//! positions, so a hang names both who is missing and what the world was
+//! doing last.
+//!
 //! Start with [`sim::SimCluster`] and [`engine::Trainer`], or the examples:
 //! `examples/quickstart.rs` is the smallest end-to-end TED training run.
 
@@ -259,4 +301,5 @@ pub mod planner;
 pub mod runtime;
 pub mod sim;
 pub mod topology;
+pub mod trace;
 pub mod util;

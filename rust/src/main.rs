@@ -1,11 +1,13 @@
 //! `ted` — the DeepSpeed-TED reproduction CLI (leader entrypoint).
 //!
 //! Subcommands:
-//!   train      run TED training on the simulated cluster
-//!   plan       rank TED configurations for a deployment (the autotuner)
-//!   info       print topology / memory breakdown for a configuration
-//!   benchdiff  compare two BENCH_smoke.json snapshots bench-by-bench
-//!   figures    shorthand pointing at the paper-figure generators
+//!   train        run TED training on the simulated cluster
+//!   plan         rank TED configurations for a deployment (the autotuner)
+//!   plan-replay  replay one plan's collective schedule, optionally traced
+//!   trace        summarize / diff step-metrics JSONL sinks
+//!   info         print topology / memory breakdown for a configuration
+//!   benchdiff    compare two BENCH_smoke.json snapshots bench-by-bench
+//!   figures      shorthand pointing at the paper-figure generators
 //!
 //! Examples:
 //!   ted train --config tiny --world 4 --tp 2 --ep 2 --steps 20
@@ -19,11 +21,14 @@ use anyhow::{anyhow, bail, Result};
 use ted::config::{model, ClusterConfig, EngineOptions, ParallelConfig, TrainingConfig};
 use ted::data::{DataGen, SyntheticLM, TextCorpus, TrafficLM};
 use ted::memory::{MemoryModel, PHASES};
+use ted::metrics::format::{Column, Table};
+use ted::metrics::Reservoir;
 use ted::perfmodel::MeasuredBlockTimes;
-use ted::planner::{plan, report_json, PlanRequest};
+use ted::planner::{plan, report_json, PlanRequest, DEFAULT_TILE};
 use ted::runtime::Manifest;
-use ted::sim::{train, RunConfig};
+use ted::sim::{replay_scenario_traced, train, RunConfig};
 use ted::topology::Topology;
+use ted::trace::{RunSummary, StepMetrics, StepRecord, Tracer};
 use ted::util::cli::{Args, TrafficSpec};
 use ted::util::json::Json;
 
@@ -40,14 +45,22 @@ USAGE:
              [--no-overlap] [--chunked-a2a] [--delay-wgrad]
              [--ep-placement ship|migrate]
              [--traffic uniform|zipf:<s>|bursty:<p>] [--measured-compute]
+             [--trace out.json] [--step-metrics steps.jsonl]
   ted plan   [--cluster summit|thetagpu|perlmutter|cross-dc] [--model NAME]
              [--experts E] [--gpus G] [--batch N] [--overlap-eff E]
              [--max-tp N] [--micro N] [--top K] [--json] [--chunked]
              [--traffic uniform|zipf:<s>|bursty:<p>] [--traffic-samples N]
              [--measured-compute]
+  ted plan-replay [--model tiny|mini] [--experts E] [--gpus G] [--batch N]
+             [--cluster summit|thetagpu|perlmutter|cross-dc] [--tp N] [--ep N]
+             [--transport flat|hierarchical|hierarchical-pxn] [--chunked]
+             [--no-overlap] [--traffic uniform|zipf:<s>|bursty:<p>]
+             [--trace out.json]
+  ted trace summarize --metrics steps.jsonl
+  ted trace diff --before A.jsonl --after B.jsonl
   ted info   --model {1.3B|2.7B|6.7B|13.0B} --experts E --gpus G --tp T
              [--cluster summit|thetagpu|perlmutter|cross-dc]
-  ted benchdiff --before A.json --after B.json   (compare bench snapshots)
+  ted benchdiff --before A.json --after B.json [--fail-above PCT]
   ted figures [--only ID]    (alias of `cargo run --example paper_figures`)
 
 `ted plan` searches every legal (tp, ep, dp) factorization x transport x
@@ -127,6 +140,8 @@ fn run() -> Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(&args),
         "plan" => cmd_plan(&args),
+        "plan-replay" => cmd_plan_replay(&args),
+        "trace" => cmd_trace(&args),
         "info" => cmd_info(&args),
         "benchdiff" => cmd_benchdiff(&args),
         "figures" => {
@@ -143,6 +158,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         "config", "world", "tp", "ep", "steps", "micro", "lr", "seed", "data", "batch",
         "no-dtd", "no-cac", "no-tiling", "no-overlap", "chunked-a2a", "delay-wgrad", "verbose",
         "transport", "gpus-per-node", "cluster", "traffic", "measured-compute", "ep-placement",
+        "trace", "step-metrics",
     ])?;
     let config = args.get_or("config", "tiny").to_string();
     let tp = args.get_usize("tp", 2)?;
@@ -225,28 +241,40 @@ fn cmd_train(args: &Args) -> Result<()> {
         opts.strategy.name(), opts.overlap, traffic,
         opts.cluster.map(|p| format!(" cluster={}", p.name())).unwrap_or_default()
     );
+    let tracer = args.get("trace").map(|_| std::sync::Arc::new(Tracer::new()));
     let run = RunConfig {
         steps,
         micro_per_step: micro,
         eval_every: (steps / 4).max(1),
         eval_micro: 2,
         verbose: true,
+        tracer: tracer.clone(),
     };
     let log = train(&topo, &manifest, opts, tcfg, run, data)?;
     println!("\ndone in {:.1}s; final loss {:.4}", log.wall_s, log.steps.last().unwrap().loss);
-    println!("comm volumes (total / intra-node / inter-node / wan / inter-msgs):");
+    println!("comm volumes (bytes; msgs for the inter lane):");
+    let mut vol = Table::new(vec![
+        Column::left("kind", 14),
+        Column::right("total", 14),
+        Column::right("intra", 14),
+        Column::right("inter", 14),
+        Column::right("wan", 12),
+        Column::right("inter-msgs", 10),
+    ])
+    .indent("  ");
     for (i, (kind, bytes)) in log.comm_bytes.into_iter().enumerate() {
         if bytes > 0 {
-            println!(
-                "  {:<14} {bytes:>14} {:>14} {:>14} {:>12} bytes {:>10} msgs",
-                kind.name(),
-                log.comm_intra_bytes[i].1,
-                log.comm_inter_bytes[i].1,
-                log.comm_wan_bytes[i].1,
-                log.comm_inter_msgs[i].1
-            );
+            vol.row(vec![
+                kind.name().to_string(),
+                bytes.to_string(),
+                log.comm_intra_bytes[i].1.to_string(),
+                log.comm_inter_bytes[i].1.to_string(),
+                log.comm_wan_bytes[i].1.to_string(),
+                log.comm_inter_msgs[i].1.to_string(),
+            ]);
         }
     }
+    print!("{}", vol.render());
     if opts.cluster.is_some() && log.comm_serialized_s > 0.0 {
         println!("modeled per-lane timeline:");
         print!(
@@ -265,6 +293,54 @@ fn cmd_train(args: &Args) -> Result<()> {
              cargo run --release --example paper_figures -- --overlap-eff {:.3}",
             log.overlap_efficiency
         );
+    }
+    if let (Some(tr), Some(path)) = (&tracer, args.get("trace")) {
+        tr.write_chrome_trace(path)?;
+        println!(
+            "trace: {} spans -> {path} (crosschecked against CommStats/TimelineBoard)",
+            tr.spans().len()
+        );
+    }
+    if let Some(path) = args.get("step-metrics") {
+        let records: Vec<StepRecord> = log
+            .steps
+            .iter()
+            .zip(&log.overlap_timeline)
+            .enumerate()
+            .map(|(i, (st, ot))| StepRecord {
+                step: i,
+                loss: st.loss as f64,
+                lane_s: [ot.comm_intra_s, ot.comm_inter_s, ot.comm_wan_s],
+                compute_s: ot.compute_s,
+                critical_s: ot.critical_s,
+                hidden_s: ot.hidden_s(),
+            })
+            .collect();
+        let lane_total =
+            |lane: &[(ted::collectives::CommKind, u64); 6]| lane.iter().map(|(_, b)| *b).sum();
+        let summary = RunSummary {
+            steps: records.len(),
+            lane_bytes: [
+                lane_total(&log.comm_intra_bytes),
+                lane_total(&log.comm_inter_bytes),
+                lane_total(&log.comm_wan_bytes),
+            ],
+            comm_serialized_s: log.comm_serialized_s,
+            compute_s: log.compute_s,
+            critical_s: log.critical_s,
+            overlap_efficiency: log.overlap_efficiency,
+        };
+        let run_fields = [
+            ("config", config.clone()),
+            ("world", world.to_string()),
+            ("tp", tp.to_string()),
+            ("ep", ep.to_string()),
+            ("transport", opts.strategy.name().to_string()),
+            ("traffic", traffic.to_string()),
+        ];
+        std::fs::write(path, ted::trace::step_metrics_jsonl(&run_fields, &records, &summary))
+            .map_err(|e| anyhow!("writing step metrics {path}: {e}"))?;
+        println!("step metrics: {} steps -> {path}", records.len());
     }
     Ok(())
 }
@@ -424,6 +500,251 @@ fn cmd_plan(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `ted plan-replay`: pick one plan off the autotuner grid and actually
+/// execute its collective schedule through the thread-backed rendezvous
+/// (payload bytes and all), reporting the measured three-lane timeline.
+/// With `--trace` the replay runs under a span tracer and writes the
+/// Chrome-trace JSON after the internal crosscheck against
+/// `CommStats`/`TimelineBoard` passes.
+fn cmd_plan_replay(args: &Args) -> Result<()> {
+    args.reject_unknown(&[
+        "model", "experts", "gpus", "batch", "cluster", "tp", "ep", "transport", "chunked",
+        "no-overlap", "traffic", "trace",
+    ])?;
+    let cluster = ClusterConfig::by_name(args.get_or("cluster", "perlmutter"))
+        .ok_or_else(|| anyhow!("unknown --cluster (summit|thetagpu|perlmutter|cross-dc)"))?;
+    let name = args.get_or("model", "tiny");
+    let m = model::executable(name).ok_or_else(|| {
+        anyhow!(
+            "--model '{name}' is not an executable toy model (tiny|mini): \
+             the replay moves real payload bytes through real threads"
+        )
+    })?;
+    let experts = args.get_usize("experts", 4)?;
+    let gpus = args.get_usize("gpus", 8)?;
+    let batch = args.get_usize("batch", 64)?;
+    let overlap = !args.flag("no-overlap");
+    if experts == 0 || gpus == 0 || batch == 0 {
+        bail!("--experts/--gpus/--batch must be positive");
+    }
+    let mut req = PlanRequest::new(m, experts, gpus, cluster, batch);
+    req.traffic = TrafficSpec::from_args(args)?;
+    req.cac_choices = vec![true];
+    req.tile_choices = vec![Some(DEFAULT_TILE)];
+    req.overlap_choices = vec![overlap];
+    if args.flag("chunked") {
+        if !overlap {
+            bail!("--chunked needs the overlap schedule (drop --no-overlap)");
+        }
+        req.chunked_choices = vec![1];
+    }
+    let want_tp = match args.get("tp") {
+        None => None,
+        Some(_) => Some(args.get_usize("tp", 0)?),
+    };
+    let want_ep = match args.get("ep") {
+        None => None,
+        Some(_) => Some(args.get_usize("ep", 0)?),
+    };
+    let want_strategy = match args.get("transport") {
+        None => None,
+        Some(s) => Some(ted::config::CollectiveStrategy::parse(s).ok_or_else(|| {
+            anyhow!("unknown --transport '{s}' (flat|hierarchical|hierarchical-pxn)")
+        })?),
+    };
+    let report = plan(&req);
+    let p = report
+        .plans
+        .iter()
+        .find(|p| {
+            want_tp.is_none_or(|t| p.knobs.par.tp == t)
+                && want_ep.is_none_or(|e| p.knobs.par.ep == e)
+                && want_strategy.is_none_or(|s| p.knobs.strategy == s)
+        })
+        .ok_or_else(|| {
+            anyhow!(
+                "no feasible plan matches the requested tp/ep/transport \
+                 ({} feasible on this grid; drop a filter or widen the grid)",
+                report.plans.len()
+            )
+        })?;
+    println!(
+        "ted plan-replay: {} on {} GPUs of {} (batch {}, traffic {})",
+        p.knobs.describe(),
+        req.gpus,
+        req.cluster.name,
+        req.global_batch,
+        req.traffic
+    );
+    let tracer = std::sync::Arc::new(Tracer::new());
+    let s = p.scenario(&req);
+    let mres = replay_scenario_traced(&s, p.knobs.gpus_per_node, overlap, Some(tracer.clone()))?;
+    let eff = ted::perfmodel::fit_overlap_efficiency_lanes(
+        mres.compute_s,
+        &[mres.comm_intra_s, mres.comm_inter_s, mres.comm_wan_s],
+        mres.critical_s,
+    );
+    print!(
+        "{}",
+        ted::metrics::render_timeline(
+            mres.compute_s,
+            mres.comm_intra_s,
+            mres.comm_inter_s,
+            mres.comm_wan_s,
+            mres.critical_s,
+            eff,
+        )
+    );
+    if let Some(path) = args.get("trace") {
+        tracer.write_chrome_trace(path)?;
+        println!(
+            "trace: {} spans -> {path} (crosschecked against CommStats/TimelineBoard)",
+            tracer.spans().len()
+        );
+    }
+    Ok(())
+}
+
+/// `ted trace summarize|diff`: read step-metrics JSONL sinks written by
+/// `ted train --step-metrics` and report percentile summaries (via the
+/// shared [`Reservoir`]) or a before/after comparison.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let sub = args.positional().first().map(|s| s.as_str()).unwrap_or("");
+    match sub {
+        "summarize" => {
+            args.reject_unknown(&["metrics"])?;
+            let path = args.get("metrics").ok_or_else(|| {
+                anyhow!(
+                    "trace summarize needs --metrics PATH \
+                     (a JSONL sink from `ted train --step-metrics`)"
+                )
+            })?;
+            let m = load_step_metrics(path)?;
+            print!("{}", summarize_metrics(path, &m));
+            Ok(())
+        }
+        "diff" => {
+            args.reject_unknown(&["before", "after"])?;
+            let bp = args.get("before").ok_or_else(|| anyhow!("trace diff needs --before PATH"))?;
+            let ap = args.get("after").ok_or_else(|| anyhow!("trace diff needs --after PATH"))?;
+            let b = load_step_metrics(bp)?;
+            let a = load_step_metrics(ap)?;
+            print!("{}", diff_metrics(bp, ap, &b, &a));
+            Ok(())
+        }
+        "" => bail!("trace needs a subcommand (summarize|diff)"),
+        other => bail!("unknown trace subcommand '{other}' (summarize|diff)"),
+    }
+}
+
+fn load_step_metrics(path: &str) -> Result<StepMetrics> {
+    let text = std::fs::read_to_string(path).map_err(|e| anyhow!("cannot read {path}: {e}"))?;
+    ted::trace::parse_step_metrics(&text)
+}
+
+/// Fill a [`Reservoir`] with one scalar per step record.
+fn step_reservoir(m: &StepMetrics, f: fn(&StepRecord) -> f64) -> Reservoir {
+    let mut r = Reservoir::new();
+    for s in &m.steps {
+        r.push(f(s));
+    }
+    r
+}
+
+const STEP_SCALARS: [(&str, fn(&StepRecord) -> f64); 7] = [
+    ("critical_s", |s| s.critical_s),
+    ("compute_s", |s| s.compute_s),
+    ("nvlink_s", |s| s.lane_s[0]),
+    ("infiniband_s", |s| s.lane_s[1]),
+    ("wan_s", |s| s.lane_s[2]),
+    ("hidden_s", |s| s.hidden_s),
+    ("loss", |s| s.loss),
+];
+
+fn summarize_metrics(path: &str, m: &StepMetrics) -> String {
+    let mut out = format!("trace summarize: {path} ({} steps)\n", m.steps.len());
+    if !m.run.is_empty() {
+        let fields: Vec<String> = m.run.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        out.push_str(&format!("run: {}\n", fields.join(" ")));
+    }
+    let mut table = Table::new(vec![
+        Column::left("metric", 14),
+        Column::right("p50", 12),
+        Column::right("p95", 12),
+        Column::right("mean", 12),
+    ]);
+    for (name, f) in STEP_SCALARS {
+        let r = step_reservoir(m, f);
+        table.row(vec![
+            name.to_string(),
+            format!("{:.6}", r.p50()),
+            format!("{:.6}", r.p95()),
+            format!("{:.6}", r.mean()),
+        ]);
+    }
+    out.push_str(&table.render());
+    if let Some(sum) = &m.summary {
+        out.push_str(&format!(
+            "summary: {} steps, bytes intra {} inter {} wan {}, comm {:.4}s compute {:.4}s \
+             critical {:.4}s, overlap eff {:.3}\n",
+            sum.steps,
+            sum.lane_bytes[0],
+            sum.lane_bytes[1],
+            sum.lane_bytes[2],
+            sum.comm_serialized_s,
+            sum.compute_s,
+            sum.critical_s,
+            sum.overlap_efficiency
+        ));
+    }
+    out
+}
+
+fn diff_metrics(bp: &str, ap: &str, b: &StepMetrics, a: &StepMetrics) -> String {
+    let mut out =
+        format!("trace diff: {bp} -> {ap} ({} vs {} steps)\n", b.steps.len(), a.steps.len());
+    let mut table = Table::new(vec![
+        Column::left("metric", 18),
+        Column::right("before", 14),
+        Column::right("after", 14),
+        Column::right("delta", 9),
+    ]);
+    let delta = |bv: f64, av: f64| {
+        if bv != 0.0 {
+            format!("{:+.1}%", (av / bv - 1.0) * 100.0)
+        } else {
+            "-".to_string()
+        }
+    };
+    for (name, f) in STEP_SCALARS {
+        let (br, ar) = (step_reservoir(b, f), step_reservoir(a, f));
+        for (stat, bv, av) in [
+            ("p50", br.p50(), ar.p50()),
+            ("p95", br.p95(), ar.p95()),
+            ("mean", br.mean(), ar.mean()),
+        ] {
+            table.row(vec![
+                format!("{name} {stat}"),
+                format!("{bv:.6}"),
+                format!("{av:.6}"),
+                delta(bv, av),
+            ]);
+        }
+    }
+    out.push_str(&table.render());
+    if let (Some(bs), Some(asum)) = (&b.summary, &a.summary) {
+        for (i, lane) in ["intra", "inter", "wan"].iter().enumerate() {
+            out.push_str(&format!(
+                "{lane} bytes: {} -> {} ({})\n",
+                bs.lane_bytes[i],
+                asum.lane_bytes[i],
+                delta(bs.lane_bytes[i] as f64, asum.lane_bytes[i] as f64)
+            ));
+        }
+    }
+    out
+}
+
 /// Resolve `--measured-compute`: load the repo-root `BENCH_smoke.json`
 /// block timings into a [`MeasuredBlockTimes`] table. A snapshot with no
 /// usable `pjrt/*(mini)` entries warns and falls back to the analytic
@@ -456,9 +777,11 @@ fn load_measured(args: &Args) -> Result<Option<MeasuredBlockTimes>> {
 
 /// `ted benchdiff`: flatten two bench snapshots to `target :: bench`
 /// mean-seconds maps and print the per-bench delta, plus benches that
-/// appear on only one side.
+/// appear on only one side. `--fail-above PCT` turns the diff into a
+/// regression gate: any bench slower by more than PCT percent makes the
+/// command exit nonzero (after printing the full table).
 fn cmd_benchdiff(args: &Args) -> Result<()> {
-    args.reject_unknown(&["before", "after"])?;
+    args.reject_unknown(&["before", "after", "fail-above"])?;
     let before = args.get("before").ok_or_else(|| anyhow!("benchdiff needs --before PATH"))?;
     let after = args.get("after").ok_or_else(|| anyhow!("benchdiff needs --after PATH"))?;
     let load = |path: &str| -> Result<BTreeMap<String, f64>> {
@@ -477,15 +800,31 @@ fn cmd_benchdiff(args: &Args) -> Result<()> {
         }
         Ok(flat)
     };
+    let fail_above = match args.get("fail-above") {
+        None => None,
+        Some(_) => {
+            let pct = args.get_f64("fail-above", 0.0)?;
+            if pct < 0.0 {
+                bail!("--fail-above must be a nonnegative percentage");
+            }
+            Some(pct)
+        }
+    };
     let b = load(before)?;
     let a = load(after)?;
     println!("benchdiff: {before} -> {after}");
     println!("{:<56} {:>12} {:>12} {:>9}", "bench", "before(s)", "after(s)", "delta");
+    let mut regressions: Vec<String> = Vec::new();
     for (name, bv) in &b {
         match a.get(name) {
             Some(av) => {
                 let delta = (av / bv - 1.0) * 100.0;
                 println!("{name:<56} {bv:>12.6} {av:>12.6} {delta:>+8.1}%");
+                if let Some(thr) = fail_above {
+                    if delta > thr {
+                        regressions.push(format!("{name}: {delta:+.1}% (> {thr}%)"));
+                    }
+                }
             }
             None => println!("{name:<56} {bv:>12.6} {:>12} {:>9}", "-", "removed"),
         }
@@ -494,6 +833,15 @@ fn cmd_benchdiff(args: &Args) -> Result<()> {
         if !b.contains_key(name) {
             println!("{name:<56} {:>12} {av:>12.6} {:>9}", "-", "added");
         }
+    }
+    if !regressions.is_empty() {
+        eprintln!("benchdiff: {} bench(es) regressed past --fail-above:", regressions.len());
+        for r in &regressions {
+            eprintln!("  FAIL {r}");
+        }
+        // exit directly: a regression is a gate failure, not a usage error,
+        // so don't let main() print the USAGE block over the table
+        std::process::exit(1);
     }
     Ok(())
 }

@@ -1,0 +1,128 @@
+//! Shared fixed-width text-table formatter.
+//!
+//! The repo's human-readable reports — [`super::render_timeline`], the
+//! collective accounting table (`StatsBoard::render`), and the CLI's
+//! comm-volume dump — used to each hand-roll their own `format!` padding.
+//! They now all build a [`Table`]: columns declare a header, a minimum
+//! width, and an alignment once, and every row is padded the same way,
+//! so the reports stay visually consistent and a formatting fix lands in
+//! one place.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// One table column: header text, minimum cell width, alignment. Cells
+/// wider than `width` print in full (the row shifts right rather than
+/// truncating data).
+#[derive(Debug, Clone)]
+pub struct Column {
+    pub header: String,
+    pub width: usize,
+    pub align: Align,
+}
+
+impl Column {
+    pub fn left(header: &str, width: usize) -> Self {
+        Column { header: header.to_string(), width, align: Align::Left }
+    }
+
+    pub fn right(header: &str, width: usize) -> Self {
+        Column { header: header.to_string(), width, align: Align::Right }
+    }
+}
+
+/// Fixed-width table: a header line plus rows, cells padded to their
+/// column width and separated by two spaces, trailing whitespace trimmed
+/// per line.
+#[derive(Debug, Clone)]
+pub struct Table {
+    columns: Vec<Column>,
+    rows: Vec<Vec<String>>,
+    /// Prefix prepended to every rendered line (e.g. `"  "` to indent a
+    /// table under a section heading).
+    indent: String,
+}
+
+impl Table {
+    pub fn new(columns: Vec<Column>) -> Self {
+        Table { columns, rows: Vec::new(), indent: String::new() }
+    }
+
+    /// Indent every rendered line by `prefix`.
+    pub fn indent(mut self, prefix: &str) -> Self {
+        self.indent = prefix.to_string();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "table row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn line(&self, cells: &[String]) -> String {
+        let mut s = self.indent.clone();
+        for (i, (cell, col)) in cells.iter().zip(&self.columns).enumerate() {
+            if i > 0 {
+                s.push_str("  ");
+            }
+            match col.align {
+                Align::Left => s.push_str(&format!("{cell:<w$}", w = col.width)),
+                Align::Right => s.push_str(&format!("{cell:>w$}", w = col.width)),
+            }
+        }
+        while s.ends_with(' ') {
+            s.pop();
+        }
+        s
+    }
+
+    /// Render the header line plus every row, one `\n`-terminated line
+    /// each.
+    pub fn render(&self) -> String {
+        let headers: Vec<String> = self.columns.iter().map(|c| c.header.clone()).collect();
+        let mut out = self.line(&headers);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&self.line(r));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pads_and_aligns() {
+        let mut t = Table::new(vec![Column::left("name", 6), Column::right("val", 5)]);
+        t.row(vec!["a".into(), "12".into()]);
+        t.row(vec!["longer-name".into(), "3".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0], "name      val");
+        assert_eq!(lines[1], "a          12");
+        // oversized cells print in full instead of truncating
+        assert!(lines[2].starts_with("longer-name"));
+        // trailing whitespace is trimmed per line
+        assert!(s.lines().all(|l| !l.ends_with(' ')));
+    }
+
+    #[test]
+    fn indents_every_line() {
+        let mut t = Table::new(vec![Column::left("k", 3)]).indent("  ");
+        t.row(vec!["v".into()]);
+        for l in t.render().lines() {
+            assert!(l.starts_with("  "));
+        }
+    }
+}

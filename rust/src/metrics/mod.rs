@@ -1,10 +1,16 @@
-//! Metrics: timers, running stats, CSV logging, and the micro-bench harness
-//! used by the `cargo bench` targets (criterion is not in the vendored
-//! crate set; `bench::run` covers the warmup/iterate/report loop we need).
+//! Metrics: timers, running stats, percentile reservoirs, CSV logging,
+//! the shared text-table formatter ([`format`]), and the micro-bench
+//! harness used by the `cargo bench` targets (criterion is not in the
+//! vendored crate set; `bench::run` covers the warmup/iterate/report
+//! loop we need).
+
+pub mod format;
 
 use std::fmt::Write as _;
 use std::io::Write as _;
 use std::time::{Duration, Instant};
+
+use format::{Column, Table};
 
 /// Simple stopwatch accumulating named phase durations.
 #[derive(Debug, Default)]
@@ -74,14 +80,21 @@ pub fn render_timeline(
     let serialized = comm_intra_s + comm_inter_s + comm_wan_s;
     let hidden = compute_s + serialized - critical_s;
     let pct = |x: f64| if critical_s > 0.0 { 100.0 * x / critical_s } else { 0.0 };
-    let mut out = String::new();
-    let _ = writeln!(out, "lane        serialized      vs critical");
-    let _ = writeln!(out, "compute     {compute_s:>9.4}s  {:>9.1}%", pct(compute_s));
-    let _ = writeln!(out, "nvlink      {comm_intra_s:>9.4}s  {:>9.1}%", pct(comm_intra_s));
-    let _ = writeln!(out, "infiniband  {comm_inter_s:>9.4}s  {:>9.1}%", pct(comm_inter_s));
+    let mut table = Table::new(vec![
+        Column::left("lane", 10),
+        Column::right("serialized", 10),
+        Column::right("vs critical", 11),
+    ]);
+    let mut lane = |name: &str, s: f64| {
+        table.row(vec![name.to_string(), format!("{s:.4}s"), format!("{:.1}%", pct(s))]);
+    };
+    lane("compute", compute_s);
+    lane("nvlink", comm_intra_s);
+    lane("infiniband", comm_inter_s);
     if comm_wan_s > 0.0 {
-        let _ = writeln!(out, "wan         {comm_wan_s:>9.4}s  {:>9.1}%", pct(comm_wan_s));
+        lane("wan", comm_wan_s);
     }
+    let mut out = table.render();
     let _ = writeln!(
         out,
         "critical path {critical_s:.4}s ({hidden:.4}s of comm hidden; fitted overlap \
@@ -90,7 +103,8 @@ pub fn render_timeline(
     out
 }
 
-/// Running mean/min/max.
+/// Running mean/min/max — constant memory, no percentiles. When a
+/// report needs p50/p95 as well, use [`Reservoir`] (O(n) storage).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Running {
     pub n: u64,
@@ -117,6 +131,83 @@ impl Running {
             0.0
         } else {
             self.sum / self.n as f64
+        }
+    }
+}
+
+/// Exact-sample percentile reservoir: stores every pushed value and
+/// answers nearest-rank percentiles (`index = round((n-1) * q)` over the
+/// sorted samples — the convention the planner's `StepDist` has always
+/// reported). Every query on an empty reservoir returns 0.0. Pay the
+/// O(n) storage only where percentiles are actually reported; use
+/// [`Running`] for plain streaming mean/min/max.
+#[derive(Debug, Clone, Default)]
+pub struct Reservoir {
+    samples: Vec<f64>,
+}
+
+impl Reservoir {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// The raw samples, in push order.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Nearest-rank percentile, `q` in `[0, 1]`; 0.0 when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(0.95)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
         }
     }
 }
@@ -323,6 +414,37 @@ mod tests {
         let z = render_timeline(0.0, 0.0, 0.0, 0.0, 0.0, 0.0);
         assert!(!z.contains("NaN") && !z.contains("inf"), "{z}");
         assert!(z.contains("0.0%"));
+    }
+
+    #[test]
+    fn reservoir_percentiles_nearest_rank() {
+        let mut r = Reservoir::new();
+        // push out of order: percentile must sort internally
+        for v in [5.0, 1.0, 4.0, 2.0, 3.0] {
+            r.push(v);
+        }
+        assert_eq!(r.len(), 5);
+        // nearest rank over n=5: idx = round(4 * q)
+        assert_eq!(r.p50(), 3.0); // round(2.0) = 2
+        assert_eq!(r.p95(), 5.0); // round(3.8) = 4
+        assert_eq!(r.percentile(0.0), 1.0);
+        assert_eq!(r.percentile(1.0), 5.0);
+        assert_eq!(r.mean(), 3.0);
+        assert_eq!(r.min(), 1.0);
+        assert_eq!(r.max(), 5.0);
+        // push order preserved for callers that want the raw stream
+        assert_eq!(r.samples()[0], 5.0);
+    }
+
+    #[test]
+    fn reservoir_empty_is_all_zero() {
+        let r = Reservoir::new();
+        assert!(r.is_empty());
+        assert_eq!(r.p50(), 0.0);
+        assert_eq!(r.p95(), 0.0);
+        assert_eq!(r.mean(), 0.0);
+        assert_eq!(r.min(), 0.0);
+        assert_eq!(r.max(), 0.0);
     }
 
     #[test]

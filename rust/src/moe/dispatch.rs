@@ -170,6 +170,7 @@ fn pipelined_a2a_gather(
         early_from[*p] = true;
         early_concat.extend_from_slice(rows);
     }
+    ctx.comm.set_op_label("dtd all_gather early");
     let pg1 = ctx.comm.issue_all_gather(
         ctx.tp_gid,
         ctx.tp_members,
@@ -190,6 +191,7 @@ fn pipelined_a2a_gather(
             late_concat.extend_from_slice(payload);
         }
     }
+    ctx.comm.set_op_label("dtd all_gather late");
     let pg2 = ctx.comm.issue_all_gather(
         ctx.tp_gid,
         ctx.tp_members,
@@ -310,8 +312,10 @@ pub fn dispatch(
     // the direct receiver answers on the return path).
     if ctx.chunked {
         let order = chunk_order(dec, local_experts, n_members);
+        let hot = if order.windows(2).any(|w| w[0] > w[1]) { " hot-first" } else { "" };
         let sends: Vec<Vec<Vec<f32>>> =
             order.iter().map(|&c| std::mem::take(&mut send_chunks[c])).collect();
+        ctx.comm.set_op_label(format!("moe dispatch a2a{hot}"));
         let pending = ctx.comm.issue_all_to_all_chunked(ctx.ep_gid, ctx.ep_members, sends);
         let n_pend = pending.len();
         let mut mine: Vec<f32> = Vec::new();
@@ -328,10 +332,11 @@ pub fn dispatch(
             // expert order[ci]'s FFN prices onto the compute lane here,
             // hiding chunk ci+1's flight (the trainer passes the unit)
             if ci + 1 < n_pend && ctx.chunk_compute_s > 0.0 {
-                ctx.comm.advance_compute(ctx.chunk_compute_s);
+                ctx.comm.advance_compute_labeled(ctx.chunk_compute_s, "expert-ffn chunk");
             }
         }
         if ctx.dtd && ctx.tp() > 1 {
+            ctx.comm.set_op_label("dtd all_gather");
             let gathered = ctx.comm.all_gather(
                 ctx.tp_gid,
                 ctx.tp_members,
@@ -361,7 +366,9 @@ pub fn dispatch(
                 None => span_send[p] = payload,
             }
         }
+        ctx.comm.set_op_label("moe dispatch a2a dc-local");
         let pend_dc = ctx.comm.issue_all_to_all(dc_gid, dc_members, local_send);
+        ctx.comm.set_op_label("moe dispatch a2a dc-cross");
         let pend_span = ctx.comm.issue_all_to_all(ctx.ep_gid, ctx.ep_members, span_send);
         let local_recv = ctx.comm.wait_all_to_all(pend_dc);
         let span_recv = ctx.comm.wait_all_to_all(pend_span);
@@ -381,6 +388,7 @@ pub fn dispatch(
             }
         }
         if need_mine {
+            ctx.comm.set_op_label("dtd all_gather");
             let gathered = ctx.comm.all_gather(
                 ctx.tp_gid,
                 ctx.tp_members,
@@ -395,6 +403,7 @@ pub fn dispatch(
         }
     } else if ctx.pipelined() {
         let send = send_chunks.pop().expect("single unchunked payload set");
+        ctx.comm.set_op_label("moe dispatch a2a");
         let gathered_others = pipelined_a2a_gather(ctx, send, |pos, payload| {
             scatter(payload, Some(pos), &mut buffers, &mut origin_of_slot)
         });
@@ -403,6 +412,7 @@ pub fn dispatch(
         }
     } else {
         let send = send_chunks.pop().expect("single unchunked payload set");
+        ctx.comm.set_op_label("moe dispatch a2a");
         let received = ctx.comm.all_to_all(ctx.ep_gid, ctx.ep_members, send);
         for (pos, payload) in received.iter().enumerate() {
             scatter(payload, Some(pos), &mut buffers, &mut origin_of_slot);
@@ -412,6 +422,7 @@ pub fn dispatch(
             for payload in &received {
                 mine.extend_from_slice(payload);
             }
+            ctx.comm.set_op_label("dtd all_gather");
             let gathered = ctx.comm.all_gather(
                 ctx.tp_gid,
                 ctx.tp_members,
@@ -475,8 +486,10 @@ pub fn return_to_origin(
     let mut all_rows: Vec<f32> = Vec::new();
     if ctx.chunked {
         let order = chunk_order(dec, local_experts, n_members);
+        let hot = if order.windows(2).any(|w| w[0] > w[1]) { " hot-first" } else { "" };
         let sends: Vec<Vec<Vec<f32>>> =
             order.iter().map(|&c| std::mem::take(&mut send_chunks[c])).collect();
+        ctx.comm.set_op_label(format!("moe return a2a{hot}"));
         let pending = ctx.comm.issue_all_to_all_chunked(ctx.ep_gid, ctx.ep_members, sends);
         let n_pend = pending.len();
         for (ci, pend) in pending.into_iter().enumerate() {
@@ -487,10 +500,11 @@ pub fn return_to_origin(
             // under delayed wgrad the trainer prices one expert's
             // weight-gradient unit here, hiding chunk ci+1's flight
             if ci + 1 < n_pend && ctx.chunk_compute_s > 0.0 {
-                ctx.comm.advance_compute(ctx.chunk_compute_s);
+                ctx.comm.advance_compute_labeled(ctx.chunk_compute_s, "wgrad chunk");
             }
         }
         if ctx.dtd && ctx.tp() > 1 {
+            ctx.comm.set_op_label("dtd all_gather");
             let gathered = ctx.comm.all_gather(
                 ctx.tp_gid,
                 ctx.tp_members,
@@ -515,7 +529,9 @@ pub fn return_to_origin(
                 None => span_send[p] = payload,
             }
         }
+        ctx.comm.set_op_label("moe return a2a dc-local");
         let pend_dc = ctx.comm.issue_all_to_all(dc_gid, dc_members, local_send);
+        ctx.comm.set_op_label("moe return a2a dc-cross");
         let pend_span = ctx.comm.issue_all_to_all(ctx.ep_gid, ctx.ep_members, span_send);
         for payload in ctx.comm.wait_all_to_all(pend_dc).iter() {
             all_rows.extend_from_slice(payload);
@@ -524,6 +540,7 @@ pub fn return_to_origin(
             all_rows.extend_from_slice(payload);
         }
         if ctx.dtd && ctx.tp() > 1 {
+            ctx.comm.set_op_label("dtd all_gather");
             let gathered = ctx.comm.all_gather(
                 ctx.tp_gid,
                 ctx.tp_members,
@@ -536,6 +553,7 @@ pub fn return_to_origin(
         }
     } else if ctx.pipelined() {
         let send = send_chunks.pop().expect("single unchunked payload set");
+        ctx.comm.set_op_label("moe return a2a");
         let gathered_others = pipelined_a2a_gather(ctx, send, |_pos, payload| {
             all_rows.extend_from_slice(payload)
         });
@@ -545,11 +563,13 @@ pub fn return_to_origin(
         }
     } else {
         let send = send_chunks.pop().expect("single unchunked payload set");
+        ctx.comm.set_op_label("moe return a2a");
         let received = ctx.comm.all_to_all(ctx.ep_gid, ctx.ep_members, send);
         for payload in &received {
             all_rows.extend_from_slice(payload);
         }
         if ctx.dtd && ctx.tp() > 1 {
+            ctx.comm.set_op_label("dtd all_gather");
             let gathered = ctx.comm.all_gather(
                 ctx.tp_gid,
                 ctx.tp_members,

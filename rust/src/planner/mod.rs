@@ -453,15 +453,6 @@ fn divisors_up_to(n: usize, cap: usize) -> Vec<usize> {
     (1..=cap.min(n)).filter(|d| n % d == 0).collect()
 }
 
-/// Nearest-rank percentile of an ascending-sorted sample vector.
-fn percentile(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
-}
-
 /// Run the search. See the module docs for the pruning order.
 pub fn plan(req: &PlanRequest) -> PlanReport {
     let mut plans: Vec<Plan> = Vec::new();
@@ -605,18 +596,14 @@ pub fn plan(req: &PlanRequest) -> PlanReport {
                                         let knobs = PlanKnobs { overlap: ov, ..point };
                                         let eff = if ov { req.overlap_efficiency } else { 0.0 };
                                         let step_dist = (!sampled.is_empty()).then(|| {
-                                            let mut totals: Vec<f64> = sampled
-                                                .iter()
-                                                .map(|b| overlap_from_base(*b, eff).total())
-                                                .collect();
-                                            totals.sort_by(|a, b| {
-                                                a.partial_cmp(b)
-                                                    .unwrap_or(std::cmp::Ordering::Equal)
-                                            });
+                                            let mut res = crate::metrics::Reservoir::new();
+                                            for b in &sampled {
+                                                res.push(overlap_from_base(*b, eff).total());
+                                            }
                                             StepDist {
-                                                samples: totals.len(),
-                                                p50_s: percentile(&totals, 0.50),
-                                                p95_s: percentile(&totals, 0.95),
+                                                samples: res.len(),
+                                                p50_s: res.p50(),
+                                                p95_s: res.p95(),
                                             }
                                         });
                                         plans.push(Plan {

@@ -26,7 +26,7 @@
 
 pub mod replay;
 
-pub use replay::{replay_scenario, MeasuredPlanTime};
+pub use replay::{replay_scenario, replay_scenario_traced, MeasuredPlanTime};
 
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
@@ -135,11 +135,23 @@ pub struct RunConfig {
     pub eval_micro: usize,
     /// print progress lines from rank 0
     pub verbose: bool,
+    /// span tracer attached to the run's rendezvous boards; `None` (the
+    /// default) is the bitwise-identical untraced path. When set, the
+    /// run ends with the bitwise [`crate::trace::Tracer::crosscheck`]
+    /// against `CommStats` / `TimelineBoard` — a mismatch is an error.
+    pub tracer: Option<Arc<crate::trace::Tracer>>,
 }
 
 impl Default for RunConfig {
     fn default() -> Self {
-        RunConfig { steps: 10, micro_per_step: 1, eval_every: 0, eval_micro: 2, verbose: false }
+        RunConfig {
+            steps: 10,
+            micro_per_step: 1,
+            eval_every: 0,
+            eval_micro: 2,
+            verbose: false,
+            tracer: None,
+        }
     }
 }
 
@@ -159,6 +171,9 @@ pub fn train(
     // node partitioning produce a ragged layout mid-run
     opts.validate_topology(world)?;
     let rez = Rendezvous::new(world);
+    if run.tracer.is_some() {
+        rez.set_tracer(run.tracer.clone());
+    }
     let t0 = Instant::now();
 
     let results: Vec<Result<RankOutput>> = std::thread::scope(|scope| {
@@ -191,6 +206,11 @@ pub fn train(
         }
     }
     let out = rank0.expect("world >= 1");
+
+    if let Some(tr) = &run.tracer {
+        tr.crosscheck(&rez.stats, &rez.timeline, world)
+            .map_err(|e| anyhow!("trace crosscheck failed: {e}"))?;
+    }
 
     let mut comm_bytes = [(CommKind::AllReduce, 0u64); 6];
     let mut comm_calls = [(CommKind::AllReduce, 0u64); 6];

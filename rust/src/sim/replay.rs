@@ -68,6 +68,22 @@ pub fn replay_scenario(
     gpus_per_node: usize,
     overlap: bool,
 ) -> Result<MeasuredPlanTime> {
+    replay_scenario_traced(s, gpus_per_node, overlap, None)
+}
+
+/// [`replay_scenario`] with an optional span [`Tracer`] attached to the
+/// rendezvous boards for the duration of the replay. When a tracer is
+/// given, every collective issue/wait and compute slice lands on it as a
+/// per-rank span, and the replay finishes with the bitwise
+/// [`Tracer::crosscheck`] against `CommStats` / `TimelineBoard` — a
+/// mismatch is an error, not a warning. `None` is the bitwise-identical
+/// untraced path (`replay_scenario` delegates here).
+pub fn replay_scenario_traced(
+    s: &Scenario,
+    gpus_per_node: usize,
+    overlap: bool,
+    tracer: Option<Arc<crate::trace::Tracer>>,
+) -> Result<MeasuredPlanTime> {
     let topo = Topology::new(s.par)?;
     let world = s.par.world;
     // `comm_ops` carries the scenario's traffic skew in the expert a2a
@@ -95,6 +111,9 @@ pub fn replay_scenario(
     };
 
     let rez = Rendezvous::new(world);
+    if tracer.is_some() {
+        rez.set_tracer(tracer.clone());
+    }
     std::thread::scope(|scope| {
         for rank in 0..world {
             let rez = Arc::clone(&rez);
@@ -120,6 +139,11 @@ pub fn replay_scenario(
             });
         }
     });
+
+    if let Some(tr) = &tracer {
+        tr.crosscheck(&rez.stats, &rez.timeline, world)
+            .map_err(|e| anyhow::anyhow!("trace crosscheck failed: {e}"))?;
+    }
 
     let tl = rez.timeline.get(0);
     Ok(MeasuredPlanTime {
@@ -158,7 +182,7 @@ fn run_phase(
                 pending.push(issue_op(c, groups, op, gpus_per_dc));
             }
         }
-        c.advance_compute(compute_s);
+        c.advance_compute_labeled(compute_s, "replay compute");
         for p in pending {
             match p {
                 PendingOp::Ar(h, mut t) => c.wait_all_reduce(h, &mut t),
@@ -177,7 +201,19 @@ fn run_phase(
                 blocking_op(c, groups, op, gpus_per_dc);
             }
         }
-        c.advance_compute(compute_s);
+        c.advance_compute_labeled(compute_s, "replay compute");
+    }
+}
+
+/// Short group tag for replay span labels.
+fn group_tag(g: &crate::perfmodel::batch_time::OpGroup) -> &'static str {
+    use crate::perfmodel::batch_time::OpGroup;
+    match g {
+        OpGroup::Tensor => "tp",
+        OpGroup::Expert => "ep",
+        OpGroup::ExpertDc => "ep-dc",
+        OpGroup::DataExpert => "dp-exp",
+        OpGroup::DataNonExpert => "dp-nonexp",
     }
 }
 
@@ -188,6 +224,7 @@ fn issue_op(
     gpus_per_dc: usize,
 ) -> PendingOp {
     let (gid, members) = resolve(groups, op, gpus_per_dc);
+    c.set_op_label(format!("{} {}", op.kind.name(), group_tag(&op.group)));
     match op.kind {
         CommKind::AllReduce => {
             let len = op_floats(op.bytes);
@@ -210,6 +247,7 @@ fn issue_op(
 
 fn blocking_op(c: &mut Communicator, groups: &RankGroups, op: &CommOp, gpus_per_dc: usize) {
     let (gid, members) = resolve(groups, op, gpus_per_dc);
+    c.set_op_label(format!("{} {}", op.kind.name(), group_tag(&op.group)));
     match op.kind {
         CommKind::AllReduce => {
             let len = op_floats(op.bytes);

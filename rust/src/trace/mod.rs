@@ -1,0 +1,570 @@
+//! Per-rank span tracing with Chrome-Trace (Perfetto) export, a step-metrics
+//! JSONL sink, and the span→accounting cross-check.
+//!
+//! The [`Tracer`] is an optional observer attached to a
+//! [`Rendezvous`](crate::collectives::Rendezvous) (which installs it into its
+//! [`StatsBoard`] and [`TimelineBoard`]). Once attached, the two accounting
+//! choke points emit events as a side effect of the bookkeeping they already
+//! do:
+//!
+//! * every priced comm phase scheduled by `TimelineBoard::schedule_lanes`
+//!   becomes one [`Span`] on the lane of the fabric tier it occupies
+//!   (lane 0 NVLink, 1 InfiniBand, 2 WAN), carrying the op label the
+//!   communicator supplied (`Communicator::set_op_label`: kind, chunk
+//!   index, hot-first order, engine phase) and the op's payload bytes;
+//! * every priced compute block (`TimelineBoard::advance_compute`) becomes
+//!   a span on the compute lane ([`COMPUTE_LANE`]) — expert FFN windows,
+//!   wgrad-delay segments, attention blocks, optimizer phases;
+//! * every `StatsBoard::record_lanes` call becomes a [`ByteEvent`]
+//!   mirroring the per-tier byte/message deltas;
+//! * every rendezvous `wait_full` records a **real-time** (wall clock,
+//!   not virtual) span on [`RENDEZVOUS_LANE`] measuring how long the rank
+//!   blocked on the shard condvar — the lock-wait view that surfaces
+//!   stragglers and near-deadlocks.
+//!
+//! Because spans are emitted from the same code paths that maintain the
+//! sums, folding them back is an exact identity, not an approximation:
+//! [`Tracer::crosscheck`] re-derives `RankTimeline::lane_serialized_s` /
+//! `compute_s` (bitwise — the additions replay in recorded order) and
+//! `CommStats::{lane_bytes, lane_msgs, calls}` (exact integers) from the
+//! event log alone and fails loudly on any divergence. Tracing is thereby a
+//! second, independent witness of the measured==analytic accounting.
+//!
+//! With no tracer attached every hook is a no-op behind an `Option` check:
+//! the schedule math is untouched, so a traced run and an untraced run are
+//! bitwise identical (pinned in `rust/tests/trace_crosscheck.rs`).
+//!
+//! [`Tracer::chrome_trace_json`] renders the log as Chrome Trace Format
+//! (`{"traceEvents": [...]}`): one Perfetto process per rank, one named
+//! thread per lane (`compute` / `nvlink` / `infiniband` / `wan` /
+//! `rendezvous`), complete (`"ph": "X"`) events with microsecond
+//! timestamps. `ted train|plan-replay --trace out.json` writes it.
+//!
+//! The step-metrics sink ([`step_metrics_jsonl`]) is the scalar companion:
+//! one JSON object per line — a `run` header, one `step` record per
+//! training step (loss, per-lane serialized seconds, compute, critical
+//! path, hidden comm), and a `summary` footer (lane byte totals, fitted
+//! overlap efficiency) — consumed by `ted trace summarize|diff`.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::collectives::{CommKind, StatsBoard, TimelineBoard, MAX_TIERS};
+use crate::util::json::Json;
+
+/// Lane index (`Span::lane`) for priced compute blocks; lanes
+/// `0..MAX_TIERS` are the fabric tiers.
+pub const COMPUTE_LANE: usize = MAX_TIERS;
+
+/// Lane index for real-time rendezvous lock-wait spans. These measure wall
+/// clock, not virtual time, and are excluded from [`Tracer::crosscheck`].
+pub const RENDEZVOUS_LANE: usize = MAX_TIERS + 1;
+
+/// Human track name per lane, aligned with the fabric tiers.
+pub fn lane_name(lane: usize) -> &'static str {
+    match lane {
+        0 => "nvlink",
+        1 => "infiniband",
+        2 => "wan",
+        COMPUTE_LANE => "compute",
+        RENDEZVOUS_LANE => "rendezvous",
+        _ => "lane?",
+    }
+}
+
+/// One traced interval on a rank's lane. `start_s`/`dur_s` are virtual
+/// timeline seconds for comm/compute lanes and wall-clock seconds since
+/// tracer creation for [`RENDEZVOUS_LANE`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub rank: usize,
+    pub lane: usize,
+    pub start_s: f64,
+    pub dur_s: f64,
+    pub name: String,
+    /// Payload bytes of the op this span belongs to (0 for compute and
+    /// rendezvous spans).
+    pub bytes: u64,
+}
+
+/// Mirror of one `StatsBoard::record_lanes` call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ByteEvent {
+    pub rank: usize,
+    pub kind: CommKind,
+    pub lane_bytes: [u64; MAX_TIERS],
+    pub lane_msgs: [u64; MAX_TIERS],
+}
+
+#[derive(Debug, Default)]
+struct TracerInner {
+    spans: Vec<Span>,
+    bytes: Vec<ByteEvent>,
+}
+
+/// Low-overhead append-only event recorder shared by every rank thread.
+/// All recording goes through one mutex-guarded push; readers clone the
+/// log out.
+#[derive(Debug)]
+pub struct Tracer {
+    inner: Mutex<TracerInner>,
+    t0: Instant,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer { inner: Mutex::new(TracerInner::default()), t0: Instant::now() }
+    }
+
+    /// Wall-clock seconds since tracer creation (the timebase of
+    /// [`RENDEZVOUS_LANE`] spans).
+    pub fn now_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    pub fn record_span(
+        &self,
+        rank: usize,
+        lane: usize,
+        start_s: f64,
+        dur_s: f64,
+        name: &str,
+        bytes: u64,
+    ) {
+        let span = Span { rank, lane, start_s, dur_s, name: name.to_string(), bytes };
+        self.inner.lock().unwrap().spans.push(span);
+    }
+
+    pub fn record_bytes(
+        &self,
+        rank: usize,
+        kind: CommKind,
+        lane_bytes: [u64; MAX_TIERS],
+        lane_msgs: [u64; MAX_TIERS],
+    ) {
+        let ev = ByteEvent { rank, kind, lane_bytes, lane_msgs };
+        self.inner.lock().unwrap().bytes.push(ev);
+    }
+
+    /// Snapshot of all recorded spans (per-rank order is emission order;
+    /// ranks interleave by thread scheduling).
+    pub fn spans(&self) -> Vec<Span> {
+        self.inner.lock().unwrap().spans.clone()
+    }
+
+    /// Snapshot of all recorded byte events.
+    pub fn byte_events(&self) -> Vec<ByteEvent> {
+        self.inner.lock().unwrap().bytes.clone()
+    }
+
+    /// Fold every virtual-time span back into per-rank per-lane sums, in
+    /// recorded order, and compare against the boards:
+    ///
+    /// * comm-lane span durations must reproduce
+    ///   `RankTimeline::lane_serialized_s[t]` **bitwise** (the board adds
+    ///   the same f64 durations in the same order; phases with zero
+    ///   duration add exactly `0.0`, the f64 additive identity for the
+    ///   non-negative sums involved, so skipping them preserves bits);
+    /// * compute-lane span durations must reproduce
+    ///   `RankTimeline::compute_s` bitwise;
+    /// * [`ByteEvent`] sums must reproduce `CommStats::{lane_bytes,
+    ///   lane_msgs}` and the event count per (rank, kind) must equal
+    ///   `CommStats::calls` exactly.
+    ///
+    /// [`RENDEZVOUS_LANE`] spans are wall-clock measurements and are not
+    /// part of the identity.
+    pub fn crosscheck(
+        &self,
+        stats: &StatsBoard,
+        timeline: &TimelineBoard,
+        world: usize,
+    ) -> Result<(), String> {
+        let g = self.inner.lock().unwrap();
+        let mut lane_sums = vec![[0.0f64; MAX_TIERS]; world];
+        let mut compute_sums = vec![0.0f64; world];
+        for s in &g.spans {
+            if s.rank >= world {
+                return Err(format!("span rank {} out of world {}", s.rank, world));
+            }
+            if s.lane < MAX_TIERS {
+                lane_sums[s.rank][s.lane] += s.dur_s;
+            } else if s.lane == COMPUTE_LANE {
+                compute_sums[s.rank] += s.dur_s;
+            }
+        }
+        let mut byte_sums: BTreeMap<(usize, usize), ([u64; MAX_TIERS], [u64; MAX_TIERS], u64)> =
+            BTreeMap::new();
+        for ev in &g.bytes {
+            let cell = byte_sums.entry((ev.rank, ev.kind.index())).or_default();
+            for t in 0..MAX_TIERS {
+                cell.0[t] += ev.lane_bytes[t];
+                cell.1[t] += ev.lane_msgs[t];
+            }
+            cell.2 += 1;
+        }
+        drop(g);
+
+        for rank in 0..world {
+            let tl = timeline.get(rank);
+            for t in 0..MAX_TIERS {
+                if lane_sums[rank][t].to_bits() != tl.lane_serialized_s[t].to_bits() {
+                    return Err(format!(
+                        "rank {rank} lane {} ({}): span sum {:.9e} != timeline serialized {:.9e}",
+                        t,
+                        lane_name(t),
+                        lane_sums[rank][t],
+                        tl.lane_serialized_s[t]
+                    ));
+                }
+            }
+            if compute_sums[rank].to_bits() != tl.compute_s.to_bits() {
+                return Err(format!(
+                    "rank {rank} compute: span sum {:.9e} != timeline compute {:.9e}",
+                    compute_sums[rank], tl.compute_s
+                ));
+            }
+            let row = stats.rank_stats(rank);
+            for (k, cell) in row.iter().enumerate() {
+                let (bytes, msgs, calls) =
+                    byte_sums.get(&(rank, k)).copied().unwrap_or_default();
+                if bytes != cell.lane_bytes || msgs != cell.lane_msgs || calls != cell.calls {
+                    return Err(format!(
+                        "rank {rank} kind {k}: byte-event sums {:?}/{:?}/{} != stats {:?}/{:?}/{}",
+                        bytes, msgs, calls, cell.lane_bytes, cell.lane_msgs, cell.calls
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Render the event log as Chrome Trace Format JSON
+    /// (Perfetto-loadable): one process per rank (`pid` = rank), one named
+    /// thread per lane (`tid` = lane), complete (`"ph": "X"`) events with
+    /// microsecond `ts`/`dur`.
+    pub fn chrome_trace_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let mut events: Vec<Json> = Vec::new();
+        let mut tracks: BTreeMap<(usize, usize), ()> = BTreeMap::new();
+        for s in &g.spans {
+            tracks.entry((s.rank, s.lane)).or_default();
+        }
+        let mut ranks: BTreeMap<usize, ()> = BTreeMap::new();
+        for &(rank, _) in tracks.keys() {
+            ranks.entry(rank).or_default();
+        }
+        for (&rank, _) in &ranks {
+            events.push(Json::obj([
+                ("name", Json::str("process_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::Num(rank as f64)),
+                ("tid", Json::Num(0.0)),
+                ("args", Json::obj([("name", Json::str(format!("rank {rank}")))])),
+            ]));
+        }
+        for (&(rank, lane), _) in &tracks {
+            events.push(Json::obj([
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::Num(rank as f64)),
+                ("tid", Json::Num(lane as f64)),
+                ("args", Json::obj([("name", Json::str(lane_name(lane)))])),
+            ]));
+        }
+        for s in &g.spans {
+            let mut args = vec![("lane".to_string(), Json::str(lane_name(s.lane)))];
+            if s.bytes > 0 {
+                args.push(("bytes".to_string(), Json::Num(s.bytes as f64)));
+            }
+            events.push(Json::obj([
+                ("name", Json::str(s.name.clone())),
+                ("ph", Json::str("X")),
+                ("ts", Json::Num(s.start_s * 1e6)),
+                ("dur", Json::Num(s.dur_s * 1e6)),
+                ("pid", Json::Num(s.rank as f64)),
+                ("tid", Json::Num(s.lane as f64)),
+                ("args", Json::obj(args)),
+            ]));
+        }
+        Json::obj([
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::str("ms")),
+        ])
+    }
+
+    /// Write the Chrome trace to a file.
+    pub fn write_chrome_trace(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.chrome_trace_json().render())
+            .map_err(|e| anyhow::anyhow!("writing trace {path}: {e}"))
+    }
+}
+
+// ---------------------------------------------------------------------
+// step-metrics JSONL sink
+// ---------------------------------------------------------------------
+
+/// One training step's scalar metrics, as written to / read from the
+/// step-metrics JSONL sink.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    /// Per-tier serialized comm seconds for this step.
+    pub lane_s: [f64; MAX_TIERS],
+    pub compute_s: f64,
+    pub critical_s: f64,
+    /// Comm seconds hidden behind compute/other lanes this step.
+    pub hidden_s: f64,
+}
+
+impl StepRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("kind", Json::str("step")),
+            ("step", Json::Num(self.step as f64)),
+            ("loss", Json::Num(self.loss)),
+            ("intra_s", Json::Num(self.lane_s[0])),
+            ("inter_s", Json::Num(self.lane_s[1])),
+            ("wan_s", Json::Num(self.lane_s[2])),
+            ("compute_s", Json::Num(self.compute_s)),
+            ("critical_s", Json::Num(self.critical_s)),
+            ("hidden_s", Json::Num(self.hidden_s)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<StepRecord> {
+        let f = |k: &str| j.get(k).and_then(Json::as_f64);
+        Some(StepRecord {
+            step: j.get("step")?.as_usize()?,
+            loss: f("loss")?,
+            lane_s: [f("intra_s")?, f("inter_s")?, f("wan_s")?],
+            compute_s: f("compute_s")?,
+            critical_s: f("critical_s")?,
+            hidden_s: f("hidden_s")?,
+        })
+    }
+}
+
+/// Run-level summary written as the JSONL footer.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RunSummary {
+    pub steps: usize,
+    /// Total payload bytes per fabric tier, summed over ranks and kinds.
+    pub lane_bytes: [u64; MAX_TIERS],
+    pub comm_serialized_s: f64,
+    pub compute_s: f64,
+    pub critical_s: f64,
+    pub overlap_efficiency: f64,
+}
+
+impl RunSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("kind", Json::str("summary")),
+            ("steps", Json::Num(self.steps as f64)),
+            ("intra_bytes", Json::Num(self.lane_bytes[0] as f64)),
+            ("inter_bytes", Json::Num(self.lane_bytes[1] as f64)),
+            ("wan_bytes", Json::Num(self.lane_bytes[2] as f64)),
+            ("comm_serialized_s", Json::Num(self.comm_serialized_s)),
+            ("compute_s", Json::Num(self.compute_s)),
+            ("critical_s", Json::Num(self.critical_s)),
+            ("overlap_efficiency", Json::Num(self.overlap_efficiency)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<RunSummary> {
+        let f = |k: &str| j.get(k).and_then(Json::as_f64);
+        Some(RunSummary {
+            steps: j.get("steps")?.as_usize()?,
+            lane_bytes: [
+                f("intra_bytes")? as u64,
+                f("inter_bytes")? as u64,
+                f("wan_bytes")? as u64,
+            ],
+            comm_serialized_s: f("comm_serialized_s")?,
+            compute_s: f("compute_s")?,
+            critical_s: f("critical_s")?,
+            overlap_efficiency: f("overlap_efficiency")?,
+        })
+    }
+}
+
+/// A parsed step-metrics file: the run descriptor line, the per-step
+/// records, and the summary footer.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StepMetrics {
+    pub run: BTreeMap<String, String>,
+    pub steps: Vec<StepRecord>,
+    pub summary: Option<RunSummary>,
+}
+
+/// Serialize a run into JSONL: a `run` header (free-form string fields), a
+/// `step` line per record, and a `summary` footer.
+pub fn step_metrics_jsonl(
+    run: &[(&str, String)],
+    steps: &[StepRecord],
+    summary: &RunSummary,
+) -> String {
+    let mut out = String::new();
+    let mut header: Vec<(String, Json)> = vec![("kind".into(), Json::str("run"))];
+    for (k, v) in run {
+        header.push(((*k).to_string(), Json::str(v.clone())));
+    }
+    out.push_str(&Json::obj(header).render());
+    out.push('\n');
+    for s in steps {
+        out.push_str(&s.to_json().render());
+        out.push('\n');
+    }
+    out.push_str(&summary.to_json().render());
+    out.push('\n');
+    out
+}
+
+/// Parse a step-metrics JSONL document (ignores unknown line kinds so the
+/// format can grow).
+pub fn parse_step_metrics(text: &str) -> anyhow::Result<StepMetrics> {
+    let mut m = StepMetrics::default();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("step-metrics line {}: {e}", i + 1))?;
+        match j.get("kind").and_then(Json::as_str) {
+            Some("run") => {
+                if let Some(obj) = j.as_object() {
+                    for (k, v) in obj {
+                        if k != "kind" {
+                            if let Some(s) = v.as_str() {
+                                m.run.insert(k.clone(), s.to_string());
+                            }
+                        }
+                    }
+                }
+            }
+            Some("step") => {
+                let rec = StepRecord::from_json(&j)
+                    .ok_or_else(|| anyhow::anyhow!("malformed step line {}", i + 1))?;
+                m.steps.push(rec);
+            }
+            Some("summary") => {
+                m.summary = RunSummary::from_json(&j);
+            }
+            _ => {}
+        }
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crosscheck_passes_on_mirrored_boards() {
+        let stats = StatsBoard::new(2);
+        let timeline = TimelineBoard::new(2);
+        let tracer = std::sync::Arc::new(Tracer::new());
+        stats.set_tracer(Some(tracer.clone()));
+        timeline.set_tracer(Some(tracer.clone()));
+
+        timeline.schedule_lanes_labeled(0, &[(0, 0.5), (1, 1.5)], true, "a2a", 64);
+        timeline.schedule_lanes_labeled(1, &[(2, 2.0)], false, "wan hop", 32);
+        timeline.advance_compute_labeled(0, 0.25, "ffn");
+        timeline.advance_compute(1, 0.75);
+        let mut bytes = [0u64; MAX_TIERS];
+        bytes[0] = 48;
+        bytes[1] = 16;
+        let mut msgs = [0u64; MAX_TIERS];
+        msgs[0] = 3;
+        msgs[1] = 1;
+        stats.record_lanes(0, CommKind::AllToAll, bytes, msgs);
+
+        tracer.crosscheck(&stats, &timeline, 2).unwrap();
+        // extra unmirrored accounting breaks the identity
+        timeline.set_tracer(None);
+        timeline.advance_compute(0, 0.1);
+        assert!(tracer.crosscheck(&stats, &timeline, 2).is_err());
+    }
+
+    #[test]
+    fn zero_duration_phases_do_not_emit_but_stay_bitwise() {
+        let stats = StatsBoard::new(1);
+        let timeline = TimelineBoard::new(1);
+        let tracer = std::sync::Arc::new(Tracer::new());
+        timeline.set_tracer(Some(tracer.clone()));
+        timeline.schedule_lanes_labeled(0, &[(0, 0.0), (1, 0.3), (0, 0.0)], true, "op", 8);
+        assert_eq!(tracer.spans().len(), 1);
+        tracer.crosscheck(&stats, &timeline, 1).unwrap();
+    }
+
+    #[test]
+    fn chrome_trace_renders_and_parses() {
+        let tracer = Tracer::new();
+        tracer.record_span(0, 0, 0.0, 1.0, "a2a chunk 1/2", 128);
+        tracer.record_span(0, COMPUTE_LANE, 1.0, 0.5, "expert-ffn", 0);
+        tracer.record_span(1, RENDEZVOUS_LANE, 0.0, 0.01, "wait a2a", 0);
+        let j = tracer.chrome_trace_json();
+        let text = j.render();
+        let back = Json::parse(&text).unwrap();
+        let events = back.get("traceEvents").unwrap().as_array().unwrap();
+        // 2 process_name + 3 thread_name + 3 spans
+        assert_eq!(events.len(), 8);
+        let span = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("a2a chunk 1/2"))
+            .unwrap();
+        assert_eq!(span.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(span.get("dur").and_then(Json::as_f64), Some(1e6));
+        assert_eq!(span.get("tid").and_then(Json::as_usize), Some(0));
+        assert!(
+            events.iter().any(|e| e.get("name").and_then(Json::as_str) == Some("thread_name")
+                && e.get("args").unwrap().get("name").and_then(Json::as_str)
+                    == Some("rendezvous"))
+        );
+    }
+
+    #[test]
+    fn step_metrics_round_trip() {
+        let steps = vec![
+            StepRecord {
+                step: 0,
+                loss: 2.5,
+                lane_s: [0.1, 0.2, 0.0],
+                compute_s: 0.4,
+                critical_s: 0.6,
+                hidden_s: 0.1,
+            },
+            StepRecord {
+                step: 1,
+                loss: 2.25,
+                lane_s: [0.1, 0.25, 0.0],
+                compute_s: 0.4,
+                critical_s: 0.65,
+                hidden_s: 0.1,
+            },
+        ];
+        let summary = RunSummary {
+            steps: 2,
+            lane_bytes: [100, 200, 0],
+            comm_serialized_s: 0.65,
+            compute_s: 0.8,
+            critical_s: 1.25,
+            overlap_efficiency: 0.5,
+        };
+        let text = step_metrics_jsonl(&[("model", "tiny".to_string())], &steps, &summary);
+        let parsed = parse_step_metrics(&text).unwrap();
+        assert_eq!(parsed.run.get("model").map(String::as_str), Some("tiny"));
+        assert_eq!(parsed.steps, steps);
+        assert_eq!(parsed.summary, Some(summary));
+    }
+}

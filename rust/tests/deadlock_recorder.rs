@@ -1,0 +1,87 @@
+//! Deadlock-path diagnostics: `TED_DEADLOCK_TIMEOUT` parsing and the
+//! flight-recorder dump in deadlock panic reports.
+//!
+//! This lives in its own integration-test binary on purpose: the
+//! rendezvous caches the parsed timeout in a process-wide static on first
+//! use, so the deadlock test below must own the process and set the env
+//! var before *any* collective runs. The pure parser tests share the
+//! binary safely — they never touch the cached path.
+
+use ted::collectives::{parse_deadlock_timeout_ms, CollectiveStrategy, Communicator, Rendezvous};
+use ted::config::ParallelConfig;
+use ted::topology::Topology;
+use ted::util::tensor::Tensor;
+
+#[test]
+fn timeout_parsing_covers_fractional_zero_and_garbage() {
+    assert_eq!(parse_deadlock_timeout_ms(Some("2")), 2_000);
+    assert_eq!(parse_deadlock_timeout_ms(Some("0.5")), 500);
+    assert_eq!(parse_deadlock_timeout_ms(Some(" 1.5 ")), 1_500);
+    // positive values round up and never drop below 1 ms
+    assert_eq!(parse_deadlock_timeout_ms(Some("0.0001")), 1);
+    assert_eq!(parse_deadlock_timeout_ms(Some("0.0014")), 2);
+    // zero, negatives, non-finite, and garbage all fall back to 120 s
+    assert_eq!(parse_deadlock_timeout_ms(Some("0")), 120_000);
+    assert_eq!(parse_deadlock_timeout_ms(Some("-3")), 120_000);
+    assert_eq!(parse_deadlock_timeout_ms(Some("inf")), 120_000);
+    assert_eq!(parse_deadlock_timeout_ms(Some("NaN")), 120_000);
+    assert_eq!(parse_deadlock_timeout_ms(Some("fast")), 120_000);
+    assert_eq!(parse_deadlock_timeout_ms(Some("")), 120_000);
+    assert_eq!(parse_deadlock_timeout_ms(None), 120_000);
+}
+
+/// Panic payload of `panic!("{..}")` is a `String`; older call sites can
+/// produce `&str`. Extract either.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default()
+}
+
+/// Both deadlock scenarios run inside ONE test, sequentially: the env var
+/// must be set exactly once before the first collective (the timeout
+/// caches process-wide), and `set_var` racing other threads is not safe.
+#[test]
+fn deadlock_panic_names_missing_ranks_and_dumps_flight_recorder() {
+    std::env::set_var("TED_DEADLOCK_TIMEOUT", "0.2");
+
+    // scenario 1: rank 0 of a 2-member EP group reduces alone. It
+    // deposits (position 0) and then waits — the report must name the
+    // one missing position and carry the flight-recorder tail.
+    let topo = Topology::new(ParallelConfig::derive(2, 1, 2).unwrap()).unwrap();
+    let rez = Rendezvous::new(2);
+    let g = topo.groups(0);
+    let ep_gid = g.ep_group_id;
+    let ep_group = g.ep_group.clone();
+    let handle = std::thread::spawn(move || {
+        let mut comm = Communicator::with_transport(rez, 0, CollectiveStrategy::Flat, 0);
+        let mut t = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        // rank 1 never arrives: this must panic after ~200 ms, not hang
+        comm.all_reduce(ep_gid, &ep_group, &mut t);
+    });
+    let msg = panic_message(handle.join().expect_err("lone all_reduce must deadlock-panic"));
+    assert!(msg.contains("collective deadlock"), "panic message: {msg}");
+    assert!(msg.contains("only 1 of 2 ranks arrived"), "panic message: {msg}");
+    assert!(msg.contains("missing member positions [1]"), "panic message: {msg}");
+    assert!(msg.contains("flight recorder (most recent last):"), "panic message: {msg}");
+    // the tail names the deposits/waits leading up to the hang
+    assert!(msg.contains("deposit pos 0"), "panic message: {msg}");
+
+    // scenario 2: rank 1 of a 2-member TP group gathers alone — the
+    // missing position flips to 0 and the wait is in the recorder.
+    let topo = Topology::new(ParallelConfig::derive(2, 2, 1).unwrap()).unwrap();
+    let rez = Rendezvous::new(2);
+    let g = topo.groups(1);
+    let tp_gid = g.tp_group_id;
+    let tp_group = g.tp_group.clone();
+    let handle = std::thread::spawn(move || {
+        let mut comm = Communicator::with_transport(rez, 1, CollectiveStrategy::Flat, 0);
+        let t = Tensor::from_vec(&[1], vec![3.0]);
+        let _ = comm.all_gather(tp_gid, &tp_group, &t);
+    });
+    let msg = panic_message(handle.join().expect_err("lone all_gather must deadlock-panic"));
+    assert!(msg.contains("missing member positions [0]"), "panic message: {msg}");
+    assert!(msg.contains("wait rank 1"), "panic message: {msg}");
+}

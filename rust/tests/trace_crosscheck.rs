@@ -1,0 +1,307 @@
+//! Span-tracing acceptance: the tracer is a bitwise-exact second witness
+//! of the collective accounting, and attaching it never changes results.
+//!
+//! Two harnesses:
+//!
+//! * a priced toy MoE run (the `parity_matrix` workload with a cluster
+//!   cost model attached) over all 3 transports x chunked on/off — the
+//!   traced run's losses must be bitwise identical to the untraced run's,
+//!   [`Tracer::crosscheck`] must pass, and folding the spans / byte
+//!   events back by hand must reproduce the `TimelineBoard` lane seconds
+//!   (bitwise) and `CommStats` byte totals (exactly);
+//! * the planner's measured replay (`replay_scenario_traced`) on the toy
+//!   autotuner grid — traced and untraced [`MeasuredPlanTime`]s must
+//!   agree bitwise, and the exported Chrome-trace JSON must parse and
+//!   carry complete ("X") events on per-rank tracks.
+
+use std::sync::Arc;
+
+use ted::collectives::{CollectiveStrategy, Communicator, Rendezvous, ALL_STRATEGIES, MAX_TIERS};
+use ted::config::{model, ClusterConfig, ParallelConfig};
+use ted::moe::{dispatch, return_to_origin, MoeComm, Router, RouterConfig};
+use ted::planner::{plan, PlanRequest, DEFAULT_TILE};
+use ted::sim::{replay_scenario, replay_scenario_traced};
+use ted::topology::Topology;
+use ted::trace::{Tracer, COMPUTE_LANE};
+use ted::util::json::Json;
+use ted::util::tensor::Tensor;
+
+const N_TOKENS: usize = 6;
+const D: usize = 4;
+const N_EXPERTS: usize = 4;
+const STEPS: usize = 2;
+
+fn make_rows(dpn: usize, step: usize) -> Tensor {
+    let mut t = Tensor::zeros(&[N_TOKENS, D]);
+    for i in 0..N_TOKENS {
+        for j in 0..D {
+            t.row_mut(i)[j] = (dpn * 1000 + step * 100 + i) as f32 * 1e-3 + j as f32 * 0.01;
+        }
+    }
+    t
+}
+
+fn make_probs(dpn: usize, step: usize) -> Tensor {
+    let mut t = Tensor::zeros(&[N_TOKENS, N_EXPERTS]);
+    for i in 0..N_TOKENS {
+        let star = (i + dpn + step) % N_EXPERTS;
+        for e in 0..N_EXPERTS {
+            t.row_mut(i)[e] = if e == star { 0.8 } else { 0.2 / (N_EXPERTS - 1) as f32 };
+        }
+    }
+    t
+}
+
+/// The `parity_matrix` toy MoE run (route -> dispatch -> expert compute ->
+/// return -> combine -> dp loss reduce) with a cluster cost model priced
+/// onto the rendezvous timeline, optionally traced. Returns every rank's
+/// per-step loss bits plus the rendezvous (for its boards).
+fn run_priced_toy(
+    strategy: CollectiveStrategy,
+    gpn: usize,
+    chunked: bool,
+    tracer: Option<Arc<Tracer>>,
+) -> (Vec<Vec<u32>>, Arc<Rendezvous>) {
+    let (tp, ep) = (2usize, 2usize);
+    let world = tp * ep;
+    let topo = Topology::new(ParallelConfig::derive(world, tp, ep).unwrap()).unwrap();
+    let rez = Rendezvous::new(world);
+    rez.set_tracer(tracer);
+    let cluster = ClusterConfig::by_name("perlmutter").unwrap();
+    let cap = N_TOKENS * ep;
+    let local_experts = N_EXPERTS / ep;
+    let losses: Vec<Vec<u32>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..world)
+            .map(|r| {
+                let rez = Arc::clone(&rez);
+                let topo = topo.clone();
+                let cluster = cluster.clone();
+                s.spawn(move || {
+                    let g = topo.groups(r);
+                    let dpn = g.coords.dp_nonexp_idx;
+                    let mut comm = Communicator::with_transport(rez, r, strategy, gpn);
+                    comm.set_cost_model(cluster);
+                    let ep_pos = g.ep_group.iter().position(|&m| m == r).unwrap();
+                    let tp_pos = g.tp_group.iter().position(|&m| m == r).unwrap();
+                    let mut loss_bits = Vec::with_capacity(STEPS);
+                    for step in 0..STEPS {
+                        let rows = make_rows(dpn, step);
+                        let probs = make_probs(dpn, step);
+                        let dec = Router::new(RouterConfig::top1(cap)).route(
+                            &mut comm, g.ep_group_id, &g.ep_group, ep_pos, &probs, N_EXPERTS,
+                        );
+                        let mut ctx = MoeComm {
+                            comm: &mut comm,
+                            ep_gid: g.ep_group_id,
+                            ep_members: &g.ep_group,
+                            ep_pos,
+                            tp_gid: g.tp_group_id,
+                            tp_members: &g.tp_group,
+                            tp_pos,
+                            dtd: true,
+                            overlap: false,
+                            chunked,
+                            // nonzero so the chunked schedule's inter-chunk
+                            // expert-FFN windows land on the compute lane
+                            chunk_compute_s: 2e-6,
+                            dc_split: None,
+                        };
+                        let disp = dispatch(&mut ctx, &rows, &dec, local_experts);
+                        let outs: Vec<Tensor> = disp
+                            .buffers
+                            .iter()
+                            .enumerate()
+                            .map(|(le, b)| {
+                                let e = ep_pos * local_experts + le;
+                                let mut t = b.clone();
+                                t.scale(1.0 + e as f32 * 0.25);
+                                t
+                            })
+                            .collect();
+                        let mut ctx = MoeComm {
+                            comm: &mut comm,
+                            ep_gid: g.ep_group_id,
+                            ep_members: &g.ep_group,
+                            ep_pos,
+                            tp_gid: g.tp_group_id,
+                            tp_members: &g.tp_group,
+                            tp_pos,
+                            dtd: true,
+                            overlap: false,
+                            chunked,
+                            chunk_compute_s: 2e-6,
+                            dc_split: None,
+                        };
+                        let back = return_to_origin(&mut ctx, &outs, &disp, &dec, local_experts);
+                        let y2 = ted::engine::stash::combine(&rows, &dec, &back);
+                        let local = y2.data().iter().sum::<f32>() / (N_TOKENS * D) as f32;
+                        let mut lt = Tensor::from_vec(&[1], vec![local]);
+                        comm.all_reduce(g.dp_nonexp_group_id, &g.dp_nonexp_group, &mut lt);
+                        loss_bits.push((lt.data()[0] / g.dp_nonexp_group.len() as f32).to_bits());
+                    }
+                    loss_bits
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    (losses, rez)
+}
+
+/// All 3 transports x chunked on/off: attaching the tracer is bitwise
+/// invisible to the numerics, the internal crosscheck passes, and folding
+/// the event log back by hand reproduces both boards exactly.
+#[test]
+fn traced_toy_moe_is_bitwise_identical_and_crosschecks() {
+    let combos = [
+        (CollectiveStrategy::Flat, 0usize),
+        (CollectiveStrategy::Hierarchical, 2),
+        (CollectiveStrategy::HierarchicalPxn, 2),
+    ];
+    for (strategy, gpn) in combos {
+        for chunked in [false, true] {
+            let (base, _) = run_priced_toy(strategy, gpn, chunked, None);
+            let tracer = Arc::new(Tracer::new());
+            let (traced, rez) = run_priced_toy(strategy, gpn, chunked, Some(Arc::clone(&tracer)));
+            assert_eq!(
+                base, traced,
+                "tracer changed results at {strategy:?} gpn={gpn} chunked={chunked}"
+            );
+            let world = 4;
+            tracer
+                .crosscheck(&rez.stats, &rez.timeline, world)
+                .unwrap_or_else(|e| panic!("{strategy:?} chunked={chunked}: {e}"));
+
+            // fold the spans back by hand: per-rank per-lane duration sums
+            // must reproduce the timeline board bitwise
+            let spans = tracer.spans();
+            assert!(
+                spans.iter().any(|s| s.lane < MAX_TIERS && s.dur_s > 0.0),
+                "priced run must emit comm spans"
+            );
+            for rank in 0..world {
+                let mut lanes = [0.0f64; MAX_TIERS];
+                let mut compute = 0.0f64;
+                for s in spans.iter().filter(|s| s.rank == rank) {
+                    if s.lane < MAX_TIERS {
+                        lanes[s.lane] += s.dur_s;
+                    } else if s.lane == COMPUTE_LANE {
+                        compute += s.dur_s;
+                    }
+                }
+                let tl = rez.timeline.get(rank);
+                for t in 0..MAX_TIERS {
+                    assert_eq!(
+                        lanes[t].to_bits(),
+                        tl.lane_serialized_s[t].to_bits(),
+                        "rank {rank} lane {t} span fold diverged"
+                    );
+                }
+                assert_eq!(compute.to_bits(), tl.compute_s.to_bits(), "rank {rank} compute fold");
+            }
+
+            // byte events must reproduce the stats board's totals exactly
+            let ev_total: u64 = tracer
+                .byte_events()
+                .iter()
+                .map(|e| e.lane_bytes.iter().sum::<u64>())
+                .sum();
+            let stats_total: u64 = (0..world)
+                .flat_map(|r| rez.stats.rank_stats(r))
+                .map(|c| c.lane_bytes.iter().sum::<u64>())
+                .sum();
+            assert_eq!(ev_total, stats_total);
+            assert!(stats_total > 0, "the toy run moves real bytes");
+
+            if chunked {
+                assert!(
+                    spans.iter().any(|s| s.name.contains("chunk")),
+                    "chunked schedule must label its per-chunk spans"
+                );
+            }
+        }
+    }
+}
+
+fn toy_request(overlap: bool) -> PlanRequest {
+    let m = model::executable("tiny").unwrap();
+    let cluster = ClusterConfig::by_name("perlmutter").unwrap();
+    let mut req = PlanRequest::new(m, 4, 8, cluster, 64);
+    req.cac_choices = vec![true];
+    req.tile_choices = vec![Some(DEFAULT_TILE)];
+    req.overlap_choices = vec![overlap];
+    req
+}
+
+/// The measured replay under a tracer: bitwise-identical timings to the
+/// untraced replay (the crosscheck inside `replay_scenario_traced` already
+/// ran, or the call would have errored), across every transport the toy
+/// grid admits, blocking and overlapped.
+#[test]
+fn traced_replay_is_bitwise_identical_across_transports() {
+    for overlap in [false, true] {
+        let req = toy_request(overlap);
+        let report = plan(&req);
+        assert!(!report.plans.is_empty());
+        let mut seen = 0;
+        for strategy in ALL_STRATEGIES {
+            let Some(p) = report.plans.iter().find(|p| p.knobs.strategy == strategy) else {
+                continue;
+            };
+            seen += 1;
+            let s = p.scenario(&req);
+            let base = replay_scenario(&s, p.knobs.gpus_per_node, overlap).unwrap();
+            let tracer = Arc::new(Tracer::new());
+            let traced =
+                replay_scenario_traced(&s, p.knobs.gpus_per_node, overlap, Some(tracer.clone()))
+                    .unwrap();
+            for (b, t, what) in [
+                (base.compute_s, traced.compute_s, "compute"),
+                (base.comm_intra_s, traced.comm_intra_s, "intra"),
+                (base.comm_inter_s, traced.comm_inter_s, "inter"),
+                (base.comm_wan_s, traced.comm_wan_s, "wan"),
+                (base.serialized_s, traced.serialized_s, "serialized"),
+                (base.critical_s, traced.critical_s, "critical"),
+            ] {
+                assert_eq!(
+                    b.to_bits(),
+                    t.to_bits(),
+                    "{what} diverged under tracing ({strategy:?} overlap={overlap})"
+                );
+            }
+            assert!(!tracer.spans().is_empty());
+        }
+        assert!(seen >= 2, "toy grid should admit at least two transports, saw {seen}");
+    }
+}
+
+/// The Chrome-trace export parses as JSON and carries per-rank tracks of
+/// complete ("X") events plus thread-name metadata.
+#[test]
+fn chrome_trace_export_is_valid_json() {
+    let req = toy_request(true);
+    let report = plan(&req);
+    let p = &report.plans[0];
+    let tracer = Arc::new(Tracer::new());
+    let s = p.scenario(&req);
+    replay_scenario_traced(&s, p.knobs.gpus_per_node, true, Some(tracer.clone())).unwrap();
+    let text = tracer.chrome_trace_json().render();
+    let doc = Json::parse(&text).expect("chrome trace must be valid JSON");
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_array())
+        .expect("traceEvents array");
+    let complete = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .count();
+    let meta = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+        .count();
+    assert!(complete > 0, "expected complete spans, got none in {} events", events.len());
+    assert!(meta > 0, "expected track-name metadata events");
+    for e in events {
+        assert!(e.get("pid").is_some() && e.get("tid").is_some());
+    }
+}
